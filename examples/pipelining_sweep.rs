@@ -1,0 +1,42 @@
+//! Sweep every pipelining technique over a dense app and print the
+//! incremental effect (a single-app Fig. 7).
+//!
+//! `cargo run --release --example pipelining_sweep [-- app]`
+
+use cascade::pipeline::{compile, CompileCtx, PipelineConfig};
+
+fn main() {
+    let which = std::env::args().nth(1).unwrap_or_else(|| "harris".to_string());
+    let app = match which.as_str() {
+        "gaussian" => cascade::apps::dense::gaussian(6400, 4800, 16),
+        "unsharp" => cascade::apps::dense::unsharp(1536, 2560, 4),
+        "camera" => cascade::apps::dense::camera(2560, 1920, 4),
+        "harris" => cascade::apps::dense::harris(1530, 2554, 4),
+        "resnet" => cascade::apps::dense::resnet_conv5x(),
+        other => {
+            eprintln!("unknown app {other}");
+            std::process::exit(2);
+        }
+    };
+    println!("building context...");
+    let ctx = CompileCtx::paper();
+    println!(
+        "{:<14} {:>10} {:>10} {:>12} {:>10} {:>8}",
+        "technique", "crit (ns)", "fmax MHz", "runtime ms", "SB regs", "speedup"
+    );
+    let mut base = None;
+    for (name, cfg) in PipelineConfig::ladder() {
+        let c = compile(&app, &ctx, &cfg, 3).expect("compile");
+        let b = *base.get_or_insert(c.runtime_ms());
+        let (sb, _, _) = c.design.pipelining_resources();
+        println!(
+            "{:<14} {:>10.2} {:>10.0} {:>12.3} {:>10} {:>7.2}x",
+            name,
+            c.sta.period_ps / 1000.0,
+            c.fmax_mhz(),
+            c.runtime_ms(),
+            sb,
+            b / c.runtime_ms()
+        );
+    }
+}

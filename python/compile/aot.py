@@ -1,0 +1,64 @@
+"""AOT lowering: JAX golden models -> HLO *text* artifacts.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: jax >=
+0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. Lowered with `return_tuple=True`;
+the Rust side unwraps with `to_tuple1()`.
+
+Usage: python -m compile.aot --outdir ../artifacts [--only name]
+Python runs only here, at build time; the Rust binary never invokes it.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str) -> str:
+    fn, shape = MODELS[name]
+    spec = jax.ShapeDtypeStruct(shape, jnp.int32)
+    wrapped = lambda x: (fn(x),)  # noqa: E731 — 1-tuple for to_tuple1()
+    return to_hlo_text(jax.jit(wrapped).lower(spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single model")
+    # Back-compat with `make artifacts` single-file invocation.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    outdir = args.outdir
+    if args.out:
+        outdir = os.path.dirname(args.out) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    names = [args.only] if args.only else list(MODELS)
+    for name in names:
+        text = lower_model(name)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>8} chars to {path}")
+    # Marker file so `make artifacts` has a single up-to-date target.
+    with open(os.path.join(outdir, "MANIFEST"), "w") as f:
+        f.write("\n".join(f"{n}.hlo.txt" for n in names) + "\n")
+
+
+if __name__ == "__main__":
+    main()

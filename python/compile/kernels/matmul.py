@@ -1,0 +1,51 @@
+"""Layer-1 Pallas kernel: tiled integer matmul (the ResNet conv-as-GEMM).
+
+The CGRA maps the ResNet conv5_x layer weight-stationary: `lanes` output
+channels x `taps*time_mult` reduction, which is exactly a GEMM
+`Y[l, o] = sum_j W[l, j] * X[j, o]`. On a real TPU this is the MXU kernel:
+tiles of (TM, TK) x (TK, TN) staged HBM->VMEM via BlockSpec, systolic
+matmul per tile, accumulation across the K grid axis. `interpret=True` for
+CPU-PJRT execution (see DESIGN.md §Hardware-Adaptation for the
+VMEM/MXU-utilization estimate of the TPU variant).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(w_ref, x_ref, o_ref):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        w_ref[...], x_ref[...], preferred_element_type=jnp.int32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tk", "tn"))
+def matmul_tiled(w, x, tm=8, tk=8, tn=16):
+    """Y = W @ X over int32 with (tm, tk, tn) tiling.
+
+    w: int32[M, K], x: int32[K, N] with M % tm == K % tk == N % tn == 0.
+    """
+    m, k = w.shape
+    k2, n = x.shape
+    assert k == k2
+    assert m % tm == 0 and k % tk == 0 and n % tn == 0, (m, k, n)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        grid=(m // tm, n // tn, k // tk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(w.astype(jnp.int32), x.astype(jnp.int32))

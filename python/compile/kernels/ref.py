@@ -1,0 +1,31 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels (the L1 correctness
+signal: pytest asserts kernel == ref across shape/weight sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def tap_weighted_sum_ref(taps, weights):
+    """Reference for kernels.stencil.tap_weighted_sum."""
+    return jnp.sum(
+        taps.astype(jnp.int32) * weights.astype(jnp.int32)[:, None], axis=0
+    )
+
+
+def matmul_ref(w, x):
+    """Reference for kernels.matmul.matmul_tiled."""
+    return jnp.dot(w.astype(jnp.int32), x.astype(jnp.int32))
+
+
+def stream_stencil_ref(x, width, kernel):
+    """Numpy reference of the CGRA stream-stencil semantics."""
+    x = np.asarray(x, dtype=np.int64)
+    out = np.zeros_like(x)
+    for r, row in enumerate(kernel):
+        for c, w in enumerate(row):
+            if w == 0:
+                continue
+            d = r * width + c
+            shifted = np.concatenate([np.zeros(d, dtype=np.int64), x[: len(x) - d]])
+            out += w * shifted
+    return out.astype(np.int32)

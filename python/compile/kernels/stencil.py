@@ -1,0 +1,85 @@
+"""Layer-1 Pallas kernel: weighted tap-sum (stream stencil).
+
+The CGRA executes stencils as weighted sums over delayed taps of a
+flattened row-major pixel stream (line buffers + register taps). The golden
+model mirrors that exactly: `out[t] = sum_k w_k * x[t - d_k]` with
+zero-filled history. The shift is materialized in the L2 JAX graph (cheap
+gathers XLA fuses away); this kernel is the compute hot-spot — the weighted
+reduction over the tap axis — written in Pallas.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the stream is tiled into
+VMEM-resident blocks on the last axis; the tap axis stays resident per
+block; the multiply-accumulate vectorizes on the VPU lanes (this is an
+elementwise-reduce kernel — the MXU kernel of this suite is `matmul.py`).
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; structure, not wallclock, is what carries to real TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size along the stream axis. 512 int32 x (taps<=16) fits VMEM with
+# plenty of margin and divides every stream length we AOT (4096).
+BLOCK = 512
+
+
+def _tap_sum_kernel(x_ref, w_ref, o_ref):
+    """x_ref: (T, B) pre-shifted taps; w_ref: (T, 1); o_ref: (B,)."""
+    taps = x_ref[...]              # (T, B) block in VMEM
+    w = w_ref[...]                 # (T, 1)
+    o_ref[...] = jnp.sum(taps * w, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def tap_weighted_sum(taps, weights, block=BLOCK):
+    """Weighted sum over the tap axis.
+
+    taps: int32[T, N] — pre-shifted input copies (tap k delayed by d_k).
+    weights: int32[T] — stencil weights.
+    returns int32[N].
+    """
+    t, n = taps.shape
+    assert n % block == 0, f"stream length {n} not a multiple of {block}"
+    w2 = weights.reshape(t, 1).astype(jnp.int32)
+    return pl.pallas_call(
+        _tap_sum_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((t, block), lambda i: (0, i)),
+            pl.BlockSpec((t, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(taps.astype(jnp.int32), w2)
+
+
+def shift_stream(x, delay):
+    """x delayed by `delay` samples with zero fill (hardware reset state)."""
+    if delay == 0:
+        return x
+    return jnp.concatenate([jnp.zeros((delay,), x.dtype), x[:-delay]])
+
+
+def stream_stencil(x, width, kernel):
+    """CGRA-semantics stencil: taps at delays r*width+c, kernel[r][c] weights.
+
+    Matches `cascade::dfg::build::stencil` bit-for-bit (including the
+    zero-filled warmup region and the row-wrap behaviour of the flattened
+    stream).
+    """
+    delays = []
+    weights = []
+    k = len(kernel)
+    for r in range(k):
+        for c in range(len(kernel[r])):
+            wv = kernel[r][c]
+            if wv == 0:
+                continue
+            delays.append(r * width + c)
+            weights.append(wv)
+    taps = jnp.stack([shift_stream(x, d) for d in delays])
+    return tap_weighted_sum(taps, jnp.array(weights, dtype=jnp.int32))

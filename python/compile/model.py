@@ -1,0 +1,101 @@
+"""Layer-2 JAX golden models of the five dense benchmark applications.
+
+Each function reproduces, bit-for-bit, the stream semantics of the
+corresponding CGRA application in `rust/src/apps/dense.rs` (flattened
+row-major pixel streams, zero-filled warmup, arithmetic shifts), composing
+the Layer-1 Pallas kernels. `aot.py` lowers these once to HLO text; the
+Rust runtime executes them through PJRT as the cross-language golden
+reference for the fabric simulator.
+
+All arithmetic is int32 (the fabric is a 16-bit word machine exercised with
+small test values; int32 avoids overflow in the golden path exactly like
+the i64 interpreter does on the Rust side).
+"""
+
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul_tiled
+from .kernels.stencil import shift_stream, stream_stencil
+
+GAUSS_KERNEL = ((1, 2, 1), (2, 4, 2), (1, 2, 1))
+
+
+def gaussian(x, width=64):
+    """3x3 Gaussian blur: `stencil >> 4` (one unroll lane)."""
+    return jnp.right_shift(stream_stencil(x, width, GAUSS_KERNEL), 4)
+
+
+def unsharp(x, width=64):
+    """Unsharp masking (matches apps::dense::unsharp lane semantics)."""
+    window = 2 * width + 2
+    blur = jnp.right_shift(stream_stencil(x, width, GAUSS_KERNEL), 4)
+    delayed = shift_stream(x, window)
+    diff = delayed - blur
+    sharp = jnp.right_shift(diff * 3, 2)
+    return delayed + sharp
+
+
+def camera(x, width=64):
+    """Camera pipeline: black level, demosaic-lite, color mix, gamma."""
+    bl = jnp.maximum(x - 16, 0)
+    dem = jnp.right_shift(
+        stream_stencil(bl, width, ((0, 1, 0), (1, 4, 1), (0, 1, 0))), 3
+    )
+    mix = jnp.right_shift(stream_stencil(dem, width, ((5, 2, 1),)), 3)
+    lo = jnp.left_shift(mix, 1)
+    hi = jnp.right_shift(mix, 1) + 96
+    return jnp.where(mix >= 64, hi, lo)
+
+
+def harris(x, width=64):
+    """Harris corner response (matches apps::dense::harris)."""
+    sx = stream_stencil(x, width, ((-1, 0, 1), (-2, 0, 2), (-1, 0, 1)))
+    sy = stream_stencil(x, width, ((-1, -2, -1), (0, 0, 0), (1, 2, 1)))
+    ixx = sx * sx
+    iyy = sy * sy
+    ixy = sx * sy
+    ones = ((1, 1, 1), (1, 1, 1), (1, 1, 1))
+    sxx = stream_stencil(ixx, width, ones)
+    syy = stream_stencil(iyy, width, ones)
+    sxy = stream_stencil(ixy, width, ones)
+    det = sxx * syy - sxy * sxy
+    tr = sxx + syy
+    return det - jnp.right_shift(tr * tr, 4)
+
+
+def resnet_weights(lanes, taps, time_mult):
+    """The deterministic weight pattern of apps::dense::resnet_conv
+    (w[l][t][k] = ((l*7 + t*3 + k) % 5) - 2), flattened to (lanes,
+    taps*time_mult) for the GEMM formulation."""
+    l = jnp.arange(lanes)[:, None, None]
+    t = jnp.arange(taps)[None, :, None]
+    k = jnp.arange(time_mult)[None, None, :]
+    w = (l * 7 + t * 3 + k) % 5 - 2
+    return w.reshape(lanes, taps * time_mult).astype(jnp.int32)
+
+
+def resnet(x, lanes=2, taps=4, time_mult=18):
+    """ResNet conv layer as GEMM: x int32[taps, n_out*time_mult] input
+    streams -> y int32[lanes, n_out].
+
+    y[l, o] = sum_{t, c} x[t, o*T + c] * w[l, t, c]  (the accumulator
+    semantics of the CGRA mapping, one output per `time_mult` cycles)."""
+    _, total = x.shape
+    n_out = total // time_mult
+    # Xwin[(t, c), o] = x[t, o*T + c]
+    xw = x.reshape(taps, n_out, time_mult).transpose(0, 2, 1).reshape(
+        taps * time_mult, n_out
+    )
+    w = resnet_weights(lanes, taps, time_mult)
+    return matmul_tiled(w, xw, tm=min(8, lanes), tk=8, tn=16)
+
+
+#: name -> (fn, example input shape) for AOT lowering. Streams are 64x64
+#: frames (4096 samples); resnet is the test-scale layer.
+MODELS = {
+    "gaussian": (gaussian, (4096,)),
+    "unsharp": (unsharp, (4096,)),
+    "camera": (camera, (4096,)),
+    "harris": (harris, (4096,)),
+    "resnet": (resnet, (4, 64 * 18)),
+}

@@ -1,0 +1,66 @@
+"""L2 correctness: golden app models — shapes, dtypes, hand-checked
+semantics, and AOT lowering round-trips to HLO text."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.aot import lower_model
+
+
+def test_gaussian_flat_field():
+    # On a constant image the (normalized) blur is the identity in steady
+    # state: sum(kernel) = 16, >> 4.
+    x = jnp.full((4096,), 32, jnp.int32)
+    y = np.asarray(model.gaussian(x))
+    assert (y[200:] == 32).all()
+    # Warmup region is partial (zero-filled history).
+    assert y[0] == 32 * 1 // 16
+
+
+def test_unsharp_flat_field_is_identity():
+    x = jnp.full((4096,), 50, jnp.int32)
+    y = np.asarray(model.unsharp(x))
+    assert (y[300:] == 50).all()
+
+
+def test_camera_gamma_piecewise():
+    # Values that land below/above the knee take different branches.
+    x = jnp.zeros((4096,), jnp.int32)
+    y = np.asarray(model.camera(x))
+    assert y.shape == (4096,)
+    # Zero input -> black level clamp -> zero -> lo branch (0*2 = 0).
+    assert (y == 0).all()
+
+
+def test_harris_shape_and_dtype():
+    x = jnp.arange(4096, dtype=jnp.int32) % 23
+    y = model.harris(x)
+    assert y.shape == (4096,)
+    assert y.dtype == jnp.int32
+
+
+def test_resnet_matches_direct_accumulation():
+    taps, tm, lanes, n_out = 4, 18, 2, 64
+    rng = np.random.default_rng(7)
+    x = rng.integers(-5, 5, size=(taps, n_out * tm), dtype=np.int32)
+    y = np.asarray(model.resnet(jnp.asarray(x), lanes=lanes, taps=taps, time_mult=tm))
+    w = np.asarray(model.resnet_weights(lanes, taps, tm)).reshape(lanes, taps, tm)
+    for l in range(lanes):
+        for o in range(0, n_out, 17):
+            acc = 0
+            for c in range(tm):
+                for t in range(taps):
+                    acc += int(x[t, o * tm + c]) * int(w[l, t, c])
+            assert y[l, o] == acc, (l, o)
+
+
+@pytest.mark.parametrize("name", list(model.MODELS))
+def test_aot_lowers_to_hlo_text(name):
+    text = lower_model(name)
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # Tuple-rooted for the Rust to_tuple1() unwrap.
+    assert "tuple" in text

@@ -1,0 +1,105 @@
+//! Benchmark applications from the paper's evaluation.
+//!
+//! Dense (§VIII-B, Table I): Gaussian, Unsharp, Camera, Harris, ResNet
+//! (one conv5_x layer of ResNet-18). Sparse (§VIII-D, Table II): vector
+//! elementwise add, matrix elementwise mul, tensor MTTKRP, tensor TTV.
+//!
+//! Each constructor is parameterized over frame geometry and unrolling so
+//! the same application can be built paper-scale (for the schedule/runtime
+//! numbers) and test-scale (for cycle-accurate functional simulation).
+
+pub mod dense;
+pub mod sparse;
+
+use crate::dfg::ir::Dfg;
+use crate::schedule::WorkloadShape;
+
+/// Application domain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppKind {
+    /// Statically scheduled (image processing / ML).
+    Dense,
+    /// Ready-valid / data-dependent (sparse tensor algebra).
+    Sparse,
+}
+
+/// A benchmark application instance.
+pub struct App {
+    pub name: &'static str,
+    pub kind: AppKind,
+    pub dfg: Dfg,
+    pub shape: WorkloadShape,
+    /// Name of the AOT golden-model artifact (`artifacts/<name>.hlo.txt`)
+    /// that computes the same function (dense apps only).
+    pub golden: Option<&'static str>,
+}
+
+/// The paper's five dense applications at paper-scale frame sizes
+/// (Table I: 6400x4800 Gaussian, 1536x2560 Unsharp, 2560x1920 Camera,
+/// 1530x2554 Harris, ResNet conv5_x).
+pub fn paper_dense_suite() -> Vec<App> {
+    vec![
+        dense::gaussian(6400, 4800, 16),
+        dense::unsharp(1536, 2560, 4),
+        dense::camera(2560, 1920, 4),
+        dense::harris(1530, 2554, 4),
+        dense::resnet_conv5x(),
+    ]
+}
+
+/// Small-frame versions of the dense suite for cycle-accurate functional
+/// simulation in tests and the quickstart example.
+pub fn small_dense_suite() -> Vec<App> {
+    vec![
+        dense::gaussian(64, 64, 2),
+        dense::unsharp(64, 64, 1),
+        dense::camera(64, 64, 1),
+        dense::harris(64, 64, 1),
+        dense::resnet_small(),
+    ]
+}
+
+/// The paper's four sparse applications (Table II).
+pub fn paper_sparse_suite() -> Vec<App> {
+    vec![
+        sparse::vec_elemadd(4096, 0.25),
+        sparse::mat_elemmul(128, 128, 0.1),
+        sparse::tensor_mttkrp(32, 32, 32, 8, 0.05),
+        sparse::tensor_ttv(48, 48, 48, 0.05),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_suite_builds_and_validates() {
+        for app in paper_dense_suite() {
+            let problems = app.dfg.validate();
+            assert!(problems.is_empty(), "{}: {:?}", app.name, problems);
+            assert_eq!(app.kind, AppKind::Dense);
+            assert!(app.golden.is_some());
+        }
+    }
+
+    #[test]
+    fn paper_suite_fits_paper_array() {
+        let arch = crate::arch::params::ArchParams::paper();
+        let (pe_cap, mem_cap) = arch.core_tile_counts();
+        for app in paper_dense_suite() {
+            let (pe, mem, io) = app.dfg.tile_demand();
+            assert!(pe <= pe_cap, "{}: {pe} PEs > {pe_cap}", app.name);
+            assert!(mem <= mem_cap, "{}: {mem} MEMs > {mem_cap}", app.name);
+            // IO tiles host one input and one output node each.
+            assert!(io <= 2 * arch.cols, "{}: {io} IO nodes", app.name);
+        }
+    }
+
+    #[test]
+    fn small_suite_builds() {
+        for app in small_dense_suite() {
+            assert!(app.dfg.validate().is_empty(), "{}", app.name);
+        }
+    }
+}

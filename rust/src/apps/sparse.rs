@@ -1,0 +1,366 @@
+//! The four sparse benchmark applications (paper Table II), built on the
+//! ready-valid streaming substrate of `sparse`.
+//!
+//! Sparse tensor kernels have data-dependent memory accesses, so they
+//! cannot be statically scheduled; every inter-tile connection carries a
+//! data/valid/ready triple (§VII). The dataflow style follows the
+//! tensor-algebra compilers the paper cites [18]: per-mode coordinate
+//! scanners over compressed fibers, coordinate intersect/union combinators,
+//! elementwise ALUs, and fiber reductions.
+//!
+//! Tensors are synthetic (deterministic seeds) — the paper's sparse inputs
+//! come from [18]'s suite, which we stand in for with uniform-random
+//! sparsity at the paper's workload scales (see DESIGN.md §2).
+
+use crate::dfg::ir::{AluOp, Dfg, NodeId, Op, SparseOp};
+use crate::schedule::WorkloadShape;
+use crate::util::rng::Rng;
+
+use super::{App, AppKind};
+
+/// A sparse tensor in sorted COO form (coordinates lexicographic).
+#[derive(Debug, Clone, Default)]
+pub struct SparseTensor {
+    /// Dimensionality (1-3).
+    pub ndim: usize,
+    /// Shape per mode.
+    pub shape: Vec<u32>,
+    /// Sorted coordinates, one Vec per nonzero.
+    pub coords: Vec<Vec<u32>>,
+    pub values: Vec<i64>,
+}
+
+impl SparseTensor {
+    /// Generate a uniform-random sparse tensor with ~`density` nonzeros.
+    pub fn random(shape: &[u32], density: f64, seed: u64) -> SparseTensor {
+        let mut rng = Rng::new(seed);
+        let mut coords = Vec::new();
+        let mut values = Vec::new();
+        let total: u64 = shape.iter().map(|&s| s as u64).product();
+        // Iterate the dense space only for small tensors; sample for large.
+        if total <= 1 << 22 {
+            let mut idx = vec![0u32; shape.len()];
+            loop {
+                if rng.gen_bool(density) {
+                    coords.push(idx.clone());
+                    values.push(rng.gen_range_i64(-8, 8).max(1));
+                }
+                // Increment mixed-radix counter.
+                let mut d = shape.len();
+                loop {
+                    if d == 0 {
+                        return SparseTensor {
+                            ndim: shape.len(),
+                            shape: shape.to_vec(),
+                            coords,
+                            values,
+                        };
+                    }
+                    d -= 1;
+                    idx[d] += 1;
+                    if idx[d] < shape[d] {
+                        break;
+                    }
+                    idx[d] = 0;
+                }
+            }
+        } else {
+            let n = (total as f64 * density) as usize;
+            let mut set = std::collections::BTreeSet::new();
+            while set.len() < n {
+                let c: Vec<u32> = shape.iter().map(|&s| rng.gen_range(s as usize) as u32).collect();
+                set.insert(c);
+            }
+            for c in set {
+                coords.push(c);
+                values.push(rng.gen_range_i64(-8, 8).max(1));
+            }
+            SparseTensor { ndim: shape.len(), shape: shape.to_vec(), coords, values }
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Dense lookup (slow; for golden checks).
+    pub fn get(&self, coord: &[u32]) -> i64 {
+        self.coords
+            .iter()
+            .position(|c| c == coord)
+            .map(|i| self.values[i])
+            .unwrap_or(0)
+    }
+}
+
+/// Input data for a sparse app: tensors indexed by the `tensor` field of
+/// `SparseOp::CrdScan`/`ValRead`.
+#[derive(Debug, Clone, Default)]
+pub struct SparseData {
+    pub tensors: Vec<SparseTensor>,
+}
+
+/// A sparse application bundle: the DFG plus its input data.
+pub struct SparseAppData {
+    pub app: App,
+    pub data: SparseData,
+}
+
+fn sp(g: &mut Dfg, op: SparseOp, name: impl Into<String>) -> NodeId {
+    g.add_node(Op::Sparse(op), name)
+}
+
+/// Connect a sparse data edge (the valid/ready companions are implied and
+/// expanded during routing).
+fn sconnect(g: &mut Dfg, src: NodeId, dst: NodeId, port: u8) {
+    g.connect(src, dst, port);
+}
+
+/// Vector elementwise add: `a(i) = b(i) + c(i)` over sparse b, c.
+pub fn vec_elemadd(n: u32, density: f64) -> App {
+    let mut g = Dfg::new();
+    let sb = sp(&mut g, SparseOp::CrdScan { tensor: 0, mode: 0 }, "scan_b");
+    let sc = sp(&mut g, SparseOp::CrdScan { tensor: 1, mode: 0 }, "scan_c");
+    let un = sp(&mut g, SparseOp::Union, "union_i");
+    sconnect(&mut g, sb, un, 0);
+    sconnect(&mut g, sc, un, 1);
+    let vb = sp(&mut g, SparseOp::ValRead { tensor: 0 }, "val_b");
+    let vc = sp(&mut g, SparseOp::ValRead { tensor: 1 }, "val_c");
+    sconnect(&mut g, un, vb, 0);
+    let unp = sp(&mut g, SparseOp::Repeat, "un_p");
+    sconnect(&mut g, un, unp, 0);
+    sconnect(&mut g, unp, vc, 0);
+    let add = sp(&mut g, SparseOp::SpAlu(AluOp::Add), "add");
+    sconnect(&mut g, vb, add, 0);
+    sconnect(&mut g, vc, add, 1);
+    let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "out");
+    sconnect(&mut g, add, o, 0);
+    let nnz = (n as f64 * density) as u64;
+    App {
+        name: "vec_elemadd",
+        kind: AppKind::Sparse,
+        dfg: g,
+        // Work ~ |b| + |c| merged coordinates.
+        shape: WorkloadShape { frame_w: 2 * nnz, frame_h: 1, unroll: 1, time_mult: 1 },
+        golden: Some("vec_elemadd"),
+    }
+}
+
+/// Matrix elementwise multiply: `A(i,j) = B(i,j) * C(i,j)` (intersection
+/// on both modes).
+pub fn mat_elemmul(rows: u32, cols: u32, density: f64) -> App {
+    let mut g = Dfg::new();
+    let sb_i = sp(&mut g, SparseOp::CrdScan { tensor: 0, mode: 0 }, "scan_b_i");
+    let sc_i = sp(&mut g, SparseOp::CrdScan { tensor: 1, mode: 0 }, "scan_c_i");
+    let int_i = sp(&mut g, SparseOp::Intersect, "int_i");
+    sconnect(&mut g, sb_i, int_i, 0);
+    sconnect(&mut g, sc_i, int_i, 1);
+    let sb_j = sp(&mut g, SparseOp::CrdScan { tensor: 0, mode: 1 }, "scan_b_j");
+    let sc_j = sp(&mut g, SparseOp::CrdScan { tensor: 1, mode: 1 }, "scan_c_j");
+    sconnect(&mut g, int_i, sb_j, 0);
+    let int_ip = sp(&mut g, SparseOp::Repeat, "int_ip");
+    sconnect(&mut g, int_i, int_ip, 0);
+    sconnect(&mut g, int_ip, sc_j, 0);
+    let int_j = sp(&mut g, SparseOp::Intersect, "int_j");
+    sconnect(&mut g, sb_j, int_j, 0);
+    sconnect(&mut g, sc_j, int_j, 1);
+    let vb = sp(&mut g, SparseOp::ValRead { tensor: 0 }, "val_b");
+    let vc = sp(&mut g, SparseOp::ValRead { tensor: 1 }, "val_c");
+    sconnect(&mut g, int_j, vb, 0);
+    let int_jp = sp(&mut g, SparseOp::Repeat, "int_jp");
+    sconnect(&mut g, int_j, int_jp, 0);
+    sconnect(&mut g, int_jp, vc, 0);
+    let mul = sp(&mut g, SparseOp::SpAlu(AluOp::Mul), "mul");
+    sconnect(&mut g, vb, mul, 0);
+    sconnect(&mut g, vc, mul, 1);
+    let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "out");
+    sconnect(&mut g, mul, o, 0);
+    let nnz = (rows as f64 * cols as f64 * density) as u64;
+    App {
+        name: "mat_elemmul",
+        kind: AppKind::Sparse,
+        dfg: g,
+        shape: WorkloadShape { frame_w: 2 * nnz, frame_h: 1, unroll: 1, time_mult: 1 },
+        golden: Some("mat_elemmul"),
+    }
+}
+
+/// Tensor MTTKRP: `A(i,j) = sum_{k,l} B(i,k,l) * C(k,j) * D(l,j)`, the
+/// matricized tensor times Khatri-Rao product.
+///
+/// Dataflow (SAM-style): the B fiber tree is scanned i -> k -> l; the C
+/// factor read is indexed by `k`, held and repeated once per `l` (a
+/// two-input Repeat whose second input is the reference stream, exactly
+/// [18]'s repeat operator); values expand across the `j` lane dimension at
+/// the dense factor reads; the reduction resets at the end of each `k`
+/// fiber (End level 1), producing one row A(i, 0..j) per `i`.
+pub fn tensor_mttkrp(i: u32, k: u32, l: u32, j: u32, density: f64) -> App {
+    let mut g = Dfg::new();
+    let s_i = sp(&mut g, SparseOp::CrdScan { tensor: 0, mode: 0 }, "scan_b_i");
+    let s_k = sp(&mut g, SparseOp::CrdScan { tensor: 0, mode: 1 }, "scan_b_k");
+    let s_l = sp(&mut g, SparseOp::CrdScan { tensor: 0, mode: 2 }, "scan_b_l");
+    sconnect(&mut g, s_i, s_k, 0);
+    sconnect(&mut g, s_k, s_l, 0);
+    let vb = sp(&mut g, SparseOp::ValRead { tensor: 0 }, "val_b");
+    sconnect(&mut g, s_l, vb, 0);
+    // rep_j: expand each B value across the j lanes.
+    let rep_j = sp(&mut g, SparseOp::Repeat, "rep_j");
+    sconnect(&mut g, vb, rep_j, 0);
+    // Pass-through taps of the l-coordinate stream (fanout legalization).
+    let s_lp = sp(&mut g, SparseOp::Repeat, "l_pass");
+    sconnect(&mut g, s_l, s_lp, 0);
+    let s_lp2 = sp(&mut g, SparseOp::Repeat, "l_pass2");
+    sconnect(&mut g, s_lp, s_lp2, 0);
+    // k_rep: hold each k coordinate, repeat once per l element (2-input
+    // Repeat; port 1 is the reference stream).
+    let k_rep = sp(&mut g, SparseOp::Repeat, "k_rep");
+    sconnect(&mut g, s_k, k_rep, 0);
+    sconnect(&mut g, s_lp, k_rep, 1);
+    // Dense factor reads: C indexed by k, D indexed by l; each expands
+    // into the j lanes.
+    let vc = sp(&mut g, SparseOp::ValRead { tensor: 1 }, "val_c");
+    sconnect(&mut g, k_rep, vc, 0);
+    let vd = sp(&mut g, SparseOp::ValRead { tensor: 2 }, "val_d");
+    sconnect(&mut g, s_lp2, vd, 0);
+    let m1 = sp(&mut g, SparseOp::SpAlu(AluOp::Mul), "mul1");
+    sconnect(&mut g, rep_j, m1, 0);
+    sconnect(&mut g, vc, m1, 1);
+    let m2 = sp(&mut g, SparseOp::SpAlu(AluOp::Mul), "mul2");
+    sconnect(&mut g, m1, m2, 0);
+    sconnect(&mut g, vd, m2, 1);
+    let red = sp(&mut g, SparseOp::Reduce, "red_kl");
+    sconnect(&mut g, m2, red, 0);
+    let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "out");
+    sconnect(&mut g, red, o, 0);
+    let nnz = (i as f64 * k as f64 * l as f64 * density) as u64;
+    App {
+        name: "mttkrp",
+        kind: AppKind::Sparse,
+        dfg: g,
+        shape: WorkloadShape { frame_w: nnz * j as u64, frame_h: 1, unroll: 1, time_mult: 1 },
+        golden: Some("mttkrp"),
+    }
+}
+
+/// Tensor-times-vector: `A(i,j) = sum_k B(i,j,k) * c(k)`.
+pub fn tensor_ttv(i: u32, j: u32, k: u32, density: f64) -> App {
+    let mut g = Dfg::new();
+    let s_i = sp(&mut g, SparseOp::CrdScan { tensor: 0, mode: 0 }, "scan_b_i");
+    let s_j = sp(&mut g, SparseOp::CrdScan { tensor: 0, mode: 1 }, "scan_b_j");
+    let s_k = sp(&mut g, SparseOp::CrdScan { tensor: 0, mode: 2 }, "scan_b_k");
+    sconnect(&mut g, s_i, s_j, 0);
+    sconnect(&mut g, s_j, s_k, 0);
+    let vb = sp(&mut g, SparseOp::ValRead { tensor: 0 }, "val_b");
+    sconnect(&mut g, s_k, vb, 0);
+    let vc = sp(&mut g, SparseOp::ValRead { tensor: 1 }, "val_c");
+    let s_kp = sp(&mut g, SparseOp::Repeat, "k_rep");
+    sconnect(&mut g, s_k, s_kp, 0);
+    sconnect(&mut g, s_kp, vc, 0);
+    let mul = sp(&mut g, SparseOp::SpAlu(AluOp::Mul), "mul");
+    sconnect(&mut g, vb, mul, 0);
+    sconnect(&mut g, vc, mul, 1);
+    let red = sp(&mut g, SparseOp::Reduce, "red_k");
+    sconnect(&mut g, mul, red, 0);
+    let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "out");
+    sconnect(&mut g, red, o, 0);
+    let nnz = (i as f64 * j as f64 * k as f64 * density) as u64;
+    App {
+        name: "ttv",
+        kind: AppKind::Sparse,
+        dfg: g,
+        shape: WorkloadShape { frame_w: nnz, frame_h: 1, unroll: 1, time_mult: 1 },
+        golden: Some("ttv"),
+    }
+}
+
+/// Generate the input data bundle for a sparse app by name.
+pub fn data_for(name: &str, seed: u64) -> SparseData {
+    match name {
+        "vec_elemadd" => SparseData {
+            tensors: vec![
+                SparseTensor::random(&[4096], 0.25, seed),
+                SparseTensor::random(&[4096], 0.25, seed + 1),
+            ],
+        },
+        "mat_elemmul" => SparseData {
+            tensors: vec![
+                SparseTensor::random(&[128, 128], 0.1, seed),
+                SparseTensor::random(&[128, 128], 0.1, seed + 1),
+            ],
+        },
+        "mttkrp" => SparseData {
+            tensors: vec![
+                SparseTensor::random(&[32, 32, 32], 0.05, seed),
+                SparseTensor::random(&[32, 8], 1.0, seed + 1), // dense factor C
+                SparseTensor::random(&[32, 8], 1.0, seed + 2), // dense factor D
+            ],
+        },
+        "ttv" => SparseData {
+            tensors: vec![
+                SparseTensor::random(&[48, 48, 48], 0.05, seed),
+                SparseTensor::random(&[48], 1.0, seed + 1), // dense vector c
+            ],
+        },
+        _ => panic!("unknown sparse app {name}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensors_deterministic() {
+        let a = SparseTensor::random(&[64, 64], 0.1, 7);
+        let b = SparseTensor::random(&[64, 64], 0.1, 7);
+        assert_eq!(a.coords, b.coords);
+        assert_eq!(a.values, b.values);
+        let frac = a.nnz() as f64 / (64.0 * 64.0);
+        assert!((frac - 0.1).abs() < 0.03, "density {frac}");
+    }
+
+    #[test]
+    fn tensors_sorted_lexicographic() {
+        let t = SparseTensor::random(&[16, 16, 16], 0.05, 3);
+        for w in t.coords.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn all_sparse_apps_validate() {
+        for app in crate::apps::paper_sparse_suite() {
+            assert!(app.dfg.validate().is_empty(), "{}: {:?}", app.name, app.dfg.validate());
+            assert_eq!(app.kind, AppKind::Sparse);
+            // Every non-IO node is sparse.
+            for n in &app.dfg.nodes {
+                let is_io = matches!(n.op, Op::Input { .. } | Op::Output { .. } | Op::FlushSrc);
+                assert!(is_io || n.is_sparse(), "{}: {:?}", app.name, n.op);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_apps_fit_array() {
+        let arch = crate::arch::params::ArchParams::paper();
+        let (pe_cap, mem_cap) = arch.core_tile_counts();
+        for app in crate::apps::paper_sparse_suite() {
+            let (pe, mem, _) = app.dfg.tile_demand();
+            assert!(pe <= pe_cap && mem <= mem_cap, "{}", app.name);
+        }
+    }
+
+    #[test]
+    fn data_bundles_have_expected_arity() {
+        assert_eq!(data_for("vec_elemadd", 1).tensors.len(), 2);
+        assert_eq!(data_for("mat_elemmul", 1).tensors.len(), 2);
+        assert_eq!(data_for("mttkrp", 1).tensors.len(), 3);
+        assert_eq!(data_for("ttv", 1).tensors.len(), 2);
+    }
+
+    #[test]
+    fn dense_factors_are_dense() {
+        let d = data_for("ttv", 5);
+        assert_eq!(d.tensors[1].nnz(), 48);
+    }
+}

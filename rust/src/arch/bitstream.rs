@@ -1,0 +1,406 @@
+//! Configuration space and bitstream encoding.
+//!
+//! Every configurable feature of the fabric maps to a (address, data) word
+//! pair, mirroring how real CGRAs (Amber/Garnet) are configured through a
+//! word-addressed configuration bus. The address encodes (tile, feature
+//! register); the data encodes the feature value.
+//!
+//! The encoding is fully invertible: the fabric simulator reconstructs tile
+//! behaviour purely from a [`Bitstream`], which lets integration tests prove
+//! `place+route+pipeline -> encode -> decode -> simulate` equals the DFG
+//! reference semantics, and lets the low-unrolling-duplication pass (§V-E)
+//! operate directly on configuration words.
+
+use std::collections::BTreeMap;
+
+use super::canal::{Layer, Side};
+use super::params::{ArchParams, TileCoord};
+
+/// A configurable feature within one tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Feature {
+    /// Switch-box output mux select for (layer, side, track). Value: see
+    /// [`SbSource`] encoding.
+    SbSel { layer: Layer, side: Side, track: u8 },
+    /// Switch-box output pipelining register enable (0/1).
+    SbRegEn { layer: Layer, side: Side, track: u8 },
+    /// Connection-box select for input `port`: value = side*tracks + track
+    /// of the tapped incoming track, or [`CB_UNUSED`].
+    CbSel { layer: Layer, port: u8 },
+    /// PE opcode (see `dfg::ir::AluOp` encoding).
+    PeOp,
+    /// PE input-register enable for data port `port` (compute pipelining).
+    PeInRegEn { port: u8 },
+    /// PE constant operand (16-bit immediate).
+    PeConst,
+    /// Number of extra register-file delay words on input `port`
+    /// (variable-length shift register, §V-A Fig. 4 right).
+    PeRfDelay { port: u8 },
+    /// MEM tile mode (0 = unused, 1 = ROM, 2 = line buffer, 3 = scheduled
+    /// read/write, 4 = FIFO).
+    MemMode,
+    /// MEM schedule parameter word `idx` (extents/strides/offset).
+    MemParam { idx: u8 },
+    /// IO tile mode (0 = unused, 1 = input stream, 2 = output stream).
+    IoMode,
+    /// Sparse ready-valid FIFO enable on input `port` (§VII pipelining of
+    /// sparse applications inserts FIFOs rather than bare registers).
+    FifoEn { port: u8 },
+}
+
+/// CB select value meaning "port unused".
+pub const CB_UNUSED: u32 = 0xFFFF;
+
+/// Decoded switch-box output source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SbSource {
+    /// Driven by the track arriving on `side` (same track number).
+    In { side: Side },
+    /// Driven by tile output `port`.
+    TileOut { port: u8 },
+    /// Mux not configured (output floats; never sampled).
+    Unused,
+}
+
+/// The three incoming sides that can drive an output on `out_side`,
+/// in canonical (side-index ascending) order — defines SbSel values 0..2.
+pub fn sb_in_sides(out_side: Side) -> [Side; 3] {
+    let mut v = [Side::N; 3];
+    let mut i = 0;
+    for s in Side::ALL {
+        if s != out_side {
+            v[i] = s;
+            i += 1;
+        }
+    }
+    v
+}
+
+/// Encode an [`SbSource`] to a config value.
+pub fn encode_sb_source(out_side: Side, src: SbSource) -> u32 {
+    match src {
+        SbSource::Unused => 0xFF,
+        SbSource::In { side } => {
+            let sides = sb_in_sides(out_side);
+            sides.iter().position(|&s| s == side).expect("invalid sb source side") as u32
+        }
+        SbSource::TileOut { port } => 3 + port as u32,
+    }
+}
+
+/// Decode a config value back to an [`SbSource`].
+pub fn decode_sb_source(out_side: Side, value: u32) -> SbSource {
+    if value == 0xFF {
+        SbSource::Unused
+    } else if value < 3 {
+        SbSource::In { side: sb_in_sides(out_side)[value as usize] }
+    } else {
+        SbSource::TileOut { port: (value - 3) as u8 }
+    }
+}
+
+/// Number of MEM schedule parameter words.
+pub const MEM_PARAM_WORDS: u8 = 12;
+
+/// Deterministic feature -> register-index mapping for one tile.
+pub struct ConfigSpace {
+    tracks: usize,
+    ports_in: usize,
+    regs_per_tile: usize,
+}
+
+impl ConfigSpace {
+    pub fn new(params: &ArchParams) -> ConfigSpace {
+        let tracks = params.tracks;
+        let ports_in = params.data_in_ports.max(params.bit_in_ports);
+        let mut cs = ConfigSpace { tracks, ports_in, regs_per_tile: 0 };
+        // regs_per_tile = index one past the last feature.
+        cs.regs_per_tile = cs.feature_index(Feature::FifoEn { port: (ports_in - 1) as u8 }) + 1;
+        cs
+    }
+
+    /// Register index of a feature within its tile.
+    pub fn feature_index(&self, f: Feature) -> usize {
+        let t = self.tracks;
+        let p = self.ports_in;
+        let sb_block = 2 * 4 * t; // layers * sides * tracks
+        match f {
+            Feature::SbSel { layer, side, track } => {
+                layer.index() * 4 * t + side.index() * t + track as usize
+            }
+            Feature::SbRegEn { layer, side, track } => {
+                sb_block + layer.index() * 4 * t + side.index() * t + track as usize
+            }
+            Feature::CbSel { layer, port } => 2 * sb_block + layer.index() * p + port as usize,
+            Feature::PeOp => 2 * sb_block + 2 * p,
+            Feature::PeInRegEn { port } => 2 * sb_block + 2 * p + 1 + port as usize,
+            Feature::PeConst => 2 * sb_block + 3 * p + 1,
+            Feature::PeRfDelay { port } => 2 * sb_block + 3 * p + 2 + port as usize,
+            Feature::MemMode => 2 * sb_block + 4 * p + 2,
+            Feature::MemParam { idx } => 2 * sb_block + 4 * p + 3 + idx as usize,
+            Feature::IoMode => 2 * sb_block + 4 * p + 3 + MEM_PARAM_WORDS as usize,
+            Feature::FifoEn { port } => {
+                2 * sb_block + 4 * p + 4 + MEM_PARAM_WORDS as usize + port as usize
+            }
+        }
+    }
+
+    /// Inverse of [`feature_index`](Self::feature_index).
+    pub fn decode_index(&self, idx: usize) -> Feature {
+        let t = self.tracks;
+        let p = self.ports_in;
+        let sb_block = 2 * 4 * t;
+        let layer_of = |i: usize| if i / (4 * t) == 0 { Layer::B16 } else { Layer::B1 };
+        if idx < sb_block {
+            let l = layer_of(idx);
+            let r = idx % (4 * t);
+            Feature::SbSel { layer: l, side: Side::from_index(r / t), track: (r % t) as u8 }
+        } else if idx < 2 * sb_block {
+            let i = idx - sb_block;
+            let l = layer_of(i);
+            let r = i % (4 * t);
+            Feature::SbRegEn { layer: l, side: Side::from_index(r / t), track: (r % t) as u8 }
+        } else if idx < 2 * sb_block + 2 * p {
+            let i = idx - 2 * sb_block;
+            Feature::CbSel { layer: if i / p == 0 { Layer::B16 } else { Layer::B1 }, port: (i % p) as u8 }
+        } else if idx == 2 * sb_block + 2 * p {
+            Feature::PeOp
+        } else if idx < 2 * sb_block + 3 * p + 1 {
+            Feature::PeInRegEn { port: (idx - (2 * sb_block + 2 * p + 1)) as u8 }
+        } else if idx == 2 * sb_block + 3 * p + 1 {
+            Feature::PeConst
+        } else if idx < 2 * sb_block + 4 * p + 2 {
+            Feature::PeRfDelay { port: (idx - (2 * sb_block + 3 * p + 2)) as u8 }
+        } else if idx == 2 * sb_block + 4 * p + 2 {
+            Feature::MemMode
+        } else if idx < 2 * sb_block + 4 * p + 3 + MEM_PARAM_WORDS as usize {
+            Feature::MemParam { idx: (idx - (2 * sb_block + 4 * p + 3)) as u8 }
+        } else if idx == 2 * sb_block + 4 * p + 3 + MEM_PARAM_WORDS as usize {
+            Feature::IoMode
+        } else {
+            Feature::FifoEn { port: (idx - (2 * sb_block + 4 * p + 4 + MEM_PARAM_WORDS as usize)) as u8 }
+        }
+    }
+
+    pub fn regs_per_tile(&self) -> usize {
+        self.regs_per_tile
+    }
+}
+
+/// A full-array configuration: sparse map of (addr -> data). Unset features
+/// hold their reset value (0 / unused).
+#[derive(Debug, Clone, Default)]
+pub struct Bitstream {
+    /// addr -> data. BTreeMap keeps the serialized order deterministic.
+    words: BTreeMap<u64, u32>,
+}
+
+impl Bitstream {
+    pub fn new() -> Bitstream {
+        Bitstream::default()
+    }
+
+    fn addr(params: &ArchParams, cs: &ConfigSpace, tile: TileCoord, f: Feature) -> u64 {
+        (params.tile_index(tile) as u64) * cs.regs_per_tile() as u64 + cs.feature_index(f) as u64
+    }
+
+    pub fn set(&mut self, params: &ArchParams, cs: &ConfigSpace, tile: TileCoord, f: Feature, value: u32) {
+        let a = Self::addr(params, cs, tile, f);
+        if value == 0 {
+            self.words.remove(&a);
+        } else {
+            self.words.insert(a, value);
+        }
+    }
+
+    pub fn get(&self, params: &ArchParams, cs: &ConfigSpace, tile: TileCoord, f: Feature) -> u32 {
+        self.words.get(&Self::addr(params, cs, tile, f)).copied().unwrap_or(0)
+    }
+
+    /// Number of non-reset configuration words.
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Iterate raw (addr, data) words.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u32)> + '_ {
+        self.words.iter().map(|(&a, &d)| (a, d))
+    }
+
+    /// Iterate (tile, feature, value) triples.
+    pub fn features<'a>(
+        &'a self,
+        params: &'a ArchParams,
+        cs: &'a ConfigSpace,
+    ) -> impl Iterator<Item = (TileCoord, Feature, u32)> + 'a {
+        self.words.iter().map(move |(&a, &d)| {
+            let tidx = (a / cs.regs_per_tile() as u64) as usize;
+            let fidx = (a % cs.regs_per_tile() as u64) as usize;
+            let tile = TileCoord::new(tidx % params.cols, tidx / params.cols);
+            (tile, cs.decode_index(fidx), d)
+        })
+    }
+
+    /// Copy the configuration of a rectangular region to another origin —
+    /// the bitstream-level primitive behind low unrolling duplication
+    /// (§V-E): PnR one unroll, then stamp its configuration across the
+    /// array.
+    pub fn duplicate_region(
+        &mut self,
+        params: &ArchParams,
+        cs: &ConfigSpace,
+        src_origin: TileCoord,
+        size: (usize, usize),
+        dst_origin: TileCoord,
+    ) {
+        let mut updates = Vec::new();
+        for (tile, f, v) in self.features(params, cs) {
+            let dx = tile.x as i64 - src_origin.x as i64;
+            let dy = tile.y as i64 - src_origin.y as i64;
+            if dx < 0 || dy < 0 || dx >= size.0 as i64 || dy >= size.1 as i64 {
+                continue;
+            }
+            let nx = dst_origin.x as i64 + dx;
+            let ny = dst_origin.y as i64 + dy;
+            assert!(
+                params.in_bounds(nx as i32, ny as i32),
+                "duplicate_region target out of bounds"
+            );
+            let ntile = TileCoord::new(nx as usize, ny as usize);
+            // Duplication must be kind-preserving: a PE config can only
+            // land on a PE tile, MEM on MEM (guaranteed when the column
+            // offset is a multiple of mem_col_period).
+            assert_eq!(
+                params.tile_kind(tile),
+                params.tile_kind(ntile),
+                "duplicate_region must map tiles onto the same kind"
+            );
+            updates.push((ntile, f, v));
+        }
+        for (tile, f, v) in updates {
+            self.set(params, cs, tile, f, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (ArchParams, ConfigSpace) {
+        let p = ArchParams::paper();
+        let cs = ConfigSpace::new(&p);
+        (p, cs)
+    }
+
+    #[test]
+    fn feature_index_roundtrip() {
+        let (_p, cs) = setup();
+        for idx in 0..cs.regs_per_tile() {
+            let f = cs.decode_index(idx);
+            assert_eq!(cs.feature_index(f), idx, "feature {f:?}");
+        }
+    }
+
+    #[test]
+    fn sb_source_roundtrip() {
+        for out in Side::ALL {
+            for src_side in Side::ALL {
+                if src_side == out {
+                    continue;
+                }
+                let v = encode_sb_source(out, SbSource::In { side: src_side });
+                assert_eq!(decode_sb_source(out, v), SbSource::In { side: src_side });
+            }
+            for port in 0..2u8 {
+                let v = encode_sb_source(out, SbSource::TileOut { port });
+                assert_eq!(decode_sb_source(out, v), SbSource::TileOut { port });
+            }
+            assert_eq!(decode_sb_source(out, 0xFF), SbSource::Unused);
+        }
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let (p, cs) = setup();
+        let mut bs = Bitstream::new();
+        let tile = TileCoord::new(5, 3);
+        bs.set(&p, &cs, tile, Feature::PeOp, 7);
+        bs.set(&p, &cs, tile, Feature::PeInRegEn { port: 1 }, 1);
+        assert_eq!(bs.get(&p, &cs, tile, Feature::PeOp), 7);
+        assert_eq!(bs.get(&p, &cs, tile, Feature::PeInRegEn { port: 1 }), 1);
+        assert_eq!(bs.get(&p, &cs, tile, Feature::PeInRegEn { port: 0 }), 0);
+        assert_eq!(bs.len(), 2);
+    }
+
+    #[test]
+    fn setting_zero_clears() {
+        let (p, cs) = setup();
+        let mut bs = Bitstream::new();
+        let tile = TileCoord::new(1, 1);
+        bs.set(&p, &cs, tile, Feature::PeOp, 3);
+        bs.set(&p, &cs, tile, Feature::PeOp, 0);
+        assert!(bs.is_empty());
+    }
+
+    #[test]
+    fn features_iteration_decodes() {
+        let (p, cs) = setup();
+        let mut bs = Bitstream::new();
+        let tile = TileCoord::new(8, 2);
+        bs.set(&p, &cs, tile, Feature::SbRegEn { layer: Layer::B1, side: Side::W, track: 3 }, 1);
+        let feats: Vec<_> = bs.features(&p, &cs).collect();
+        assert_eq!(feats.len(), 1);
+        assert_eq!(feats[0].0, tile);
+        assert_eq!(feats[0].1, Feature::SbRegEn { layer: Layer::B1, side: Side::W, track: 3 });
+        assert_eq!(feats[0].2, 1);
+    }
+
+    #[test]
+    fn duplicate_region_stamps_config() {
+        let (p, cs) = setup();
+        let mut bs = Bitstream::new();
+        // Configure a 4x2 block at (0,1) (a PE/PE/PE/MEM column pattern).
+        for x in 0..4 {
+            for y in 1..3 {
+                bs.set(&p, &cs, TileCoord::new(x, y), Feature::PeOp, (x + y) as u32);
+            }
+        }
+        // Duplicate 4 columns right (preserves the MEM column phase).
+        bs.duplicate_region(&p, &cs, TileCoord::new(0, 1), (4, 2), TileCoord::new(4, 1));
+        for x in 0..4 {
+            for y in 1..3 {
+                assert_eq!(
+                    bs.get(&p, &cs, TileCoord::new(x + 4, y), Feature::PeOp),
+                    (x + y) as u32
+                );
+            }
+        }
+        assert_eq!(bs.len(), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "same kind")]
+    fn duplicate_region_rejects_kind_mismatch() {
+        let (p, cs) = setup();
+        let mut bs = Bitstream::new();
+        bs.set(&p, &cs, TileCoord::new(0, 1), Feature::PeOp, 1);
+        // Offset of 3 columns maps PE column 0 onto MEM column 3.
+        bs.duplicate_region(&p, &cs, TileCoord::new(0, 1), (1, 1), TileCoord::new(3, 1));
+    }
+
+    #[test]
+    fn addresses_unique_across_tiles() {
+        let (p, cs) = setup();
+        let mut bs = Bitstream::new();
+        bs.set(&p, &cs, TileCoord::new(0, 0), Feature::PeOp, 1);
+        bs.set(&p, &cs, TileCoord::new(1, 0), Feature::PeOp, 2);
+        assert_eq!(bs.len(), 2);
+        assert_eq!(bs.get(&p, &cs, TileCoord::new(0, 0), Feature::PeOp), 1);
+        assert_eq!(bs.get(&p, &cs, TileCoord::new(1, 0), Feature::PeOp), 2);
+    }
+}

@@ -1,0 +1,525 @@
+//! Canal-style interconnect graph (routing-resource graph, RRG).
+//!
+//! Canal [16] describes a CGRA interconnect as a graph: switch boxes (SB)
+//! route signals between tiles on horizontal/vertical tracks, connection
+//! boxes (CB) tap passing tracks into tile input ports, and tile outputs
+//! drive SB outputs. We reproduce that representation with four node kinds
+//! per tile per wiring layer:
+//!
+//! * `SbIn(side, track)` — a track signal arriving at the tile on `side`.
+//! * `SbOut(side, track)` — a track signal leaving the tile on `side`;
+//!   every SbOut has a configurable pipelining register (paper §V-D: "The
+//!   interconnect ... has configurable pipelining registers within every
+//!   switchbox of the array ... on every 16-bit and 1-bit track going out
+//!   of the switchbox in each of the four directions").
+//! * `CbIn(port)` — output of the connection-box mux feeding tile input
+//!   `port`.
+//! * `TileOut(port)` — tile core output `port`.
+//!
+//! Two wiring layers exist: [`Layer::B16`] (16-bit data) and [`Layer::B1`]
+//! (1-bit control — valid/ready/flush). Edges are tagged with an
+//! [`EdgeKind`] so the delay model can assign per-class worst-case delays.
+//!
+//! Node ids are dense `u32`s computed arithmetically (no hash maps on the
+//! hot path); the graph is stored in CSR form.
+
+use super::params::{ArchParams, TileCoord, TileKind};
+
+/// Wiring layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Layer {
+    /// 16-bit data layer.
+    B16 = 0,
+    /// 1-bit control layer (valid / ready / flush routing).
+    B1 = 1,
+}
+
+impl Layer {
+    pub const ALL: [Layer; 2] = [Layer::B16, Layer::B1];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Side of a tile. `N` points towards row 0 (the IO row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Side {
+    N = 0,
+    E = 1,
+    S = 2,
+    W = 3,
+}
+
+impl Side {
+    pub const ALL: [Side; 4] = [Side::N, Side::E, Side::S, Side::W];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Side {
+        Side::ALL[i]
+    }
+
+    pub fn opposite(self) -> Side {
+        match self {
+            Side::N => Side::S,
+            Side::E => Side::W,
+            Side::S => Side::N,
+            Side::W => Side::E,
+        }
+    }
+
+    /// (dx, dy) of the neighbouring tile on this side.
+    pub fn delta(self) -> (i32, i32) {
+        match self {
+            Side::N => (0, -1),
+            Side::E => (1, 0),
+            Side::S => (0, 1),
+            Side::W => (-1, 0),
+        }
+    }
+
+    pub fn is_horizontal(self) -> bool {
+        matches!(self, Side::E | Side::W)
+    }
+}
+
+/// Dense routing-resource node id.
+pub type NodeId = u32;
+
+/// Decoded node kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    SbIn { side: Side, track: u8 },
+    SbOut { side: Side, track: u8 },
+    CbIn { port: u8 },
+    TileOut { port: u8 },
+}
+
+/// Fully decoded node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Node {
+    pub tile: TileCoord,
+    pub layer: Layer,
+    pub kind: NodeKind,
+}
+
+/// Edge class, used by the delay model (paper Fig. 3: "enumerate all
+/// possible data and clock paths at the tile level").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EdgeKind {
+    /// SbIn -> SbOut through the switch-box mux (straight or turn).
+    SbTurn,
+    /// TileOut -> SbOut: the tile core driving onto a track.
+    SbDrive,
+    /// SbIn -> CbIn through the connection-box mux.
+    CbTap,
+    /// SbOut -> neighbouring tile's SbIn: the physical wire crossing the
+    /// tile boundary. Delay depends on the two tile kinds and direction.
+    Wire,
+}
+
+/// One directed RRG edge.
+#[derive(Debug, Clone, Copy)]
+pub struct Edge {
+    pub dst: NodeId,
+    pub kind: EdgeKind,
+    /// Worst-case delay in picoseconds (filled by
+    /// [`InterconnectGraph::annotate_delays`]).
+    pub delay_ps: u32,
+}
+
+/// The routing-resource graph for a whole array.
+pub struct InterconnectGraph {
+    pub params: ArchParams,
+    /// Max in-ports / out-ports per tile per layer (uniform layout).
+    pub ports_in: usize,
+    pub ports_out: usize,
+    per_tile_layer: usize,
+    num_nodes: usize,
+    // CSR fanout.
+    offsets: Vec<u32>,
+    edges: Vec<Edge>,
+    // CSR fanin (dst-indexed list of (src, edge index)).
+    fanin_offsets: Vec<u32>,
+    fanin: Vec<(NodeId, u32)>,
+}
+
+impl InterconnectGraph {
+    /// Build the RRG topology for an architecture. Delays are zero until
+    /// [`annotate_delays`](Self::annotate_delays) is called.
+    pub fn build(params: &ArchParams) -> InterconnectGraph {
+        let t = params.tracks;
+        let ports_in = params.data_in_ports.max(params.bit_in_ports);
+        let ports_out = params.data_out_ports.max(params.bit_out_ports);
+        let per_tile_layer = 8 * t + ports_in + ports_out;
+        let num_nodes = params.num_tiles() * 2 * per_tile_layer;
+
+        let mut g = InterconnectGraph {
+            params: params.clone(),
+            ports_in,
+            ports_out,
+            per_tile_layer,
+            num_nodes,
+            offsets: Vec::new(),
+            edges: Vec::new(),
+            fanin_offsets: Vec::new(),
+            fanin: Vec::new(),
+        };
+
+        // Gather edges per source node, then build CSR.
+        let mut adj: Vec<Vec<Edge>> = vec![Vec::new(); num_nodes];
+        for tile in params.all_tiles() {
+            for layer in Layer::ALL {
+                g.build_tile_edges(tile, layer, &mut adj);
+            }
+        }
+
+        let mut offsets = Vec::with_capacity(num_nodes + 1);
+        let mut edges = Vec::new();
+        offsets.push(0u32);
+        for a in &adj {
+            edges.extend_from_slice(a);
+            offsets.push(edges.len() as u32);
+        }
+        g.offsets = offsets;
+        g.edges = edges;
+        g.rebuild_fanin();
+        g
+    }
+
+    fn rebuild_fanin(&mut self) {
+        let mut fan: Vec<Vec<(NodeId, u32)>> = vec![Vec::new(); self.num_nodes];
+        for src in 0..self.num_nodes {
+            let (lo, hi) = (self.offsets[src] as usize, self.offsets[src + 1] as usize);
+            for ei in lo..hi {
+                let e = self.edges[ei];
+                fan[e.dst as usize].push((src as NodeId, ei as u32));
+            }
+        }
+        let mut offsets = Vec::with_capacity(self.num_nodes + 1);
+        let mut flat = Vec::new();
+        offsets.push(0u32);
+        for f in &fan {
+            flat.extend_from_slice(f);
+            offsets.push(flat.len() as u32);
+        }
+        self.fanin_offsets = offsets;
+        self.fanin = flat;
+    }
+
+    fn build_tile_edges(&self, tile: TileCoord, layer: Layer, adj: &mut Vec<Vec<Edge>>) {
+        let t = self.params.tracks;
+        // SbIn -> SbOut (straight + turns, same track, not back out the
+        // incoming side).
+        for side_in in Side::ALL {
+            for track in 0..t {
+                let src = self.node_id(tile, layer, NodeKind::SbIn { side: side_in, track: track as u8 });
+                for side_out in Side::ALL {
+                    if side_out == side_in {
+                        continue;
+                    }
+                    let dst = self.node_id(tile, layer, NodeKind::SbOut { side: side_out, track: track as u8 });
+                    adj[src as usize].push(Edge { dst, kind: EdgeKind::SbTurn, delay_ps: 0 });
+                }
+                // SbIn -> CbIn taps.
+                for port in 0..self.ports_in {
+                    let dst = self.node_id(tile, layer, NodeKind::CbIn { port: port as u8 });
+                    adj[src as usize].push(Edge { dst, kind: EdgeKind::CbTap, delay_ps: 0 });
+                }
+            }
+        }
+        // TileOut -> SbOut. Output port p drives tracks where
+        // track % ports_out == p (keeps SB mux sizes realistic while every
+        // port can reach every side).
+        for port in 0..self.ports_out {
+            let src = self.node_id(tile, layer, NodeKind::TileOut { port: port as u8 });
+            for side in Side::ALL {
+                for track in 0..t {
+                    if track % self.ports_out != port {
+                        continue;
+                    }
+                    let dst = self.node_id(tile, layer, NodeKind::SbOut { side, track: track as u8 });
+                    adj[src as usize].push(Edge { dst, kind: EdgeKind::SbDrive, delay_ps: 0 });
+                }
+            }
+        }
+        // SbOut -> neighbour SbIn (the inter-tile wire).
+        for side in Side::ALL {
+            let (dx, dy) = side.delta();
+            let nx = tile.x as i32 + dx;
+            let ny = tile.y as i32 + dy;
+            if !self.params.in_bounds(nx, ny) {
+                continue;
+            }
+            let ntile = TileCoord::new(nx as usize, ny as usize);
+            for track in 0..t {
+                let src = self.node_id(tile, layer, NodeKind::SbOut { side, track: track as u8 });
+                let dst = self.node_id(ntile, layer, NodeKind::SbIn { side: side.opposite(), track: track as u8 });
+                adj[src as usize].push(Edge { dst, kind: EdgeKind::Wire, delay_ps: 0 });
+            }
+        }
+    }
+
+    /// Encode a node id.
+    pub fn node_id(&self, tile: TileCoord, layer: Layer, kind: NodeKind) -> NodeId {
+        let t = self.params.tracks;
+        let local = match kind {
+            NodeKind::SbIn { side, track } => side.index() * t + track as usize,
+            NodeKind::SbOut { side, track } => 4 * t + side.index() * t + track as usize,
+            NodeKind::CbIn { port } => 8 * t + port as usize,
+            NodeKind::TileOut { port } => 8 * t + self.ports_in + port as usize,
+        };
+        debug_assert!(local < self.per_tile_layer);
+        (((self.params.tile_index(tile) * 2) + layer.index()) * self.per_tile_layer + local) as NodeId
+    }
+
+    /// Decode a node id.
+    pub fn decode(&self, id: NodeId) -> Node {
+        let t = self.params.tracks;
+        let id = id as usize;
+        let local = id % self.per_tile_layer;
+        let rest = id / self.per_tile_layer;
+        let layer = if rest % 2 == 0 { Layer::B16 } else { Layer::B1 };
+        let tidx = rest / 2;
+        let tile = TileCoord::new(tidx % self.params.cols, tidx / self.params.cols);
+        let kind = if local < 4 * t {
+            NodeKind::SbIn { side: Side::from_index(local / t), track: (local % t) as u8 }
+        } else if local < 8 * t {
+            let l = local - 4 * t;
+            NodeKind::SbOut { side: Side::from_index(l / t), track: (l % t) as u8 }
+        } else if local < 8 * t + self.ports_in {
+            NodeKind::CbIn { port: (local - 8 * t) as u8 }
+        } else {
+            NodeKind::TileOut { port: (local - 8 * t - self.ports_in) as u8 }
+        };
+        Node { tile, layer, kind }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Forward adjacency of a node.
+    pub fn fanout(&self, id: NodeId) -> &[Edge] {
+        let (lo, hi) = (self.offsets[id as usize] as usize, self.offsets[id as usize + 1] as usize);
+        &self.edges[lo..hi]
+    }
+
+    /// Fanin adjacency: (source node, edge index) pairs.
+    pub fn fanin(&self, id: NodeId) -> &[(NodeId, u32)] {
+        let (lo, hi) = (
+            self.fanin_offsets[id as usize] as usize,
+            self.fanin_offsets[id as usize + 1] as usize,
+        );
+        &self.fanin[lo..hi]
+    }
+
+    /// Edge by flat index (as referenced from fanin lists / route trees).
+    pub fn edge(&self, idx: u32) -> Edge {
+        self.edges[idx as usize]
+    }
+
+    /// Does this node carry a configurable pipelining register? (Every
+    /// switch-box output does.)
+    pub fn has_pipeline_reg(&self, id: NodeId) -> bool {
+        matches!(self.decode(id).kind, NodeKind::SbOut { .. })
+    }
+
+    /// Assign per-edge worst-case delays from a generated delay library.
+    pub fn annotate_delays(&mut self, lib: &super::delay::DelayLib) {
+        // Decode endpoints first to avoid borrowing issues.
+        let n = self.edges.len();
+        for i in 0..n {
+            let e = self.edges[i];
+            // Reconstruct the source node by scanning offsets is O(log n)
+            // via binary search on the CSR offsets.
+            let src = self.edge_src(i as u32);
+            let d = lib.edge_delay(self, src, &e);
+            self.edges[i].delay_ps = d;
+        }
+    }
+
+    /// Source node of an edge index (binary search over CSR offsets).
+    pub fn edge_src(&self, edge_idx: u32) -> NodeId {
+        let mut lo = 0usize;
+        let mut hi = self.num_nodes;
+        // Find the node whose [offsets[n], offsets[n+1]) contains edge_idx.
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.offsets[mid + 1] <= edge_idx {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo as NodeId
+    }
+
+    /// All (src, dst, kind) tile-level path templates that the timing-model
+    /// generator must characterize, expressed as distinct
+    /// (EdgeKind, TileKind, horizontal?) combinations present in this
+    /// architecture — the Fig. 3 "enumerate all paths of interest" step.
+    pub fn enumerate_path_classes(&self) -> Vec<(EdgeKind, TileKind, bool)> {
+        let mut out = Vec::new();
+        for kind in [TileKind::Pe, TileKind::Mem, TileKind::Io] {
+            for horiz in [false, true] {
+                for ek in [EdgeKind::SbTurn, EdgeKind::SbDrive, EdgeKind::CbTap, EdgeKind::Wire] {
+                    out.push((ek, kind, horiz));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> InterconnectGraph {
+        InterconnectGraph::build(&ArchParams::tiny(3, 4))
+    }
+
+    #[test]
+    fn id_roundtrip_all_nodes() {
+        let g = tiny_graph();
+        for id in 0..g.num_nodes() as NodeId {
+            let n = g.decode(id);
+            assert_eq!(g.node_id(n.tile, n.layer, n.kind), id);
+        }
+    }
+
+    #[test]
+    fn edge_src_consistent() {
+        let g = tiny_graph();
+        for src in 0..g.num_nodes() as NodeId {
+            let lo = g.offsets[src as usize];
+            let hi = g.offsets[src as usize + 1];
+            for ei in lo..hi {
+                assert_eq!(g.edge_src(ei), src);
+            }
+        }
+    }
+
+    #[test]
+    fn no_uturns_in_sb() {
+        let g = tiny_graph();
+        for id in 0..g.num_nodes() as NodeId {
+            let n = g.decode(id);
+            if let NodeKind::SbIn { side, .. } = n.kind {
+                for e in g.fanout(id) {
+                    if e.kind == EdgeKind::SbTurn {
+                        let d = g.decode(e.dst);
+                        if let NodeKind::SbOut { side: out_side, .. } = d.kind {
+                            assert_ne!(out_side, side, "u-turn at {:?}", n);
+                        } else {
+                            panic!("SbTurn edge must end at SbOut");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wires_connect_adjacent_tiles_same_track() {
+        let g = tiny_graph();
+        for id in 0..g.num_nodes() as NodeId {
+            let n = g.decode(id);
+            if let NodeKind::SbOut { side, track } = n.kind {
+                for e in g.fanout(id) {
+                    assert_eq!(e.kind, EdgeKind::Wire, "SbOut fans out only via wires");
+                    let d = g.decode(e.dst);
+                    assert_eq!(d.layer, n.layer);
+                    match d.kind {
+                        NodeKind::SbIn { side: in_side, track: in_track } => {
+                            assert_eq!(in_side, side.opposite());
+                            assert_eq!(in_track, track);
+                            let (dx, dy) = side.delta();
+                            assert_eq!(d.tile.x as i32, n.tile.x as i32 + dx);
+                            assert_eq!(d.tile.y as i32, n.tile.y as i32 + dy);
+                        }
+                        _ => panic!("wire must end at SbIn"),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_tiles_have_no_outward_wires() {
+        let g = tiny_graph();
+        let p = &g.params;
+        // North-west corner: SbOut N and W have no wire edges.
+        let corner = TileCoord::new(0, 0);
+        for side in [Side::N, Side::W] {
+            let id = g.node_id(corner, Layer::B16, NodeKind::SbOut { side, track: 0 });
+            assert!(g.fanout(id).is_empty());
+        }
+        // Interior tile: all four sides wired.
+        let mid = TileCoord::new(1, 1);
+        for side in Side::ALL {
+            let id = g.node_id(mid, Layer::B16, NodeKind::SbOut { side, track: 0 });
+            assert_eq!(g.fanout(id).len(), 1);
+        }
+        let _ = p;
+    }
+
+    #[test]
+    fn fanin_matches_fanout() {
+        let g = tiny_graph();
+        let mut count_from_fanout = 0usize;
+        for src in 0..g.num_nodes() as NodeId {
+            count_from_fanout += g.fanout(src).len();
+        }
+        let count_from_fanin: usize =
+            (0..g.num_nodes() as NodeId).map(|n| g.fanin(n).len()).sum();
+        assert_eq!(count_from_fanout, count_from_fanin);
+        // Spot-check a CbIn: fanin must all be CbTap edges from SbIn.
+        let cb = g.node_id(TileCoord::new(1, 1), Layer::B16, NodeKind::CbIn { port: 0 });
+        assert!(!g.fanin(cb).is_empty());
+        for &(src, ei) in g.fanin(cb) {
+            assert_eq!(g.edge(ei).kind, EdgeKind::CbTap);
+            assert!(matches!(g.decode(src).kind, NodeKind::SbIn { .. }));
+        }
+    }
+
+    #[test]
+    fn tileout_reaches_all_sides() {
+        let g = tiny_graph();
+        let out = g.node_id(TileCoord::new(1, 1), Layer::B16, NodeKind::TileOut { port: 0 });
+        let mut sides_reached = std::collections::HashSet::new();
+        for e in g.fanout(out) {
+            assert_eq!(e.kind, EdgeKind::SbDrive);
+            if let NodeKind::SbOut { side, track } = g.decode(e.dst).kind {
+                assert_eq!(track as usize % g.ports_out, 0);
+                sides_reached.insert(side.index());
+            }
+        }
+        assert_eq!(sides_reached.len(), 4);
+    }
+
+    #[test]
+    fn pipeline_regs_only_on_sbout() {
+        let g = tiny_graph();
+        for id in 0..g.num_nodes() as NodeId {
+            let is_sbout = matches!(g.decode(id).kind, NodeKind::SbOut { .. });
+            assert_eq!(g.has_pipeline_reg(id), is_sbout);
+        }
+    }
+
+    #[test]
+    fn paper_size_graph_builds() {
+        let g = InterconnectGraph::build(&ArchParams::paper());
+        // 32 cols * 17 rows * 2 layers * (8*5 + 4 + 3) nodes.
+        assert_eq!(g.num_nodes(), 32 * 17 * 2 * 47);
+        assert!(g.num_edges() > 100_000);
+    }
+}

@@ -1,0 +1,33 @@
+//! CGRA architecture model.
+//!
+//! The paper targets a class of CGRAs "like [Amber]": a large tile array
+//! (32x16 in the evaluation — 384 PE tiles + 128 MEM tiles), a configurable
+//! interconnect that allows single-cycle multi-hop connections from any tile
+//! to any other tile, and configurable pipelining registers within every
+//! switch box. This module models that architecture:
+//!
+//! * [`params`] — the architecture parameter set (array geometry, track
+//!   counts, port counts, register resources).
+//! * [`canal`] — the Canal-style interconnect graph: a routing-resource
+//!   graph (RRG) over switch boxes (SB), connection boxes (CB) and tile
+//!   ports, on two wiring layers (16-bit data, 1-bit control), including
+//!   tile-level path enumeration used for timing-model generation.
+//! * [`delay`] — the timing-model generation methodology (paper §IV-A):
+//!   enumerate all significant tile-level paths from the interconnect graph
+//!   and evaluate them with a calibrated wire/gate delay model standing in
+//!   for the commercial STA run on the post-PnR netlist. Also models
+//!   per-tile clock skew.
+//! * [`bitstream`] — configuration-space encoding: every configurable
+//!   feature (SB mux select, SB pipeline register enable, CB select, PE
+//!   opcode and input registers, MEM mode/schedule) maps to (address, data)
+//!   words; supports the configuration duplication needed by the low
+//!   unrolling duplication pass.
+
+pub mod params;
+pub mod canal;
+pub mod delay;
+pub mod bitstream;
+
+pub use canal::{InterconnectGraph, NodeId, NodeKind, Side, Layer};
+pub use delay::{DelayLib, DelayModelParams};
+pub use params::{ArchParams, TileKind, TileCoord};

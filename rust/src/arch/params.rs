@@ -1,0 +1,211 @@
+//! Architecture parameters for the target CGRA.
+//!
+//! Defaults reproduce the paper's evaluation array: 32 columns x 16 rows of
+//! core tiles (every 4th column a MEM column: 384 PE + 128 MEM) plus a row
+//! of IO tiles along the top edge, 5 routing tracks per side on each of the
+//! two wiring layers (16-bit data and 1-bit control), a pipelining register
+//! on every switch-box output, registers on every PE input, and a small
+//! register file in every PE tile usable as a variable-length shift
+//! register.
+
+/// Kind of a tile in the array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TileKind {
+    /// Processing element: ALU + input registers + register file.
+    Pe,
+    /// Memory tile: SRAM + address/schedule generators.
+    Mem,
+    /// IO tile on the array boundary (streams data in/out of the global
+    /// buffer).
+    Io,
+}
+
+/// Tile coordinate. `x` is the column, `y` the row; `y == 0` is the IO row,
+/// core tiles occupy `1..=rows`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TileCoord {
+    pub x: u16,
+    pub y: u16,
+}
+
+impl TileCoord {
+    pub fn new(x: usize, y: usize) -> TileCoord {
+        TileCoord { x: x as u16, y: y as u16 }
+    }
+
+    /// Manhattan distance between tile centers, in tiles.
+    pub fn manhattan(self, other: TileCoord) -> usize {
+        (self.x as i32 - other.x as i32).unsigned_abs() as usize
+            + (self.y as i32 - other.y as i32).unsigned_abs() as usize
+    }
+}
+
+/// Full architecture parameter set.
+#[derive(Debug, Clone)]
+pub struct ArchParams {
+    /// Core rows (excluding the IO row).
+    pub rows: usize,
+    /// Columns.
+    pub cols: usize,
+    /// Every `mem_col_period`-th column (1-based: columns where
+    /// `(x + 1) % mem_col_period == 0`) is a MEM column.
+    pub mem_col_period: usize,
+    /// Routing tracks per side, per layer.
+    pub tracks: usize,
+    /// Data input ports per core tile (16-bit layer CB count).
+    pub data_in_ports: usize,
+    /// Data output ports per core tile.
+    pub data_out_ports: usize,
+    /// 1-bit input ports per core tile (valid/ready/control).
+    pub bit_in_ports: usize,
+    /// 1-bit output ports per core tile.
+    pub bit_out_ports: usize,
+    /// Register-file words per PE tile (usable as variable-length shift
+    /// registers by the register-chain transform).
+    pub regfile_words: usize,
+    /// Depth of the FIFOs inserted when pipelining sparse (ready-valid)
+    /// applications.
+    pub fifo_depth: usize,
+    /// Whether the flush broadcast signal is hardened into a dedicated
+    /// per-column network (paper §VI) instead of being routed on the
+    /// configurable interconnect.
+    pub hardened_flush: bool,
+}
+
+impl Default for ArchParams {
+    fn default() -> Self {
+        ArchParams {
+            rows: 16,
+            cols: 32,
+            mem_col_period: 4,
+            tracks: 5,
+            data_in_ports: 2,
+            data_out_ports: 2,
+            // 1-bit ports carry valid/ready/flush/select. Convention:
+            //   CbIn B1 ports 0..1  = valid / control for data ports 0..1
+            //   CbIn B1 ports 2..3  = ready returns from this node's sinks
+            //   TileOut B1 port 0   = valid / 1-bit data out
+            //   TileOut B1 ports 1..2 = ready outputs for data in-ports 0..1
+            bit_in_ports: 4,
+            bit_out_ports: 3,
+            regfile_words: 32,
+            fifo_depth: 2,
+            hardened_flush: false,
+        }
+    }
+}
+
+impl ArchParams {
+    /// The paper's evaluation array (32x16, 384 PE + 128 MEM).
+    pub fn paper() -> ArchParams {
+        ArchParams::default()
+    }
+
+    /// A small array for fast unit tests.
+    pub fn tiny(rows: usize, cols: usize) -> ArchParams {
+        ArchParams { rows, cols, ..ArchParams::default() }
+    }
+
+    /// Total grid height including the IO row.
+    pub fn grid_rows(&self) -> usize {
+        self.rows + 1
+    }
+
+    /// Tile kind at a coordinate. Row 0 is the IO row.
+    pub fn tile_kind(&self, c: TileCoord) -> TileKind {
+        if c.y == 0 {
+            TileKind::Io
+        } else if (c.x as usize + 1) % self.mem_col_period == 0 {
+            TileKind::Mem
+        } else {
+            TileKind::Pe
+        }
+    }
+
+    /// Is this a valid coordinate on the grid?
+    pub fn in_bounds(&self, x: i32, y: i32) -> bool {
+        x >= 0 && (x as usize) < self.cols && y >= 0 && (y as usize) < self.grid_rows()
+    }
+
+    /// Number of core tiles of each kind: (PE count, MEM count).
+    pub fn core_tile_counts(&self) -> (usize, usize) {
+        let mem_cols = (0..self.cols).filter(|x| (x + 1) % self.mem_col_period == 0).count();
+        let mem = mem_cols * self.rows;
+        (self.cols * self.rows - mem, mem)
+    }
+
+    /// Iterate all tile coordinates (including the IO row).
+    pub fn all_tiles(&self) -> impl Iterator<Item = TileCoord> + '_ {
+        let cols = self.cols;
+        (0..self.grid_rows()).flat_map(move |y| (0..cols).map(move |x| TileCoord::new(x, y)))
+    }
+
+    /// Iterate core (PE/MEM) tile coordinates.
+    pub fn core_tiles(&self) -> impl Iterator<Item = TileCoord> + '_ {
+        self.all_tiles().filter(|c| c.y != 0)
+    }
+
+    /// Linear tile index for dense arrays over the grid.
+    pub fn tile_index(&self, c: TileCoord) -> usize {
+        c.y as usize * self.cols + c.x as usize
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.grid_rows() * self.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_array_tile_counts() {
+        let p = ArchParams::paper();
+        let (pe, mem) = p.core_tile_counts();
+        assert_eq!(pe, 384);
+        assert_eq!(mem, 128);
+        assert_eq!(p.num_tiles(), 32 * 17);
+    }
+
+    #[test]
+    fn tile_kinds() {
+        let p = ArchParams::paper();
+        assert_eq!(p.tile_kind(TileCoord::new(0, 0)), TileKind::Io);
+        assert_eq!(p.tile_kind(TileCoord::new(0, 1)), TileKind::Pe);
+        // Columns 3, 7, 11, ... are MEM ((x+1) % 4 == 0).
+        assert_eq!(p.tile_kind(TileCoord::new(3, 1)), TileKind::Mem);
+        assert_eq!(p.tile_kind(TileCoord::new(7, 5)), TileKind::Mem);
+        assert_eq!(p.tile_kind(TileCoord::new(4, 5)), TileKind::Pe);
+    }
+
+    #[test]
+    fn manhattan_distance() {
+        let a = TileCoord::new(1, 2);
+        let b = TileCoord::new(4, 0);
+        assert_eq!(a.manhattan(b), 5);
+        assert_eq!(b.manhattan(a), 5);
+        assert_eq!(a.manhattan(a), 0);
+    }
+
+    #[test]
+    fn bounds() {
+        let p = ArchParams::tiny(4, 8);
+        assert!(p.in_bounds(0, 0));
+        assert!(p.in_bounds(7, 4));
+        assert!(!p.in_bounds(8, 0));
+        assert!(!p.in_bounds(0, 5));
+        assert!(!p.in_bounds(-1, 0));
+    }
+
+    #[test]
+    fn iterators_cover_grid() {
+        let p = ArchParams::tiny(2, 3);
+        assert_eq!(p.all_tiles().count(), 3 * 3); // 2 core rows + IO row
+        assert_eq!(p.core_tiles().count(), 2 * 3);
+        let idx: Vec<usize> = p.all_tiles().map(|c| p.tile_index(c)).collect();
+        let mut sorted = idx.clone();
+        sorted.sort();
+        assert_eq!(idx, sorted); // row-major enumeration
+    }
+}

@@ -1,0 +1,212 @@
+//! Builder utilities for constructing application DFGs (the halide-lite
+//! frontend used by `apps::dense`): shared delay-line stencil taps,
+//! balanced reduction trees, and weighted-sum (convolution) subgraphs.
+
+use super::ir::{AluOp, Dfg, NodeId, Op};
+
+/// A set of taps on a stream at increasing sample delays, built as a shared
+/// delay-line chain (the hardware-realistic structure: row delays become
+/// MEM line buffers, column delays become register-file shift registers).
+pub struct TapLine {
+    /// `taps[i]` produces the source delayed by `delays[i]` samples.
+    pub taps: Vec<NodeId>,
+    pub delays: Vec<u32>,
+}
+
+/// Build taps of `src` at each delay in `delays` (must be sorted,
+/// deduplicated). Consecutive taps share the delay chain.
+pub fn tap_line(g: &mut Dfg, src: NodeId, delays: &[u32], name: &str) -> TapLine {
+    assert!(delays.windows(2).all(|w| w[0] < w[1]), "delays must be strictly increasing");
+    let mut taps = Vec::with_capacity(delays.len());
+    let mut prev = src;
+    let mut prev_delay = 0u32;
+    for (i, &d) in delays.iter().enumerate() {
+        let step = d - prev_delay;
+        let tap = if step == 0 {
+            prev
+        } else {
+            let t = g.add_node(Op::Delay { cycles: step, pipelined: false }, format!("{name}_d{i}"));
+            g.connect(prev, t, 0);
+            t
+        };
+        taps.push(tap);
+        prev = tap;
+        prev_delay = d;
+    }
+    TapLine { taps, delays: delays.to_vec() }
+}
+
+/// Balanced binary reduction tree over `inputs` with `op`.
+pub fn reduce_tree(g: &mut Dfg, op: AluOp, inputs: &[NodeId], name: &str) -> NodeId {
+    assert!(!inputs.is_empty());
+    let mut layer: Vec<NodeId> = inputs.to_vec();
+    let mut level = 0;
+    while layer.len() > 1 {
+        let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+        for pair in layer.chunks(2) {
+            if pair.len() == 2 {
+                let n = g.add_node(
+                    Op::Alu { op, const_b: None },
+                    format!("{name}_l{level}_{}", next.len()),
+                );
+                g.connect(pair[0], n, 0);
+                g.connect(pair[1], n, 1);
+                next.push(n);
+            } else {
+                next.push(pair[0]);
+            }
+        }
+        layer = next;
+        level += 1;
+    }
+    layer[0]
+}
+
+/// Multiply each tap by an integer weight (folded constant) and sum with a
+/// balanced adder tree. Zero weights are skipped; weight 1 skips the
+/// multiplier.
+pub fn weighted_sum(g: &mut Dfg, taps: &[NodeId], weights: &[i64], name: &str) -> NodeId {
+    assert_eq!(taps.len(), weights.len());
+    let mut terms = Vec::new();
+    for (i, (&t, &w)) in taps.iter().zip(weights).enumerate() {
+        if w == 0 {
+            continue;
+        }
+        if w == 1 {
+            terms.push(t);
+        } else {
+            let m = g.add_node(
+                Op::Alu { op: AluOp::Mul, const_b: Some(w) },
+                format!("{name}_w{i}"),
+            );
+            g.connect(t, m, 0);
+            terms.push(m);
+        }
+    }
+    assert!(!terms.is_empty(), "all-zero stencil");
+    reduce_tree(g, AluOp::Add, &terms, name)
+}
+
+/// Build a `k x k` stencil over a row-major stream of row width `width`:
+/// returns a node computing `sum_{r,c} weights[r][c] * in(t - (r*width+c))`.
+pub fn stencil(
+    g: &mut Dfg,
+    src: NodeId,
+    width: u32,
+    weights: &[Vec<i64>],
+    name: &str,
+) -> NodeId {
+    let k = weights.len() as u32;
+    let mut delays = Vec::new();
+    for r in 0..k {
+        for c in 0..weights[r as usize].len() as u32 {
+            delays.push(r * width + c);
+        }
+    }
+    delays.sort();
+    delays.dedup();
+    let line = tap_line(g, src, &delays, name);
+    // Map (r, c) -> tap index.
+    let mut taps = Vec::new();
+    let mut flat_weights = Vec::new();
+    for (r, row) in weights.iter().enumerate() {
+        for (c, &w) in row.iter().enumerate() {
+            let d = r as u32 * width + c as u32;
+            let idx = line.delays.iter().position(|&x| x == d).unwrap();
+            taps.push(line.taps[idx]);
+            flat_weights.push(w);
+        }
+    }
+    weighted_sum(g, &taps, &flat_weights, name)
+}
+
+/// The algorithmic (window) delay of a k x k stencil on rows of `width`:
+/// the output at time t reflects the input window ending at t.
+pub fn stencil_window_delay(width: u32, k: u32) -> u32 {
+    (k - 1) * width + (k - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::ir::Op;
+
+    fn input(g: &mut Dfg) -> NodeId {
+        g.add_node(Op::Input { lane: 0 }, "in")
+    }
+
+    #[test]
+    fn tap_line_shares_chain() {
+        let mut g = Dfg::new();
+        let i = input(&mut g);
+        let line = tap_line(&mut g, i, &[0, 1, 2], "t");
+        assert_eq!(line.taps[0], i); // delay 0 is the source itself
+        // Two Delay nodes of 1 cycle each, chained.
+        let delays: Vec<u32> = g
+            .nodes
+            .iter()
+            .filter_map(|n| match n.op {
+                Op::Delay { cycles, .. } => Some(cycles),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(delays, vec![1, 1]);
+    }
+
+    #[test]
+    fn tap_line_large_gaps_become_line_buffers() {
+        let mut g = Dfg::new();
+        let i = input(&mut g);
+        let line = tap_line(&mut g, i, &[0, 64, 128], "row");
+        assert_eq!(line.taps.len(), 3);
+        use crate::arch::params::TileKind;
+        let mem_nodes = g.nodes.iter().filter(|n| n.tile_kind() == TileKind::Mem).count();
+        assert_eq!(mem_nodes, 2); // two 64-cycle line buffers
+    }
+
+    #[test]
+    fn reduce_tree_is_balanced() {
+        let mut g = Dfg::new();
+        let ins: Vec<NodeId> = (0..8).map(|_| input(&mut g)).collect();
+        let root = reduce_tree(&mut g, AluOp::Add, &ins, "r");
+        // 8 inputs -> 7 adders; depth 3 (checked via longest path).
+        let adders = g.nodes.len() - 8;
+        assert_eq!(adders, 7);
+        let mut depth = vec![0u32; g.nodes.len()];
+        for &n in &g.topo_order() {
+            for e in g.in_edges(n) {
+                let s = g.edge(e).src;
+                depth[n as usize] = depth[n as usize].max(depth[s as usize] + 1);
+            }
+        }
+        assert_eq!(depth[root as usize], 3);
+    }
+
+    #[test]
+    fn weighted_sum_skips_zero_and_one() {
+        let mut g = Dfg::new();
+        let ins: Vec<NodeId> = (0..3).map(|_| input(&mut g)).collect();
+        let _ = weighted_sum(&mut g, &ins, &[0, 1, 2], "w");
+        // One multiplier (weight 2), one adder (1-weight tap + product).
+        let muls = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Alu { op: AluOp::Mul, .. }))
+            .count();
+        assert_eq!(muls, 1);
+    }
+
+    #[test]
+    fn stencil_structure() {
+        let mut g = Dfg::new();
+        let i = input(&mut g);
+        let w = vec![vec![1, 2, 1], vec![2, 4, 2], vec![1, 2, 1]];
+        let root = stencil(&mut g, i, 16, &w, "g");
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+        // Window delay for 3x3 on width 16.
+        assert_eq!(stencil_window_delay(16, 3), 34);
+        // The root is reachable from the input.
+        let order = g.topo_order();
+        assert!(order.contains(&root));
+    }
+}

@@ -1,0 +1,668 @@
+//! DFG node/edge types and graph operations.
+
+use crate::arch::canal::Layer;
+use crate::arch::delay::OpClass;
+use crate::arch::params::TileKind;
+
+/// ALU operations supported by a PE. Encodes into the `PeOp` bitstream
+/// feature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Mul,
+    /// Multiply-accumulate with an internal accumulator register; `Accum`
+    /// semantics are expressed via [`Op::Accum`], this is the pure op.
+    Mac,
+    Min,
+    Max,
+    Abs,
+    Shl,
+    Shr,
+    And,
+    Or,
+    Xor,
+    Gte,
+    Lte,
+    Eq,
+    /// 2:1 select; selector arrives on the 1-bit layer.
+    Mux,
+    /// Route-through.
+    Pass,
+}
+
+impl AluOp {
+    /// Bitstream encoding.
+    pub fn encode(self) -> u32 {
+        match self {
+            AluOp::Add => 1,
+            AluOp::Sub => 2,
+            AluOp::Mul => 3,
+            AluOp::Mac => 4,
+            AluOp::Min => 5,
+            AluOp::Max => 6,
+            AluOp::Abs => 7,
+            AluOp::Shl => 8,
+            AluOp::Shr => 9,
+            AluOp::And => 10,
+            AluOp::Or => 11,
+            AluOp::Xor => 12,
+            AluOp::Gte => 13,
+            AluOp::Lte => 14,
+            AluOp::Eq => 15,
+            AluOp::Mux => 16,
+            AluOp::Pass => 17,
+        }
+    }
+
+    pub fn decode(v: u32) -> Option<AluOp> {
+        Some(match v {
+            1 => AluOp::Add,
+            2 => AluOp::Sub,
+            3 => AluOp::Mul,
+            4 => AluOp::Mac,
+            5 => AluOp::Min,
+            6 => AluOp::Max,
+            7 => AluOp::Abs,
+            8 => AluOp::Shl,
+            9 => AluOp::Shr,
+            10 => AluOp::And,
+            11 => AluOp::Or,
+            12 => AluOp::Xor,
+            13 => AluOp::Gte,
+            14 => AluOp::Lte,
+            15 => AluOp::Eq,
+            16 => AluOp::Mux,
+            17 => AluOp::Pass,
+            _ => return None,
+        })
+    }
+
+    /// Delay class for the timing model.
+    pub fn op_class(self) -> OpClass {
+        match self {
+            AluOp::Add | AluOp::Sub | AluOp::Min | AluOp::Max | AluOp::Abs => OpClass::Add,
+            AluOp::Mul => OpClass::Mul,
+            AluOp::Mac => OpClass::Mac,
+            AluOp::Shl | AluOp::Shr => OpClass::Shift,
+            AluOp::And | AluOp::Or | AluOp::Xor | AluOp::Mux => OpClass::Logic,
+            AluOp::Gte | AluOp::Lte | AluOp::Eq => OpClass::Cmp,
+            AluOp::Pass => OpClass::Pass,
+        }
+    }
+
+    /// Evaluate (functional reference semantics; 16-bit word machine
+    /// modeled in i64 without overflow for test-sized data).
+    pub fn eval(self, a: i64, b: i64, acc: i64) -> i64 {
+        match self {
+            AluOp::Add => a + b,
+            AluOp::Sub => a - b,
+            AluOp::Mul => a * b,
+            AluOp::Mac => acc + a * b,
+            AluOp::Min => a.min(b),
+            AluOp::Max => a.max(b),
+            AluOp::Abs => a.abs(),
+            AluOp::Shl => a << (b & 15),
+            AluOp::Shr => a >> (b & 15),
+            AluOp::And => a & b,
+            AluOp::Or => a | b,
+            AluOp::Xor => a ^ b,
+            AluOp::Gte => (a >= b) as i64,
+            AluOp::Lte => (a <= b) as i64,
+            AluOp::Eq => (a == b) as i64,
+            AluOp::Mux => {
+                if acc != 0 {
+                    b
+                } else {
+                    a
+                }
+            }
+            AluOp::Pass => a,
+        }
+    }
+}
+
+/// Sparse dataflow primitives (paper §VII; the substrate follows the
+/// tensor-algebra dataflow style of [18]). Every sparse edge carries a
+/// data/valid/ready triple routed together.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SparseOp {
+    /// Fiber coordinate scanner over a compressed level: emits the
+    /// coordinate stream of one tensor mode (MEM tile).
+    CrdScan { tensor: u8, mode: u8 },
+    /// Values-array reader indexed by the scanner's position stream (MEM).
+    ValRead { tensor: u8 },
+    /// Coordinate intersection of two sorted coordinate streams (PE).
+    Intersect,
+    /// Coordinate union (PE).
+    Union,
+    /// Elementwise ALU on matched value streams (PE).
+    SpAlu(AluOp),
+    /// Reduction over a fiber: accumulates values until the fiber-end token
+    /// and emits one result (PE with accumulator).
+    Reduce,
+    /// Repeat a value stream once per element of a reference stream (PE).
+    Repeat,
+}
+
+/// DFG node operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// 16-bit input stream from an IO tile (`lane` distinguishes parallel
+    /// input streams).
+    Input { lane: u16 },
+    /// 16-bit output stream into an IO tile. `decimate`: sample one of
+    /// every `decimate` cycles (used by time-multiplexed reductions).
+    Output { lane: u16, decimate: u32 },
+    /// Compile-time constant (folded into consumers by the mapper).
+    Const { value: i64 },
+    /// PE ALU op. `const_b`: optional immediate second operand (PeConst).
+    Alu { op: AluOp, const_b: Option<i64> },
+    /// Delay of `cycles` samples, realized as PE register-file shift
+    /// registers (short) or MEM line buffers (long). `pipelined = false`
+    /// for *algorithmic* delays (stencil row/column taps — part of the
+    /// application's function); `pipelined = true` for delay lines created
+    /// by the register-chain transform (§V-A), which count as
+    /// pipelining-added latency for branch delay matching.
+    Delay { cycles: u32, pipelined: bool },
+    /// MEM tile in ROM mode: `values[counter % len]` each cycle (weights).
+    Rom { values: Vec<i64> },
+    /// PE with an internal accumulator: emits the running sum of `a*b`
+    /// (or of `a` if one input); the accumulator resets every `period`
+    /// cycles. Registered output (latency 1).
+    Accum { period: u32 },
+    /// Flush broadcast source (1-bit, from an IO tile): synchronizes every
+    /// stateful tile at application start (paper §VI).
+    FlushSrc,
+    /// Sparse primitive.
+    Sparse(SparseOp),
+}
+
+/// Node id (index into `Dfg::nodes`).
+pub type NodeId = u32;
+/// Edge id (index into `Dfg::edges`).
+pub type EdgeId = u32;
+
+/// A DFG node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: Op,
+    /// Debug name.
+    pub name: String,
+    /// Whether the PE input registers are enabled (set by compute
+    /// pipelining; only meaningful for `Alu` nodes).
+    pub input_regs: bool,
+}
+
+impl Node {
+    /// Which kind of tile this node occupies.
+    pub fn tile_kind(&self) -> TileKind {
+        match &self.op {
+            Op::Input { .. } | Op::Output { .. } | Op::FlushSrc => TileKind::Io,
+            Op::Const { .. } => TileKind::Pe, // folded away by mapping; PE if materialized
+            Op::Alu { .. } | Op::Accum { .. } => TileKind::Pe,
+            Op::Rom { .. } => TileKind::Mem,
+            Op::Delay { cycles, .. } => {
+                if *cycles >= 8 {
+                    TileKind::Mem // line buffer
+                } else {
+                    TileKind::Pe // register-file shift register
+                }
+            }
+            Op::Sparse(s) => match s {
+                SparseOp::CrdScan { .. } | SparseOp::ValRead { .. } => TileKind::Mem,
+                _ => TileKind::Pe,
+            },
+        }
+    }
+
+    /// Cycle latency through the node (for branch delay matching / the
+    /// static schedule). Depends on pipelining state.
+    pub fn latency(&self) -> u32 {
+        match &self.op {
+            Op::Input { .. } | Op::Output { .. } | Op::Const { .. } | Op::FlushSrc => 0,
+            Op::Alu { .. } => u32::from(self.input_regs),
+            Op::Delay { cycles, .. } => *cycles,
+            Op::Rom { .. } => 1,    // synchronous SRAM read
+            Op::Accum { .. } => 1,  // registered accumulator
+            // Sparse nodes are elastic (ready/valid); latency is absorbed
+            // by the protocol, not balanced by BDM.
+            Op::Sparse(_) => 1,
+        }
+    }
+
+    /// Latency *added by pipelining*, relative to the unpipelined baseline
+    /// graph. Algorithmic latencies (Delay taps, ROM reads, accumulators)
+    /// are part of the application's function/schedule and contribute 0 —
+    /// branch delay matching must equalize only the added cycles, or it
+    /// would destroy stencil window offsets.
+    pub fn added_latency(&self) -> u32 {
+        match &self.op {
+            Op::Alu { .. } => u32::from(self.input_regs),
+            // Register-file shift registers created by the chain transform
+            // carry pipelining latency; stencil taps do not.
+            Op::Delay { cycles, pipelined: true } => *cycles,
+            _ => 0,
+        }
+    }
+
+    /// Combinational delay class of the node's core for STA. `None` means
+    /// the node's output is driven directly by a register (path restarts).
+    pub fn comb_class(&self) -> Option<OpClass> {
+        match &self.op {
+            Op::Alu { op, .. } => Some(op.op_class()),
+            Op::Const { .. } => Some(OpClass::Pass),
+            Op::Sparse(s) => Some(match s {
+                SparseOp::Intersect | SparseOp::Union => OpClass::Cmp,
+                SparseOp::SpAlu(a) => a.op_class(),
+                SparseOp::Reduce => OpClass::Add,
+                SparseOp::Repeat => OpClass::Logic,
+                SparseOp::CrdScan { .. } | SparseOp::ValRead { .. } => OpClass::Pass,
+            }),
+            // Registered outputs: ROM/Delay/Accum/IO start a fresh path.
+            _ => None,
+        }
+    }
+
+    /// Whether the node's output comes straight out of a register.
+    pub fn output_registered(&self) -> bool {
+        matches!(
+            &self.op,
+            Op::Delay { .. } | Op::Rom { .. } | Op::Accum { .. } | Op::Input { .. } | Op::FlushSrc
+        ) || matches!(&self.op, Op::Sparse(SparseOp::CrdScan { .. } | SparseOp::ValRead { .. }))
+    }
+
+    /// Is this a synchronous join where branch delay matching must equalize
+    /// input arrival cycles? (Everything statically scheduled with >1 input;
+    /// sparse nodes are elastic and excluded.)
+    pub fn needs_balanced_inputs(&self) -> bool {
+        !matches!(&self.op, Op::Sparse(_))
+    }
+
+    /// Is this a sparse (ready-valid) node?
+    pub fn is_sparse(&self) -> bool {
+        matches!(&self.op, Op::Sparse(_))
+    }
+}
+
+/// A DFG edge: `src` output port 0 -> `dst` input port `dst_port`.
+#[derive(Debug, Clone)]
+pub struct Edge {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub dst_port: u8,
+    /// Wiring layer (B16 data; B1 for flush/valid/select).
+    pub layer: Layer,
+    /// Pipeline registers currently assigned to this edge by the
+    /// pipelining passes (branch-delay-matching registers, broadcast-tree
+    /// registers, post-PnR registers...). Functional semantics: the value
+    /// is delayed `regs` cycles.
+    pub regs: u32,
+    /// FIFO stages on this edge (sparse pipelining inserts FIFOs instead
+    /// of registers, §VII). Latency-elastic: does not require BDM.
+    pub fifos: u32,
+}
+
+/// The dataflow graph.
+#[derive(Debug, Clone, Default)]
+pub struct Dfg {
+    pub nodes: Vec<Node>,
+    pub edges: Vec<Edge>,
+}
+
+impl Dfg {
+    pub fn new() -> Dfg {
+        Dfg::default()
+    }
+
+    pub fn add_node(&mut self, op: Op, name: impl Into<String>) -> NodeId {
+        self.nodes.push(Node { op, name: name.into(), input_regs: false });
+        (self.nodes.len() - 1) as NodeId
+    }
+
+    pub fn add_edge(&mut self, src: NodeId, dst: NodeId, dst_port: u8, layer: Layer) -> EdgeId {
+        self.edges.push(Edge { src, dst, dst_port, layer, regs: 0, fifos: 0 });
+        (self.edges.len() - 1) as EdgeId
+    }
+
+    /// Convenience: 16-bit data edge.
+    pub fn connect(&mut self, src: NodeId, dst: NodeId, dst_port: u8) -> EdgeId {
+        self.add_edge(src, dst, dst_port, Layer::B16)
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id as usize]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id as usize]
+    }
+
+    pub fn edge(&self, id: EdgeId) -> &Edge {
+        &self.edges[id as usize]
+    }
+
+    pub fn edge_mut(&mut self, id: EdgeId) -> &mut Edge {
+        &mut self.edges[id as usize]
+    }
+
+    /// Edge ids entering `n`, sorted by destination port.
+    pub fn in_edges(&self, n: NodeId) -> Vec<EdgeId> {
+        let mut v: Vec<EdgeId> = (0..self.edges.len() as EdgeId)
+            .filter(|&e| self.edges[e as usize].dst == n)
+            .collect();
+        v.sort_by_key(|&e| self.edges[e as usize].dst_port);
+        v
+    }
+
+    /// Edge ids leaving `n`.
+    pub fn out_edges(&self, n: NodeId) -> Vec<EdgeId> {
+        (0..self.edges.len() as EdgeId)
+            .filter(|&e| self.edges[e as usize].src == n)
+            .collect()
+    }
+
+    /// Fanout (number of out-edges) of each node.
+    pub fn fanout_counts(&self) -> Vec<u32> {
+        let mut f = vec![0u32; self.nodes.len()];
+        for e in &self.edges {
+            f[e.src as usize] += 1;
+        }
+        f
+    }
+
+    /// Topological order. Panics if the graph has a cycle (the IR is a DAG
+    /// by construction; feedback is internal to `Accum`).
+    pub fn topo_order(&self) -> Vec<NodeId> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0u32; n];
+        for e in &self.edges {
+            indeg[e.dst as usize] += 1;
+        }
+        let mut out_adj: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for e in &self.edges {
+            out_adj[e.src as usize].push(e.dst);
+        }
+        let mut stack: Vec<NodeId> =
+            (0..n as NodeId).filter(|&i| indeg[i as usize] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(u) = stack.pop() {
+            order.push(u);
+            for &v in &out_adj[u as usize] {
+                indeg[v as usize] -= 1;
+                if indeg[v as usize] == 0 {
+                    stack.push(v);
+                }
+            }
+        }
+        assert_eq!(order.len(), n, "DFG has a cycle");
+        order
+    }
+
+    /// Structural validation; returns a list of problems (empty = valid).
+    pub fn validate(&self) -> Vec<String> {
+        let mut problems = Vec::new();
+        let n = self.nodes.len() as NodeId;
+        for (i, e) in self.edges.iter().enumerate() {
+            if e.src >= n || e.dst >= n {
+                problems.push(format!("edge {i} references missing node"));
+            }
+        }
+        // Each (dst, dst_port, layer) must have at most one driver.
+        let mut seen = std::collections::HashSet::new();
+        for e in &self.edges {
+            if !seen.insert((e.dst, e.dst_port, e.layer)) {
+                problems.push(format!(
+                    "node {} port {} ({:?}) has multiple drivers",
+                    e.dst, e.dst_port, e.layer
+                ));
+            }
+        }
+        // Port-count legality per tile kind (2 data in-ports by default).
+        for (i, node) in self.nodes.iter().enumerate() {
+            let data_ins = self
+                .edges
+                .iter()
+                .filter(|e| e.dst == i as NodeId && e.layer == Layer::B16)
+                .count();
+            let max = match node.tile_kind() {
+                TileKind::Pe => 2,
+                TileKind::Mem => 2,
+                TileKind::Io => 1,
+            };
+            if data_ins > max {
+                problems.push(format!(
+                    "node {i} ({}) has {data_ins} data inputs; max {max}",
+                    node.name
+                ));
+            }
+            // Outputs must be consumed (except sinks).
+            let has_out = self.edges.iter().any(|e| e.src == i as NodeId);
+            let is_sink = matches!(node.op, Op::Output { .. });
+            if is_sink && has_out {
+                problems.push(format!("output node {i} has fanout"));
+            }
+        }
+        // Inputs of each node must be fully connected for ops that need
+        // both operands.
+        for (i, node) in self.nodes.iter().enumerate() {
+            if let Op::Alu { op, const_b } = &node.op {
+                let needs_b = const_b.is_none()
+                    && !matches!(op, AluOp::Abs | AluOp::Pass);
+                let ports: Vec<u8> = self
+                    .edges
+                    .iter()
+                    .filter(|e| e.dst == i as NodeId && e.layer == Layer::B16)
+                    .map(|e| e.dst_port)
+                    .collect();
+                if !ports.contains(&0) {
+                    problems.push(format!("ALU node {i} ({}) missing operand a", node.name));
+                }
+                if needs_b && !ports.contains(&1) {
+                    problems.push(format!("ALU node {i} ({}) missing operand b", node.name));
+                }
+            }
+        }
+        problems
+    }
+
+    /// Cycle arrival time of each node's output: the branch-delay-matching
+    /// quantity (paper §III-B). `arrival(n) = latency(n) + max over in-edges
+    /// (arrival(src) + edge.regs)`. Sparse (elastic) edges still contribute
+    /// their FIFO latency for reporting purposes, but BDM never needs to
+    /// equalize them.
+    pub fn arrival_cycles(&self) -> Vec<u64> {
+        let mut in_lists: Vec<Vec<usize>> = vec![Vec::new(); self.nodes.len()];
+        for (ei, e) in self.edges.iter().enumerate() {
+            in_lists[e.dst as usize].push(ei);
+        }
+        let mut arr = vec![0u64; self.nodes.len()];
+        for &n in &self.topo_order() {
+            let mut best = 0u64;
+            for &ei in &in_lists[n as usize] {
+                let e = &self.edges[ei];
+                // Flush is a reset distributed before execution; it never
+                // contributes to data arrival times.
+                if matches!(self.nodes[e.src as usize].op, Op::FlushSrc) {
+                    continue;
+                }
+                let a = arr[e.src as usize] + e.regs as u64 + e.fifos as u64;
+                best = best.max(a);
+            }
+            arr[n as usize] = best + self.nodes[n as usize].latency() as u64;
+        }
+        arr
+    }
+
+    /// Total pipeline registers currently assigned to edges.
+    pub fn total_edge_regs(&self) -> u64 {
+        self.edges.iter().map(|e| e.regs as u64).sum()
+    }
+
+    /// Count nodes by tile kind: (PE, MEM, IO).
+    pub fn tile_demand(&self) -> (usize, usize, usize) {
+        let mut pe = 0;
+        let mut mem = 0;
+        let mut io = 0;
+        for n in &self.nodes {
+            match n.tile_kind() {
+                TileKind::Pe => pe += 1,
+                TileKind::Mem => mem += 1,
+                TileKind::Io => io += 1,
+            }
+        }
+        (pe, mem, io)
+    }
+
+    /// Graphviz dump for debugging.
+    pub fn to_dot(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::from("digraph dfg {\n  rankdir=LR;\n");
+        for (i, n) in self.nodes.iter().enumerate() {
+            let _ = writeln!(s, "  n{} [label=\"{}\\n{:?}\"];", i, n.name, n.tile_kind());
+        }
+        for e in &self.edges {
+            let style = if e.layer == Layer::B1 { " style=dashed" } else { "" };
+            let _ = writeln!(
+                s,
+                "  n{} -> n{} [label=\"r{}{}\"{}];",
+                e.src,
+                e.dst,
+                e.regs,
+                if e.fifos > 0 { format!(" f{}", e.fifos) } else { String::new() },
+                style
+            );
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_dfg() -> Dfg {
+        // in -> mul(*2) -> add -> out ; in -> add (port 1)
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let m = g.add_node(Op::Alu { op: AluOp::Mul, const_b: Some(2) }, "mul");
+        let a = g.add_node(Op::Alu { op: AluOp::Add, const_b: None }, "add");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "out");
+        g.connect(i, m, 0);
+        g.connect(m, a, 0);
+        g.connect(i, a, 1);
+        g.connect(a, o, 0);
+        g
+    }
+
+    #[test]
+    fn validates_clean_graph() {
+        let g = small_dfg();
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let g = small_dfg();
+        let order = g.topo_order();
+        let pos: Vec<usize> =
+            (0..g.nodes.len() as NodeId).map(|n| order.iter().position(|&x| x == n).unwrap()).collect();
+        for e in &g.edges {
+            assert!(pos[e.src as usize] < pos[e.dst as usize]);
+        }
+    }
+
+    #[test]
+    fn detects_double_driver() {
+        let mut g = small_dfg();
+        let i = 0;
+        g.connect(i, 2, 1); // add port 1 already driven
+        assert!(!g.validate().is_empty());
+    }
+
+    #[test]
+    fn detects_missing_operand() {
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let a = g.add_node(Op::Alu { op: AluOp::Add, const_b: None }, "add");
+        g.connect(i, a, 0); // port 1 missing
+        assert_eq!(g.validate().len(), 1);
+    }
+
+    #[test]
+    fn latency_depends_on_input_regs() {
+        let mut g = small_dfg();
+        assert_eq!(g.node(1).latency(), 0);
+        g.node_mut(1).input_regs = true;
+        assert_eq!(g.node(1).latency(), 1);
+    }
+
+    #[test]
+    fn tile_kinds_and_demand() {
+        let g = small_dfg();
+        let (pe, mem, io) = g.tile_demand();
+        assert_eq!((pe, mem, io), (2, 0, 2));
+        let mut g2 = Dfg::new();
+        g2.add_node(Op::Delay { cycles: 100, pipelined: false }, "lb");
+        g2.add_node(Op::Delay { cycles: 2, pipelined: false }, "sr");
+        assert_eq!(g2.node(0).tile_kind(), TileKind::Mem);
+        assert_eq!(g2.node(1).tile_kind(), TileKind::Pe);
+    }
+
+    #[test]
+    fn alu_eval_semantics() {
+        assert_eq!(AluOp::Add.eval(3, 4, 0), 7);
+        assert_eq!(AluOp::Sub.eval(3, 4, 0), -1);
+        assert_eq!(AluOp::Mac.eval(3, 4, 10), 22);
+        assert_eq!(AluOp::Mux.eval(5, 9, 0), 5);
+        assert_eq!(AluOp::Mux.eval(5, 9, 1), 9);
+        assert_eq!(AluOp::Gte.eval(4, 4, 0), 1);
+    }
+
+    #[test]
+    fn aluop_encode_roundtrip() {
+        for op in [
+            AluOp::Add, AluOp::Sub, AluOp::Mul, AluOp::Mac, AluOp::Min, AluOp::Max,
+            AluOp::Abs, AluOp::Shl, AluOp::Shr, AluOp::And, AluOp::Or, AluOp::Xor,
+            AluOp::Gte, AluOp::Lte, AluOp::Eq, AluOp::Mux, AluOp::Pass,
+        ] {
+            assert_eq!(AluOp::decode(op.encode()), Some(op));
+        }
+        assert_eq!(AluOp::decode(0), None);
+        assert_eq!(AluOp::decode(99), None);
+    }
+
+    #[test]
+    fn registered_outputs() {
+        let g = {
+            let mut g = Dfg::new();
+            g.add_node(Op::Rom { values: vec![1, 2] }, "rom");
+            g.add_node(Op::Alu { op: AluOp::Add, const_b: Some(1) }, "a");
+            g
+        };
+        assert!(g.node(0).output_registered());
+        assert!(!g.node(1).output_registered());
+        assert_eq!(g.node(0).comb_class(), None);
+        assert!(g.node(1).comb_class().is_some());
+    }
+
+    #[test]
+    fn dot_output_contains_nodes() {
+        let g = small_dfg();
+        let dot = g.to_dot();
+        assert!(dot.contains("digraph"));
+        assert!(dot.contains("n0 -> n1"));
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn topo_panics_on_cycle() {
+        let mut g = Dfg::new();
+        let a = g.add_node(Op::Alu { op: AluOp::Pass, const_b: None }, "a");
+        let b = g.add_node(Op::Alu { op: AluOp::Pass, const_b: None }, "b");
+        g.connect(a, b, 0);
+        g.connect(b, a, 0);
+        g.topo_order();
+    }
+}

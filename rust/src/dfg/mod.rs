@@ -1,0 +1,23 @@
+//! Application dataflow-graph IR.
+//!
+//! Every stage of the compiler (Fig. 2 of the paper) operates on this
+//! representation: the frontend builds a DFG of primitive operations, the
+//! mapper legalizes it onto PE/MEM/IO tiles, place-and-route assigns tiles
+//! and interconnect routes, and the pipelining passes insert registers /
+//! FIFOs on its edges. The IR carries everything branch delay matching and
+//! STA need: per-node cycle latencies, per-edge pipeline-register counts,
+//! and per-node combinational delay classes.
+//!
+//! * [`ir`] — node/edge types and the graph itself.
+//! * [`build`] — builder utilities (stencil taps, reduction trees) used by
+//!   the benchmark applications.
+//! * [`interp`] — a cycle-accurate functional interpreter: the in-crate
+//!   golden reference the fabric simulator is checked against (the
+//!   cross-language golden reference is the AOT-compiled JAX/Pallas model
+//!   executed through PJRT, see `runtime`).
+
+pub mod ir;
+pub mod build;
+pub mod interp;
+
+pub use ir::{AluOp, Dfg, Edge, EdgeId, Node, NodeId, Op, SparseOp};

@@ -1,0 +1,167 @@
+//! Dense-application experiments: Fig. 7 (incremental techniques),
+//! Table I (freq/runtime/power), Fig. 8 (EDP), Fig. 9 (flush hardening).
+
+use crate::pipeline::{CompileCtx, PipelineConfig};
+use crate::util::json::Json;
+
+use super::common::{compile_dense, emit, md_table, DenseRow};
+
+const APPS: [&str; 5] = ["gaussian", "unsharp", "camera", "harris", "resnet"];
+
+/// Fig. 7: runtime after each incremental software pipelining technique,
+/// derived from the STA model (as in the paper).
+pub fn fig7(ctx: &CompileCtx, fast: bool, seed: u64) -> Result<(), String> {
+    // §VIII-B: "In these experiments, we have applied the hardware
+    // technique described in Section VI" — the flush network is hardened
+    // at every ladder step (Fig. 9 isolates its effect separately).
+    let ladder: Vec<(&str, PipelineConfig)> = PipelineConfig::ladder()
+        .into_iter()
+        .map(|(n, c)| (n, PipelineConfig { hardened_flush: true, ..c }))
+        .collect();
+    let mut rows = Vec::new();
+    let mut j_apps = Json::Arr(vec![]);
+    for app in APPS {
+        let mut cells = vec![app.to_string()];
+        let mut base_runtime = None;
+        let mut j_steps = Json::Arr(vec![]);
+        for (cname, cfg) in &ladder {
+            let c = compile_dense(app, cfg, ctx, fast, seed)?;
+            let row = DenseRow::from_compiled(app, cname, &c);
+            let base = *base_runtime.get_or_insert(row.runtime_ms);
+            cells.push(format!("{:.3} ({:.2}x)", row.runtime_ms, base / row.runtime_ms));
+            let mut js = row.to_json();
+            js.set("speedup_vs_unpipelined", base / row.runtime_ms);
+            j_steps.push(js);
+        }
+        rows.push(cells);
+        let mut ja = Json::obj();
+        ja.set("app", app).set("steps", j_steps);
+        j_apps.push(ja);
+    }
+    let headers: Vec<&str> = std::iter::once("app (runtime ms, speedup)")
+        .chain(ladder.iter().map(|(n, _)| *n))
+        .collect();
+    let md = md_table(&headers, &rows);
+    let mut j = Json::obj();
+    j.set("apps", j_apps);
+    emit("fig7", "Fig. 7 — incremental software pipelining (dense)", &md, &j);
+    Ok(())
+}
+
+/// Table I: unpipelined vs fully pipelined frequency, runtime, power.
+pub fn table1(ctx: &CompileCtx, fast: bool, seed: u64) -> Result<(), String> {
+    let mut rows = Vec::new();
+    let mut j_rows = Json::Arr(vec![]);
+    let mut pairs = Vec::new();
+    for app in APPS {
+        let un = compile_dense(app, &PipelineConfig::none(), ctx, fast, seed)?;
+        let pi = compile_dense(app, &PipelineConfig::full(), ctx, fast, seed)?;
+        let run = DenseRow::from_compiled(app, "unpipelined", &un);
+        let rpi = DenseRow::from_compiled(app, "pipelined", &pi);
+        for r in [&run, &rpi] {
+            rows.push(vec![
+                r.config.clone(),
+                r.app.clone(),
+                format!("{:.0}", r.fmax_mhz),
+                format!("{:.3}", r.runtime_ms),
+                format!("{:.0}", r.power.total_mw()),
+            ]);
+            j_rows.push(r.to_json());
+        }
+        pairs.push((run, rpi));
+    }
+    let mut md = md_table(
+        &["", "application", "Frequency (MHz)", "Runtime (ms/frame)", "Power (mW)"],
+        &rows,
+    );
+    // Shape checks the paper reports in §VIII-B.
+    let mut notes = String::new();
+    for (un, pi) in &pairs {
+        let rt_red = 100.0 * (1.0 - pi.runtime_ms / un.runtime_ms);
+        let cp_ratio = un.crit_ns / pi.crit_ns;
+        notes.push_str(&format!(
+            "- {}: critical path {:.1}x lower, runtime -{:.0}%\n",
+            un.app, cp_ratio, rt_red
+        ));
+    }
+    md.push_str("\n");
+    md.push_str(&notes);
+    md.push_str("(paper: 84-97% runtime decrease; 7-34x lower critical path)\n");
+    let mut j = Json::obj();
+    j.set("rows", j_rows);
+    emit("table1", "Table I — dense frequency / runtime / power", &md, &j);
+    Ok(())
+}
+
+/// Fig. 8: EDP of unpipelined vs fully software-pipelined dense apps.
+pub fn fig8(ctx: &CompileCtx, fast: bool, seed: u64) -> Result<(), String> {
+    let mut rows = Vec::new();
+    let mut j_rows = Json::Arr(vec![]);
+    let mut reductions = Vec::new();
+    for app in APPS {
+        let un = compile_dense(app, &PipelineConfig::none(), ctx, fast, seed)?;
+        let pi = compile_dense(app, &PipelineConfig::full(), ctx, fast, seed)?;
+        let e0 = DenseRow::from_compiled(app, "unpipelined", &un).edp();
+        let e1 = DenseRow::from_compiled(app, "pipelined", &pi).edp();
+        let red = 100.0 * (1.0 - e1 / e0);
+        reductions.push(1.0 - e1 / e0);
+        rows.push(vec![
+            app.to_string(),
+            format!("{:.3}", e0),
+            format!("{:.4}", e1),
+            format!("{:.1}%", red),
+            format!("{:.1}x", e0 / e1),
+        ]);
+        let mut jr = Json::obj();
+        jr.set("app", app)
+            .set("edp_unpipelined", e0)
+            .set("edp_pipelined", e1)
+            .set("reduction", 1.0 - e1 / e0);
+        j_rows.push(jr);
+    }
+    let avg = crate::util::stats::mean(&reductions) * 100.0;
+    let mut md = md_table(
+        &["app", "EDP unpipelined (mJ*ms)", "EDP pipelined", "reduction", "ratio"],
+        &rows,
+    );
+    md.push_str(&format!("\nAverage EDP reduction: {avg:.1}% (paper: 95% average, 7-190x).\n"));
+    let mut j = Json::obj();
+    j.set("rows", j_rows).set("avg_reduction_pct", avg);
+    emit("fig8", "Fig. 8 — dense EDP, unpipelined vs pipelined", &md, &j);
+    Ok(())
+}
+
+/// Fig. 9: impact of hardening the flush broadcast (all software
+/// pipelining applied in both arms, §VIII-C).
+pub fn fig9(ctx: &CompileCtx, fast: bool, seed: u64) -> Result<(), String> {
+    let mut rows = Vec::new();
+    let mut j_rows = Json::Arr(vec![]);
+    for app in APPS {
+        let routed = compile_dense(app, &PipelineConfig::all_software(), ctx, fast, seed)?;
+        let hardened = compile_dense(app, &PipelineConfig::full(), ctx, fast, seed)?;
+        let r0 = DenseRow::from_compiled(app, "routed flush", &routed);
+        let r1 = DenseRow::from_compiled(app, "hardened flush", &hardened);
+        let red = 100.0 * (1.0 - r1.runtime_ms / r0.runtime_ms);
+        rows.push(vec![
+            app.to_string(),
+            format!("{:.3}", r0.runtime_ms),
+            format!("{:.3}", r1.runtime_ms),
+            format!("{:.1}%", red),
+        ]);
+        let mut jr = Json::obj();
+        jr.set("app", app)
+            .set("runtime_routed_ms", r0.runtime_ms)
+            .set("runtime_hardened_ms", r1.runtime_ms)
+            .set("reduction_pct", red);
+        j_rows.push(jr);
+    }
+    let mut md = md_table(
+        &["app", "runtime, routed flush (ms)", "runtime, hardened flush (ms)", "reduction"],
+        &rows,
+    );
+    md.push_str("\n(paper: hardening reduces runtime by 31-56%)\n");
+    let mut j = Json::obj();
+    j.set("rows", j_rows);
+    emit("fig9", "Fig. 9 — flush broadcast hardening (hardware technique)", &md, &j);
+    Ok(())
+}

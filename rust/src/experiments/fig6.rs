@@ -1,0 +1,82 @@
+//! Fig. 6: validation of the application STA model against the
+//! SDF-annotated gate-level-simulation surrogate.
+//!
+//! Each point is one application at one pipelining level: x = STA-modeled
+//! minimum clock period, y = "simulated" fastest working period (0.1 ns
+//! search granularity). The STA model must be a pessimistic bound, with
+//! small average error at high frequencies (paper: 13 % above 500 MHz).
+
+use crate::pipeline::{CompileCtx, PipelineConfig};
+use crate::timing::gatelevel::{gate_level_period_ps, GateLevelParams};
+use crate::util::json::Json;
+use crate::util::stats;
+
+use super::common::{compile_dense, emit, md_table};
+
+pub fn run(ctx: &CompileCtx, fast: bool, seed: u64) -> Result<(), String> {
+    let configs: Vec<(&str, PipelineConfig)> = vec![
+        ("unpipelined", PipelineConfig::none()),
+        ("compute", PipelineConfig::compute_only()),
+        ("all-sw", PipelineConfig::with_postpnr()),
+    ];
+    let apps = ["gaussian", "unsharp", "camera", "harris", "resnet"];
+
+    let mut rows = Vec::new();
+    let mut points = Json::Arr(vec![]);
+    let mut errs_all = Vec::new();
+    let mut errs_fast = Vec::new();
+    for (ci, (cname, cfg)) in configs.iter().enumerate() {
+        for app in apps {
+            let c = compile_dense(app, cfg, ctx, fast, seed)?;
+            let sta_ps = c.sta.period_ps;
+            let gl_ps = gate_level_period_ps(
+                &c.design,
+                &ctx.graph,
+                &GateLevelParams { seed: seed + ci as u64, ..Default::default() },
+            );
+            let err = (sta_ps - gl_ps) / gl_ps;
+            errs_all.push(err);
+            if 1e6 / gl_ps > 500.0 {
+                errs_fast.push(err);
+            }
+            rows.push(vec![
+                app.to_string(),
+                cname.to_string(),
+                format!("{:.2}", sta_ps / 1000.0),
+                format!("{:.2}", gl_ps / 1000.0),
+                format!("{:.1}%", err * 100.0),
+            ]);
+            let mut p = Json::obj();
+            p.set("app", app)
+                .set("config", *cname)
+                .set("sta_period_ns", sta_ps / 1000.0)
+                .set("sim_period_ns", gl_ps / 1000.0)
+                .set("error", err);
+            points.push(p);
+        }
+    }
+    let mean_all = stats::mean(&errs_all);
+    let mean_fast = if errs_fast.is_empty() { mean_all } else { stats::mean(&errs_fast) };
+
+    let mut md = md_table(
+        &["app", "pipelining", "STA period (ns)", "sim period (ns)", "STA error"],
+        &rows,
+    );
+    md.push_str(&format!(
+        "\nSTA is pessimistic for every point (sim <= STA). Mean error: {:.1}% overall, {:.1}% above 500 MHz (paper: 13%).\n",
+        mean_all * 100.0,
+        mean_fast * 100.0
+    ));
+
+    let mut j = Json::obj();
+    j.set("points", points)
+        .set("mean_error", mean_all)
+        .set("mean_error_above_500mhz", mean_fast);
+    emit("fig6", "Fig. 6 — STA model vs gate-level simulation", &md, &j);
+
+    // Invariant of the figure: pessimism.
+    if errs_all.iter().any(|&e| e < -1e-9) {
+        return Err("STA was optimistic for some point".into());
+    }
+    Ok(())
+}

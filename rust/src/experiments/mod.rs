@@ -1,0 +1,50 @@
+//! Regenerators for every table and figure in the paper's evaluation
+//! (§VIII). Each writes a markdown table to stdout and machine-readable
+//! JSON + markdown into `results/`.
+//!
+//! | id      | paper artefact | module fn            |
+//! |---------|----------------|----------------------|
+//! | fig6    | STA vs gate-level sim scatter | [`fig6::run`] |
+//! | fig7    | incremental dense techniques  | [`dense_exp::fig7`] |
+//! | table1  | dense freq/runtime/power      | [`dense_exp::table1`] |
+//! | fig8    | dense EDP                     | [`dense_exp::fig8`] |
+//! | fig9    | flush hardening               | [`dense_exp::fig9`] |
+//! | fig10   | incremental sparse techniques | [`sparse_exp::fig10`] |
+//! | table2  | sparse freq/runtime/power     | [`sparse_exp::table2`] |
+//! | fig11   | sparse EDP                    | [`sparse_exp::fig11`] |
+//! | summary | headline ratios (abstract)    | [`summary::run`] |
+
+pub mod common;
+pub mod fig6;
+pub mod dense_exp;
+pub mod sparse_exp;
+pub mod summary;
+
+use crate::pipeline::CompileCtx;
+
+/// Run an experiment by id. `fast` shrinks annealing effort and iteration
+/// caps (CI mode); results keep their shape but are noisier.
+pub fn run(id: &str, ctx: &CompileCtx, fast: bool, seed: u64) -> Result<(), String> {
+    match id {
+        "fig6" => fig6::run(ctx, fast, seed),
+        "fig7" => dense_exp::fig7(ctx, fast, seed),
+        "table1" => dense_exp::table1(ctx, fast, seed),
+        "fig8" => dense_exp::fig8(ctx, fast, seed),
+        "fig9" => dense_exp::fig9(ctx, fast, seed),
+        "fig10" => sparse_exp::fig10(ctx, fast, seed),
+        "table2" => sparse_exp::table2(ctx, fast, seed),
+        "fig11" => sparse_exp::fig11(ctx, fast, seed),
+        "summary" => summary::run(ctx, fast, seed),
+        "all" => {
+            for id in ALL_IDS {
+                run(id, ctx, fast, seed)?;
+            }
+            Ok(())
+        }
+        other => Err(format!("unknown experiment '{other}'")),
+    }
+}
+
+/// Every experiment id, in paper order.
+pub const ALL_IDS: [&str; 9] =
+    ["fig6", "fig7", "table1", "fig8", "fig9", "fig10", "table2", "fig11", "summary"];

@@ -1,0 +1,138 @@
+//! Sparse-application experiments: Fig. 10 (incremental techniques),
+//! Table II (freq/runtime/power), Fig. 11 (EDP).
+//!
+//! Sparse apps use FIFOs at every compute-unit input, so compute
+//! pipelining is on by default and cannot be turned off; broadcast
+//! pipelining and duplication had no effect in the paper, so the sweep is
+//! placement optimization then post-PnR pipelining (§VIII-D).
+
+use crate::pipeline::{CompileCtx, PipelineConfig};
+use crate::util::json::Json;
+
+use super::common::{emit, md_table, measure_sparse, SparseRow};
+
+fn sparse_apps() -> Vec<crate::apps::App> {
+    crate::apps::paper_sparse_suite()
+}
+
+fn measure_ladder(
+    ctx: &CompileCtx,
+    fast: bool,
+    seed: u64,
+) -> Result<Vec<(String, Vec<SparseRow>)>, String> {
+    let ladder = PipelineConfig::sparse_ladder();
+    let mut out = Vec::new();
+    for app in sparse_apps() {
+        let mut rows = Vec::new();
+        for (cname, cfg) in &ladder {
+            let mut r = measure_sparse(&app, cfg, ctx, fast, seed)?;
+            r.config = cname.to_string();
+            rows.push(r);
+        }
+        out.push((app.name.to_string(), rows));
+    }
+    Ok(out)
+}
+
+/// Fig. 10: incremental application of the sparse pipelining techniques.
+pub fn fig10(ctx: &CompileCtx, fast: bool, seed: u64) -> Result<(), String> {
+    let data = measure_ladder(ctx, fast, seed)?;
+    let mut rows = Vec::new();
+    let mut j_apps = Json::Arr(vec![]);
+    for (app, steps) in &data {
+        let base = steps[0].runtime_us;
+        let mut cells = vec![app.clone()];
+        let mut j_steps = Json::Arr(vec![]);
+        for s in steps {
+            cells.push(format!("{:.2}us ({:.2}x)", s.runtime_us, base / s.runtime_us));
+            j_steps.push(s.to_json());
+        }
+        rows.push(cells);
+        let mut ja = Json::obj();
+        ja.set("app", app.as_str()).set("steps", j_steps);
+        j_apps.push(ja);
+    }
+    let ladder = PipelineConfig::sparse_ladder();
+    let headers: Vec<&str> =
+        std::iter::once("app").chain(ladder.iter().map(|(n, _)| *n)).collect();
+    let mut md = md_table(&headers, &rows);
+    md.push_str("\n(paper Fig. 10: runtime decreases significantly when placement optimization is applied)\n");
+    let mut j = Json::obj();
+    j.set("apps", j_apps);
+    emit("fig10", "Fig. 10 — incremental sparse pipelining", &md, &j);
+    Ok(())
+}
+
+/// Table II: compute-pipelined vs fully pipelined sparse apps.
+pub fn table2(ctx: &CompileCtx, fast: bool, seed: u64) -> Result<(), String> {
+    let data = measure_ladder(ctx, fast, seed)?;
+    let mut rows = Vec::new();
+    let mut j_rows = Json::Arr(vec![]);
+    let mut notes = String::new();
+    for (app, steps) in &data {
+        let first = &steps[0];
+        let last = steps.last().unwrap();
+        for (label, r) in [("compute pipelining", first), ("all software pipelining", last)] {
+            rows.push(vec![
+                label.to_string(),
+                app.clone(),
+                format!("{:.0}", r.fmax_mhz),
+                format!("{:.2}", r.runtime_us),
+                format!("{:.0}", r.power.total_mw()),
+            ]);
+            let mut jr = r.to_json();
+            jr.set("label", label);
+            j_rows.push(jr);
+        }
+        notes.push_str(&format!(
+            "- {}: critical path {:.2}x lower, runtime -{:.0}%\n",
+            app,
+            first.crit_ns / last.crit_ns,
+            100.0 * (1.0 - last.runtime_us / first.runtime_us)
+        ));
+    }
+    let mut md = md_table(
+        &["", "application", "Frequency (MHz)", "Runtime (us)", "Power (mW)"],
+        &rows,
+    );
+    md.push('\n');
+    md.push_str(&notes);
+    md.push_str("(paper: 2-4.4x lower critical paths; 29-65% runtime decrease)\n");
+    let mut j = Json::obj();
+    j.set("rows", j_rows);
+    emit("table2", "Table II — sparse frequency / runtime / power", &md, &j);
+    Ok(())
+}
+
+/// Fig. 11: sparse EDP, compute-only vs all pipelining.
+pub fn fig11(ctx: &CompileCtx, fast: bool, seed: u64) -> Result<(), String> {
+    let data = measure_ladder(ctx, fast, seed)?;
+    let mut rows = Vec::new();
+    let mut j_rows = Json::Arr(vec![]);
+    for (app, steps) in &data {
+        let e0 = steps[0].edp();
+        let e1 = steps.last().unwrap().edp();
+        rows.push(vec![
+            app.clone(),
+            format!("{:.2}", e0),
+            format!("{:.2}", e1),
+            format!("{:.1}%", 100.0 * (1.0 - e1 / e0)),
+            format!("{:.2}x", e0 / e1),
+        ]);
+        let mut jr = Json::obj();
+        jr.set("app", app.as_str())
+            .set("edp_compute_only", e0)
+            .set("edp_all", e1)
+            .set("ratio", e0 / e1);
+        j_rows.push(jr);
+    }
+    let mut md = md_table(
+        &["app", "EDP compute-only", "EDP all pipelining", "reduction", "ratio"],
+        &rows,
+    );
+    md.push_str("\n(paper: EDP reduces 35-76%, i.e. 1.5-4.2x)\n");
+    let mut j = Json::obj();
+    j.set("rows", j_rows);
+    emit("fig11", "Fig. 11 — sparse EDP comparison", &md, &j);
+    Ok(())
+}

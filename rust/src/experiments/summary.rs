@@ -1,0 +1,77 @@
+//! Headline summary: the abstract's claims, regenerated.
+//!
+//! "Cascade enables 7-34x lower critical path delays and 7-190x lower EDP
+//! across ... dense ... workloads, and 2-4.4x lower critical path delays
+//! and 1.5-4.2x lower EDP on sparse workloads, compared to a compiler
+//! without pipelining."
+
+use crate::pipeline::{CompileCtx, PipelineConfig};
+use crate::util::json::Json;
+
+use super::common::{compile_dense, emit, md_table, measure_sparse, DenseRow};
+
+pub fn run(ctx: &CompileCtx, fast: bool, seed: u64) -> Result<(), String> {
+    let mut rows = Vec::new();
+    let mut j_rows = Json::Arr(vec![]);
+    let mut dense_cp = Vec::new();
+    let mut dense_edp = Vec::new();
+    for app in ["gaussian", "unsharp", "camera", "harris", "resnet"] {
+        let un = compile_dense(app, &PipelineConfig::none(), ctx, fast, seed)?;
+        let pi = compile_dense(app, &PipelineConfig::full(), ctx, fast, seed)?;
+        let r0 = DenseRow::from_compiled(app, "un", &un);
+        let r1 = DenseRow::from_compiled(app, "pi", &pi);
+        let cp = r0.crit_ns / r1.crit_ns;
+        let edp = r0.edp() / r1.edp();
+        dense_cp.push(cp);
+        dense_edp.push(edp);
+        rows.push(vec![
+            format!("dense/{app}"),
+            format!("{:.1}x", cp),
+            format!("{:.1}x", edp),
+        ]);
+        let mut jr = Json::obj();
+        jr.set("app", app).set("crit_ratio", cp).set("edp_ratio", edp);
+        j_rows.push(jr);
+    }
+    let mut sparse_cp = Vec::new();
+    let mut sparse_edp = Vec::new();
+    for app in crate::apps::paper_sparse_suite() {
+        let ladder = PipelineConfig::sparse_ladder();
+        let first = measure_sparse(&app, &ladder[0].1, ctx, fast, seed)?;
+        let last = measure_sparse(&app, &ladder.last().unwrap().1, ctx, fast, seed)?;
+        let cp = first.crit_ns / last.crit_ns;
+        let edp = first.edp() / last.edp();
+        sparse_cp.push(cp);
+        sparse_edp.push(edp);
+        rows.push(vec![
+            format!("sparse/{}", app.name),
+            format!("{:.2}x", cp),
+            format!("{:.2}x", edp),
+        ]);
+        let mut jr = Json::obj();
+        jr.set("app", app.name).set("crit_ratio", cp).set("edp_ratio", edp);
+        j_rows.push(jr);
+    }
+    let (dcp_lo, dcp_hi) = crate::util::stats::min_max(&dense_cp);
+    let (dedp_lo, dedp_hi) = crate::util::stats::min_max(&dense_edp);
+    let (scp_lo, scp_hi) = crate::util::stats::min_max(&sparse_cp);
+    let (sedp_lo, sedp_hi) = crate::util::stats::min_max(&sparse_edp);
+    let mut md = md_table(&["workload", "critical path ratio", "EDP ratio"], &rows);
+    md.push_str(&format!(
+        "\nMeasured: dense {dcp_lo:.1}-{dcp_hi:.1}x critical path, {dedp_lo:.1}-{dedp_hi:.1}x EDP; \
+         sparse {scp_lo:.2}-{scp_hi:.2}x critical path, {sedp_lo:.2}-{sedp_hi:.2}x EDP.\n\
+         Paper:    dense 7-34x critical path, 7-190x EDP; sparse 2-4.4x critical path, 1.5-4.2x EDP.\n"
+    ));
+    let mut j = Json::obj();
+    j.set("rows", j_rows)
+        .set("dense_crit_lo", dcp_lo)
+        .set("dense_crit_hi", dcp_hi)
+        .set("dense_edp_lo", dedp_lo)
+        .set("dense_edp_hi", dedp_hi)
+        .set("sparse_crit_lo", scp_lo)
+        .set("sparse_crit_hi", scp_hi)
+        .set("sparse_edp_lo", sedp_lo)
+        .set("sparse_edp_hi", sedp_hi);
+    emit("summary", "Headline summary (abstract claims)", &md, &j);
+    Ok(())
+}

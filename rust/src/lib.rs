@@ -1,0 +1,52 @@
+//! # Cascade — an application pipelining toolkit for CGRAs
+//!
+//! Reproduction of *"Cascade: An Application Pipelining Toolkit for
+//! Coarse-Grained Reconfigurable Arrays"* (Melchert, Mei, Koul, Liu,
+//! Horowitz, Raina — Stanford, 2022).
+//!
+//! The crate implements the full stack the paper describes:
+//!
+//! * [`arch`] — the target CGRA architecture model: a 32x16 tile array with
+//!   PE / MEM / IO tiles, a Canal-style configurable interconnect graph with
+//!   single-cycle multi-hop routing and configurable pipelining registers in
+//!   every switch box, a per-component timing model, and bitstream encoding.
+//! * [`dfg`] — the application dataflow-graph IR shared by every compiler
+//!   stage, with a halide-lite frontend used by the benchmark applications.
+//! * [`map`] — compute mapping from primitive-op DAGs onto PE DAGs.
+//! * [`schedule`] — static cycle-accurate scheduling of affine loop nests
+//!   onto memory-tile address generators, plus post-pipelining rescheduling.
+//! * [`pnr`] — simulated-annealing placement (with the paper's Eq. 1 cost,
+//!   including the `alpha` criticality exponent) and a negotiated-congestion
+//!   (PathFinder-style) router over the interconnect graph.
+//! * [`timing`] — static timing analysis of mapped applications and an
+//!   SDF-annotated gate-level-simulation surrogate used to validate the STA
+//!   model (paper Fig. 6).
+//! * [`pipeline`] — the Cascade passes: compute pipelining with branch delay
+//!   matching, register-chain to shift-register transform, broadcast signal
+//!   pipelining, post-PnR pipelining, low unrolling duplication, flush
+//!   hardening (hardware technique), and the sparse FIFO-insertion variants.
+//! * [`sparse`] — the ready-valid streaming substrate and the four sparse
+//!   workloads (vector add, matrix elementwise mul, MTTKRP, TTV).
+//! * [`sim`] — cycle-level functional simulation of the configured fabric
+//!   (dense and sparse) and the activity-based power / EDP model.
+//! * [`runtime`] — the PJRT golden-model runtime: loads AOT-compiled JAX /
+//!   Pallas HLO artifacts and executes them to check functional equivalence
+//!   of the CGRA simulation results.
+//! * [`apps`] — the benchmark applications from the paper's evaluation.
+//! * [`experiments`] — regenerators for every table and figure in the paper.
+//! * [`util`] — in-house substrates: deterministic PRNG, JSON writer,
+//!   mini property-testing framework, statistics helpers, micro-bench timer.
+
+pub mod util;
+pub mod arch;
+pub mod dfg;
+pub mod map;
+pub mod schedule;
+pub mod pnr;
+pub mod timing;
+pub mod pipeline;
+pub mod sparse;
+pub mod sim;
+pub mod runtime;
+pub mod apps;
+pub mod experiments;

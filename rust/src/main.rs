@@ -1,0 +1,155 @@
+//! `cascade` — CLI for the Cascade CGRA pipelining toolkit.
+//!
+//! ```text
+//! cascade compile --app gaussian --level full [--seed N]   compile one app, print report
+//! cascade sta --app harris --level compute                 STA report for a config
+//! cascade exp <fig6|fig7|table1|fig8|fig9|fig10|table2|fig11|summary|all> [--fast]
+//! cascade arch                                             print architecture + timing model
+//! ```
+
+use cascade::experiments;
+use cascade::pipeline::{compile, CompileCtx, PipelineConfig};
+use cascade::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: cascade <command> [options]\n\
+         commands:\n\
+           compile --app <name> [--level <level>] [--seed N]   compile + report\n\
+           sta     --app <name> [--level <level>] [--seed N]   timing report\n\
+           exp     <id|all> [--fast] [--seed N]                regenerate paper tables/figures\n\
+           arch                                                 architecture + timing model summary\n\
+         levels: none compute broadcast placement postpnr all-software full\n\
+         apps: gaussian unsharp camera harris resnet vec_elemadd mat_elemmul mttkrp ttv"
+    );
+    std::process::exit(2);
+}
+
+fn level(name: &str) -> PipelineConfig {
+    match name {
+        "none" => PipelineConfig::none(),
+        "compute" => PipelineConfig::compute_only(),
+        "broadcast" => PipelineConfig::with_broadcast(),
+        "placement" => PipelineConfig::with_placement(),
+        "postpnr" => PipelineConfig::with_postpnr(),
+        "all-software" => PipelineConfig::all_software(),
+        "full" => PipelineConfig::full(),
+        other => {
+            eprintln!("unknown level '{other}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn app_by_name(name: &str) -> cascade::apps::App {
+    match name {
+        "gaussian" => cascade::apps::dense::gaussian(6400, 4800, 16),
+        "unsharp" => cascade::apps::dense::unsharp(1536, 2560, 4),
+        "camera" => cascade::apps::dense::camera(2560, 1920, 4),
+        "harris" => cascade::apps::dense::harris(1530, 2554, 4),
+        "resnet" => cascade::apps::dense::resnet_conv5x(),
+        "vec_elemadd" => cascade::apps::sparse::vec_elemadd(4096, 0.25),
+        "mat_elemmul" => cascade::apps::sparse::mat_elemmul(128, 128, 0.1),
+        "mttkrp" => cascade::apps::sparse::tensor_mttkrp(32, 32, 32, 8, 0.05),
+        "ttv" => cascade::apps::sparse::tensor_ttv(48, 48, 48, 0.05),
+        other => {
+            eprintln!("unknown app '{other}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let Some(cmd) = args.positionals.first().map(|s| s.as_str()) else { usage() };
+    let seed = args.opt_u64("seed", 3);
+
+    match cmd {
+        "compile" | "sta" => {
+            let app_name = args.opt("app").unwrap_or_else(|| usage());
+            let cfg = level(args.opt_or("level", "full"));
+            let app = app_by_name(app_name);
+            println!("building compile context (32x16 array, timing model)...");
+            let ctx = CompileCtx::paper();
+            let t0 = std::time::Instant::now();
+            let c = match compile(&app, &ctx, &cfg, seed) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("compile failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            println!("compiled '{app_name}' in {:.2?}", t0.elapsed());
+            println!("  nodes: {} | edges: {}", c.design.dfg.nodes.len(), c.design.dfg.edges.len());
+            println!(
+                "  utilization: {:.1}% (PE {}/{}, MEM {}/{})",
+                c.map_report.utilization() * 100.0,
+                c.map_report.pe_used,
+                c.map_report.pe_capacity,
+                c.map_report.mem_used,
+                c.map_report.mem_capacity
+            );
+            let (sb, rf, fifos) = c.design.pipelining_resources();
+            println!("  pipelining: {} SB regs, {} RF words, {} FIFO stages", sb, rf, fifos);
+            println!(
+                "  critical path: {:.2} ns -> fmax {:.0} MHz ({} timing segments)",
+                c.sta.period_ps / 1000.0,
+                c.fmax_mhz(),
+                c.sta.num_segments
+            );
+            if cmd == "compile" {
+                println!(
+                    "  schedule: {} cycles/frame (fill latency {}) -> runtime {:.3} ms",
+                    c.schedule.total_cycles,
+                    c.schedule.fill_latency,
+                    c.runtime_ms()
+                );
+                let p = cascade::sim::power::estimate(
+                    &c.design,
+                    c.fmax_mhz(),
+                    &cascade::sim::power::EnergyModel::default(),
+                );
+                println!(
+                    "  power: {:.0} mW ({:.2} nJ/cycle) | EDP {:.4} mJ*ms",
+                    p.total_mw(),
+                    p.energy_per_cycle_nj,
+                    p.edp(c.runtime_ms())
+                );
+            }
+        }
+        "exp" => {
+            let id = args.positionals.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let fast = args.flag("fast");
+            println!("building compile context (32x16 array, timing model)...");
+            let ctx = CompileCtx::paper();
+            if let Err(e) = experiments::run(id, &ctx, fast, seed) {
+                eprintln!("experiment failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        "arch" => {
+            let ctx = CompileCtx::paper();
+            let (pe, mem) = ctx.arch.core_tile_counts();
+            println!("array: {}x{} ({} PE, {} MEM, {} IO tiles)", ctx.arch.cols, ctx.arch.rows, pe, mem, ctx.arch.cols);
+            println!(
+                "interconnect: {} tracks/side/layer, {} RRG nodes, {} edges",
+                ctx.arch.tracks,
+                ctx.graph.num_nodes(),
+                ctx.graph.num_edges()
+            );
+            println!("timing model ({} characterized path classes):", ctx.lib.records.len());
+            for r in ctx.lib.records.iter().take(12) {
+                println!(
+                    "  {:?} {:?} {}: {} ps",
+                    r.class,
+                    r.tile_kind,
+                    if r.horizontal { "H" } else { "V" },
+                    r.delay_ps
+                );
+            }
+            println!("  ... ({} more)", ctx.lib.records.len().saturating_sub(12));
+            println!("max clock-skew margin: {} ps", ctx.lib.max_skew_margin_ps());
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,256 @@
+//! Branch delay matching (paper §III-B).
+//!
+//! When pipelining registers are added to an application DFG, every
+//! synchronous join must still see all of its operands arrive on the same
+//! cycle. BDM computes per-node arrival cycles (like STA, but in cycles
+//! using node latencies + edge register counts) and adds balancing
+//! registers to the earlier-arriving inputs.
+//!
+//! Exclusions:
+//! * edges out of the flush source (a synchronous reset, not data);
+//! * inputs of sparse (elastic) nodes — the ready/valid protocol absorbs
+//!   latency mismatches, which is exactly why sparse pipelining can insert
+//!   FIFOs without balancing (§VII).
+
+use crate::dfg::ir::{Dfg, NodeId, Op};
+
+/// Is this edge subject to balancing at its sink?
+pub fn balanced_edge(g: &Dfg, ei: usize) -> bool {
+    let e = &g.edges[ei];
+    if matches!(g.node(e.src).op, Op::FlushSrc) {
+        return false;
+    }
+    if e.fifos > 0 {
+        return false;
+    }
+    g.node(e.dst).needs_balanced_inputs()
+}
+
+/// Run branch delay matching: add registers on earlier inputs of every
+/// synchronous join so all *pipelining-added* arrivals match (algorithmic
+/// latencies — line-buffer taps, ROM reads — are part of the application's
+/// function and are never balanced away). Returns the number of registers
+/// added. Idempotent: a second run adds zero.
+pub fn branch_delay_match(g: &mut Dfg) -> u64 {
+    let order = g.topo_order();
+    let mut in_lists: Vec<Vec<usize>> = vec![Vec::new(); g.nodes.len()];
+    for (ei, e) in g.edges.iter().enumerate() {
+        in_lists[e.dst as usize].push(ei);
+    }
+    let mut arr = vec![0u64; g.nodes.len()];
+    let mut added = 0u64;
+    for &n in &order {
+        // Added-latency arrival of each balanced input; target is the max.
+        let mut target = 0u64;
+        let mut have_balanced = false;
+        for &ei in &in_lists[n as usize] {
+            let e = &g.edges[ei];
+            let a = arr[e.src as usize] + e.regs as u64;
+            if balanced_edge(g, ei) {
+                target = target.max(a);
+                have_balanced = true;
+            }
+        }
+        if have_balanced {
+            for &ei in &in_lists[n as usize] {
+                if !balanced_edge(g, ei) {
+                    continue;
+                }
+                let e = &g.edges[ei];
+                let a = arr[e.src as usize] + e.regs as u64;
+                let deficit = target - a;
+                if deficit > 0 {
+                    g.edges[ei].regs += deficit as u32;
+                    added += deficit;
+                }
+            }
+        }
+        // Node arrival = max over all *data* inputs (balanced now equal;
+        // flush edges never contribute to data timing).
+        let mut best = 0u64;
+        for &ei in &in_lists[n as usize] {
+            let e = &g.edges[ei];
+            if matches!(g.node(e.src).op, Op::FlushSrc) {
+                continue;
+            }
+            best = best.max(arr[e.src as usize] + e.regs as u64 + e.fifos as u64);
+        }
+        arr[n as usize] = best + g.node(n).added_latency() as u64;
+    }
+    added
+}
+
+/// Added-latency arrival cycles (the BDM quantity; cf.
+/// `Dfg::arrival_cycles`, which includes algorithmic latencies and is the
+/// scheduling quantity).
+pub fn added_arrival_cycles(g: &Dfg) -> Vec<u64> {
+    let mut in_lists: Vec<Vec<usize>> = vec![Vec::new(); g.nodes.len()];
+    for (ei, e) in g.edges.iter().enumerate() {
+        in_lists[e.dst as usize].push(ei);
+    }
+    let mut arr = vec![0u64; g.nodes.len()];
+    for &n in &g.topo_order() {
+        let mut best = 0u64;
+        for &ei in &in_lists[n as usize] {
+            let e = &g.edges[ei];
+            if matches!(g.node(e.src).op, Op::FlushSrc) {
+                continue;
+            }
+            best = best.max(arr[e.src as usize] + e.regs as u64 + e.fifos as u64);
+        }
+        arr[n as usize] = best + g.node(n).added_latency() as u64;
+    }
+    arr
+}
+
+/// Verify the BDM invariant: every balanced join sees equal added-latency
+/// arrivals on all balanced inputs. Returns offending node ids.
+pub fn check_balanced(g: &Dfg) -> Vec<NodeId> {
+    let arr = added_arrival_cycles(g);
+    let mut in_lists: Vec<Vec<usize>> = vec![Vec::new(); g.nodes.len()];
+    for (ei, e) in g.edges.iter().enumerate() {
+        in_lists[e.dst as usize].push(ei);
+    }
+    let mut bad = Vec::new();
+    for n in 0..g.nodes.len() as NodeId {
+        let arrivals: Vec<u64> = in_lists[n as usize]
+            .iter()
+            .filter(|&&ei| balanced_edge(g, ei))
+            .map(|&ei| {
+                let e = &g.edges[ei];
+                arr[e.src as usize] + e.regs as u64
+            })
+            .collect();
+        if arrivals.windows(2).any(|w| w[0] != w[1]) {
+            bad.push(n);
+        }
+    }
+    bad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::interp::Interp;
+    use crate::dfg::ir::AluOp;
+    use std::collections::BTreeMap;
+
+    /// in -> mul -> add ; in -> add : a classic reconvergence.
+    fn diamond() -> Dfg {
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let m = g.add_node(Op::Alu { op: AluOp::Mul, const_b: Some(3) }, "m");
+        let a = g.add_node(Op::Alu { op: AluOp::Add, const_b: None }, "a");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        g.connect(i, m, 0);
+        g.connect(m, a, 0);
+        g.connect(i, a, 1);
+        g.connect(a, o, 0);
+        g
+    }
+
+    #[test]
+    fn balances_reconvergent_paths() {
+        let mut g = diamond();
+        // Pipeline the multiplier: its input registers add 1 cycle on the
+        // long path.
+        g.node_mut(1).input_regs = true;
+        let added = branch_delay_match(&mut g);
+        assert_eq!(added, 1, "short path needs one balancing register");
+        assert!(check_balanced(&g).is_empty());
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut g = diamond();
+        g.node_mut(1).input_regs = true;
+        branch_delay_match(&mut g);
+        let again = branch_delay_match(&mut g);
+        assert_eq!(again, 0);
+    }
+
+    #[test]
+    fn functional_equivalence_after_bdm() {
+        // Pipelined+BDM graph must produce the same stream, shifted.
+        let input: Vec<i64> = (0..32).map(|x| (x * 11) % 23).collect();
+        let mut ins = BTreeMap::new();
+        ins.insert(0u16, input.clone());
+
+        let g0 = diamond();
+        let out0 = Interp::run(&g0, &ins, 32).outputs[&0].clone();
+
+        let mut g1 = diamond();
+        g1.node_mut(1).input_regs = true;
+        branch_delay_match(&mut g1);
+        let out1 = Interp::run(&g1, &ins, 32).outputs[&0].clone();
+
+        // Latency shift = arrival at output in g1.
+        let shift = g1.arrival_cycles()[3] as usize;
+        assert_eq!(shift, 1);
+        assert_eq!(&out0[..32 - shift], &out1[shift..]);
+    }
+
+    #[test]
+    fn flush_edges_not_balanced() {
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let d = g.add_node(Op::Delay { cycles: 10, pipelined: false }, "lb");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        g.connect(i, d, 0);
+        g.connect(d, o, 0);
+        let f = g.add_node(Op::FlushSrc, "flush");
+        g.add_edge(f, d, 1, crate::arch::canal::Layer::B1);
+        let added = branch_delay_match(&mut g);
+        assert_eq!(added, 0, "flush must not trigger balancing");
+    }
+
+    #[test]
+    fn sparse_joins_not_balanced() {
+        let mut g = Dfg::new();
+        let s1 = g.add_node(Op::Sparse(crate::dfg::ir::SparseOp::CrdScan { tensor: 0, mode: 0 }), "s1");
+        let s2 = g.add_node(Op::Sparse(crate::dfg::ir::SparseOp::CrdScan { tensor: 1, mode: 0 }), "s2");
+        let alu = g.add_node(Op::Sparse(crate::dfg::ir::SparseOp::SpAlu(AluOp::Add)), "a");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        g.connect(s1, alu, 0);
+        g.connect(s2, alu, 1);
+        g.connect(alu, o, 0);
+        // Skew one input heavily.
+        g.edges[0].regs = 5;
+        let added = branch_delay_match(&mut g);
+        assert_eq!(added, 0, "elastic inputs need no balancing");
+    }
+
+    #[test]
+    fn deep_tree_balances_everywhere() {
+        use crate::util::prop::forall;
+        forall("random DAG balances", 30, |gen| {
+            let mut g = Dfg::new();
+            let i = g.add_node(Op::Input { lane: 0 }, "in");
+            let mut pool = vec![i];
+            let n = gen.usize(2, 24);
+            for k in 0..n {
+                let op = *gen.pick(&[AluOp::Add, AluOp::Mul, AluOp::Sub]);
+                let a = *gen.pick(&pool);
+                let b = *gen.pick(&pool);
+                let node = g.add_node(Op::Alu { op, const_b: None }, format!("n{k}"));
+                g.connect(a, node, 0);
+                if a == b {
+                    let p = g.add_node(Op::Alu { op: AluOp::Pass, const_b: None }, format!("p{k}"));
+                    g.connect(a, p, 0);
+                    g.connect(p, node, 1);
+                } else {
+                    g.connect(b, node, 1);
+                }
+                // Randomly pipeline some nodes.
+                if gen.bool(0.5) {
+                    g.node_mut(node).input_regs = true;
+                }
+                pool.push(node);
+            }
+            let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+            g.connect(*pool.last().unwrap(), o, 0);
+            branch_delay_match(&mut g);
+            assert!(check_balanced(&g).is_empty(), "unbalanced after BDM");
+        });
+    }
+}

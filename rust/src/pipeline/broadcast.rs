@@ -1,0 +1,192 @@
+//! Broadcast signal pipelining (paper §V-B).
+//!
+//! Nets with one source and many destinations route inefficiently and,
+//! once compute pipelining has registered every PE, dominate the critical
+//! path ("in our benchmark suite, every application has a broadcast path").
+//! This pass rebuilds high-fanout connections as trees of registered
+//! buffer PEs, bounding the fanout (and therefore the wirelength) of every
+//! stage. The trade-off knobs are the maximum fanout per tree node and the
+//! register budget; branch delay matching restores correctness afterwards.
+
+use crate::dfg::ir::{AluOp, Dfg, NodeId, Op};
+
+use super::bdm::branch_delay_match;
+
+/// Broadcast pipelining knobs (§V-B: "the parameters of this transformation
+/// pass (number of tree levels, maximum number of pipeline registers, etc.)
+/// can be adjusted").
+#[derive(Debug, Clone)]
+pub struct BroadcastParams {
+    /// Fanout threshold above which a net is treated as a broadcast.
+    pub fanout_threshold: usize,
+    /// Maximum fanout of each tree stage after the transform.
+    pub max_stage_fanout: usize,
+    /// Maximum buffer PEs to spend per net.
+    pub max_buffers_per_net: usize,
+}
+
+impl Default for BroadcastParams {
+    fn default() -> Self {
+        BroadcastParams { fanout_threshold: 4, max_stage_fanout: 4, max_buffers_per_net: 16 }
+    }
+}
+
+/// Apply broadcast pipelining. Returns the number of buffer PEs inserted.
+/// Flush nets are excluded (handled by hardware hardening, §VI); sparse
+/// nets are excluded (the paper found no effect, §VIII-D).
+pub fn broadcast_pipelining(g: &mut Dfg, p: &BroadcastParams) -> usize {
+    let mut inserted = 0;
+    // Snapshot driver list; we add nodes while iterating.
+    let num_nodes = g.nodes.len();
+    for src in 0..num_nodes as NodeId {
+        if matches!(g.node(src).op, Op::FlushSrc) {
+            continue;
+        }
+        if g.node(src).is_sparse() {
+            continue;
+        }
+        loop {
+            // Out-edges on the data layer only, excluding edges to sparse
+            // sinks.
+            let outs: Vec<usize> = g
+                .edges
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| {
+                    e.src == src
+                        && e.layer == crate::arch::canal::Layer::B16
+                        && !g.node(e.dst).is_sparse()
+                })
+                .map(|(ei, _)| ei)
+                .collect();
+            if outs.len() <= p.fanout_threshold || inserted >= p.max_buffers_per_net {
+                break;
+            }
+            // Group sinks into chunks of max_stage_fanout, each behind a
+            // registered Pass buffer.
+            let mut made_progress = false;
+            for chunk in outs.chunks(p.max_stage_fanout) {
+                if chunk.len() < 2 || inserted >= p.max_buffers_per_net {
+                    continue;
+                }
+                let buf = g.add_node(Op::Alu { op: AluOp::Pass, const_b: None }, format!("bcast{src}_{inserted}"));
+                g.node_mut(buf).input_regs = true; // registered buffer stage
+                for &ei in chunk {
+                    g.edges[ei].src = buf;
+                }
+                g.connect(src, buf, 0);
+                inserted += 1;
+                made_progress = true;
+            }
+            if !made_progress {
+                break;
+            }
+        }
+    }
+    if inserted > 0 {
+        branch_delay_match(g);
+    }
+    inserted
+}
+
+/// Maximum data-layer fanout in the graph (diagnostic).
+pub fn max_fanout(g: &Dfg) -> usize {
+    let mut counts = std::collections::HashMap::new();
+    for e in &g.edges {
+        if e.layer == crate::arch::canal::Layer::B16 {
+            *counts.entry(e.src).or_insert(0usize) += 1;
+        }
+    }
+    counts.values().copied().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::interp::Interp;
+    use std::collections::BTreeMap;
+
+    fn star(n: usize) -> Dfg {
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        for k in 0..n {
+            let a = g.add_node(Op::Alu { op: AluOp::Add, const_b: Some(k as i64) }, format!("a{k}"));
+            g.connect(i, a, 0);
+            let o = g.add_node(Op::Output { lane: k as u16, decimate: 1 }, format!("o{k}"));
+            g.connect(a, o, 0);
+        }
+        g
+    }
+
+    #[test]
+    fn reduces_fanout_below_threshold() {
+        let mut g = star(12);
+        assert_eq!(max_fanout(&g), 12);
+        let p = BroadcastParams::default();
+        let n = broadcast_pipelining(&mut g, &p);
+        assert!(n > 0);
+        assert!(max_fanout(&g) <= p.max_stage_fanout.max(p.fanout_threshold));
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+        assert!(super::super::bdm::check_balanced(&g).is_empty());
+    }
+
+    #[test]
+    fn preserves_function_with_uniform_shift() {
+        let input: Vec<i64> = (0..24).map(|x| x * 3 % 17).collect();
+        let mut ins = BTreeMap::new();
+        ins.insert(0u16, input);
+        let g0 = star(9);
+        let r0 = Interp::run(&g0, &ins, 24);
+        let mut g1 = star(9);
+        broadcast_pipelining(&mut g1, &BroadcastParams::default());
+        let r1 = Interp::run(&g1, &ins, 24);
+        // Each lane shifts by its own (schedule-known) latency: outputs are
+        // independent endpoints, so uniformity is not required — the static
+        // schedule tracks per-output offsets (§V-F).
+        let arr1 = g1.arrival_cycles();
+        let mut checked = 0;
+        for (i, n) in g1.nodes.iter().enumerate() {
+            if let Op::Output { lane, .. } = n.op {
+                let s = arr1[i] as usize;
+                let a = &r0.outputs[&lane];
+                let b = &r1.outputs[&lane];
+                assert_eq!(&a[..24 - s], &b[s..], "lane {lane} shift {s}");
+                checked += 1;
+            }
+        }
+        assert_eq!(checked, 9);
+        // At least one lane goes through a registered buffer.
+        assert!(
+            g1.nodes.iter().enumerate().any(|(i, n)| matches!(n.op, Op::Output { .. }) && arr1[i] > 0)
+        );
+    }
+
+    #[test]
+    fn small_fanout_untouched() {
+        let mut g = star(3);
+        let n = broadcast_pipelining(&mut g, &BroadcastParams::default());
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn flush_excluded() {
+        let app = crate::apps::dense::gaussian(256, 4, 1);
+        let mut g = app.dfg;
+        let flush = g.nodes.iter().position(|n| matches!(n.op, Op::FlushSrc)).unwrap() as NodeId;
+        let before = g.out_edges(flush).len();
+        broadcast_pipelining(&mut g, &BroadcastParams::default());
+        assert_eq!(g.out_edges(flush).len(), before);
+    }
+
+    #[test]
+    fn resnet_broadcasts_get_trees() {
+        let app = crate::apps::dense::resnet_conv5x();
+        let mut g = app.dfg;
+        let before = max_fanout(&g);
+        assert!(before >= 8);
+        let n = broadcast_pipelining(&mut g, &BroadcastParams::default());
+        assert!(n > 0);
+        assert!(max_fanout(&g) < before);
+        assert!(g.validate().is_empty());
+    }
+}

@@ -1,0 +1,149 @@
+//! Compute pipelining (paper §V-A, Fig. 4 left) and the register-chain to
+//! register-file transform (Fig. 4 right).
+
+use crate::dfg::ir::{Dfg, Op};
+
+use super::bdm::branch_delay_match;
+
+/// Enable every available PE input register, then branch-delay-match.
+/// Returns (PEs pipelined, balancing registers added).
+pub fn compute_pipelining(g: &mut Dfg) -> (usize, u64) {
+    let mut pes = 0;
+    for node in &mut g.nodes {
+        if matches!(node.op, Op::Alu { .. }) && !node.input_regs {
+            node.input_regs = true;
+            pes += 1;
+        }
+    }
+    let regs = branch_delay_match(g);
+    (pes, regs)
+}
+
+/// Transform long chains of balancing registers into register-file
+/// variable-length shift registers (paper §V-A): every edge carrying at
+/// least `threshold` pipeline registers gets them replaced by a `Delay`
+/// node (realized in a PE register file), freeing interconnect registers.
+/// Returns the number of chains transformed.
+pub fn regfile_transform(g: &mut Dfg, threshold: u32) -> usize {
+    assert!(threshold >= 2, "a chain is at least 2 registers");
+    let mut transformed = 0;
+    let ne = g.edges.len();
+    for ei in 0..ne {
+        let e = &g.edges[ei];
+        if e.regs < threshold || e.fifos > 0 {
+            continue;
+        }
+        let (src, dst, port, layer, regs) = (e.src, e.dst, e.dst_port, e.layer, e.regs);
+        // Replace edge registers with a Delay node of the same cycle count.
+        let d = g.add_node(Op::Delay { cycles: regs, pipelined: true }, format!("rfchain{ei}"));
+        g.edges[ei].regs = 0;
+        g.edges[ei].dst = d;
+        g.edges[ei].dst_port = 0;
+        let new_e = g.add_edge(d, dst, port, layer);
+        let _ = (src, new_e);
+        transformed += 1;
+    }
+    transformed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::interp::Interp;
+    use crate::dfg::ir::AluOp;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn compute_pipelining_sets_all_pes() {
+        let app = crate::apps::dense::gaussian(64, 64, 1);
+        let mut g = app.dfg;
+        let (pes, _regs) = compute_pipelining(&mut g);
+        assert!(pes > 0);
+        for n in &g.nodes {
+            if matches!(n.op, Op::Alu { .. }) {
+                assert!(n.input_regs);
+            }
+        }
+        assert!(super::super::bdm::check_balanced(&g).is_empty());
+    }
+
+    #[test]
+    fn compute_pipelining_preserves_function() {
+        let app = crate::apps::dense::gaussian(32, 8, 1);
+        let mut g = app.dfg.clone();
+        let input: Vec<i64> = (0..256).map(|x| (x * 7 + 5) % 31).collect();
+        let mut ins = BTreeMap::new();
+        ins.insert(0u16, input);
+        let before = Interp::run(&app.dfg, &ins, 256).outputs[&0].clone();
+        compute_pipelining(&mut g);
+        let after = Interp::run(&g, &ins, 256).outputs[&0].clone();
+        // Output equals the unpipelined stream delayed by the new latency.
+        let out_node = g
+            .nodes
+            .iter()
+            .position(|n| matches!(n.op, Op::Output { .. }))
+            .unwrap();
+        let shift =
+            g.arrival_cycles()[out_node] - app.dfg.arrival_cycles()[out_node];
+        let s = shift as usize;
+        assert!(s > 0);
+        // Skip the fill region of the unpipelined stream.
+        let wd = crate::dfg::build::stencil_window_delay(32, 3) as usize;
+        assert_eq!(&before[wd..256 - s], &after[wd + s..]);
+    }
+
+    #[test]
+    fn regfile_transform_replaces_long_chains() {
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        let e = g.connect(i, o, 0);
+        g.edge_mut(e).regs = 5;
+        let n = regfile_transform(&mut g, 3);
+        assert_eq!(n, 1);
+        // A Delay{5} node now sits between input and output.
+        let d = g
+            .nodes
+            .iter()
+            .position(|n| matches!(n.op, Op::Delay { cycles: 5, pipelined: true }))
+            .expect("delay node inserted");
+        assert!(g.edges.iter().any(|e| e.src == i && e.dst == d as u32));
+        assert!(g.edges.iter().any(|e| e.src == d as u32 && e.dst == o));
+        assert_eq!(g.total_edge_regs(), 0);
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+    }
+
+    #[test]
+    fn regfile_transform_preserves_function() {
+        let build = || {
+            let mut g = Dfg::new();
+            let i = g.add_node(Op::Input { lane: 0 }, "in");
+            let m = g.add_node(Op::Alu { op: AluOp::Mul, const_b: Some(2) }, "m");
+            let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+            g.connect(i, m, 0);
+            let e = g.connect(m, o, 0);
+            g.edge_mut(e).regs = 4;
+            g
+        };
+        let input: Vec<i64> = (0..20).collect();
+        let mut ins = BTreeMap::new();
+        ins.insert(0u16, input);
+        let g0 = build();
+        let out0 = Interp::run(&g0, &ins, 20).outputs[&0].clone();
+        let mut g1 = build();
+        regfile_transform(&mut g1, 2);
+        let out1 = Interp::run(&g1, &ins, 20).outputs[&0].clone();
+        assert_eq!(out0, out1);
+    }
+
+    #[test]
+    fn short_chains_untouched() {
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        let e = g.connect(i, o, 0);
+        g.edge_mut(e).regs = 2;
+        assert_eq!(regfile_transform(&mut g, 3), 0);
+        assert_eq!(g.edge(e).regs, 2);
+    }
+}

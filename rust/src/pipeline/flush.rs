@@ -1,0 +1,84 @@
+//! Hardware flush hardening (paper §VI).
+//!
+//! The flush signal synchronizes every stateful tile at application start.
+//! It is a broadcast with one source and potentially hundreds of
+//! destinations; pipelining it with the §V-B tree transform would burn a
+//! huge number of registers, so the paper *hardens* it: a dedicated wire
+//! outside the configurable interconnect, routed from the top of the array
+//! down each column.
+//!
+//! In this model, hardening is an architecture flag
+//! (`ArchParams::hardened_flush`): the netlist extractor then omits the
+//! flush net entirely, so it neither consumes interconnect resources nor
+//! appears in STA. The dedicated network's own timing is modeled here and
+//! asserted (in tests and in `timing` reporting) to be far from critical:
+//! the column spine is buffered at every tile boundary, so its worst
+//! register-to-register segment is one vertical tile crossing plus a
+//! buffer.
+
+use crate::arch::delay::DelayLib;
+use crate::arch::params::{ArchParams, TileKind};
+
+/// Worst-case register-to-register segment of the hardened flush network:
+/// one vertical MEM-tile crossing plus a repeater, plus margins.
+pub fn hardened_flush_segment_ps(lib: &DelayLib) -> f64 {
+    // One vertical crossing of the tallest tile + buffer + clocking
+    // overheads. Uses the same component model as the interconnect.
+    let model = lib.model();
+    let tallest = model.pe_dims_um.1.max(model.mem_dims_um.1);
+    lib.clk_q_ps() as f64
+        + tallest * model.wire_ps_per_um
+        + 2.0 * model.mux2_ps
+        + lib.setup_ps() as f64
+}
+
+/// Return a copy of the architecture with the flush network hardened.
+pub fn harden(arch: &ArchParams) -> ArchParams {
+    ArchParams { hardened_flush: true, ..arch.clone() }
+}
+
+/// Count of flush destinations in an application (the fanout the hardened
+/// network absorbs) — stateful tiles only.
+pub fn flush_destinations(g: &crate::dfg::ir::Dfg) -> usize {
+    g.nodes
+        .iter()
+        .filter(|n| {
+            matches!(
+                n.op,
+                crate::dfg::ir::Op::Delay { .. }
+                    | crate::dfg::ir::Op::Rom { .. }
+                    | crate::dfg::ir::Op::Accum { .. }
+            ) || (n.is_sparse() && n.tile_kind() == TileKind::Mem)
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::delay::DelayModelParams;
+
+    #[test]
+    fn hardened_flush_never_limits_high_frequencies() {
+        let arch = ArchParams::paper();
+        let lib = DelayLib::generate(&arch, &DelayModelParams::default());
+        let seg = hardened_flush_segment_ps(&lib);
+        // Must support > 1 GHz so it never bounds the paper's 457-617 MHz
+        // pipelined applications.
+        assert!(seg < 1000.0, "hardened flush segment {seg} ps");
+    }
+
+    #[test]
+    fn harden_flag() {
+        let arch = ArchParams::paper();
+        assert!(!arch.hardened_flush);
+        assert!(harden(&arch).hardened_flush);
+    }
+
+    #[test]
+    fn flush_fanout_grows_with_unroll() {
+        let a1 = crate::apps::dense::gaussian(256, 64, 1);
+        let a4 = crate::apps::dense::gaussian(256, 64, 4);
+        assert!(flush_destinations(&a4.dfg) > flush_destinations(&a1.dfg));
+    }
+}

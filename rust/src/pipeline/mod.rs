@@ -1,0 +1,398 @@
+//! The Cascade pipelining passes and the end-to-end compile driver.
+//!
+//! Software techniques (paper §V):
+//! * [`compute`] — compute pipelining (PE input registers) + the
+//!   register-chain → register-file shift-register transform;
+//! * [`bdm`] — branch delay matching, shared by every pass;
+//! * [`broadcast`] — broadcast signal pipelining (tree transform);
+//! * placement cost-function optimization lives in `pnr::place`
+//!   (the `alpha` criticality exponent of Eq. 1);
+//! * [`postpnr`] — post-place-and-route pipelining (switch-box register
+//!   insertion on the critical path), including the sparse FIFO variant
+//!   (§VII);
+//! * [`unroll`] — low unrolling duplication;
+//! * [`flush`] — the hardware flush-hardening optimization (§VI).
+//!
+//! [`compile`] runs the full Fig. 2 flow: map → schedule (round 1) →
+//! DFG-level pipelining → place → route → register realization → post-PnR
+//! pipelining → rescheduling (§V-F) → STA.
+
+pub mod bdm;
+pub mod compute;
+pub mod broadcast;
+pub mod postpnr;
+pub mod flush;
+pub mod unroll;
+
+use crate::apps::App;
+use crate::arch::canal::InterconnectGraph;
+use crate::arch::delay::{DelayLib, DelayModelParams};
+use crate::arch::params::ArchParams;
+use crate::pnr::{place_and_route, PlaceParams, RouteParams};
+use crate::schedule::{reschedule, schedule, Schedule};
+use crate::timing::sta::{analyze, CritPath};
+
+pub use broadcast::BroadcastParams;
+pub use postpnr::{PostPnrParams, PostPnrReport};
+pub use unroll::DupPlan;
+
+/// Which pipelining techniques to apply (one flag per paper technique, so
+/// the experiment harness can sweep them incrementally as in Fig. 7/10).
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// §V-A compute pipelining.
+    pub compute: bool,
+    /// §V-A register-chain transform threshold (None = off).
+    pub regfile_threshold: Option<u32>,
+    /// §V-B broadcast pipelining (None = off).
+    pub broadcast: Option<BroadcastParams>,
+    /// §V-C placement criticality exponent (1.0 = baseline placer).
+    pub place_alpha: f64,
+    /// §V-D post-PnR pipelining (None = off).
+    pub postpnr: Option<PostPnrParams>,
+    /// §V-E low unrolling duplication (consumed by `compile_with_dup`).
+    pub unroll_dup: bool,
+    /// §VI hardened flush network.
+    pub hardened_flush: bool,
+}
+
+impl PipelineConfig {
+    /// No pipelining at all (the baseline compiler).
+    pub fn none() -> Self {
+        PipelineConfig {
+            compute: false,
+            regfile_threshold: None,
+            broadcast: None,
+            place_alpha: 1.0,
+            postpnr: None,
+            unroll_dup: false,
+            hardened_flush: false,
+        }
+    }
+
+    /// + compute pipelining.
+    pub fn compute_only() -> Self {
+        PipelineConfig { compute: true, regfile_threshold: Some(4), ..Self::none() }
+    }
+
+    /// + broadcast signal pipelining.
+    pub fn with_broadcast() -> Self {
+        PipelineConfig { broadcast: Some(BroadcastParams::default()), ..Self::compute_only() }
+    }
+
+    /// + placement cost-function optimization.
+    pub fn with_placement() -> Self {
+        PipelineConfig { place_alpha: 1.35, ..Self::with_broadcast() }
+    }
+
+    /// + post-PnR pipelining.
+    pub fn with_postpnr() -> Self {
+        PipelineConfig { postpnr: Some(PostPnrParams::default()), ..Self::with_placement() }
+    }
+
+    /// + low unrolling duplication: all software techniques (Fig. 7 final
+    /// bar).
+    pub fn all_software() -> Self {
+        PipelineConfig { unroll_dup: true, ..Self::with_postpnr() }
+    }
+
+    /// All software techniques + the hardened flush network (§VI) — the
+    /// configuration behind Table I "Pipelined".
+    pub fn full() -> Self {
+        PipelineConfig { hardened_flush: true, ..Self::all_software() }
+    }
+
+    /// The incremental ladder used by Fig. 7 (dense).
+    pub fn ladder() -> Vec<(&'static str, PipelineConfig)> {
+        vec![
+            ("unpipelined", Self::none()),
+            ("+compute", Self::compute_only()),
+            ("+broadcast", Self::with_broadcast()),
+            ("+placement", Self::with_placement()),
+            ("+postpnr", Self::with_postpnr()),
+            ("+duplication", Self::all_software()),
+        ]
+    }
+
+    /// The incremental ladder used by Fig. 10 (sparse): compute pipelining
+    /// is always on (FIFOs are inherent), broadcast/duplication had no
+    /// effect, so the sweep is placement then post-PnR.
+    pub fn sparse_ladder() -> Vec<(&'static str, PipelineConfig)> {
+        vec![
+            ("compute (default)", Self::compute_only()),
+            ("+placement", PipelineConfig { place_alpha: 1.35, ..Self::compute_only() }),
+            (
+                "+postpnr",
+                PipelineConfig {
+                    place_alpha: 1.35,
+                    postpnr: Some(PostPnrParams::default()),
+                    ..Self::compute_only()
+                },
+            ),
+        ]
+    }
+}
+
+/// Shared compile context: architecture + delay-annotated interconnect
+/// graph + timing model (expensive to build; reuse across compiles).
+pub struct CompileCtx {
+    pub arch: ArchParams,
+    pub graph: InterconnectGraph,
+    pub lib: DelayLib,
+}
+
+impl CompileCtx {
+    pub fn new(arch: ArchParams) -> CompileCtx {
+        let lib = DelayLib::generate(&arch, &DelayModelParams::default());
+        let mut graph = InterconnectGraph::build(&arch);
+        graph.annotate_delays(&lib);
+        CompileCtx { arch, graph, lib }
+    }
+
+    /// The paper's 32x16 evaluation array.
+    pub fn paper() -> CompileCtx {
+        CompileCtx::new(ArchParams::paper())
+    }
+}
+
+/// Compile error.
+#[derive(Debug)]
+pub enum CompileError {
+    Map(crate::map::MapError),
+    Route(crate::pnr::RouteError),
+    Dup(String),
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::Map(e) => write!(f, "mapping: {e}"),
+            CompileError::Route(e) => write!(f, "routing: {e}"),
+            CompileError::Dup(s) => write!(f, "duplication: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+/// A fully compiled application.
+pub struct Compiled {
+    pub design: crate::pnr::RoutedDesign,
+    pub sta: CritPath,
+    pub schedule: Schedule,
+    pub map_report: crate::map::MapReport,
+    pub pes_pipelined: usize,
+    pub bdm_regs: u64,
+    pub bcast_buffers: usize,
+    pub postpnr: Option<PostPnrReport>,
+    pub dup: Option<DupPlan>,
+}
+
+impl Compiled {
+    pub fn fmax_mhz(&self) -> f64 {
+        self.sta.fmax_mhz
+    }
+
+    pub fn runtime_ms(&self) -> f64 {
+        crate::schedule::runtime_ms(&self.schedule, self.sta.fmax_mhz)
+    }
+}
+
+/// Run the Fig. 2 compile flow on an application.
+pub fn compile(
+    app: &App,
+    ctx: &CompileCtx,
+    cfg: &PipelineConfig,
+    seed: u64,
+) -> Result<Compiled, CompileError> {
+    compile_inner(app, ctx, cfg, seed, None)
+}
+
+fn compile_inner(
+    app: &App,
+    ctx: &CompileCtx,
+    cfg: &PipelineConfig,
+    seed: u64,
+    region: Option<(crate::arch::params::TileCoord, (usize, usize))>,
+) -> Result<Compiled, CompileError> {
+    let arch = if cfg.hardened_flush { flush::harden(&ctx.arch) } else { ctx.arch.clone() };
+    let mut dfg = app.dfg.clone();
+    let map_report = crate::map::map_dfg(&mut dfg, &arch).map_err(CompileError::Map)?;
+
+    let is_sparse = dfg.nodes.iter().any(|n| n.is_sparse());
+
+    // DFG-level pipelining (dense only; sparse compute pipelining is
+    // inherent in the FIFO interfaces).
+    let mut pes_pipelined = 0;
+    let mut bdm_regs = 0;
+    let mut bcast_buffers = 0;
+    if !is_sparse {
+        if cfg.compute {
+            let (pes, regs) = compute::compute_pipelining(&mut dfg);
+            pes_pipelined = pes;
+            bdm_regs += regs;
+            if let Some(th) = cfg.regfile_threshold {
+                compute::regfile_transform(&mut dfg, th);
+            }
+        }
+        if let Some(bp) = &cfg.broadcast {
+            bcast_buffers = broadcast::broadcast_pipelining(&mut dfg, bp);
+        }
+    }
+
+    // Round-1 schedule (paper §V-F: latencies as currently known).
+    let sched1 = schedule(&dfg, &app.shape);
+
+    // Place and route.
+    let pp = PlaceParams { alpha: cfg.place_alpha, seed, region, ..PlaceParams::default() };
+    let mut design = place_and_route(&dfg, &arch, &ctx.graph, &ctx.lib, &pp, &RouteParams::default())
+        .map_err(CompileError::Route)?;
+    design.realize_registers(&ctx.graph);
+
+    // Post-PnR pipelining.
+    let postpnr_report = cfg.postpnr.as_ref().map(|p| postpnr::postpnr_pipelining(&mut design, &ctx.graph, p));
+
+    // Round-2 schedule with post-pipelining latencies (§V-F).
+    let sched2 = reschedule(&design.dfg, &sched1);
+
+    let sta = analyze(&design, &ctx.graph);
+    Ok(Compiled {
+        design,
+        sta,
+        schedule: sched2,
+        map_report,
+        pes_pipelined,
+        bdm_regs,
+        bcast_buffers,
+        postpnr: postpnr_report,
+        dup: None,
+    })
+}
+
+/// Compile with low unrolling duplication (§V-E): PnR a low-unroll variant
+/// of the application in a narrow region and account the full-array
+/// throughput. `builder(w, h, unroll)` must build the application at any
+/// unrolling.
+pub fn compile_with_dup(
+    builder: &dyn Fn(u64, u64, u64) -> App,
+    w: u64,
+    h: u64,
+    unroll: u64,
+    ctx: &CompileCtx,
+    cfg: &PipelineConfig,
+    seed: u64,
+) -> Result<Compiled, CompileError> {
+    // Size the region from a single lane. Applications whose unrolled form
+    // already fills the array have no duplication headroom (§V-E applies
+    // to apps where the placer can solve a smaller problem); fall back to
+    // the direct compile.
+    let lane = builder(w / unroll, h, 1);
+    let Some(plan) = unroll::plan_duplication(&lane.dfg, unroll, &ctx.arch) else {
+        let app = builder(w, h, unroll);
+        return compile_inner(&app, ctx, cfg, seed, None);
+    };
+    let k = plan.lanes_per_copy;
+    let sub = builder(w * k / unroll, h, k);
+    let region = Some(unroll::region_of(&plan, &ctx.arch));
+    let mut compiled = compile_inner(&sub, ctx, cfg, seed, region)?;
+    // Full-array schedule: the stamped copies together provide the
+    // original unrolling over the original frame (same throughput
+    // accounting as the direct compile — §V-E changes *how* the unroll is
+    // placed, not how much work the frame is).
+    let full = crate::schedule::WorkloadShape {
+        frame_w: w,
+        frame_h: h,
+        unroll,
+        time_mult: sub.shape.time_mult,
+    };
+    let s1 = schedule(&compiled.design.dfg, &full);
+    compiled.schedule = s1;
+    compiled.dup = Some(plan);
+    Ok(compiled)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_improves_fmax_monotonically_ish() {
+        // The headline behaviour: each Fig. 7 step should not hurt, and
+        // the full ladder must be dramatically better than unpipelined.
+        let ctx = CompileCtx::paper();
+        let app = crate::apps::dense::gaussian(64, 64, 2);
+        let mut last = 0.0;
+        let mut first = 0.0;
+        for (name, cfg) in PipelineConfig::ladder().into_iter().take(5) {
+            // Hardened flush, as in the paper's Fig. 7 experiments.
+            let cfg = PipelineConfig { hardened_flush: true, ..cfg };
+            let c = compile(&app, &ctx, &cfg, 3).unwrap();
+            if name == "unpipelined" {
+                first = c.fmax_mhz();
+            }
+            last = c.fmax_mhz();
+        }
+        assert!(last > first * 2.5, "ladder {first} -> {last}");
+    }
+
+    #[test]
+    fn full_config_close_to_paper_speedups() {
+        let ctx = CompileCtx::paper();
+        let app = crate::apps::dense::gaussian(64, 64, 2);
+        let unpip = compile(&app, &ctx, &PipelineConfig::none(), 3).unwrap();
+        let pip_cfg = PipelineConfig { hardened_flush: true, ..PipelineConfig::with_postpnr() };
+        let pip = compile(&app, &ctx, &pip_cfg, 3).unwrap();
+        let speedup = pip.fmax_mhz() / unpip.fmax_mhz();
+        // Paper: 7-34x lower critical path on dense apps (full scale).
+        // Small frames cap the gain; require at least 3x here.
+        assert!(speedup > 3.0, "speedup {speedup}");
+        // Schedule tracks the new latency.
+        assert!(pip.schedule.fill_latency >= unpip.schedule.fill_latency);
+    }
+
+    #[test]
+    fn compile_with_dup_produces_plan() {
+        let ctx = CompileCtx::paper();
+        let c = compile_with_dup(
+            &|w, h, u| crate::apps::dense::gaussian(w, h, u),
+            256,
+            64,
+            8,
+            &ctx,
+            &PipelineConfig::with_postpnr(),
+            5,
+        )
+        .unwrap();
+        let plan = c.dup.as_ref().unwrap();
+        assert!(plan.copies * plan.lanes_per_copy as usize >= 8);
+        // Full throughput accounted: steady cycles reflect total unroll.
+        assert_eq!(
+            c.schedule.shape.unroll,
+            plan.lanes_per_copy * plan.copies as u64
+        );
+    }
+
+    #[test]
+    fn sparse_compile_all_ladder_steps() {
+        let ctx = CompileCtx::paper();
+        let app = crate::apps::sparse::vec_elemadd(1024, 0.2);
+        let mut periods = Vec::new();
+        for (_, cfg) in PipelineConfig::sparse_ladder() {
+            let c = compile(&app, &ctx, &cfg, 11).unwrap();
+            periods.push(c.sta.period_ps);
+        }
+        // Final (postpnr) must beat the first (compute-only).
+        assert!(
+            periods.last().unwrap() < periods.first().unwrap(),
+            "{periods:?}"
+        );
+    }
+
+    #[test]
+    fn hardened_flush_config_removes_flush_net() {
+        let ctx = CompileCtx::paper();
+        let app = crate::apps::dense::gaussian(64, 64, 2);
+        let c = compile(&app, &ctx, &PipelineConfig::full(), 3).unwrap();
+        assert!(!c.design.has_routed_flush());
+    }
+}

@@ -1,0 +1,305 @@
+//! Post-place-and-route pipelining (paper §V-D, Fig. 5).
+//!
+//! After PnR we know exactly where every net is routed. This pass
+//! iteratively: (1) runs application STA, (2) picks the critical segment,
+//! (3) enables the switch-box pipelining register nearest the middle of
+//! that segment, (4) updates the logical per-edge register counts of every
+//! DFG edge the new register delays, (5) branch-delay-matches the graph and
+//! re-realizes the balancing registers. It stops when the critical segment
+//! no longer crosses breakable interconnect, when an iteration fails to
+//! improve the clock period, or when the iteration cap is reached.
+//!
+//! For sparse applications the same loop applies, but the register becomes
+//! a FIFO stage covering the data/valid/ready triple (§VII): the companion
+//! nets are registered at the geometrically matching hop, and no branch
+//! delay matching is needed (the interface is elastic).
+
+
+use crate::arch::canal::{InterconnectGraph, NodeId as RrgNode, NodeKind};
+use crate::dfg::ir::EdgeId;
+use crate::pnr::RoutedDesign;
+use crate::timing::sta::analyze;
+
+use super::bdm::branch_delay_match;
+
+/// Post-PnR pipelining knobs.
+#[derive(Debug, Clone)]
+pub struct PostPnrParams {
+    /// Iteration cap.
+    pub max_iters: usize,
+    /// Stop when relative period improvement falls below this for an
+    /// iteration (the move is rolled back).
+    pub min_gain: f64,
+}
+
+impl Default for PostPnrParams {
+    fn default() -> Self {
+        PostPnrParams { max_iters: 200, min_gain: 1e-4 }
+    }
+}
+
+/// Result of the pass.
+#[derive(Debug, Clone)]
+pub struct PostPnrReport {
+    pub iters: usize,
+    pub regs_enabled: usize,
+    pub period_before_ps: f64,
+    pub period_after_ps: f64,
+}
+
+/// Map a DFG edge to the sinks its route shares a node with.
+fn edges_through_node(d: &RoutedDesign, node: RrgNode) -> Vec<EdgeId> {
+    let mut out = Vec::new();
+    for ei in 0..d.dfg.edges.len() {
+        if let Some(path) = d.edge_path(ei as EdgeId) {
+            if path.contains(&node) {
+                out.push(ei as EdgeId);
+            }
+        }
+    }
+    out
+}
+
+/// Find which net (and kind) a route node belongs to.
+fn owning_net(d: &RoutedDesign, node: RrgNode) -> Option<usize> {
+    for (ni, r) in d.routes.iter().enumerate() {
+        if r.sink_paths.iter().any(|p| p.contains(&node)) {
+            return Some(ni);
+        }
+    }
+    None
+}
+
+/// For a companion (valid/ready) net node choice, find the geometrically
+/// matching hop index on a path.
+fn middle_unregistered_sbout(
+    d: &RoutedDesign,
+    graph: &InterconnectGraph,
+    nodes: &[RrgNode],
+) -> Option<RrgNode> {
+    let cands: Vec<RrgNode> = nodes
+        .iter()
+        .copied()
+        .filter(|&n| {
+            matches!(graph.decode(n).kind, NodeKind::SbOut { .. }) && !d.sb_regs.contains(&n)
+        })
+        .collect();
+    if cands.is_empty() {
+        None
+    } else {
+        Some(cands[cands.len() / 2])
+    }
+}
+
+/// Run post-PnR pipelining on a dense (statically scheduled) design.
+pub fn postpnr_pipelining(
+    d: &mut RoutedDesign,
+    graph: &InterconnectGraph,
+    p: &PostPnrParams,
+) -> PostPnrReport {
+    let initial = analyze(d, graph);
+    let mut best_period = initial.period_ps;
+    let mut regs_enabled = 0usize;
+    let mut iters = 0usize;
+
+    while iters < p.max_iters {
+        iters += 1;
+        let cp = analyze(d, graph);
+        let Some(target) = middle_unregistered_sbout(d, graph, &cp.segment.nodes) else {
+            break; // core-internal or unbreakable segment
+        };
+        // The flush broadcast must reach every destination on the same
+        // cycle; it cannot be pipelined in the interconnect (that is the
+        // §VI motivation for hardening it). If it has become the critical
+        // path, software pipelining is done.
+        if let Some(ni) = owning_net(d, target) {
+            if d.nets[ni].kind == crate::pnr::netlist::NetKind::Flush {
+                break;
+            }
+        }
+
+        // Snapshot for rollback.
+        let snap_regs: Vec<u32> = d.dfg.edges.iter().map(|e| e.regs).collect();
+        let snap_fifos: Vec<u32> = d.dfg.edges.iter().map(|e| e.fifos).collect();
+        let snap_sb = d.sb_regs.clone();
+        let snap_pin = d.pinned_regs.clone();
+        let snap_rf = d.rf_delay.clone();
+
+        let sparse = d.is_sparse_app();
+        if sparse {
+            enable_fifo_break(d, graph, target);
+        } else {
+            enable_register_break(d, graph, target);
+        }
+
+        let after = analyze(d, graph);
+        if after.period_ps < best_period * (1.0 - p.min_gain) {
+            best_period = after.period_ps;
+            regs_enabled += 1;
+        } else {
+            // Roll back and stop: the critical path can no longer be
+            // improved by breaking interconnect.
+            for (ei, r) in snap_regs.into_iter().enumerate() {
+                d.dfg.edges[ei].regs = r;
+            }
+            for (ei, f) in snap_fifos.into_iter().enumerate() {
+                d.dfg.edges[ei].fifos = f;
+            }
+            d.sb_regs = snap_sb;
+            d.pinned_regs = snap_pin;
+            d.rf_delay = snap_rf;
+            break;
+        }
+    }
+
+    PostPnrReport {
+        iters,
+        regs_enabled,
+        period_before_ps: initial.period_ps,
+        period_after_ps: best_period,
+    }
+}
+
+/// Dense break: enable + pin `target`, bump logical regs of delayed edges,
+/// BDM, re-realize.
+fn enable_register_break(d: &mut RoutedDesign, graph: &InterconnectGraph, target: RrgNode) {
+    d.sb_regs.insert(target);
+    d.pinned_regs.insert(target);
+    for ei in edges_through_node(d, target) {
+        d.dfg.edge_mut(ei).regs += 1;
+    }
+    branch_delay_match(&mut d.dfg);
+    d.realize_registers(graph);
+}
+
+/// Sparse break: a FIFO stage across the data/valid/ready triple (§VII).
+/// The data hop gets a pinned register; each companion net gets a pinned
+/// register at its geometrically matching hop; affected edges count a FIFO
+/// stage (elastic — no BDM).
+fn enable_fifo_break(d: &mut RoutedDesign, graph: &InterconnectGraph, target: RrgNode) {
+    // The target may already be on a companion net; normalize to the
+    // owning net.
+    let Some(ni) = owning_net(d, target) else {
+        return;
+    };
+    // Resolve the data net of the triple.
+    let data_ni = d.nets[ni].companion_of.unwrap_or(ni);
+    d.sb_regs.insert(target);
+    d.pinned_regs.insert(target);
+    // Register the other members of the triple mid-path.
+    let triple: Vec<usize> = d
+        .nets
+        .iter()
+        .filter(|n| {
+            n.id != ni && (n.id == data_ni || n.companion_of == Some(data_ni))
+        })
+        .map(|n| n.id)
+        .collect();
+    let mut to_pin: Vec<RrgNode> = Vec::new();
+    for tni in triple {
+        for path in &d.routes[tni].sink_paths {
+            if let Some(n) = middle_unregistered_sbout(d, graph, path) {
+                to_pin.push(n);
+            }
+        }
+    }
+    for n in to_pin {
+        d.sb_regs.insert(n);
+        d.pinned_regs.insert(n);
+    }
+    // FIFO stage on the data edges (latency bookkeeping; elastic).
+    let edges = d.nets[data_ni].edges.clone();
+    for ei in edges {
+        d.dfg.edge_mut(ei).fifos += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::delay::{DelayLib, DelayModelParams};
+    use crate::arch::params::ArchParams;
+    use crate::pipeline::compute::compute_pipelining;
+    use crate::pnr::{place_and_route, PlaceParams, RouteParams};
+
+    fn build(app: &crate::apps::App, seed: u64) -> (RoutedDesign, InterconnectGraph) {
+        // Post-PnR evaluation in the paper has the hardware flush
+        // hardening applied (§VIII-B); the routed flush broadcast is
+        // unbreakable and would otherwise cap these small test apps.
+        let arch = crate::pipeline::flush::harden(&ArchParams::paper());
+        let lib = DelayLib::generate(&arch, &DelayModelParams::default());
+        let mut graph = InterconnectGraph::build(&arch);
+        graph.annotate_delays(&lib);
+        let d = place_and_route(
+            &app.dfg,
+            &arch,
+            &graph,
+            &lib,
+            &PlaceParams::baseline(seed),
+            &RouteParams::default(),
+        )
+        .unwrap();
+        (d, graph)
+    }
+
+    #[test]
+    fn postpnr_improves_compute_pipelined_design() {
+        let mut app = crate::apps::dense::gaussian(64, 64, 1);
+        compute_pipelining(&mut app.dfg);
+        let (mut d, graph) = build(&app, 3);
+        let rep = postpnr_pipelining(&mut d, &graph, &PostPnrParams::default());
+        assert!(
+            rep.period_after_ps < rep.period_before_ps,
+            "no improvement: {} -> {}",
+            rep.period_before_ps,
+            rep.period_after_ps
+        );
+        assert!(rep.regs_enabled > 0);
+        // Registers stay consistent and balanced.
+        d.registers_consistent().unwrap();
+        assert!(crate::pipeline::bdm::check_balanced(&d.dfg).is_empty());
+    }
+
+    #[test]
+    fn postpnr_monotone_never_worse() {
+        let mut app = crate::apps::dense::unsharp(64, 64, 1);
+        compute_pipelining(&mut app.dfg);
+        let (mut d, graph) = build(&app, 5);
+        let before = analyze(&d, &graph).period_ps;
+        let rep = postpnr_pipelining(&mut d, &graph, &PostPnrParams::default());
+        let after = analyze(&d, &graph).period_ps;
+        assert!(after <= before, "rollback failed: {before} -> {after}");
+        assert!((after - rep.period_after_ps).abs() < 1e-6);
+    }
+
+    #[test]
+    fn postpnr_respects_iteration_cap() {
+        let mut app = crate::apps::dense::harris(64, 64, 1);
+        compute_pipelining(&mut app.dfg);
+        let (mut d, graph) = build(&app, 7);
+        let rep = postpnr_pipelining(
+            &mut d,
+            &graph,
+            &PostPnrParams { max_iters: 3, ..Default::default() },
+        );
+        assert!(rep.iters <= 3);
+    }
+
+    #[test]
+    fn sparse_postpnr_uses_fifos_not_bdm_regs() {
+        let app = crate::apps::sparse::vec_elemadd(1024, 0.2);
+        let (mut d, graph) = build(&app, 9);
+        let before_fifos: u64 = d.dfg.edges.iter().map(|e| e.fifos as u64).sum();
+        let rep = postpnr_pipelining(&mut d, &graph, &PostPnrParams::default());
+        let after_fifos: u64 = d.dfg.edges.iter().map(|e| e.fifos as u64).sum();
+        if rep.regs_enabled > 0 {
+            assert!(after_fifos > before_fifos, "sparse breaks must add FIFO stages");
+        }
+        // No balancing registers were added to sparse edges.
+        for e in &d.dfg.edges {
+            if d.dfg.node(e.dst).is_sparse() {
+                assert_eq!(e.regs, 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Low unrolling duplication (paper §V-E).
+//!
+//! Unrolled applications give the placer a large, hard problem. This pass
+//! instead places-and-routes a *low-unroll* version of the application in a
+//! narrow column region of the array, then duplicates the resulting tile
+//! and interconnect configuration across the array — "unrolling the
+//! application in the exact same way every time". The placer solves a much
+//! smaller problem (shorter routes, shorter critical path) while the full
+//! array still produces `unroll` pixels per cycle.
+//!
+//! Duplication is horizontal in column strides that are a multiple of the
+//! MEM-column period, so every feature lands on a tile of the same kind;
+//! the duplicated regions are electrically identical, so the critical path
+//! of the full array equals the critical path of the region design (clock
+//! skew is already budgeted globally by the STA margin).
+
+use crate::arch::bitstream::{Bitstream, ConfigSpace};
+use crate::arch::params::{ArchParams, TileCoord};
+use crate::dfg::ir::Dfg;
+use crate::schedule::WorkloadShape;
+
+/// Outcome of region sizing.
+#[derive(Debug, Clone)]
+pub struct DupPlan {
+    /// Columns per region (multiple of `mem_col_period`).
+    pub region_cols: usize,
+    /// Number of stamped copies across the array.
+    pub copies: usize,
+    /// Lanes built inside one region.
+    pub lanes_per_copy: u64,
+}
+
+/// Plan a duplication: find the narrowest column region (a multiple of the
+/// MEM period) that fits one or more lanes such that
+/// `copies * lanes_per_copy >= unroll`. Returns `None` if even the full
+/// array cannot host a single lane group.
+pub fn plan_duplication(lane_dfg: &Dfg, unroll: u64, arch: &ArchParams) -> Option<DupPlan> {
+    let (lane_pe, lane_mem, lane_io) = lane_dfg.tile_demand();
+    let period = arch.mem_col_period;
+    for region_cols in (period..=arch.cols).step_by(period) {
+        let copies = arch.cols / region_cols;
+        let lanes_per_copy = unroll.div_ceil(copies as u64);
+        // Region capacity.
+        let mem_cols = (0..region_cols).filter(|x| (x + 1) % period == 0).count();
+        let pe_cap = (region_cols - mem_cols) * arch.rows;
+        let mem_cap = mem_cols * arch.rows;
+        let io_cap = region_cols * 2;
+        // Demand for `lanes_per_copy` lanes (flush source shared; count it
+        // once via ceiling on IO).
+        let fits = lane_pe * lanes_per_copy as usize <= pe_cap * 85 / 100
+            && lane_mem * lanes_per_copy as usize <= mem_cap
+            && lane_io * lanes_per_copy as usize + 1 <= io_cap;
+        if fits {
+            return Some(DupPlan {
+                region_cols,
+                copies,
+                lanes_per_copy,
+            });
+        }
+    }
+    None
+}
+
+/// The placement region for the duplication plan.
+pub fn region_of(plan: &DupPlan, arch: &ArchParams) -> (TileCoord, (usize, usize)) {
+    (TileCoord::new(0, 1), (plan.region_cols, arch.rows))
+}
+
+/// Stamp a region's configuration across the array (bitstream-level
+/// duplication). Returns the number of copies written (including the
+/// original).
+pub fn stamp_bitstream(
+    bs: &mut Bitstream,
+    plan: &DupPlan,
+    arch: &ArchParams,
+    cs: &ConfigSpace,
+) -> usize {
+    for copy in 1..plan.copies {
+        let dst = TileCoord::new(copy * plan.region_cols, 0);
+        bs.duplicate_region(
+            arch,
+            cs,
+            TileCoord::new(0, 0),
+            (plan.region_cols, arch.grid_rows()),
+            dst,
+        );
+    }
+    plan.copies
+}
+
+/// The workload shape of the full duplicated application given the region
+/// shape (throughput scales with the stamped copies).
+pub fn full_shape(region_shape: &WorkloadShape, plan: &DupPlan) -> WorkloadShape {
+    WorkloadShape {
+        frame_w: region_shape.frame_w,
+        frame_h: region_shape.frame_h,
+        unroll: region_shape.unroll * plan.copies as u64,
+        time_mult: region_shape.time_mult,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_16_plans_compactly() {
+        let arch = ArchParams::paper();
+        let lane = crate::apps::dense::gaussian(64, 64, 1);
+        let plan = plan_duplication(&lane.dfg, 16, &arch).expect("plan");
+        assert_eq!(plan.region_cols % arch.mem_col_period, 0);
+        assert!(plan.copies >= 2, "{plan:?}");
+        assert!(plan.copies * plan.lanes_per_copy as usize >= 16);
+        // The region is much narrower than the array.
+        assert!(plan.region_cols <= arch.cols / 2);
+    }
+
+    #[test]
+    fn oversized_lane_returns_none_or_full_width() {
+        let arch = ArchParams::paper();
+        // harris with unroll 4 in one region: heavy; plan must still cover
+        // demand or bail out.
+        let lane = crate::apps::dense::harris(64, 64, 1);
+        if let Some(plan) = plan_duplication(&lane.dfg, 4, &arch) {
+            let (pe, _, _) = lane.dfg.tile_demand();
+            let mem_cols =
+                (0..plan.region_cols).filter(|x| (x + 1) % arch.mem_col_period == 0).count();
+            let pe_cap = (plan.region_cols - mem_cols) * arch.rows;
+            assert!(pe * plan.lanes_per_copy as usize <= pe_cap);
+        }
+    }
+
+    #[test]
+    fn stamping_duplicates_all_columns() {
+        let arch = ArchParams::paper();
+        let cs = ConfigSpace::new(&arch);
+        let mut bs = Bitstream::new();
+        use crate::arch::bitstream::Feature;
+        // Mark one PE in the region.
+        bs.set(&arch, &cs, TileCoord::new(1, 2), Feature::PeOp, 9);
+        let plan = DupPlan { region_cols: 8, copies: 4, lanes_per_copy: 1 };
+        let n = stamp_bitstream(&mut bs, &plan, &arch, &cs);
+        assert_eq!(n, 4);
+        for copy in 0..4 {
+            assert_eq!(
+                bs.get(&arch, &cs, TileCoord::new(1 + 8 * copy, 2), Feature::PeOp),
+                9,
+                "copy {copy}"
+            );
+        }
+    }
+
+    #[test]
+    fn full_shape_scales_unroll() {
+        let shape = WorkloadShape::stencil(640, 480, 2);
+        let plan = DupPlan { region_cols: 8, copies: 4, lanes_per_copy: 2 };
+        let f = full_shape(&shape, &plan);
+        assert_eq!(f.unroll, 8);
+        assert_eq!(f.steady_cycles() * 4, shape.steady_cycles());
+    }
+}

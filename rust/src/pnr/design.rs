@@ -1,0 +1,428 @@
+//! The routed design: placement + route trees + pipelining state.
+//!
+//! This is the object everything downstream consumes: application STA
+//! (`timing::sta`), the post-PnR pipelining pass, the bitstream encoder and
+//! the fabric simulator.
+//!
+//! ## Register realization
+//!
+//! The pipelining passes decide *logical* per-edge register counts
+//! (`Dfg::Edge::regs`, maintained balanced by branch delay matching).
+//! [`RoutedDesign::realize_registers`] maps those logical registers onto
+//! physical resources:
+//!
+//! * switch-box output pipelining registers along the edge's routed path
+//!   (every SbOut has one, §V-D), chosen near the middle of the
+//!   unregistered span so they actually break long wires;
+//! * register-file variable-length shift registers at the sink tile for
+//!   any overflow (§V-A, Fig. 4 right — "we utilize register files in PE
+//!   tiles to act as variable length shift registers").
+//!
+//! On a route *tree*, a switch-box register on a shared segment delays
+//! every downstream sink; the realizer only picks a node when every sink it
+//! affects still needs a register there, so the logical per-edge counts are
+//! honoured exactly.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::arch::canal::{InterconnectGraph, NodeId as RrgNode, NodeKind};
+use crate::arch::delay::DelayLib;
+use crate::arch::params::ArchParams;
+use crate::dfg::ir::{Dfg, EdgeId, Op};
+
+use super::netlist::{Net, NetKind};
+use super::place::Placement;
+use super::route::NetRoute;
+
+/// A fully placed-and-routed application with pipelining state.
+pub struct RoutedDesign {
+    pub dfg: Dfg,
+    pub nets: Vec<Net>,
+    pub placement: Placement,
+    pub routes: Vec<NetRoute>,
+    pub arch: ArchParams,
+    pub lib: DelayLib,
+    /// Enabled switch-box output pipelining registers.
+    pub sb_regs: HashSet<RrgNode>,
+    /// Registers that must not be moved by re-realization (enabled directly
+    /// by post-PnR pipelining to break a specific path).
+    pub pinned_regs: HashSet<RrgNode>,
+    /// Register-file shift-register delay at the sink of an edge (cycles).
+    pub rf_delay: HashMap<EdgeId, u32>,
+    /// Per DFG edge: (net index, sink index within the net) for data/flush
+    /// nets. `None` for edges not routed (hardened flush).
+    edge_net: Vec<Option<(usize, usize)>>,
+}
+
+impl RoutedDesign {
+    pub fn new(
+        dfg: Dfg,
+        nets: Vec<Net>,
+        placement: Placement,
+        routes: Vec<NetRoute>,
+        arch: ArchParams,
+        lib: DelayLib,
+    ) -> RoutedDesign {
+        let mut edge_net = vec![None; dfg.edges.len()];
+        for net in &nets {
+            if matches!(net.kind, NetKind::Valid | NetKind::Ready) {
+                continue; // companions share their data net's edges
+            }
+            for (sink_idx, &eid) in net.edges.iter().enumerate() {
+                edge_net[eid as usize] = Some((net.id, sink_idx));
+            }
+        }
+        RoutedDesign {
+            dfg,
+            nets,
+            placement,
+            routes,
+            arch,
+            lib,
+            sb_regs: HashSet::new(),
+            pinned_regs: HashSet::new(),
+            rf_delay: HashMap::new(),
+            edge_net,
+        }
+    }
+
+    /// RRG path realizing a DFG edge (source TileOut .. sink CbIn), if it
+    /// was routed.
+    pub fn edge_path(&self, e: EdgeId) -> Option<&[RrgNode]> {
+        let (net, sink) = self.edge_net[e as usize]?;
+        Some(&self.routes[net].sink_paths[sink])
+    }
+
+    /// The (net, sink index) realizing an edge.
+    pub fn edge_net_sink(&self, e: EdgeId) -> Option<(usize, usize)> {
+        self.edge_net[e as usize]
+    }
+
+    /// Registers currently realized on an edge: enabled SbOut regs on its
+    /// path plus its register-file delay.
+    pub fn physical_regs_on_edge(&self, e: EdgeId) -> u32 {
+        let from_sb = self
+            .edge_path(e)
+            .map(|p| p.iter().filter(|n| self.sb_regs.contains(n)).count() as u32)
+            .unwrap_or(0);
+        from_sb + self.rf_delay.get(&e).copied().unwrap_or(0)
+    }
+
+    /// SbOut nodes on an edge path that could take a register.
+    pub fn sbout_nodes_on_edge(&self, e: EdgeId, graph: &InterconnectGraph) -> Vec<RrgNode> {
+        self.edge_path(e)
+            .map(|p| {
+                p.iter()
+                    .copied()
+                    .filter(|&n| matches!(graph.decode(n).kind, NodeKind::SbOut { .. }))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Realize the logical `Dfg::Edge::regs` counts for every routed net.
+    /// Pinned registers (post-PnR pipelining) are preserved; all other SB
+    /// registers and RF delays are reassigned from scratch.
+    pub fn realize_registers(&mut self, graph: &InterconnectGraph) {
+        self.sb_regs.retain(|n| self.pinned_regs.contains(n));
+        self.rf_delay.clear();
+        let net_ids: Vec<usize> = self
+            .nets
+            .iter()
+            .filter(|n| matches!(n.kind, NetKind::Data | NetKind::Flush))
+            .map(|n| n.id)
+            .collect();
+        for ni in net_ids {
+            self.realize_net(ni, graph);
+        }
+    }
+
+    /// Realize registers for one net (see module docs).
+    fn realize_net(&mut self, ni: usize, graph: &InterconnectGraph) {
+        let net = &self.nets[ni];
+        let edges = net.edges.clone();
+        if edges.is_empty() {
+            return;
+        }
+        // Remaining targets per sink, minus pinned regs already on path.
+        let mut remaining: Vec<i64> = edges
+            .iter()
+            .map(|&e| {
+                let target = self.dfg.edge(e).regs as i64;
+                let pinned_on_path = self
+                    .edge_path(e)
+                    .map(|p| p.iter().filter(|n| self.pinned_regs.contains(n)).count() as i64)
+                    .unwrap_or(0);
+                target - pinned_on_path
+            })
+            .collect();
+        // Negative remaining (pinned regs exceed target) means branch delay
+        // matching has not yet absorbed a pinned register; clamp here — the
+        // post-realization `registers_consistent` check catches any real
+        // mismatch in the full flow.
+        for r in &mut remaining {
+            *r = (*r).max(0);
+        }
+
+        // SbOut candidates per sink path (excluding already enabled).
+        let paths: Vec<Vec<RrgNode>> = edges
+            .iter()
+            .map(|&e| self.sbout_nodes_on_edge(e, graph))
+            .collect();
+        // Which sinks each node affects.
+        let mut affects: HashMap<RrgNode, Vec<usize>> = HashMap::new();
+        for (k, p) in paths.iter().enumerate() {
+            for &n in p {
+                affects.entry(n).or_default().push(k);
+            }
+        }
+
+        loop {
+            if remaining.iter().all(|&r| r <= 0) {
+                break;
+            }
+            // Candidate nodes: unregistered, and every affected sink still
+            // needs a register.
+            let mut best: Option<(RrgNode, f64)> = None;
+            for (&node, aff) in &affects {
+                if self.sb_regs.contains(&node) {
+                    continue;
+                }
+                if !aff.iter().all(|&k| remaining[k] > 0) {
+                    continue;
+                }
+                // Score: prefer nodes covering many needy sinks, positioned
+                // near the middle of the longest affected unregistered span.
+                let coverage = aff.len() as f64;
+                let mid_score: f64 = aff
+                    .iter()
+                    .map(|&k| {
+                        let p = &paths[k];
+                        let pos = p.iter().position(|&x| x == node).unwrap() as f64;
+                        let len = p.len().max(1) as f64;
+                        1.0 - ((pos / len) - 0.5).abs()
+                    })
+                    .sum::<f64>()
+                    / coverage;
+                let score = coverage * 10.0 + mid_score;
+                if best.map(|(_, s)| score > s).unwrap_or(true) {
+                    best = Some((node, score));
+                }
+            }
+            match best {
+                Some((node, _)) => {
+                    self.sb_regs.insert(node);
+                    for &k in &affects[&node] {
+                        remaining[k] -= 1;
+                    }
+                }
+                None => {
+                    // No usable SB register: spill the rest into register
+                    // files at each sink.
+                    for (k, &e) in edges.iter().enumerate() {
+                        if remaining[k] > 0 {
+                            *self.rf_delay.entry(e).or_insert(0) += remaining[k] as u32;
+                            remaining[k] = 0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Check that physical registers match the logical per-edge counts
+    /// (validity invariant after `realize_registers`).
+    pub fn registers_consistent(&self) -> Result<(), String> {
+        for (ei, e) in self.dfg.edges.iter().enumerate() {
+            if self.edge_net[ei].is_none() {
+                continue;
+            }
+            let phys = self.physical_regs_on_edge(ei as EdgeId);
+            // A FIFO stage on a sparse edge is realized as one pinned SB
+            // register on the data path (plus companions), so the expected
+            // physical count is regs + fifos.
+            let expect = e.regs + e.fifos;
+            if phys != expect {
+                return Err(format!(
+                    "edge {ei}: logical {expect} regs (incl. fifos), physical {phys}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total pipelining resources in use: (SB registers, RF delay words,
+    /// FIFO stages).
+    pub fn pipelining_resources(&self) -> (usize, u64, u64) {
+        let rf: u64 = self.rf_delay.values().map(|&v| v as u64).sum();
+        let fifos: u64 = self.dfg.edges.iter().map(|e| e.fifos as u64).sum();
+        (self.sb_regs.len(), rf, fifos)
+    }
+
+    /// Number of distinct tiles used only for routing (pass-throughs):
+    /// tiles crossed by some route but hosting no node.
+    pub fn passthrough_tiles(&self, graph: &InterconnectGraph) -> usize {
+        let mut hosting: HashSet<crate::arch::params::TileCoord> = HashSet::new();
+        for i in 0..self.dfg.nodes.len() {
+            hosting.insert(self.placement.pos[i]);
+        }
+        let mut crossed = HashSet::new();
+        for r in &self.routes {
+            for n in r.nodes() {
+                crossed.insert(graph.decode(n).tile);
+            }
+        }
+        crossed.difference(&hosting).count()
+    }
+
+    /// Whether this design still carries a routed flush net (false when the
+    /// architecture hardens it).
+    pub fn has_routed_flush(&self) -> bool {
+        self.nets.iter().any(|n| n.kind == NetKind::Flush)
+    }
+
+    /// Count nodes by sparse/dense for reporting.
+    pub fn is_sparse_app(&self) -> bool {
+        self.dfg.nodes.iter().any(|n| n.is_sparse())
+    }
+
+    /// The IO lane -> node mapping (for driving simulation).
+    pub fn io_nodes(&self) -> (HashMap<u16, u32>, HashMap<u16, u32>) {
+        let mut ins = HashMap::new();
+        let mut outs = HashMap::new();
+        for (i, n) in self.dfg.nodes.iter().enumerate() {
+            match n.op {
+                Op::Input { lane } => {
+                    ins.insert(lane, i as u32);
+                }
+                Op::Output { lane, .. } => {
+                    outs.insert(lane, i as u32);
+                }
+                _ => {}
+            }
+        }
+        (ins, outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::delay::DelayModelParams;
+    use crate::pnr::{place_and_route, PlaceParams, RouteParams};
+
+    fn build(app: &crate::apps::App) -> (RoutedDesign, InterconnectGraph) {
+        let arch = ArchParams::paper();
+        let lib = DelayLib::generate(&arch, &DelayModelParams::default());
+        let mut graph = InterconnectGraph::build(&arch);
+        graph.annotate_delays(&lib);
+        let d = place_and_route(
+            &app.dfg,
+            &arch,
+            &graph,
+            &lib,
+            &PlaceParams::baseline(3),
+            &RouteParams::default(),
+        )
+        .unwrap();
+        (d, graph)
+    }
+
+    #[test]
+    fn edge_paths_exist_for_all_routed_edges() {
+        let app = crate::apps::dense::gaussian(64, 64, 1);
+        let (d, _) = build(&app);
+        for (ei, _e) in d.dfg.edges.iter().enumerate() {
+            assert!(d.edge_path(ei as EdgeId).is_some(), "edge {ei} unrouted");
+        }
+    }
+
+    #[test]
+    fn realize_zero_regs_is_empty() {
+        let app = crate::apps::dense::gaussian(64, 64, 1);
+        let (mut d, graph) = build(&app);
+        d.realize_registers(&graph);
+        assert!(d.sb_regs.is_empty());
+        assert!(d.rf_delay.is_empty());
+        d.registers_consistent().unwrap();
+    }
+
+    #[test]
+    fn realize_matches_logical_counts() {
+        let app = crate::apps::dense::unsharp(64, 64, 1);
+        let (mut d, graph) = build(&app);
+        // Assign a few logical registers manually (balanced or not — the
+        // realizer must honour per-edge counts exactly).
+        let nedges = d.dfg.edges.len();
+        for ei in 0..nedges {
+            let hops = d.sbout_nodes_on_edge(ei as EdgeId, &graph).len() as u32;
+            d.dfg.edge_mut(ei as EdgeId).regs = (ei as u32 % 3).min(hops + 5);
+        }
+        d.realize_registers(&graph);
+        d.registers_consistent().unwrap();
+    }
+
+    #[test]
+    fn realize_spills_to_regfiles_when_hops_exhausted() {
+        let app = crate::apps::dense::gaussian(64, 64, 1);
+        let (mut d, graph) = build(&app);
+        // Demand far more registers than any path has hops.
+        let e0 = 0 as EdgeId;
+        d.dfg.edge_mut(e0).regs = 64;
+        d.realize_registers(&graph);
+        d.registers_consistent().unwrap();
+        assert!(d.rf_delay.get(&e0).copied().unwrap_or(0) > 0);
+    }
+
+    #[test]
+    fn pinned_regs_survive_rerealization() {
+        let app = crate::apps::dense::gaussian(64, 64, 1);
+        let (mut d, graph) = build(&app);
+        // Pin a register on some edge's path; raise the logical count on
+        // every edge whose path crosses the pinned node (what BDM does in
+        // the real post-PnR flow).
+        let e0 = 0 as EdgeId;
+        let sbs = d.sbout_nodes_on_edge(e0, &graph);
+        assert!(!sbs.is_empty());
+        let pin = sbs[sbs.len() / 2];
+        d.sb_regs.insert(pin);
+        d.pinned_regs.insert(pin);
+        for ei in 0..d.dfg.edges.len() {
+            if d.edge_path(ei as EdgeId).map(|p| p.contains(&pin)).unwrap_or(false) {
+                d.dfg.edge_mut(ei as EdgeId).regs += 1;
+            }
+        }
+        d.realize_registers(&graph);
+        assert!(d.sb_regs.contains(&pin));
+        d.registers_consistent().unwrap();
+    }
+
+    #[test]
+    fn broadcast_net_shared_register_counts_for_all_sinks() {
+        let app = crate::apps::dense::resnet_small();
+        let (mut d, graph) = build(&app);
+        // Find a fanout>1 data net and add one logical register to every
+        // one of its edges — the realizer may satisfy them with shared
+        // prefix registers, and consistency must still hold.
+        let net = d
+            .nets
+            .iter()
+            .find(|n| n.kind == NetKind::Data && n.fanout() > 1)
+            .expect("resnet has broadcast nets")
+            .clone();
+        for &e in &net.edges {
+            d.dfg.edge_mut(e).regs = 1;
+        }
+        d.realize_registers(&graph);
+        d.registers_consistent().unwrap();
+    }
+
+    #[test]
+    fn passthrough_tiles_counted() {
+        let app = crate::apps::dense::gaussian(64, 64, 1);
+        let (d, graph) = build(&app);
+        // Some routing crosses tiles that host nothing.
+        let pt = d.passthrough_tiles(&graph);
+        assert!(pt < d.arch.num_tiles());
+    }
+}

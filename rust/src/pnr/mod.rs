@@ -1,0 +1,48 @@
+//! Place and route.
+//!
+//! * [`netlist`] — net extraction from the DFG, including the sparse
+//!   valid/ready companion nets (§VII: "If a piece of data is routed from
+//!   Tile A to Tile B, a valid signal will be routed in the exact same way
+//!   ... A ready signal will be routed in the same way but in the opposite
+//!   direction") and the flush broadcast net (§VI), which is omitted when
+//!   the architecture hardens it.
+//! * [`place`] — simulated-annealing detailed placement with the paper's
+//!   Eq. 1 cost: `Cost_net = (HPWL_net + gamma * Area_passthrough)^alpha`,
+//!   where `alpha` is Cascade's criticality exponent (§V-C).
+//! * [`route`] — PathFinder-style negotiated-congestion routing over the
+//!   Canal interconnect graph, producing per-net route trees.
+//! * [`design`] — the routed design: placement + route trees + enabled
+//!   pipelining registers; the object STA, the post-PnR pipelining pass,
+//!   the bitstream encoder and the fabric simulator all consume.
+
+pub mod netlist;
+pub mod place;
+pub mod route;
+pub mod design;
+
+pub use design::RoutedDesign;
+pub use netlist::{build_nets, Net, NetKind};
+pub use place::{place, PlaceParams, Placement};
+pub use route::{route, RouteError, RouteParams};
+
+use crate::arch::canal::InterconnectGraph;
+use crate::arch::delay::DelayLib;
+use crate::arch::params::ArchParams;
+use crate::dfg::ir::Dfg;
+
+/// Convenience: run placement and routing with the given knobs and return
+/// the routed design. The interconnect graph must already carry delays
+/// (`annotate_delays`).
+pub fn place_and_route(
+    dfg: &Dfg,
+    arch: &ArchParams,
+    graph: &InterconnectGraph,
+    lib: &DelayLib,
+    pp: &PlaceParams,
+    rp: &RouteParams,
+) -> Result<RoutedDesign, RouteError> {
+    let nets = build_nets(dfg, arch);
+    let placement = place(dfg, &nets, arch, pp);
+    let routes = route(dfg, &nets, &placement, arch, graph, rp)?;
+    Ok(RoutedDesign::new(dfg.clone(), nets, placement, routes, arch.clone(), lib.clone()))
+}

@@ -1,0 +1,238 @@
+//! Net extraction: DFG edges -> physical nets.
+//!
+//! One net per (driver node, layer). Sparse data edges additionally expand
+//! into a valid companion net (same direction, 1-bit layer) and one ready
+//! net per consumer (opposite direction). The flush broadcast becomes a
+//! high-fanout 1-bit net unless the architecture hardens it (§VI), in which
+//! case it is carried by the dedicated per-column network and never touches
+//! the configurable interconnect.
+
+use crate::arch::canal::Layer;
+use crate::arch::params::ArchParams;
+use crate::dfg::ir::{Dfg, EdgeId, NodeId, Op};
+
+/// Physical role of a net.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetKind {
+    /// 16-bit data (or 1-bit control data like a mux select).
+    Data,
+    /// Sparse valid companion (follows its data net exactly).
+    Valid,
+    /// Sparse ready companion (same endpoints, opposite direction).
+    Ready,
+    /// The flush broadcast (§VI).
+    Flush,
+}
+
+/// A physical net to place/route.
+#[derive(Debug, Clone)]
+pub struct Net {
+    pub id: usize,
+    pub kind: NetKind,
+    pub layer: Layer,
+    /// Driving DFG node.
+    pub src: NodeId,
+    /// Source TileOut port on `layer`.
+    pub src_port: u8,
+    /// (sink DFG node, CbIn port on `layer`) pairs.
+    pub sinks: Vec<(NodeId, u8)>,
+    /// DFG edges this net realizes (for Data nets; companions reference
+    /// the same edges).
+    pub edges: Vec<EdgeId>,
+    /// For Valid/Ready nets: the id of the Data net they accompany.
+    pub companion_of: Option<usize>,
+}
+
+impl Net {
+    pub fn fanout(&self) -> usize {
+        self.sinks.len()
+    }
+}
+
+/// Extract all nets from a DFG.
+pub fn build_nets(g: &Dfg, arch: &ArchParams) -> Vec<Net> {
+    let mut nets: Vec<Net> = Vec::new();
+
+    // Group edges by (src, layer).
+    use std::collections::BTreeMap;
+    let mut groups: BTreeMap<(NodeId, u8), Vec<EdgeId>> = BTreeMap::new();
+    for (ei, e) in g.edges.iter().enumerate() {
+        groups
+            .entry((e.src, e.layer.index() as u8))
+            .or_default()
+            .push(ei as EdgeId);
+    }
+
+    for ((src, layer_idx), edges) in groups {
+        let layer = if layer_idx == 0 { Layer::B16 } else { Layer::B1 };
+        let is_flush = matches!(g.node(src).op, Op::FlushSrc);
+        if is_flush && arch.hardened_flush {
+            // Hardened: distributed on the dedicated column network; not a
+            // routed net at all.
+            continue;
+        }
+        let kind = if is_flush { NetKind::Flush } else { NetKind::Data };
+        let sinks: Vec<(NodeId, u8)> = edges
+            .iter()
+            .map(|&ei| {
+                let e = g.edge(ei);
+                (e.dst, e.dst_port)
+            })
+            .collect();
+        let id = nets.len();
+        nets.push(Net {
+            id,
+            kind,
+            layer,
+            src,
+            src_port: 0,
+            sinks,
+            edges: edges.clone(),
+            companion_of: None,
+        });
+
+        // Sparse companions: a data edge between sparse endpoints carries
+        // valid (same direction) and ready (reverse).
+        let sparse_net = layer == Layer::B16
+            && (g.node(src).is_sparse()
+                || edges.iter().any(|&ei| g.node(g.edge(ei).dst).is_sparse()));
+        if sparse_net {
+            let data_id = id;
+            // Valid: same src/sinks on B1; CbIn B1 port = data port.
+            let vid = nets.len();
+            let vsinks: Vec<(NodeId, u8)> = edges
+                .iter()
+                .map(|&ei| {
+                    let e = g.edge(ei);
+                    (e.dst, e.dst_port)
+                })
+                .collect();
+            nets.push(Net {
+                id: vid,
+                kind: NetKind::Valid,
+                layer: Layer::B1,
+                src,
+                src_port: 0,
+                sinks: vsinks,
+                edges: edges.clone(),
+                companion_of: Some(data_id),
+            });
+            // Ready: one net per consumer, driven by the consumer
+            // (TileOut B1 port 1 + its in-port), sunk at the producer
+            // (CbIn B1 port 2 + sink index).
+            for (sink_idx, &ei) in edges.iter().enumerate() {
+                let e = g.edge(ei);
+                let rid = nets.len();
+                nets.push(Net {
+                    id: rid,
+                    kind: NetKind::Ready,
+                    layer: Layer::B1,
+                    src: e.dst,
+                    src_port: 1 + e.dst_port,
+                    sinks: vec![(src, 2 + sink_idx as u8)],
+                    edges: vec![ei],
+                    companion_of: Some(data_id),
+                });
+            }
+        }
+    }
+    nets
+}
+
+/// Statistics over a netlist.
+pub fn net_stats(nets: &[Net]) -> (usize, usize, usize) {
+    let data = nets.iter().filter(|n| n.kind == NetKind::Data).count();
+    let companions = nets
+        .iter()
+        .filter(|n| matches!(n.kind, NetKind::Valid | NetKind::Ready))
+        .count();
+    let max_fanout = nets.iter().map(|n| n.fanout()).max().unwrap_or(0);
+    (data, companions, max_fanout)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+
+    #[test]
+    fn dense_app_has_no_companions() {
+        let arch = ArchParams::paper();
+        let app = apps::dense::gaussian(64, 64, 1);
+        let nets = build_nets(&app.dfg, &arch);
+        assert!(nets.iter().all(|n| !matches!(n.kind, NetKind::Valid | NetKind::Ready)));
+        let flush_nets = nets.iter().filter(|n| n.kind == NetKind::Flush).count();
+        assert_eq!(flush_nets, 1);
+    }
+
+    #[test]
+    fn hardened_flush_removes_net() {
+        let mut arch = ArchParams::paper();
+        arch.hardened_flush = true;
+        let app = apps::dense::gaussian(64, 64, 1);
+        let nets = build_nets(&app.dfg, &arch);
+        assert!(nets.iter().all(|n| n.kind != NetKind::Flush));
+    }
+
+    #[test]
+    fn sparse_edges_get_triples() {
+        let arch = ArchParams::paper();
+        let app = apps::sparse::vec_elemadd(1024, 0.2);
+        let nets = build_nets(&app.dfg, &arch);
+        let data: Vec<&Net> = nets
+            .iter()
+            .filter(|n| n.kind == NetKind::Data && app.dfg.node(n.src).is_sparse())
+            .collect();
+        for d in &data {
+            // Exactly one valid companion with identical endpoints.
+            let valid: Vec<&Net> = nets
+                .iter()
+                .filter(|n| n.kind == NetKind::Valid && n.companion_of == Some(d.id))
+                .collect();
+            assert_eq!(valid.len(), 1);
+            assert_eq!(valid[0].src, d.src);
+            assert_eq!(valid[0].sinks.len(), d.sinks.len());
+            // One ready net per sink, reversed.
+            let readies: Vec<&Net> = nets
+                .iter()
+                .filter(|n| n.kind == NetKind::Ready && n.companion_of == Some(d.id))
+                .collect();
+            assert_eq!(readies.len(), d.sinks.len());
+            for r in readies {
+                assert_eq!(r.sinks[0].0, d.src);
+                assert!(d.sinks.iter().any(|&(s, _)| s == r.src));
+            }
+        }
+    }
+
+    #[test]
+    fn ready_ports_within_capacity() {
+        let arch = ArchParams::paper();
+        for app in apps::paper_sparse_suite() {
+            let nets = build_nets(&app.dfg, &arch);
+            for n in &nets {
+                for &(_, port) in &n.sinks {
+                    let cap = match n.layer {
+                        Layer::B16 => arch.data_in_ports,
+                        Layer::B1 => arch.bit_in_ports,
+                    };
+                    assert!((port as usize) < cap, "{}: port {port} on {:?}", app.name, n.kind);
+                }
+                let out_cap = match n.layer {
+                    Layer::B16 => arch.data_out_ports,
+                    Layer::B1 => arch.bit_out_ports,
+                };
+                assert!((n.src_port as usize) < out_cap, "{}: src_port", app.name);
+            }
+        }
+    }
+
+    #[test]
+    fn resnet_has_high_fanout_broadcast() {
+        let arch = ArchParams::paper();
+        let app = apps::dense::resnet_conv5x();
+        let nets = build_nets(&app.dfg, &arch);
+        let (_, _, max_fanout) = net_stats(&nets);
+        assert!(max_fanout >= 8);
+    }
+}

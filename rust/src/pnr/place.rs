@@ -1,0 +1,449 @@
+//! Simulated-annealing detailed placement (paper §V-C).
+//!
+//! The cost function is the paper's Eq. 1:
+//!
+//! ```text
+//! Cost_net = (HPWL_net + gamma * Area_passthrough)^alpha
+//! ```
+//!
+//! `gamma` penalizes tiles covered by a net's bounding box that are not the
+//! net's own terminals (a placement-time proxy for pass-through routing
+//! tiles), and `alpha` is the criticality exponent Cascade introduces
+//! (similar to timing-driven FPGA placement [17]): with `alpha = 1` the
+//! placer minimizes total wirelength (the baseline compiler [16]); with
+//! `alpha > 1` long nets are penalized superlinearly, trading average
+//! wirelength for a shorter longest route — the knob evaluated in
+//! Fig. 7 / Fig. 10 ("placement optimization").
+
+use std::collections::HashMap;
+
+use crate::arch::params::{ArchParams, TileCoord, TileKind};
+use crate::dfg::ir::{Dfg, NodeId};
+use crate::util::rng::Rng;
+
+use super::netlist::Net;
+
+/// Placement knobs.
+#[derive(Debug, Clone)]
+pub struct PlaceParams {
+    /// Pass-through-area penalty (Eq. 1 gamma).
+    pub gamma: f64,
+    /// Criticality exponent (Eq. 1 alpha). Baseline 1.0; Cascade's
+    /// placement optimization raises it.
+    pub alpha: f64,
+    /// RNG seed (placement is fully deterministic given the seed).
+    pub seed: u64,
+    /// Scales the annealing schedule length (1.0 = default effort).
+    pub effort: f64,
+    /// Optional placement region `(origin, (width, height))` in core-tile
+    /// coordinates; IO nodes always live on the IO row within the region's
+    /// column span. Used by low unrolling duplication (§V-E).
+    pub region: Option<(TileCoord, (usize, usize))>,
+}
+
+impl Default for PlaceParams {
+    fn default() -> Self {
+        PlaceParams { gamma: 0.05, alpha: 1.0, seed: 1, effort: 1.0, region: None }
+    }
+}
+
+impl PlaceParams {
+    /// The baseline compiler's placement (no criticality exponent).
+    pub fn baseline(seed: u64) -> PlaceParams {
+        PlaceParams { seed, ..Default::default() }
+    }
+
+    /// Cascade's placement optimization (§V-C): alpha > 1.
+    pub fn cascade(seed: u64) -> PlaceParams {
+        PlaceParams { seed, alpha: 1.35, ..Default::default() }
+    }
+}
+
+/// A placement: per-node tile and slot (slot is only meaningful on IO
+/// tiles, which host up to two IO nodes).
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub pos: Vec<TileCoord>,
+    pub slot: Vec<u8>,
+    /// Final Eq. 1 cost.
+    pub cost: f64,
+}
+
+impl Placement {
+    pub fn tile(&self, n: NodeId) -> TileCoord {
+        self.pos[n as usize]
+    }
+}
+
+/// Capacity of a tile for placeable nodes.
+fn tile_capacity(kind: TileKind) -> usize {
+    match kind {
+        TileKind::Pe | TileKind::Mem => 1,
+        TileKind::Io => 2,
+    }
+}
+
+fn build_sites(
+    arch: &ArchParams,
+    region: &Option<(TileCoord, (usize, usize))>,
+) -> HashMap<TileKind, Vec<(TileCoord, u8)>> {
+    let mut by_kind: HashMap<TileKind, Vec<(TileCoord, u8)>> = HashMap::new();
+    let in_region = |c: TileCoord| -> bool {
+        match region {
+            None => true,
+            Some((o, (w, h))) => {
+                let x_ok = c.x >= o.x && (c.x as usize) < o.x as usize + w;
+                let y_ok = c.y == 0 || (c.y >= o.y && (c.y as usize) < o.y as usize + h);
+                x_ok && y_ok
+            }
+        }
+    };
+    for tile in arch.all_tiles() {
+        if !in_region(tile) {
+            continue;
+        }
+        let kind = arch.tile_kind(tile);
+        for slot in 0..tile_capacity(kind) {
+            by_kind.entry(kind).or_default().push((tile, slot as u8));
+        }
+    }
+    by_kind
+}
+
+/// Net cost per Eq. 1, computed from terminal positions.
+pub fn net_cost(net: &Net, pos: &[TileCoord], gamma: f64, alpha: f64) -> f64 {
+    let mut min_x = u16::MAX;
+    let mut max_x = 0u16;
+    let mut min_y = u16::MAX;
+    let mut max_y = 0u16;
+    let mut consider = |c: TileCoord| {
+        min_x = min_x.min(c.x);
+        max_x = max_x.max(c.x);
+        min_y = min_y.min(c.y);
+        max_y = max_y.max(c.y);
+    };
+    consider(pos[net.src as usize]);
+    for &(s, _) in &net.sinks {
+        consider(pos[s as usize]);
+    }
+    let dx = (max_x - min_x) as f64;
+    let dy = (max_y - min_y) as f64;
+    let hpwl = dx + dy;
+    // Pass-through proxy: bbox tiles not occupied by this net's terminals.
+    let terminals = 1 + net.sinks.len();
+    let area = ((dx + 1.0) * (dy + 1.0) - terminals as f64).max(0.0);
+    (hpwl + gamma * area).powf(alpha)
+}
+
+/// Internal mutable placement state. Occupancy is a flat vector indexed
+/// by (tile index, slot) — the annealer's innermost data structure.
+struct State {
+    pos: Vec<TileCoord>,
+    slot: Vec<u8>,
+    occupancy: Vec<u32>,
+    cols: usize,
+}
+
+const EMPTY: u32 = u32::MAX;
+
+impl State {
+    #[inline]
+    fn site(&self, t: TileCoord, s: u8) -> usize {
+        (t.y as usize * self.cols + t.x as usize) * 2 + s as usize
+    }
+
+    /// Swap `node` with whatever occupies `(t, s)` (possibly nothing).
+    /// Returns the occupant (if any) so the move can be undone by calling
+    /// `swap` again with the node's old site.
+    fn swap(&mut self, node: NodeId, t: TileCoord, s: u8) -> Option<NodeId> {
+        let old = (self.pos[node as usize], self.slot[node as usize]);
+        let new_site = self.site(t, s);
+        let old_site = self.site(old.0, old.1);
+        let occ = self.occupancy[new_site];
+        let occupant = if occ != EMPTY && occ != node { Some(occ) } else { None };
+        self.pos[node as usize] = t;
+        self.slot[node as usize] = s;
+        self.occupancy[new_site] = node;
+        match occupant {
+            Some(o) => {
+                self.pos[o as usize] = old.0;
+                self.slot[o as usize] = old.1;
+                self.occupancy[old_site] = o;
+            }
+            None => {
+                if old_site != new_site {
+                    self.occupancy[old_site] = EMPTY;
+                }
+            }
+        }
+        occupant
+    }
+}
+
+/// Run simulated-annealing placement. Deterministic given `pp.seed`.
+pub fn place(g: &Dfg, nets: &[Net], arch: &ArchParams, pp: &PlaceParams) -> Placement {
+    let n = g.nodes.len();
+    let sites = build_sites(arch, &pp.region);
+    let mut rng = Rng::new(pp.seed);
+
+    // --- Initial placement: round-robin over shuffled legal sites.
+    let mut st = State {
+        pos: vec![TileCoord::new(0, 0); n],
+        slot: vec![0u8; n],
+        occupancy: vec![EMPTY; arch.num_tiles() * 2],
+        cols: arch.cols,
+    };
+    {
+        let mut per_kind = sites.clone();
+        // Fixed kind order: HashMap iteration order would leak into the RNG
+        // stream and break determinism.
+        for kind in [TileKind::Pe, TileKind::Mem, TileKind::Io] {
+            if let Some(v) = per_kind.get_mut(&kind) {
+                rng.shuffle(v);
+            }
+        }
+        let mut cursor: HashMap<TileKind, usize> = HashMap::new();
+        for i in 0..n {
+            let kind = g.nodes[i].tile_kind();
+            let list = per_kind
+                .get(&kind)
+                .unwrap_or_else(|| panic!("no sites of kind {kind:?} in placement region"));
+            let c = cursor.entry(kind).or_insert(0);
+            assert!(
+                *c < list.len(),
+                "placement region too small: {kind:?} demand exceeds {} sites",
+                list.len()
+            );
+            let (t, s) = list[*c];
+            *c += 1;
+            st.pos[i] = t;
+            st.slot[i] = s;
+            let site = st.site(t, s);
+            st.occupancy[site] = i as NodeId;
+        }
+    }
+
+    // Nets touching each node.
+    let mut nets_of: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for net in nets {
+        nets_of[net.src as usize].push(net.id);
+        for &(s, _) in &net.sinks {
+            if !nets_of[s as usize].contains(&net.id) {
+                nets_of[s as usize].push(net.id);
+            }
+        }
+    }
+
+    let mut net_costs: Vec<f64> =
+        nets.iter().map(|nt| net_cost(nt, &st.pos, pp.gamma, pp.alpha)).collect();
+    let mut total: f64 = net_costs.iter().sum();
+
+    if n == 0 || nets.is_empty() {
+        return Placement { pos: st.pos, slot: st.slot, cost: total };
+    }
+
+    let moves_per_temp = (((n * 12) as f64) * pp.effort).ceil().max(1.0) as usize;
+
+    // Estimate T0 from random-move |delta| samples (moves are undone).
+    let mut temp = {
+        let mut sum = 0.0;
+        let mut cnt = 0u32;
+        for _ in 0..50 {
+            let node = rng.gen_range(n) as NodeId;
+            let kind = g.nodes[node as usize].tile_kind();
+            let list = &sites[&kind];
+            let (t, s) = *rng.choose(list);
+            let old = (st.pos[node as usize], st.slot[node as usize]);
+            if (t, s) == old {
+                continue;
+            }
+            let occupant = st.swap(node, t, s);
+            let mut delta = 0.0;
+            for &ni in &nets_of[node as usize] {
+                delta += net_cost(&nets[ni], &st.pos, pp.gamma, pp.alpha) - net_costs[ni];
+            }
+            if let Some(o) = occupant {
+                for &ni in &nets_of[o as usize] {
+                    if !nets_of[node as usize].contains(&ni) {
+                        delta += net_cost(&nets[ni], &st.pos, pp.gamma, pp.alpha) - net_costs[ni];
+                    }
+                }
+            }
+            // Undo.
+            st.swap(node, old.0, old.1);
+            sum += delta.abs();
+            cnt += 1;
+        }
+        (sum / cnt.max(1) as f64).max(1e-3) * 20.0
+    };
+
+    let t_final = temp * 1e-4;
+    let mut affected: Vec<usize> = Vec::new();
+    let mut scratch: Vec<f64> = Vec::new();
+    while temp > t_final {
+        let mut accepts = 0usize;
+        for _ in 0..moves_per_temp {
+            let node = rng.gen_range(n) as NodeId;
+            let kind = g.nodes[node as usize].tile_kind();
+            let list = &sites[&kind];
+            let (t, s) = *rng.choose(list);
+            let old = (st.pos[node as usize], st.slot[node as usize]);
+            if (t, s) == old {
+                continue;
+            }
+            let occupant = st.swap(node, t, s);
+            affected.clear();
+            affected.extend_from_slice(&nets_of[node as usize]);
+            if let Some(o) = occupant {
+                for &ni in &nets_of[o as usize] {
+                    if !affected.contains(&ni) {
+                        affected.push(ni);
+                    }
+                }
+            }
+            let before: f64 = affected.iter().map(|&ni| net_costs[ni]).sum();
+            scratch.clear();
+            let mut after = 0.0;
+            for &ni in &affected {
+                let c = net_cost(&nets[ni], &st.pos, pp.gamma, pp.alpha);
+                scratch.push(c);
+                after += c;
+            }
+            let delta = after - before;
+            if delta < 0.0 || rng.gen_f64() < (-delta / temp).exp() {
+                for (k, &ni) in affected.iter().enumerate() {
+                    net_costs[ni] = scratch[k];
+                }
+                total += delta;
+                accepts += 1;
+            } else {
+                st.swap(node, old.0, old.1);
+            }
+        }
+        if accepts == 0 {
+            break;
+        }
+        temp *= 0.9;
+    }
+
+    Placement { pos: st.pos, slot: st.slot, cost: total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::pnr::netlist::build_nets;
+
+    fn place_app(app: &crate::apps::App, pp: &PlaceParams) -> (Placement, Vec<Net>) {
+        let arch = ArchParams::paper();
+        let nets = build_nets(&app.dfg, &arch);
+        let p = place(&app.dfg, &nets, &arch, pp);
+        (p, nets)
+    }
+
+    #[test]
+    fn placement_is_legal() {
+        let app = apps::dense::gaussian(64, 64, 2);
+        let arch = ArchParams::paper();
+        let (p, _) = place_app(&app, &PlaceParams::baseline(3));
+        for (i, node) in app.dfg.nodes.iter().enumerate() {
+            assert_eq!(arch.tile_kind(p.pos[i]), node.tile_kind(), "node {i}");
+        }
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..app.dfg.nodes.len() {
+            assert!(seen.insert((p.pos[i], p.slot[i])), "overlap at node {i}");
+        }
+    }
+
+    #[test]
+    fn placement_deterministic() {
+        let app = apps::dense::gaussian(64, 64, 1);
+        let (p1, _) = place_app(&app, &PlaceParams::baseline(7));
+        let (p2, _) = place_app(&app, &PlaceParams::baseline(7));
+        assert_eq!(p1.pos, p2.pos);
+        assert_eq!(p1.cost, p2.cost);
+    }
+
+    #[test]
+    fn cached_cost_matches_recompute() {
+        let app = apps::dense::unsharp(64, 64, 1);
+        let arch = ArchParams::paper();
+        let nets = build_nets(&app.dfg, &arch);
+        let pp = PlaceParams::baseline(9);
+        let p = place(&app.dfg, &nets, &arch, &pp);
+        let recomputed: f64 =
+            nets.iter().map(|nt| net_cost(nt, &p.pos, pp.gamma, pp.alpha)).sum();
+        assert!(
+            (p.cost - recomputed).abs() < 1e-6 * recomputed.max(1.0),
+            "cached {} vs recomputed {}",
+            p.cost,
+            recomputed
+        );
+    }
+
+    #[test]
+    fn annealing_beats_quick_anneal() {
+        let app = apps::dense::harris(64, 64, 1);
+        let arch = ArchParams::paper();
+        let nets = build_nets(&app.dfg, &arch);
+        let p0 = place(
+            &app.dfg,
+            &nets,
+            &arch,
+            &PlaceParams { effort: 0.01, ..PlaceParams::baseline(5) },
+        );
+        let p1 = place(&app.dfg, &nets, &arch, &PlaceParams::baseline(5));
+        assert!(p1.cost < p0.cost, "SA {} vs quick {}", p1.cost, p0.cost);
+    }
+
+    #[test]
+    fn alpha_shrinks_longest_net() {
+        let app = apps::dense::resnet_conv5x();
+        let arch = ArchParams::paper();
+        let nets = build_nets(&app.dfg, &arch);
+        let base = place(&app.dfg, &nets, &arch, &PlaceParams::baseline(11));
+        let casc = place(&app.dfg, &nets, &arch, &PlaceParams::cascade(11));
+        let longest = |p: &Placement| -> f64 {
+            nets.iter().map(|nt| net_cost(nt, &p.pos, 0.0, 1.0)).fold(0.0, f64::max)
+        };
+        assert!(
+            longest(&casc) <= longest(&base) * 1.1,
+            "alpha should not materially lengthen the longest net: {} vs {}",
+            longest(&casc),
+            longest(&base)
+        );
+    }
+
+    #[test]
+    fn region_constraint_respected() {
+        let app = apps::dense::gaussian(64, 64, 1);
+        let arch = ArchParams::paper();
+        let nets = build_nets(&app.dfg, &arch);
+        let region = Some((TileCoord::new(0, 1), (8, 16)));
+        let p = place(
+            &app.dfg,
+            &nets,
+            &arch,
+            &PlaceParams { region, ..PlaceParams::baseline(2) },
+        );
+        for i in 0..app.dfg.nodes.len() {
+            assert!(p.pos[i].x < 8, "node {i} escaped region: {:?}", p.pos[i]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "placement region")]
+    fn too_small_region_panics() {
+        let app = apps::dense::harris(512, 512, 4);
+        let arch = ArchParams::paper();
+        let nets = build_nets(&app.dfg, &arch);
+        let region = Some((TileCoord::new(0, 1), (2, 2)));
+        let _ = place(
+            &app.dfg,
+            &nets,
+            &arch,
+            &PlaceParams { region, ..PlaceParams::baseline(2) },
+        );
+    }
+}

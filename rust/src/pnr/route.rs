@@ -1,0 +1,395 @@
+//! PathFinder-style negotiated-congestion routing over the Canal RRG
+//! (the "iteration-based routing algorithm" of the baseline compiler [16]).
+//!
+//! Every net is routed as a tree: the first sink by shortest path from the
+//! source TileOut node, subsequent sinks from the whole partial tree.
+//! Resource overuse is resolved iteratively: present congestion multiplies
+//! node costs within an iteration, historical congestion accumulates across
+//! iterations, and all nets are ripped up and rerouted until the routing is
+//! feasible (every SB/CB wire used by at most one net).
+
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::arch::canal::{InterconnectGraph, NodeId as RrgNode, NodeKind};
+use crate::arch::params::ArchParams;
+use crate::dfg::ir::Dfg;
+
+use super::netlist::Net;
+use super::place::Placement;
+
+/// Routing knobs.
+#[derive(Debug, Clone)]
+pub struct RouteParams {
+    pub max_iters: usize,
+    pub pres_fac_init: f64,
+    pub pres_fac_mult: f64,
+    pub hist_fac: f64,
+    /// Extra cost per hop (keeps routes from wandering when delays are
+    /// small).
+    pub hop_cost: f64,
+}
+
+impl Default for RouteParams {
+    fn default() -> Self {
+        RouteParams {
+            max_iters: 40,
+            pres_fac_init: 0.6,
+            pres_fac_mult: 1.7,
+            hist_fac: 0.4,
+            hop_cost: 20.0,
+        }
+    }
+}
+
+/// Routing failure.
+#[derive(Debug)]
+pub enum RouteError {
+    /// A sink was unreachable from its source (should not happen on a
+    /// connected fabric — indicates a port-mapping bug or zero capacity).
+    Unreachable { net: usize, sink: usize },
+    /// Congestion did not resolve within `max_iters`.
+    Unroutable { overused_nodes: usize, iters: usize },
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::Unreachable { net, sink } => {
+                write!(f, "net {net} sink {sink} unreachable")
+            }
+            RouteError::Unroutable { overused_nodes, iters } => {
+                write!(f, "unroutable: {overused_nodes} overused nodes after {iters} iterations")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// The route of one net: one RRG node path per sink (source TileOut ..
+/// sink CbIn inclusive). Paths of the same net share prefixes (tree).
+#[derive(Debug, Clone)]
+pub struct NetRoute {
+    pub net: usize,
+    pub sink_paths: Vec<Vec<RrgNode>>,
+}
+
+impl NetRoute {
+    /// All distinct RRG nodes used by this net.
+    pub fn nodes(&self) -> impl Iterator<Item = RrgNode> + '_ {
+        let mut seen = std::collections::HashSet::new();
+        self.sink_paths.iter().flatten().copied().filter(move |&n| seen.insert(n))
+    }
+
+    /// Number of switch-box hops on the longest sink path.
+    pub fn max_hops(&self, g: &InterconnectGraph) -> usize {
+        self.sink_paths
+            .iter()
+            .map(|p| {
+                p.iter()
+                    .filter(|&&n| matches!(g.decode(n).kind, NodeKind::SbOut { .. }))
+                    .count()
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// RRG terminal nodes for a net under a placement.
+///
+/// IO tiles host up to two IO nodes (slots); each slot owns its own
+/// TileOut / CbIn port so co-located IO nodes never collide on fabric
+/// resources.
+pub fn net_terminals(
+    net: &Net,
+    placement: &Placement,
+    graph: &InterconnectGraph,
+) -> (RrgNode, Vec<RrgNode>) {
+    let src_tile = placement.tile(net.src);
+    let src_port = if graph.params.tile_kind(src_tile) == crate::arch::params::TileKind::Io {
+        placement.slot[net.src as usize]
+    } else {
+        net.src_port
+    };
+    let src = graph.node_id(src_tile, net.layer, NodeKind::TileOut { port: src_port });
+    let sinks = net
+        .sinks
+        .iter()
+        .map(|&(node, port)| {
+            let tile = placement.tile(node);
+            let port = if graph.params.tile_kind(tile) == crate::arch::params::TileKind::Io {
+                placement.slot[node as usize]
+            } else {
+                port
+            };
+            graph.node_id(tile, net.layer, NodeKind::CbIn { port })
+        })
+        .collect();
+    (src, sinks)
+}
+
+/// Route all nets. The interconnect graph must already be delay-annotated.
+pub fn route(
+    _dfg: &Dfg,
+    nets: &[Net],
+    placement: &Placement,
+    _arch: &ArchParams,
+    graph: &InterconnectGraph,
+    rp: &RouteParams,
+) -> Result<Vec<NetRoute>, RouteError> {
+    let nn = graph.num_nodes();
+    let mut occ = vec![0u16; nn];
+    let mut hist = vec![0f32; nn];
+    let mut routes: Vec<NetRoute> =
+        nets.iter().map(|n| NetRoute { net: n.id, sink_paths: Vec::new() }).collect();
+
+    // Dijkstra scratch (generation-stamped to avoid O(V) clears).
+    let mut dist = vec![f64::INFINITY; nn];
+    let mut prev = vec![u32::MAX; nn]; // previous RRG node on best path
+    let mut stamp = vec![0u32; nn];
+    let mut gen = 0u32;
+
+    // Net order: long (high-fanout) nets first — they are hardest.
+    let mut order: Vec<usize> = (0..nets.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(nets[i].fanout()));
+
+    let mut pres_fac = rp.pres_fac_init;
+    for iter in 0..rp.max_iters {
+        // Rip up everything (classic full-ripup PathFinder).
+        occ.iter_mut().for_each(|o| *o = 0);
+        for r in &mut routes {
+            r.sink_paths.clear();
+        }
+
+        for &ni in &order {
+            let net = &nets[ni];
+            let (src, sink_targets) = net_terminals(net, placement, graph);
+            // Tree nodes so far (for multi-sink expansion) mapped to their
+            // path-from-source.
+            let mut tree_nodes: Vec<RrgNode> = vec![src];
+            let mut path_to: HashMap<RrgNode, Vec<RrgNode>> = HashMap::new();
+            path_to.insert(src, vec![src]);
+            // Net-local usage (a net may reuse its own tree freely).
+            let mut in_tree: std::collections::HashSet<RrgNode> =
+                tree_nodes.iter().copied().collect();
+
+            // Sinks nearest-first (by Manhattan distance of tiles).
+            let mut sink_order: Vec<usize> = (0..sink_targets.len()).collect();
+            let src_tile = placement.tile(net.src);
+            sink_order.sort_by_key(|&k| {
+                placement.tile(net.sinks[k].0).manhattan(src_tile)
+            });
+
+            for &k in &sink_order {
+                let target = sink_targets[k];
+                gen += 1;
+                let mut heap: BinaryHeap<std::cmp::Reverse<(u64, RrgNode)>> = BinaryHeap::new();
+                for &tn in &tree_nodes {
+                    dist[tn as usize] = 0.0;
+                    stamp[tn as usize] = gen;
+                    prev[tn as usize] = u32::MAX;
+                    heap.push(std::cmp::Reverse((0u64, tn)));
+                }
+                let mut found = false;
+                while let Some(std::cmp::Reverse((dbits, u))) = heap.pop() {
+                    let d = f64::from_bits(dbits);
+                    if stamp[u as usize] == gen && d > dist[u as usize] {
+                        continue;
+                    }
+                    if u == target {
+                        found = true;
+                        break;
+                    }
+                    for e in graph.fanout(u) {
+                        let v = e.dst;
+                        // CbIn nodes are dead ends unless they are the
+                        // target (they own a specific tile port).
+                        if matches!(graph.decode(v).kind, NodeKind::CbIn { .. }) && v != target {
+                            continue;
+                        }
+                        let vi = v as usize;
+                        // Node congestion cost.
+                        let over = if in_tree.contains(&v) {
+                            0.0
+                        } else {
+                            let o = occ[vi] as f64;
+                            o * pres_fac
+                        };
+                        let cost = e.delay_ps as f64
+                            + rp.hop_cost
+                            + (e.delay_ps as f64 + rp.hop_cost) * (hist[vi] as f64 + over);
+                        let nd = d + cost;
+                        if stamp[vi] != gen || nd < dist[vi] {
+                            stamp[vi] = gen;
+                            dist[vi] = nd;
+                            prev[vi] = u;
+                            heap.push(std::cmp::Reverse((nd.to_bits(), v)));
+                        }
+                    }
+                }
+                if !found {
+                    return Err(RouteError::Unreachable { net: ni, sink: k });
+                }
+                // Backtrack to a tree node.
+                let mut seg = vec![target];
+                let mut cur = target;
+                while prev[cur as usize] != u32::MAX {
+                    cur = prev[cur as usize];
+                    seg.push(cur);
+                }
+                seg.reverse();
+                // `cur` is the tree node we joined at.
+                let mut full = path_to[&cur].clone();
+                full.extend_from_slice(&seg[1..]);
+                for &nde in &seg[1..] {
+                    if in_tree.insert(nde) {
+                        tree_nodes.push(nde);
+                    }
+                    // Record path prefix for future joins.
+                    let idx = full.iter().position(|&x| x == nde).unwrap();
+                    path_to.entry(nde).or_insert_with(|| full[..=idx].to_vec());
+                }
+                routes[ni].sink_paths.resize(sink_targets.len(), Vec::new());
+                routes[ni].sink_paths[k] = full;
+            }
+
+            // Account usage once per distinct node.
+            for nde in routes[ni].nodes() {
+                occ[nde as usize] += 1;
+            }
+        }
+
+        // Check overuse (sources/sinks owned by construction don't
+        // conflict; capacity is 1 everywhere).
+        let mut overused = 0usize;
+        for i in 0..nn {
+            if occ[i] > 1 {
+                overused += 1;
+                hist[i] += (rp.hist_fac * (occ[i] - 1) as f64) as f32;
+            }
+        }
+        if overused == 0 {
+            return Ok(routes);
+        }
+        if iter == rp.max_iters - 1 {
+            return Err(RouteError::Unroutable { overused_nodes: overused, iters: iter + 1 });
+        }
+        pres_fac *= rp.pres_fac_mult;
+    }
+    unreachable!()
+}
+
+/// Total wirelength (SB hops) of a routing.
+pub fn total_hops(routes: &[NetRoute], g: &InterconnectGraph) -> usize {
+    routes
+        .iter()
+        .map(|r| {
+            r.nodes()
+                .filter(|&n| matches!(g.decode(n).kind, NodeKind::SbOut { .. }))
+                .count()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::delay::{DelayLib, DelayModelParams};
+    use crate::pnr::netlist::build_nets;
+    use crate::pnr::place::{place, PlaceParams};
+
+    fn setup(app: &crate::apps::App) -> (ArchParams, InterconnectGraph, Vec<Net>, Placement) {
+        let arch = ArchParams::paper();
+        let lib = DelayLib::generate(&arch, &DelayModelParams::default());
+        let mut graph = InterconnectGraph::build(&arch);
+        graph.annotate_delays(&lib);
+        let nets = build_nets(&app.dfg, &arch);
+        let placement = place(&app.dfg, &nets, &arch, &PlaceParams::baseline(3));
+        (arch, graph, nets, placement)
+    }
+
+    #[test]
+    fn routes_are_connected_and_legal() {
+        let app = crate::apps::dense::gaussian(64, 64, 1);
+        let (arch, graph, nets, placement) = setup(&app);
+        let routes =
+            route(&app.dfg, &nets, &placement, &arch, &graph, &RouteParams::default()).unwrap();
+        // Every sink path starts at the net's TileOut and ends at its CbIn,
+        // with consecutive nodes connected in the RRG.
+        for (ni, r) in routes.iter().enumerate() {
+            let (src, sinks) = net_terminals(&nets[ni], &placement, &graph);
+            assert_eq!(r.sink_paths.len(), sinks.len());
+            for (k, path) in r.sink_paths.iter().enumerate() {
+                assert_eq!(path[0], src, "net {ni}");
+                assert_eq!(*path.last().unwrap(), sinks[k]);
+                for w in path.windows(2) {
+                    assert!(
+                        graph.fanout(w[0]).iter().any(|e| e.dst == w[1]),
+                        "net {ni}: disconnected step {:?} -> {:?}",
+                        graph.decode(w[0]),
+                        graph.decode(w[1])
+                    );
+                }
+            }
+        }
+        // No overuse.
+        let mut occ = std::collections::HashMap::new();
+        for r in &routes {
+            for n in r.nodes() {
+                *occ.entry(n).or_insert(0u32) += 1;
+            }
+        }
+        for (&n, &c) in &occ {
+            assert!(c <= 1, "node {:?} used {c} times", graph.decode(n));
+        }
+    }
+
+    #[test]
+    fn all_dense_apps_route_on_paper_array() {
+        for app in crate::apps::small_dense_suite() {
+            let (arch, graph, nets, placement) = setup(&app);
+            let r = route(&app.dfg, &nets, &placement, &arch, &graph, &RouteParams::default());
+            assert!(r.is_ok(), "{} failed: {:?}", app.name, r.err());
+        }
+    }
+
+    #[test]
+    fn sparse_app_routes_with_companions() {
+        let app = crate::apps::sparse::vec_elemadd(1024, 0.2);
+        let (arch, graph, nets, placement) = setup(&app);
+        let routes =
+            route(&app.dfg, &nets, &placement, &arch, &graph, &RouteParams::default()).unwrap();
+        assert_eq!(routes.len(), nets.len());
+        // Ready nets route on the B1 layer.
+        use crate::arch::canal::Layer;
+        for (ni, net) in nets.iter().enumerate() {
+            if net.kind == crate::pnr::netlist::NetKind::Ready {
+                for path in &routes[ni].sink_paths {
+                    for &n in path.iter() {
+                        assert_eq!(graph.decode(n).layer, Layer::B1);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hops_correlate_with_distance() {
+        // A 2-terminal net between far-apart tiles takes at least the
+        // Manhattan distance in SB hops.
+        let app = crate::apps::dense::gaussian(64, 64, 1);
+        let (arch, graph, nets, placement) = setup(&app);
+        let routes =
+            route(&app.dfg, &nets, &placement, &arch, &graph, &RouteParams::default()).unwrap();
+        for (ni, net) in nets.iter().enumerate() {
+            for (k, &(sink, _)) in net.sinks.iter().enumerate() {
+                let d = placement.tile(net.src).manhattan(placement.tile(sink));
+                let hops = routes[ni].sink_paths[k]
+                    .iter()
+                    .filter(|&&n| matches!(graph.decode(n).kind, NodeKind::SbOut { .. }))
+                    .count();
+                assert!(hops >= d, "net {ni} sink {k}: {hops} hops < distance {d}");
+            }
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! Static cycle-accurate scheduling (paper §III-C and §V-F).
+//!
+//! Dense image-processing / ML applications on this class of CGRA are
+//! statically scheduled: all memory accesses are resolved at compile time,
+//! and every MEM tile runs an affine address generator programmed from the
+//! schedule. The compiler we build on [16] assigns every statement in the
+//! application's iteration domain a one-dimensional timestamp; here that
+//! manifests as:
+//!
+//! * a [`WorkloadShape`] describing the iteration domain (frame geometry,
+//!   spatial unrolling, and the time-multiplexing factor for reductions);
+//! * a [`Schedule`] carrying the cycle totals and per-MEM-node address
+//!   generator parameters;
+//! * [`reschedule`] — the paper's §V-F two-round flow: the first
+//!   compilation round treats all compute latencies as zero; after
+//!   place-and-route and pipelining, the real latencies are known and the
+//!   schedule is regenerated so data still arrives on the cycles the
+//!   memory controllers expect.
+
+use std::collections::BTreeMap;
+
+use crate::dfg::ir::{Dfg, NodeId, Op};
+
+/// Iteration-domain description of one application run.
+#[derive(Debug, Clone)]
+pub struct WorkloadShape {
+    /// Frame width in pixels (row length seen by line buffers).
+    pub frame_w: u64,
+    /// Frame height.
+    pub frame_h: u64,
+    /// Spatial unrolling: output pixels produced per cycle.
+    pub unroll: u64,
+    /// Time multiplexing factor: cycles of accumulation per output (1 for
+    /// pure stencils; >1 for channel-reduced convolutions like ResNet).
+    pub time_mult: u64,
+}
+
+impl WorkloadShape {
+    pub fn stencil(frame_w: u64, frame_h: u64, unroll: u64) -> WorkloadShape {
+        WorkloadShape { frame_w, frame_h, unroll, time_mult: 1 }
+    }
+
+    /// Steady-state compute cycles (excluding fill latency).
+    pub fn steady_cycles(&self) -> u64 {
+        (self.frame_w * self.frame_h).div_ceil(self.unroll) * self.time_mult
+    }
+}
+
+/// Address-generator configuration for one MEM node (encoded into
+/// `MemParam` bitstream words).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemSchedule {
+    /// Loop extents, innermost first.
+    pub extents: Vec<u32>,
+    /// Strides per loop level (address delta per iteration).
+    pub strides: Vec<i32>,
+    /// Cycle offset at which this generator starts (set by scheduling;
+    /// updated by `reschedule` after pipelining).
+    pub start_offset: u32,
+}
+
+/// A complete static schedule for an application.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Cycles to process one frame, including fill latency and the fixed
+    /// controller startup overhead.
+    pub total_cycles: u64,
+    /// Pipeline + algorithmic fill latency (cycles before the first valid
+    /// output).
+    pub fill_latency: u64,
+    /// Per-MEM-node address generator configs.
+    pub mem_params: BTreeMap<NodeId, MemSchedule>,
+    /// The shape this schedule was generated for.
+    pub shape: WorkloadShape,
+}
+
+/// Fixed controller startup overhead (configuration settle + flush
+/// distribution), in cycles.
+pub const STARTUP_OVERHEAD: u64 = 32;
+
+/// Generate the static schedule for a mapped DFG.
+///
+/// `fill_latency` is the maximum arrival cycle across output nodes — the
+/// BDM arrival analysis — which includes both algorithmic delays (line
+/// buffers / window taps) and any pipelining registers currently on edges.
+/// In the first compilation round the graph carries no pipelining, so this
+/// reproduces the paper's "set all computation latencies to 0" round.
+pub fn schedule(g: &Dfg, shape: &WorkloadShape) -> Schedule {
+    let arrivals = g.arrival_cycles();
+    let fill_latency = g
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| matches!(n.op, Op::Output { .. }))
+        .map(|(i, _)| arrivals[i])
+        .max()
+        .unwrap_or(0);
+
+    let mut mem_params = BTreeMap::new();
+    for (i, node) in g.nodes.iter().enumerate() {
+        let id = i as NodeId;
+        match &node.op {
+            Op::Delay { cycles, .. } if node.tile_kind() == crate::arch::params::TileKind::Mem => {
+                // Line buffer: circular buffer of `cycles` words, one
+                // read + one write per cycle.
+                mem_params.insert(
+                    id,
+                    MemSchedule {
+                        extents: vec![*cycles],
+                        strides: vec![1],
+                        start_offset: arrivals[i].saturating_sub(node.latency() as u64) as u32,
+                    },
+                );
+            }
+            Op::Rom { values } => {
+                mem_params.insert(
+                    id,
+                    MemSchedule {
+                        extents: vec![values.len() as u32, shape.time_mult as u32],
+                        strides: vec![1, 0],
+                        start_offset: arrivals[i].saturating_sub(1) as u32,
+                    },
+                );
+            }
+            _ => {}
+        }
+    }
+
+    Schedule {
+        total_cycles: shape.steady_cycles() + fill_latency + STARTUP_OVERHEAD,
+        fill_latency,
+        mem_params,
+        shape: shape.clone(),
+    }
+}
+
+/// §V-F: regenerate the schedule after pipelining changed compute
+/// latencies. The mapped application graph topology is unchanged, so only
+/// offsets and totals move; extents and strides must be identical.
+pub fn reschedule(g: &Dfg, old: &Schedule) -> Schedule {
+    let new = schedule(g, &old.shape);
+    debug_assert_eq!(new.mem_params.len(), old.mem_params.len());
+    for (id, ms) in &new.mem_params {
+        if let Some(prev) = old.mem_params.get(id) {
+            debug_assert_eq!(ms.extents, prev.extents, "topology changed during pipelining");
+            debug_assert_eq!(ms.strides, prev.strides);
+        }
+    }
+    new
+}
+
+/// Runtime of one frame at a clock frequency, in milliseconds.
+pub fn runtime_ms(sched: &Schedule, freq_mhz: f64) -> f64 {
+    sched.total_cycles as f64 / (freq_mhz * 1e6) * 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::build::stencil;
+    use crate::dfg::ir::{Dfg, Op};
+
+    fn gaussian_like() -> Dfg {
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let w = vec![vec![1, 2, 1], vec![2, 4, 2], vec![1, 2, 1]];
+        let s = stencil(&mut g, i, 64, &w, "g");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        g.connect(s, o, 0);
+        g
+    }
+
+    #[test]
+    fn steady_cycles_scale_with_unroll() {
+        let s1 = WorkloadShape::stencil(640, 480, 1);
+        let s4 = WorkloadShape::stencil(640, 480, 4);
+        assert_eq!(s1.steady_cycles(), 640 * 480);
+        assert_eq!(s4.steady_cycles(), 640 * 480 / 4);
+    }
+
+    #[test]
+    fn fill_latency_includes_window() {
+        let g = gaussian_like();
+        let shape = WorkloadShape::stencil(64, 64, 1);
+        let s = schedule(&g, &shape);
+        // 3x3 window on width 64: 2*64+2 = 130 cycles of algorithmic delay.
+        assert_eq!(s.fill_latency, 130);
+        assert_eq!(s.total_cycles, 64 * 64 + 130 + STARTUP_OVERHEAD);
+    }
+
+    #[test]
+    fn mem_params_cover_line_buffers() {
+        let g = gaussian_like();
+        let s = schedule(&g, &WorkloadShape::stencil(64, 64, 1));
+        // 3x3 stencil on width 64: row taps produce Delay{62} MEM nodes
+        // (after the two column taps) — exactly 2 line buffers.
+        let lb: Vec<_> = s.mem_params.values().collect();
+        assert_eq!(lb.len(), 2);
+        for ms in lb {
+            assert_eq!(ms.strides, vec![1]);
+        }
+    }
+
+    #[test]
+    fn reschedule_updates_latency_only() {
+        let mut g = gaussian_like();
+        let shape = WorkloadShape::stencil(64, 64, 1);
+        let round1 = schedule(&g, &shape);
+        // Pipelining: enable input regs on every ALU (adds latency).
+        for n in 0..g.nodes.len() {
+            if matches!(g.nodes[n].op, Op::Alu { .. }) {
+                g.nodes[n].input_regs = true;
+            }
+        }
+        let round2 = reschedule(&g, &round1);
+        assert!(round2.fill_latency > round1.fill_latency);
+        assert_eq!(
+            round2.total_cycles - round2.fill_latency,
+            round1.total_cycles - round1.fill_latency,
+            "steady-state throughput unchanged by pipelining"
+        );
+        // Offsets moved with arrivals; extents identical.
+        for (id, ms) in &round2.mem_params {
+            assert_eq!(ms.extents, round1.mem_params[id].extents);
+        }
+    }
+
+    #[test]
+    fn runtime_math() {
+        let g = gaussian_like();
+        let s = schedule(&g, &WorkloadShape::stencil(64, 64, 1));
+        let r = runtime_ms(&s, 100.0);
+        let expected = s.total_cycles as f64 / 1e8 * 1e3;
+        assert!((r - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accum_apps_use_time_mult() {
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let r = g.add_node(Op::Rom { values: vec![1, 2, 3, 4] }, "w");
+        let acc = g.add_node(Op::Accum { period: 4 }, "acc");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 4 }, "o");
+        g.connect(i, acc, 0);
+        g.connect(r, acc, 1);
+        g.connect(acc, o, 0);
+        let shape = WorkloadShape { frame_w: 8, frame_h: 8, unroll: 1, time_mult: 4 };
+        let s = schedule(&g, &shape);
+        assert_eq!(s.total_cycles - s.fill_latency - STARTUP_OVERHEAD, 8 * 8 * 4);
+        assert!(s.mem_params.contains_key(&r));
+    }
+}

@@ -1,0 +1,464 @@
+//! Fabric-level cycle-accurate simulation of a routed dense design.
+//!
+//! Unlike `dfg::interp` (which interprets the *logical* graph with per-edge
+//! register counts), this simulator executes the *physical* design: each
+//! sink's value is produced by walking its routed path through the actual
+//! enabled switch-box registers (one state element per enabled SbOut,
+//! shared across the sinks downstream of it), the register-file delay lines
+//! allocated by realization, and the PE input registers. Agreement with the
+//! interpreter therefore checks placement/routing/realization/branch-delay
+//! matching end to end.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+use crate::arch::canal::{Layer, NodeId as RrgNode};
+use crate::dfg::ir::{AluOp, EdgeId, Op};
+use crate::pnr::RoutedDesign;
+
+/// Input-port slots per node in the flat edge lookup: 4 ports x 2 layers.
+const PORT_SLOTS: usize = 8;
+
+#[inline]
+fn slot_of(node: u32, port: u8, layer: Layer) -> usize {
+    node as usize * PORT_SLOTS + (port as usize) * 2 + layer.index()
+}
+
+/// Result of a fabric simulation run.
+pub struct FabricRun {
+    pub outputs: BTreeMap<u16, Vec<i64>>,
+    pub cycles: u64,
+    /// Activity counters for the power model.
+    pub activity: Activity,
+}
+
+/// Switching-activity counters accumulated during simulation.
+#[derive(Debug, Clone, Default)]
+pub struct Activity {
+    /// ALU operations executed (per op class aggregate).
+    pub pe_ops: u64,
+    /// Multiplier-class operations (higher energy).
+    pub pe_mul_ops: u64,
+    /// MEM reads+writes.
+    pub mem_accesses: u64,
+    /// SB hops traversed by live data (wire+mux switching).
+    pub sb_hops: u64,
+    /// Register updates (SB pipelining regs + PE input regs + RF words).
+    pub reg_writes: u64,
+    /// IO transfers.
+    pub io_words: u64,
+}
+
+/// Fabric simulator state.
+pub struct FabricSim<'a> {
+    d: &'a RoutedDesign,
+    order: Vec<u32>,
+    /// Current-cycle output value per DFG node.
+    value: Vec<i64>,
+    /// Enabled SB register states.
+    sb_state: HashMap<RrgNode, i64>,
+    /// Register-file delay lines per edge.
+    rf_lines: HashMap<EdgeId, VecDeque<i64>>,
+    /// PE input register state per node.
+    in_regs: Vec<[i64; 2]>,
+    /// Delay-node (line buffer / shift register) storage.
+    delay_q: Vec<VecDeque<i64>>,
+    /// ROM counters.
+    rom_ctr: Vec<u64>,
+    /// Accumulators: (acc, update count, schedule start offset, out reg).
+    acc: Vec<(i64, u64, u64, i64)>,
+    /// Per-edge: number of enabled SB regs on its path (cached), and the
+    /// ordered list of those reg nodes.
+    edge_regs: Vec<Vec<RrgNode>>,
+    /// Hops per edge (for activity).
+    edge_hops: Vec<u32>,
+    /// Flat (node, port, layer) -> edge index lookup (u32::MAX = none).
+    edge_of: Vec<u32>,
+    cycle: u64,
+    pub activity: Activity,
+}
+
+impl<'a> FabricSim<'a> {
+    pub fn new(d: &'a RoutedDesign) -> FabricSim<'a> {
+        let n = d.dfg.nodes.len();
+        let mut edge_regs = Vec::with_capacity(d.dfg.edges.len());
+        let mut edge_hops = Vec::with_capacity(d.dfg.edges.len());
+        for ei in 0..d.dfg.edges.len() {
+            let regs: Vec<RrgNode> = d
+                .edge_path(ei as EdgeId)
+                .map(|p| p.iter().copied().filter(|x| d.sb_regs.contains(x)).collect())
+                .unwrap_or_default();
+            edge_hops.push(d.edge_path(ei as EdgeId).map(|p| p.len() as u32).unwrap_or(0));
+            edge_regs.push(regs);
+        }
+        let rf_lines = d
+            .rf_delay
+            .iter()
+            .map(|(&e, &k)| (e, VecDeque::from(vec![0i64; k as usize])))
+            .collect();
+        let delay_q = d
+            .dfg
+            .nodes
+            .iter()
+            .map(|nd| match &nd.op {
+                Op::Delay { cycles, .. } => VecDeque::from(vec![0i64; *cycles as usize]),
+                _ => VecDeque::new(),
+            })
+            .collect();
+        // Schedule offsets (§V-F): accumulators begin counting when their
+        // pipelining-delayed input stream starts.
+        let added = crate::pipeline::bdm::added_arrival_cycles(&d.dfg);
+        let accum_starts: Vec<(i64, u64, u64, i64)> = d
+            .dfg
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, nd)| {
+                let start = if matches!(nd.op, Op::Accum { .. }) {
+                    d.dfg
+                        .edges
+                        .iter()
+                        .filter(|e| e.dst == i as u32 && e.dst_port == 0 && e.layer == Layer::B16)
+                        .map(|e| added[e.src as usize] + e.regs as u64)
+                        .max()
+                        .unwrap_or(0)
+                } else {
+                    0
+                };
+                (0i64, 0u64, start, 0i64)
+            })
+            .collect();
+        let mut edge_of = vec![u32::MAX; d.dfg.nodes.len() * PORT_SLOTS];
+        for (ei, e) in d.dfg.edges.iter().enumerate() {
+            edge_of[slot_of(e.dst, e.dst_port, e.layer)] = ei as u32;
+        }
+        FabricSim {
+            d,
+            order: d.dfg.topo_order(),
+            edge_regs,
+            edge_hops,
+            edge_of,
+            value: vec![0; n],
+            sb_state: d.sb_regs.iter().map(|&r| (r, 0i64)).collect(),
+            rf_lines,
+            in_regs: vec![[0, 0]; n],
+            delay_q,
+            rom_ctr: vec![0; n],
+            acc: accum_starts,
+            cycle: 0,
+            activity: Activity::default(),
+        }
+    }
+
+    /// Value arriving at an edge's sink this cycle: the driver's value
+    /// passed through the edge's enabled SB registers and RF delay line.
+    /// (Register states are updated in the commit phase.)
+    fn edge_value(&self, ei: EdgeId) -> i64 {
+        let regs = &self.edge_regs[ei as usize];
+        let e = self.d.dfg.edge(ei);
+        let v = if let Some(&last) = regs.last() {
+            // Value after the last SB register on the path.
+            self.sb_state[&last]
+        } else {
+            self.value[e.src as usize]
+        };
+        if let Some(line) = self.rf_lines.get(&ei) {
+            if !line.is_empty() {
+                return *line.front().unwrap();
+            }
+        }
+        v
+    }
+
+    fn input_val(&self, dst: u32, port: u8, layer: Layer) -> i64 {
+        let ei = self.edge_of[slot_of(dst, port, layer)];
+        if ei == u32::MAX {
+            0
+        } else {
+            self.edge_value(ei)
+        }
+    }
+
+    /// Advance one cycle.
+    pub fn step(&mut self, inputs: &BTreeMap<u16, Vec<i64>>) {
+        let t = self.cycle;
+        // Phase 1: compute node outputs in topo order.
+        for idx in 0..self.order.len() {
+            let n = self.order[idx];
+            let node = &self.d.dfg.nodes[n as usize];
+            let v = match &node.op {
+                Op::Input { lane } => {
+                    self.activity.io_words += 1;
+                    inputs.get(lane).and_then(|s| s.get(t as usize)).copied().unwrap_or(0)
+                }
+                Op::Output { .. } => self.input_val(n, 0, Layer::B16),
+                Op::Const { value } => *value,
+                Op::FlushSrc => i64::from(t == 0),
+                Op::Alu { op, const_b } => {
+                    self.activity.pe_ops += 1;
+                    if matches!(op, AluOp::Mul | AluOp::Mac) {
+                        self.activity.pe_mul_ops += 1;
+                    }
+                    let (a, b) = if node.input_regs {
+                        let r = self.in_regs[n as usize];
+                        (r[0], const_b.unwrap_or(r[1]))
+                    } else {
+                        (
+                            self.input_val(n, 0, Layer::B16),
+                            const_b.unwrap_or_else(|| self.input_val(n, 1, Layer::B16)),
+                        )
+                    };
+                    let sel = self.input_val(n, 0, Layer::B1);
+                    op.eval(a, b, if *op == AluOp::Mux { sel } else { 0 })
+                }
+                Op::Delay { cycles, .. } => {
+                    self.activity.mem_accesses += 2; // read + write per cycle
+                    if *cycles == 0 {
+                        self.input_val(n, 0, Layer::B16)
+                    } else {
+                        *self.delay_q[n as usize].front().unwrap()
+                    }
+                }
+                Op::Rom { values } => {
+                    self.activity.mem_accesses += 1;
+                    // Generator starts one cycle early (schedule offset),
+                    // so word k is on the output during execution cycle k.
+                    values[(self.rom_ctr[n as usize] as usize) % values.len()]
+                }
+                Op::Accum { .. } => self.acc[n as usize].3,
+                Op::Sparse(_) => {
+                    panic!("FabricSim simulates statically scheduled designs; use sim::sparse")
+                }
+            };
+            self.value[n as usize] = v;
+        }
+
+        // Phase 2: commit registered state. All register inputs must be
+        // sampled from the *pre-commit* fabric state (they all clock on
+        // the same edge), so snapshot them first.
+        let mut pe_samples: Vec<(u32, [i64; 2])> = Vec::new();
+        let mut delay_samples: Vec<(u32, i64)> = Vec::new();
+        let mut accum_samples: Vec<(u32, i64, i64)> = Vec::new();
+        for n in 0..self.d.dfg.nodes.len() as u32 {
+            let node = &self.d.dfg.nodes[n as usize];
+            match &node.op {
+                Op::Alu { .. } if node.input_regs => {
+                    let a = self.input_val(n, 0, Layer::B16);
+                    let b = self.input_val(n, 1, Layer::B16);
+                    pe_samples.push((n, [a, b]));
+                }
+                Op::Delay { cycles, .. } if *cycles > 0 => {
+                    delay_samples.push((n, self.input_val(n, 0, Layer::B16)));
+                }
+                Op::Accum { .. } => {
+                    let a = self.input_val(n, 0, Layer::B16);
+                    let has_b = self
+                        .d
+                        .dfg
+                        .edges
+                        .iter()
+                        .any(|e| e.dst == n && e.dst_port == 1 && e.layer == Layer::B16);
+                    let b = if has_b { self.input_val(n, 1, Layer::B16) } else { 1 };
+                    accum_samples.push((n, a, b));
+                }
+                _ => {}
+            }
+        }
+        // 2a. RF delay lines shift in the post-SB-register value.
+        let rf_edges: Vec<EdgeId> = self.rf_lines.keys().copied().collect();
+        for ei in rf_edges {
+            let regs = &self.edge_regs[ei as usize];
+            let e = self.d.dfg.edge(ei);
+            let v = if let Some(&last) = regs.last() {
+                self.sb_state[&last]
+            } else {
+                self.value[e.src as usize]
+            };
+            let line = self.rf_lines.get_mut(&ei).unwrap();
+            if !line.is_empty() {
+                line.push_back(v);
+                line.pop_front();
+                self.activity.reg_writes += 1;
+            }
+        }
+        // 2b. SB registers: each captures the value upstream of it on its
+        // path. Process per edge path, last-to-first so chained registers
+        // shift correctly within one cycle.
+        let mut new_sb: Vec<(RrgNode, i64)> = Vec::new();
+        for ei in 0..self.d.dfg.edges.len() {
+            let regs = &self.edge_regs[ei];
+            if regs.is_empty() {
+                continue;
+            }
+            let src = self.d.dfg.edge(ei as EdgeId).src;
+            for (k, &r) in regs.iter().enumerate() {
+                let upstream = if k == 0 {
+                    self.value[src as usize]
+                } else {
+                    self.sb_state[&regs[k - 1]]
+                };
+                new_sb.push((r, upstream));
+            }
+        }
+        for (r, v) in new_sb {
+            self.sb_state.insert(r, v);
+            self.activity.reg_writes += 1;
+        }
+        // 2c. PE input regs (pre-commit samples).
+        for (n, ab) in pe_samples {
+            self.in_regs[n as usize] = ab;
+            self.activity.reg_writes += 2;
+        }
+        // 2d. Node state (pre-commit samples).
+        for (n, vin) in delay_samples {
+            let q = &mut self.delay_q[n as usize];
+            q.push_back(vin);
+            q.pop_front();
+        }
+        for (n, a, b) in accum_samples {
+            if let Op::Accum { period } = self.d.dfg.nodes[n as usize].op {
+                let cycle = self.cycle;
+                let (acc, ctr, start, out) = &mut self.acc[n as usize];
+                if cycle >= *start {
+                    *acc += a * b;
+                    *ctr += 1;
+                    if period > 0 && *ctr % (period as u64) == 0 {
+                        *out = *acc;
+                        *acc = 0;
+                    }
+                }
+            }
+        }
+        for n in 0..self.d.dfg.nodes.len() {
+            if matches!(self.d.dfg.nodes[n].op, Op::Rom { .. }) {
+                self.rom_ctr[n] += 1;
+            }
+        }
+        // Activity: live hops.
+        for h in &self.edge_hops {
+            self.activity.sb_hops += *h as u64;
+        }
+        self.cycle += 1;
+    }
+
+    /// Run for `cycles`, recording outputs.
+    pub fn run(d: &'a RoutedDesign, inputs: &BTreeMap<u16, Vec<i64>>, cycles: u64) -> FabricRun {
+        let mut sim = FabricSim::new(d);
+        let out_nodes: Vec<(u16, u32)> = d
+            .dfg
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| match n.op {
+                Op::Output { lane, .. } => Some((lane, i as u32)),
+                _ => None,
+            })
+            .collect();
+        let mut outputs: BTreeMap<u16, Vec<i64>> =
+            out_nodes.iter().map(|&(l, _)| (l, Vec::new())).collect();
+        for _ in 0..cycles {
+            sim.step(inputs);
+            for &(lane, node) in &out_nodes {
+                outputs.get_mut(&lane).unwrap().push(sim.value[node as usize]);
+            }
+        }
+        FabricRun { outputs, cycles, activity: sim.activity }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::interp::Interp;
+    use crate::pipeline::{compile, CompileCtx, PipelineConfig};
+
+    fn compare_fabric_to_interp(app: crate::apps::App, cfg: &PipelineConfig, seed: u64) {
+        let ctx = CompileCtx::paper();
+        let c = compile(&app, &ctx, cfg, seed).unwrap();
+        c.design.registers_consistent().unwrap();
+        let lanes: Vec<u16> = app
+            .dfg
+            .nodes
+            .iter()
+            .filter_map(|n| match n.op {
+                Op::Input { lane } => Some(lane),
+                _ => None,
+            })
+            .collect();
+        let mut inputs = BTreeMap::new();
+        for (k, lane) in lanes.iter().enumerate() {
+            inputs.insert(
+                *lane,
+                (0..600).map(|x| ((x * 7 + k as i64 * 13 + 5) % 29) as i64).collect::<Vec<i64>>(),
+            );
+        }
+        let cycles = 600;
+        let logical = Interp::run(&c.design.dfg, &inputs, cycles);
+        let fabric = FabricSim::run(&c.design, &inputs, cycles);
+        for (lane, vals) in &logical.outputs {
+            assert_eq!(
+                vals, &fabric.outputs[lane],
+                "{}: lane {lane} fabric != interp",
+                app.name
+            );
+        }
+    }
+
+    #[test]
+    fn fabric_matches_interp_unpipelined() {
+        compare_fabric_to_interp(
+            crate::apps::dense::gaussian(64, 8, 1),
+            &PipelineConfig::none(),
+            3,
+        );
+    }
+
+    #[test]
+    fn fabric_matches_interp_compute_pipelined() {
+        compare_fabric_to_interp(
+            crate::apps::dense::gaussian(64, 8, 1),
+            &PipelineConfig::compute_only(),
+            3,
+        );
+    }
+
+    #[test]
+    fn fabric_matches_interp_full_postpnr() {
+        compare_fabric_to_interp(
+            crate::apps::dense::unsharp(64, 8, 1),
+            &PipelineConfig::with_postpnr(),
+            5,
+        );
+    }
+
+    #[test]
+    fn fabric_matches_interp_camera_mux() {
+        compare_fabric_to_interp(
+            crate::apps::dense::camera(64, 8, 1),
+            &PipelineConfig::with_postpnr(),
+            7,
+        );
+    }
+
+    #[test]
+    fn fabric_matches_interp_resnet() {
+        compare_fabric_to_interp(
+            crate::apps::dense::resnet_small(),
+            &PipelineConfig::with_postpnr(),
+            9,
+        );
+    }
+
+    #[test]
+    fn activity_counters_accumulate() {
+        let ctx = CompileCtx::paper();
+        let app = crate::apps::dense::gaussian(64, 8, 1);
+        let c = compile(&app, &ctx, &PipelineConfig::compute_only(), 3).unwrap();
+        let mut inputs = BTreeMap::new();
+        inputs.insert(0u16, vec![1i64; 100]);
+        let run = FabricSim::run(&c.design, &inputs, 100);
+        assert!(run.activity.pe_ops > 0);
+        assert!(run.activity.mem_accesses > 0);
+        assert!(run.activity.reg_writes > 0);
+        assert!(run.activity.sb_hops > 0);
+    }
+}

@@ -1,0 +1,274 @@
+//! Bitstream generation (the final stage of the Fig. 2 compiler) and a
+//! structural decoder used for round-trip verification and the low
+//! unrolling duplication stamping (§V-E).
+
+use crate::arch::bitstream::{
+    encode_sb_source, Bitstream, ConfigSpace, Feature, SbSource, CB_UNUSED,
+};
+use crate::arch::canal::{InterconnectGraph, NodeKind};
+use crate::dfg::ir::{EdgeId, Op};
+use crate::pnr::RoutedDesign;
+use crate::schedule::Schedule;
+
+/// MEM tile modes.
+pub const MEM_UNUSED: u32 = 0;
+pub const MEM_ROM: u32 = 1;
+pub const MEM_LINEBUF: u32 = 2;
+pub const MEM_SCHED: u32 = 3;
+
+/// IO tile modes.
+pub const IO_IN: u32 = 1;
+pub const IO_OUT: u32 = 2;
+
+/// Encode a routed design + schedule into configuration words.
+pub fn encode(d: &RoutedDesign, sched: &Schedule, graph: &InterconnectGraph) -> Bitstream {
+    let arch = &d.arch;
+    let cs = ConfigSpace::new(arch);
+    let mut bs = Bitstream::new();
+
+    // --- Interconnect: walk every route, configure SB muxes and CB taps.
+    for route in &d.routes {
+        for path in &route.sink_paths {
+            for w in path.windows(2) {
+                let (a, b) = (graph.decode(w[0]), graph.decode(w[1]));
+                match b.kind {
+                    NodeKind::SbOut { side, track } => {
+                        let src = match a.kind {
+                            NodeKind::SbIn { side: in_side, .. } => SbSource::In { side: in_side },
+                            NodeKind::TileOut { port } => SbSource::TileOut { port },
+                            _ => unreachable!("invalid SbOut driver"),
+                        };
+                        bs.set(
+                            arch,
+                            &cs,
+                            b.tile,
+                            Feature::SbSel { layer: b.layer, side, track },
+                            encode_sb_source(side, src),
+                        );
+                    }
+                    NodeKind::CbIn { port } => {
+                        if let NodeKind::SbIn { side, track } = a.kind {
+                            bs.set(
+                                arch,
+                                &cs,
+                                b.tile,
+                                Feature::CbSel { layer: b.layer, port },
+                                side.index() as u32 * arch.tracks as u32 + track as u32 + 1,
+                            );
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    // --- Enabled SB pipelining registers.
+    for &r in &d.sb_regs {
+        let n = graph.decode(r);
+        if let NodeKind::SbOut { side, track } = n.kind {
+            bs.set(arch, &cs, n.tile, Feature::SbRegEn { layer: n.layer, side, track }, 1);
+        }
+    }
+
+    // --- Tiles.
+    for (i, node) in d.dfg.nodes.iter().enumerate() {
+        let tile = d.placement.pos[i];
+        match &node.op {
+            Op::Alu { op, const_b } => {
+                bs.set(arch, &cs, tile, Feature::PeOp, op.encode());
+                if node.input_regs {
+                    for port in 0..arch.data_in_ports as u8 {
+                        bs.set(arch, &cs, tile, Feature::PeInRegEn { port }, 1);
+                    }
+                }
+                if let Some(c) = const_b {
+                    bs.set(arch, &cs, tile, Feature::PeConst, (*c as i32 as u32) & 0xFFFF);
+                }
+            }
+            Op::Delay { cycles, .. } => {
+                if node.tile_kind() == crate::arch::params::TileKind::Mem {
+                    bs.set(arch, &cs, tile, Feature::MemMode, MEM_LINEBUF);
+                    bs.set(arch, &cs, tile, Feature::MemParam { idx: 0 }, *cycles);
+                } else {
+                    // PE register-file delay line.
+                    bs.set(arch, &cs, tile, Feature::PeOp, crate::dfg::ir::AluOp::Pass.encode());
+                    bs.set(arch, &cs, tile, Feature::PeRfDelay { port: 0 }, *cycles);
+                }
+            }
+            Op::Rom { values } => {
+                bs.set(arch, &cs, tile, Feature::MemMode, MEM_ROM);
+                bs.set(arch, &cs, tile, Feature::MemParam { idx: 0 }, values.len() as u32);
+            }
+            Op::Accum { period } => {
+                bs.set(arch, &cs, tile, Feature::PeOp, crate::dfg::ir::AluOp::Mac.encode());
+                bs.set(arch, &cs, tile, Feature::MemParam { idx: 0 }, *period);
+            }
+            Op::Input { .. } | Op::FlushSrc => {
+                bs.set(arch, &cs, tile, Feature::IoMode, IO_IN);
+            }
+            Op::Output { .. } => {
+                bs.set(arch, &cs, tile, Feature::IoMode, IO_OUT);
+            }
+            Op::Sparse(_) => {
+                let is_mem = node.tile_kind() == crate::arch::params::TileKind::Mem;
+                bs.set(
+                    arch,
+                    &cs,
+                    tile,
+                    if is_mem { Feature::MemMode } else { Feature::PeOp },
+                    if is_mem { MEM_SCHED } else { crate::dfg::ir::AluOp::Add.encode() },
+                );
+                for port in 0..arch.data_in_ports as u8 {
+                    bs.set(arch, &cs, tile, Feature::FifoEn { port }, 1);
+                }
+            }
+            Op::Const { .. } => {}
+        }
+        // Schedule offsets for MEM generators.
+        if let Some(ms) = sched.mem_params.get(&(i as u32)) {
+            bs.set(arch, &cs, tile, Feature::MemParam { idx: 1 }, ms.start_offset);
+            for (k, &ext) in ms.extents.iter().take(4).enumerate() {
+                bs.set(arch, &cs, tile, Feature::MemParam { idx: 2 + k as u8 }, ext);
+            }
+        }
+        // Register-file delays allocated on input edges.
+        for (ei, e) in d.dfg.edges.iter().enumerate() {
+            if e.dst == i as u32 {
+                if let Some(&k) = d.rf_delay.get(&(ei as EdgeId)) {
+                    if k > 0 {
+                        bs.set(arch, &cs, tile, Feature::PeRfDelay { port: e.dst_port }, k);
+                    }
+                }
+            }
+        }
+    }
+    bs
+}
+
+/// Structural decode: rebuild the set of (tile, SB mux configs, CB taps,
+/// reg enables) and verify them against the design. Returns problems.
+pub fn verify_roundtrip(
+    d: &RoutedDesign,
+    bs: &Bitstream,
+    graph: &InterconnectGraph,
+) -> Vec<String> {
+    let arch = &d.arch;
+    let cs = ConfigSpace::new(arch);
+    let mut problems = Vec::new();
+
+    // Every enabled SB register must decode back on.
+    for &r in &d.sb_regs {
+        let n = graph.decode(r);
+        if let NodeKind::SbOut { side, track } = n.kind {
+            if bs.get(arch, &cs, n.tile, Feature::SbRegEn { layer: n.layer, side, track }) != 1 {
+                problems.push(format!("missing SbRegEn at {:?}", n));
+            }
+        }
+    }
+    // Every routed SbOut hop must have a mux select that reproduces its
+    // driver.
+    for route in &d.routes {
+        for path in &route.sink_paths {
+            for w in path.windows(2) {
+                let (a, b) = (graph.decode(w[0]), graph.decode(w[1]));
+                if let NodeKind::SbOut { side, track } = b.kind {
+                    let v = bs.get(arch, &cs, b.tile, Feature::SbSel { layer: b.layer, side, track });
+                    let decoded = crate::arch::bitstream::decode_sb_source(side, v);
+                    let expect = match a.kind {
+                        NodeKind::SbIn { side: s, .. } => SbSource::In { side: s },
+                        NodeKind::TileOut { port } => SbSource::TileOut { port },
+                        _ => unreachable!(),
+                    };
+                    if decoded != expect {
+                        problems.push(format!("SbSel mismatch at {:?}: {decoded:?} != {expect:?}", b));
+                    }
+                } else if let NodeKind::CbIn { port } = b.kind {
+                    let v = bs.get(arch, &cs, b.tile, Feature::CbSel { layer: b.layer, port });
+                    if v == 0 || v == CB_UNUSED {
+                        problems.push(format!("CbSel unset at {:?}", b));
+                    }
+                }
+            }
+        }
+    }
+    // Every PE's opcode survives.
+    for (i, node) in d.dfg.nodes.iter().enumerate() {
+        if let Op::Alu { op, .. } = &node.op {
+            let tile = d.placement.pos[i];
+            if bs.get(arch, &cs, tile, Feature::PeOp) != op.encode() {
+                problems.push(format!("PeOp mismatch at node {i}"));
+            }
+        }
+    }
+    problems
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{compile, CompileCtx, PipelineConfig};
+
+    #[test]
+    fn roundtrip_clean_for_pipelined_design() {
+        let ctx = CompileCtx::paper();
+        let app = crate::apps::dense::gaussian(64, 64, 2);
+        let c = compile(&app, &ctx, &PipelineConfig::with_postpnr(), 3).unwrap();
+        let bs = encode(&c.design, &c.schedule, &ctx.graph);
+        assert!(bs.len() > 100, "bitstream suspiciously small: {}", bs.len());
+        let problems = verify_roundtrip(&c.design, &bs, &ctx.graph);
+        assert!(problems.is_empty(), "{problems:?}");
+    }
+
+    #[test]
+    fn sparse_design_sets_fifo_enables() {
+        let ctx = CompileCtx::paper();
+        let app = crate::apps::sparse::vec_elemadd(1024, 0.2);
+        let c = compile(&app, &ctx, &PipelineConfig::compute_only(), 5).unwrap();
+        let bs = encode(&c.design, &c.schedule, &ctx.graph);
+        let cs = ConfigSpace::new(&c.design.arch);
+        let mut fifo_feats = 0;
+        for (_, f, v) in bs.features(&c.design.arch, &cs) {
+            if matches!(f, Feature::FifoEn { .. }) && v == 1 {
+                fifo_feats += 1;
+            }
+        }
+        assert!(fifo_feats > 0);
+    }
+
+    #[test]
+    fn pipelining_grows_bitstream() {
+        let ctx = CompileCtx::paper();
+        let app = crate::apps::dense::unsharp(64, 64, 1);
+        let c0 = compile(&app, &ctx, &PipelineConfig::none(), 3).unwrap();
+        let c1 = compile(&app, &ctx, &PipelineConfig::with_postpnr(), 3).unwrap();
+        let b0 = encode(&c0.design, &c0.schedule, &ctx.graph);
+        let b1 = encode(&c1.design, &c1.schedule, &ctx.graph);
+        // Pipelined designs carry register-enable words.
+        assert!(b1.len() > b0.len());
+    }
+
+    #[test]
+    fn duplication_stamp_on_encoded_design() {
+        // Low-unroll flow: encode the region design, stamp it across the
+        // array, and check the copies carry identical tile configs.
+        let ctx = CompileCtx::paper();
+        let c = crate::pipeline::compile_with_dup(
+            &|w, h, u| crate::apps::dense::gaussian(w, h, u),
+            256,
+            64,
+            8,
+            &ctx,
+            &PipelineConfig::with_postpnr(),
+            5,
+        )
+        .unwrap();
+        let plan = c.dup.clone().unwrap();
+        let mut bs = encode(&c.design, &c.schedule, &ctx.graph);
+        let cs = ConfigSpace::new(&c.design.arch);
+        let before = bs.len();
+        let copies = crate::pipeline::unroll::stamp_bitstream(&mut bs, &plan, &c.design.arch, &cs);
+        assert!(copies >= 2);
+        assert!(bs.len() > before, "stamping must add config words");
+    }
+}

@@ -1,0 +1,17 @@
+//! Fabric simulation and the power/EDP model.
+//!
+//! * [`dense`] — cycle-accurate simulation of a *routed, configured* design
+//!   at the fabric level: values travel along the actual route trees,
+//!   through the actual enabled switch-box registers, register-file delay
+//!   lines and PE input registers. Verified against the logical DFG
+//!   interpreter (`dfg::interp`) and, in the end-to-end example, against
+//!   the AOT-compiled JAX/Pallas golden model via PJRT.
+//! * [`power`] — the activity-based power and EDP model used to reproduce
+//!   Table I/II and Figs. 8/11.
+//! * [`encode`] — bitstream generation from a routed design (Fig. 2's last
+//!   stage) with a structural decode used for round-trip tests and the low
+//!   unrolling duplication stamping.
+
+pub mod dense;
+pub mod power;
+pub mod encode;

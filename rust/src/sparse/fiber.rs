@@ -1,0 +1,189 @@
+//! Compressed sparse fiber (CSF) trees.
+//!
+//! Coordinate scanners (`SparseOp::CrdScan`) walk one level of this
+//! structure: level `m` holds, for each parent entry, a fiber of sorted
+//! coordinates; leaf entries index the values array.
+
+use crate::apps::sparse::SparseTensor;
+
+/// One compression level.
+#[derive(Debug, Clone)]
+pub struct Level {
+    /// Fiber boundaries: fiber `p` occupies entries `seg[p]..seg[p+1]`.
+    pub seg: Vec<u32>,
+    /// Coordinates of each entry.
+    pub crd: Vec<u32>,
+}
+
+/// A CSF tensor: `levels[m]` for each mode, plus leaf values.
+#[derive(Debug, Clone)]
+pub struct FiberTree {
+    pub levels: Vec<Level>,
+    pub values: Vec<i64>,
+    pub shape: Vec<u32>,
+}
+
+impl FiberTree {
+    /// Build from a sorted-COO tensor.
+    pub fn from_coo(t: &SparseTensor) -> FiberTree {
+        let ndim = t.ndim;
+        let mut levels: Vec<Level> = Vec::with_capacity(ndim);
+        // Level 0: unique prefixes of length 1; level m: unique prefixes of
+        // length m+1 grouped under level m-1 entries.
+        let mut prev_prefixes: Vec<&[u32]> = vec![&[]];
+        let mut prev_entry_of_coord: Vec<usize> = vec![0; t.coords.len()]; // parent entry per nnz
+        for m in 0..ndim {
+            let mut seg = vec![0u32];
+            let mut crd = Vec::new();
+            let mut entry_of_coord = vec![0usize; t.coords.len()];
+            let mut cur_parent = 0usize;
+            let mut last: Option<(usize, u32)> = None; // (parent entry, coord)
+            for (ci, c) in t.coords.iter().enumerate() {
+                let parent = prev_entry_of_coord[ci];
+                // New fibers for skipped parents.
+                while cur_parent < parent {
+                    seg.push(crd.len() as u32);
+                    cur_parent += 1;
+                    last = None;
+                }
+                let coord = c[m];
+                if last != Some((parent, coord)) {
+                    crd.push(coord);
+                    last = Some((parent, coord));
+                }
+                entry_of_coord[ci] = crd.len() - 1;
+            }
+            // Close remaining fibers up to the number of parent entries.
+            let parent_entries = if m == 0 { 1 } else { levels[m - 1].crd.len() };
+            while seg.len() <= parent_entries {
+                seg.push(crd.len() as u32);
+            }
+            levels.push(Level { seg, crd });
+            prev_entry_of_coord = entry_of_coord;
+        }
+        let _ = prev_prefixes;
+        prev_prefixes = vec![];
+        let _ = prev_prefixes;
+        FiberTree { levels, values: t.values.clone(), shape: t.shape.clone() }
+    }
+
+    /// Number of entries at a level.
+    pub fn entries(&self, mode: usize) -> usize {
+        self.levels[mode].crd.len()
+    }
+
+    /// The fiber (crd slice + entry index range) of `parent` at `mode`.
+    pub fn fiber(&self, mode: usize, parent: u32) -> (&[u32], std::ops::Range<u32>) {
+        let l = &self.levels[mode];
+        let lo = l.seg[parent as usize];
+        let hi = l.seg[parent as usize + 1];
+        (&l.crd[lo as usize..hi as usize], lo..hi)
+    }
+
+    /// Is the underlying tensor dense (every coordinate present)?
+    pub fn is_dense(&self) -> bool {
+        let total: u64 = self.shape.iter().map(|&s| s as u64).product();
+        self.values.len() as u64 == total
+    }
+
+    /// Dense lookup for dense factors: row-major.
+    pub fn dense_get(&self, idx: &[u32]) -> i64 {
+        debug_assert!(self.is_dense());
+        let mut flat = 0u64;
+        for (d, &i) in idx.iter().enumerate() {
+            flat = flat * self.shape[d] as u64 + i as u64;
+        }
+        self.values[flat as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coo(shape: &[u32], entries: &[(&[u32], i64)]) -> SparseTensor {
+        SparseTensor {
+            ndim: shape.len(),
+            shape: shape.to_vec(),
+            coords: entries.iter().map(|(c, _)| c.to_vec()).collect(),
+            values: entries.iter().map(|(_, v)| *v).collect(),
+        }
+    }
+
+    #[test]
+    fn vector_fiber() {
+        let t = coo(&[8], &[(&[1], 10), (&[3], 30), (&[7], 70)]);
+        let f = FiberTree::from_coo(&t);
+        assert_eq!(f.levels.len(), 1);
+        let (crds, range) = f.fiber(0, 0);
+        assert_eq!(crds, &[1, 3, 7]);
+        assert_eq!(range, 0..3);
+        assert_eq!(f.values, vec![10, 30, 70]);
+    }
+
+    #[test]
+    fn matrix_fibers() {
+        // Rows: 0 -> {1:5, 2:6}; 2 -> {0:7}
+        let t = coo(&[4, 4], &[(&[0, 1], 5), (&[0, 2], 6), (&[2, 0], 7)]);
+        let f = FiberTree::from_coo(&t);
+        assert_eq!(f.levels[0].crd, vec![0, 2]);
+        let (row0, r0) = f.fiber(1, 0);
+        assert_eq!(row0, &[1, 2]);
+        assert_eq!(r0, 0..2);
+        let (row1, r1) = f.fiber(1, 1);
+        assert_eq!(row1, &[0]);
+        assert_eq!(r1, 2..3);
+    }
+
+    #[test]
+    fn three_level_tensor() {
+        let t = coo(
+            &[2, 2, 2],
+            &[(&[0, 0, 1], 1), (&[0, 1, 0], 2), (&[0, 1, 1], 3), (&[1, 0, 0], 4)],
+        );
+        let f = FiberTree::from_coo(&t);
+        assert_eq!(f.levels[0].crd, vec![0, 1]);
+        assert_eq!(f.levels[1].crd, vec![0, 1, 0]);
+        assert_eq!(f.levels[2].crd, vec![1, 0, 1, 0]);
+        // Fiber of (i=0, k=1) at level 2: coords {0, 1}.
+        let (fib, range) = f.fiber(2, 1);
+        assert_eq!(fib, &[0, 1]);
+        assert_eq!(range, 1..3);
+    }
+
+    #[test]
+    fn dense_detection_and_lookup() {
+        let mut entries = Vec::new();
+        let vals: Vec<i64> = (0..6).collect();
+        let mut coords = Vec::new();
+        for r in 0..2u32 {
+            for c in 0..3u32 {
+                coords.push(vec![r, c]);
+            }
+        }
+        for (c, v) in coords.iter().zip(&vals) {
+            entries.push((c.clone(), *v));
+        }
+        let t = SparseTensor {
+            ndim: 2,
+            shape: vec![2, 3],
+            coords,
+            values: vals,
+        };
+        let f = FiberTree::from_coo(&t);
+        assert!(f.is_dense());
+        assert_eq!(f.dense_get(&[1, 2]), 5);
+        let _ = entries;
+    }
+
+    #[test]
+    fn empty_parent_fibers_are_empty_ranges() {
+        let t = coo(&[4, 4], &[(&[0, 1], 5), (&[3, 2], 6)]);
+        let f = FiberTree::from_coo(&t);
+        assert_eq!(f.levels[0].crd, vec![0, 3]);
+        let (fib0, _) = f.fiber(1, 0);
+        let (fib1, _) = f.fiber(1, 1);
+        assert_eq!(fib0, &[1]);
+        assert_eq!(fib1, &[2]);
+    }
+}

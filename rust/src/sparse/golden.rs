@@ -1,0 +1,217 @@
+//! Direct reference computations for the four sparse kernels (Table II).
+//!
+//! These compute the same outputs, in the same emission order, as the
+//! streaming simulator (`sparse::sim`): nonzero-ordered walks over the
+//! fiber trees. Used as the correctness oracle in tests and the end-to-end
+//! example (alongside the PJRT golden models on densified inputs).
+
+use crate::apps::sparse::SparseData;
+
+use super::fiber::FiberTree;
+
+/// `a(i) = b(i) + c(i)` over the union of coordinates, in coordinate
+/// order.
+pub fn vec_elemadd(data: &SparseData) -> Vec<i64> {
+    let b = &data.tensors[0];
+    let c = &data.tensors[1];
+    let mut out = Vec::new();
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < b.nnz() || j < c.nnz() {
+        let bc = b.coords.get(i).map(|x| x[0]);
+        let cc = c.coords.get(j).map(|x| x[0]);
+        match (bc, cc) {
+            (Some(x), Some(y)) if x == y => {
+                out.push(b.values[i] + c.values[j]);
+                i += 1;
+                j += 1;
+            }
+            (Some(x), Some(y)) if x < y => {
+                out.push(b.values[i]);
+                i += 1;
+            }
+            (Some(_), Some(_)) => {
+                out.push(c.values[j]);
+                j += 1;
+            }
+            (Some(_), None) => {
+                out.push(b.values[i]);
+                i += 1;
+            }
+            (None, Some(_)) => {
+                out.push(c.values[j]);
+                j += 1;
+            }
+            (None, None) => unreachable!(),
+        }
+    }
+    out
+}
+
+/// `A(i,j) = B(i,j) * C(i,j)` over the intersection, in coordinate order.
+pub fn mat_elemmul(data: &SparseData) -> Vec<i64> {
+    let b = &data.tensors[0];
+    let c = &data.tensors[1];
+    let mut out = Vec::new();
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < b.nnz() && j < c.nnz() {
+        let bc = &b.coords[i];
+        let cc = &c.coords[j];
+        match bc.cmp(cc) {
+            std::cmp::Ordering::Equal => {
+                out.push(b.values[i] * c.values[j]);
+                i += 1;
+                j += 1;
+            }
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+        }
+    }
+    out
+}
+
+/// MTTKRP: for each `i` fiber of B (in order), emit `A(i, j)` for
+/// `j = 0..J`: `A(i,j) = sum_{k,l} B(i,k,l) * C(k,j) * D(l,j)`.
+pub fn mttkrp(data: &SparseData) -> Vec<i64> {
+    let b = &data.tensors[0];
+    let cf = FiberTree::from_coo(&data.tensors[1]);
+    let df = FiberTree::from_coo(&data.tensors[2]);
+    let jdim = data.tensors[1].shape[1] as usize;
+    let bf = FiberTree::from_coo(b);
+    let mut out = Vec::new();
+    let (i_crds, _) = bf.fiber(0, 0);
+    for (ie, _i) in i_crds.iter().enumerate() {
+        let mut acc = vec![0i64; jdim];
+        let (k_crds, k_range) = bf.fiber(1, ie as u32);
+        for (kk, &k) in k_crds.iter().enumerate() {
+            let ke = k_range.start + kk as u32;
+            let (l_crds, l_range) = bf.fiber(2, ke);
+            for (ll, &l) in l_crds.iter().enumerate() {
+                let le = l_range.start + ll as u32;
+                let bv = bf.values[le as usize];
+                for j in 0..jdim {
+                    acc[j] += bv * cf.dense_get(&[k, j as u32]) * df.dense_get(&[l, j as u32]);
+                }
+            }
+        }
+        out.extend_from_slice(&acc);
+    }
+    out
+}
+
+/// TTV: for each nonempty `(i,j)` fiber of B (in order), emit
+/// `A(i,j) = sum_k B(i,j,k) * c(k)`.
+pub fn ttv(data: &SparseData) -> Vec<i64> {
+    let b = FiberTree::from_coo(&data.tensors[0]);
+    let cv = FiberTree::from_coo(&data.tensors[1]);
+    let mut out = Vec::new();
+    let (i_crds, _) = b.fiber(0, 0);
+    for (ie, _) in i_crds.iter().enumerate() {
+        let (j_crds, j_range) = b.fiber(1, ie as u32);
+        for (jj, _) in j_crds.iter().enumerate() {
+            let je = j_range.start + jj as u32;
+            let (k_crds, k_range) = b.fiber(2, je);
+            let mut acc = 0i64;
+            for (kk, &k) in k_crds.iter().enumerate() {
+                let ke = k_range.start + kk as u32;
+                acc += b.values[ke as usize] * cv.dense_get(&[k]);
+            }
+            out.push(acc);
+        }
+    }
+    out
+}
+
+/// Dispatch by app name.
+pub fn golden(name: &str, data: &SparseData) -> Vec<i64> {
+    match name {
+        "vec_elemadd" => vec_elemadd(data),
+        "mat_elemmul" => mat_elemmul(data),
+        "mttkrp" => mttkrp(data),
+        "ttv" => ttv(data),
+        _ => panic!("unknown sparse app {name}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::sparse::{data_for, SparseTensor};
+
+    #[test]
+    fn vecadd_matches_dense_sum() {
+        let data = data_for("vec_elemadd", 3);
+        let out = vec_elemadd(&data);
+        let total: i64 = out.iter().sum();
+        let expect: i64 =
+            data.tensors[0].values.iter().sum::<i64>() + data.tensors[1].values.iter().sum::<i64>();
+        assert_eq!(total, expect);
+        // Length = |union|.
+        let mut union: std::collections::BTreeSet<u32> = std::collections::BTreeSet::new();
+        for t in &data.tensors {
+            union.extend(t.coords.iter().map(|c| c[0]));
+        }
+        assert_eq!(out.len(), union.len());
+    }
+
+    #[test]
+    fn elemmul_small_hand_case() {
+        let b = SparseTensor {
+            ndim: 2,
+            shape: vec![3, 3],
+            coords: vec![vec![0, 1], vec![1, 2], vec![2, 0]],
+            values: vec![2, 3, 4],
+        };
+        let c = SparseTensor {
+            ndim: 2,
+            shape: vec![3, 3],
+            coords: vec![vec![0, 1], vec![2, 0], vec![2, 2]],
+            values: vec![5, 7, 9],
+        };
+        let data = SparseData { tensors: vec![b, c] };
+        assert_eq!(mat_elemmul(&data), vec![10, 28]);
+    }
+
+    #[test]
+    fn ttv_hand_case() {
+        // B(0,0,k): {k=1: 2}, B(0,2,k): {k=0: 3}; c = [10, 100]
+        let b = SparseTensor {
+            ndim: 3,
+            shape: vec![1, 3, 2],
+            coords: vec![vec![0, 0, 1], vec![0, 2, 0]],
+            values: vec![2, 3],
+        };
+        let c = SparseTensor {
+            ndim: 1,
+            shape: vec![2],
+            coords: vec![vec![0], vec![1]],
+            values: vec![10, 100],
+        };
+        let data = SparseData { tensors: vec![b, c] };
+        assert_eq!(ttv(&data), vec![200, 30]);
+    }
+
+    #[test]
+    fn mttkrp_hand_case() {
+        // B(0,0,0)=2; C(0,j)=[1,10]; D(0,j)=[3,5]
+        let b = SparseTensor {
+            ndim: 3,
+            shape: vec![1, 1, 1],
+            coords: vec![vec![0, 0, 0]],
+            values: vec![2],
+        };
+        let dense = |rows: u32, vals: Vec<i64>| {
+            let cols = vals.len() as u32 / rows;
+            let mut coords = Vec::new();
+            for r in 0..rows {
+                for c in 0..cols {
+                    coords.push(vec![r, c]);
+                }
+            }
+            SparseTensor { ndim: 2, shape: vec![rows, cols], coords, values: vals }
+        };
+        let c = dense(1, vec![1, 10]);
+        let d = dense(1, vec![3, 5]);
+        let data = SparseData { tensors: vec![b, c, d] };
+        assert_eq!(mttkrp(&data), vec![6, 100]);
+    }
+}

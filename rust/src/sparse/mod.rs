@@ -1,0 +1,19 @@
+//! The sparse (ready-valid) streaming substrate (paper §VII).
+//!
+//! Sparse tensor applications have data-dependent memory accesses, so they
+//! execute as elastic dataflow: every inter-tile connection carries a
+//! data/valid/ready triple, and every compute unit has FIFOs at its inputs.
+//! This module provides:
+//!
+//! * [`fiber`] — compressed fiber-tree (CSF) storage built from COO
+//!   tensors, the structure the coordinate scanners walk;
+//! * [`sim`] — a cycle-level actor simulator: one FSM per sparse DFG node,
+//!   bounded FIFOs per edge (depth grows with the FIFO stages the sparse
+//!   pipelining pass inserts), full backpressure; measures cycles and
+//!   produces output values;
+//! * [`golden`] — direct (non-streaming) reference computations for the
+//!   four Table II kernels, used to check the simulator's outputs.
+
+pub mod fiber;
+pub mod sim;
+pub mod golden;

@@ -1,0 +1,668 @@
+//! Cycle-level ready-valid actor simulation of sparse dataflow graphs.
+//!
+//! One FSM actor per sparse DFG node; one bounded FIFO per DFG edge whose
+//! capacity is the architecture's base FIFO depth plus the FIFO stages the
+//! sparse pipelining pass inserted on that edge (each inserted stage also
+//! adds one cycle of latency, modeled as extra queue slots that must fill).
+//! An actor fires at most one token per cycle and only when *all* its
+//! output FIFOs have space — full backpressure, the §VII semantics.
+//!
+//! Token algebra (SAM-style):
+//! * `Crd { crd, pos }` — a coordinate with up to two fiber positions
+//!   (operand A / operand B; `u32::MAX` = absent after a union miss);
+//! * `Val { v, lane }` — a value on dense lane `lane` (the `j` dimension of
+//!   MTTKRP factors);
+//! * `End(l)` — end of a fiber at nesting level `l`;
+//! * `Done` — end of stream.
+
+use std::collections::VecDeque;
+
+use crate::apps::sparse::SparseData;
+use crate::dfg::ir::{Dfg, Op, SparseOp};
+
+use super::fiber::FiberTree;
+
+/// Absent position marker.
+pub const NOPOS: u32 = u32::MAX;
+
+/// Stream token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tok {
+    Crd { crd: u32, pos: [u32; 2] },
+    Val { v: i64, lane: u16 },
+    End(u8),
+    Done,
+}
+
+/// Simulation configuration derived from the app.
+#[derive(Debug, Clone)]
+pub struct SparseSimCfg {
+    /// Dense lane dimension J (1 when there are no dense factors).
+    pub j_dim: u16,
+    /// Fiber-end level at which `Reduce` emits and resets.
+    pub reduce_end_level: u8,
+    /// Base FIFO depth of compute-unit inputs.
+    pub base_fifo: usize,
+    /// Safety cap on simulated cycles.
+    pub max_cycles: u64,
+}
+
+impl SparseSimCfg {
+    pub fn for_app(name: &str, data: &SparseData) -> SparseSimCfg {
+        let (j_dim, reduce_end_level) = match name {
+            "mttkrp" => (data.tensors[1].shape[1] as u16, 1),
+            "ttv" => (1, 0),
+            _ => (1, 0),
+        };
+        SparseSimCfg { j_dim, reduce_end_level, base_fifo: 2, max_cycles: 50_000_000 }
+    }
+}
+
+/// Result of a sparse simulation.
+pub struct SparseRun {
+    /// Output values per output lane, in emission order.
+    pub outputs: Vec<i64>,
+    pub cycles: u64,
+    /// Tokens processed by the busiest actor (throughput bound).
+    pub max_actor_tokens: u64,
+}
+
+/// Per-actor state.
+enum ActorState {
+    /// Root scanner: next entry index.
+    ScanRoot { next: u32, done: bool },
+    /// Child scanner: pending fiber emission.
+    ScanChild { pending: VecDeque<Tok> },
+    /// Two-stream combinator lookahead.
+    None,
+    /// Repeat (hold-repeat): held value token.
+    RepeatHold { held: Option<Tok> },
+    /// Dense ValRead / Val-expanding Repeat: pending lane tokens.
+    Expand { pending: VecDeque<Tok> },
+    /// Reduce accumulators.
+    Reduce { acc: Vec<i64>, pending: VecDeque<Tok>, nonempty: bool },
+}
+
+/// The simulator.
+pub struct SparseSim<'a> {
+    g: &'a Dfg,
+    cfg: SparseSimCfg,
+    fibers: Vec<FiberTree>,
+    /// FIFO per edge.
+    fifo: Vec<VecDeque<Tok>>,
+    cap: Vec<usize>,
+    state: Vec<ActorState>,
+    tokens_processed: Vec<u64>,
+    /// in-edges (by port) and out-edges per node.
+    ins: Vec<Vec<usize>>,
+    outs: Vec<Vec<usize>>,
+    outputs: Vec<i64>,
+    done_at_output: bool,
+}
+
+impl<'a> SparseSim<'a> {
+    pub fn new(g: &'a Dfg, data: &SparseData, cfg: SparseSimCfg) -> SparseSim<'a> {
+        let fibers = data.tensors.iter().map(FiberTree::from_coo).collect();
+        let mut ins: Vec<Vec<usize>> = vec![Vec::new(); g.nodes.len()];
+        let mut outs: Vec<Vec<usize>> = vec![Vec::new(); g.nodes.len()];
+        let mut cap = Vec::new();
+        for (ei, e) in g.edges.iter().enumerate() {
+            if matches!(g.node(e.src).op, Op::FlushSrc) {
+                cap.push(0);
+                continue;
+            }
+            ins[e.dst as usize].push(ei);
+            outs[e.src as usize].push(ei);
+            cap.push(cfg.base_fifo + e.fifos as usize);
+        }
+        for l in ins.iter_mut() {
+            l.sort_by_key(|&ei| g.edges[ei].dst_port);
+        }
+        let state = g
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| match &n.op {
+                Op::Sparse(SparseOp::CrdScan { .. }) => {
+                    if ins[i].is_empty() {
+                        ActorState::ScanRoot { next: 0, done: false }
+                    } else {
+                        ActorState::ScanChild { pending: VecDeque::new() }
+                    }
+                }
+                Op::Sparse(SparseOp::Repeat) => {
+                    if ins[i].len() >= 2 {
+                        ActorState::RepeatHold { held: None }
+                    } else {
+                        ActorState::Expand { pending: VecDeque::new() }
+                    }
+                }
+                Op::Sparse(SparseOp::ValRead { .. }) => ActorState::Expand { pending: VecDeque::new() },
+                Op::Sparse(SparseOp::Reduce) => ActorState::Reduce {
+                    acc: vec![0; cfg.j_dim as usize],
+                    pending: VecDeque::new(),
+                    nonempty: false,
+                },
+                _ => ActorState::None,
+            })
+            .collect();
+        SparseSim {
+            fifo: vec![VecDeque::new(); g.edges.len()],
+            cap,
+            state,
+            tokens_processed: vec![0; g.nodes.len()],
+            ins,
+            outs,
+            outputs: Vec::new(),
+            done_at_output: false,
+            g,
+            cfg,
+            fibers,
+        }
+    }
+
+    fn out_space(&self, n: usize) -> bool {
+        self.outs[n].iter().all(|&ei| self.fifo[ei].len() < self.cap[ei])
+    }
+
+    fn push_out(&mut self, n: usize, t: Tok) {
+        for &ei in &self.outs[n] {
+            self.fifo[ei].push_back(t);
+        }
+        self.tokens_processed[n] += 1;
+    }
+
+    fn head(&self, n: usize, port: usize) -> Option<Tok> {
+        self.ins[n].get(port).and_then(|&ei| self.fifo[ei].front().copied())
+    }
+
+    fn pop(&mut self, n: usize, port: usize) {
+        let ei = self.ins[n][port];
+        self.fifo[ei].pop_front();
+    }
+
+    /// Which `pos` slot a scanner/reader of `tensor` consumes.
+    fn slot(tensor: u8) -> usize {
+        usize::from(tensor != 0)
+    }
+
+    /// Fire one actor if possible. Returns true if it made progress.
+    fn fire(&mut self, n: usize) -> bool {
+        if !self.out_space(n) {
+            return false;
+        }
+        let node = &self.g.nodes[n];
+        match &node.op {
+            Op::Sparse(sp) => self.fire_sparse(n, sp.clone()),
+            Op::Output { .. } => {
+                if let Some(t) = self.head(n, 0) {
+                    self.pop(n, 0);
+                    self.tokens_processed[n] += 1;
+                    match t {
+                        Tok::Val { v, .. } => self.outputs.push(v),
+                        Tok::Done => self.done_at_output = true,
+                        _ => {}
+                    }
+                    true
+                } else {
+                    false
+                }
+            }
+            Op::Input { .. } | Op::FlushSrc => false,
+            _ => false,
+        }
+    }
+
+    fn fire_sparse(&mut self, n: usize, sp: SparseOp) -> bool {
+        match sp {
+            SparseOp::CrdScan { tensor, mode } => {
+                let slot = Self::slot(tensor);
+                // Child scanners drain pending first.
+                let is_child = !self.ins[n].is_empty();
+                if is_child {
+                    if let ActorState::ScanChild { pending } = &mut self.state[n] {
+                        if let Some(t) = pending.pop_front() {
+                            self.push_out(n, t);
+                            return true;
+                        }
+                    }
+                    let Some(t) = self.head(n, 0) else { return false };
+                    self.pop(n, 0);
+                    let ft = &self.fibers[tensor as usize];
+                    match t {
+                        Tok::Crd { pos, .. } => {
+                            let parent = pos[slot];
+                            let mut toks = VecDeque::new();
+                            if parent != NOPOS {
+                                let (crds, range) = ft.fiber(mode as usize, parent);
+                                for (k, &c) in crds.iter().enumerate() {
+                                    let mut p = [NOPOS, NOPOS];
+                                    p[slot] = range.start + k as u32;
+                                    toks.push_back(Tok::Crd { crd: c, pos: p });
+                                }
+                            }
+                            toks.push_back(Tok::End(0));
+                            let first = toks.pop_front().unwrap();
+                            if let ActorState::ScanChild { pending } = &mut self.state[n] {
+                                *pending = toks;
+                            }
+                            self.push_out(n, first);
+                        }
+                        Tok::End(l) => self.push_out(n, Tok::End(l + 1)),
+                        Tok::Done => self.push_out(n, Tok::Done),
+                        Tok::Val { .. } => panic!("scanner received a value token"),
+                    }
+                    true
+                } else {
+                    // Root scanner.
+                    let ft = &self.fibers[tensor as usize];
+                    let (total, tok) = {
+                        let (crds, range) = ft.fiber(0, 0);
+                        if let ActorState::ScanRoot { next, done } = &self.state[n] {
+                            if *done {
+                                return false;
+                            }
+                            if (*next as usize) < crds.len() {
+                                let k = *next as usize;
+                                let mut p = [NOPOS, NOPOS];
+                                p[slot] = range.start + k as u32;
+                                (crds.len(), Some(Tok::Crd { crd: crds[k], pos: p }))
+                            } else {
+                                (crds.len(), None)
+                            }
+                        } else {
+                            unreachable!()
+                        }
+                    };
+                    match tok {
+                        Some(t) => {
+                            self.push_out(n, t);
+                            if let ActorState::ScanRoot { next, .. } = &mut self.state[n] {
+                                *next += 1;
+                            }
+                            let _ = total;
+                        }
+                        None => {
+                            self.push_out(n, Tok::Done);
+                            if let ActorState::ScanRoot { done, .. } = &mut self.state[n] {
+                                *done = true;
+                            }
+                        }
+                    }
+                    true
+                }
+            }
+            SparseOp::Intersect | SparseOp::Union => {
+                let union = matches!(sp, SparseOp::Union);
+                let (Some(a), Some(b)) = (self.head(n, 0), self.head(n, 1)) else {
+                    return false;
+                };
+                match (a, b) {
+                    (Tok::Crd { crd: ca, pos: pa }, Tok::Crd { crd: cb, pos: pb }) => {
+                        if ca == cb {
+                            self.pop(n, 0);
+                            self.pop(n, 1);
+                            self.push_out(n, Tok::Crd { crd: ca, pos: [pa[0], pb[1]] });
+                        } else if ca < cb {
+                            self.pop(n, 0);
+                            if union {
+                                self.push_out(n, Tok::Crd { crd: ca, pos: [pa[0], NOPOS] });
+                            } else {
+                                self.tokens_processed[n] += 1;
+                            }
+                        } else {
+                            self.pop(n, 1);
+                            if union {
+                                self.push_out(n, Tok::Crd { crd: cb, pos: [NOPOS, pb[1]] });
+                            } else {
+                                self.tokens_processed[n] += 1;
+                            }
+                        }
+                    }
+                    (Tok::Crd { crd, pos }, Tok::End(_) | Tok::Done) => {
+                        self.pop(n, 0);
+                        if union {
+                            self.push_out(n, Tok::Crd { crd, pos: [pos[0], NOPOS] });
+                        } else {
+                            self.tokens_processed[n] += 1;
+                        }
+                    }
+                    (Tok::End(_) | Tok::Done, Tok::Crd { crd, pos }) => {
+                        self.pop(n, 1);
+                        if union {
+                            self.push_out(n, Tok::Crd { crd, pos: [NOPOS, pos[1]] });
+                        } else {
+                            self.tokens_processed[n] += 1;
+                        }
+                    }
+                    (Tok::End(la), Tok::End(lb)) => {
+                        debug_assert_eq!(la, lb, "misaligned fiber ends");
+                        self.pop(n, 0);
+                        self.pop(n, 1);
+                        self.push_out(n, Tok::End(la));
+                    }
+                    (Tok::Done, Tok::Done) => {
+                        self.pop(n, 0);
+                        self.pop(n, 1);
+                        self.push_out(n, Tok::Done);
+                    }
+                    (Tok::Done, Tok::End(_)) | (Tok::End(_), Tok::Done) => {
+                        panic!("misaligned streams at combinator");
+                    }
+                    (Tok::Val { .. }, _) | (_, Tok::Val { .. }) => {
+                        panic!("combinator received a value token");
+                    }
+                }
+                true
+            }
+            SparseOp::ValRead { tensor } => {
+                // Drain pending lane expansion first.
+                if let ActorState::Expand { pending } = &mut self.state[n] {
+                    if let Some(t) = pending.pop_front() {
+                        self.push_out(n, t);
+                        return true;
+                    }
+                }
+                let Some(t) = self.head(n, 0) else { return false };
+                self.pop(n, 0);
+                let ft = &self.fibers[tensor as usize];
+                match t {
+                    Tok::Crd { crd, pos } => {
+                        if ft.is_dense() && ft.shape.len() == 2 {
+                            // Dense factor: expand across the J lanes.
+                            let j = ft.shape[1] as usize;
+                            let mut toks: VecDeque<Tok> = (0..j)
+                                .map(|jj| Tok::Val {
+                                    v: ft.dense_get(&[crd, jj as u32]),
+                                    lane: jj as u16,
+                                })
+                                .collect();
+                            let first = toks.pop_front().unwrap();
+                            if let ActorState::Expand { pending } = &mut self.state[n] {
+                                *pending = toks;
+                            }
+                            self.push_out(n, first);
+                        } else if ft.is_dense() {
+                            self.push_out(n, Tok::Val { v: ft.dense_get(&[crd]), lane: 0 });
+                        } else {
+                            let p = pos[Self::slot(tensor)];
+                            let v = if p == NOPOS { 0 } else { ft.values[p as usize] };
+                            self.push_out(n, Tok::Val { v, lane: 0 });
+                        }
+                    }
+                    other => self.push_out(n, other),
+                }
+                true
+            }
+            SparseOp::Repeat => {
+                let two_input = self.ins[n].len() >= 2;
+                if two_input {
+                    // Hold-repeat: emit held crd once per reference token.
+                    let Some(r) = self.head(n, 1) else { return false };
+                    match r {
+                        Tok::Crd { .. } => {
+                            // Need a held value.
+                            let have = matches!(
+                                &self.state[n],
+                                ActorState::RepeatHold { held: Some(_) }
+                            );
+                            if !have {
+                                let Some(h) = self.head(n, 0) else { return false };
+                                self.pop(n, 0);
+                                match h {
+                                    Tok::Crd { .. } => {
+                                        if let ActorState::RepeatHold { held } = &mut self.state[n] {
+                                            *held = Some(h);
+                                        }
+                                    }
+                                    // Ends/Done on the held stream are
+                                    // driven by the reference stream; drop.
+                                    _ => return true,
+                                }
+                            }
+                            let held = match &self.state[n] {
+                                ActorState::RepeatHold { held } => held.unwrap(),
+                                _ => unreachable!(),
+                            };
+                            self.pop(n, 1);
+                            self.push_out(n, held);
+                        }
+                        Tok::End(0) => {
+                            // End of one reference fiber: release the held
+                            // token and forward the end.
+                            self.pop(n, 1);
+                            if let ActorState::RepeatHold { held } = &mut self.state[n] {
+                                *held = None;
+                            }
+                            self.push_out(n, Tok::End(0));
+                        }
+                        Tok::End(l) => {
+                            self.pop(n, 1);
+                            self.push_out(n, Tok::End(l));
+                        }
+                        Tok::Done => {
+                            self.pop(n, 1);
+                            // Drain the held stream's Done if present.
+                            if let Some(Tok::Done) = self.head(n, 0) {
+                                self.pop(n, 0);
+                            }
+                            self.push_out(n, Tok::Done);
+                        }
+                        Tok::Val { .. } => panic!("reference stream carries values"),
+                    }
+                    true
+                } else {
+                    // Single input: pass Crd/End/Done through; expand Val
+                    // across J lanes.
+                    if let ActorState::Expand { pending } = &mut self.state[n] {
+                        if let Some(t) = pending.pop_front() {
+                            self.push_out(n, t);
+                            return true;
+                        }
+                    }
+                    let Some(t) = self.head(n, 0) else { return false };
+                    self.pop(n, 0);
+                    match t {
+                        Tok::Val { v, .. } if self.cfg.j_dim > 1 => {
+                            let mut toks: VecDeque<Tok> = (0..self.cfg.j_dim)
+                                .map(|j| Tok::Val { v, lane: j })
+                                .collect();
+                            let first = toks.pop_front().unwrap();
+                            if let ActorState::Expand { pending } = &mut self.state[n] {
+                                *pending = toks;
+                            }
+                            self.push_out(n, first);
+                        }
+                        other => self.push_out(n, other),
+                    }
+                    true
+                }
+            }
+            SparseOp::SpAlu(op) => {
+                let (Some(a), Some(b)) = (self.head(n, 0), self.head(n, 1)) else {
+                    return false;
+                };
+                match (a, b) {
+                    (Tok::Val { v: va, lane: la }, Tok::Val { v: vb, lane: lb }) => {
+                        debug_assert_eq!(la, lb, "lane-misaligned values at ALU");
+                        self.pop(n, 0);
+                        self.pop(n, 1);
+                        self.push_out(n, Tok::Val { v: op.eval(va, vb, 0), lane: la });
+                    }
+                    (Tok::End(la), Tok::End(lb)) => {
+                        debug_assert_eq!(la, lb);
+                        self.pop(n, 0);
+                        self.pop(n, 1);
+                        self.push_out(n, Tok::End(la));
+                    }
+                    (Tok::Done, Tok::Done) => {
+                        self.pop(n, 0);
+                        self.pop(n, 1);
+                        self.push_out(n, Tok::Done);
+                    }
+                    _ => {
+                        panic!("misaligned streams at sparse ALU: {a:?} vs {b:?}")
+                    }
+                }
+                true
+            }
+            SparseOp::Reduce => {
+                if let ActorState::Reduce { pending, .. } = &mut self.state[n] {
+                    if let Some(t) = pending.pop_front() {
+                        self.push_out(n, t);
+                        return true;
+                    }
+                }
+                let Some(t) = self.head(n, 0) else { return false };
+                self.pop(n, 0);
+                let level = self.cfg.reduce_end_level;
+                let jd = self.cfg.j_dim as usize;
+                if let ActorState::Reduce { acc, pending, nonempty } = &mut self.state[n] {
+                    match t {
+                        Tok::Val { v, lane } => {
+                            acc[lane as usize] += v;
+                            *nonempty = true;
+                            self.tokens_processed[n] += 1;
+                        }
+                        Tok::End(l) if l == level => {
+                            if *nonempty {
+                                let mut toks: VecDeque<Tok> = (0..jd)
+                                    .map(|j| Tok::Val { v: acc[j], lane: j as u16 })
+                                    .collect();
+                                acc.iter_mut().for_each(|a| *a = 0);
+                                *nonempty = false;
+                                let first = toks.pop_front().unwrap();
+                                *pending = toks;
+                                self.push_out(n, first);
+                            } else {
+                                self.tokens_processed[n] += 1;
+                            }
+                        }
+                        Tok::End(l) if l < level => {
+                            // Inner fiber end: keep accumulating.
+                            self.tokens_processed[n] += 1;
+                        }
+                        Tok::End(l) => self.push_out(n, Tok::End(l - level - 1)),
+                        Tok::Crd { .. } => {
+                            self.tokens_processed[n] += 1; // coordinate metadata
+                        }
+                        Tok::Done => self.push_out(n, Tok::Done),
+                    }
+                }
+                true
+            }
+        }
+    }
+
+    /// Run to completion. Returns outputs + cycle count.
+    pub fn run(mut self) -> SparseRun {
+        let order: Vec<usize> = self.g.topo_order().into_iter().map(|n| n as usize).collect();
+        let mut cycles = 0u64;
+        while !self.done_at_output && cycles < self.cfg.max_cycles {
+            let mut progress = false;
+            // Fire in reverse topo order so downstream drains first
+            // (consumer-before-producer within a cycle = registered FIFOs).
+            for &n in order.iter().rev() {
+                if self.fire(n) {
+                    progress = true;
+                }
+            }
+            cycles += 1;
+            if !progress && !self.done_at_output {
+                panic!("sparse simulation deadlocked at cycle {cycles}");
+            }
+        }
+        assert!(self.done_at_output, "simulation exceeded max_cycles");
+        SparseRun {
+            outputs: self.outputs,
+            cycles,
+            max_actor_tokens: self.tokens_processed.iter().copied().max().unwrap_or(0),
+        }
+    }
+}
+
+/// Convenience: simulate an app by name with its data bundle.
+pub fn simulate_app(name: &str, g: &Dfg, data: &SparseData) -> SparseRun {
+    let cfg = SparseSimCfg::for_app(name, data);
+    SparseSim::new(g, data, cfg).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::sparse::{data_for, SparseData, SparseTensor};
+    use crate::sparse::golden;
+
+    fn check(name: &str, app: crate::apps::App, data: &SparseData) {
+        let run = simulate_app(name, &app.dfg, data);
+        let expect = golden::golden(name, data);
+        assert_eq!(run.outputs, expect, "{name} outputs mismatch");
+        assert!(run.cycles > 0);
+    }
+
+    #[test]
+    fn vec_elemadd_matches_golden() {
+        let data = data_for("vec_elemadd", 7);
+        check("vec_elemadd", crate::apps::sparse::vec_elemadd(4096, 0.25), &data);
+    }
+
+    #[test]
+    fn mat_elemmul_matches_golden() {
+        let data = data_for("mat_elemmul", 9);
+        check("mat_elemmul", crate::apps::sparse::mat_elemmul(128, 128, 0.1), &data);
+    }
+
+    #[test]
+    fn ttv_matches_golden() {
+        let data = data_for("ttv", 11);
+        check("ttv", crate::apps::sparse::tensor_ttv(48, 48, 48, 0.05), &data);
+    }
+
+    #[test]
+    fn mttkrp_matches_golden() {
+        let data = data_for("mttkrp", 13);
+        check("mttkrp", crate::apps::sparse::tensor_mttkrp(32, 32, 32, 8, 0.05), &data);
+    }
+
+    #[test]
+    fn tiny_handmade_union() {
+        let b = SparseTensor {
+            ndim: 1,
+            shape: vec![8],
+            coords: vec![vec![1], vec![3]],
+            values: vec![10, 30],
+        };
+        let c = SparseTensor {
+            ndim: 1,
+            shape: vec![8],
+            coords: vec![vec![3], vec![5]],
+            values: vec![300, 500],
+        };
+        let data = SparseData { tensors: vec![b, c] };
+        let app = crate::apps::sparse::vec_elemadd(8, 0.3);
+        let run = simulate_app("vec_elemadd", &app.dfg, &data);
+        assert_eq!(run.outputs, vec![10, 330, 500]);
+    }
+
+    #[test]
+    fn fifo_stages_increase_latency_not_results() {
+        let data = data_for("vec_elemadd", 7);
+        let app = crate::apps::sparse::vec_elemadd(4096, 0.25);
+        let base = simulate_app("vec_elemadd", &app.dfg, &data);
+        let mut g2 = app.dfg.clone();
+        for e in &mut g2.edges {
+            e.fifos = 2;
+        }
+        let piped = simulate_app("vec_elemadd", &g2, &data);
+        assert_eq!(base.outputs, piped.outputs);
+    }
+
+    #[test]
+    fn empty_tensors_complete() {
+        let empty = SparseTensor { ndim: 1, shape: vec![8], coords: vec![], values: vec![] };
+        let data = SparseData { tensors: vec![empty.clone(), empty] };
+        let app = crate::apps::sparse::vec_elemadd(8, 0.0);
+        let run = simulate_app("vec_elemadd", &app.dfg, &data);
+        assert!(run.outputs.is_empty());
+    }
+}

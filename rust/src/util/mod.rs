@@ -1,0 +1,60 @@
+//! In-house substrates.
+//!
+//! The build environment is fully offline with only the `xla` crate (and its
+//! dependency closure) vendored, so every general-purpose utility the
+//! toolkit needs — deterministic PRNG, JSON emission, a property-testing
+//! mini-framework, statistics, and a micro-benchmark harness — is
+//! implemented here rather than pulled from crates.io.
+
+pub mod rng;
+pub mod json;
+pub mod stats;
+pub mod prop;
+pub mod bench;
+pub mod cli;
+
+/// Round a float to `digits` decimal places (used by report emitters so the
+/// generated tables are stable across runs).
+pub fn round_to(x: f64, digits: u32) -> f64 {
+    let p = 10f64.powi(digits as i32);
+    (x * p).round() / p
+}
+
+/// Format a float with engineering-friendly precision: 3 significant-ish
+/// digits without scientific notation for the magnitudes we print.
+pub fn fmt_sig(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    let a = x.abs();
+    if a >= 100.0 {
+        format!("{:.0}", x)
+    } else if a >= 10.0 {
+        format!("{:.1}", x)
+    } else if a >= 1.0 {
+        format!("{:.2}", x)
+    } else {
+        format!("{:.3}", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_to_works() {
+        assert_eq!(round_to(1.23456, 2), 1.23);
+        assert_eq!(round_to(1.235, 2), 1.24);
+        assert_eq!(round_to(-1.235, 0), -1.0);
+    }
+
+    #[test]
+    fn fmt_sig_ranges() {
+        assert_eq!(fmt_sig(0.0), "0");
+        assert_eq!(fmt_sig(123.4), "123");
+        assert_eq!(fmt_sig(12.34), "12.3");
+        assert_eq!(fmt_sig(1.234), "1.23");
+        assert_eq!(fmt_sig(0.1234), "0.123");
+    }
+}
