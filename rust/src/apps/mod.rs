@@ -59,6 +59,49 @@ pub fn small_dense_suite() -> Vec<App> {
     ]
 }
 
+/// Every benchmark name the CLI and the `explore` grid accept.
+pub const APP_NAMES: [&str; 9] = [
+    "gaussian", "unsharp", "camera", "harris", "resnet",
+    "vec_elemadd", "mat_elemmul", "mttkrp", "ttv",
+];
+
+/// Build a benchmark by name at paper-scale dimensions (Table I / II).
+/// Sparse workloads always use paper dimensions — their input bundles
+/// (`sparse::data_for`) are generated at those shapes.
+pub fn by_name(name: &str) -> Option<App> {
+    Some(match name {
+        "gaussian" => dense::gaussian(6400, 4800, 16),
+        "unsharp" => dense::unsharp(1536, 2560, 4),
+        "camera" => dense::camera(2560, 1920, 4),
+        "harris" => dense::harris(1530, 2554, 4),
+        "resnet" => dense::resnet_conv5x(),
+        "vec_elemadd" => sparse::vec_elemadd(4096, 0.25),
+        "mat_elemmul" => sparse::mat_elemmul(128, 128, 0.1),
+        "mttkrp" => sparse::tensor_mttkrp(32, 32, 32, 8, 0.05),
+        "ttv" => sparse::tensor_ttv(48, 48, 48, 0.05),
+        _ => return None,
+    })
+}
+
+/// Build a benchmark by name at test-scale dimensions (small frames for
+/// cycle-accurate simulation and fast unit tests). Sparse workloads are
+/// paper-scale for the reason given on [`by_name`].
+pub fn by_name_tiny(name: &str) -> Option<App> {
+    Some(match name {
+        "gaussian" => dense::gaussian(64, 64, 2),
+        "unsharp" => dense::unsharp(64, 64, 1),
+        "camera" => dense::camera(64, 64, 1),
+        "harris" => dense::harris(64, 64, 1),
+        "resnet" => dense::resnet_small(),
+        _ => return by_name(name),
+    })
+}
+
+/// Whether a benchmark name denotes a sparse (ready-valid) workload.
+pub fn is_sparse_name(name: &str) -> bool {
+    matches!(name, "vec_elemadd" | "mat_elemmul" | "mttkrp" | "ttv")
+}
+
 /// The paper's four sparse applications (Table II).
 pub fn paper_sparse_suite() -> Vec<App> {
     vec![

@@ -22,13 +22,16 @@ pub fn dense_specs() -> Vec<(&'static str, DenseBuilder, u64, u64, u64)> {
     ]
 }
 
-/// Scale down annealing/iteration effort for `--fast` runs.
+/// Scale down annealing/iteration effort for `--fast` runs. Idempotent:
+/// `tune(tune(c, true), true) == tune(c, true)`, so the explore engine can
+/// fold it into effective configs before content-hashing them.
 pub fn tune(cfg: &PipelineConfig, fast: bool) -> PipelineConfig {
     let mut c = cfg.clone();
     if fast {
         if let Some(p) = &mut c.postpnr {
-            *p = PostPnrParams { max_iters: 25, ..p.clone() };
+            *p = PostPnrParams { max_iters: p.max_iters.min(25), ..p.clone() };
         }
+        c.place_effort = c.place_effort.min(0.35);
     }
     c
 }
@@ -45,14 +48,6 @@ pub fn compile_dense(
     seed: u64,
 ) -> Result<Compiled, String> {
     let cfg = tune(cfg, fast);
-    let mut pp_effort_cfg = cfg.clone();
-    if fast {
-        // keep identical semantics; effort shrink happens inside compile
-        // via PostPnrParams above. Placement effort is handled by seed-
-        // stable defaults.
-        pp_effort_cfg = cfg.clone();
-    }
-    let _ = pp_effort_cfg;
     if name == "resnet" {
         let app = crate::apps::dense::resnet_conv5x();
         return compile(&app, ctx, &cfg, seed).map_err(|e| format!("{name}: {e}"));
@@ -69,6 +64,40 @@ pub fn compile_dense(
     }
 }
 
+/// Critical-path delay (ns) and EDP (mJ*ms) for a dense benchmark under a
+/// config, reusing a cached `cascade explore` result when one exists.
+///
+/// The explore engine keys its persistent metrics cache by the *effective*
+/// configuration (after `tune`), the app, the seed and the architecture,
+/// so any summary point that a prior exploration already compiled is
+/// served from `results/explore_cache/` without recompiling. Freshly
+/// computed points are stored back, so `cascade exp summary` also warms
+/// the cache for later explorations. `use_cache = false` skips the lookup
+/// (but still stores) — the records have no notion of compiler version,
+/// so force a recompute after changing any compiler pass.
+pub fn dense_crit_edp(
+    name: &str,
+    cfg: &PipelineConfig,
+    ctx: &CompileCtx,
+    fast: bool,
+    seed: u64,
+    use_cache: bool,
+) -> Result<(f64, f64), String> {
+    use crate::explore::cache::{point_key, DiskCache, PointMetrics};
+    let effective = tune(cfg, fast);
+    let key = point_key(name, &effective, seed, "paper", &ctx.arch);
+    let disk = DiskCache::open_default();
+    if use_cache {
+        if let Some(m) = disk.load(key) {
+            return Ok((m.crit_ns, m.edp));
+        }
+    }
+    let c = compile_dense(name, cfg, ctx, fast, seed)?;
+    let m = PointMetrics::from_compiled(&c);
+    disk.store(key, &m);
+    Ok((m.crit_ns, m.edp))
+}
+
 /// One dense measurement row.
 #[derive(Debug, Clone)]
 pub struct DenseRow {
@@ -82,12 +111,15 @@ pub struct DenseRow {
 
 impl DenseRow {
     pub fn from_compiled(app: &str, config: &str, c: &Compiled) -> DenseRow {
-        let mut power = estimate(&c.design, c.fmax_mhz(), &EnergyModel::default());
         // A duplicated design was compiled as one region; the full array
         // runs `copies` electrically identical regions.
-        if let Some(plan) = &c.dup {
-            power.dynamic_mw *= plan.copies as f64;
-        }
+        let copies = c.dup.as_ref().map(|p| p.copies).unwrap_or(1);
+        let power = crate::sim::power::estimate_scaled(
+            &c.design,
+            c.fmax_mhz(),
+            copies,
+            &EnergyModel::default(),
+        );
         DenseRow {
             app: app.to_string(),
             config: config.to_string(),

@@ -23,8 +23,11 @@ pub mod summary;
 use crate::pipeline::CompileCtx;
 
 /// Run an experiment by id. `fast` shrinks annealing effort and iteration
-/// caps (CI mode); results keep their shape but are noisier.
-pub fn run(id: &str, ctx: &CompileCtx, fast: bool, seed: u64) -> Result<(), String> {
+/// caps (CI mode); results keep their shape but are noisier. `use_cache`
+/// lets `summary` reuse persistent `cascade explore` results
+/// (`results/explore_cache/`); pass `false` (CLI `--no-cache`) to force
+/// recompilation, e.g. after changing a compiler pass.
+pub fn run(id: &str, ctx: &CompileCtx, fast: bool, seed: u64, use_cache: bool) -> Result<(), String> {
     match id {
         "fig6" => fig6::run(ctx, fast, seed),
         "fig7" => dense_exp::fig7(ctx, fast, seed),
@@ -34,10 +37,10 @@ pub fn run(id: &str, ctx: &CompileCtx, fast: bool, seed: u64) -> Result<(), Stri
         "fig10" => sparse_exp::fig10(ctx, fast, seed),
         "table2" => sparse_exp::table2(ctx, fast, seed),
         "fig11" => sparse_exp::fig11(ctx, fast, seed),
-        "summary" => summary::run(ctx, fast, seed),
+        "summary" => summary::run(ctx, fast, seed, use_cache),
         "all" => {
             for id in ALL_IDS {
-                run(id, ctx, fast, seed)?;
+                run(id, ctx, fast, seed, use_cache)?;
             }
             Ok(())
         }

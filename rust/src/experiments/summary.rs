@@ -8,20 +8,23 @@
 use crate::pipeline::{CompileCtx, PipelineConfig};
 use crate::util::json::Json;
 
-use super::common::{compile_dense, emit, md_table, measure_sparse, DenseRow};
+use super::common::{dense_crit_edp, emit, md_table, measure_sparse};
 
-pub fn run(ctx: &CompileCtx, fast: bool, seed: u64) -> Result<(), String> {
+pub fn run(ctx: &CompileCtx, fast: bool, seed: u64, use_cache: bool) -> Result<(), String> {
     let mut rows = Vec::new();
     let mut j_rows = Json::Arr(vec![]);
     let mut dense_cp = Vec::new();
     let mut dense_edp = Vec::new();
     for app in ["gaussian", "unsharp", "camera", "harris", "resnet"] {
-        let un = compile_dense(app, &PipelineConfig::none(), ctx, fast, seed)?;
-        let pi = compile_dense(app, &PipelineConfig::full(), ctx, fast, seed)?;
-        let r0 = DenseRow::from_compiled(app, "un", &un);
-        let r1 = DenseRow::from_compiled(app, "pi", &pi);
-        let cp = r0.crit_ns / r1.crit_ns;
-        let edp = r0.edp() / r1.edp();
+        // Served from results/explore_cache when a prior `cascade explore`
+        // (or summary run) already compiled the point; `--no-cache`
+        // forces fresh compiles.
+        let (crit0, edp0) =
+            dense_crit_edp(app, &PipelineConfig::none(), ctx, fast, seed, use_cache)?;
+        let (crit1, edp1) =
+            dense_crit_edp(app, &PipelineConfig::full(), ctx, fast, seed, use_cache)?;
+        let cp = crit0 / crit1;
+        let edp = edp0 / edp1;
         dense_cp.push(cp);
         dense_edp.push(edp);
         rows.push(vec![

@@ -1,0 +1,498 @@
+//! Content-hash keyed artifact caching for design-space exploration.
+//!
+//! Two layers:
+//!
+//! * [`ArtifactCache`] — in-memory, thread-safe memoization of full
+//!   [`Compiled`] artifacts keyed by the content hash of the evaluation
+//!   point. Per-key slot locks give in-flight deduplication: when several
+//!   workers race on the same effective configuration (e.g. the shared
+//!   `level=none` baseline reached through different grid axes), exactly
+//!   one compiles and the rest block on the slot and reuse the artifact.
+//! * [`DiskCache`] — persistent memoization of the *measured* point
+//!   metrics under `results/explore_cache/`, so a repeated `cascade
+//!   explore` (or a later `cascade exp summary`) skips recompilation
+//!   entirely. Records are flat `key=value` text; floats round-trip
+//!   exactly via Rust's shortest-representation formatting.
+//!
+//! The cache key hashes the *effective* configuration (every field of the
+//! resolved [`PipelineConfig`]), the app name and scale, the PnR seed, and
+//! the architecture signature — never the grid coordinates — so distinct
+//! grid points that resolve identically share an entry, and any change to
+//! a knob that affects the artifact changes the key.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::arch::params::ArchParams;
+use crate::pipeline::{Compiled, PipelineConfig};
+
+/// FNV-1a over bytes: the crate-wide content-hash primitive.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Canonical serialization of an effective pipeline configuration. Every
+/// field participates; `{:?}` on floats is the shortest round-trip form,
+/// so distinct values never collide textually.
+pub fn config_signature(cfg: &PipelineConfig) -> String {
+    let bcast = match &cfg.broadcast {
+        None => "off".to_string(),
+        Some(b) => format!(
+            "{}/{}/{}",
+            b.fanout_threshold, b.max_stage_fanout, b.max_buffers_per_net
+        ),
+    };
+    let postpnr = match &cfg.postpnr {
+        None => "off".to_string(),
+        Some(p) => format!("{}/{:?}", p.max_iters, p.min_gain),
+    };
+    format!(
+        "compute={};rf={:?};bcast={};alpha={:?};effort={:?};postpnr={};dup={};flush={}",
+        cfg.compute,
+        cfg.regfile_threshold,
+        bcast,
+        cfg.place_alpha,
+        cfg.place_effort,
+        postpnr,
+        cfg.unroll_dup,
+        cfg.hardened_flush
+    )
+}
+
+/// Canonical serialization of every architecture parameter (a change to
+/// any knob that can affect a compiled artifact must change the key —
+/// regfile words and FIFO depth are future explore axes, per ROADMAP).
+pub fn arch_signature(arch: &ArchParams) -> String {
+    format!(
+        "{}x{};memp={};tracks={};ports={}/{}/{}/{};rf={};fifo={};hflush={}",
+        arch.cols,
+        arch.rows,
+        arch.mem_col_period,
+        arch.tracks,
+        arch.data_in_ports,
+        arch.data_out_ports,
+        arch.bit_in_ports,
+        arch.bit_out_ports,
+        arch.regfile_words,
+        arch.fifo_depth,
+        arch.hardened_flush
+    )
+}
+
+/// Content-hash key for one evaluation point. The crate version
+/// participates so persistent records from an older build miss rather
+/// than serving stale numbers — bump the version in `Cargo.toml` when a
+/// compiler pass changes behaviour (or pass `--no-cache` for one run).
+pub fn point_key(
+    app: &str,
+    cfg: &PipelineConfig,
+    seed: u64,
+    scale: &str,
+    arch: &ArchParams,
+) -> u64 {
+    let s = format!(
+        "ver={};app={app};scale={scale};seed={seed};arch={};{}",
+        env!("CARGO_PKG_VERSION"),
+        arch_signature(arch),
+        config_signature(cfg)
+    );
+    fnv1a(s.as_bytes())
+}
+
+fn mix(h: u64, v: u64) -> u64 {
+    // FNV-1a over the value's 8 bytes.
+    let mut h = h;
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Order-independent fingerprint of a compiled artifact: placement,
+/// enabled pipelining registers, routes, timing and schedule. Two
+/// artifacts with equal fingerprints are bit-identical as far as every
+/// downstream consumer (STA, simulation, bitstream encoding) can observe.
+pub fn fingerprint(c: &Compiled) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    h = mix(h, c.design.dfg.nodes.len() as u64);
+    h = mix(h, c.design.dfg.edges.len() as u64);
+    for (i, t) in c.design.placement.pos.iter().enumerate() {
+        h = mix(h, (t.x as u64) << 32 | (t.y as u64) << 8 | c.design.placement.slot[i] as u64);
+    }
+    let mut regs: Vec<u64> = c.design.sb_regs.iter().map(|&r| r as u64).collect();
+    regs.sort_unstable();
+    for r in regs {
+        h = mix(h, r);
+    }
+    let mut rf: Vec<(u64, u64)> =
+        c.design.rf_delay.iter().map(|(&e, &d)| (e as u64, d as u64)).collect();
+    rf.sort_unstable();
+    for (e, d) in rf {
+        h = mix(h, e << 32 | d);
+    }
+    for route in &c.design.routes {
+        h = mix(h, route.net as u64);
+        for path in &route.sink_paths {
+            h = mix(h, path.len() as u64);
+            for &n in path {
+                h = mix(h, n as u64);
+            }
+        }
+    }
+    h = mix(h, c.sta.period_ps.to_bits());
+    h = mix(h, c.schedule.total_cycles);
+    h = mix(h, c.schedule.fill_latency);
+    let (sb, rfw, fifos) = c.design.pipelining_resources();
+    h = mix(h, sb as u64);
+    h = mix(h, rfw);
+    h = mix(h, fifos);
+    h
+}
+
+/// Measured metrics for one evaluation point — the unit the disk cache
+/// stores and the Pareto analysis consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointMetrics {
+    /// Critical-path delay (ns).
+    pub crit_ns: f64,
+    pub fmax_mhz: f64,
+    /// Per-frame runtime (dense) or total kernel runtime (sparse), ms.
+    pub runtime_ms: f64,
+    /// Total power (mW), duplication copies included.
+    pub power_mw: f64,
+    /// Energy over the runtime (mJ).
+    pub energy_mj: f64,
+    /// Energy-delay product (mJ*ms).
+    pub edp: f64,
+    /// Pipelining register footprint: SB regs + RF words + FIFO stages.
+    pub pipe_regs: u64,
+    /// Array utilization (%).
+    pub util_pct: f64,
+    /// Simulated cycles (sparse workloads; 0 for dense).
+    pub cycles: u64,
+    /// Fingerprint of the compiled artifact the metrics came from.
+    pub artifact_fp: u64,
+}
+
+impl PointMetrics {
+    /// Measure a compiled dense artifact (duplication-aware power).
+    pub fn from_compiled(c: &Compiled) -> PointMetrics {
+        let copies = c.dup.as_ref().map(|p| p.copies).unwrap_or(1);
+        let m = crate::sim::power::EnergyModel::default();
+        let p = crate::sim::power::estimate_scaled(&c.design, c.fmax_mhz(), copies, &m);
+        let runtime_ms = c.runtime_ms();
+        let (sb, rf, fifos) = c.design.pipelining_resources();
+        PointMetrics {
+            crit_ns: c.sta.period_ps / 1000.0,
+            fmax_mhz: c.fmax_mhz(),
+            runtime_ms,
+            power_mw: p.total_mw(),
+            energy_mj: p.energy_mj(runtime_ms),
+            edp: p.edp(runtime_ms),
+            pipe_regs: sb as u64 + rf + fifos,
+            util_pct: c.map_report.utilization() * 100.0,
+            cycles: 0,
+            artifact_fp: fingerprint(c),
+        }
+    }
+
+    /// Measure a compiled sparse artifact given its simulated cycle count.
+    pub fn from_sparse(c: &Compiled, cycles: u64) -> PointMetrics {
+        let m = crate::sim::power::EnergyModel::default();
+        let p = crate::sim::power::estimate_scaled(&c.design, c.fmax_mhz(), 1, &m);
+        // cycles / MHz = microseconds.
+        let runtime_ms = cycles as f64 / c.fmax_mhz() / 1000.0;
+        let (sb, rf, fifos) = c.design.pipelining_resources();
+        PointMetrics {
+            crit_ns: c.sta.period_ps / 1000.0,
+            fmax_mhz: c.fmax_mhz(),
+            runtime_ms,
+            power_mw: p.total_mw(),
+            energy_mj: p.energy_mj(runtime_ms),
+            edp: p.edp(runtime_ms),
+            pipe_regs: sb as u64 + rf + fifos,
+            util_pct: c.map_report.utilization() * 100.0,
+            cycles,
+            artifact_fp: fingerprint(c),
+        }
+    }
+
+    fn to_record(&self) -> String {
+        format!(
+            "v=1\ncrit_ns={:?}\nfmax_mhz={:?}\nruntime_ms={:?}\npower_mw={:?}\n\
+             energy_mj={:?}\nedp={:?}\npipe_regs={}\nutil_pct={:?}\ncycles={}\nartifact_fp={}\n",
+            self.crit_ns,
+            self.fmax_mhz,
+            self.runtime_ms,
+            self.power_mw,
+            self.energy_mj,
+            self.edp,
+            self.pipe_regs,
+            self.util_pct,
+            self.cycles,
+            self.artifact_fp
+        )
+    }
+
+    fn from_record(text: &str) -> Option<PointMetrics> {
+        let mut kv = HashMap::new();
+        for line in text.lines() {
+            let (k, v) = line.split_once('=')?;
+            kv.insert(k, v);
+        }
+        if kv.get("v") != Some(&"1") {
+            return None;
+        }
+        let f = |k: &str| kv.get(k)?.parse::<f64>().ok();
+        let u = |k: &str| kv.get(k)?.parse::<u64>().ok();
+        Some(PointMetrics {
+            crit_ns: f("crit_ns")?,
+            fmax_mhz: f("fmax_mhz")?,
+            runtime_ms: f("runtime_ms")?,
+            power_mw: f("power_mw")?,
+            energy_mj: f("energy_mj")?,
+            edp: f("edp")?,
+            pipe_regs: u("pipe_regs")?,
+            util_pct: f("util_pct")?,
+            cycles: u("cycles")?,
+            artifact_fp: u("artifact_fp")?,
+        })
+    }
+}
+
+type Slot = Arc<Mutex<Option<Result<Arc<Compiled>, String>>>>;
+
+/// Thread-safe in-memory artifact cache with in-flight deduplication,
+/// plus a measured-metrics side table so duplicate points skip both the
+/// compile *and* the measurement (the sparse functional simulation can
+/// cost as much as the compile).
+///
+/// Artifacts are retained for the cache's lifetime — one per *distinct*
+/// effective configuration, not per grid point. An eviction policy for
+/// very large grids is a ROADMAP follow-up.
+#[derive(Default)]
+pub struct ArtifactCache {
+    slots: Mutex<HashMap<u64, Slot>>,
+    metrics: Mutex<HashMap<u64, PointMetrics>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl ArtifactCache {
+    pub fn new() -> ArtifactCache {
+        ArtifactCache::default()
+    }
+
+    /// Return the cached artifact for `key`, or run `compile` to produce
+    /// it. Concurrent callers with the same key block until the first
+    /// finishes and then share its result; callers with different keys
+    /// proceed in parallel (only the slot-map lookup is serialized).
+    pub fn get_or_compile(
+        &self,
+        key: u64,
+        compile: impl FnOnce() -> Result<Compiled, String>,
+    ) -> Result<Arc<Compiled>, String> {
+        let slot = {
+            let mut slots = self.slots.lock().unwrap();
+            slots.entry(key).or_default().clone()
+        };
+        let mut guard = slot.lock().unwrap();
+        if let Some(res) = &*guard {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return res.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let res = compile().map(Arc::new);
+        *guard = Some(res.clone());
+        res
+    }
+
+    /// Measured metrics for `key`, if some worker already produced them.
+    /// Counts as a cache hit: the caller skips compile and measurement.
+    pub fn measured(&self, key: u64) -> Option<PointMetrics> {
+        let m = self.metrics.lock().unwrap().get(&key).cloned();
+        if m.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        m
+    }
+
+    /// Record the measured metrics for `key` (first writer wins; the
+    /// compile is deterministic, so any writer's value is identical).
+    pub fn record_measured(&self, key: u64, m: &PointMetrics) {
+        self.metrics.lock().unwrap().entry(key).or_insert_with(|| m.clone());
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+/// Persistent metrics cache: one `<key>.rec` file per point under `dir`.
+pub struct DiskCache {
+    dir: PathBuf,
+    disk_hits: AtomicUsize,
+}
+
+impl DiskCache {
+    /// Default location, shared by `cascade explore` and `cascade exp
+    /// summary`.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from("results/explore_cache")
+    }
+
+    /// Open a cache at `dir`, creating the directory. Falls back to a
+    /// load-nothing/store-nothing cache if the directory cannot be
+    /// created (e.g. read-only filesystem).
+    pub fn at(dir: impl AsRef<Path>) -> DiskCache {
+        let dir = dir.as_ref().to_path_buf();
+        let _ = std::fs::create_dir_all(&dir);
+        DiskCache { dir, disk_hits: AtomicUsize::new(0) }
+    }
+
+    pub fn open_default() -> DiskCache {
+        DiskCache::at(DiskCache::default_dir())
+    }
+
+    fn path(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("{key:016x}.rec"))
+    }
+
+    pub fn load(&self, key: u64) -> Option<PointMetrics> {
+        let text = std::fs::read_to_string(self.path(key)).ok()?;
+        let m = PointMetrics::from_record(&text)?;
+        self.disk_hits.fetch_add(1, Ordering::Relaxed);
+        Some(m)
+    }
+
+    pub fn store(&self, key: u64, m: &PointMetrics) {
+        let _ = std::fs::write(self.path(key), m.to_record());
+    }
+
+    pub fn disk_hits(&self) -> usize {
+        self.disk_hits.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{compile, CompileCtx, PipelineConfig};
+    use crate::util::prop::forall;
+
+    #[test]
+    fn key_depends_on_every_knob() {
+        let arch = ArchParams::paper();
+        let base = PipelineConfig::full();
+        let k0 = point_key("gaussian", &base, 3, "paper", &arch);
+        assert_eq!(k0, point_key("gaussian", &base, 3, "paper", &arch));
+        assert_ne!(k0, point_key("harris", &base, 3, "paper", &arch));
+        assert_ne!(k0, point_key("gaussian", &base, 4, "paper", &arch));
+        assert_ne!(k0, point_key("gaussian", &base, 3, "tiny", &arch));
+        let mut alpha = base.clone();
+        alpha.place_alpha = 1.5;
+        assert_ne!(k0, point_key("gaussian", &alpha, 3, "paper", &arch));
+        let mut effort = base.clone();
+        effort.place_effort = 0.35;
+        assert_ne!(k0, point_key("gaussian", &effort, 3, "paper", &arch));
+        // Architecture knobs beyond the grid dimensions participate too.
+        let mut rf = arch.clone();
+        rf.regfile_words = 64;
+        assert_ne!(k0, point_key("gaussian", &base, 3, "paper", &rf));
+        let mut fifo = arch.clone();
+        fifo.fifo_depth = 4;
+        assert_ne!(k0, point_key("gaussian", &base, 3, "paper", &fifo));
+    }
+
+    #[test]
+    fn record_round_trips_exactly() {
+        let m = PointMetrics {
+            crit_ns: 24.319999999999997,
+            fmax_mhz: 41.118421052631575,
+            runtime_ms: 0.123456789,
+            power_mw: 903.0000001,
+            energy_mj: 1.0 / 3.0,
+            edp: 7.25e-4,
+            pipe_regs: 421,
+            util_pct: 93.75,
+            cycles: 123456,
+            artifact_fp: 0xDEADBEEF12345678,
+        };
+        let back = PointMetrics::from_record(&m.to_record()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn record_rejects_garbage() {
+        assert!(PointMetrics::from_record("").is_none());
+        assert!(PointMetrics::from_record("v=2\ncrit_ns=1.0\n").is_none());
+        assert!(PointMetrics::from_record("v=1\ncrit_ns=abc\n").is_none());
+    }
+
+    #[test]
+    fn disk_cache_round_trip() {
+        let dir = std::env::temp_dir().join(format!("cascade-dc-{}", std::process::id()));
+        let dc = DiskCache::at(&dir);
+        let m = PointMetrics {
+            crit_ns: 1.5,
+            fmax_mhz: 666.6,
+            runtime_ms: 0.25,
+            power_mw: 100.0,
+            energy_mj: 0.025,
+            edp: 0.00625,
+            pipe_regs: 7,
+            util_pct: 50.0,
+            cycles: 0,
+            artifact_fp: 99,
+        };
+        assert!(dc.load(42).is_none());
+        dc.store(42, &m);
+        assert_eq!(dc.load(42), Some(m));
+        assert_eq!(dc.disk_hits(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The satellite property: the cache returns bit-identical `Compiled`
+    /// artifacts to a fresh compile, and never recompiles a cached key.
+    #[test]
+    fn cache_returns_bit_identical_artifacts() {
+        let ctx = CompileCtx::paper();
+        forall("cache artifacts bit-identical", 3, |g| {
+            let seed = g.int(1, 40) as u64;
+            let level = *g.pick(&["none", "compute"]);
+            let cfg = PipelineConfig::by_name(level).unwrap();
+            let app = crate::apps::by_name_tiny("gaussian").unwrap();
+            let fresh = compile(&app, &ctx, &cfg, seed).unwrap();
+            let key = point_key("gaussian", &cfg, seed, "tiny", &ctx.arch);
+            let cache = ArtifactCache::new();
+            let first = cache
+                .get_or_compile(key, || {
+                    compile(&app, &ctx, &cfg, seed).map_err(|e| e.to_string())
+                })
+                .unwrap();
+            let second = cache
+                .get_or_compile(key, || panic!("cached key must not recompile"))
+                .unwrap();
+            assert_eq!(cache.hits(), 1);
+            assert_eq!(cache.misses(), 1);
+            assert_eq!(fingerprint(&fresh), fingerprint(&first));
+            assert_eq!(fingerprint(&first), fingerprint(&second));
+            assert_eq!(
+                PointMetrics::from_compiled(&fresh),
+                PointMetrics::from_compiled(&first)
+            );
+        });
+    }
+}

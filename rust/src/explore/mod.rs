@@ -1,0 +1,74 @@
+//! Design-space exploration engine (`cascade explore`).
+//!
+//! Cascade's evaluation sweeps pipelining levels by hand (Fig. 7/10); the
+//! paper's real promise — trading frequency against energy and resources —
+//! is a design-space problem. This subsystem makes it one:
+//!
+//! * [`space`] — the declarative exploration grid ([`space::ExploreSpec`]):
+//!   (app × pipelining level × placement alpha × PnR seed × post-PnR
+//!   iteration budget), with axis builders and deterministic point
+//!   enumeration.
+//! * [`runner`] — a multi-threaded work-queue executor over
+//!   `std::thread::scope` whose result order is independent of thread
+//!   count and scheduling.
+//! * [`cache`] — content-hash keyed artifact memoization: in-memory
+//!   deduplication of effective-config collisions within a run, plus a
+//!   persistent metrics cache under `results/explore_cache/` that repeat
+//!   invocations (and `cascade exp summary`) reuse.
+//! * [`pareto`] — n-dimensional dominance frontier and knee-point
+//!   selection over (critical-path delay, EDP, pipelining registers).
+//! * [`report`] — ranked markdown summary + deterministic JSON emission;
+//!   byte-identical across cache-served re-runs.
+//!
+//! A Capstone-style `--power-cap` (mW) marks points whose estimated total
+//! power exceeds the budget as infeasible before the frontier is computed.
+
+pub mod cache;
+pub mod pareto;
+pub mod report;
+pub mod runner;
+pub mod space;
+
+pub use cache::{ArtifactCache, DiskCache, PointMetrics};
+pub use runner::{run, PointResult, RunOutcome};
+pub use space::{ExplorePoint, ExploreSpec, Scale};
+
+use crate::pipeline::CompileCtx;
+
+/// CLI entry point: evaluate the grid, analyze, emit `results/explore.*`,
+/// and print the cache traffic (stdout only — reports stay run-invariant).
+pub fn run_cli(
+    spec: &ExploreSpec,
+    ctx: &CompileCtx,
+    threads: usize,
+    use_disk_cache: bool,
+) -> Result<(), String> {
+    spec.validate()?;
+    let points = spec.points();
+    println!(
+        "explore: {} points ({}) on {} thread(s)...",
+        points.len(),
+        spec.shape(),
+        threads.max(1)
+    );
+    let disk = if use_disk_cache { Some(DiskCache::open_default()) } else { None };
+    let outcome = run(spec, ctx, threads, disk.as_ref());
+
+    let analyses = report::analyze(spec, &outcome.results);
+    let md = report::to_markdown(spec, &outcome.results, &analyses);
+    let json = report::to_json(spec, &outcome.results, &analyses);
+    crate::experiments::common::emit("explore", "Design-space exploration", &md, &json);
+
+    println!(
+        "cache: {} hit(s) ({} in-memory, {} disk), {} compile(s)",
+        outcome.stats.total_hits(),
+        outcome.stats.memory_hits,
+        outcome.stats.disk_hits,
+        outcome.stats.misses
+    );
+    let failed: usize = analyses.iter().map(|a| a.failed.len()).sum();
+    if failed > 0 {
+        return Err(format!("{failed} point(s) failed to compile"));
+    }
+    Ok(())
+}

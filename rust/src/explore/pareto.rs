@@ -1,0 +1,157 @@
+//! N-dimensional Pareto dominance analysis and knee-point selection.
+//!
+//! All objectives are minimized. The `explore` engine uses the objective
+//! vector (critical-path delay ns, EDP mJ*ms, pipelining-register count),
+//! but the functions are dimension-agnostic.
+
+/// Whether `a` dominates `b`: no worse in every objective and strictly
+/// better in at least one. Ties (equal vectors) dominate in neither
+/// direction, so duplicated points both stay on the frontier.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly_better = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly_better = true;
+        }
+    }
+    strictly_better
+}
+
+/// Indices of the non-dominated points, ascending. O(n^2) pairwise scan —
+/// exploration grids are hundreds of points, not millions.
+pub fn pareto_front(points: &[Vec<f64>]) -> Vec<usize> {
+    let mut front = Vec::new();
+    'outer: for (i, p) in points.iter().enumerate() {
+        for (j, q) in points.iter().enumerate() {
+            if i != j && dominates(q, p) {
+                continue 'outer;
+            }
+        }
+        front.push(i);
+    }
+    front
+}
+
+/// Knee point of a frontier: the member closest (Euclidean) to the ideal
+/// point after per-objective min-max normalization over the frontier.
+/// Degenerate spans (all frontier members equal in an objective) are
+/// normalized to 0 so they do not bias the distance. Ties resolve to the
+/// lowest index. `None` for an empty frontier.
+pub fn knee_point(points: &[Vec<f64>], front: &[usize]) -> Option<usize> {
+    if front.is_empty() {
+        return None;
+    }
+    let dims = points[front[0]].len();
+    let mut lo = vec![f64::INFINITY; dims];
+    let mut hi = vec![f64::NEG_INFINITY; dims];
+    for &i in front {
+        for d in 0..dims {
+            lo[d] = lo[d].min(points[i][d]);
+            hi[d] = hi[d].max(points[i][d]);
+        }
+    }
+    let mut best: Option<(usize, f64)> = None;
+    for &i in front {
+        let mut dist2 = 0.0;
+        for d in 0..dims {
+            let span = hi[d] - lo[d];
+            let z = if span > 0.0 { (points[i][d] - lo[d]) / span } else { 0.0 };
+            dist2 += z * z;
+        }
+        match best {
+            Some((_, bd)) if bd <= dist2 => {}
+            _ => best = Some((i, dist2)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[f64]) -> Vec<f64> {
+        xs.to_vec()
+    }
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[2.0, 2.0]));
+        assert!(!dominates(&[2.0, 2.0], &[1.0, 1.0]));
+        // Trade-off: neither dominates.
+        assert!(!dominates(&[1.0, 3.0], &[3.0, 1.0]));
+        assert!(!dominates(&[3.0, 1.0], &[1.0, 3.0]));
+    }
+
+    #[test]
+    fn dominance_ties() {
+        // Equal vectors dominate in neither direction.
+        assert!(!dominates(&[1.0, 2.0], &[1.0, 2.0]));
+        // Equal in one dim, better in another: dominates.
+        assert!(dominates(&[1.0, 1.0], &[1.0, 2.0]));
+    }
+
+    #[test]
+    fn front_single_point_is_degenerate_front() {
+        let pts = vec![v(&[5.0, 5.0, 5.0])];
+        assert_eq!(pareto_front(&pts), vec![0]);
+        assert_eq!(knee_point(&pts, &[0]), Some(0));
+    }
+
+    #[test]
+    fn front_keeps_duplicates_and_tradeoffs() {
+        let pts = vec![
+            v(&[1.0, 4.0]), // frontier
+            v(&[4.0, 1.0]), // frontier
+            v(&[1.0, 4.0]), // duplicate of 0: also frontier (tie)
+            v(&[4.0, 4.0]), // dominated by 0 and 1
+            v(&[2.0, 2.0]), // frontier (trade-off)
+        ];
+        assert_eq!(pareto_front(&pts), vec![0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn front_in_three_dims() {
+        let pts = vec![
+            v(&[1.0, 9.0, 9.0]),
+            v(&[9.0, 1.0, 9.0]),
+            v(&[9.0, 9.0, 1.0]),
+            v(&[2.0, 2.0, 2.0]),
+            v(&[9.0, 9.0, 9.0]),  // dominated by everything above
+            v(&[2.0, 2.0, 3.0]),  // dominated by [2,2,2]
+        ];
+        assert_eq!(pareto_front(&pts), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn knee_prefers_balanced_point() {
+        let pts = vec![
+            v(&[0.0, 10.0]),
+            v(&[10.0, 0.0]),
+            v(&[1.0, 1.0]), // near-ideal corner
+        ];
+        let front = pareto_front(&pts);
+        assert_eq!(front, vec![0, 1, 2]);
+        assert_eq!(knee_point(&pts, &front), Some(2));
+    }
+
+    #[test]
+    fn knee_handles_degenerate_span_and_empty_front() {
+        // All equal in dim 1: span 0 must not produce NaN.
+        let pts = vec![v(&[1.0, 5.0]), v(&[2.0, 5.0])];
+        let front = pareto_front(&pts);
+        assert_eq!(front, vec![0]);
+        assert_eq!(knee_point(&pts, &front), Some(0));
+        assert_eq!(knee_point(&pts, &[]), None);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(pareto_front(&[]).is_empty());
+    }
+}

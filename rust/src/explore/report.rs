@@ -1,0 +1,315 @@
+//! Reporting for exploration runs: Pareto analysis per application, a
+//! ranked markdown summary, and deterministic JSON emission via
+//! [`crate::util::json`].
+//!
+//! Reports contain only run-invariant content (no cache traffic, no wall
+//! clock), so a re-run served from the artifact cache emits byte-identical
+//! files — the property the CLI acceptance check relies on.
+
+use crate::util::json::Json;
+
+use super::pareto::{knee_point, pareto_front};
+use super::runner::PointResult;
+use super::space::ExploreSpec;
+
+/// Pareto analysis of one application's feasible points.
+#[derive(Debug)]
+pub struct AppAnalysis {
+    pub app: String,
+    /// Point ids on the frontier, ascending.
+    pub frontier: Vec<usize>,
+    /// Knee point id (balanced trade-off), if the frontier is non-empty.
+    pub knee: Option<usize>,
+    /// Point ids excluded by the power cap.
+    pub capped: Vec<usize>,
+    /// Point ids whose compile failed.
+    pub failed: Vec<usize>,
+}
+
+/// Objective vector: (critical-path delay ns, EDP mJ*ms, pipelining regs).
+fn objectives(m: &super::cache::PointMetrics) -> Vec<f64> {
+    vec![m.crit_ns, m.edp, m.pipe_regs as f64]
+}
+
+/// Analyze each app's points independently — objectives are only
+/// commensurable within one application.
+pub fn analyze(spec: &ExploreSpec, results: &[PointResult]) -> Vec<AppAnalysis> {
+    spec.apps
+        .iter()
+        .map(|app| {
+            let mut ids = Vec::new();
+            let mut vecs = Vec::new();
+            let mut capped = Vec::new();
+            let mut failed = Vec::new();
+            for r in results.iter().filter(|r| &r.point.app == app) {
+                match &r.metrics {
+                    Ok(m) => {
+                        if crate::sim::power::within_cap(m.power_mw, spec.power_cap_mw) {
+                            ids.push(r.point.id);
+                            vecs.push(objectives(m));
+                        } else {
+                            capped.push(r.point.id);
+                        }
+                    }
+                    Err(_) => failed.push(r.point.id),
+                }
+            }
+            let front_local = pareto_front(&vecs);
+            let knee_local = knee_point(&vecs, &front_local);
+            AppAnalysis {
+                app: app.clone(),
+                frontier: front_local.iter().map(|&i| ids[i]).collect(),
+                knee: knee_local.map(|i| ids[i]),
+                capped,
+                failed,
+            }
+        })
+        .collect()
+}
+
+/// Deterministic JSON document for the run.
+pub fn to_json(spec: &ExploreSpec, results: &[PointResult], analyses: &[AppAnalysis]) -> Json {
+    let mut j = Json::obj();
+
+    let mut jspec = Json::obj();
+    jspec
+        .set("apps", spec.apps.iter().map(|s| s.as_str().into()).collect::<Vec<Json>>())
+        .set("levels", spec.levels.iter().map(|s| s.as_str().into()).collect::<Vec<Json>>())
+        .set("alphas", spec.alphas.clone())
+        .set("seeds", spec.seeds.clone())
+        .set("iters", spec.iters.iter().map(|&i| i.into()).collect::<Vec<Json>>())
+        .set("power_cap_mw", spec.power_cap_mw.map_or(Json::Null, Json::from))
+        .set("fast", spec.fast)
+        .set("scale", spec.scale.tag());
+    j.set("spec", jspec);
+
+    let mut jpoints = Json::Arr(vec![]);
+    for r in results {
+        let mut jp = Json::obj();
+        jp.set("id", r.point.id)
+            .set("app", r.point.app.as_str())
+            .set("level", r.point.level.as_str())
+            .set("alpha", r.point.alpha.map_or(Json::Null, Json::from))
+            .set("seed", r.point.seed)
+            .set("iters", r.point.iters.map_or(Json::Null, Json::from));
+        match &r.metrics {
+            Ok(m) => {
+                jp.set("crit_ns", m.crit_ns)
+                    .set("fmax_mhz", m.fmax_mhz)
+                    .set("runtime_ms", m.runtime_ms)
+                    .set("power_mw", m.power_mw)
+                    .set("energy_mj", m.energy_mj)
+                    .set("edp", m.edp)
+                    .set("pipe_regs", m.pipe_regs)
+                    .set("util_pct", m.util_pct);
+                if m.cycles > 0 {
+                    jp.set("cycles", m.cycles);
+                }
+            }
+            Err(e) => {
+                jp.set("error", e.as_str());
+            }
+        }
+        jpoints.push(jp);
+    }
+    j.set("points", jpoints);
+
+    let mut jfronts = Json::Arr(vec![]);
+    for a in analyses {
+        let mut ja = Json::obj();
+        ja.set("app", a.app.as_str())
+            .set("frontier", a.frontier.clone().into_iter().map(Json::from).collect::<Vec<Json>>())
+            .set("knee", a.knee.map_or(Json::Null, Json::from))
+            .set("capped", a.capped.clone().into_iter().map(Json::from).collect::<Vec<Json>>())
+            .set("failed", a.failed.clone().into_iter().map(Json::from).collect::<Vec<Json>>());
+        jfronts.push(ja);
+    }
+    j.set("pareto", jfronts);
+    j
+}
+
+/// Ranked markdown summary: per app, points sorted by critical-path delay
+/// with frontier (`*`), knee (`**`), power-capped (`cap`) and failed
+/// (`FAIL`) markers.
+pub fn to_markdown(
+    spec: &ExploreSpec,
+    results: &[PointResult],
+    analyses: &[AppAnalysis],
+) -> String {
+    let mut md = String::new();
+    md.push_str(&format!(
+        "Grid: {} ({} points){}{}\n",
+        spec.shape(),
+        results.len(),
+        if spec.fast { ", fast mode" } else { "" },
+        spec.power_cap_mw
+            .map(|c| format!(", power cap {c} mW"))
+            .unwrap_or_default()
+    ));
+    for a in analyses {
+        md.push_str(&format!("\n### {}\n\n", a.app));
+        let mut rows: Vec<&PointResult> =
+            results.iter().filter(|r| r.point.app == a.app).collect();
+        rows.sort_by(|x, y| {
+            let kx = x.metrics.as_ref().map(|m| m.crit_ns).unwrap_or(f64::INFINITY);
+            let ky = y.metrics.as_ref().map(|m| m.crit_ns).unwrap_or(f64::INFINITY);
+            kx.partial_cmp(&ky).unwrap().then(x.point.id.cmp(&y.point.id))
+        });
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                let mark = if a.knee == Some(r.point.id) {
+                    "**"
+                } else if a.frontier.contains(&r.point.id) {
+                    "*"
+                } else if a.capped.contains(&r.point.id) {
+                    "cap"
+                } else if a.failed.contains(&r.point.id) {
+                    "FAIL"
+                } else {
+                    ""
+                };
+                match &r.metrics {
+                    Ok(m) => vec![
+                        r.point.label(),
+                        format!("{:.2}", m.crit_ns),
+                        format!("{:.0}", m.fmax_mhz),
+                        format!("{:.4}", m.runtime_ms),
+                        format!("{:.0}", m.power_mw),
+                        format!("{:.5}", m.edp),
+                        format!("{}", m.pipe_regs),
+                        mark.to_string(),
+                    ],
+                    Err(e) => vec![
+                        r.point.label(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        e.clone(),
+                        mark.to_string(),
+                    ],
+                }
+            })
+            .collect();
+        md.push_str(&crate::experiments::common::md_table(
+            &["point", "crit (ns)", "fmax (MHz)", "runtime (ms)", "power (mW)", "EDP", "regs", ""],
+            &table,
+        ));
+        md.push_str(&format!(
+            "\nPareto frontier (crit, EDP, regs): {} of {} feasible points",
+            a.frontier.len(),
+            rows.len() - a.capped.len() - a.failed.len()
+        ));
+        if let Some(k) = a.knee {
+            let knee = results.iter().find(|r| r.point.id == k).unwrap();
+            md.push_str(&format!("; knee: {} (**)", knee.point.label()));
+        }
+        if !a.capped.is_empty() {
+            md.push_str(&format!("; {} point(s) over the power cap", a.capped.len()));
+        }
+        if !a.failed.is_empty() {
+            md.push_str(&format!("; {} point(s) failed", a.failed.len()));
+        }
+        md.push('\n');
+    }
+    md
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::cache::PointMetrics;
+    use crate::explore::space::ExplorePoint;
+
+    fn mk(id: usize, app: &str, level: &str, crit: f64, edp: f64, regs: u64) -> PointResult {
+        PointResult {
+            point: ExplorePoint {
+                id,
+                app: app.into(),
+                level: level.into(),
+                alpha: None,
+                seed: 1,
+                iters: None,
+            },
+            metrics: Ok(PointMetrics {
+                crit_ns: crit,
+                fmax_mhz: 1000.0 / crit,
+                runtime_ms: crit / 10.0,
+                power_mw: 100.0 + regs as f64,
+                energy_mj: 0.1,
+                edp,
+                pipe_regs: regs,
+                util_pct: 50.0,
+                cycles: 0,
+                artifact_fp: id as u64,
+            }),
+            from_disk: false,
+        }
+    }
+
+    fn spec2() -> ExploreSpec {
+        ExploreSpec::default()
+            .with_apps(["gaussian"])
+            .with_levels(["none", "full"])
+            .with_seeds([1])
+    }
+
+    #[test]
+    fn frontier_includes_dominating_full_and_reg_free_none() {
+        let spec = spec2();
+        // full: far better crit/EDP but spends registers; none: reg-free.
+        let rs = vec![
+            mk(0, "gaussian", "none", 24.0, 10.0, 0),
+            mk(1, "gaussian", "full", 2.0, 0.5, 400),
+        ];
+        let a = analyze(&spec, &rs);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].frontier, vec![0, 1]);
+        let md = to_markdown(&spec, &rs, &a);
+        assert!(md.contains("gaussian/full"));
+        let j = to_json(&spec, &rs, &a).to_string_pretty();
+        assert!(j.contains("\"frontier\""));
+    }
+
+    #[test]
+    fn power_cap_excludes_points_from_frontier() {
+        let spec = spec2().with_power_cap(Some(150.0));
+        let rs = vec![
+            mk(0, "gaussian", "none", 24.0, 10.0, 0),    // 100 mW: feasible
+            mk(1, "gaussian", "full", 2.0, 0.5, 400),    // 500 mW: capped
+        ];
+        let a = analyze(&spec, &rs);
+        assert_eq!(a[0].frontier, vec![0]);
+        assert_eq!(a[0].capped, vec![1]);
+    }
+
+    #[test]
+    fn dominated_point_left_off_frontier() {
+        let spec = spec2().with_levels(["none", "compute", "full"]);
+        let rs = vec![
+            mk(0, "gaussian", "none", 24.0, 10.0, 100),
+            mk(1, "gaussian", "compute", 6.0, 2.0, 80), // dominates 0
+            mk(2, "gaussian", "full", 2.0, 0.5, 400),
+        ];
+        let a = analyze(&spec, &rs);
+        assert_eq!(a[0].frontier, vec![1, 2]);
+        // Normalized over the frontier, point 2 is (0, 0, 1) and point 1
+        // is (1, 1, 0): point 2 sits closer to the ideal corner.
+        assert_eq!(a[0].knee, Some(2));
+    }
+
+    #[test]
+    fn failed_points_reported_not_ranked() {
+        let spec = spec2();
+        let mut bad = mk(1, "gaussian", "full", 0.0, 0.0, 0);
+        bad.metrics = Err("routing: congestion".into());
+        let rs = vec![mk(0, "gaussian", "none", 24.0, 10.0, 0), bad];
+        let a = analyze(&spec, &rs);
+        assert_eq!(a[0].frontier, vec![0]);
+        assert_eq!(a[0].failed, vec![1]);
+        let j = to_json(&spec, &rs, &a).to_string_compact();
+        assert!(j.contains("routing: congestion"));
+    }
+}

@@ -1,0 +1,237 @@
+//! Parallel evaluation of an exploration grid.
+//!
+//! A work-queue executor over `std::thread::scope`: workers pull point
+//! indices from a shared atomic cursor and write results into a
+//! preallocated slot vector indexed by point id, so the output order is
+//! the spec's enumeration order *regardless of thread count or
+//! scheduling*. Compilation goes through the in-memory [`ArtifactCache`]
+//! (in-flight deduplication of effective-config collisions) and the
+//! persistent [`DiskCache`] (skip recompiles across invocations).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::experiments::common::compile_dense;
+use crate::pipeline::{compile, CompileCtx, Compiled};
+
+use super::cache::{point_key, ArtifactCache, DiskCache, PointMetrics};
+use super::space::{ExplorePoint, ExploreSpec, Scale};
+
+/// Outcome of one grid point.
+#[derive(Debug, Clone)]
+pub struct PointResult {
+    pub point: ExplorePoint,
+    pub metrics: Result<PointMetrics, String>,
+    /// Served from the persistent metrics cache (informational only —
+    /// excluded from reports so repeated runs emit identical JSON).
+    pub from_disk: bool,
+}
+
+/// Cache traffic for one run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// In-memory artifact hits (intra-run effective-config collisions).
+    pub memory_hits: usize,
+    /// Fresh compiles.
+    pub misses: usize,
+    /// Points served from the persistent metrics cache.
+    pub disk_hits: usize,
+}
+
+impl CacheStats {
+    pub fn total_hits(&self) -> usize {
+        self.memory_hits + self.disk_hits
+    }
+}
+
+/// A completed exploration run: one result per grid point, in enumeration
+/// order, plus cache statistics.
+#[derive(Debug)]
+pub struct RunOutcome {
+    pub results: Vec<PointResult>,
+    pub stats: CacheStats,
+}
+
+/// Evaluate every point of `spec` on `threads` worker threads.
+pub fn run(
+    spec: &ExploreSpec,
+    ctx: &CompileCtx,
+    threads: usize,
+    disk: Option<&DiskCache>,
+) -> RunOutcome {
+    let points = spec.points();
+    let artifacts = ArtifactCache::new();
+    let cursor = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<PointResult>>> = Mutex::new(vec![None; points.len()]);
+
+    let workers = threads.max(1).min(points.len().max(1));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::SeqCst);
+                if i >= points.len() {
+                    break;
+                }
+                let r = evaluate(&points[i], spec, ctx, &artifacts, disk);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+
+    let results: Vec<PointResult> = slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("worker left a hole in the result vector"))
+        .collect();
+    let stats = CacheStats {
+        memory_hits: artifacts.hits(),
+        misses: artifacts.misses(),
+        disk_hits: disk.map(|d| d.disk_hits()).unwrap_or(0),
+    };
+    RunOutcome { results, stats }
+}
+
+/// Evaluate one point: persistent cache, then artifact cache, then a
+/// fresh compile + measurement.
+fn evaluate(
+    point: &ExplorePoint,
+    spec: &ExploreSpec,
+    ctx: &CompileCtx,
+    artifacts: &ArtifactCache,
+    disk: Option<&DiskCache>,
+) -> PointResult {
+    let sparse = crate::apps::is_sparse_name(&point.app);
+    let mut cfg = point.config(spec.fast);
+    if spec.scale == Scale::Tiny || sparse {
+        // These paths compile directly and never consume §V-E duplication
+        // (tiny frames have no unrolling headroom; the sparse DFGs are not
+        // duplicable); clear the flag so the cache key and config
+        // signature match what actually compiles — levels differing only
+        // in `unroll_dup` then share one artifact.
+        cfg.unroll_dup = false;
+    }
+    let key = point_key(&point.app, &cfg, point.seed, spec.scale.tag(), &ctx.arch);
+
+    if let Some(d) = disk {
+        if let Some(m) = d.load(key) {
+            return PointResult { point: point.clone(), metrics: Ok(m), from_disk: true };
+        }
+    }
+    if let Some(m) = artifacts.measured(key) {
+        return PointResult { point: point.clone(), metrics: Ok(m), from_disk: false };
+    }
+    let compiled = artifacts.get_or_compile(key, || {
+        if sparse || spec.scale == Scale::Tiny {
+            let app = match spec.scale {
+                Scale::Paper => crate::apps::by_name(&point.app),
+                Scale::Tiny => crate::apps::by_name_tiny(&point.app),
+            }
+            .ok_or_else(|| format!("unknown app '{}'", point.app))?;
+            compile(&app, ctx, &cfg, point.seed).map_err(|e| format!("{}: {e}", point.app))
+        } else {
+            // Paper-scale dense: shared dispatch with the experiment
+            // harness (honours `unroll_dup`, handles resnet). `fast` is
+            // already folded into `cfg` by `ExplorePoint::config`.
+            compile_dense(&point.app, &cfg, ctx, false, point.seed)
+        }
+    });
+
+    let metrics = compiled.and_then(|c| measure(&point.app, &c, sparse));
+    if let Ok(m) = &metrics {
+        artifacts.record_measured(key, m);
+        if let Some(d) = disk {
+            d.store(key, m);
+        }
+    }
+    PointResult { point: point.clone(), metrics, from_disk: false }
+}
+
+/// Measure a compiled artifact. Sparse workloads run the ready-valid
+/// functional simulation for their cycle count; dense runtimes come from
+/// the static schedule.
+fn measure(app_name: &str, c: &Compiled, sparse: bool) -> Result<PointMetrics, String> {
+    if sparse {
+        let data = crate::apps::sparse::data_for(app_name, 42);
+        let run = crate::sparse::sim::simulate_app(app_name, &c.design.dfg, &data);
+        Ok(PointMetrics::from_sparse(c, run.cycles))
+    } else {
+        Ok(PointMetrics::from_compiled(c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> ExploreSpec {
+        ExploreSpec::default()
+            .with_apps(["gaussian"])
+            .with_levels(["none", "compute"])
+            .with_seeds([1])
+            .with_fast(true)
+            .with_scale(Scale::Tiny)
+    }
+
+    /// The satellite determinism requirement: identical output with
+    /// `--threads 1` and `--threads 4`.
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let ctx = CompileCtx::paper();
+        let spec = tiny_spec();
+        let one = run(&spec, &ctx, 1, None);
+        let four = run(&spec, &ctx, 4, None);
+        assert_eq!(one.results.len(), four.results.len());
+        for (a, b) in one.results.iter().zip(&four.results) {
+            assert_eq!(a.point, b.point);
+            assert_eq!(
+                a.metrics.as_ref().ok(),
+                b.metrics.as_ref().ok(),
+                "point {} diverges across thread counts",
+                a.point.label()
+            );
+        }
+        // Hit/miss totals are scheduling-independent too: one miss per
+        // distinct effective config, one lookup per point.
+        assert_eq!(one.stats, four.stats);
+    }
+
+    #[test]
+    fn iteration_budgets_collapse_on_unpipelined_baseline() {
+        // `none` has no post-PnR pass, so every budget resolves to the
+        // same effective config: 3 points, 1 compile, 2 memory hits.
+        let ctx = CompileCtx::paper();
+        let spec = tiny_spec().with_levels(["none"]).with_iters([10, 50, 200]);
+        let out = run(&spec, &ctx, 2, None);
+        assert_eq!(out.results.len(), 3);
+        assert_eq!(out.stats.misses, 1);
+        assert_eq!(out.stats.memory_hits, 2);
+        let fp0 = out.results[0].metrics.as_ref().unwrap().artifact_fp;
+        for r in &out.results {
+            assert_eq!(r.metrics.as_ref().unwrap().artifact_fp, fp0);
+        }
+    }
+
+    #[test]
+    fn disk_cache_serves_second_run() {
+        let dir = std::env::temp_dir().join(format!("cascade-run-dc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = CompileCtx::paper();
+        let spec = tiny_spec();
+        let n = spec.points().len();
+
+        let dc = DiskCache::at(&dir);
+        let first = run(&spec, &ctx, 2, Some(&dc));
+        assert_eq!(first.stats.disk_hits, 0);
+
+        let dc2 = DiskCache::at(&dir);
+        let second = run(&spec, &ctx, 2, Some(&dc2));
+        assert_eq!(second.stats.disk_hits, n);
+        assert_eq!(second.stats.misses, 0);
+        for (a, b) in first.results.iter().zip(&second.results) {
+            assert_eq!(a.metrics.as_ref().ok(), b.metrics.as_ref().ok());
+            assert!(b.from_disk);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

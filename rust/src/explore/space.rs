@@ -1,0 +1,349 @@
+//! Declarative exploration grid: [`ExploreSpec`] axis builders and
+//! deterministic point enumeration.
+//!
+//! A spec is the cross-product of five axes:
+//! (app × pipelining level × placement `alpha` × PnR seed × post-PnR
+//! iteration budget). Each [`ExplorePoint`] resolves to one *effective*
+//! [`PipelineConfig`] — the level's base configuration with the point's
+//! alpha / iteration overrides applied, then `--fast` tuning folded in —
+//! so two points that resolve to the same effective configuration (e.g.
+//! every iteration budget at `level=none`, which has no post-PnR pass)
+//! share one content-hash key and compile once through the artifact cache.
+
+use crate::experiments::common::tune;
+use crate::pipeline::{PipelineConfig, PostPnrParams};
+use crate::util::cli::Args;
+
+/// Scale at which dense applications are instantiated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// Paper-scale frames (Table I dimensions).
+    Paper,
+    /// Small frames for unit tests and smoke runs (`--tiny`).
+    Tiny,
+}
+
+impl Scale {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Scale::Paper => "paper",
+            Scale::Tiny => "tiny",
+        }
+    }
+}
+
+/// The exploration grid. Empty `alphas` / `iters` axes mean "use the
+/// level's own default" (a single implicit point on that axis).
+#[derive(Debug, Clone)]
+pub struct ExploreSpec {
+    pub apps: Vec<String>,
+    pub levels: Vec<String>,
+    pub alphas: Vec<f64>,
+    pub seeds: Vec<u64>,
+    pub iters: Vec<usize>,
+    /// Capstone-style power cap (mW): points whose estimated total power
+    /// exceeds the cap are reported but excluded from the frontier.
+    pub power_cap_mw: Option<f64>,
+    /// CI mode: shrink post-PnR iteration caps and placement effort.
+    pub fast: bool,
+    pub scale: Scale,
+}
+
+impl Default for ExploreSpec {
+    fn default() -> Self {
+        ExploreSpec {
+            apps: vec!["gaussian".into(), "harris".into()],
+            levels: vec!["none".into(), "compute".into(), "full".into()],
+            alphas: Vec::new(),
+            seeds: vec![3],
+            iters: Vec::new(),
+            power_cap_mw: None,
+            fast: false,
+            scale: Scale::Paper,
+        }
+    }
+}
+
+impl ExploreSpec {
+    /// Axis builders (consuming, chainable).
+    pub fn with_apps<S: Into<String>>(mut self, apps: impl IntoIterator<Item = S>) -> Self {
+        self.apps = apps.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn with_levels<S: Into<String>>(mut self, levels: impl IntoIterator<Item = S>) -> Self {
+        self.levels = levels.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn with_alphas(mut self, alphas: impl IntoIterator<Item = f64>) -> Self {
+        self.alphas = alphas.into_iter().collect();
+        self
+    }
+
+    pub fn with_seeds(mut self, seeds: impl IntoIterator<Item = u64>) -> Self {
+        self.seeds = seeds.into_iter().collect();
+        self
+    }
+
+    pub fn with_iters(mut self, iters: impl IntoIterator<Item = usize>) -> Self {
+        self.iters = iters.into_iter().collect();
+        self
+    }
+
+    pub fn with_power_cap(mut self, cap_mw: Option<f64>) -> Self {
+        self.power_cap_mw = cap_mw;
+        self
+    }
+
+    pub fn with_fast(mut self, fast: bool) -> Self {
+        self.fast = fast;
+        self
+    }
+
+    pub fn with_scale(mut self, scale: Scale) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    /// Parse a spec from CLI arguments (`cascade explore ...`).
+    ///
+    /// Flags: `--apps a,b` `--levels l1,l2` `--alphas 1.0,1.35|sweep`
+    /// `--seeds 1,2` `--iters 25,200` `--power-cap MW` `--fast` `--tiny`.
+    pub fn from_args(args: &Args) -> Result<ExploreSpec, String> {
+        let mut spec = ExploreSpec::default();
+        if let Some(s) = args.opt("apps") {
+            spec.apps = split_csv(s);
+        }
+        if let Some(s) = args.opt("levels") {
+            spec.levels = split_csv(s);
+        }
+        if let Some(s) = args.opt("alphas") {
+            spec.alphas = if s == "sweep" {
+                crate::pnr::place::ALPHA_SWEEP.to_vec()
+            } else {
+                parse_csv(s, "alphas")?
+            };
+        }
+        if let Some(s) = args.opt("seeds") {
+            spec.seeds = parse_csv(s, "seeds")?;
+        }
+        if let Some(s) = args.opt("iters") {
+            spec.iters = parse_csv(s, "iters")?;
+        }
+        if let Some(s) = args.opt("power-cap") {
+            let cap: f64 =
+                s.parse().map_err(|_| format!("bad --power-cap value '{s}'"))?;
+            spec.power_cap_mw = Some(cap);
+        }
+        spec.fast = args.flag("fast");
+        if args.flag("tiny") {
+            spec.scale = Scale::Tiny;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Check every axis value resolves to a known app / level.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.apps.is_empty() || self.levels.is_empty() || self.seeds.is_empty() {
+            return Err("explore: apps, levels and seeds must be non-empty".into());
+        }
+        for a in &self.apps {
+            if !crate::apps::APP_NAMES.contains(&a.as_str()) {
+                return Err(format!("explore: unknown app '{a}'"));
+            }
+        }
+        for l in &self.levels {
+            if PipelineConfig::by_name(l).is_none() {
+                return Err(format!("explore: unknown level '{l}'"));
+            }
+        }
+        if let Some(cap) = self.power_cap_mw {
+            if !(cap > 0.0) {
+                return Err(format!("explore: power cap must be positive, got {cap}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Enumerate the grid in deterministic axis-major order
+    /// (app → level → alpha → seed → iters). Point ids are dense indices
+    /// into this order.
+    pub fn points(&self) -> Vec<ExplorePoint> {
+        let alphas: Vec<Option<f64>> = if self.alphas.is_empty() {
+            vec![None]
+        } else {
+            self.alphas.iter().copied().map(Some).collect()
+        };
+        let iters: Vec<Option<usize>> = if self.iters.is_empty() {
+            vec![None]
+        } else {
+            self.iters.iter().copied().map(Some).collect()
+        };
+        let mut out = Vec::new();
+        for app in &self.apps {
+            for level in &self.levels {
+                for &alpha in &alphas {
+                    for &seed in &self.seeds {
+                        for &it in &iters {
+                            out.push(ExplorePoint {
+                                id: out.len(),
+                                app: app.clone(),
+                                level: level.clone(),
+                                alpha,
+                                seed,
+                                iters: it,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Human-readable axis summary (`2 apps x 3 levels x ...`).
+    pub fn shape(&self) -> String {
+        format!(
+            "{} apps x {} levels x {} alphas x {} seeds x {} budgets",
+            self.apps.len(),
+            self.levels.len(),
+            self.alphas.len().max(1),
+            self.seeds.len(),
+            self.iters.len().max(1)
+        )
+    }
+}
+
+/// One grid point. `alpha` / `iters` of `None` mean the level default.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExplorePoint {
+    pub id: usize,
+    pub app: String,
+    pub level: String,
+    pub alpha: Option<f64>,
+    pub seed: u64,
+    pub iters: Option<usize>,
+}
+
+impl ExplorePoint {
+    /// Resolve the point to its effective pipeline configuration: level
+    /// base + alpha / iteration-budget overrides + `fast` tuning. The
+    /// result is what actually compiles and what the cache key hashes.
+    pub fn config(&self, fast: bool) -> PipelineConfig {
+        let mut cfg = PipelineConfig::by_name(&self.level)
+            .unwrap_or_else(|| panic!("unvalidated level '{}'", self.level));
+        if let Some(a) = self.alpha {
+            cfg.place_alpha = a;
+        }
+        if let Some(it) = self.iters {
+            if let Some(p) = &mut cfg.postpnr {
+                *p = PostPnrParams { max_iters: it, ..p.clone() };
+            }
+        }
+        tune(&cfg, fast)
+    }
+
+    /// Compact display label.
+    pub fn label(&self) -> String {
+        let mut s = format!("{}/{}", self.app, self.level);
+        if let Some(a) = self.alpha {
+            s.push_str(&format!(" a={a}"));
+        }
+        s.push_str(&format!(" s={}", self.seed));
+        if let Some(it) = self.iters {
+            s.push_str(&format!(" it={it}"));
+        }
+        s
+    }
+}
+
+fn split_csv(s: &str) -> Vec<String> {
+    s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
+}
+
+fn parse_csv<T: std::str::FromStr>(s: &str, what: &str) -> Result<Vec<T>, String> {
+    split_csv(s)
+        .into_iter()
+        .map(|x| x.parse().map_err(|_| format!("bad --{what} entry '{x}'")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn enumeration_is_dense_and_ordered() {
+        let spec = ExploreSpec::default()
+            .with_apps(["gaussian"])
+            .with_levels(["none", "compute"])
+            .with_seeds([1, 2]);
+        let pts = spec.points();
+        assert_eq!(pts.len(), 4);
+        for (i, p) in pts.iter().enumerate() {
+            assert_eq!(p.id, i);
+        }
+        assert_eq!(pts[0].level, "none");
+        assert_eq!(pts[0].seed, 1);
+        assert_eq!(pts[1].seed, 2);
+        assert_eq!(pts[2].level, "compute");
+    }
+
+    #[test]
+    fn from_args_parses_all_axes() {
+        let a = args(
+            "explore --apps gaussian,harris --levels none,full --alphas 1.0,1.35 \
+             --seeds 1,2 --iters 25 --power-cap 500 --fast",
+        );
+        let spec = ExploreSpec::from_args(&a).unwrap();
+        assert_eq!(spec.apps, vec!["gaussian", "harris"]);
+        assert_eq!(spec.levels, vec!["none", "full"]);
+        assert_eq!(spec.alphas, vec![1.0, 1.35]);
+        assert_eq!(spec.seeds, vec![1, 2]);
+        assert_eq!(spec.iters, vec![25]);
+        assert_eq!(spec.power_cap_mw, Some(500.0));
+        assert!(spec.fast);
+        assert_eq!(spec.points().len(), 2 * 2 * 2 * 2);
+    }
+
+    #[test]
+    fn from_args_rejects_unknown_axis_values() {
+        assert!(ExploreSpec::from_args(&args("explore --apps nope")).is_err());
+        assert!(ExploreSpec::from_args(&args("explore --levels nope")).is_err());
+        assert!(ExploreSpec::from_args(&args("explore --alphas abc")).is_err());
+        assert!(ExploreSpec::from_args(&args("explore --power-cap -5")).is_err());
+    }
+
+    #[test]
+    fn alpha_sweep_keyword_expands() {
+        let spec = ExploreSpec::from_args(&args("explore --alphas sweep")).unwrap();
+        assert_eq!(spec.alphas, crate::pnr::place::ALPHA_SWEEP.to_vec());
+    }
+
+    #[test]
+    fn overrides_fold_into_effective_config() {
+        let p = ExplorePoint {
+            id: 0,
+            app: "gaussian".into(),
+            level: "full".into(),
+            alpha: Some(1.5),
+            seed: 1,
+            iters: Some(50),
+        };
+        let cfg = p.config(false);
+        assert_eq!(cfg.place_alpha, 1.5);
+        assert_eq!(cfg.postpnr.as_ref().unwrap().max_iters, 50);
+        // `none` ignores the iteration budget: same effective config for
+        // any budget (the cache will collapse these points).
+        let n1 = ExplorePoint { level: "none".into(), iters: Some(10), ..p.clone() };
+        let n2 = ExplorePoint { level: "none".into(), iters: Some(99), ..p };
+        assert!(n1.config(false).postpnr.is_none());
+        assert!(n2.config(false).postpnr.is_none());
+    }
+}

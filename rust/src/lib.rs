@@ -31,9 +31,18 @@
 //!   (dense and sparse) and the activity-based power / EDP model.
 //! * [`runtime`] — the PJRT golden-model runtime: loads AOT-compiled JAX /
 //!   Pallas HLO artifacts and executes them to check functional equivalence
-//!   of the CGRA simulation results.
+//!   of the CGRA simulation results (gated behind the `golden-pjrt` cargo
+//!   feature; a stub with the same API reports it unavailable in offline
+//!   builds).
 //! * [`apps`] — the benchmark applications from the paper's evaluation.
 //! * [`experiments`] — regenerators for every table and figure in the paper.
+//! * [`explore`] — the design-space exploration engine: a parallel
+//!   work-queue sweep over (app × pipelining level × placement alpha ×
+//!   PnR seed × post-PnR iteration budget) with content-hash artifact
+//!   caching, Capstone-style power capping, and Pareto-frontier /
+//!   knee-point reporting over (critical-path delay, EDP, pipelining
+//!   registers). Drives `cascade explore`; `cascade exp summary` reuses
+//!   its persistent cache.
 //! * [`util`] — in-house substrates: deterministic PRNG, JSON writer,
 //!   mini property-testing framework, statistics helpers, micro-bench timer.
 
@@ -50,3 +59,4 @@ pub mod sim;
 pub mod runtime;
 pub mod apps;
 pub mod experiments;
+pub mod explore;

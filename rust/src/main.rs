@@ -3,11 +3,23 @@
 //! ```text
 //! cascade compile --app gaussian --level full [--seed N]   compile one app, print report
 //! cascade sta --app harris --level compute                 STA report for a config
-//! cascade exp <fig6|fig7|table1|fig8|fig9|fig10|table2|fig11|summary|all> [--fast]
+//! cascade exp <fig6|fig7|table1|fig8|fig9|fig10|table2|fig11|summary|all> [--fast] [--no-cache]
+//! cascade explore [--apps a,b] [--levels l1,l2] [--alphas 1.0,1.35|sweep]
+//!                 [--seeds 1,2] [--iters 25,200] [--threads N]
+//!                 [--power-cap MW] [--fast] [--tiny] [--no-cache]
 //! cascade arch                                             print architecture + timing model
 //! ```
+//!
+//! `explore` sweeps the cross-product of (app × pipelining level ×
+//! placement alpha × PnR seed × post-PnR iteration budget) on a parallel
+//! work queue, memoizes compiled artifacts by content hash (repeat runs
+//! are served from `results/explore_cache/`), filters points that exceed
+//! the optional power cap, and reports the Pareto frontier over
+//! (critical-path delay, EDP, pipelining-register count) plus a knee
+//! point. Results land in `results/explore.{md,json}`.
 
 use cascade::experiments;
+use cascade::explore::ExploreSpec;
 use cascade::pipeline::{compile, CompileCtx, PipelineConfig};
 use cascade::util::cli::Args;
 
@@ -17,46 +29,35 @@ fn usage() -> ! {
          commands:\n\
            compile --app <name> [--level <level>] [--seed N]   compile + report\n\
            sta     --app <name> [--level <level>] [--seed N]   timing report\n\
-           exp     <id|all> [--fast] [--seed N]                regenerate paper tables/figures\n\
+           exp     <id|all> [--fast] [--seed N] [--no-cache]   regenerate paper tables/figures\n\
+           explore [--apps a,b] [--levels l1,l2] [--alphas x,y|sweep] [--seeds 1,2]\n\
+                   [--iters 25,200] [--threads N] [--power-cap MW] [--fast] [--tiny]\n\
+                   [--no-cache]                                design-space exploration\n\
            arch                                                 architecture + timing model summary\n\
-         levels: none compute broadcast placement postpnr all-software full\n\
-         apps: gaussian unsharp camera harris resnet vec_elemadd mat_elemmul mttkrp ttv"
+         levels: {}\n\
+         apps: {}",
+        PipelineConfig::LEVEL_NAMES.join(" "),
+        cascade::apps::APP_NAMES.join(" ")
     );
     std::process::exit(2);
 }
 
 fn level(name: &str) -> PipelineConfig {
-    match name {
-        "none" => PipelineConfig::none(),
-        "compute" => PipelineConfig::compute_only(),
-        "broadcast" => PipelineConfig::with_broadcast(),
-        "placement" => PipelineConfig::with_placement(),
-        "postpnr" => PipelineConfig::with_postpnr(),
-        "all-software" => PipelineConfig::all_software(),
-        "full" => PipelineConfig::full(),
-        other => {
-            eprintln!("unknown level '{other}'");
-            std::process::exit(2);
-        }
-    }
+    PipelineConfig::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown level '{name}'");
+        std::process::exit(2);
+    })
 }
 
 fn app_by_name(name: &str) -> cascade::apps::App {
-    match name {
-        "gaussian" => cascade::apps::dense::gaussian(6400, 4800, 16),
-        "unsharp" => cascade::apps::dense::unsharp(1536, 2560, 4),
-        "camera" => cascade::apps::dense::camera(2560, 1920, 4),
-        "harris" => cascade::apps::dense::harris(1530, 2554, 4),
-        "resnet" => cascade::apps::dense::resnet_conv5x(),
-        "vec_elemadd" => cascade::apps::sparse::vec_elemadd(4096, 0.25),
-        "mat_elemmul" => cascade::apps::sparse::mat_elemmul(128, 128, 0.1),
-        "mttkrp" => cascade::apps::sparse::tensor_mttkrp(32, 32, 32, 8, 0.05),
-        "ttv" => cascade::apps::sparse::tensor_ttv(48, 48, 48, 0.05),
-        other => {
-            eprintln!("unknown app '{other}'");
-            std::process::exit(2);
-        }
-    }
+    cascade::apps::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown app '{name}'");
+        std::process::exit(2);
+    })
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get().min(8)).unwrap_or(1)
 }
 
 fn main() {
@@ -122,8 +123,25 @@ fn main() {
             let fast = args.flag("fast");
             println!("building compile context (32x16 array, timing model)...");
             let ctx = CompileCtx::paper();
-            if let Err(e) = experiments::run(id, &ctx, fast, seed) {
+            if let Err(e) = experiments::run(id, &ctx, fast, seed, !args.flag("no-cache")) {
                 eprintln!("experiment failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        "explore" => {
+            let spec = match ExploreSpec::from_args(&args) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+            };
+            let threads = args.opt_usize("threads", default_threads());
+            println!("building compile context (32x16 array, timing model)...");
+            let ctx = CompileCtx::paper();
+            if let Err(e) = cascade::explore::run_cli(&spec, &ctx, threads, !args.flag("no-cache"))
+            {
+                eprintln!("explore failed: {e}");
                 std::process::exit(1);
             }
         }

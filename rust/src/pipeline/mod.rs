@@ -48,6 +48,9 @@ pub struct PipelineConfig {
     pub broadcast: Option<BroadcastParams>,
     /// §V-C placement criticality exponent (1.0 = baseline placer).
     pub place_alpha: f64,
+    /// Annealing-schedule scale for placement (1.0 = default effort;
+    /// lowered by `--fast` runs and by the `explore` engine's CI mode).
+    pub place_effort: f64,
     /// §V-D post-PnR pipelining (None = off).
     pub postpnr: Option<PostPnrParams>,
     /// §V-E low unrolling duplication (consumed by `compile_with_dup`).
@@ -64,6 +67,7 @@ impl PipelineConfig {
             regfile_threshold: None,
             broadcast: None,
             place_alpha: 1.0,
+            place_effort: 1.0,
             postpnr: None,
             unroll_dup: false,
             hardened_flush: false,
@@ -101,6 +105,25 @@ impl PipelineConfig {
     pub fn full() -> Self {
         PipelineConfig { hardened_flush: true, ..Self::all_software() }
     }
+
+    /// Look up a pipelining level by its CLI / `explore`-axis name.
+    pub fn by_name(name: &str) -> Option<PipelineConfig> {
+        Some(match name {
+            "none" => Self::none(),
+            "compute" => Self::compute_only(),
+            "broadcast" => Self::with_broadcast(),
+            "placement" => Self::with_placement(),
+            "postpnr" => Self::with_postpnr(),
+            "all-software" => Self::all_software(),
+            "full" => Self::full(),
+            _ => return None,
+        })
+    }
+
+    /// Every named level, in incremental order (CLI usage text and the
+    /// `explore` grid validate against this).
+    pub const LEVEL_NAMES: [&'static str; 7] =
+        ["none", "compute", "broadcast", "placement", "postpnr", "all-software", "full"];
 
     /// The incremental ladder used by Fig. 7 (dense).
     pub fn ladder() -> Vec<(&'static str, PipelineConfig)> {
@@ -244,7 +267,13 @@ fn compile_inner(
     let sched1 = schedule(&dfg, &app.shape);
 
     // Place and route.
-    let pp = PlaceParams { alpha: cfg.place_alpha, seed, region, ..PlaceParams::default() };
+    let pp = PlaceParams {
+        alpha: cfg.place_alpha,
+        effort: cfg.place_effort,
+        seed,
+        region,
+        ..PlaceParams::default()
+    };
     let mut design = place_and_route(&dfg, &arch, &ctx.graph, &ctx.lib, &pp, &RouteParams::default())
         .map_err(CompileError::Route)?;
     design.realize_registers(&ctx.graph);

@@ -57,7 +57,18 @@ impl PlaceParams {
     pub fn cascade(seed: u64) -> PlaceParams {
         PlaceParams { seed, alpha: 1.35, ..Default::default() }
     }
+
+    /// Arbitrary criticality exponent — the sweep hook used by the
+    /// `explore` design-space engine's `--alphas` axis.
+    pub fn with_alpha(seed: u64, alpha: f64) -> PlaceParams {
+        PlaceParams { seed, alpha, ..Default::default() }
+    }
 }
+
+/// Canonical alpha sweep for design-space exploration (`cascade explore
+/// --alphas sweep`): baseline, two intermediate exponents around the
+/// paper's operating point, and an aggressive setting.
+pub const ALPHA_SWEEP: [f64; 4] = [1.0, 1.2, 1.35, 1.5];
 
 /// A placement: per-node tile and slot (slot is only meaningful on IO
 /// tiles, which host up to two IO nodes).
@@ -395,6 +406,33 @@ mod tests {
         );
         let p1 = place(&app.dfg, &nets, &arch, &PlaceParams::baseline(5));
         assert!(p1.cost < p0.cost, "SA {} vs quick {}", p1.cost, p0.cost);
+    }
+
+    #[test]
+    fn alpha_sweep_hook_is_deterministic_and_ordered() {
+        // The `explore` axis hook: every canonical sweep value places
+        // deterministically, and raising alpha never materially lengthens
+        // the longest net (it superlinearly penalizes long nets).
+        let app = apps::dense::gaussian(64, 64, 1);
+        let arch = ArchParams::paper();
+        let nets = build_nets(&app.dfg, &arch);
+        let longest = |p: &Placement| -> f64 {
+            nets.iter().map(|nt| net_cost(nt, &p.pos, 0.0, 1.0)).fold(0.0, f64::max)
+        };
+        let mut base_longest = None;
+        for &alpha in &ALPHA_SWEEP {
+            let pp = PlaceParams::with_alpha(21, alpha);
+            let p1 = place(&app.dfg, &nets, &arch, &pp);
+            let p2 = place(&app.dfg, &nets, &arch, &pp);
+            assert_eq!(p1.pos, p2.pos, "alpha {alpha} not deterministic");
+            let b = *base_longest.get_or_insert(longest(&p1));
+            assert!(
+                longest(&p1) <= b * 1.25,
+                "alpha {alpha} lengthened the longest net: {} vs {}",
+                longest(&p1),
+                b
+            );
+        }
     }
 
     #[test]

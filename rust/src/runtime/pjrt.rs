@@ -1,0 +1,145 @@
+//! PJRT golden-model runtime.
+//!
+//! Loads the AOT-compiled JAX/Pallas golden models (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts`) and executes them on the PJRT CPU
+//! client via the `xla` crate. Python never runs here — the HLO text is the
+//! only thing that crosses the language boundary (text, not serialized
+//! proto: jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids).
+//!
+//! The end-to-end example and integration tests use this to cross-check
+//! the fabric simulator's outputs against the golden compute graphs.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A compiled golden model.
+pub struct GoldenModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// Runtime holding the PJRT client and a cache of compiled executables.
+pub struct GoldenRuntime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: HashMap<String, GoldenModel>,
+}
+
+impl GoldenRuntime {
+    /// Create a CPU PJRT runtime reading artifacts from `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<GoldenRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(GoldenRuntime {
+            client,
+            artifacts_dir: dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Default artifacts location relative to the repo root.
+    pub fn from_repo_root() -> Result<GoldenRuntime> {
+        GoldenRuntime::new("artifacts")
+    }
+
+    /// Whether the artifact for `name` exists (lets tests skip gracefully
+    /// before `make artifacts` has run).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    fn artifact_path(&self, name: &str) -> PathBuf {
+        self.artifacts_dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Load + compile a model (cached).
+    pub fn load(&mut self, name: &str) -> Result<&GoldenModel> {
+        if !self.cache.contains_key(name) {
+            let path = self.artifact_path(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling golden model '{name}'"))?;
+            self.cache
+                .insert(name.to_string(), GoldenModel { exe, name: name.to_string() });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute a single-input i32 model: `f(i32[n]) -> i32[m]`.
+    pub fn run_i32(&mut self, name: &str, input: &[i32]) -> Result<Vec<i32>> {
+        let model = self.load(name)?;
+        let x = xla::Literal::vec1(input);
+        let result = model.exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1().context("golden models return 1-tuples")?;
+        Ok(out.to_vec::<i32>()?)
+    }
+
+    /// Execute a 2-D-input i32 model: `f(i32[r, c]) -> i32[p, q]` (row
+    /// major; output flattened).
+    pub fn run_i32_2d(&mut self, name: &str, input: &[i32], rows: usize, cols: usize) -> Result<Vec<i32>> {
+        anyhow::ensure!(input.len() == rows * cols, "bad input length");
+        let model = self.load(name)?;
+        let x = xla::Literal::vec1(input).reshape(&[rows as i64, cols as i64])?;
+        let result = model.exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<GoldenRuntime> {
+        let rt = GoldenRuntime::from_repo_root().ok()?;
+        if rt.has_artifact("gaussian") {
+            Some(rt)
+        } else {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+
+    #[test]
+    fn gaussian_golden_runs_and_matches_interp() {
+        let Some(mut rt) = runtime() else { return };
+        let n = 4096usize;
+        let input: Vec<i32> = (0..n as i32).map(|x| (x * 7 + 5) % 31).collect();
+        let golden = rt.run_i32("gaussian", &input).unwrap();
+        assert_eq!(golden.len(), n);
+        // Cross-check against the in-crate DFG interpreter.
+        let app = crate::apps::dense::gaussian(64, 64, 1);
+        let mut ins = std::collections::BTreeMap::new();
+        ins.insert(0u16, input.iter().map(|&v| v as i64).collect::<Vec<i64>>());
+        let run = crate::dfg::interp::Interp::run(&app.dfg, &ins, n as u64);
+        let interp = &run.outputs[&0];
+        for t in 0..n {
+            assert_eq!(golden[t] as i64, interp[t], "t={t}");
+        }
+    }
+
+    #[test]
+    fn all_dense_goldens_compile() {
+        let Some(mut rt) = runtime() else { return };
+        for name in ["gaussian", "unsharp", "camera", "harris"] {
+            let out = rt.run_i32(name, &vec![1i32; 4096]).unwrap();
+            assert_eq!(out.len(), 4096, "{name}");
+        }
+        let out = rt.run_i32_2d("resnet", &vec![1i32; 4 * 64 * 18], 4, 64 * 18).unwrap();
+        assert_eq!(out.len(), 2 * 64);
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let Some(mut rt) = runtime() else { return };
+        assert!(rt.run_i32("no_such_model", &[0]).is_err());
+    }
+}

@@ -62,6 +62,13 @@ impl PowerEstimate {
     }
 }
 
+/// Whether a total power draw fits under an optional cap (mW) — the
+/// `explore` engine's Capstone-style `--power-cap` feasibility predicate.
+/// No cap means always feasible.
+pub fn within_cap(total_mw: f64, cap_mw: Option<f64>) -> bool {
+    cap_mw.map_or(true, |cap| total_mw <= cap)
+}
+
 /// Steady-state per-cycle activity derived from the design structure
 /// (every statically scheduled unit fires each cycle).
 pub fn steady_state_activity(d: &RoutedDesign) -> Activity {
@@ -138,6 +145,21 @@ pub fn estimate(d: &RoutedDesign, freq_mhz: f64, m: &EnergyModel) -> PowerEstima
         dynamic_mw: e_nj * freq_mhz,
         static_mw: m.static_mw,
     }
+}
+
+/// Per-point power query for design-space exploration: like [`estimate`],
+/// but accounts for a design compiled as one region and stamped `copies`
+/// times across the array (low unrolling duplication, §V-E) — the dynamic
+/// power of every electrically identical copy switches concurrently.
+pub fn estimate_scaled(
+    d: &RoutedDesign,
+    freq_mhz: f64,
+    copies: usize,
+    m: &EnergyModel,
+) -> PowerEstimate {
+    let mut p = estimate(d, freq_mhz, m);
+    p.dynamic_mw *= copies.max(1) as f64;
+    p
 }
 
 /// Estimate power from measured simulation activity over `cycles`.

@@ -1,0 +1,101 @@
+//! End-to-end test of the design-space exploration engine through its
+//! public API, at test scale (64x64 frames): grid sweep, Pareto analysis,
+//! pipelining dominance on critical path, persistent cache reuse, and
+//! byte-identical report emission across cache-served re-runs.
+
+use cascade::explore::{report, runner, DiskCache, ExploreSpec, Scale};
+use cascade::pipeline::CompileCtx;
+
+fn tiny_spec() -> ExploreSpec {
+    ExploreSpec::default()
+        .with_apps(["gaussian"])
+        .with_levels(["none", "compute"])
+        .with_seeds([1])
+        .with_fast(true)
+        .with_scale(Scale::Tiny)
+}
+
+#[test]
+fn explore_end_to_end_pareto_cache_and_determinism() {
+    let ctx = CompileCtx::paper();
+    let spec = tiny_spec();
+
+    let dir = std::env::temp_dir().join(format!("cascade-explore-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // First invocation: everything compiles fresh.
+    let dc = DiskCache::at(&dir);
+    let first = runner::run(&spec, &ctx, 2, Some(&dc));
+    assert_eq!(first.stats.disk_hits, 0);
+    assert!(first.stats.misses > 0);
+
+    // Pipelining dominates the baseline on critical-path delay.
+    let crit_of = |level: &str| {
+        first
+            .results
+            .iter()
+            .find(|r| r.point.level == level)
+            .unwrap()
+            .metrics
+            .as_ref()
+            .unwrap()
+            .crit_ns
+    };
+    assert!(
+        crit_of("compute") < crit_of("none"),
+        "compute pipelining must shorten the critical path: {} vs {}",
+        crit_of("compute"),
+        crit_of("none")
+    );
+
+    // The pipelined point wins delay (asserted above) and so is always on
+    // the frontier; the baseline survives only through its smaller
+    // pipelining-register footprint.
+    let analyses = report::analyze(&spec, &first.results);
+    assert_eq!(analyses.len(), 1);
+    let by_level = |level: &str| {
+        first.results.iter().find(|r| r.point.level == level).unwrap()
+    };
+    let compute = by_level("compute");
+    let none = by_level("none");
+    assert!(analyses[0].frontier.contains(&compute.point.id));
+    let regs = |r: &runner::PointResult| r.metrics.as_ref().unwrap().pipe_regs;
+    if regs(none) < regs(compute) {
+        assert!(analyses[0].frontier.contains(&none.point.id));
+    }
+    assert!(analyses[0].knee.is_some());
+    assert!(analyses[0].capped.is_empty());
+    assert!(analyses[0].failed.is_empty());
+
+    let json1 = report::to_json(&spec, &first.results, &analyses).to_string_pretty();
+    let md1 = report::to_markdown(&spec, &first.results, &analyses);
+
+    // Second invocation: served entirely from the persistent cache, with
+    // byte-identical reports.
+    let dc2 = DiskCache::at(&dir);
+    let second = runner::run(&spec, &ctx, 2, Some(&dc2));
+    assert_eq!(second.stats.disk_hits, first.results.len());
+    assert_eq!(second.stats.misses, 0);
+    let analyses2 = report::analyze(&spec, &second.results);
+    let json2 = report::to_json(&spec, &second.results, &analyses2).to_string_pretty();
+    let md2 = report::to_markdown(&spec, &second.results, &analyses2);
+    assert_eq!(json1, json2, "cache-served re-run must emit identical JSON");
+    assert_eq!(md1, md2, "cache-served re-run must emit identical markdown");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn power_cap_filters_frontier_points() {
+    let ctx = CompileCtx::paper();
+    // A cap below any plausible estimate (static floor is 15 mW) makes
+    // every point infeasible; the frontier must come out empty rather
+    // than ranking infeasible designs.
+    let spec = tiny_spec().with_levels(["none"]).with_power_cap(Some(1.0));
+    let out = runner::run(&spec, &ctx, 1, None);
+    let analyses = report::analyze(&spec, &out.results);
+    assert!(analyses[0].frontier.is_empty());
+    assert_eq!(analyses[0].capped.len(), out.results.len());
+    let json = report::to_json(&spec, &out.results, &analyses).to_string_compact();
+    assert_eq!(json.matches("\"capped\"").count(), 1);
+}
