@@ -101,6 +101,27 @@ impl ArchParams {
         ArchParams::default()
     }
 
+    /// Routing-track override (consuming, chainable) — an `explore` sweep
+    /// axis: fewer tracks shrink the switch boxes but risk congestion.
+    pub fn with_tracks(mut self, tracks: usize) -> ArchParams {
+        self.tracks = tracks;
+        self
+    }
+
+    /// Register-file-words override (consuming, chainable) — an `explore`
+    /// sweep axis bounding the register-chain transform.
+    pub fn with_regfile_words(mut self, words: usize) -> ArchParams {
+        self.regfile_words = words;
+        self
+    }
+
+    /// Sparse-FIFO-depth override (consuming, chainable) — an `explore`
+    /// sweep axis for the ready-valid pipelining variant (§VII).
+    pub fn with_fifo_depth(mut self, depth: usize) -> ArchParams {
+        self.fifo_depth = depth;
+        self
+    }
+
     /// A small array for fast unit tests.
     pub fn tiny(rows: usize, cols: usize) -> ArchParams {
         ArchParams { rows, cols, ..ArchParams::default() }
@@ -177,6 +198,17 @@ mod tests {
         assert_eq!(p.tile_kind(TileCoord::new(3, 1)), TileKind::Mem);
         assert_eq!(p.tile_kind(TileCoord::new(7, 5)), TileKind::Mem);
         assert_eq!(p.tile_kind(TileCoord::new(4, 5)), TileKind::Pe);
+    }
+
+    #[test]
+    fn builder_overrides() {
+        let p = ArchParams::paper().with_tracks(3).with_regfile_words(64).with_fifo_depth(4);
+        assert_eq!(p.tracks, 3);
+        assert_eq!(p.regfile_words, 64);
+        assert_eq!(p.fifo_depth, 4);
+        // Everything else keeps the paper values.
+        assert_eq!(p.cols, 32);
+        assert_eq!(p.rows, 16);
     }
 
     #[test]

@@ -22,6 +22,11 @@ pub fn dense_specs() -> Vec<(&'static str, DenseBuilder, u64, u64, u64)> {
     ]
 }
 
+/// Post-PnR iteration cap applied by `--fast` runs (and respected by the
+/// halving search when sizing its top rung, so promoted budgets never
+/// exceed what `tune` would collapse them to anyway).
+pub const FAST_MAX_POSTPNR_ITERS: usize = 25;
+
 /// Scale down annealing/iteration effort for `--fast` runs. Idempotent:
 /// `tune(tune(c, true), true) == tune(c, true)`, so the explore engine can
 /// fold it into effective configs before content-hashing them.
@@ -29,7 +34,7 @@ pub fn tune(cfg: &PipelineConfig, fast: bool) -> PipelineConfig {
     let mut c = cfg.clone();
     if fast {
         if let Some(p) = &mut c.postpnr {
-            *p = PostPnrParams { max_iters: p.max_iters.min(25), ..p.clone() };
+            *p = PostPnrParams { max_iters: p.max_iters.min(FAST_MAX_POSTPNR_ITERS), ..p.clone() };
         }
         c.place_effort = c.place_effort.min(0.35);
     }

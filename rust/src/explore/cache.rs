@@ -67,8 +67,11 @@ pub fn config_signature(cfg: &PipelineConfig) -> String {
 }
 
 /// Canonical serialization of every architecture parameter (a change to
-/// any knob that can affect a compiled artifact must change the key —
-/// regfile words and FIFO depth are future explore axes, per ROADMAP).
+/// any knob that can affect a compiled artifact must change the key).
+/// Tracks, regfile words and FIFO depth are live `explore` sweep axes:
+/// this signature is also the memoization key of the runner's
+/// per-architecture compile-context cache, so it must stay injective over
+/// the parameter set.
 pub fn arch_signature(arch: &ArchParams) -> String {
     format!(
         "{}x{};memp={};tracks={};ports={}/{}/{}/{};rf={};fifo={};hflush={}",
@@ -125,7 +128,8 @@ pub fn fingerprint(c: &Compiled) -> u64 {
     h = mix(h, c.design.dfg.nodes.len() as u64);
     h = mix(h, c.design.dfg.edges.len() as u64);
     for (i, t) in c.design.placement.pos.iter().enumerate() {
-        h = mix(h, (t.x as u64) << 32 | (t.y as u64) << 8 | c.design.placement.slot[i] as u64);
+        let slot = c.design.placement.slot[i] as u64;
+        h = mix(h, ((t.x as u64) << 32) | ((t.y as u64) << 8) | slot);
     }
     let mut regs: Vec<u64> = c.design.sb_regs.iter().map(|&r| r as u64).collect();
     regs.sort_unstable();
@@ -136,7 +140,7 @@ pub fn fingerprint(c: &Compiled) -> u64 {
         c.design.rf_delay.iter().map(|(&e, &d)| (e as u64, d as u64)).collect();
     rf.sort_unstable();
     for (e, d) in rf {
-        h = mix(h, e << 32 | d);
+        h = mix(h, (e << 32) | d);
     }
     for route in &c.design.routes {
         h = mix(h, route.net as u64);

@@ -5,12 +5,20 @@
 //! is a design-space problem. This subsystem makes it one:
 //!
 //! * [`space`] — the declarative exploration grid ([`space::ExploreSpec`]):
-//!   (app × pipelining level × placement alpha × PnR seed × post-PnR
-//!   iteration budget), with axis builders and deterministic point
-//!   enumeration.
-//! * [`runner`] — a multi-threaded work-queue executor over
-//!   `std::thread::scope` whose result order is independent of thread
-//!   count and scheduling.
+//!   compiler axes (app × pipelining level × placement alpha × PnR seed ×
+//!   post-PnR iteration budget) and architecture axes (routing tracks ×
+//!   regfile words × FIFO depth), with axis builders and deterministic
+//!   point enumeration.
+//! * [`runner`] — a reusable multi-threaded work-queue session
+//!   ([`runner::EvalSession`]) over `std::thread::scope` whose result
+//!   order is independent of thread count and scheduling, with a
+//!   per-architecture compile-context cache and streaming partial results
+//!   (`results/explore_partial.jsonl`).
+//! * [`search`] — adaptive successive halving ([`search::run_halving`]):
+//!   evaluate every candidate at a cheap post-PnR budget, keep the top
+//!   `1/eta` of each application's cohort by the promotion objective, and
+//!   promote survivors up the budget ladder — rungs share the session's
+//!   artifact cache, so unchanged effective configs never recompile.
 //! * [`cache`] — content-hash keyed artifact memoization: in-memory
 //!   deduplication of effective-config collisions within a run, plus a
 //!   persistent metrics cache under `results/explore_cache/` that repeat
@@ -21,50 +29,126 @@
 //!   byte-identical across cache-served re-runs.
 //!
 //! A Capstone-style `--power-cap` (mW) marks points whose estimated total
-//! power exceeds the budget as infeasible before the frontier is computed.
+//! power exceeds the budget as infeasible before the frontier is computed;
+//! the halving search additionally drops infeasible points first at every
+//! promotion.
 
 pub mod cache;
 pub mod pareto;
 pub mod report;
 pub mod runner;
+pub mod search;
 pub mod space;
 
 pub use cache::{ArtifactCache, DiskCache, PointMetrics};
-pub use runner::{run, PointResult, RunOutcome};
+pub use runner::{run, EvalSession, PartialSink, PointResult, RunOutcome};
+pub use search::{run_halving, HalvingParams, Objective, SearchOutcome};
 pub use space::{ExplorePoint, ExploreSpec, Scale};
 
 use crate::pipeline::CompileCtx;
 
-/// CLI entry point: evaluate the grid, analyze, emit `results/explore.*`,
-/// and print the cache traffic (stdout only — reports stay run-invariant).
+/// Search strategy for one `cascade explore` invocation.
+#[derive(Debug, Clone)]
+pub enum SearchKind {
+    /// Exhaustive evaluation of the full grid.
+    Grid,
+    /// Adaptive successive halving over the candidate set.
+    Halving(HalvingParams),
+}
+
+/// CLI entry point: evaluate the space (exhaustively or adaptively),
+/// analyze, emit `results/explore.*`, stream partials to
+/// `results/explore_partial.jsonl`, and print the cache traffic (stdout
+/// only — reports stay run-invariant).
 pub fn run_cli(
     spec: &ExploreSpec,
     ctx: &CompileCtx,
     threads: usize,
     use_disk_cache: bool,
+    search: &SearchKind,
 ) -> Result<(), String> {
     spec.validate()?;
-    let points = spec.points();
-    println!(
-        "explore: {} points ({}) on {} thread(s)...",
-        points.len(),
-        spec.shape(),
-        threads.max(1)
-    );
+    let threads = threads.max(1);
     let disk = if use_disk_cache { Some(DiskCache::open_default()) } else { None };
-    let outcome = run(spec, ctx, threads, disk.as_ref());
+    let sink = PartialSink::create(PartialSink::default_path());
 
-    let analyses = report::analyze(spec, &outcome.results);
-    let md = report::to_markdown(spec, &outcome.results, &analyses);
-    let json = report::to_json(spec, &outcome.results, &analyses);
+    let (results, stats, trajectory) = match search {
+        SearchKind::Grid => {
+            let points = spec.points();
+            println!(
+                "explore: grid, {} points ({}) on {} thread(s)...",
+                points.len(),
+                spec.shape(),
+                threads
+            );
+            let session = EvalSession::new(spec, ctx, disk.as_ref(), Some(&sink));
+            let results = session.eval_points(&points, threads, None);
+            let stats = session.stats();
+            (results, stats, None)
+        }
+        SearchKind::Halving(params) => {
+            // Shape of the candidate space: the budget axis belongs to the
+            // rung ladder, not the cross-product.
+            let candidates = spec.candidate_spec();
+            println!(
+                "explore: halving (eta {}, objective {}): {} candidate(s) ({}) on {} thread(s)...",
+                params.eta,
+                params.objective.tag(),
+                candidates.points().len(),
+                candidates.shape(),
+                threads
+            );
+            let outcome =
+                search::run_halving(spec, ctx, threads, disk.as_ref(), Some(&sink), params)?;
+            println!(
+                "halving: {} evaluation(s) total, {} at full budget",
+                outcome.total_evals(),
+                outcome.full_budget_evals()
+            );
+            (outcome.results, outcome.stats, Some((params.clone(), outcome.rungs)))
+        }
+    };
+
+    let analyses = report::analyze(spec, &results);
+    let mut json = report::to_json(spec, &results, &analyses);
+    let md = match &trajectory {
+        None => report::to_markdown(spec, &results, &analyses),
+        Some((params, rungs)) => {
+            json.set("search", report::search_to_json(params, rungs));
+            // Head the survivor table with the candidate-space shape (the
+            // budget axis is the rung ladder) and an honest label — only
+            // final-rung survivors are listed, not a full grid.
+            let survivors = spec.candidate_spec();
+            format!(
+                "{}\n{}",
+                report::search_to_markdown(params, rungs),
+                report::to_markdown_labeled(
+                    "Survivors of candidate space",
+                    &survivors,
+                    &results,
+                    &analyses
+                )
+            )
+        }
+    };
     crate::experiments::common::emit("explore", "Design-space exploration", &md, &json);
 
+    if sink.is_active() && sink.dropped() == 0 {
+        println!("partial results: {}", sink.path().display());
+    } else {
+        println!(
+            "partial results: INCOMPLETE — {} record(s) dropped ({})",
+            sink.dropped(),
+            sink.path().display()
+        );
+    }
     println!(
-        "cache: {} hit(s) ({} in-memory, {} disk), {} compile(s)",
-        outcome.stats.total_hits(),
-        outcome.stats.memory_hits,
-        outcome.stats.disk_hits,
-        outcome.stats.misses
+        "cache: {} hit(s) ({} in-memory, {} disk), {} compile(s), {} extra context(s)",
+        stats.total_hits(),
+        stats.memory_hits,
+        stats.disk_hits,
+        stats.misses,
+        stats.ctx_builds
     );
     let failed: usize = analyses.iter().map(|a| a.failed.len()).sum();
     if failed > 0 {

@@ -36,35 +36,50 @@ pub fn pareto_front(points: &[Vec<f64>]) -> Vec<usize> {
     front
 }
 
-/// Knee point of a frontier: the member closest (Euclidean) to the ideal
-/// point after per-objective min-max normalization over the frontier.
-/// Degenerate spans (all frontier members equal in an objective) are
-/// normalized to 0 so they do not bias the distance. Ties resolve to the
-/// lowest index. `None` for an empty frontier.
-pub fn knee_point(points: &[Vec<f64>], front: &[usize]) -> Option<usize> {
-    if front.is_empty() {
-        return None;
-    }
-    let dims = points[front[0]].len();
+/// Euclidean distance of every point to the ideal corner after
+/// per-objective min-max normalization *over the given set*. Degenerate
+/// spans (all members equal in an objective) are normalized to 0 so they
+/// do not bias the distance. This is both the knee criterion (applied to a
+/// frontier) and the successive-halving promotion objective (applied to a
+/// whole rung cohort).
+pub fn knee_distances(points: &[Vec<f64>]) -> Vec<f64> {
+    let Some(first) = points.first() else {
+        return Vec::new();
+    };
+    let dims = first.len();
     let mut lo = vec![f64::INFINITY; dims];
     let mut hi = vec![f64::NEG_INFINITY; dims];
-    for &i in front {
+    for p in points {
         for d in 0..dims {
-            lo[d] = lo[d].min(points[i][d]);
-            hi[d] = hi[d].max(points[i][d]);
+            lo[d] = lo[d].min(p[d]);
+            hi[d] = hi[d].max(p[d]);
         }
     }
+    points
+        .iter()
+        .map(|p| {
+            let mut dist2 = 0.0;
+            for d in 0..dims {
+                let span = hi[d] - lo[d];
+                let z = if span > 0.0 { (p[d] - lo[d]) / span } else { 0.0 };
+                dist2 += z * z;
+            }
+            dist2.sqrt()
+        })
+        .collect()
+}
+
+/// Knee point of a frontier: the member closest to the ideal point under
+/// [`knee_distances`] computed over the frontier members. Ties resolve to
+/// the lowest index. `None` for an empty frontier.
+pub fn knee_point(points: &[Vec<f64>], front: &[usize]) -> Option<usize> {
+    let members: Vec<Vec<f64>> = front.iter().map(|&i| points[i].clone()).collect();
+    let dists = knee_distances(&members);
     let mut best: Option<(usize, f64)> = None;
-    for &i in front {
-        let mut dist2 = 0.0;
-        for d in 0..dims {
-            let span = hi[d] - lo[d];
-            let z = if span > 0.0 { (points[i][d] - lo[d]) / span } else { 0.0 };
-            dist2 += z * z;
-        }
+    for (k, &d) in dists.iter().enumerate() {
         match best {
-            Some((_, bd)) if bd <= dist2 => {}
-            _ => best = Some((i, dist2)),
+            Some((_, bd)) if bd <= d => {}
+            _ => best = Some((front[k], d)),
         }
     }
     best.map(|(i, _)| i)
@@ -153,5 +168,17 @@ mod tests {
     #[test]
     fn empty_input() {
         assert!(pareto_front(&[]).is_empty());
+        assert!(knee_distances(&[]).is_empty());
+    }
+
+    #[test]
+    fn knee_distances_rank_balanced_point_first() {
+        let pts = vec![v(&[0.0, 10.0]), v(&[10.0, 0.0]), v(&[1.0, 1.0])];
+        let d = knee_distances(&pts);
+        assert_eq!(d.len(), 3);
+        assert!(d[2] < d[0] && d[2] < d[1], "{d:?}");
+        // Distances are scale-free: each coordinate normalized to [0, 1].
+        assert!((d[0] - 1.0).abs() < 1e-12);
+        assert!((d[1] - 1.0).abs() < 1e-12);
     }
 }

@@ -10,6 +10,7 @@ use crate::util::json::Json;
 
 use super::pareto::{knee_point, pareto_front};
 use super::runner::PointResult;
+use super::search::{HalvingParams, RungReport};
 use super::space::ExploreSpec;
 
 /// Pareto analysis of one application's feasible points.
@@ -27,7 +28,9 @@ pub struct AppAnalysis {
 }
 
 /// Objective vector: (critical-path delay ns, EDP mJ*ms, pipelining regs).
-fn objectives(m: &super::cache::PointMetrics) -> Vec<f64> {
+/// Shared between the frontier analysis here and the halving search's
+/// knee-distance promotion ranking.
+pub fn objectives(m: &super::cache::PointMetrics) -> Vec<f64> {
     vec![m.crit_ns, m.edp, m.pipe_regs as f64]
 }
 
@@ -67,6 +70,45 @@ pub fn analyze(spec: &ExploreSpec, results: &[PointResult]) -> Vec<AppAnalysis> 
         .collect()
 }
 
+/// One evaluation as a self-describing JSON object: grid coordinates plus
+/// metrics (or the compile error). Used for the `points` array of the run
+/// report and, with a `rung` tag, for the streamed
+/// `results/explore_partial.jsonl` lines.
+pub fn point_json(r: &PointResult, rung: Option<usize>) -> Json {
+    let mut jp = Json::obj();
+    jp.set("id", r.point.id)
+        .set("app", r.point.app.as_str())
+        .set("level", r.point.level.as_str())
+        .set("alpha", r.point.alpha.map_or(Json::Null, Json::from))
+        .set("seed", r.point.seed)
+        .set("iters", r.point.iters.map_or(Json::Null, Json::from))
+        .set("tracks", r.point.tracks.map_or(Json::Null, Json::from))
+        .set("regwords", r.point.regwords.map_or(Json::Null, Json::from))
+        .set("fifo", r.point.fifo.map_or(Json::Null, Json::from));
+    if let Some(k) = rung {
+        jp.set("rung", k);
+    }
+    match &r.metrics {
+        Ok(m) => {
+            jp.set("crit_ns", m.crit_ns)
+                .set("fmax_mhz", m.fmax_mhz)
+                .set("runtime_ms", m.runtime_ms)
+                .set("power_mw", m.power_mw)
+                .set("energy_mj", m.energy_mj)
+                .set("edp", m.edp)
+                .set("pipe_regs", m.pipe_regs)
+                .set("util_pct", m.util_pct);
+            if m.cycles > 0 {
+                jp.set("cycles", m.cycles);
+            }
+        }
+        Err(e) => {
+            jp.set("error", e.as_str());
+        }
+    }
+    jp
+}
+
 /// Deterministic JSON document for the run.
 pub fn to_json(spec: &ExploreSpec, results: &[PointResult], analyses: &[AppAnalysis]) -> Json {
     let mut j = Json::obj();
@@ -78,6 +120,9 @@ pub fn to_json(spec: &ExploreSpec, results: &[PointResult], analyses: &[AppAnaly
         .set("alphas", spec.alphas.clone())
         .set("seeds", spec.seeds.clone())
         .set("iters", spec.iters.iter().map(|&i| i.into()).collect::<Vec<Json>>())
+        .set("tracks", spec.tracks.iter().map(|&t| t.into()).collect::<Vec<Json>>())
+        .set("regwords", spec.regwords.iter().map(|&w| w.into()).collect::<Vec<Json>>())
+        .set("fifos", spec.fifos.iter().map(|&f| f.into()).collect::<Vec<Json>>())
         .set("power_cap_mw", spec.power_cap_mw.map_or(Json::Null, Json::from))
         .set("fast", spec.fast)
         .set("scale", spec.scale.tag());
@@ -85,32 +130,7 @@ pub fn to_json(spec: &ExploreSpec, results: &[PointResult], analyses: &[AppAnaly
 
     let mut jpoints = Json::Arr(vec![]);
     for r in results {
-        let mut jp = Json::obj();
-        jp.set("id", r.point.id)
-            .set("app", r.point.app.as_str())
-            .set("level", r.point.level.as_str())
-            .set("alpha", r.point.alpha.map_or(Json::Null, Json::from))
-            .set("seed", r.point.seed)
-            .set("iters", r.point.iters.map_or(Json::Null, Json::from));
-        match &r.metrics {
-            Ok(m) => {
-                jp.set("crit_ns", m.crit_ns)
-                    .set("fmax_mhz", m.fmax_mhz)
-                    .set("runtime_ms", m.runtime_ms)
-                    .set("power_mw", m.power_mw)
-                    .set("energy_mj", m.energy_mj)
-                    .set("edp", m.edp)
-                    .set("pipe_regs", m.pipe_regs)
-                    .set("util_pct", m.util_pct);
-                if m.cycles > 0 {
-                    jp.set("cycles", m.cycles);
-                }
-            }
-            Err(e) => {
-                jp.set("error", e.as_str());
-            }
-        }
-        jpoints.push(jp);
+        jpoints.push(point_json(r, None));
     }
     j.set("points", jpoints);
 
@@ -128,6 +148,54 @@ pub fn to_json(spec: &ExploreSpec, results: &[PointResult], analyses: &[AppAnaly
     j
 }
 
+/// Deterministic JSON section describing an adaptive search run: the
+/// halving knobs plus the per-rung trajectory. Attached to the run report
+/// under the `search` key.
+pub fn search_to_json(params: &HalvingParams, rungs: &[RungReport]) -> Json {
+    let mut j = Json::obj();
+    j.set("mode", "halving")
+        .set("eta", params.eta)
+        .set("objective", params.objective.tag());
+    let mut jr = Json::Arr(vec![]);
+    for r in rungs {
+        let mut o = Json::obj();
+        o.set("rung", r.rung)
+            .set("budget", r.budget)
+            .set("evaluated", r.evaluated)
+            .set("kept", r.kept);
+        jr.push(o);
+    }
+    j.set("rungs", jr);
+    j
+}
+
+/// Markdown table of the halving trajectory, prepended to the run report
+/// so the budget/survivor schedule is visible next to the frontier.
+pub fn search_to_markdown(params: &HalvingParams, rungs: &[RungReport]) -> String {
+    let mut md = format!(
+        "Successive halving (eta {}, objective {}): {} rung(s)\n\n",
+        params.eta,
+        params.objective.tag(),
+        rungs.len()
+    );
+    let rows: Vec<Vec<String>> = rungs
+        .iter()
+        .map(|r| {
+            vec![
+                r.rung.to_string(),
+                r.budget.to_string(),
+                r.evaluated.to_string(),
+                r.kept.to_string(),
+            ]
+        })
+        .collect();
+    md.push_str(&crate::experiments::common::md_table(
+        &["rung", "post-PnR budget", "evaluated", "kept"],
+        &rows,
+    ));
+    md
+}
+
 /// Ranked markdown summary: per app, points sorted by critical-path delay
 /// with frontier (`*`), knee (`**`), power-capped (`cap`) and failed
 /// (`FAIL`) markers.
@@ -136,9 +204,21 @@ pub fn to_markdown(
     results: &[PointResult],
     analyses: &[AppAnalysis],
 ) -> String {
+    to_markdown_labeled("Grid", spec, results, analyses)
+}
+
+/// [`to_markdown`] with a custom header label — the halving path heads
+/// the table with "Survivors of candidate space: <shape>" because it
+/// lists final-rung survivors, not the full cross-product.
+pub fn to_markdown_labeled(
+    label: &str,
+    spec: &ExploreSpec,
+    results: &[PointResult],
+    analyses: &[AppAnalysis],
+) -> String {
     let mut md = String::new();
     md.push_str(&format!(
-        "Grid: {} ({} points){}{}\n",
+        "{label}: {} ({} points){}{}\n",
         spec.shape(),
         results.len(),
         if spec.fast { ", fast mode" } else { "" },
@@ -232,6 +312,9 @@ mod tests {
                 alpha: None,
                 seed: 1,
                 iters: None,
+                tracks: None,
+                regwords: None,
+                fifo: None,
             },
             metrics: Ok(PointMetrics {
                 crit_ns: crit,
@@ -298,6 +381,37 @@ mod tests {
         // Normalized over the frontier, point 2 is (0, 0, 1) and point 1
         // is (1, 1, 0): point 2 sits closer to the ideal corner.
         assert_eq!(a[0].knee, Some(2));
+    }
+
+    #[test]
+    fn point_json_carries_arch_coords_and_rung_tag() {
+        let mut r = mk(7, "gaussian", "full", 2.0, 0.5, 40);
+        r.point.tracks = Some(3);
+        r.point.regwords = Some(16);
+        let line = point_json(&r, Some(1)).to_string_compact();
+        assert!(line.contains("\"tracks\":3"));
+        assert!(line.contains("\"regwords\":16"));
+        assert!(line.contains("\"fifo\":null"));
+        assert!(line.contains("\"rung\":1"));
+        let untagged = point_json(&r, None).to_string_compact();
+        assert!(!untagged.contains("\"rung\""));
+    }
+
+    #[test]
+    fn search_report_lists_every_rung() {
+        let params = HalvingParams::default();
+        let rungs = vec![
+            RungReport { rung: 0, budget: 7, evaluated: 9, kept: 3 },
+            RungReport { rung: 1, budget: 22, evaluated: 3, kept: 1 },
+            RungReport { rung: 2, budget: 200, evaluated: 1, kept: 1 },
+        ];
+        let j = search_to_json(&params, &rungs).to_string_compact();
+        assert!(j.contains("\"mode\":\"halving\""));
+        assert!(j.contains("\"eta\":3"));
+        assert_eq!(j.matches("\"budget\"").count(), 3);
+        let md = search_to_markdown(&params, &rungs);
+        assert!(md.contains("3 rung(s)"));
+        assert!(md.contains("| 0 | 7 | 9 | 3 |"));
     }
 
     #[test]

@@ -1,20 +1,36 @@
-//! Parallel evaluation of an exploration grid.
+//! Parallel evaluation of exploration points.
 //!
-//! A work-queue executor over `std::thread::scope`: workers pull point
-//! indices from a shared atomic cursor and write results into a
-//! preallocated slot vector indexed by point id, so the output order is
-//! the spec's enumeration order *regardless of thread count or
-//! scheduling*. Compilation goes through the in-memory [`ArtifactCache`]
-//! (in-flight deduplication of effective-config collisions) and the
-//! persistent [`DiskCache`] (skip recompiles across invocations).
+//! The heart is [`EvalSession`], a reusable work-queue executor over
+//! `std::thread::scope`: workers pull point indices from a shared atomic
+//! cursor and write results into a preallocated slot vector indexed by
+//! position, so the output order is the input order *regardless of thread
+//! count or scheduling*. Compilation goes through the in-memory
+//! [`ArtifactCache`] (in-flight deduplication of effective-config
+//! collisions), the persistent [`DiskCache`] (skip recompiles across
+//! invocations), and a per-architecture [`CtxCache`] (points that override
+//! tracks / regfile words / FIFO depth share one lazily built
+//! [`CompileCtx`] per distinct effective architecture).
+//!
+//! A session outlives a single sweep: the successive-halving search in
+//! [`super::search`] evaluates every rung through one session, so a
+//! candidate promoted to a higher budget reuses the artifacts, contexts
+//! and disk records its cheaper evaluation already produced.
+//!
+//! Completed points can be streamed to a [`PartialSink`]
+//! (`results/explore_partial.jsonl`): one JSON line per evaluation, in
+//! completion order, so long sweeps are inspectable mid-run and a killed
+//! run leaves behind both the partial log and the disk-cache records that
+//! make the re-run cheap.
 
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::experiments::common::compile_dense;
 use crate::pipeline::{compile, CompileCtx, Compiled};
 
-use super::cache::{point_key, ArtifactCache, DiskCache, PointMetrics};
+use super::cache::{arch_signature, point_key, ArtifactCache, DiskCache, PointMetrics};
 use super::space::{ExplorePoint, ExploreSpec, Scale};
 
 /// Outcome of one grid point.
@@ -36,6 +52,8 @@ pub struct CacheStats {
     pub misses: usize,
     /// Points served from the persistent metrics cache.
     pub disk_hits: usize,
+    /// Compile contexts built for non-base architectures.
+    pub ctx_builds: usize,
 }
 
 impl CacheStats {
@@ -52,99 +70,258 @@ pub struct RunOutcome {
     pub stats: CacheStats,
 }
 
-/// Evaluate every point of `spec` on `threads` worker threads.
+/// Evaluate every point of `spec` on `threads` worker threads (exhaustive
+/// grid mode; the adaptive path is [`super::search::run_halving`]).
 pub fn run(
     spec: &ExploreSpec,
     ctx: &CompileCtx,
     threads: usize,
     disk: Option<&DiskCache>,
 ) -> RunOutcome {
-    let points = spec.points();
-    let artifacts = ArtifactCache::new();
-    let cursor = AtomicUsize::new(0);
-    let slots: Mutex<Vec<Option<PointResult>>> = Mutex::new(vec![None; points.len()]);
-
-    let workers = threads.max(1).min(points.len().max(1));
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::SeqCst);
-                if i >= points.len() {
-                    break;
-                }
-                let r = evaluate(&points[i], spec, ctx, &artifacts, disk);
-                slots.lock().unwrap()[i] = Some(r);
-            });
-        }
-    });
-
-    let results: Vec<PointResult> = slots
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|r| r.expect("worker left a hole in the result vector"))
-        .collect();
-    let stats = CacheStats {
-        memory_hits: artifacts.hits(),
-        misses: artifacts.misses(),
-        disk_hits: disk.map(|d| d.disk_hits()).unwrap_or(0),
-    };
-    RunOutcome { results, stats }
+    let session = EvalSession::new(spec, ctx, disk, None);
+    let results = session.eval_points(&spec.points(), threads, None);
+    RunOutcome { results, stats: session.stats() }
 }
 
-/// Evaluate one point: persistent cache, then artifact cache, then a
-/// fresh compile + measurement.
-fn evaluate(
-    point: &ExplorePoint,
-    spec: &ExploreSpec,
-    ctx: &CompileCtx,
-    artifacts: &ArtifactCache,
-    disk: Option<&DiskCache>,
-) -> PointResult {
-    let sparse = crate::apps::is_sparse_name(&point.app);
-    let mut cfg = point.config(spec.fast);
-    if spec.scale == Scale::Tiny || sparse {
-        // These paths compile directly and never consume §V-E duplication
-        // (tiny frames have no unrolling headroom; the sparse DFGs are not
-        // duplicable); clear the flag so the cache key and config
-        // signature match what actually compiles — levels differing only
-        // in `unroll_dup` then share one artifact.
-        cfg.unroll_dup = false;
-    }
-    let key = point_key(&point.app, &cfg, point.seed, spec.scale.tag(), &ctx.arch);
+type CtxSlot = Arc<Mutex<Option<Arc<CompileCtx>>>>;
 
-    if let Some(d) = disk {
-        if let Some(m) = d.load(key) {
-            return PointResult { point: point.clone(), metrics: Ok(m), from_disk: true };
+/// Lazily built compile contexts keyed by effective-architecture
+/// signature, with in-flight deduplication: when several workers race on
+/// the same architecture variant, exactly one builds the (expensive)
+/// delay-annotated interconnect graph and the rest block on the slot.
+#[derive(Default)]
+pub struct CtxCache {
+    slots: Mutex<std::collections::HashMap<String, CtxSlot>>,
+    builds: AtomicUsize,
+}
+
+impl CtxCache {
+    pub fn get_or_build(&self, arch: &crate::arch::params::ArchParams) -> Arc<CompileCtx> {
+        let slot = {
+            let mut slots = self.slots.lock().unwrap();
+            slots.entry(arch_signature(arch)).or_default().clone()
+        };
+        let mut guard = slot.lock().unwrap();
+        if let Some(ctx) = &*guard {
+            return ctx.clone();
+        }
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        let ctx = Arc::new(CompileCtx::new(arch.clone()));
+        *guard = Some(ctx.clone());
+        ctx
+    }
+
+    pub fn builds(&self) -> usize {
+        self.builds.load(Ordering::Relaxed)
+    }
+}
+
+/// Append-only JSONL stream of completed evaluations. Lines are written in
+/// completion order (scheduling-dependent); each line is self-describing,
+/// so consumers sort or filter on the embedded coordinates.
+pub struct PartialSink {
+    path: PathBuf,
+    file: Mutex<Option<std::fs::File>>,
+    dropped: AtomicUsize,
+}
+
+impl PartialSink {
+    /// Default location, next to the explore reports.
+    pub fn default_path() -> PathBuf {
+        PathBuf::from("results/explore_partial.jsonl")
+    }
+
+    /// Create (truncate) the stream at `path`. Falls back to a no-op sink
+    /// if the file cannot be created (e.g. read-only filesystem).
+    pub fn create(path: impl AsRef<Path>) -> PartialSink {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        let file = std::fs::File::create(&path).ok();
+        PartialSink { path, file: Mutex::new(file), dropped: AtomicUsize::new(0) }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Whether the stream actually opened (false on e.g. a read-only
+    /// filesystem, where records are dropped).
+    pub fn is_active(&self) -> bool {
+        self.file.lock().unwrap().is_some()
+    }
+
+    /// Records lost to a failed open or a mid-run write error. Non-zero
+    /// means the log is incomplete and must not be trusted as
+    /// one-line-per-evaluation.
+    pub fn dropped(&self) -> usize {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Record one completed evaluation (rung is `None` in grid mode).
+    pub fn record(&self, rung: Option<usize>, r: &PointResult) {
+        let line = super::report::point_json(r, rung).to_string_compact();
+        let mut guard = self.file.lock().unwrap();
+        let written = match guard.as_mut() {
+            Some(f) => writeln!(f, "{line}").and_then(|_| f.flush()).is_ok(),
+            None => false,
+        };
+        if !written {
+            // The stream never opened or just broke (disk full, fd
+            // error): stop writing so the log is not silently truncated
+            // mid-file, and account every lost record.
+            *guard = None;
+            self.dropped.fetch_add(1, Ordering::Relaxed);
         }
     }
-    if let Some(m) = artifacts.measured(key) {
-        return PointResult { point: point.clone(), metrics: Ok(m), from_disk: false };
+}
+
+/// A reusable evaluation session: shared caches + streaming sink. The
+/// grid runner evaluates one batch; the halving search evaluates one batch
+/// per rung through the same session.
+pub struct EvalSession<'a> {
+    spec: &'a ExploreSpec,
+    base: &'a CompileCtx,
+    base_sig: String,
+    artifacts: ArtifactCache,
+    ctxs: CtxCache,
+    disk: Option<&'a DiskCache>,
+    sink: Option<&'a PartialSink>,
+}
+
+impl<'a> EvalSession<'a> {
+    pub fn new(
+        spec: &'a ExploreSpec,
+        base: &'a CompileCtx,
+        disk: Option<&'a DiskCache>,
+        sink: Option<&'a PartialSink>,
+    ) -> EvalSession<'a> {
+        EvalSession {
+            spec,
+            base,
+            base_sig: arch_signature(&base.arch),
+            artifacts: ArtifactCache::new(),
+            ctxs: CtxCache::default(),
+            disk,
+            sink,
+        }
     }
-    let compiled = artifacts.get_or_compile(key, || {
-        if sparse || spec.scale == Scale::Tiny {
-            let app = match spec.scale {
-                Scale::Paper => crate::apps::by_name(&point.app),
-                Scale::Tiny => crate::apps::by_name_tiny(&point.app),
+
+    /// Evaluate `points` on `threads` worker threads; results come back in
+    /// input order independent of scheduling. `rung` tags the streamed
+    /// partial records when called from the halving search.
+    pub fn eval_points(
+        &self,
+        points: &[ExplorePoint],
+        threads: usize,
+        rung: Option<usize>,
+    ) -> Vec<PointResult> {
+        let cursor = AtomicUsize::new(0);
+        let slots: Mutex<Vec<Option<PointResult>>> = Mutex::new(vec![None; points.len()]);
+
+        let workers = threads.max(1).min(points.len().max(1));
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::SeqCst);
+                    if i >= points.len() {
+                        break;
+                    }
+                    let r = self.evaluate(&points[i]);
+                    if let Some(sink) = self.sink {
+                        sink.record(rung, &r);
+                    }
+                    slots.lock().unwrap()[i] = Some(r);
+                });
             }
-            .ok_or_else(|| format!("unknown app '{}'", point.app))?;
-            compile(&app, ctx, &cfg, point.seed).map_err(|e| format!("{}: {e}", point.app))
-        } else {
-            // Paper-scale dense: shared dispatch with the experiment
-            // harness (honours `unroll_dup`, handles resnet). `fast` is
-            // already folded into `cfg` by `ExplorePoint::config`.
-            compile_dense(&point.app, &cfg, ctx, false, point.seed)
-        }
-    });
+        });
 
-    let metrics = compiled.and_then(|c| measure(&point.app, &c, sparse));
-    if let Ok(m) = &metrics {
-        artifacts.record_measured(key, m);
-        if let Some(d) = disk {
-            d.store(key, m);
+        slots
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("worker left a hole in the result vector"))
+            .collect()
+    }
+
+    /// Cumulative cache traffic across every batch this session ran.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            memory_hits: self.artifacts.hits(),
+            misses: self.artifacts.misses(),
+            disk_hits: self.disk.map(|d| d.disk_hits()).unwrap_or(0),
+            ctx_builds: self.ctxs.builds(),
         }
     }
-    PointResult { point: point.clone(), metrics, from_disk: false }
+
+    /// Evaluate one point: persistent cache, then artifact cache, then a
+    /// fresh compile + measurement under the point's effective
+    /// architecture.
+    fn evaluate(&self, point: &ExplorePoint) -> PointResult {
+        let spec = self.spec;
+        let sparse = crate::apps::is_sparse_name(&point.app);
+        let mut cfg = point.config(spec.fast);
+        if spec.scale == Scale::Tiny || sparse {
+            // These paths compile directly and never consume §V-E
+            // duplication (tiny frames have no unrolling headroom; the
+            // sparse DFGs are not duplicable); clear the flag so the cache
+            // key and config signature match what actually compiles —
+            // levels differing only in `unroll_dup` then share one
+            // artifact.
+            cfg.unroll_dup = false;
+        }
+
+        // Resolve the effective architecture (cheap parameter struct);
+        // the key only needs this, so cache hits below never pay for a
+        // compile context. A point needs its own context only when the
+        // signature actually deviates from the base (overrides that
+        // merely restate base values reuse the base context).
+        let arch = point.arch(&self.base.arch);
+        let needs_own_ctx = point.has_arch_overrides() && arch_signature(&arch) != self.base_sig;
+        let key = point_key(&point.app, &cfg, point.seed, spec.scale.tag(), &arch);
+
+        if let Some(d) = self.disk {
+            if let Some(m) = d.load(key) {
+                return PointResult { point: point.clone(), metrics: Ok(m), from_disk: true };
+            }
+        }
+        if let Some(m) = self.artifacts.measured(key) {
+            return PointResult { point: point.clone(), metrics: Ok(m), from_disk: false };
+        }
+        // Cache miss: now build (or fetch) the delay-annotated context.
+        let ctx_arc;
+        let ctx: &CompileCtx = if needs_own_ctx {
+            ctx_arc = self.ctxs.get_or_build(&arch);
+            &ctx_arc
+        } else {
+            self.base
+        };
+        let compiled = self.artifacts.get_or_compile(key, || {
+            if sparse || spec.scale == Scale::Tiny {
+                let app = match spec.scale {
+                    Scale::Paper => crate::apps::by_name(&point.app),
+                    Scale::Tiny => crate::apps::by_name_tiny(&point.app),
+                }
+                .ok_or_else(|| format!("unknown app '{}'", point.app))?;
+                compile(&app, ctx, &cfg, point.seed).map_err(|e| format!("{}: {e}", point.app))
+            } else {
+                // Paper-scale dense: shared dispatch with the experiment
+                // harness (honours `unroll_dup`, handles resnet). `fast`
+                // is already folded into `cfg` by `ExplorePoint::config`.
+                compile_dense(&point.app, &cfg, ctx, false, point.seed)
+            }
+        });
+
+        let metrics = compiled.and_then(|c| measure(&point.app, &c, sparse));
+        if let Ok(m) = &metrics {
+            self.artifacts.record_measured(key, m);
+            if let Some(d) = self.disk {
+                d.store(key, m);
+            }
+        }
+        PointResult { point: point.clone(), metrics, from_disk: false }
+    }
 }
 
 /// Measure a compiled artifact. Sparse workloads run the ready-valid
@@ -233,5 +410,64 @@ mod tests {
             assert!(b.from_disk);
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn arch_axis_points_get_distinct_contexts_and_artifacts() {
+        // Narrower interconnect: same app, same config, different arch ->
+        // distinct cache keys, one extra context build, and (in general) a
+        // different compiled artifact.
+        let ctx = CompileCtx::paper();
+        let spec = tiny_spec().with_levels(["compute"]).with_tracks([3, 5]);
+        let out = run(&spec, &ctx, 2, None);
+        assert_eq!(out.results.len(), 2);
+        assert_eq!(out.stats.misses, 2, "arch variants must not share artifacts");
+        // tracks=5 restates the base track count, so it reuses the base
+        // context; only tracks=3 builds a new one.
+        assert_eq!(out.stats.ctx_builds, 1);
+        // The base-width variant always routes; the narrow one may fail
+        // (that is a legitimate DSE datum), but it must fail *measured*,
+        // not by panicking or sharing the wide artifact.
+        assert!(out.results[1].metrics.is_ok(), "{:?}", out.results[1].metrics);
+        if let (Ok(narrow), Ok(wide)) = (&out.results[0].metrics, &out.results[1].metrics) {
+            assert_ne!(narrow.artifact_fp, wide.artifact_fp);
+        }
+    }
+
+    #[test]
+    fn ctx_cache_memoizes_by_signature() {
+        let cache = CtxCache::default();
+        let a = crate::arch::params::ArchParams::tiny(4, 8).with_tracks(3);
+        let c1 = cache.get_or_build(&a);
+        let c2 = cache.get_or_build(&a.clone());
+        assert!(Arc::ptr_eq(&c1, &c2));
+        assert_eq!(cache.builds(), 1);
+        let b = a.clone().with_tracks(4);
+        let c3 = cache.get_or_build(&b);
+        assert!(!Arc::ptr_eq(&c1, &c3));
+        assert_eq!(cache.builds(), 2);
+    }
+
+    #[test]
+    fn partial_sink_streams_one_line_per_point() {
+        let path = std::env::temp_dir()
+            .join(format!("cascade-partial-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let ctx = CompileCtx::paper();
+        let spec = tiny_spec();
+        let sink = PartialSink::create(&path);
+        let session = EvalSession::new(&spec, &ctx, None, Some(&sink));
+        let results = session.eval_points(&spec.points(), 2, Some(0));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), results.len());
+        assert!(sink.is_active());
+        assert_eq!(sink.dropped(), 0);
+        for line in &lines {
+            assert!(line.starts_with('{') && line.ends_with('}'), "bad JSONL line: {line}");
+            assert!(line.contains("\"rung\":0"));
+            assert!(line.contains("\"crit_ns\""));
+        }
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,0 +1,430 @@
+//! Adaptive multi-fidelity search over the exploration space: successive
+//! halving (the non-stochastic core of Hyperband / ASHA, as used for CGRA
+//! PE design-space exploration).
+//!
+//! The exhaustive grid evaluates every point at full fidelity. Successive
+//! halving instead treats the post-PnR iteration budget as a *fidelity*
+//! ladder:
+//!
+//! 1. enumerate the candidate set — the spec's cross-product with the
+//!    budget axis suppressed ([`ExploreSpec::candidates`]);
+//! 2. evaluate every candidate at the cheapest rung budget;
+//! 3. rank each application's cohort by the promotion objective
+//!    (power-cap-infeasible points rank behind every feasible one, failed
+//!    compiles behind those) and keep the top `ceil(n / eta)`;
+//! 4. promote survivors to the next rung (budget × eta) and repeat until
+//!    the top rung, which runs at the full budget.
+//!
+//! All rungs share one [`EvalSession`], so a promoted candidate whose
+//! effective configuration did not change across budgets (e.g. `level =
+//! none`, which has no post-PnR pass) is served from the artifact cache
+//! instead of recompiling, and a re-run after a crash is served from the
+//! persistent disk cache rung by rung.
+//!
+//! The final rung's survivors are reported through the same Pareto /
+//! knee-point analysis as a grid run. On spaces where the cheap fidelity
+//! ranks the eventual knee into the survivor set (empirically: whenever
+//! budget-insensitive axes dominate), halving returns the grid's knee
+//! point while compiling strictly fewer full-budget points.
+
+use std::collections::HashSet;
+
+use crate::pipeline::CompileCtx;
+
+use super::cache::DiskCache;
+use super::pareto::knee_distances;
+use super::report::objectives;
+use super::runner::{CacheStats, EvalSession, PartialSink, PointResult};
+use super::space::{ExplorePoint, ExploreSpec};
+
+/// Promotion objective: how a rung cohort is ranked before the 1/eta cut.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Distance to the ideal corner of the normalized
+    /// (crit-delay, EDP, regs) space — the default, mirroring the
+    /// knee-point selection of the final report.
+    Knee,
+    /// Critical-path delay only.
+    Crit,
+    /// Energy-delay product only.
+    Edp,
+    /// Pipelining-register footprint only.
+    Regs,
+}
+
+impl Objective {
+    pub fn parse(s: &str) -> Result<Objective, String> {
+        Ok(match s {
+            "knee" => Objective::Knee,
+            "crit" => Objective::Crit,
+            "edp" => Objective::Edp,
+            "regs" => Objective::Regs,
+            _ => return Err(format!("unknown --objective '{s}' (knee|crit|edp|regs)")),
+        })
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Objective::Knee => "knee",
+            Objective::Crit => "crit",
+            Objective::Edp => "edp",
+            Objective::Regs => "regs",
+        }
+    }
+}
+
+/// Successive-halving knobs.
+#[derive(Debug, Clone)]
+pub struct HalvingParams {
+    /// Promotion factor: keep `ceil(n / eta)` of each cohort per rung and
+    /// multiply the budget by `eta` between rungs. Must be >= 2.
+    pub eta: usize,
+    /// Floor for the cheapest rung's post-PnR budget.
+    pub min_budget: usize,
+    /// Cohort ranking objective.
+    pub objective: Objective,
+}
+
+impl Default for HalvingParams {
+    fn default() -> Self {
+        HalvingParams { eta: 3, min_budget: 5, objective: Objective::Knee }
+    }
+}
+
+impl HalvingParams {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.eta < 2 {
+            return Err(format!("halving: --eta must be >= 2, got {}", self.eta));
+        }
+        if self.min_budget == 0 {
+            return Err("halving: minimum rung budget must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// What one rung did.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RungReport {
+    pub rung: usize,
+    /// Post-PnR iteration budget this rung evaluated at.
+    pub budget: usize,
+    /// Candidates evaluated at this rung.
+    pub evaluated: usize,
+    /// Candidates promoted to the next rung (= `evaluated` on the top
+    /// rung, whose survivors feed the final report instead).
+    pub kept: usize,
+}
+
+/// A completed adaptive search: final-rung results (candidate enumeration
+/// order), the rung trajectory, and cumulative cache traffic.
+#[derive(Debug)]
+pub struct SearchOutcome {
+    pub results: Vec<PointResult>,
+    pub rungs: Vec<RungReport>,
+    pub stats: CacheStats,
+}
+
+impl SearchOutcome {
+    /// Points evaluated at the full (top-rung) budget — the quantity the
+    /// grid-vs-halving acceptance check compares.
+    pub fn full_budget_evals(&self) -> usize {
+        self.rungs.last().map(|r| r.evaluated).unwrap_or(0)
+    }
+
+    /// Total evaluations across every rung (cache hits included).
+    pub fn total_evals(&self) -> usize {
+        self.rungs.iter().map(|r| r.evaluated).sum()
+    }
+}
+
+/// The top-rung budget for a spec: the largest requested budget (or the
+/// post-PnR default), clamped to what `--fast` tuning would allow anyway
+/// so every rung's budget survives `ExplorePoint::config` intact.
+pub fn full_budget(spec: &ExploreSpec) -> usize {
+    let nominal = spec
+        .iters
+        .iter()
+        .copied()
+        .max()
+        .unwrap_or(crate::pipeline::PostPnrParams::default().max_iters);
+    if spec.fast {
+        nominal.min(crate::experiments::common::FAST_MAX_POSTPNR_ITERS)
+    } else {
+        nominal
+    }
+}
+
+/// The rung budget ladder, cheapest first, always ending at `full`. The
+/// number of halvings is bounded by the budget span (`full / eta^s >=
+/// min_budget`) and by the population (no more rungs than needed to cut
+/// the largest per-app cohort down to one candidate). Built by repeated
+/// division, never exponentiation, so arbitrarily large budgets cannot
+/// overflow.
+pub fn rung_budgets(full: usize, min_budget: usize, eta: usize, max_cohort: usize) -> Vec<usize> {
+    let min_budget = min_budget.max(1);
+    let eta = eta.max(2);
+    let mut pop_halvings = 0usize;
+    let mut n = max_cohort.max(1);
+    while n > 1 {
+        n = n.div_ceil(eta);
+        pop_halvings += 1;
+    }
+    let mut ladder = vec![full.max(1)];
+    while ladder.len() <= pop_halvings {
+        let next = ladder.last().unwrap() / eta;
+        if next < min_budget {
+            break;
+        }
+        ladder.push(next);
+    }
+    ladder.reverse();
+    ladder
+}
+
+/// Run successive halving over `spec`'s candidate set.
+pub fn run_halving(
+    spec: &ExploreSpec,
+    ctx: &CompileCtx,
+    threads: usize,
+    disk: Option<&DiskCache>,
+    sink: Option<&PartialSink>,
+    params: &HalvingParams,
+) -> Result<SearchOutcome, String> {
+    spec.validate()?;
+    params.validate()?;
+    let mut alive = spec.candidates();
+    let max_cohort = spec
+        .apps
+        .iter()
+        .map(|a| alive.iter().filter(|c| &c.app == a).count())
+        .max()
+        .unwrap_or(0);
+    let budgets = rung_budgets(full_budget(spec), params.min_budget, params.eta, max_cohort);
+    let session = EvalSession::new(spec, ctx, disk, sink);
+
+    let mut rungs = Vec::new();
+    let mut final_results = Vec::new();
+    for (k, &budget) in budgets.iter().enumerate() {
+        let points: Vec<ExplorePoint> = alive.iter().map(|c| c.at_budget(budget)).collect();
+        let results = session.eval_points(&points, threads, Some(k));
+        let top_rung = k + 1 == budgets.len();
+        let kept = if top_rung {
+            results.len()
+        } else {
+            let keep: HashSet<usize> =
+                select_survivors(spec, &results, params).into_iter().collect();
+            alive.retain(|c| keep.contains(&c.id));
+            keep.len()
+        };
+        println!(
+            "rung {k}: budget {budget}, {} candidate(s) -> {} {}",
+            results.len(),
+            kept,
+            if top_rung { "to report" } else { "promoted" }
+        );
+        rungs.push(RungReport { rung: k, budget, evaluated: results.len(), kept });
+        if top_rung {
+            final_results = results;
+        }
+    }
+    Ok(SearchOutcome { results: final_results, rungs, stats: session.stats() })
+}
+
+/// Candidate ids to promote: per application, rank the cohort — feasible
+/// points by the objective, then power-capped points, then failed compiles
+/// — and keep the top `ceil(n / eta)`.
+fn select_survivors(
+    spec: &ExploreSpec,
+    results: &[PointResult],
+    params: &HalvingParams,
+) -> Vec<usize> {
+    let mut keep = Vec::new();
+    for app in &spec.apps {
+        let cohort: Vec<&PointResult> = results.iter().filter(|r| &r.point.app == app).collect();
+        if cohort.is_empty() {
+            continue;
+        }
+        let quota = cohort.len().div_ceil(params.eta);
+
+        let mut feasible = Vec::new();
+        let mut capped = Vec::new();
+        let mut failed = Vec::new();
+        for r in &cohort {
+            match &r.metrics {
+                Ok(m) if crate::sim::power::within_cap(m.power_mw, spec.power_cap_mw) => {
+                    feasible.push(*r)
+                }
+                Ok(_) => capped.push(*r),
+                Err(_) => failed.push(*r),
+            }
+        }
+        let scores = rank_scores(&feasible, params.objective);
+        let mut order: Vec<usize> = (0..feasible.len()).collect();
+        order.sort_by(|&i, &j| {
+            scores[i]
+                .partial_cmp(&scores[j])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(feasible[i].point.id.cmp(&feasible[j].point.id))
+        });
+        keep.extend(
+            order
+                .into_iter()
+                .map(|i| feasible[i].point.id)
+                .chain(capped.iter().map(|r| r.point.id))
+                .chain(failed.iter().map(|r| r.point.id))
+                .take(quota),
+        );
+    }
+    keep
+}
+
+/// Lower-is-better promotion score for each feasible cohort member.
+fn rank_scores(feasible: &[&PointResult], objective: Objective) -> Vec<f64> {
+    fn metric(r: &PointResult) -> &super::cache::PointMetrics {
+        r.metrics.as_ref().expect("feasible implies Ok")
+    }
+    match objective {
+        Objective::Crit => feasible.iter().map(|r| metric(r).crit_ns).collect(),
+        Objective::Edp => feasible.iter().map(|r| metric(r).edp).collect(),
+        Objective::Regs => feasible.iter().map(|r| metric(r).pipe_regs as f64).collect(),
+        Objective::Knee => {
+            let vecs: Vec<Vec<f64>> = feasible.iter().map(|r| objectives(metric(r))).collect();
+            knee_distances(&vecs)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::cache::PointMetrics;
+
+    #[test]
+    fn objective_parses_and_rejects() {
+        assert_eq!(Objective::parse("knee").unwrap(), Objective::Knee);
+        assert_eq!(Objective::parse("crit").unwrap(), Objective::Crit);
+        assert_eq!(Objective::parse("edp").unwrap(), Objective::Edp);
+        assert_eq!(Objective::parse("regs").unwrap(), Objective::Regs);
+        assert!(Objective::parse("speed").is_err());
+    }
+
+    #[test]
+    fn params_validate() {
+        assert!(HalvingParams::default().validate().is_ok());
+        assert!(HalvingParams { eta: 1, ..Default::default() }.validate().is_err());
+        assert!(HalvingParams { min_budget: 0, ..Default::default() }.validate().is_err());
+    }
+
+    /// The satellite monotonicity requirement: rung budgets strictly
+    /// increase and top out at the full budget.
+    #[test]
+    fn rung_budgets_are_monotone_and_end_at_full() {
+        for (full, min, eta, cohort) in [
+            (200, 5, 3, 27),
+            (200, 5, 2, 100),
+            (25, 5, 3, 9),
+            (7, 1, 2, 64),
+            (1, 1, 2, 4),
+            // Absurd inputs must not overflow or divide by zero.
+            (usize::MAX, 1, 2, usize::MAX),
+        ] {
+            let b = rung_budgets(full, min, eta, cohort);
+            assert!(!b.is_empty());
+            assert_eq!(*b.last().unwrap(), full, "{b:?}");
+            for w in b.windows(2) {
+                assert!(w[0] < w[1], "budgets must strictly increase: {b:?}");
+            }
+            assert!(*b.first().unwrap() >= 1);
+        }
+    }
+
+    #[test]
+    fn rung_count_bounded_by_population() {
+        // 2 candidates per app: one halving reduces to 1, so at most two
+        // rungs no matter how wide the budget span is.
+        let b = rung_budgets(200, 1, 3, 2);
+        assert_eq!(b.len(), 2);
+        // Single candidate: nothing to halve, single full-budget rung.
+        assert_eq!(rung_budgets(200, 5, 3, 1), vec![200]);
+    }
+
+    fn result(id: usize, app: &str, crit: f64, edp: f64, regs: u64, power: f64) -> PointResult {
+        PointResult {
+            point: ExplorePoint {
+                id,
+                app: app.into(),
+                level: "full".into(),
+                alpha: None,
+                seed: 1,
+                iters: Some(5),
+                tracks: None,
+                regwords: None,
+                fifo: None,
+            },
+            metrics: Ok(PointMetrics {
+                crit_ns: crit,
+                fmax_mhz: 1000.0 / crit,
+                runtime_ms: 1.0,
+                power_mw: power,
+                energy_mj: 0.1,
+                edp,
+                pipe_regs: regs,
+                util_pct: 50.0,
+                cycles: 0,
+                artifact_fp: id as u64,
+            }),
+            from_disk: false,
+        }
+    }
+
+    #[test]
+    fn survivors_prefer_balanced_points_and_drop_capped_first() {
+        let spec = ExploreSpec::default()
+            .with_apps(["gaussian"])
+            .with_levels(["full"])
+            .with_seeds([1])
+            .with_power_cap(Some(300.0));
+        let params = HalvingParams { eta: 2, ..Default::default() };
+        // Four candidates: a balanced one, two extremes, and one that
+        // would win on crit but blows the power cap.
+        let results = vec![
+            result(0, "gaussian", 10.0, 10.0, 100, 100.0),
+            result(1, "gaussian", 2.0, 2.0, 20, 100.0), // balanced: best knee
+            result(2, "gaussian", 9.0, 1.0, 500, 100.0),
+            result(3, "gaussian", 1.0, 0.5, 10, 999.0), // capped
+        ];
+        let keep = select_survivors(&spec, &results, &params);
+        assert_eq!(keep.len(), 2);
+        assert!(keep.contains(&1), "balanced point must survive: {keep:?}");
+        assert!(!keep.contains(&3), "capped point must be dropped first: {keep:?}");
+    }
+
+    #[test]
+    fn survivors_failed_points_rank_last_but_cohort_never_empties() {
+        let spec =
+            ExploreSpec::default().with_apps(["gaussian"]).with_levels(["full"]).with_seeds([1]);
+        let params = HalvingParams { eta: 4, ..Default::default() };
+        let mut broken = result(0, "gaussian", 1.0, 1.0, 1, 100.0);
+        broken.metrics = Err("routing: congestion".into());
+        let keep = select_survivors(&spec, &[broken], &params);
+        // Every point failed: still promote one so the failure is
+        // reported at full budget rather than vanishing silently.
+        assert_eq!(keep, vec![0]);
+    }
+
+    #[test]
+    fn scalar_objectives_rank_by_their_metric() {
+        let rs = vec![
+            result(0, "gaussian", 5.0, 1.0, 50, 100.0),
+            result(1, "gaussian", 1.0, 5.0, 500, 100.0),
+        ];
+        let refs: Vec<&PointResult> = rs.iter().collect();
+        let crit = rank_scores(&refs, Objective::Crit);
+        assert!(crit[1] < crit[0]);
+        let edp = rank_scores(&refs, Objective::Edp);
+        assert!(edp[0] < edp[1]);
+        let regs = rank_scores(&refs, Objective::Regs);
+        assert!(regs[0] < regs[1]);
+    }
+}

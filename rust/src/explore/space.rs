@@ -1,15 +1,21 @@
 //! Declarative exploration grid: [`ExploreSpec`] axis builders and
 //! deterministic point enumeration.
 //!
-//! A spec is the cross-product of five axes:
+//! A spec is the cross-product of up to eight axes: five compiler axes
 //! (app × pipelining level × placement `alpha` × PnR seed × post-PnR
-//! iteration budget). Each [`ExplorePoint`] resolves to one *effective*
-//! [`PipelineConfig`] — the level's base configuration with the point's
-//! alpha / iteration overrides applied, then `--fast` tuning folded in —
-//! so two points that resolve to the same effective configuration (e.g.
-//! every iteration budget at `level=none`, which has no post-PnR pass)
-//! share one content-hash key and compile once through the artifact cache.
+//! iteration budget) and three architecture axes (routing tracks ×
+//! register-file words × FIFO depth), as in the CGRA-PE DSE setting. Each
+//! [`ExplorePoint`] resolves to one *effective* [`PipelineConfig`] — the
+//! level's base configuration with the point's alpha / iteration overrides
+//! applied, then `--fast` tuning folded in — plus one *effective*
+//! [`ArchParams`] (the base architecture with the point's track / regfile
+//! / FIFO overrides). Two points that resolve to the same effective pair
+//! (e.g. every iteration budget at `level=none`, which has no post-PnR
+//! pass) share one content-hash key and compile once through the artifact
+//! cache; points that share an effective architecture share one compile
+//! context through the runner's context cache.
 
+use crate::arch::params::ArchParams;
 use crate::experiments::common::tune;
 use crate::pipeline::{PipelineConfig, PostPnrParams};
 use crate::util::cli::Args;
@@ -41,6 +47,13 @@ pub struct ExploreSpec {
     pub alphas: Vec<f64>,
     pub seeds: Vec<u64>,
     pub iters: Vec<usize>,
+    /// Architecture axis: routing tracks per side per layer (empty = the
+    /// base architecture's track count).
+    pub tracks: Vec<usize>,
+    /// Architecture axis: register-file words per PE tile.
+    pub regwords: Vec<usize>,
+    /// Architecture axis: sparse-pipelining FIFO depth.
+    pub fifos: Vec<usize>,
     /// Capstone-style power cap (mW): points whose estimated total power
     /// exceeds the cap are reported but excluded from the frontier.
     pub power_cap_mw: Option<f64>,
@@ -57,6 +70,9 @@ impl Default for ExploreSpec {
             alphas: Vec::new(),
             seeds: vec![3],
             iters: Vec::new(),
+            tracks: Vec::new(),
+            regwords: Vec::new(),
+            fifos: Vec::new(),
             power_cap_mw: None,
             fast: false,
             scale: Scale::Paper,
@@ -91,6 +107,21 @@ impl ExploreSpec {
         self
     }
 
+    pub fn with_tracks(mut self, tracks: impl IntoIterator<Item = usize>) -> Self {
+        self.tracks = tracks.into_iter().collect();
+        self
+    }
+
+    pub fn with_regwords(mut self, regwords: impl IntoIterator<Item = usize>) -> Self {
+        self.regwords = regwords.into_iter().collect();
+        self
+    }
+
+    pub fn with_fifos(mut self, fifos: impl IntoIterator<Item = usize>) -> Self {
+        self.fifos = fifos.into_iter().collect();
+        self
+    }
+
     pub fn with_power_cap(mut self, cap_mw: Option<f64>) -> Self {
         self.power_cap_mw = cap_mw;
         self
@@ -109,7 +140,8 @@ impl ExploreSpec {
     /// Parse a spec from CLI arguments (`cascade explore ...`).
     ///
     /// Flags: `--apps a,b` `--levels l1,l2` `--alphas 1.0,1.35|sweep`
-    /// `--seeds 1,2` `--iters 25,200` `--power-cap MW` `--fast` `--tiny`.
+    /// `--seeds 1,2` `--iters 25,200` `--tracks 3,5` `--regwords 16,32`
+    /// `--fifo 2,4` `--power-cap MW` `--fast` `--tiny`.
     pub fn from_args(args: &Args) -> Result<ExploreSpec, String> {
         let mut spec = ExploreSpec::default();
         if let Some(s) = args.opt("apps") {
@@ -130,6 +162,15 @@ impl ExploreSpec {
         }
         if let Some(s) = args.opt("iters") {
             spec.iters = parse_csv(s, "iters")?;
+        }
+        if let Some(s) = args.opt("tracks") {
+            spec.tracks = parse_csv(s, "tracks")?;
+        }
+        if let Some(s) = args.opt("regwords") {
+            spec.regwords = parse_csv(s, "regwords")?;
+        }
+        if let Some(s) = args.opt("fifo") {
+            spec.fifos = parse_csv(s, "fifo")?;
         }
         if let Some(s) = args.opt("power-cap") {
             let cap: f64 =
@@ -164,37 +205,57 @@ impl ExploreSpec {
                 return Err(format!("explore: power cap must be positive, got {cap}"));
             }
         }
+        if self.tracks.iter().any(|&t| t == 0) {
+            return Err("explore: --tracks values must be >= 1".into());
+        }
+        if self.regwords.iter().any(|&w| w == 0) {
+            return Err("explore: --regwords values must be >= 1".into());
+        }
+        if self.fifos.iter().any(|&f| f == 0) {
+            return Err("explore: --fifo values must be >= 1".into());
+        }
         Ok(())
     }
 
     /// Enumerate the grid in deterministic axis-major order
-    /// (app → level → alpha → seed → iters). Point ids are dense indices
-    /// into this order.
+    /// (app → level → alpha → seed → iters → tracks → regwords → fifo).
+    /// Point ids are dense indices into this order.
     pub fn points(&self) -> Vec<ExplorePoint> {
-        let alphas: Vec<Option<f64>> = if self.alphas.is_empty() {
-            vec![None]
-        } else {
-            self.alphas.iter().copied().map(Some).collect()
-        };
-        let iters: Vec<Option<usize>> = if self.iters.is_empty() {
-            vec![None]
-        } else {
-            self.iters.iter().copied().map(Some).collect()
-        };
+        fn axis<T: Copy>(values: &[T]) -> Vec<Option<T>> {
+            if values.is_empty() {
+                vec![None]
+            } else {
+                values.iter().copied().map(Some).collect()
+            }
+        }
+        let alphas = axis(&self.alphas);
+        let iters = axis(&self.iters);
+        let tracks = axis(&self.tracks);
+        let regwords = axis(&self.regwords);
+        let fifos = axis(&self.fifos);
         let mut out = Vec::new();
         for app in &self.apps {
             for level in &self.levels {
                 for &alpha in &alphas {
                     for &seed in &self.seeds {
                         for &it in &iters {
-                            out.push(ExplorePoint {
-                                id: out.len(),
-                                app: app.clone(),
-                                level: level.clone(),
-                                alpha,
-                                seed,
-                                iters: it,
-                            });
+                            for &t in &tracks {
+                                for &rw in &regwords {
+                                    for &fd in &fifos {
+                                        out.push(ExplorePoint {
+                                            id: out.len(),
+                                            app: app.clone(),
+                                            level: level.clone(),
+                                            alpha,
+                                            seed,
+                                            iters: it,
+                                            tracks: t,
+                                            regwords: rw,
+                                            fifo: fd,
+                                        });
+                                    }
+                                }
+                            }
                         }
                     }
                 }
@@ -203,20 +264,43 @@ impl ExploreSpec {
         out
     }
 
+    /// The spec with the post-PnR budget axis suppressed — the candidate
+    /// space of the successive-halving search, which owns the budget
+    /// dimension as its rung ladder.
+    pub fn candidate_spec(&self) -> ExploreSpec {
+        ExploreSpec { iters: Vec::new(), ..self.clone() }
+    }
+
+    /// Enumeration of [`candidate_spec`](Self::candidate_spec).
+    pub fn candidates(&self) -> Vec<ExplorePoint> {
+        self.candidate_spec().points()
+    }
+
     /// Human-readable axis summary (`2 apps x 3 levels x ...`).
     pub fn shape(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} apps x {} levels x {} alphas x {} seeds x {} budgets",
             self.apps.len(),
             self.levels.len(),
             self.alphas.len().max(1),
             self.seeds.len(),
             self.iters.len().max(1)
-        )
+        );
+        if !self.tracks.is_empty() {
+            s.push_str(&format!(" x {} tracks", self.tracks.len()));
+        }
+        if !self.regwords.is_empty() {
+            s.push_str(&format!(" x {} regwords", self.regwords.len()));
+        }
+        if !self.fifos.is_empty() {
+            s.push_str(&format!(" x {} fifos", self.fifos.len()));
+        }
+        s
     }
 }
 
-/// One grid point. `alpha` / `iters` of `None` mean the level default.
+/// One grid point. `alpha` / `iters` of `None` mean the level default;
+/// `tracks` / `regwords` / `fifo` of `None` mean the base architecture.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExplorePoint {
     pub id: usize,
@@ -225,6 +309,9 @@ pub struct ExplorePoint {
     pub alpha: Option<f64>,
     pub seed: u64,
     pub iters: Option<usize>,
+    pub tracks: Option<usize>,
+    pub regwords: Option<usize>,
+    pub fifo: Option<usize>,
 }
 
 impl ExplorePoint {
@@ -245,6 +332,36 @@ impl ExplorePoint {
         tune(&cfg, fast)
     }
 
+    /// Resolve the point's effective architecture: the base parameters
+    /// with the track / regfile-word / FIFO-depth overrides applied. The
+    /// runner builds (and memoizes) one compile context per distinct
+    /// effective architecture.
+    pub fn arch(&self, base: &ArchParams) -> ArchParams {
+        let mut a = base.clone();
+        if let Some(t) = self.tracks {
+            a.tracks = t;
+        }
+        if let Some(w) = self.regwords {
+            a.regfile_words = w;
+        }
+        if let Some(d) = self.fifo {
+            a.fifo_depth = d;
+        }
+        a
+    }
+
+    /// Whether the point deviates from the base architecture (and so needs
+    /// its own compile context).
+    pub fn has_arch_overrides(&self) -> bool {
+        self.tracks.is_some() || self.regwords.is_some() || self.fifo.is_some()
+    }
+
+    /// The same point with a different post-PnR iteration budget — how the
+    /// successive-halving search promotes a candidate to the next rung.
+    pub fn at_budget(&self, iters: usize) -> ExplorePoint {
+        ExplorePoint { iters: Some(iters), ..self.clone() }
+    }
+
     /// Compact display label.
     pub fn label(&self) -> String {
         let mut s = format!("{}/{}", self.app, self.level);
@@ -254,6 +371,15 @@ impl ExplorePoint {
         s.push_str(&format!(" s={}", self.seed));
         if let Some(it) = self.iters {
             s.push_str(&format!(" it={it}"));
+        }
+        if let Some(t) = self.tracks {
+            s.push_str(&format!(" t={t}"));
+        }
+        if let Some(w) = self.regwords {
+            s.push_str(&format!(" rw={w}"));
+        }
+        if let Some(d) = self.fifo {
+            s.push_str(&format!(" fd={d}"));
         }
         s
     }
@@ -327,6 +453,66 @@ mod tests {
     }
 
     #[test]
+    fn arch_axes_enumerate_and_resolve() {
+        let spec = ExploreSpec::default()
+            .with_apps(["gaussian"])
+            .with_levels(["full"])
+            .with_seeds([1])
+            .with_tracks([3, 5])
+            .with_regwords([16])
+            .with_fifos([2, 4]);
+        let pts = spec.points();
+        assert_eq!(pts.len(), 4);
+        let base = ArchParams::paper();
+        let a0 = pts[0].arch(&base);
+        assert_eq!(a0.tracks, 3);
+        assert_eq!(a0.regfile_words, 16);
+        assert_eq!(a0.fifo_depth, 2);
+        let a3 = pts[3].arch(&base);
+        assert_eq!(a3.tracks, 5);
+        assert_eq!(a3.fifo_depth, 4);
+        assert!(pts.iter().all(|p| p.has_arch_overrides()));
+        // No overrides: the base architecture passes through untouched.
+        let plain = ExploreSpec::default().points();
+        assert!(!plain[0].has_arch_overrides());
+        assert_eq!(plain[0].arch(&base).tracks, base.tracks);
+        assert!(spec.shape().contains("2 tracks"));
+        assert!(spec.shape().contains("2 fifos"));
+    }
+
+    #[test]
+    fn from_args_parses_arch_axes_and_rejects_zero() {
+        let spec = ExploreSpec::from_args(&args(
+            "explore --tracks 3,5 --regwords 16,32 --fifo 4",
+        ))
+        .unwrap();
+        assert_eq!(spec.tracks, vec![3, 5]);
+        assert_eq!(spec.regwords, vec![16, 32]);
+        assert_eq!(spec.fifos, vec![4]);
+        assert!(ExploreSpec::from_args(&args("explore --tracks 0")).is_err());
+        assert!(ExploreSpec::from_args(&args("explore --regwords 0")).is_err());
+        assert!(ExploreSpec::from_args(&args("explore --fifo 0")).is_err());
+    }
+
+    #[test]
+    fn candidates_suppress_budget_axis() {
+        let spec = ExploreSpec::default()
+            .with_apps(["gaussian"])
+            .with_levels(["none", "full"])
+            .with_seeds([1])
+            .with_iters([10, 50, 200]);
+        assert_eq!(spec.points().len(), 6);
+        let cands = spec.candidates();
+        assert_eq!(cands.len(), 2);
+        assert!(cands.iter().all(|c| c.iters.is_none()));
+        // Promotion rebinds only the budget.
+        let p = cands[1].at_budget(50);
+        assert_eq!(p.iters, Some(50));
+        assert_eq!(p.level, cands[1].level);
+        assert_eq!(p.id, cands[1].id);
+    }
+
+    #[test]
     fn overrides_fold_into_effective_config() {
         let p = ExplorePoint {
             id: 0,
@@ -335,6 +521,9 @@ mod tests {
             alpha: Some(1.5),
             seed: 1,
             iters: Some(50),
+            tracks: None,
+            regwords: None,
+            fifo: None,
         };
         let cfg = p.config(false);
         assert_eq!(cfg.place_alpha, 1.5);

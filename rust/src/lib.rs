@@ -37,12 +37,14 @@
 //! * [`apps`] — the benchmark applications from the paper's evaluation.
 //! * [`experiments`] — regenerators for every table and figure in the paper.
 //! * [`explore`] — the design-space exploration engine: a parallel
-//!   work-queue sweep over (app × pipelining level × placement alpha ×
-//!   PnR seed × post-PnR iteration budget) with content-hash artifact
-//!   caching, Capstone-style power capping, and Pareto-frontier /
-//!   knee-point reporting over (critical-path delay, EDP, pipelining
-//!   registers). Drives `cascade explore`; `cascade exp summary` reuses
-//!   its persistent cache.
+//!   work-queue sweep over compiler axes (app × pipelining level ×
+//!   placement alpha × PnR seed × post-PnR iteration budget) and
+//!   architecture axes (routing tracks × regfile words × FIFO depth) with
+//!   content-hash artifact caching, adaptive successive halving
+//!   (`--search halving`), streamed partial results, Capstone-style power
+//!   capping, and Pareto-frontier / knee-point reporting over
+//!   (critical-path delay, EDP, pipelining registers). Drives `cascade
+//!   explore`; `cascade exp summary` reuses its persistent cache.
 //! * [`util`] — in-house substrates: deterministic PRNG, JSON writer,
 //!   mini property-testing framework, statistics helpers, micro-bench timer.
 

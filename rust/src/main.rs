@@ -5,18 +5,31 @@
 //! cascade sta --app harris --level compute                 STA report for a config
 //! cascade exp <fig6|fig7|table1|fig8|fig9|fig10|table2|fig11|summary|all> [--fast] [--no-cache]
 //! cascade explore [--apps a,b] [--levels l1,l2] [--alphas 1.0,1.35|sweep]
-//!                 [--seeds 1,2] [--iters 25,200] [--threads N]
-//!                 [--power-cap MW] [--fast] [--tiny] [--no-cache]
+//!                 [--seeds 1,2] [--iters 25,200] [--tracks 3,5] [--regwords 16,32]
+//!                 [--fifo 2,4] [--search grid|halving] [--eta N] [--min-budget N]
+//!                 [--objective knee|crit|edp|regs]
+//!                 [--threads N] [--power-cap MW] [--fast] [--tiny] [--no-cache]
 //! cascade arch                                             print architecture + timing model
 //! ```
 //!
-//! `explore` sweeps the cross-product of (app × pipelining level ×
-//! placement alpha × PnR seed × post-PnR iteration budget) on a parallel
-//! work queue, memoizes compiled artifacts by content hash (repeat runs
-//! are served from `results/explore_cache/`), filters points that exceed
-//! the optional power cap, and reports the Pareto frontier over
-//! (critical-path delay, EDP, pipelining-register count) plus a knee
-//! point. Results land in `results/explore.{md,json}`.
+//! `explore` sweeps the cross-product of compiler axes (app × pipelining
+//! level × placement alpha × PnR seed × post-PnR iteration budget) and
+//! architecture axes (routing tracks × regfile words × FIFO depth) on a
+//! parallel work queue, memoizes compiled artifacts by content hash
+//! (repeat runs are served from `results/explore_cache/`), filters points
+//! that exceed the optional power cap, and reports the Pareto frontier
+//! over (critical-path delay, EDP, pipelining-register count) plus a knee
+//! point. Results land in `results/explore.{md,json}`; every completed
+//! evaluation is also streamed to `results/explore_partial.jsonl` so long
+//! sweeps are inspectable (and, via the disk cache, resumable) mid-run.
+//!
+//! `--search halving` switches from the exhaustive grid to adaptive
+//! successive halving: all candidates are evaluated at a cheap post-PnR
+//! budget, each application's cohort keeps its best `1/eta` under
+//! `--objective` (power-capped points dropped first), and survivors are
+//! promoted up the budget ladder until the full budget — far fewer
+//! full-fidelity compiles on spaces where cheap budgets already separate
+//! winners.
 
 use cascade::experiments;
 use cascade::explore::ExploreSpec;
@@ -31,7 +44,10 @@ fn usage() -> ! {
            sta     --app <name> [--level <level>] [--seed N]   timing report\n\
            exp     <id|all> [--fast] [--seed N] [--no-cache]   regenerate paper tables/figures\n\
            explore [--apps a,b] [--levels l1,l2] [--alphas x,y|sweep] [--seeds 1,2]\n\
-                   [--iters 25,200] [--threads N] [--power-cap MW] [--fast] [--tiny]\n\
+                   [--iters 25,200] [--tracks 3,5] [--regwords 16,32] [--fifo 2,4]\n\
+                   [--search grid|halving] [--eta N] [--min-budget N]\n\
+                   [--objective knee|crit|edp|regs]\n\
+                   [--threads N] [--power-cap MW] [--fast] [--tiny]\n\
                    [--no-cache]                                design-space exploration\n\
            arch                                                 architecture + timing model summary\n\
          levels: {}\n\
@@ -58,6 +74,36 @@ fn app_by_name(name: &str) -> cascade::apps::App {
 
 fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get().min(8)).unwrap_or(1)
+}
+
+/// Parse `--search grid|halving` plus the halving knobs (`--eta`,
+/// `--objective`, `--min-budget`).
+fn search_kind(args: &Args) -> Result<cascade::explore::SearchKind, String> {
+    use cascade::explore::{HalvingParams, Objective, SearchKind};
+    match args.opt_or("search", "grid") {
+        "grid" => Ok(SearchKind::Grid),
+        "halving" => {
+            let defaults = HalvingParams::default();
+            let parse_num = |name: &str, default: usize| -> Result<usize, String> {
+                match args.opt(name) {
+                    Some(s) => s.parse().map_err(|_| format!("bad --{name} value '{s}'")),
+                    None => Ok(default),
+                }
+            };
+            let objective = match args.opt("objective") {
+                Some(o) => Objective::parse(o)?,
+                None => defaults.objective,
+            };
+            let p = HalvingParams {
+                eta: parse_num("eta", defaults.eta)?,
+                min_budget: parse_num("min-budget", defaults.min_budget)?,
+                objective,
+            };
+            p.validate()?;
+            Ok(SearchKind::Halving(p))
+        }
+        other => Err(format!("unknown --search '{other}' (grid|halving)")),
+    }
 }
 
 fn main() {
@@ -136,10 +182,18 @@ fn main() {
                     std::process::exit(2);
                 }
             };
+            let search = match search_kind(&args) {
+                Ok(k) => k,
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+            };
             let threads = args.opt_usize("threads", default_threads());
             println!("building compile context (32x16 array, timing model)...");
             let ctx = CompileCtx::paper();
-            if let Err(e) = cascade::explore::run_cli(&spec, &ctx, threads, !args.flag("no-cache"))
+            if let Err(e) =
+                cascade::explore::run_cli(&spec, &ctx, threads, !args.flag("no-cache"), &search)
             {
                 eprintln!("explore failed: {e}");
                 std::process::exit(1);
@@ -148,7 +202,10 @@ fn main() {
         "arch" => {
             let ctx = CompileCtx::paper();
             let (pe, mem) = ctx.arch.core_tile_counts();
-            println!("array: {}x{} ({} PE, {} MEM, {} IO tiles)", ctx.arch.cols, ctx.arch.rows, pe, mem, ctx.arch.cols);
+            println!(
+                "array: {}x{} ({} PE, {} MEM, {} IO tiles)",
+                ctx.arch.cols, ctx.arch.rows, pe, mem, ctx.arch.cols
+            );
             println!(
                 "interconnect: {} tracks/side/layer, {} RRG nodes, {} edges",
                 ctx.arch.tracks,

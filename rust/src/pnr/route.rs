@@ -47,8 +47,10 @@ pub enum RouteError {
     /// A sink was unreachable from its source (should not happen on a
     /// connected fabric — indicates a port-mapping bug or zero capacity).
     Unreachable { net: usize, sink: usize },
-    /// Congestion did not resolve within `max_iters`.
-    Unroutable { overused_nodes: usize, iters: usize },
+    /// Congestion did not resolve within `max_iters`. Carries the track
+    /// budget so failures on the `explore --tracks` axis are
+    /// self-explanatory in sweep reports.
+    Unroutable { overused_nodes: usize, iters: usize, tracks: usize },
 }
 
 impl std::fmt::Display for RouteError {
@@ -57,8 +59,12 @@ impl std::fmt::Display for RouteError {
             RouteError::Unreachable { net, sink } => {
                 write!(f, "net {net} sink {sink} unreachable")
             }
-            RouteError::Unroutable { overused_nodes, iters } => {
-                write!(f, "unroutable: {overused_nodes} overused nodes after {iters} iterations")
+            RouteError::Unroutable { overused_nodes, iters, tracks } => {
+                write!(
+                    f,
+                    "unroutable: {overused_nodes} overused nodes after {iters} iterations \
+                     ({tracks} tracks/side)"
+                )
             }
         }
     }
@@ -272,7 +278,11 @@ pub fn route(
             return Ok(routes);
         }
         if iter == rp.max_iters - 1 {
-            return Err(RouteError::Unroutable { overused_nodes: overused, iters: iter + 1 });
+            return Err(RouteError::Unroutable {
+                overused_nodes: overused,
+                iters: iter + 1,
+                tracks: graph.params.tracks,
+            });
         }
         pres_fac *= rp.pres_fac_mult;
     }

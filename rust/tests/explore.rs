@@ -1,9 +1,12 @@
 //! End-to-end test of the design-space exploration engine through its
 //! public API, at test scale (64x64 frames): grid sweep, Pareto analysis,
-//! pipelining dominance on critical path, persistent cache reuse, and
-//! byte-identical report emission across cache-served re-runs.
+//! pipelining dominance on critical path, persistent cache reuse,
+//! byte-identical report emission across cache-served re-runs, and the
+//! successive-halving search (grid agreement, budget savings, resume).
 
-use cascade::explore::{report, runner, DiskCache, ExploreSpec, Scale};
+use cascade::explore::{
+    report, runner, search, DiskCache, EvalSession, ExploreSpec, HalvingParams, PartialSink, Scale,
+};
 use cascade::pipeline::CompileCtx;
 
 fn tiny_spec() -> ExploreSpec {
@@ -83,6 +86,133 @@ fn explore_end_to_end_pareto_cache_and_determinism() {
     assert_eq!(md1, md2, "cache-served re-run must emit identical markdown");
 
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Coordinates that identify a point independent of its budget axis.
+fn coords(r: &runner::PointResult) -> (String, String, Option<u64>, u64) {
+    (
+        r.point.app.clone(),
+        r.point.level.clone(),
+        r.point.alpha.map(f64::to_bits),
+        r.point.seed,
+    )
+}
+
+/// The headline acceptance criterion: on a space whose cheap fidelity
+/// already separates winners, `--search halving` evaluates strictly fewer
+/// full-budget points than the grid while reporting the same knee point.
+#[test]
+fn halving_agrees_with_grid_knee_with_fewer_full_budget_evals() {
+    let ctx = CompileCtx::paper();
+    let spec = tiny_spec();
+    let params = HalvingParams { eta: 2, ..Default::default() };
+
+    let grid = runner::run(&spec, &ctx, 2, None);
+    let grid_analyses = report::analyze(&spec, &grid.results);
+    let grid_knee = grid_analyses[0].knee.expect("grid knee");
+    let grid_knee_coords = coords(
+        grid.results.iter().find(|r| r.point.id == grid_knee).unwrap(),
+    );
+
+    let halved = search::run_halving(&spec, &ctx, 2, None, None, &params).unwrap();
+    assert!(
+        halved.full_budget_evals() < grid.results.len(),
+        "halving must compile fewer full-budget points: {} vs {}",
+        halved.full_budget_evals(),
+        grid.results.len()
+    );
+    // Rung budgets strictly increase up to the full budget.
+    let budgets: Vec<usize> = halved.rungs.iter().map(|r| r.budget).collect();
+    for w in budgets.windows(2) {
+        assert!(w[0] < w[1], "{budgets:?}");
+    }
+    assert_eq!(*budgets.last().unwrap(), search::full_budget(&spec));
+
+    let halved_analyses = report::analyze(&spec, &halved.results);
+    let halved_knee = halved_analyses[0].knee.expect("halving knee");
+    let halved_knee_coords = coords(
+        halved.results.iter().find(|r| r.point.id == halved_knee).unwrap(),
+    );
+    assert_eq!(
+        halved_knee_coords, grid_knee_coords,
+        "halving must report the grid's knee point"
+    );
+}
+
+/// Determinism: the adaptive search promotes the same candidates and
+/// reports the same metrics regardless of worker count.
+#[test]
+fn halving_deterministic_across_thread_counts() {
+    let ctx = CompileCtx::paper();
+    let spec = tiny_spec();
+    let params = HalvingParams { eta: 2, ..Default::default() };
+    let one = search::run_halving(&spec, &ctx, 1, None, None, &params).unwrap();
+    let four = search::run_halving(&spec, &ctx, 4, None, None, &params).unwrap();
+    assert_eq!(one.rungs, four.rungs);
+    assert_eq!(one.results.len(), four.results.len());
+    for (a, b) in one.results.iter().zip(&four.results) {
+        assert_eq!(a.point, b.point);
+        assert_eq!(a.metrics.as_ref().ok(), b.metrics.as_ref().ok());
+    }
+    assert_eq!(one.stats, four.stats);
+}
+
+/// Resume: a run killed after rung 0 leaves disk-cache records behind;
+/// the re-run is served from them (here the whole ladder collapses onto
+/// the rung-0 artifacts because neither level has a post-PnR pass).
+#[test]
+fn halving_resumes_from_partial_rung_work() {
+    let ctx = CompileCtx::paper();
+    let spec = tiny_spec();
+    let params = HalvingParams { eta: 2, ..Default::default() };
+    let dir = std::env::temp_dir().join(format!("cascade-halving-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // "First run": evaluate only rung 0, then die.
+    let candidates = spec.candidates();
+    let budgets = search::rung_budgets(
+        search::full_budget(&spec),
+        params.min_budget,
+        params.eta,
+        candidates.len(),
+    );
+    assert!(budgets.len() >= 2, "need a real ladder for this test: {budgets:?}");
+    let rung0: Vec<_> = candidates.iter().map(|c| c.at_budget(budgets[0])).collect();
+    {
+        let dc = DiskCache::at(&dir);
+        let session = EvalSession::new(&spec, &ctx, Some(&dc), None);
+        let results = session.eval_points(&rung0, 2, Some(0));
+        assert!(results.iter().all(|r| r.metrics.is_ok()));
+        assert_eq!(session.stats().disk_hits, 0);
+    }
+
+    // Re-run the full search against the same cache directory: every
+    // evaluation is a disk hit, nothing recompiles.
+    let dc = DiskCache::at(&dir);
+    let out = search::run_halving(&spec, &ctx, 2, Some(&dc), None, &params).unwrap();
+    assert_eq!(out.stats.misses, 0, "resume must not recompile rung-0 work");
+    assert_eq!(out.stats.disk_hits, out.total_evals());
+    assert!(out.results.iter().all(|r| r.from_disk));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The streamed partial log records one line per evaluation, rung-tagged.
+#[test]
+fn halving_streams_partial_results() {
+    let ctx = CompileCtx::paper();
+    let spec = tiny_spec();
+    let params = HalvingParams { eta: 2, ..Default::default() };
+    let path = std::env::temp_dir()
+        .join(format!("cascade-halving-partial-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let sink = PartialSink::create(&path);
+    let out = search::run_halving(&spec, &ctx, 2, None, Some(&sink), &params).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), out.total_evals());
+    assert!(text.contains("\"rung\":0"));
+    assert!(text.contains(&format!("\"rung\":{}", out.rungs.len() - 1)));
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]
