@@ -72,7 +72,8 @@ pub fn unsharp(w: u64, h: u64, unroll: u64) -> App {
         let bn = g.add_node(Op::Alu { op: AluOp::Shr, const_b: Some(4) }, format!("bn{u}"));
         g.connect(blur, bn, 0);
         // Align the original with the blur output (window-centre tap).
-        let center = g.add_node(Op::Delay { cycles: window / 2 + 1, pipelined: false }, format!("ctr{u}"));
+        let center = g
+            .add_node(Op::Delay { cycles: window / 2 + 1, pipelined: false }, format!("ctr{u}"));
         g.connect(i, center, 0);
         let pad = g.add_node(
             Op::Delay { cycles: window - (window / 2 + 1), pipelined: false },
@@ -263,7 +264,8 @@ pub fn resnet_conv(
         for t in 0..taps {
             // Per-(lane, tap) weight ROM; contents are a deterministic
             // pattern standing in for trained weights.
-            let wvals: Vec<i64> = (0..time_mult).map(|k| ((l * 7 + t * 3 + k) % 5) as i64 - 2).collect();
+            let wvals: Vec<i64> =
+                (0..time_mult).map(|k| ((l * 7 + t * 3 + k) % 5) as i64 - 2).collect();
             let rom = g.add_node(Op::Rom { values: wvals }, format!("w{l}_{t}"));
             let mul = g.add_node(Op::Alu { op: AluOp::Mul, const_b: None }, format!("m{l}_{t}"));
             g.connect(inputs[t as usize], mul, 0);

@@ -162,7 +162,10 @@ impl ConfigSpace {
             Feature::SbRegEn { layer: l, side: Side::from_index(r / t), track: (r % t) as u8 }
         } else if idx < 2 * sb_block + 2 * p {
             let i = idx - 2 * sb_block;
-            Feature::CbSel { layer: if i / p == 0 { Layer::B16 } else { Layer::B1 }, port: (i % p) as u8 }
+            Feature::CbSel {
+                layer: if i / p == 0 { Layer::B16 } else { Layer::B1 },
+                port: (i % p) as u8,
+            }
         } else if idx == 2 * sb_block + 2 * p {
             Feature::PeOp
         } else if idx < 2 * sb_block + 3 * p + 1 {
@@ -178,7 +181,9 @@ impl ConfigSpace {
         } else if idx == 2 * sb_block + 4 * p + 3 + MEM_PARAM_WORDS as usize {
             Feature::IoMode
         } else {
-            Feature::FifoEn { port: (idx - (2 * sb_block + 4 * p + 4 + MEM_PARAM_WORDS as usize)) as u8 }
+            Feature::FifoEn {
+                port: (idx - (2 * sb_block + 4 * p + 4 + MEM_PARAM_WORDS as usize)) as u8,
+            }
         }
     }
 
@@ -204,7 +209,14 @@ impl Bitstream {
         (params.tile_index(tile) as u64) * cs.regs_per_tile() as u64 + cs.feature_index(f) as u64
     }
 
-    pub fn set(&mut self, params: &ArchParams, cs: &ConfigSpace, tile: TileCoord, f: Feature, value: u32) {
+    pub fn set(
+        &mut self,
+        params: &ArchParams,
+        cs: &ConfigSpace,
+        tile: TileCoord,
+        f: Feature,
+        value: u32,
+    ) {
         let a = Self::addr(params, cs, tile, f);
         if value == 0 {
             self.words.remove(&a);

@@ -216,12 +216,17 @@ impl InterconnectGraph {
         // incoming side).
         for side_in in Side::ALL {
             for track in 0..t {
-                let src = self.node_id(tile, layer, NodeKind::SbIn { side: side_in, track: track as u8 });
+                let src =
+                    self.node_id(tile, layer, NodeKind::SbIn { side: side_in, track: track as u8 });
                 for side_out in Side::ALL {
                     if side_out == side_in {
                         continue;
                     }
-                    let dst = self.node_id(tile, layer, NodeKind::SbOut { side: side_out, track: track as u8 });
+                    let dst = self.node_id(
+                        tile,
+                        layer,
+                        NodeKind::SbOut { side: side_out, track: track as u8 },
+                    );
                     adj[src as usize].push(Edge { dst, kind: EdgeKind::SbTurn, delay_ps: 0 });
                 }
                 // SbIn -> CbIn taps.
@@ -241,7 +246,8 @@ impl InterconnectGraph {
                     if track % self.ports_out != port {
                         continue;
                     }
-                    let dst = self.node_id(tile, layer, NodeKind::SbOut { side, track: track as u8 });
+                    let dst =
+                        self.node_id(tile, layer, NodeKind::SbOut { side, track: track as u8 });
                     adj[src as usize].push(Edge { dst, kind: EdgeKind::SbDrive, delay_ps: 0 });
                 }
             }
@@ -257,7 +263,11 @@ impl InterconnectGraph {
             let ntile = TileCoord::new(nx as usize, ny as usize);
             for track in 0..t {
                 let src = self.node_id(tile, layer, NodeKind::SbOut { side, track: track as u8 });
-                let dst = self.node_id(ntile, layer, NodeKind::SbIn { side: side.opposite(), track: track as u8 });
+                let dst = self.node_id(
+                    ntile,
+                    layer,
+                    NodeKind::SbIn { side: side.opposite(), track: track as u8 },
+                );
                 adj[src as usize].push(Edge { dst, kind: EdgeKind::Wire, delay_ps: 0 });
             }
         }
@@ -273,7 +283,8 @@ impl InterconnectGraph {
             NodeKind::TileOut { port } => 8 * t + self.ports_in + port as usize,
         };
         debug_assert!(local < self.per_tile_layer);
-        (((self.params.tile_index(tile) * 2) + layer.index()) * self.per_tile_layer + local) as NodeId
+        (((self.params.tile_index(tile) * 2) + layer.index()) * self.per_tile_layer + local)
+            as NodeId
     }
 
     /// Decode a node id.

@@ -191,7 +191,8 @@ impl DelayLib {
                 (EdgeKind::CbTap, lib.cb_tap[ki]),
             ] {
                 for horizontal in [false, true] {
-                    lib.records.push(PathRecord { class, tile_kind: kind, horizontal, delay_ps: d });
+                    lib.records
+                        .push(PathRecord { class, tile_kind: kind, horizontal, delay_ps: d });
                 }
             }
             lib.records.push(PathRecord {
@@ -388,8 +389,16 @@ mod tests {
         g.annotate_delays(&l);
         // Crossing into a MEM column is slower than PE->PE.
         use crate::arch::canal::{NodeKind, Side, Layer};
-        let pe_pe = g.node_id(TileCoord::new(0, 1), Layer::B16, NodeKind::SbOut { side: Side::E, track: 0 });
-        let pe_mem = g.node_id(TileCoord::new(2, 1), Layer::B16, NodeKind::SbOut { side: Side::E, track: 0 });
+        let pe_pe = g.node_id(
+            TileCoord::new(0, 1),
+            Layer::B16,
+            NodeKind::SbOut { side: Side::E, track: 0 },
+        );
+        let pe_mem = g.node_id(
+            TileCoord::new(2, 1),
+            Layer::B16,
+            NodeKind::SbOut { side: Side::E, track: 0 },
+        );
         let d_pe_pe = g.fanout(pe_pe)[0].delay_ps;
         let d_pe_mem = g.fanout(pe_mem)[0].delay_ps; // tile 3 is MEM
         assert!(d_pe_mem > d_pe_pe);

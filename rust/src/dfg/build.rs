@@ -25,7 +25,8 @@ pub fn tap_line(g: &mut Dfg, src: NodeId, delays: &[u32], name: &str) -> TapLine
         let tap = if step == 0 {
             prev
         } else {
-            let t = g.add_node(Op::Delay { cycles: step, pipelined: false }, format!("{name}_d{i}"));
+            let t =
+                g.add_node(Op::Delay { cycles: step, pipelined: false }, format!("{name}_d{i}"));
             g.connect(prev, t, 0);
             t
         };

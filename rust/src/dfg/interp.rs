@@ -208,7 +208,9 @@ impl<'a> Interp<'a> {
                         .any(|e| e.dst == n && e.dst_port == 1 && e.layer == Layer::B16);
                     let b = if has_b { self.input_val(n, 1, Layer::B16) } else { 1 };
                     let cycle = self.cycle;
-                    if let NodeState::Accum { acc, t: nt, start, out } = &mut self.state[n as usize] {
+                    if let NodeState::Accum { acc, t: nt, start, out } =
+                        &mut self.state[n as usize]
+                    {
                         if cycle >= *start {
                             *acc += a * b;
                             *nt += 1;

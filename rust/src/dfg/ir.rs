@@ -567,7 +567,9 @@ mod tests {
         let g = small_dfg();
         let order = g.topo_order();
         let pos: Vec<usize> =
-            (0..g.nodes.len() as NodeId).map(|n| order.iter().position(|&x| x == n).unwrap()).collect();
+            (0..g.nodes.len() as NodeId)
+                .map(|n| order.iter().position(|&x| x == n).unwrap())
+                .collect();
         for e in &g.edges {
             assert!(pos[e.src as usize] < pos[e.dst as usize]);
         }

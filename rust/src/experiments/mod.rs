@@ -27,7 +27,13 @@ use crate::pipeline::CompileCtx;
 /// lets `summary` reuse persistent `cascade explore` results
 /// (`results/explore_cache/`); pass `false` (CLI `--no-cache`) to force
 /// recompilation, e.g. after changing a compiler pass.
-pub fn run(id: &str, ctx: &CompileCtx, fast: bool, seed: u64, use_cache: bool) -> Result<(), String> {
+pub fn run(
+    id: &str,
+    ctx: &CompileCtx,
+    fast: bool,
+    seed: u64,
+    use_cache: bool,
+) -> Result<(), String> {
     match id {
         "fig6" => fig6::run(ctx, fast, seed),
         "fig7" => dense_exp::fig7(ctx, fast, seed),

@@ -348,6 +348,7 @@ impl ArtifactCache {
 pub struct DiskCache {
     dir: PathBuf,
     disk_hits: AtomicUsize,
+    stores: AtomicUsize,
 }
 
 impl DiskCache {
@@ -363,11 +364,16 @@ impl DiskCache {
     pub fn at(dir: impl AsRef<Path>) -> DiskCache {
         let dir = dir.as_ref().to_path_buf();
         let _ = std::fs::create_dir_all(&dir);
-        DiskCache { dir, disk_hits: AtomicUsize::new(0) }
+        DiskCache { dir, disk_hits: AtomicUsize::new(0), stores: AtomicUsize::new(0) }
     }
 
     pub fn open_default() -> DiskCache {
         DiskCache::at(DiskCache::default_dir())
+    }
+
+    /// The directory records live in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
     }
 
     fn path(&self, key: u64) -> PathBuf {
@@ -382,11 +388,19 @@ impl DiskCache {
     }
 
     pub fn store(&self, key: u64, m: &PointMetrics) {
-        let _ = std::fs::write(self.path(key), m.to_record());
+        if std::fs::write(self.path(key), m.to_record()).is_ok() {
+            self.stores.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     pub fn disk_hits(&self) -> usize {
         self.disk_hits.load(Ordering::Relaxed)
+    }
+
+    /// Records successfully written by this handle — what a shard manifest
+    /// reports as its cache contribution.
+    pub fn stores(&self) -> usize {
+        self.stores.load(Ordering::Relaxed)
     }
 }
 

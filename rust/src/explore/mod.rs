@@ -27,6 +27,12 @@
 //!   selection over (critical-path delay, EDP, pipelining registers).
 //! * [`report`] — ranked markdown summary + deterministic JSON emission;
 //!   byte-identical across cache-served re-runs.
+//! * [`shard`] — multi-process / multi-machine distribution: `--shard K/N`
+//!   evaluates one deterministic slice of the space (partitioned by
+//!   effective cache key) and writes a self-describing manifest
+//!   (`results/shard_K_of_N.json`); `cascade explore-merge <dir>...`
+//!   validates coverage, unions the caches and partial logs, and emits a
+//!   report byte-identical to the single-process run.
 //!
 //! A Capstone-style `--power-cap` (mW) marks points whose estimated total
 //! power exceeds the budget as infeasible before the frontier is computed;
@@ -38,17 +44,21 @@ pub mod pareto;
 pub mod report;
 pub mod runner;
 pub mod search;
+pub mod shard;
 pub mod space;
 
 pub use cache::{ArtifactCache, DiskCache, PointMetrics};
 pub use runner::{run, EvalSession, PartialSink, PointResult, RunOutcome};
-pub use search::{run_halving, HalvingParams, Objective, SearchOutcome};
+pub use search::{run_halving, HalvingParams, Objective, RungReport, SearchOutcome};
+pub use shard::{merge, merge_cli, Manifest, MergeOutcome, ShardOutcome, ShardSpec};
 pub use space::{ExplorePoint, ExploreSpec, Scale};
+
+use std::path::Path;
 
 use crate::pipeline::CompileCtx;
 
 /// Search strategy for one `cascade explore` invocation.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SearchKind {
     /// Exhaustive evaluation of the full grid.
     Grid,
@@ -59,18 +69,32 @@ pub enum SearchKind {
 /// CLI entry point: evaluate the space (exhaustively or adaptively),
 /// analyze, emit `results/explore.*`, stream partials to
 /// `results/explore_partial.jsonl`, and print the cache traffic (stdout
-/// only — reports stay run-invariant).
+/// only — reports stay run-invariant). With `shard = Some(K/N)`, evaluate
+/// only this shard's slice and write `results/shard_K_of_N.json` instead
+/// of the report; `cascade explore-merge` reassembles the full report.
 pub fn run_cli(
     spec: &ExploreSpec,
     ctx: &CompileCtx,
     threads: usize,
     use_disk_cache: bool,
     search: &SearchKind,
+    shard_of: Option<&ShardSpec>,
 ) -> Result<(), String> {
     spec.validate()?;
     let threads = threads.max(1);
+    if let Some(sh) = shard_of {
+        if !use_disk_cache {
+            return Err(
+                "explore: --shard requires the disk cache (drop --no-cache); merged metrics \
+                 are reconstructed from explore_cache/"
+                    .into(),
+            );
+        }
+        shard::run_sharded(spec, ctx, threads, search, sh, Path::new("results"))?;
+        return Ok(());
+    }
     let disk = if use_disk_cache { Some(DiskCache::open_default()) } else { None };
-    let sink = PartialSink::create(PartialSink::default_path());
+    let sink = PartialSink::open(PartialSink::default_path());
 
     let (results, stats, trajectory) = match search {
         SearchKind::Grid => {
@@ -99,7 +123,7 @@ pub fn run_cli(
                 threads
             );
             let outcome =
-                search::run_halving(spec, ctx, threads, disk.as_ref(), Some(&sink), params)?;
+                search::run_halving(spec, ctx, threads, disk.as_ref(), Some(&sink), params, None)?;
             println!(
                 "halving: {} evaluation(s) total, {} at full budget",
                 outcome.total_evals(),
@@ -109,32 +133,19 @@ pub fn run_cli(
         }
     };
 
-    let analyses = report::analyze(spec, &results);
-    let mut json = report::to_json(spec, &results, &analyses);
-    let md = match &trajectory {
-        None => report::to_markdown(spec, &results, &analyses),
-        Some((params, rungs)) => {
-            json.set("search", report::search_to_json(params, rungs));
-            // Head the survivor table with the candidate-space shape (the
-            // budget axis is the rung ladder) and an honest label — only
-            // final-rung survivors are listed, not a full grid.
-            let survivors = spec.candidate_spec();
-            format!(
-                "{}\n{}",
-                report::search_to_markdown(params, rungs),
-                report::to_markdown_labeled(
-                    "Survivors of candidate space",
-                    &survivors,
-                    &results,
-                    &analyses
-                )
-            )
-        }
-    };
+    let trajectory = trajectory.as_ref().map(|(p, r)| (p, r.as_slice()));
+    let (md, json, analyses) = report::render_report(spec, &results, trajectory);
     crate::experiments::common::emit("explore", "Design-space exploration", &md, &json);
 
     if sink.is_active() && sink.dropped() == 0 {
-        println!("partial results: {}", sink.path().display());
+        // The journal is append-only across runs: report this run's span
+        // so earlier runs' lines are not misattributed to this sweep.
+        println!(
+            "partial results: {} ({} line(s) this run, appended at line {})",
+            sink.path().display(),
+            sink.written(),
+            sink.start_line()
+        );
     } else {
         println!(
             "partial results: INCOMPLETE — {} record(s) dropped ({})",

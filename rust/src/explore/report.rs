@@ -112,21 +112,7 @@ pub fn point_json(r: &PointResult, rung: Option<usize>) -> Json {
 /// Deterministic JSON document for the run.
 pub fn to_json(spec: &ExploreSpec, results: &[PointResult], analyses: &[AppAnalysis]) -> Json {
     let mut j = Json::obj();
-
-    let mut jspec = Json::obj();
-    jspec
-        .set("apps", spec.apps.iter().map(|s| s.as_str().into()).collect::<Vec<Json>>())
-        .set("levels", spec.levels.iter().map(|s| s.as_str().into()).collect::<Vec<Json>>())
-        .set("alphas", spec.alphas.clone())
-        .set("seeds", spec.seeds.clone())
-        .set("iters", spec.iters.iter().map(|&i| i.into()).collect::<Vec<Json>>())
-        .set("tracks", spec.tracks.iter().map(|&t| t.into()).collect::<Vec<Json>>())
-        .set("regwords", spec.regwords.iter().map(|&w| w.into()).collect::<Vec<Json>>())
-        .set("fifos", spec.fifos.iter().map(|&f| f.into()).collect::<Vec<Json>>())
-        .set("power_cap_mw", spec.power_cap_mw.map_or(Json::Null, Json::from))
-        .set("fast", spec.fast)
-        .set("scale", spec.scale.tag());
-    j.set("spec", jspec);
+    j.set("spec", spec.to_json());
 
     let mut jpoints = Json::Arr(vec![]);
     for r in results {
@@ -146,6 +132,38 @@ pub fn to_json(spec: &ExploreSpec, results: &[PointResult], analyses: &[AppAnaly
     }
     j.set("pareto", jfronts);
     j
+}
+
+/// Render the complete run report — markdown and JSON, plus the per-app
+/// analyses — for either an exhaustive grid (`trajectory = None`) or a
+/// halving search. This is the single emission path shared by `cascade
+/// explore` and `cascade explore-merge`: a merged multi-shard run reports
+/// through exactly the code an unsharded run does, which is what makes
+/// "merged output is byte-identical to the single-process run" a testable
+/// property rather than an aspiration.
+pub fn render_report(
+    spec: &ExploreSpec,
+    results: &[PointResult],
+    trajectory: Option<(&HalvingParams, &[RungReport])>,
+) -> (String, Json, Vec<AppAnalysis>) {
+    let analyses = analyze(spec, results);
+    let mut json = to_json(spec, results, &analyses);
+    let md = match trajectory {
+        None => to_markdown(spec, results, &analyses),
+        Some((params, rungs)) => {
+            json.set("search", search_to_json(params, rungs));
+            // Head the survivor table with the candidate-space shape (the
+            // budget axis is the rung ladder) and an honest label — only
+            // final-rung survivors are listed, not a full grid.
+            let survivors = spec.candidate_spec();
+            format!(
+                "{}\n{}",
+                search_to_markdown(params, rungs),
+                to_markdown_labeled("Survivors of candidate space", &survivors, results, &analyses)
+            )
+        }
+    };
+    (md, json, analyses)
 }
 
 /// Deterministic JSON section describing an adaptive search run: the

@@ -27,11 +27,43 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::arch::params::ArchParams;
 use crate::experiments::common::compile_dense;
-use crate::pipeline::{compile, CompileCtx, Compiled};
+use crate::pipeline::{compile, CompileCtx, Compiled, PipelineConfig};
 
 use super::cache::{arch_signature, point_key, ArtifactCache, DiskCache, PointMetrics};
 use super::space::{ExplorePoint, ExploreSpec, Scale};
+
+/// The effective (pipeline config, architecture, cache key) triple for one
+/// point — exactly what [`EvalSession`] compiles and hashes. Public so the
+/// sharding layer can partition points and `explore-merge` can re-derive
+/// cache keys from a manifest's spec without building a compile context
+/// (the [`ArchParams`] base is enough).
+pub fn effective_point(
+    spec: &ExploreSpec,
+    base: &ArchParams,
+    point: &ExplorePoint,
+) -> (PipelineConfig, ArchParams, u64) {
+    let sparse = crate::apps::is_sparse_name(&point.app);
+    let mut cfg = point.config(spec.fast);
+    if spec.scale == Scale::Tiny || sparse {
+        // These paths compile directly and never consume §V-E duplication
+        // (tiny frames have no unrolling headroom; the sparse DFGs are not
+        // duplicable); clear the flag so the cache key and config signature
+        // match what actually compiles — levels differing only in
+        // `unroll_dup` then share one artifact.
+        cfg.unroll_dup = false;
+    }
+    let arch = point.arch(base);
+    let key = point_key(&point.app, &cfg, point.seed, spec.scale.tag(), &arch);
+    (cfg, arch, key)
+}
+
+/// Just the cache key of [`effective_point`] — the hash the shard
+/// partition is computed over.
+pub fn effective_key(spec: &ExploreSpec, base: &ArchParams, point: &ExplorePoint) -> u64 {
+    effective_point(spec, base, point).2
+}
 
 /// Outcome of one grid point.
 #[derive(Debug, Clone)]
@@ -116,13 +148,28 @@ impl CtxCache {
     }
 }
 
-/// Append-only JSONL stream of completed evaluations. Lines are written in
-/// completion order (scheduling-dependent); each line is self-describing,
-/// so consumers sort or filter on the embedded coordinates.
+/// Append-only JSONL journal of completed evaluations. Lines are written
+/// in completion order (scheduling-dependent); each line is
+/// self-describing (grid coordinates, optional rung and shard tags), so
+/// consumers sort or filter on the embedded fields.
+///
+/// The file is opened in append mode and an existing log is never
+/// truncated: a resumed run, a later shard run in the same results
+/// directory, or a merge concatenating shard logs all *extend* the
+/// journal. Each run's span is recoverable from
+/// ([`Self::start_line`], [`Self::written`]) — shard manifests record it.
+/// Records are appended as one `write_all` per line (O_APPEND), but the
+/// span bookkeeping is snapshotted at open: *concurrent* shard processes
+/// should each write into their own directory (as the CI matrix does) and
+/// let `explore-merge` concatenate; same-directory sharing is for
+/// sequential runs.
 pub struct PartialSink {
     path: PathBuf,
     file: Mutex<Option<std::fs::File>>,
     dropped: AtomicUsize,
+    written: AtomicUsize,
+    start_line: usize,
+    shard: Option<String>,
 }
 
 impl PartialSink {
@@ -131,19 +178,57 @@ impl PartialSink {
         PathBuf::from("results/explore_partial.jsonl")
     }
 
-    /// Create (truncate) the stream at `path`. Falls back to a no-op sink
-    /// if the file cannot be created (e.g. read-only filesystem).
-    pub fn create(path: impl AsRef<Path>) -> PartialSink {
+    /// Open the journal at `path` for appending, creating the file if it
+    /// does not exist. Falls back to a no-op sink if the file cannot be
+    /// opened (e.g. read-only filesystem).
+    pub fn open(path: impl AsRef<Path>) -> PartialSink {
+        PartialSink::open_tagged(path, None)
+    }
+
+    /// [`Self::open`] with a shard tag (`"K/N"`) stamped on every line, so
+    /// concatenated multi-shard logs stay attributable.
+    pub fn open_tagged(path: impl AsRef<Path>, shard: Option<String>) -> PartialSink {
         let path = path.as_ref().to_path_buf();
         if let Some(dir) = path.parent() {
             let _ = std::fs::create_dir_all(dir);
         }
-        let file = std::fs::File::create(&path).ok();
-        PartialSink { path, file: Mutex::new(file), dropped: AtomicUsize::new(0) }
+        let (mut start_line, terminated) = count_lines(&path);
+        let mut file = std::fs::OpenOptions::new().append(true).create(true).open(&path).ok();
+        if !terminated {
+            // The previous writer died mid-line (killed between write and
+            // flush). Terminate the partial line so the first new record
+            // does not get glued onto corrupt JSON, and account it as one
+            // (truncated) prior line.
+            start_line += 1;
+            if let Some(f) = &mut file {
+                if writeln!(f).is_err() {
+                    file = None;
+                }
+            }
+        }
+        PartialSink {
+            path,
+            file: Mutex::new(file),
+            dropped: AtomicUsize::new(0),
+            written: AtomicUsize::new(0),
+            start_line,
+            shard,
+        }
     }
 
     pub fn path(&self) -> &Path {
         &self.path
+    }
+
+    /// Number of lines the journal already held when this sink opened it —
+    /// the start of this run's span.
+    pub fn start_line(&self) -> usize {
+        self.start_line
+    }
+
+    /// Lines successfully written by this sink (this run's span length).
+    pub fn written(&self) -> usize {
+        self.written.load(Ordering::Relaxed)
     }
 
     /// Whether the stream actually opened (false on e.g. a read-only
@@ -161,13 +246,23 @@ impl PartialSink {
 
     /// Record one completed evaluation (rung is `None` in grid mode).
     pub fn record(&self, rung: Option<usize>, r: &PointResult) {
-        let line = super::report::point_json(r, rung).to_string_compact();
+        let mut j = super::report::point_json(r, rung);
+        if let Some(tag) = &self.shard {
+            j.set("shard", tag.as_str());
+        }
+        // One pre-assembled write_all per record (line + newline in a
+        // single buffer): with O_APPEND this keeps lines whole even if
+        // another process appends to the same file.
+        let mut line = j.to_string_compact();
+        line.push('\n');
         let mut guard = self.file.lock().unwrap();
         let written = match guard.as_mut() {
-            Some(f) => writeln!(f, "{line}").and_then(|_| f.flush()).is_ok(),
+            Some(f) => f.write_all(line.as_bytes()).and_then(|_| f.flush()).is_ok(),
             None => false,
         };
-        if !written {
+        if written {
+            self.written.fetch_add(1, Ordering::Relaxed);
+        } else {
             // The stream never opened or just broke (disk full, fd
             // error): stop writing so the log is not silently truncated
             // mid-file, and account every lost record.
@@ -175,6 +270,26 @@ impl PartialSink {
             self.dropped.fetch_add(1, Ordering::Relaxed);
         }
     }
+}
+
+/// Newline count of an existing file plus whether it ends in a newline
+/// (`(0, true)` if absent/empty/unreadable) — how the sink locates the
+/// start of its span, and detects a torn final line, without loading the
+/// log into memory.
+fn count_lines(path: &Path) -> (usize, bool) {
+    use std::io::Read as _;
+    let Ok(mut f) = std::fs::File::open(path) else { return (0, true) };
+    let mut buf = [0u8; 64 * 1024];
+    let mut n = 0usize;
+    let mut last = b'\n';
+    while let Ok(read) = f.read(&mut buf) {
+        if read == 0 {
+            break;
+        }
+        n += buf[..read].iter().filter(|&&b| b == b'\n').count();
+        last = buf[read - 1];
+    }
+    (n, last == b'\n')
 }
 
 /// A reusable evaluation session: shared caches + streaming sink. The
@@ -261,25 +376,13 @@ impl<'a> EvalSession<'a> {
     fn evaluate(&self, point: &ExplorePoint) -> PointResult {
         let spec = self.spec;
         let sparse = crate::apps::is_sparse_name(&point.app);
-        let mut cfg = point.config(spec.fast);
-        if spec.scale == Scale::Tiny || sparse {
-            // These paths compile directly and never consume §V-E
-            // duplication (tiny frames have no unrolling headroom; the
-            // sparse DFGs are not duplicable); clear the flag so the cache
-            // key and config signature match what actually compiles —
-            // levels differing only in `unroll_dup` then share one
-            // artifact.
-            cfg.unroll_dup = false;
-        }
-
-        // Resolve the effective architecture (cheap parameter struct);
-        // the key only needs this, so cache hits below never pay for a
-        // compile context. A point needs its own context only when the
-        // signature actually deviates from the base (overrides that
+        // Resolve the effective config, architecture and content-hash key
+        // (cheap parameter work only, so cache hits below never pay for a
+        // compile context). A point needs its own context only when the
+        // arch signature actually deviates from the base (overrides that
         // merely restate base values reuse the base context).
-        let arch = point.arch(&self.base.arch);
+        let (cfg, arch, key) = effective_point(spec, &self.base.arch, point);
         let needs_own_ctx = point.has_arch_overrides() && arch_signature(&arch) != self.base_sig;
-        let key = point_key(&point.app, &cfg, point.seed, spec.scale.tag(), &arch);
 
         if let Some(d) = self.disk {
             if let Some(m) = d.load(key) {
@@ -455,7 +558,7 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         let ctx = CompileCtx::paper();
         let spec = tiny_spec();
-        let sink = PartialSink::create(&path);
+        let sink = PartialSink::open(&path);
         let session = EvalSession::new(&spec, &ctx, None, Some(&sink));
         let results = session.eval_points(&spec.points(), 2, Some(0));
         let text = std::fs::read_to_string(&path).unwrap();
@@ -468,6 +571,79 @@ mod tests {
             assert!(line.contains("\"rung\":0"));
             assert!(line.contains("\"crit_ns\""));
         }
+        assert_eq!(sink.start_line(), 0);
+        assert_eq!(sink.written(), results.len());
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// The append-mode bugfix: reopening an existing journal must extend
+    /// it, never truncate it, and a shard tag stamps every line.
+    #[test]
+    fn partial_sink_appends_and_tags_shard() {
+        let path = std::env::temp_dir()
+            .join(format!("cascade-partial-append-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        std::fs::write(&path, "{\"prior\":true}\n{\"prior\":true}\n").unwrap();
+
+        let ctx = CompileCtx::paper();
+        let spec = tiny_spec().with_levels(["none"]);
+        let sink = PartialSink::open_tagged(&path, Some("2/3".into()));
+        assert_eq!(sink.start_line(), 2, "must account the existing span");
+        let session = EvalSession::new(&spec, &ctx, None, Some(&sink));
+        let results = session.eval_points(&spec.points(), 1, None);
+        assert_eq!(sink.written(), results.len());
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2 + results.len(), "prior lines must survive a reopen");
+        assert!(lines[0].contains("prior"), "existing content must not be truncated");
+        for line in &lines[2..] {
+            assert!(line.contains("\"shard\":\"2/3\""), "shard tag missing: {line}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// A journal whose writer died mid-line is repaired on reopen: the
+    /// torn line is terminated (and counted), so new records stay valid
+    /// JSONL instead of being glued onto corrupt JSON.
+    #[test]
+    fn partial_sink_repairs_torn_final_line() {
+        let path = std::env::temp_dir()
+            .join(format!("cascade-partial-torn-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        std::fs::write(&path, "{\"complete\":true}\n{\"torn\":tr").unwrap();
+        let sink = PartialSink::open(&path);
+        assert_eq!(sink.start_line(), 2, "the torn line must be counted");
+        let ctx = CompileCtx::paper();
+        let spec = tiny_spec().with_levels(["none"]);
+        let session = EvalSession::new(&spec, &ctx, None, Some(&sink));
+        let results = session.eval_points(&spec.points(), 1, None);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2 + results.len());
+        assert_eq!(lines[1], "{\"torn\":tr", "torn line terminated, not extended");
+        assert!(lines[2].starts_with('{') && lines[2].ends_with('}'), "bad line: {}", lines[2]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn effective_key_matches_session_cache_key() {
+        // One compile via the session, then a direct disk probe with the
+        // externally derived key: the record must be there. This pins the
+        // contract the sharding layer depends on (partition and merge both
+        // re-derive keys through `effective_key`).
+        let dir = std::env::temp_dir().join(format!("cascade-effkey-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = CompileCtx::paper();
+        let spec = tiny_spec().with_levels(["none"]);
+        let dc = DiskCache::at(&dir);
+        let out = run(&spec, &ctx, 1, Some(&dc));
+        assert!(out.results.iter().all(|r| r.metrics.is_ok()));
+        let dc2 = DiskCache::at(&dir);
+        for p in spec.points() {
+            let key = effective_key(&spec, &ctx.arch, &p);
+            assert!(dc2.load(key).is_some(), "no cache record under derived key for {}", p.label());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -34,7 +34,8 @@ use crate::pipeline::CompileCtx;
 use super::cache::DiskCache;
 use super::pareto::knee_distances;
 use super::report::objectives;
-use super::runner::{CacheStats, EvalSession, PartialSink, PointResult};
+use super::runner::{effective_key, CacheStats, EvalSession, PartialSink, PointResult};
+use super::shard::ShardSpec;
 use super::space::{ExplorePoint, ExploreSpec};
 
 /// Promotion objective: how a rung cohort is ranked before the 1/eta cut.
@@ -74,7 +75,7 @@ impl Objective {
 }
 
 /// Successive-halving knobs.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct HalvingParams {
     /// Promotion factor: keep `ceil(n / eta)` of each cohort per rung and
     /// multiply the budget by `eta` between rungs. Must be >= 2.
@@ -118,9 +119,16 @@ pub struct RungReport {
 
 /// A completed adaptive search: final-rung results (candidate enumeration
 /// order), the rung trajectory, and cumulative cache traffic.
+///
+/// Under a shard (`run_halving` with `shard = Some(..)`), `results` holds
+/// only the shard's owned slice of the top rung while `survivors` still
+/// lists the *global* final survivor set — the agreement every shard's
+/// manifest records and `explore-merge` validates.
 #[derive(Debug)]
 pub struct SearchOutcome {
     pub results: Vec<PointResult>,
+    /// Global top-rung survivor points (full-budget-bound), shard-independent.
+    pub survivors: Vec<ExplorePoint>,
     pub rungs: Vec<RungReport>,
     pub stats: CacheStats,
 }
@@ -183,6 +191,16 @@ pub fn rung_budgets(full: usize, min_budget: usize, eta: usize, max_cohort: usiz
 }
 
 /// Run successive halving over `spec`'s candidate set.
+///
+/// With `shard = Some(..)`, the search runs in *sharded* mode: every rung
+/// below the top is evaluated over the full candidate set on every shard
+/// (the cheap rungs are exactly the ones successive halving made cheap),
+/// so survivor selection is a deterministic replica of the single-process
+/// run on every shard — no cross-process coordination, which is what lets
+/// independent CI jobs shard a halving search. Only the expensive top rung
+/// is partitioned: this shard evaluates just the survivors whose effective
+/// cache key it owns. `explore-merge` later validates that all shards
+/// recorded identical rung trajectories and survivor sets.
 pub fn run_halving(
     spec: &ExploreSpec,
     ctx: &CompileCtx,
@@ -190,6 +208,7 @@ pub fn run_halving(
     disk: Option<&DiskCache>,
     sink: Option<&PartialSink>,
     params: &HalvingParams,
+    shard: Option<&ShardSpec>,
 ) -> Result<SearchOutcome, String> {
     spec.validate()?;
     params.validate()?;
@@ -205,30 +224,50 @@ pub fn run_halving(
 
     let mut rungs = Vec::new();
     let mut final_results = Vec::new();
+    let mut survivors = Vec::new();
     for (k, &budget) in budgets.iter().enumerate() {
         let points: Vec<ExplorePoint> = alive.iter().map(|c| c.at_budget(budget)).collect();
-        let results = session.eval_points(&points, threads, Some(k));
         let top_rung = k + 1 == budgets.len();
+        // Top rung under a shard: evaluate only the owned slice. Lower
+        // rungs always run the full cohort so selection stays bit-identical
+        // to the single-process search.
+        let eval: Vec<ExplorePoint> = match shard {
+            Some(sh) if top_rung => points
+                .iter()
+                .filter(|p| sh.owns(effective_key(spec, &ctx.arch, p)))
+                .cloned()
+                .collect(),
+            _ => points.clone(),
+        };
+        let results = session.eval_points(&eval, threads, Some(k));
         let kept = if top_rung {
-            results.len()
+            points.len()
         } else {
             let keep: HashSet<usize> =
                 select_survivors(spec, &results, params).into_iter().collect();
             alive.retain(|c| keep.contains(&c.id));
             keep.len()
         };
+        let owned_note = match shard {
+            Some(sh) if top_rung => format!(" ({} owned by shard {})", results.len(), sh.tag()),
+            _ => String::new(),
+        };
         println!(
-            "rung {k}: budget {budget}, {} candidate(s) -> {} {}",
-            results.len(),
+            "rung {k}: budget {budget}, {} candidate(s) -> {} {}{owned_note}",
+            points.len(),
             kept,
             if top_rung { "to report" } else { "promoted" }
         );
-        rungs.push(RungReport { rung: k, budget, evaluated: results.len(), kept });
+        // The trajectory records the *global* schedule (what a
+        // single-process run would evaluate), so every shard's manifest
+        // carries the same rungs and the merged report is run-invariant.
+        rungs.push(RungReport { rung: k, budget, evaluated: points.len(), kept });
         if top_rung {
             final_results = results;
+            survivors = points;
         }
     }
-    Ok(SearchOutcome { results: final_results, rungs, stats: session.stats() })
+    Ok(SearchOutcome { results: final_results, survivors, rungs, stats: session.stats() })
 }
 
 /// Candidate ids to promote: per application, rank the cohort — feasible

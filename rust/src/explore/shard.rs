@@ -1,0 +1,1191 @@
+//! Sharded exploration: distribute one `cascade explore` space across
+//! processes or machines, then reassemble the exact single-process report.
+//!
+//! The coordination substrate is what the explore engine already has — the
+//! content-hash disk cache and the append-only partial log — plus one new
+//! artifact, the **shard manifest** (`results/shard_K_of_N.json`):
+//!
+//! * `cascade explore --shard K/N` partitions the final point set by
+//!   effective cache key ([`super::runner::effective_key`] modulo `N`).
+//!   The key is independent of `N`, so runs sharded with different counts
+//!   still deduplicate through the cache. The shard evaluates only its
+//!   slice through the normal [`EvalSession`], stores metrics in its own
+//!   `explore_cache/`, streams shard-tagged partial lines, and writes a
+//!   manifest: spec image + fingerprint, owned point ids/keys (with
+//!   compile errors inline), cache records written, and this run's span of
+//!   the partial log.
+//! * For `--search halving`, every shard deterministically replays the
+//!   cheap lower rungs over the *full* candidate set — successive halving
+//!   made those rungs cheap on purpose — so survivor selection is a
+//!   bit-identical replica of the single-process search on every shard
+//!   with no cross-process traffic. Only the expensive top rung is
+//!   partitioned. Manifests record the global trajectory and survivor set;
+//!   the merge refuses to combine shards that disagree.
+//! * `cascade explore-merge <dir>...` loads every manifest, validates the
+//!   cohort (single fingerprint and shard count, every shard present, no
+//!   conflicting or overlapping claims — duplicate re-submissions of the
+//!   same shard are deduplicated, not double-counted), unions the
+//!   `explore_cache/` directories, concatenates the partial logs, rebuilds
+//!   the full result vector from the merged cache, and emits
+//!   `results/explore.{md,json}` through the same
+//!   [`super::report::render_report`] path as an unsharded run — the
+//!   merged report is byte-identical to the single-process one.
+
+use std::collections::btree_map::Entry;
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+
+use crate::arch::params::ArchParams;
+use crate::pipeline::CompileCtx;
+use crate::util::json::Json;
+
+use super::cache::{fnv1a, DiskCache};
+use super::runner::{effective_key, CacheStats, EvalSession, PartialSink, PointResult};
+use super::search::{self, HalvingParams, Objective, RungReport};
+use super::space::{ExplorePoint, ExploreSpec};
+use super::SearchKind;
+
+/// One shard of an `N`-way partition, `--shard K/N` on the CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// 1-based shard index (`K`).
+    pub index: usize,
+    /// Total shard count (`N`).
+    pub count: usize,
+}
+
+impl ShardSpec {
+    /// Parse the CLI form `K/N`.
+    pub fn parse(s: &str) -> Result<ShardSpec, String> {
+        let (k, n) =
+            s.split_once('/').ok_or_else(|| format!("bad --shard '{s}' (expected K/N)"))?;
+        let index: usize =
+            k.trim().parse().map_err(|_| format!("bad --shard index '{k}' in '{s}'"))?;
+        let count: usize =
+            n.trim().parse().map_err(|_| format!("bad --shard count '{n}' in '{s}'"))?;
+        let spec = ShardSpec { index, count };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.count == 0 {
+            return Err("shard: count must be >= 1".into());
+        }
+        if self.index == 0 || self.index > self.count {
+            return Err(format!("shard: index must be in 1..={}, got {}", self.count, self.index));
+        }
+        Ok(())
+    }
+
+    /// Deterministic ownership: effective cache key modulo shard count.
+    pub fn owns(&self, key: u64) -> bool {
+        owner_of(key, self.count) == self.index
+    }
+
+    /// Display / partial-log tag, `"K/N"`.
+    pub fn tag(&self) -> String {
+        format!("{}/{}", self.index, self.count)
+    }
+
+    /// Manifest file name, `shard_K_of_N.json`.
+    pub fn manifest_name(&self) -> String {
+        format!("shard_{}_of_{}.json", self.index, self.count)
+    }
+}
+
+/// The 1-based shard index that owns `key` under an `n`-way partition.
+pub fn owner_of(key: u64, n: usize) -> usize {
+    (key % n.max(1) as u64) as usize + 1
+}
+
+/// Compatibility fingerprint of (crate version, spec, search strategy) —
+/// the token every manifest carries and the merge matches before combining
+/// anything. Axis drift and different search knobs always change it;
+/// version detection is only as fine-grained as `CARGO_PKG_VERSION`, the
+/// same policy the metrics cache uses — a compiler-pass change that is not
+/// accompanied by a version bump is invisible to both, so bump the version
+/// in `Cargo.toml` whenever compiled artifacts or metrics change.
+pub fn spec_fingerprint(spec: &ExploreSpec, search: &SearchKind) -> String {
+    let search_tag = match search {
+        SearchKind::Grid => "grid".to_string(),
+        SearchKind::Halving(p) => {
+            format!("halving:eta={};min={};obj={}", p.eta, p.min_budget, p.objective.tag())
+        }
+    };
+    let s = format!(
+        "ver={};spec={};search={search_tag}",
+        env!("CARGO_PKG_VERSION"),
+        spec.to_json().to_string_compact()
+    );
+    format!("{:016x}", fnv1a(s.as_bytes()))
+}
+
+/// One owned final point as recorded in a manifest: its id in the final
+/// enumeration, its effective cache key (hex in JSON — u64 keys do not
+/// survive f64 number encoding), and the compile error if it failed
+/// (successful points live in the shard's `explore_cache/`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestPoint {
+    pub id: usize,
+    pub key: u64,
+    pub error: Option<String>,
+}
+
+/// Self-describing record of one shard run (`results/shard_K_of_N.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub shard: usize,
+    pub of: usize,
+    pub fingerprint: String,
+    pub spec: ExploreSpec,
+    pub search: SearchKind,
+    /// This shard's owned slice of the final point set.
+    pub points: Vec<ManifestPoint>,
+    /// Global final point count (grid: the full enumeration; halving: the
+    /// top-rung survivor count) — what full coverage must add up to.
+    pub points_total: usize,
+    /// Halving: the global survivor ids in report order (`None` for grid).
+    pub survivor_ids: Option<Vec<usize>>,
+    /// Halving: the global rung trajectory (`None` for grid).
+    pub rungs: Option<Vec<RungReport>>,
+    /// Cache records this run wrote.
+    pub cache_stores: usize,
+    /// This run's span of the shard-local partial log.
+    pub log_start: usize,
+    pub log_lines: usize,
+}
+
+impl Manifest {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("format", 1u64)
+            .set("shard", self.shard)
+            .set("of", self.of)
+            .set("fingerprint", self.fingerprint.as_str())
+            .set("spec", self.spec.to_json())
+            .set("points_total", self.points_total)
+            .set("cache_stores", self.cache_stores);
+        let mut search = Json::obj();
+        match &self.search {
+            SearchKind::Grid => {
+                search.set("mode", "grid");
+            }
+            SearchKind::Halving(p) => {
+                search
+                    .set("mode", "halving")
+                    .set("eta", p.eta)
+                    .set("min_budget", p.min_budget)
+                    .set("objective", p.objective.tag());
+            }
+        }
+        j.set("search", search);
+        let mut pts = Json::Arr(vec![]);
+        for p in &self.points {
+            let mut o = Json::obj();
+            o.set("id", p.id)
+                .set("key", format!("{:016x}", p.key))
+                .set("error", p.error.as_deref().map_or(Json::Null, Json::from));
+            pts.push(o);
+        }
+        j.set("points", pts);
+        if let Some(ids) = &self.survivor_ids {
+            j.set("survivor_ids", ids.iter().map(|&i| i.into()).collect::<Vec<Json>>());
+        }
+        if let Some(rungs) = &self.rungs {
+            let mut jr = Json::Arr(vec![]);
+            for r in rungs {
+                let mut o = Json::obj();
+                o.set("rung", r.rung)
+                    .set("budget", r.budget)
+                    .set("evaluated", r.evaluated)
+                    .set("kept", r.kept);
+                jr.push(o);
+            }
+            j.set("rungs", jr);
+        }
+        let mut log = Json::obj();
+        log.set("file", "explore_partial.jsonl")
+            .set("start", self.log_start)
+            .set("lines", self.log_lines);
+        j.set("partial_log", log);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest, String> {
+        fn req_usize(j: &Json, key: &str) -> Result<usize, String> {
+            j.get(key).and_then(Json::as_usize).ok_or_else(|| format!("manifest: bad '{key}'"))
+        }
+        let format = req_usize(j, "format")?;
+        if format != 1 {
+            return Err(format!("manifest: unsupported format {format}"));
+        }
+        let spec = ExploreSpec::from_json(j.get("spec").ok_or("manifest: missing 'spec'")?)?;
+        let jsearch = j.get("search").ok_or("manifest: missing 'search'")?;
+        let search = match jsearch.get("mode").and_then(Json::as_str) {
+            Some("grid") => SearchKind::Grid,
+            Some("halving") => SearchKind::Halving(HalvingParams {
+                eta: req_usize(jsearch, "eta")?,
+                min_budget: req_usize(jsearch, "min_budget")?,
+                objective: Objective::parse(
+                    jsearch.get("objective").and_then(Json::as_str).unwrap_or(""),
+                )?,
+            }),
+            _ => return Err("manifest: bad search mode".into()),
+        };
+        let jpoints = j.get("points").and_then(Json::as_arr).ok_or("manifest: bad 'points'")?;
+        let mut points = Vec::with_capacity(jpoints.len());
+        for o in jpoints {
+            let key_hex = o.get("key").and_then(Json::as_str).ok_or("manifest: bad point 'key'")?;
+            let key = u64::from_str_radix(key_hex, 16)
+                .map_err(|_| format!("manifest: bad point key '{key_hex}'"))?;
+            let error = match o.get("error") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_str().ok_or("manifest: bad point 'error'")?.to_string()),
+            };
+            points.push(ManifestPoint { id: req_usize(o, "id")?, key, error });
+        }
+        let survivor_ids = match j.get("survivor_ids") {
+            None => None,
+            Some(v) => {
+                let arr = v.as_arr().ok_or("manifest: bad 'survivor_ids'")?;
+                Some(
+                    arr.iter()
+                        .map(|x| x.as_usize().ok_or("manifest: bad survivor id".to_string()))
+                        .collect::<Result<Vec<usize>, String>>()?,
+                )
+            }
+        };
+        let rungs = match j.get("rungs") {
+            None => None,
+            Some(v) => {
+                let arr = v.as_arr().ok_or("manifest: bad 'rungs'")?;
+                let mut out = Vec::with_capacity(arr.len());
+                for o in arr {
+                    out.push(RungReport {
+                        rung: req_usize(o, "rung")?,
+                        budget: req_usize(o, "budget")?,
+                        evaluated: req_usize(o, "evaluated")?,
+                        kept: req_usize(o, "kept")?,
+                    });
+                }
+                Some(out)
+            }
+        };
+        let jlog = j.get("partial_log").ok_or("manifest: missing 'partial_log'")?;
+        let m = Manifest {
+            shard: req_usize(j, "shard")?,
+            of: req_usize(j, "of")?,
+            fingerprint: j
+                .get("fingerprint")
+                .and_then(Json::as_str)
+                .ok_or("manifest: bad 'fingerprint'")?
+                .to_string(),
+            spec,
+            search,
+            points,
+            points_total: req_usize(j, "points_total")?,
+            survivor_ids,
+            rungs,
+            cache_stores: req_usize(j, "cache_stores")?,
+            log_start: req_usize(jlog, "start")?,
+            log_lines: req_usize(jlog, "lines")?,
+        };
+        ShardSpec { index: m.shard, count: m.of }.validate()?;
+        Ok(m)
+    }
+
+    /// Write `shard_K_of_N.json` under `dir`.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf, String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("shard: cannot create {}: {e}", dir.display()))?;
+        let path = dir.join(ShardSpec { index: self.shard, count: self.of }.manifest_name());
+        std::fs::write(&path, self.to_json().to_string_pretty())
+            .map_err(|e| format!("shard: cannot write {}: {e}", path.display()))?;
+        Ok(path)
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("manifest {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| format!("manifest {}: {e}", path.display()))?;
+        Manifest::from_json(&j).map_err(|e| format!("manifest {}: {e}", path.display()))
+    }
+
+    /// Whether `other` is a benign re-submission of the same shard work
+    /// (e.g. a retried CI job): identical claims, possibly different local
+    /// bookkeeping (log span, cache-store count).
+    fn same_claims(&self, other: &Manifest) -> bool {
+        self.points == other.points
+            && self.points_total == other.points_total
+            && self.survivor_ids == other.survivor_ids
+            && self.rungs == other.rungs
+    }
+}
+
+/// Outcome of one shard run: the manifest (already on disk) plus cache
+/// traffic.
+#[derive(Debug)]
+pub struct ShardOutcome {
+    pub manifest: Manifest,
+    pub manifest_path: PathBuf,
+    pub stats: CacheStats,
+}
+
+/// Evaluate this shard's slice of the space and write its manifest, cache
+/// records and shard-tagged partial log under `out_dir` (the CLI passes
+/// `results/`). The disk cache is mandatory here: merged metrics are
+/// reconstructed from `explore_cache/`, so a shard whose successful points
+/// are not on disk would be unmergeable — it fails loudly instead.
+pub fn run_sharded(
+    spec: &ExploreSpec,
+    ctx: &CompileCtx,
+    threads: usize,
+    search: &SearchKind,
+    shard: &ShardSpec,
+    out_dir: &Path,
+) -> Result<ShardOutcome, String> {
+    spec.validate()?;
+    shard.validate()?;
+    let threads = threads.max(1);
+    std::fs::create_dir_all(out_dir)
+        .map_err(|e| format!("shard: cannot create {}: {e}", out_dir.display()))?;
+    let disk = DiskCache::at(out_dir.join("explore_cache"));
+    let sink = PartialSink::open_tagged(out_dir.join("explore_partial.jsonl"), Some(shard.tag()));
+    let log_start = sink.start_line();
+
+    let (owned_results, points_total, survivor_ids, rungs, stats) = match search {
+        SearchKind::Grid => {
+            let all = spec.points();
+            let owned: Vec<ExplorePoint> = all
+                .iter()
+                .filter(|p| shard.owns(effective_key(spec, &ctx.arch, p)))
+                .cloned()
+                .collect();
+            println!(
+                "explore: shard {} of grid, {} of {} point(s) owned ({}) on {} thread(s)...",
+                shard.tag(),
+                owned.len(),
+                all.len(),
+                spec.shape(),
+                threads
+            );
+            let session = EvalSession::new(spec, ctx, Some(&disk), Some(&sink));
+            let results = session.eval_points(&owned, threads, None);
+            let stats = session.stats();
+            (results, all.len(), None, None, stats)
+        }
+        SearchKind::Halving(params) => {
+            println!(
+                "explore: shard {} of halving (eta {}, objective {}): {} candidate(s) ({}) \
+                 on {} thread(s)...",
+                shard.tag(),
+                params.eta,
+                params.objective.tag(),
+                spec.candidates().len(),
+                spec.candidate_spec().shape(),
+                threads
+            );
+            let out = search::run_halving(
+                spec,
+                ctx,
+                threads,
+                Some(&disk),
+                Some(&sink),
+                params,
+                Some(shard),
+            )?;
+            let ids: Vec<usize> = out.survivors.iter().map(|p| p.id).collect();
+            let total = out.survivors.len();
+            (out.results, total, Some(ids), Some(out.rungs), out.stats)
+        }
+    };
+
+    let points: Vec<ManifestPoint> = owned_results
+        .iter()
+        .map(|r| ManifestPoint {
+            id: r.point.id,
+            key: effective_key(spec, &ctx.arch, &r.point),
+            error: r.metrics.as_ref().err().cloned(),
+        })
+        .collect();
+    for p in &points {
+        if p.error.is_none() && disk.load(p.key).is_none() {
+            return Err(format!(
+                "shard: cache record missing for point {} (key {:016x}) — cannot write a \
+                 mergeable manifest",
+                p.id, p.key
+            ));
+        }
+    }
+
+    let manifest = Manifest {
+        shard: shard.index,
+        of: shard.count,
+        fingerprint: spec_fingerprint(spec, search),
+        spec: spec.clone(),
+        search: search.clone(),
+        points,
+        points_total,
+        survivor_ids,
+        rungs,
+        cache_stores: disk.stores(),
+        log_start,
+        log_lines: sink.written(),
+    };
+    let manifest_path = manifest.write(out_dir)?;
+    let stale = clear_foreign_manifests(out_dir, &manifest);
+    if stale > 0 {
+        println!(
+            "shard: removed {stale} stale manifest(s) from other runs (different spec or \
+             shard count) so they cannot poison a later explore-merge"
+        );
+    }
+    println!(
+        "shard {}: {} owned point(s) of {}, {} cache record(s) written, manifest {}",
+        shard.tag(),
+        manifest.points.len(),
+        manifest.points_total,
+        manifest.cache_stores,
+        manifest_path.display()
+    );
+    println!(
+        "cache: {} hit(s) ({} in-memory, {} disk), {} compile(s), {} extra context(s)",
+        stats.total_hits(),
+        stats.memory_hits,
+        stats.disk_hits,
+        stats.misses,
+        stats.ctx_builds
+    );
+    if sink.dropped() > 0 {
+        println!(
+            "partial results: INCOMPLETE — {} record(s) dropped ({})",
+            sink.dropped(),
+            sink.path().display()
+        );
+    } else {
+        println!("partial results: {} (shard-tagged)", sink.path().display());
+    }
+    Ok(ShardOutcome { manifest, manifest_path, stats })
+}
+
+/// A merged multi-shard run, ready for the shared report path.
+#[derive(Debug)]
+pub struct MergeOutcome {
+    pub spec: ExploreSpec,
+    pub search: SearchKind,
+    /// Full final result vector in single-process report order.
+    pub results: Vec<PointResult>,
+    /// Halving: knobs + global trajectory for the report's search section.
+    pub trajectory: Option<(HalvingParams, Vec<RungReport>)>,
+    /// Distinct shards merged.
+    pub shards: usize,
+    /// Cache records copied into the merged `explore_cache/`.
+    pub cache_copied: usize,
+    /// Partial-log lines appended to the merged journal.
+    pub log_lines: usize,
+}
+
+/// Merge shard directories into `out_dir`: validate the manifest cohort,
+/// union the caches, concatenate the partial logs, and rebuild the full
+/// result vector. `base` must be the architecture the shards compiled
+/// against (the CLI always uses the paper array).
+pub fn merge(
+    dirs: &[PathBuf],
+    base: &ArchParams,
+    out_dir: &Path,
+) -> Result<MergeOutcome, String> {
+    if dirs.is_empty() {
+        return Err("explore-merge: at least one shard directory required".into());
+    }
+    // Visit each directory once even if listed twice.
+    let mut unique_dirs: Vec<PathBuf> = Vec::new();
+    for d in dirs {
+        let canon = d.canonicalize().unwrap_or_else(|_| d.clone());
+        if !unique_dirs.contains(&canon) {
+            unique_dirs.push(canon);
+        }
+    }
+
+    // 1. Collect manifests.
+    let mut manifests: Vec<(PathBuf, Manifest)> = Vec::new();
+    for dir in &unique_dirs {
+        let rd = std::fs::read_dir(dir)
+            .map_err(|e| format!("explore-merge: cannot read {}: {e}", dir.display()))?;
+        let mut paths: Vec<PathBuf> = rd
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("shard_") && n.ends_with(".json"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        paths.sort();
+        if paths.is_empty() {
+            return Err(format!(
+                "explore-merge: no shard manifest (shard_*.json) in {}",
+                dir.display()
+            ));
+        }
+        for path in paths {
+            let m = Manifest::load(&path)?;
+            manifests.push((path, m));
+        }
+    }
+
+    // 2. Validate the cohort: one fingerprint, one shard count, every
+    // shard present exactly once (duplicate re-submissions deduplicated).
+    let (first_path, first) = &manifests[0];
+    let n = first.of;
+    let fingerprint = first.fingerprint.clone();
+    // Winning manifest per shard index, with the directory it came from
+    // (so deduplicated re-submissions contribute neither results nor
+    // journal/cache content twice).
+    let mut by_index: BTreeMap<usize, (&Path, &Manifest)> = BTreeMap::new();
+    for (path, m) in &manifests {
+        if m.fingerprint != fingerprint {
+            return Err(format!(
+                "explore-merge: spec drift — {} has fingerprint {} but {} has {}",
+                path.display(),
+                m.fingerprint,
+                first_path.display(),
+                fingerprint
+            ));
+        }
+        if m.of != n {
+            return Err(format!(
+                "explore-merge: shard-count mismatch — {} says {} shard(s), {} says {}",
+                path.display(),
+                m.of,
+                first_path.display(),
+                n
+            ));
+        }
+        match by_index.entry(m.shard) {
+            Entry::Vacant(v) => {
+                v.insert((path.parent().unwrap_or_else(|| Path::new(".")), m));
+            }
+            Entry::Occupied(o) => {
+                if !o.get().1.same_claims(m) {
+                    return Err(format!(
+                        "explore-merge: conflicting manifests for shard {}/{n} ({})",
+                        m.shard,
+                        path.display()
+                    ));
+                }
+                // Identical claims: an overlapping re-submission, dedupe.
+            }
+        }
+    }
+    for k in 1..=n {
+        if !by_index.contains_key(&k) {
+            return Err(format!("explore-merge: coverage gap — shard {k}/{n} missing"));
+        }
+    }
+    let canonical = by_index[&1].1;
+    let spec = canonical.spec.clone();
+    let search = canonical.search.clone();
+    if spec_fingerprint(&spec, &search) != fingerprint {
+        return Err(
+            "explore-merge: manifest fingerprint does not match its own spec (version skew \
+             between the shard writer and this binary?)"
+                .into(),
+        );
+    }
+
+    // 3. The expected final point set, in single-process report order.
+    let expected: Vec<ExplorePoint> = match &search {
+        SearchKind::Grid => spec.points(),
+        SearchKind::Halving(_) => {
+            for (k, (_, m)) in &by_index {
+                if m.survivor_ids != canonical.survivor_ids || m.rungs != canonical.rungs {
+                    return Err(format!(
+                        "explore-merge: shard {k}/{n} disagrees on the survivor set or rung \
+                         trajectory (non-deterministic shard runs?)"
+                    ));
+                }
+            }
+            let ids = canonical
+                .survivor_ids
+                .as_ref()
+                .ok_or("explore-merge: halving manifest missing survivor_ids")?;
+            let rungs = canonical
+                .rungs
+                .as_ref()
+                .ok_or("explore-merge: halving manifest missing rungs")?;
+            let final_budget = rungs.last().ok_or("explore-merge: empty rung trajectory")?.budget;
+            let candidates = spec.candidates();
+            let mut pts = Vec::with_capacity(ids.len());
+            for &id in ids {
+                let c = candidates
+                    .get(id)
+                    .ok_or_else(|| format!("explore-merge: survivor id {id} out of range"))?;
+                pts.push(c.at_budget(final_budget));
+            }
+            pts
+        }
+    };
+    for (k, (_, m)) in &by_index {
+        if m.points_total != expected.len() {
+            return Err(format!(
+                "explore-merge: shard {k}/{n} reports {} total point(s), expected {}",
+                m.points_total,
+                expected.len()
+            ));
+        }
+    }
+
+    // 4. Claim every expected point exactly once, validating keys and the
+    // partition (a point must be reported by the shard that owns it).
+    let keys: Vec<u64> = expected.iter().map(|p| effective_key(&spec, base, p)).collect();
+    let id_pos: HashMap<usize, usize> =
+        expected.iter().enumerate().map(|(i, p)| (p.id, i)).collect();
+    let mut claimed: Vec<Option<&ManifestPoint>> = vec![None; expected.len()];
+    for (k, (_, m)) in &by_index {
+        for mp in &m.points {
+            let pos = *id_pos.get(&mp.id).ok_or_else(|| {
+                format!("explore-merge: shard {k}/{n} claims unknown point id {}", mp.id)
+            })?;
+            if keys[pos] != mp.key {
+                return Err(format!(
+                    "explore-merge: key mismatch for point id {} (manifest {:016x}, \
+                     recomputed {:016x})",
+                    mp.id, mp.key, keys[pos]
+                ));
+            }
+            let owner = owner_of(mp.key, n);
+            if owner != *k {
+                return Err(format!(
+                    "explore-merge: overlap — point id {} belongs to shard {owner}/{n} but \
+                     was reported by shard {k}/{n}",
+                    mp.id
+                ));
+            }
+            if claimed[pos].is_some() {
+                return Err(format!("explore-merge: overlap — point id {} reported twice", mp.id));
+            }
+            claimed[pos] = Some(mp);
+        }
+    }
+    let gaps: Vec<String> = expected
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| claimed[*i].is_none())
+        .map(|(i, p)| format!("{} (id {}, shard {}/{n})", p.label(), p.id, owner_of(keys[i], n)))
+        .collect();
+    if !gaps.is_empty() {
+        let shown = gaps.iter().take(5).cloned().collect::<Vec<_>>().join(", ");
+        return Err(format!(
+            "explore-merge: coverage gap — {} point(s) unreported: {shown}{}",
+            gaps.len(),
+            if gaps.len() > 5 { ", ..." } else { "" }
+        ));
+    }
+
+    // 5. Union the caches and concatenate the partial logs.
+    let out_cache = out_dir.join("explore_cache");
+    std::fs::create_dir_all(&out_cache)
+        .map_err(|e| format!("explore-merge: cannot create {}: {e}", out_cache.display()))?;
+    let mut cache_copied = 0usize;
+    let mut log_lines = 0usize;
+    let out_log = out_dir.join("explore_partial.jsonl");
+    if out_log.exists() {
+        // Journals are append-only by contract (never truncate): flag the
+        // pre-existing contents so a re-run's duplicated lines are not
+        // mistaken for a pristine merged log.
+        println!(
+            "explore-merge: note — {} already exists; shard journals are appended after its \
+             current contents (merge into a fresh directory for a pristine log)",
+            out_log.display()
+        );
+    }
+    let mut source_dirs: Vec<&Path> = Vec::new();
+    for (_, (dir, _)) in &by_index {
+        if !source_dirs.contains(dir) {
+            source_dirs.push(dir);
+        }
+    }
+    for dir in &source_dirs {
+        cache_copied += union_cache(&dir.join("explore_cache"), &out_cache)?;
+        log_lines += append_log(&dir.join("explore_partial.jsonl"), &out_log)?;
+    }
+
+    // 6. Rebuild the full result vector from the merged cache.
+    let disk = DiskCache::at(&out_cache);
+    let mut results = Vec::with_capacity(expected.len());
+    for (pos, p) in expected.iter().enumerate() {
+        let mp = claimed[pos].expect("gap check passed");
+        let metrics = match &mp.error {
+            Some(e) => Err(e.clone()),
+            None => match disk.load(mp.key) {
+                Some(m) => Ok(m),
+                None => {
+                    return Err(format!(
+                        "explore-merge: cache record missing for {} (key {:016x}) — was the \
+                         shard's explore_cache/ included?",
+                        p.label(),
+                        mp.key
+                    ))
+                }
+            },
+        };
+        results.push(PointResult { point: p.clone(), metrics, from_disk: true });
+    }
+
+    let trajectory = match &search {
+        SearchKind::Halving(p) => Some((
+            p.clone(),
+            canonical.rungs.clone().ok_or("explore-merge: halving manifest missing rungs")?,
+        )),
+        SearchKind::Grid => None,
+    };
+    Ok(MergeOutcome {
+        spec,
+        search,
+        results,
+        trajectory,
+        shards: n,
+        cache_copied,
+        log_lines,
+    })
+}
+
+/// CLI entry point for `cascade explore-merge <dir>...`: merge into
+/// `results/` and emit the standard report. Mirrors `cascade explore`'s
+/// exit behaviour: compile failures surface as an error after the report
+/// is written.
+pub fn merge_cli(dirs: &[PathBuf]) -> Result<(), String> {
+    let out_dir = PathBuf::from("results");
+    // `cascade explore` always compiles against the paper architecture
+    // (arch overrides are per-point, folded into the keys).
+    let merged = merge(dirs, &ArchParams::paper(), &out_dir)?;
+    let trajectory = merged.trajectory.as_ref().map(|(p, r)| (p, r.as_slice()));
+    let (md, json, analyses) =
+        super::report::render_report(&merged.spec, &merged.results, trajectory);
+    crate::experiments::common::emit("explore", "Design-space exploration", &md, &json);
+    println!(
+        "explore-merge: {} shard(s), {} point(s), {} cache record(s) unioned, {} \
+         partial-log line(s)",
+        merged.shards,
+        merged.results.len(),
+        merged.cache_copied,
+        merged.log_lines
+    );
+    let failed: usize = analyses.iter().map(|a| a.failed.len()).sum();
+    if failed > 0 {
+        return Err(format!("{failed} point(s) failed to compile"));
+    }
+    Ok(())
+}
+
+/// Remove manifests from *other* cohorts (`shard_*.json` whose fingerprint
+/// differs from the one just written) left behind by earlier runs in the
+/// same results directory, so they cannot make a later `explore-merge`
+/// over this directory fail on a stale spec or shard count. Same-cohort
+/// manifests (local multi-process shard runs sharing one directory) and
+/// unparseable files are left alone — the merge reports the latter loudly.
+/// Returns the number of files removed.
+fn clear_foreign_manifests(dir: &Path, keep: &Manifest) -> usize {
+    let Ok(rd) = std::fs::read_dir(dir) else { return 0 };
+    let own = ShardSpec { index: keep.shard, count: keep.of }.manifest_name();
+    let mut removed = 0usize;
+    for e in rd.filter_map(|e| e.ok()) {
+        let path = e.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        if !(name.starts_with("shard_") && name.ends_with(".json")) || name == own {
+            continue;
+        }
+        if let Ok(m) = Manifest::load(&path) {
+            // Foreign = different spec/search/version OR a different shard
+            // count (the fingerprint deliberately excludes N, so a re-shard
+            // of the same spec is same-fingerprint but still stale here).
+            let foreign = m.fingerprint != keep.fingerprint || m.of != keep.of;
+            if foreign && std::fs::remove_file(&path).is_ok() {
+                removed += 1;
+            }
+        }
+    }
+    removed
+}
+
+/// Copy every `.rec` record from `src` into `dst`, skipping records
+/// already present with identical bytes and refusing to merge conflicting
+/// ones (same key, different metrics — a determinism violation, not a
+/// merge problem). Returns the number of records copied.
+fn union_cache(src: &Path, dst: &Path) -> Result<usize, String> {
+    let Ok(rd) = std::fs::read_dir(src) else {
+        return Ok(0); // No cache dir: metrics lookups will name the gap.
+    };
+    let mut paths: Vec<PathBuf> = rd
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "rec").unwrap_or(false))
+        .collect();
+    paths.sort();
+    let mut copied = 0usize;
+    for p in paths {
+        let name = p.file_name().expect("filtered on file_name").to_owned();
+        let to = dst.join(&name);
+        let data = std::fs::read(&p)
+            .map_err(|e| format!("explore-merge: read {}: {e}", p.display()))?;
+        if to.exists() {
+            let existing = std::fs::read(&to)
+                .map_err(|e| format!("explore-merge: read {}: {e}", to.display()))?;
+            if existing != data {
+                return Err(format!(
+                    "explore-merge: conflicting cache records for {} (shards compiled \
+                     different artifacts for one key)",
+                    name.to_string_lossy()
+                ));
+            }
+        } else {
+            std::fs::write(&to, &data)
+                .map_err(|e| format!("explore-merge: write {}: {e}", to.display()))?;
+            copied += 1;
+        }
+    }
+    Ok(copied)
+}
+
+/// Append `src`'s partial log to `dst` (which is never truncated),
+/// returning the number of lines appended. Skips absent sources and the
+/// degenerate case where `src` *is* `dst`.
+fn append_log(src: &Path, dst: &Path) -> Result<usize, String> {
+    if !src.exists() {
+        return Ok(0);
+    }
+    if let (Ok(a), Ok(b)) = (src.canonicalize(), dst.canonicalize()) {
+        if a == b {
+            return Ok(0);
+        }
+    }
+    let text = std::fs::read_to_string(src)
+        .map_err(|e| format!("explore-merge: read {}: {e}", src.display()))?;
+    if text.is_empty() {
+        return Ok(0);
+    }
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new()
+        .append(true)
+        .create(true)
+        .open(dst)
+        .map_err(|e| format!("explore-merge: open {}: {e}", dst.display()))?;
+    f.write_all(text.as_bytes())
+        .map_err(|e| format!("explore-merge: write {}: {e}", dst.display()))?;
+    if !text.ends_with('\n') {
+        let _ = writeln!(f);
+    }
+    Ok(text.lines().count())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::cache::PointMetrics;
+
+    #[test]
+    fn shard_spec_parses_and_rejects() {
+        assert_eq!(ShardSpec::parse("1/3").unwrap(), ShardSpec { index: 1, count: 3 });
+        assert_eq!(ShardSpec::parse("3/3").unwrap(), ShardSpec { index: 3, count: 3 });
+        assert_eq!(ShardSpec::parse("1/1").unwrap().tag(), "1/1");
+        assert!(ShardSpec::parse("0/3").is_err());
+        assert!(ShardSpec::parse("4/3").is_err());
+        assert!(ShardSpec::parse("3/0").is_err());
+        assert!(ShardSpec::parse("x/3").is_err());
+        assert!(ShardSpec::parse("3").is_err());
+        assert_eq!(ShardSpec::parse("2/3").unwrap().manifest_name(), "shard_2_of_3.json");
+    }
+
+    #[test]
+    fn partition_is_total_and_disjoint() {
+        for n in [1usize, 2, 3, 7] {
+            for key in [0u64, 1, 41, u64::MAX, 0xdeadbeef] {
+                let owners: Vec<usize> = (1..=n)
+                    .filter(|&k| ShardSpec { index: k, count: n }.owns(key))
+                    .collect();
+                assert_eq!(owners.len(), 1, "key {key:#x} must have exactly one owner of {n}");
+                assert_eq!(owners[0], owner_of(key, n));
+            }
+        }
+        // N = 1 owns everything.
+        assert!(ShardSpec { index: 1, count: 1 }.owns(u64::MAX));
+    }
+
+    #[test]
+    fn fingerprint_tracks_spec_and_search() {
+        let spec = ExploreSpec::default();
+        let grid = spec_fingerprint(&spec, &SearchKind::Grid);
+        assert_eq!(grid, spec_fingerprint(&spec, &SearchKind::Grid));
+        let halving = spec_fingerprint(&spec, &SearchKind::Halving(HalvingParams::default()));
+        assert_ne!(grid, halving);
+        let eta = SearchKind::Halving(HalvingParams { eta: 5, ..Default::default() });
+        assert_ne!(halving, spec_fingerprint(&spec, &eta));
+        let fast = spec.clone().with_fast(true);
+        assert_ne!(grid, spec_fingerprint(&fast, &SearchKind::Grid));
+    }
+
+    fn tiny_two_point_spec() -> ExploreSpec {
+        ExploreSpec::default()
+            .with_apps(["gaussian"])
+            .with_levels(["none", "compute"])
+            .with_seeds([1])
+            .with_fast(true)
+            .with_scale(crate::explore::Scale::Tiny)
+    }
+
+    fn fake_metrics(tag: u64) -> PointMetrics {
+        PointMetrics {
+            crit_ns: 2.0 + tag as f64,
+            fmax_mhz: 500.0,
+            runtime_ms: 0.5,
+            power_mw: 100.0,
+            energy_mj: 0.05,
+            edp: 0.025,
+            pipe_regs: 10 + tag,
+            util_pct: 50.0,
+            cycles: 0,
+            artifact_fp: tag,
+        }
+    }
+
+    /// Build a consistent shard directory for `shard.index` of
+    /// `shard.count` without compiling: fake metrics under the derived
+    /// keys plus a matching manifest.
+    fn fake_shard_dir(
+        root: &Path,
+        spec: &ExploreSpec,
+        shard: ShardSpec,
+        label: &str,
+    ) -> PathBuf {
+        let dir = root.join(label);
+        let _ = std::fs::remove_dir_all(&dir);
+        let disk = DiskCache::at(dir.join("explore_cache"));
+        let base = ArchParams::paper();
+        let mut points = Vec::new();
+        let all = spec.points();
+        for p in &all {
+            let key = effective_key(spec, &base, p);
+            if shard.owns(key) {
+                disk.store(key, &fake_metrics(p.id as u64));
+                points.push(ManifestPoint { id: p.id, key, error: None });
+            }
+        }
+        std::fs::write(
+            dir.join("explore_partial.jsonl"),
+            format!("{{\"shard\":\"{}\"}}\n", shard.tag()),
+        )
+        .unwrap();
+        let manifest = Manifest {
+            shard: shard.index,
+            of: shard.count,
+            fingerprint: spec_fingerprint(spec, &SearchKind::Grid),
+            spec: spec.clone(),
+            search: SearchKind::Grid,
+            points,
+            points_total: all.len(),
+            survivor_ids: None,
+            rungs: None,
+            cache_stores: 0,
+            log_start: 0,
+            log_lines: 1,
+        };
+        manifest.write(&dir).unwrap();
+        dir
+    }
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("cascade-shard-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn manifest_json_round_trips() {
+        let spec = tiny_two_point_spec();
+        let m = Manifest {
+            shard: 2,
+            of: 3,
+            fingerprint: "00ab34ffcd120099".into(),
+            spec: spec.clone(),
+            search: SearchKind::Halving(HalvingParams::default()),
+            points: vec![
+                ManifestPoint { id: 0, key: u64::MAX, error: None },
+                ManifestPoint { id: 3, key: 7, error: Some("routing: congestion".into()) },
+            ],
+            points_total: 4,
+            survivor_ids: Some(vec![0, 3]),
+            rungs: Some(vec![RungReport { rung: 0, budget: 5, evaluated: 4, kept: 2 }]),
+            cache_stores: 9,
+            log_start: 12,
+            log_lines: 4,
+        };
+        let j = m.to_json();
+        let back = Manifest::from_json(&j).unwrap();
+        assert_eq!(back, m, "manifest must round-trip through JSON");
+        // And through text (the on-disk path).
+        let text = j.to_string_pretty();
+        assert!(text.contains("\"key\": \"ffffffffffffffff\""), "keys must travel as hex");
+        assert_eq!(Manifest::from_json(&Json::parse(&text).unwrap()).unwrap(), m);
+        // Grid manifests omit the halving sections.
+        let g = Manifest {
+            search: SearchKind::Grid,
+            survivor_ids: None,
+            rungs: None,
+            ..m.clone()
+        };
+        let gj = g.to_json();
+        assert!(gj.get("survivor_ids").is_none());
+        assert_eq!(Manifest::from_json(&gj).unwrap(), g);
+        // Corrupt documents fail loudly.
+        assert!(Manifest::from_json(&Json::Null).is_err());
+        let mut bad = m.to_json();
+        bad.set("format", 2u64);
+        assert!(Manifest::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn merge_reassembles_fake_shards_and_dedupes_duplicates() {
+        let root = tmp_root("merge-ok");
+        let _ = std::fs::remove_dir_all(&root);
+        let spec = tiny_two_point_spec();
+        let n = 3;
+        let dirs: Vec<PathBuf> = (1..=n)
+            .map(|k| {
+                let sh = ShardSpec { index: k, count: n };
+                fake_shard_dir(&root, &spec, sh, &format!("shard{k}"))
+            })
+            .collect();
+        let out = root.join("merged");
+        let base = ArchParams::paper();
+        let merged = merge(&dirs, &base, &out).unwrap();
+        assert_eq!(merged.shards, n);
+        assert_eq!(merged.results.len(), spec.points().len());
+        for (i, r) in merged.results.iter().enumerate() {
+            assert_eq!(r.point.id, i, "results must come back in enumeration order");
+            assert_eq!(r.metrics.as_ref().unwrap().artifact_fp, i as u64);
+        }
+        assert_eq!(merged.log_lines, n, "every shard's journal must be concatenated");
+
+        // An overlapping re-submission of shard 1 from a *different*
+        // directory (same claims, e.g. a retried CI job) merges
+        // identically: deduped at the manifest level, not double-counted.
+        let dup = fake_shard_dir(&root, &spec, ShardSpec { index: 1, count: n }, "shard1-retry");
+        let mut with_dup = dirs.clone();
+        with_dup.push(dup);
+        let out2 = root.join("merged2");
+        let merged2 = merge(&with_dup, &base, &out2).unwrap();
+        assert_eq!(merged2.results.len(), merged.results.len());
+        assert_eq!(merged2.shards, n);
+        assert_eq!(
+            merged2.log_lines, merged.log_lines,
+            "a deduped re-submission must not append its journal twice"
+        );
+        for (a, b) in merged.results.iter().zip(&merged2.results) {
+            assert_eq!(a.metrics.as_ref().ok(), b.metrics.as_ref().ok());
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn foreign_manifests_cleared_same_cohort_kept() {
+        let root = tmp_root("clear-foreign");
+        let _ = std::fs::remove_dir_all(&root);
+        let spec = tiny_two_point_spec();
+        // One directory accumulates: a 1/1 run of an old spec, then a 2/2
+        // sibling of the current cohort, then "this run's" 1/2 manifest.
+        let dir = fake_shard_dir(&root, &spec, ShardSpec { index: 1, count: 2 }, "d");
+        let old_spec = spec.clone().with_seeds([9]);
+        let stale = Manifest {
+            shard: 1,
+            of: 1,
+            fingerprint: spec_fingerprint(&old_spec, &SearchKind::Grid),
+            spec: old_spec,
+            search: SearchKind::Grid,
+            points: vec![],
+            points_total: 2,
+            survivor_ids: None,
+            rungs: None,
+            cache_stores: 0,
+            log_start: 0,
+            log_lines: 0,
+        };
+        stale.write(&dir).unwrap();
+        // Same spec re-sharded with a different N: identical fingerprint,
+        // still stale (the fingerprint deliberately excludes N).
+        let resharded = Manifest {
+            of: 3,
+            spec: spec.clone(),
+            fingerprint: spec_fingerprint(&spec, &SearchKind::Grid),
+            ..stale
+        };
+        resharded.write(&dir).unwrap();
+        let sibling_dir = fake_shard_dir(&root, &spec, ShardSpec { index: 2, count: 2 }, "sib");
+        let sibling = dir.join("shard_2_of_2.json");
+        std::fs::copy(sibling_dir.join("shard_2_of_2.json"), &sibling).unwrap();
+
+        let own = Manifest::load(&dir.join("shard_1_of_2.json")).unwrap();
+        let removed = clear_foreign_manifests(&dir, &own);
+        assert_eq!(removed, 2, "both foreign manifests go (other spec AND other N)");
+        assert!(!dir.join("shard_1_of_1.json").exists());
+        assert!(!dir.join("shard_1_of_3.json").exists(), "same-spec different-N is stale too");
+        assert!(sibling.exists(), "same-cohort sibling must survive");
+        assert!(dir.join("shard_1_of_2.json").exists());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn merge_names_the_missing_shard() {
+        let root = tmp_root("merge-gap");
+        let _ = std::fs::remove_dir_all(&root);
+        let spec = tiny_two_point_spec();
+        let d1 = fake_shard_dir(&root, &spec, ShardSpec { index: 1, count: 3 }, "s1");
+        let d3 = fake_shard_dir(&root, &spec, ShardSpec { index: 3, count: 3 }, "s3");
+        let err = merge(&[d1, d3], &ArchParams::paper(), &root.join("m")).unwrap_err();
+        assert!(err.contains("shard 2/3 missing"), "gap must be named: {err}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn merge_rejects_spec_drift_and_conflicts() {
+        let root = tmp_root("merge-drift");
+        let _ = std::fs::remove_dir_all(&root);
+        let spec = tiny_two_point_spec();
+        let other = spec.clone().with_seeds([2]);
+        let d1 = fake_shard_dir(&root, &spec, ShardSpec { index: 1, count: 2 }, "a");
+        let d2 = fake_shard_dir(&root, &other, ShardSpec { index: 2, count: 2 }, "b");
+        let err = merge(&[d1.clone(), d2], &ArchParams::paper(), &root.join("m")).unwrap_err();
+        assert!(err.contains("spec drift"), "{err}");
+
+        // Same shard index, same fingerprint, different claims: conflict.
+        let d1b = fake_shard_dir(&root, &spec, ShardSpec { index: 1, count: 2 }, "c");
+        let manifest_path = d1b.join("shard_1_of_2.json");
+        let mut m = Manifest::load(&manifest_path).unwrap();
+        m.points.pop();
+        m.write(&d1b).unwrap();
+        let err = merge(&[d1, d1b], &ArchParams::paper(), &root.join("m2")).unwrap_err();
+        assert!(err.contains("conflicting") || err.contains("missing"), "{err}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn merge_rejects_shard_count_mixtures() {
+        let root = tmp_root("merge-mixn");
+        let _ = std::fs::remove_dir_all(&root);
+        let spec = tiny_two_point_spec();
+        let d1 = fake_shard_dir(&root, &spec, ShardSpec { index: 1, count: 1 }, "one");
+        let d2 = fake_shard_dir(&root, &spec, ShardSpec { index: 1, count: 2 }, "half");
+        let err = merge(&[d1, d2], &ArchParams::paper(), &root.join("m")).unwrap_err();
+        assert!(err.contains("shard-count mismatch"), "{err}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn merge_reports_missing_cache_records() {
+        let root = tmp_root("merge-nocache");
+        let _ = std::fs::remove_dir_all(&root);
+        let spec = tiny_two_point_spec();
+        let d = fake_shard_dir(&root, &spec, ShardSpec { index: 1, count: 1 }, "s");
+        let _ = std::fs::remove_dir_all(d.join("explore_cache"));
+        let err = merge(&[d], &ArchParams::paper(), &root.join("m")).unwrap_err();
+        assert!(err.contains("cache record missing"), "{err}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

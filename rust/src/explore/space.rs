@@ -19,6 +19,7 @@ use crate::arch::params::ArchParams;
 use crate::experiments::common::tune;
 use crate::pipeline::{PipelineConfig, PostPnrParams};
 use crate::util::cli::Args;
+use crate::util::json::Json;
 
 /// Scale at which dense applications are instantiated.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -36,11 +37,19 @@ impl Scale {
             Scale::Tiny => "tiny",
         }
     }
+
+    pub fn parse(tag: &str) -> Result<Scale, String> {
+        match tag {
+            "paper" => Ok(Scale::Paper),
+            "tiny" => Ok(Scale::Tiny),
+            _ => Err(format!("unknown scale tag '{tag}'")),
+        }
+    }
 }
 
 /// The exploration grid. Empty `alphas` / `iters` axes mean "use the
 /// level's own default" (a single implicit point on that axis).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExploreSpec {
     pub apps: Vec<String>,
     pub levels: Vec<String>,
@@ -274,6 +283,68 @@ impl ExploreSpec {
     /// Enumeration of [`candidate_spec`](Self::candidate_spec).
     pub fn candidates(&self) -> Vec<ExplorePoint> {
         self.candidate_spec().points()
+    }
+
+    /// Canonical JSON image of the spec: the `spec` section of the run
+    /// report and the `spec` field of shard manifests. [`Self::from_json`]
+    /// round-trips it exactly (floats use shortest-representation
+    /// formatting), which is what lets `cascade explore-merge` re-enumerate
+    /// the space a shard run evaluated.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("apps", self.apps.iter().map(|s| s.as_str().into()).collect::<Vec<Json>>())
+            .set("levels", self.levels.iter().map(|s| s.as_str().into()).collect::<Vec<Json>>())
+            .set("alphas", self.alphas.clone())
+            .set("seeds", self.seeds.clone())
+            .set("iters", self.iters.iter().map(|&i| i.into()).collect::<Vec<Json>>())
+            .set("tracks", self.tracks.iter().map(|&t| t.into()).collect::<Vec<Json>>())
+            .set("regwords", self.regwords.iter().map(|&w| w.into()).collect::<Vec<Json>>())
+            .set("fifos", self.fifos.iter().map(|&f| f.into()).collect::<Vec<Json>>())
+            .set("power_cap_mw", self.power_cap_mw.map_or(Json::Null, Json::from))
+            .set("fast", self.fast)
+            .set("scale", self.scale.tag());
+        j
+    }
+
+    /// Rebuild a spec from its [`Self::to_json`] image, re-validating every
+    /// axis (a manifest written by a build with different known apps or
+    /// levels must fail loudly, not enumerate a different space).
+    pub fn from_json(j: &Json) -> Result<ExploreSpec, String> {
+        fn strings(j: &Json, key: &str) -> Result<Vec<String>, String> {
+            let arr =
+                j.get(key).and_then(Json::as_arr).ok_or_else(|| format!("spec: bad '{key}'"))?;
+            arr.iter()
+                .map(|v| {
+                    v.as_str().map(String::from).ok_or_else(|| format!("spec: bad '{key}' entry"))
+                })
+                .collect()
+        }
+        fn numbers<T>(j: &Json, key: &str, conv: fn(&Json) -> Option<T>) -> Result<Vec<T>, String> {
+            let arr =
+                j.get(key).and_then(Json::as_arr).ok_or_else(|| format!("spec: bad '{key}'"))?;
+            arr.iter().map(|v| conv(v).ok_or_else(|| format!("spec: bad '{key}' entry"))).collect()
+        }
+        let power_cap_mw = match j.get("power_cap_mw") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_f64().ok_or("spec: bad 'power_cap_mw'")?),
+        };
+        let spec = ExploreSpec {
+            apps: strings(j, "apps")?,
+            levels: strings(j, "levels")?,
+            alphas: numbers(j, "alphas", Json::as_f64)?,
+            seeds: numbers(j, "seeds", Json::as_u64)?,
+            iters: numbers(j, "iters", Json::as_usize)?,
+            tracks: numbers(j, "tracks", Json::as_usize)?,
+            regwords: numbers(j, "regwords", Json::as_usize)?,
+            fifos: numbers(j, "fifos", Json::as_usize)?,
+            power_cap_mw,
+            fast: j.get("fast").and_then(Json::as_bool).ok_or("spec: bad 'fast'")?,
+            scale: Scale::parse(
+                j.get("scale").and_then(Json::as_str).ok_or("spec: bad 'scale'")?,
+            )?,
+        };
+        spec.validate()?;
+        Ok(spec)
     }
 
     /// Human-readable axis summary (`2 apps x 3 levels x ...`).
@@ -510,6 +581,48 @@ mod tests {
         assert_eq!(p.iters, Some(50));
         assert_eq!(p.level, cands[1].level);
         assert_eq!(p.id, cands[1].id);
+    }
+
+    #[test]
+    fn spec_json_round_trips_exactly() {
+        let spec = ExploreSpec::default()
+            .with_apps(["gaussian", "harris"])
+            .with_levels(["none", "full"])
+            .with_alphas([1.0, 1.35])
+            .with_seeds([1, 2])
+            .with_iters([25, 200])
+            .with_tracks([3, 5])
+            .with_regwords([16])
+            .with_fifos([2, 4])
+            .with_power_cap(Some(450.5))
+            .with_fast(true)
+            .with_scale(Scale::Tiny);
+        let j = spec.to_json();
+        let back = ExploreSpec::from_json(&j).unwrap();
+        assert_eq!(back.to_json(), j, "spec JSON must round-trip exactly");
+        assert_eq!(back.apps, spec.apps);
+        assert_eq!(back.alphas, spec.alphas);
+        assert_eq!(back.power_cap_mw, spec.power_cap_mw);
+        assert_eq!(back.scale, spec.scale);
+        // Through text too (the path a shard manifest actually takes).
+        let text = j.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(ExploreSpec::from_json(&parsed).unwrap().to_json(), j);
+        // And the defaults (null power cap, empty axes).
+        let d = ExploreSpec::default();
+        assert_eq!(ExploreSpec::from_json(&d.to_json()).unwrap().to_json(), d.to_json());
+    }
+
+    #[test]
+    fn spec_from_json_rejects_drift() {
+        let mut bad_app = ExploreSpec::default().to_json();
+        bad_app.set("apps", vec![Json::from("nope")]);
+        assert!(ExploreSpec::from_json(&bad_app).is_err());
+        let mut missing = ExploreSpec::default().to_json();
+        missing.set("fast", Json::Null);
+        assert!(ExploreSpec::from_json(&missing).is_err());
+        assert!(ExploreSpec::from_json(&Json::Null).is_err());
+        assert!(Scale::parse("huge").is_err());
     }
 
     #[test]

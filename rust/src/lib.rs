@@ -43,8 +43,11 @@
 //!   content-hash artifact caching, adaptive successive halving
 //!   (`--search halving`), streamed partial results, Capstone-style power
 //!   capping, and Pareto-frontier / knee-point reporting over
-//!   (critical-path delay, EDP, pipelining registers). Drives `cascade
-//!   explore`; `cascade exp summary` reuses its persistent cache.
+//!   (critical-path delay, EDP, pipelining registers). `--shard K/N`
+//!   distributes a sweep across processes or machines via self-describing
+//!   shard manifests that `cascade explore-merge` validates and reassembles
+//!   into the identical single-process report. Drives `cascade explore`;
+//!   `cascade exp summary` reuses its persistent cache.
 //! * [`util`] — in-house substrates: deterministic PRNG, JSON writer,
 //!   mini property-testing framework, statistics helpers, micro-bench timer.
 

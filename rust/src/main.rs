@@ -7,8 +7,9 @@
 //! cascade explore [--apps a,b] [--levels l1,l2] [--alphas 1.0,1.35|sweep]
 //!                 [--seeds 1,2] [--iters 25,200] [--tracks 3,5] [--regwords 16,32]
 //!                 [--fifo 2,4] [--search grid|halving] [--eta N] [--min-budget N]
-//!                 [--objective knee|crit|edp|regs]
+//!                 [--objective knee|crit|edp|regs] [--shard K/N]
 //!                 [--threads N] [--power-cap MW] [--fast] [--tiny] [--no-cache]
+//! cascade explore-merge <dir>...                           merge shard runs into one report
 //! cascade arch                                             print architecture + timing model
 //! ```
 //!
@@ -30,6 +31,15 @@
 //! promoted up the budget ladder until the full budget — far fewer
 //! full-fidelity compiles on spaces where cheap budgets already separate
 //! winners.
+//!
+//! `--shard K/N` distributes either search across processes or machines:
+//! the shard evaluates only the points whose effective cache key it owns
+//! and writes `results/shard_K_of_N.json` (plus its `explore_cache/` and
+//! shard-tagged partial log) instead of the report. `cascade
+//! explore-merge <dir>...` then validates that the shard manifests cover
+//! the space under one spec fingerprint, unions the caches, concatenates
+//! the logs, and emits `results/explore.{md,json}` byte-identical to an
+//! unsharded run.
 
 use cascade::experiments;
 use cascade::explore::ExploreSpec;
@@ -46,10 +56,12 @@ fn usage() -> ! {
            explore [--apps a,b] [--levels l1,l2] [--alphas x,y|sweep] [--seeds 1,2]\n\
                    [--iters 25,200] [--tracks 3,5] [--regwords 16,32] [--fifo 2,4]\n\
                    [--search grid|halving] [--eta N] [--min-budget N]\n\
-                   [--objective knee|crit|edp|regs]\n\
+                   [--objective knee|crit|edp|regs] [--shard K/N]\n\
                    [--threads N] [--power-cap MW] [--fast] [--tiny]\n\
                    [--no-cache]                                design-space exploration\n\
-           arch                                                 architecture + timing model summary\n\
+           explore-merge <dir>...                               merge shard manifests + caches\n\
+                                                                into one results/explore report\n\
+           arch                                                 architecture + timing summary\n\
          levels: {}\n\
          apps: {}",
         PipelineConfig::LEVEL_NAMES.join(" "),
@@ -189,13 +201,40 @@ fn main() {
                     std::process::exit(2);
                 }
             };
+            let shard = match args.opt("shard").map(cascade::explore::ShardSpec::parse) {
+                None => None,
+                Some(Ok(s)) => Some(s),
+                Some(Err(e)) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+            };
             let threads = args.opt_usize("threads", default_threads());
             println!("building compile context (32x16 array, timing model)...");
             let ctx = CompileCtx::paper();
-            if let Err(e) =
-                cascade::explore::run_cli(&spec, &ctx, threads, !args.flag("no-cache"), &search)
-            {
+            if let Err(e) = cascade::explore::run_cli(
+                &spec,
+                &ctx,
+                threads,
+                !args.flag("no-cache"),
+                &search,
+                shard.as_ref(),
+            ) {
                 eprintln!("explore failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        "explore-merge" => {
+            let dirs: Vec<std::path::PathBuf> =
+                args.positionals[1..].iter().map(std::path::PathBuf::from).collect();
+            if dirs.is_empty() {
+                eprintln!("explore-merge: at least one shard directory required");
+                std::process::exit(2);
+            }
+            // No compile context: the merge re-derives keys from manifest
+            // specs and loads metrics from the unioned cache.
+            if let Err(e) = cascade::explore::merge_cli(&dirs) {
+                eprintln!("explore-merge failed: {e}");
                 std::process::exit(1);
             }
         }

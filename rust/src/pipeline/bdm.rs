@@ -207,8 +207,10 @@ mod tests {
     #[test]
     fn sparse_joins_not_balanced() {
         let mut g = Dfg::new();
-        let s1 = g.add_node(Op::Sparse(crate::dfg::ir::SparseOp::CrdScan { tensor: 0, mode: 0 }), "s1");
-        let s2 = g.add_node(Op::Sparse(crate::dfg::ir::SparseOp::CrdScan { tensor: 1, mode: 0 }), "s2");
+        let s1 =
+            g.add_node(Op::Sparse(crate::dfg::ir::SparseOp::CrdScan { tensor: 0, mode: 0 }), "s1");
+        let s2 =
+            g.add_node(Op::Sparse(crate::dfg::ir::SparseOp::CrdScan { tensor: 1, mode: 0 }), "s2");
         let alu = g.add_node(Op::Sparse(crate::dfg::ir::SparseOp::SpAlu(AluOp::Add)), "a");
         let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
         g.connect(s1, alu, 0);

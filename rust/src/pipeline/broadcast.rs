@@ -69,7 +69,10 @@ pub fn broadcast_pipelining(g: &mut Dfg, p: &BroadcastParams) -> usize {
                 if chunk.len() < 2 || inserted >= p.max_buffers_per_net {
                     continue;
                 }
-                let buf = g.add_node(Op::Alu { op: AluOp::Pass, const_b: None }, format!("bcast{src}_{inserted}"));
+                let buf = g.add_node(
+                    Op::Alu { op: AluOp::Pass, const_b: None },
+                    format!("bcast{src}_{inserted}"),
+                );
                 g.node_mut(buf).input_regs = true; // registered buffer stage
                 for &ei in chunk {
                     g.edges[ei].src = buf;
@@ -110,7 +113,8 @@ mod tests {
         let mut g = Dfg::new();
         let i = g.add_node(Op::Input { lane: 0 }, "in");
         for k in 0..n {
-            let a = g.add_node(Op::Alu { op: AluOp::Add, const_b: Some(k as i64) }, format!("a{k}"));
+            let a =
+                g.add_node(Op::Alu { op: AluOp::Add, const_b: Some(k as i64) }, format!("a{k}"));
             g.connect(i, a, 0);
             let o = g.add_node(Op::Output { lane: k as u16, decimate: 1 }, format!("o{k}"));
             g.connect(a, o, 0);
@@ -157,7 +161,10 @@ mod tests {
         assert_eq!(checked, 9);
         // At least one lane goes through a registered buffer.
         assert!(
-            g1.nodes.iter().enumerate().any(|(i, n)| matches!(n.op, Op::Output { .. }) && arr1[i] > 0)
+            g1.nodes
+                .iter()
+                .enumerate()
+                .any(|(i, n)| matches!(n.op, Op::Output { .. }) && arr1[i] > 0)
         );
     }
 

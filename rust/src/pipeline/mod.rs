@@ -274,12 +274,14 @@ fn compile_inner(
         region,
         ..PlaceParams::default()
     };
-    let mut design = place_and_route(&dfg, &arch, &ctx.graph, &ctx.lib, &pp, &RouteParams::default())
-        .map_err(CompileError::Route)?;
+    let mut design =
+        place_and_route(&dfg, &arch, &ctx.graph, &ctx.lib, &pp, &RouteParams::default())
+            .map_err(CompileError::Route)?;
     design.realize_registers(&ctx.graph);
 
     // Post-PnR pipelining.
-    let postpnr_report = cfg.postpnr.as_ref().map(|p| postpnr::postpnr_pipelining(&mut design, &ctx.graph, p));
+    let postpnr_report =
+        cfg.postpnr.as_ref().map(|p| postpnr::postpnr_pipelining(&mut design, &ctx.graph, p));
 
     // Round-2 schedule with post-pipelining latencies (§V-F).
     let sched2 = reschedule(&design.dfg, &sched1);

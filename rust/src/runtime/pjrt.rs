@@ -84,7 +84,13 @@ impl GoldenRuntime {
 
     /// Execute a 2-D-input i32 model: `f(i32[r, c]) -> i32[p, q]` (row
     /// major; output flattened).
-    pub fn run_i32_2d(&mut self, name: &str, input: &[i32], rows: usize, cols: usize) -> Result<Vec<i32>> {
+    pub fn run_i32_2d(
+        &mut self,
+        name: &str,
+        input: &[i32],
+        rows: usize,
+        cols: usize,
+    ) -> Result<Vec<i32>> {
         anyhow::ensure!(input.len() == rows * cols, "bad input length");
         let model = self.load(name)?;
         let x = xla::Literal::vec1(input).reshape(&[rows as i64, cols as i64])?;

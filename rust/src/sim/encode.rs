@@ -173,7 +173,8 @@ pub fn verify_roundtrip(
             for w in path.windows(2) {
                 let (a, b) = (graph.decode(w[0]), graph.decode(w[1]));
                 if let NodeKind::SbOut { side, track } = b.kind {
-                    let v = bs.get(arch, &cs, b.tile, Feature::SbSel { layer: b.layer, side, track });
+                    let v =
+                        bs.get(arch, &cs, b.tile, Feature::SbSel { layer: b.layer, side, track });
                     let decoded = crate::arch::bitstream::decode_sb_source(side, v);
                     let expect = match a.kind {
                         NodeKind::SbIn { side: s, .. } => SbSource::In { side: s },
@@ -181,7 +182,8 @@ pub fn verify_roundtrip(
                         _ => unreachable!(),
                     };
                     if decoded != expect {
-                        problems.push(format!("SbSel mismatch at {:?}: {decoded:?} != {expect:?}", b));
+                        problems
+                            .push(format!("SbSel mismatch at {:?}: {decoded:?} != {expect:?}", b));
                     }
                 } else if let NodeKind::CbIn { port } = b.kind {
                     let v = bs.get(arch, &cs, b.tile, Feature::CbSel { layer: b.layer, port });

@@ -137,7 +137,9 @@ impl<'a> SparseSim<'a> {
                         ActorState::Expand { pending: VecDeque::new() }
                     }
                 }
-                Op::Sparse(SparseOp::ValRead { .. }) => ActorState::Expand { pending: VecDeque::new() },
+                Op::Sparse(SparseOp::ValRead { .. }) => {
+                    ActorState::Expand { pending: VecDeque::new() }
+                }
                 Op::Sparse(SparseOp::Reduce) => ActorState::Reduce {
                     acc: vec![0; cfg.j_dim as usize],
                     pending: VecDeque::new(),
@@ -411,7 +413,9 @@ impl<'a> SparseSim<'a> {
                                 self.pop(n, 0);
                                 match h {
                                     Tok::Crd { .. } => {
-                                        if let ActorState::RepeatHold { held } = &mut self.state[n] {
+                                        if let ActorState::RepeatHold { held } =
+                                            &mut self.state[n]
+                                        {
                                             *held = Some(h);
                                         }
                                     }

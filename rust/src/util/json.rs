@@ -1,11 +1,12 @@
-//! Minimal JSON document model and serializer.
+//! Minimal JSON document model, serializer and parser.
 //!
 //! Experiment regenerators emit machine-readable JSON next to the
 //! human-readable markdown tables; this module is the (offline-environment)
-//! replacement for `serde_json`. Only what the toolkit needs is implemented:
-//! construction and pretty serialization. No parser is required because all
-//! configuration lives in typed Rust (`arch::params`) — the toolkit never
-//! reads JSON back.
+//! replacement for `serde_json`. Construction and serialization cover every
+//! report the toolkit writes; the parser exists for the one place the
+//! toolkit reads JSON back — `cascade explore-merge` consuming the
+//! self-describing shard manifests (`results/shard_K_of_N.json`) written by
+//! `cascade explore --shard K/N`.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -45,6 +46,73 @@ impl Json {
             _ => panic!("Json::push on non-array"),
         }
         self
+    }
+
+    /// Parse a JSON document. Strict: one value, no trailing content, no
+    /// comments. Errors carry the byte offset of the offending input.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(p.err("trailing characters after document"));
+        }
+        Ok(v)
+    }
+
+    /// Object member lookup; `None` on non-objects and absent keys.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Integral numbers only; `None` for negatives, fractions, and values
+    /// beyond f64's exact-integer range (large u64 keys travel as hex
+    /// strings for exactly this reason).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.trunc() == *x && *x < 9.0e15 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|v| v as usize)
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v.as_slice()),
+            _ => None,
+        }
     }
 
     /// Serialize compactly.
@@ -114,6 +182,209 @@ impl Json {
                 }
                 newline_indent(out, indent, level);
                 out.push('}');
+            }
+        }
+    }
+}
+
+/// Recursive-descent JSON parser over the input bytes. Byte-oriented
+/// scanning is safe because every structural delimiter is ASCII and the
+/// input arrived as `&str` (multibyte UTF-8 runs are copied verbatim).
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+/// Nesting bound: manifests are a few levels deep; anything beyond this is
+/// garbage and must not recurse the stack away.
+const MAX_DEPTH: usize = 128;
+
+impl Parser<'_> {
+    fn err(&self, msg: &str) -> String {
+        format!("json parse error at byte {}: {msg}", self.pos)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        match self.peek() {
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            Some(_) => Err(self.err("unexpected character")),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while matches!(self.peek(), Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii");
+        match text.parse::<f64>() {
+            Ok(x) if x.is_finite() => Ok(Json::Num(x)),
+            _ => Err(self.err(&format!("bad number '{text}'"))),
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let d = self.peek().and_then(|c| (c as char).to_digit(16));
+            match d {
+                Some(d) => {
+                    v = v * 16 + d;
+                    self.pos += 1;
+                }
+                None => return Err(self.err("bad \\u escape")),
+            }
+        }
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let e = self.peek().ok_or_else(|| self.err("unterminated escape"))?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let code = if (0xd800..0xdc00).contains(&hi) {
+                                // High surrogate: a \uXXXX low half must follow.
+                                if self.bytes[self.pos..].starts_with(b"\\u") {
+                                    self.pos += 2;
+                                    let lo = self.hex4()?;
+                                    if !(0xdc00..0xe000).contains(&lo) {
+                                        return Err(self.err("bad low surrogate"));
+                                    }
+                                    0x10000 + ((hi - 0xd800) << 10) + (lo - 0xdc00)
+                                } else {
+                                    return Err(self.err("lone high surrogate"));
+                                }
+                            } else {
+                                hi
+                            };
+                            match char::from_u32(code) {
+                                Some(c) => s.push(c),
+                                None => return Err(self.err("bad \\u codepoint")),
+                            }
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                }
+                Some(c) if c < 0x20 => return Err(self.err("control character in string")),
+                Some(_) => {
+                    // Raw run up to the next delimiter; splits only at ASCII
+                    // bytes, so the slice stays valid UTF-8.
+                    let start = self.pos;
+                    while matches!(self.peek(), Some(c) if c != b'"' && c != b'\\' && c >= 0x20) {
+                        self.pos += 1;
+                    }
+                    s.push_str(std::str::from_utf8(&self.bytes[start..self.pos]).expect("utf8"));
+                }
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            self.skip_ws();
+            v.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(v));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value(depth + 1)?;
+            m.insert(key, val);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(m));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
             }
         }
     }
@@ -232,5 +503,74 @@ mod tests {
     #[test]
     fn nan_becomes_null() {
         assert_eq!(Json::from(f64::NAN).to_string_compact(), "null");
+    }
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(Json::parse("3").unwrap(), Json::Num(3.0));
+        assert_eq!(Json::parse("-2.5e2").unwrap(), Json::Num(-250.0));
+        assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn parse_escapes_and_unicode() {
+        assert_eq!(
+            Json::parse("\"a\\\"b\\\\c\\nd\\u0041\"").unwrap(),
+            Json::Str("a\"b\\c\ndA".into())
+        );
+        // Multibyte passthrough and a surrogate pair.
+        assert_eq!(Json::parse("\"héllo\"").unwrap(), Json::Str("héllo".into()));
+        assert_eq!(Json::parse("\"\\ud83d\\ude00\"").unwrap(), Json::Str("😀".into()));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("tru").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("{\"a\":}").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("\"\\q\"").is_err());
+        assert!(Json::parse("\"\\ud83d\"").is_err(), "lone surrogate must be rejected");
+        let deep = "[".repeat(500) + &"]".repeat(500);
+        assert!(Json::parse(&deep).is_err(), "depth bound must hold");
+    }
+
+    #[test]
+    fn parse_round_trips_manifest_shaped_documents() {
+        let mut doc = Json::obj();
+        doc.set("shard", 1u64)
+            .set("of", 3u64)
+            .set("fingerprint", "00ab34ffcd120099")
+            .set("alphas", vec![1.0, 1.35])
+            .set("power_cap_mw", Json::Null)
+            .set("fast", true);
+        let mut pts = Json::Arr(vec![]);
+        let mut p = Json::obj();
+        p.set("id", 0u64).set("key", "deadbeef12345678").set("error", Json::Null);
+        pts.push(p);
+        doc.set("points", pts);
+        for text in [doc.to_string_compact(), doc.to_string_pretty()] {
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(back, doc);
+            assert_eq!(back.get("shard").and_then(Json::as_u64), Some(1));
+            assert_eq!(back.get("fingerprint").and_then(Json::as_str), Some("00ab34ffcd120099"));
+            assert!(back.get("power_cap_mw").unwrap().is_null());
+            assert_eq!(back.get("points").and_then(Json::as_arr).map(|a| a.len()), Some(1));
+        }
+    }
+
+    #[test]
+    fn accessors_reject_wrong_shapes() {
+        assert_eq!(Json::Null.get("x"), None);
+        assert_eq!(Json::from(1.5).as_u64(), None, "fractions are not integers");
+        assert_eq!(Json::from(-1.0).as_u64(), None);
+        assert_eq!(Json::from(true).as_f64(), None);
+        assert_eq!(Json::from("s").as_arr(), None);
+        assert_eq!(Json::from(3.0).as_usize(), Some(3));
     }
 }

@@ -5,7 +5,8 @@
 //! successive-halving search (grid agreement, budget savings, resume).
 
 use cascade::explore::{
-    report, runner, search, DiskCache, EvalSession, ExploreSpec, HalvingParams, PartialSink, Scale,
+    report, runner, search, shard, DiskCache, EvalSession, ExploreSpec, HalvingParams,
+    PartialSink, Scale, SearchKind, ShardSpec,
 };
 use cascade::pipeline::CompileCtx;
 
@@ -114,7 +115,7 @@ fn halving_agrees_with_grid_knee_with_fewer_full_budget_evals() {
         grid.results.iter().find(|r| r.point.id == grid_knee).unwrap(),
     );
 
-    let halved = search::run_halving(&spec, &ctx, 2, None, None, &params).unwrap();
+    let halved = search::run_halving(&spec, &ctx, 2, None, None, &params, None).unwrap();
     assert!(
         halved.full_budget_evals() < grid.results.len(),
         "halving must compile fewer full-budget points: {} vs {}",
@@ -146,8 +147,8 @@ fn halving_deterministic_across_thread_counts() {
     let ctx = CompileCtx::paper();
     let spec = tiny_spec();
     let params = HalvingParams { eta: 2, ..Default::default() };
-    let one = search::run_halving(&spec, &ctx, 1, None, None, &params).unwrap();
-    let four = search::run_halving(&spec, &ctx, 4, None, None, &params).unwrap();
+    let one = search::run_halving(&spec, &ctx, 1, None, None, &params, None).unwrap();
+    let four = search::run_halving(&spec, &ctx, 4, None, None, &params, None).unwrap();
     assert_eq!(one.rungs, four.rungs);
     assert_eq!(one.results.len(), four.results.len());
     for (a, b) in one.results.iter().zip(&four.results) {
@@ -189,7 +190,7 @@ fn halving_resumes_from_partial_rung_work() {
     // Re-run the full search against the same cache directory: every
     // evaluation is a disk hit, nothing recompiles.
     let dc = DiskCache::at(&dir);
-    let out = search::run_halving(&spec, &ctx, 2, Some(&dc), None, &params).unwrap();
+    let out = search::run_halving(&spec, &ctx, 2, Some(&dc), None, &params, None).unwrap();
     assert_eq!(out.stats.misses, 0, "resume must not recompile rung-0 work");
     assert_eq!(out.stats.disk_hits, out.total_evals());
     assert!(out.results.iter().all(|r| r.from_disk));
@@ -206,8 +207,8 @@ fn halving_streams_partial_results() {
     let path = std::env::temp_dir()
         .join(format!("cascade-halving-partial-{}.jsonl", std::process::id()));
     let _ = std::fs::remove_file(&path);
-    let sink = PartialSink::create(&path);
-    let out = search::run_halving(&spec, &ctx, 2, None, Some(&sink), &params).unwrap();
+    let sink = PartialSink::open(&path);
+    let out = search::run_halving(&spec, &ctx, 2, None, Some(&sink), &params, None).unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
     assert_eq!(text.lines().count(), out.total_evals());
     assert!(text.contains("\"rung\":0"));
@@ -228,4 +229,104 @@ fn power_cap_filters_frontier_points() {
     assert_eq!(analyses[0].capped.len(), out.results.len());
     let json = report::to_json(&spec, &out.results, &analyses).to_string_compact();
     assert_eq!(json.matches("\"capped\"").count(), 1);
+}
+
+/// The tentpole acceptance criterion: `--shard K/N` for N in {1, 3}
+/// followed by `explore-merge` reproduces the unsharded grid report —
+/// knee, frontier, markdown and JSON — byte for byte.
+#[test]
+fn sharded_grid_merge_is_bit_identical_to_unsharded() {
+    let ctx = CompileCtx::paper();
+    let spec = tiny_spec();
+    let root = std::env::temp_dir().join(format!("cascade-shard-grid-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+
+    // Reference: unsharded run through the shared render path.
+    let reference = runner::run(&spec, &ctx, 2, None);
+    let (ref_md, ref_json, ref_analyses) = report::render_report(&spec, &reference.results, None);
+    assert!(ref_analyses[0].knee.is_some());
+
+    for n in [1usize, 3] {
+        let mut owned_total = 0;
+        let dirs: Vec<std::path::PathBuf> = (1..=n)
+            .map(|k| {
+                let dir = root.join(format!("grid-{n}-{k}"));
+                let sh = ShardSpec { index: k, count: n };
+                let out =
+                    shard::run_sharded(&spec, &ctx, 2, &SearchKind::Grid, &sh, &dir).unwrap();
+                assert_eq!(out.manifest.points_total, spec.points().len());
+                assert!(dir.join(sh.manifest_name()).is_file());
+                owned_total += out.manifest.points.len();
+                dir
+            })
+            .collect();
+        assert_eq!(owned_total, spec.points().len(), "shards must partition the space");
+
+        let out_dir = root.join(format!("grid-merged-{n}"));
+        let merged = shard::merge(&dirs, &ctx.arch, &out_dir).unwrap();
+        assert_eq!(merged.shards, n);
+        let (md, json, _) = report::render_report(&merged.spec, &merged.results, None);
+        assert_eq!(md, ref_md, "N={n}: merged markdown must be byte-identical");
+        assert_eq!(
+            json.to_string_pretty(),
+            ref_json.to_string_pretty(),
+            "N={n}: merged JSON must be byte-identical"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Sharded successive halving: lower rungs replay deterministically on
+/// every shard, the top rung is partitioned, and the merged report (knee,
+/// trajectory and all) is byte-identical to the single-process search.
+#[test]
+fn sharded_halving_merge_matches_unsharded_report() {
+    let ctx = CompileCtx::paper();
+    let spec = tiny_spec();
+    let params = HalvingParams { eta: 2, ..Default::default() };
+    let root = std::env::temp_dir().join(format!("cascade-shard-halving-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+
+    let reference = search::run_halving(&spec, &ctx, 2, None, None, &params, None).unwrap();
+    let (ref_md, ref_json, _) = report::render_report(
+        &spec,
+        &reference.results,
+        Some((&params, reference.rungs.as_slice())),
+    );
+
+    let n = 3;
+    let search_kind = SearchKind::Halving(params.clone());
+    let mut owned_total = 0;
+    let dirs: Vec<std::path::PathBuf> = (1..=n)
+        .map(|k| {
+            let dir = root.join(format!("halving-{k}"));
+            let sh = ShardSpec { index: k, count: n };
+            let out = shard::run_sharded(&spec, &ctx, 2, &search_kind, &sh, &dir).unwrap();
+            // Every shard independently derives the same global outcome.
+            assert_eq!(out.manifest.rungs.as_deref(), Some(reference.rungs.as_slice()));
+            assert_eq!(
+                out.manifest.survivor_ids.as_deref().unwrap(),
+                reference.results.iter().map(|r| r.point.id).collect::<Vec<_>>().as_slice()
+            );
+            owned_total += out.manifest.points.len();
+            dir
+        })
+        .collect();
+    assert_eq!(owned_total, reference.results.len(), "top rung must partition the survivors");
+
+    let out_dir = root.join("merged");
+    let merged = shard::merge(&dirs, &ctx.arch, &out_dir).unwrap();
+    let trajectory = merged.trajectory.as_ref().map(|(p, r)| (p, r.as_slice()));
+    let (md, json, analyses) = report::render_report(&merged.spec, &merged.results, trajectory);
+    assert_eq!(md, ref_md, "merged halving markdown must be byte-identical");
+    assert_eq!(json.to_string_pretty(), ref_json.to_string_pretty());
+    assert!(analyses[0].knee.is_some(), "merged run must still produce a knee point");
+
+    // The merged partial log concatenates every shard's journal with
+    // shard tags intact; lower rungs appear once per shard by design.
+    let log = std::fs::read_to_string(out_dir.join("explore_partial.jsonl")).unwrap();
+    for k in 1..=n {
+        assert!(log.contains(&format!("\"shard\":\"{k}/{n}\"")), "missing shard {k} lines");
+    }
+    let _ = std::fs::remove_dir_all(&root);
 }

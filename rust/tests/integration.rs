@@ -68,27 +68,47 @@ fn gaussian_all_levels_preserve_function() {
 
 #[test]
 fn camera_full_preserves_function() {
-    assert_function_preserved(cascade::apps::dense::camera(64, 16, 1), &PipelineConfig::with_postpnr(), 5);
+    assert_function_preserved(
+        cascade::apps::dense::camera(64, 16, 1),
+        &PipelineConfig::with_postpnr(),
+        5,
+    );
 }
 
 #[test]
 fn unsharp_full_preserves_function() {
-    assert_function_preserved(cascade::apps::dense::unsharp(64, 16, 1), &PipelineConfig::with_postpnr(), 7);
+    assert_function_preserved(
+        cascade::apps::dense::unsharp(64, 16, 1),
+        &PipelineConfig::with_postpnr(),
+        7,
+    );
 }
 
 #[test]
 fn harris_full_preserves_function() {
-    assert_function_preserved(cascade::apps::dense::harris(64, 16, 1), &PipelineConfig::with_postpnr(), 9);
+    assert_function_preserved(
+        cascade::apps::dense::harris(64, 16, 1),
+        &PipelineConfig::with_postpnr(),
+        9,
+    );
 }
 
 #[test]
 fn multilane_app_preserves_function() {
-    assert_function_preserved(cascade::apps::dense::gaussian(128, 16, 2), &PipelineConfig::with_postpnr(), 11);
+    assert_function_preserved(
+        cascade::apps::dense::gaussian(128, 16, 2),
+        &PipelineConfig::with_postpnr(),
+        11,
+    );
 }
 
 #[test]
 fn hardened_flush_preserves_function() {
-    assert_function_preserved(cascade::apps::dense::gaussian(64, 16, 1), &PipelineConfig::full(), 13);
+    assert_function_preserved(
+        cascade::apps::dense::gaussian(64, 16, 1),
+        &PipelineConfig::full(),
+        13,
+    );
 }
 
 #[test]
