@@ -257,6 +257,42 @@ impl Bitstream {
         })
     }
 
+    /// Canonical text serialization: one `addr data` pair per line, both
+    /// zero-padded hex, in ascending address order. Deterministic (the
+    /// word map is ordered), so two encodings of the same design are
+    /// byte-identical — the property `cascade encode --from-cache` is
+    /// checked against.
+    pub fn to_text(&self) -> String {
+        let mut s = String::with_capacity(self.words.len() * 26);
+        for (&a, &d) in &self.words {
+            s.push_str(&format!("{a:016x} {d:08x}\n"));
+        }
+        s
+    }
+
+    /// Parse [`Self::to_text`] output. Rejects malformed lines and
+    /// zero-valued words (a stored zero would silently differ from the
+    /// reset-implies-absent encoding `set` maintains).
+    pub fn from_text(text: &str) -> Result<Bitstream, String> {
+        let mut words = BTreeMap::new();
+        for (i, line) in text.lines().enumerate() {
+            let (a, d) = line
+                .split_once(' ')
+                .ok_or_else(|| format!("bitstream line {}: missing separator", i + 1))?;
+            let addr = u64::from_str_radix(a, 16)
+                .map_err(|_| format!("bitstream line {}: bad address '{a}'", i + 1))?;
+            let data = u32::from_str_radix(d, 16)
+                .map_err(|_| format!("bitstream line {}: bad data '{d}'", i + 1))?;
+            if data == 0 {
+                return Err(format!("bitstream line {}: zero word stored", i + 1));
+            }
+            if words.insert(addr, data).is_some() {
+                return Err(format!("bitstream line {}: duplicate address", i + 1));
+            }
+        }
+        Ok(Bitstream { words })
+    }
+
     /// Copy the configuration of a rectangular region to another origin —
     /// the bitstream-level primitive behind low unrolling duplication
     /// (§V-E): PnR one unroll, then stamp its configuration across the
@@ -403,6 +439,28 @@ mod tests {
         bs.set(&p, &cs, TileCoord::new(0, 1), Feature::PeOp, 1);
         // Offset of 3 columns maps PE column 0 onto MEM column 3.
         bs.duplicate_region(&p, &cs, TileCoord::new(0, 1), (1, 1), TileCoord::new(3, 1));
+    }
+
+    #[test]
+    fn text_serialization_round_trips_and_rejects_garbage() {
+        let (p, cs) = setup();
+        let mut bs = Bitstream::new();
+        bs.set(&p, &cs, TileCoord::new(5, 3), Feature::PeOp, 7);
+        bs.set(&p, &cs, TileCoord::new(0, 1), Feature::PeConst, 0xFFFF);
+        bs.set(&p, &cs, TileCoord::new(8, 2), Feature::PeInRegEn { port: 1 }, 1);
+        let text = bs.to_text();
+        assert_eq!(text.lines().count(), 3);
+        let back = Bitstream::from_text(&text).unwrap();
+        assert_eq!(back.to_text(), text, "text form must round-trip byte-identically");
+        assert_eq!(back.get(&p, &cs, TileCoord::new(5, 3), Feature::PeOp), 7);
+        assert!(Bitstream::from_text("not hex\n").is_err());
+        assert!(Bitstream::from_text("0123\n").is_err());
+        assert!(Bitstream::from_text("0000000000000001 00000000\n").is_err(), "zero word");
+        assert!(
+            Bitstream::from_text("0000000000000001 1\n0000000000000001 2\n").is_err(),
+            "duplicate address"
+        );
+        assert_eq!(Bitstream::from_text("").unwrap().len(), 0);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 use crate::pipeline::{CompileCtx, PipelineConfig};
 use crate::util::json::Json;
 
-use super::common::{dense_crit_edp, emit, md_table, measure_sparse};
+use super::common::{dense_crit_edp, emit, md_table, measure_sparse_cached};
 
 pub fn run(ctx: &CompileCtx, fast: bool, seed: u64, use_cache: bool) -> Result<(), String> {
     let mut rows = Vec::new();
@@ -39,9 +39,14 @@ pub fn run(ctx: &CompileCtx, fast: bool, seed: u64, use_cache: bool) -> Result<(
     let mut sparse_cp = Vec::new();
     let mut sparse_edp = Vec::new();
     for app in crate::apps::paper_sparse_suite() {
+        // Like the dense rows, served from the explore cache when a prior
+        // run already compiled the point: the persisted artifact (and its
+        // recorded cycle count) replaces both the compile and the
+        // functional simulation.
         let ladder = PipelineConfig::sparse_ladder();
-        let first = measure_sparse(&app, &ladder[0].1, ctx, fast, seed)?;
-        let last = measure_sparse(&app, &ladder.last().unwrap().1, ctx, fast, seed)?;
+        let first = measure_sparse_cached(&app, &ladder[0].1, ctx, fast, seed, use_cache)?;
+        let last =
+            measure_sparse_cached(&app, &ladder.last().unwrap().1, ctx, fast, seed, use_cache)?;
         let cp = first.crit_ns / last.crit_ns;
         let edp = first.edp() / last.edp();
         sparse_cp.push(cp);

@@ -1,0 +1,1292 @@
+//! Persistent compiled-artifact store with bounded, pinning-aware eviction.
+//!
+//! The metrics cache ([`super::cache::DiskCache`]) remembers what a point
+//! *measured*; this module remembers what a point *compiled*. Every
+//! [`Compiled`] artifact — placement, route trees, enabled pipelining
+//! registers, register-file delays, schedule, STA result: everything
+//! [`super::cache::fingerprint`] hashes — serializes to one JSON document
+//! (`results/explore_cache/artifacts/<key>.art`) and round-trips exactly:
+//! [`from_bytes`]`(`[`to_bytes`]`(c))` rebuilds a `Compiled` whose
+//! fingerprint is bit-identical to the original's. That turns the explorer
+//! into a build system: bitstream encoding (`cascade encode --from-cache`),
+//! simulation re-runs (`cascade exp summary`) and resumed or sharded
+//! sweeps all rehydrate the stored artifact instead of recompiling.
+//!
+//! Reconstruction re-derives what is cheap and deterministic rather than
+//! storing it, always from the *stored design architecture* — the same
+//! (possibly flush-hardened) arch the compile flow itself used. That
+//! matters for [`build_nets`], which omits the flush net when
+//! `hardened_flush` is set: deriving nets from the compile context's base
+//! arch instead would shift net ids under the stored routes. The delay
+//! library comes back through [`DelayLib::generate`], which genuinely
+//! depends only on the structural parameters. Everything else — DFG,
+//! placement, routes, register state, schedule, STA, reports — is stored
+//! verbatim.
+//!
+//! Integrity is checked twice, not trusted: [`from_bytes`] first verifies
+//! a whole-document checksum (`check`, FNV-1a over the canonical bytes —
+//! covers every field, including ones the artifact fingerprint does not
+//! hash, like ALU opcodes, constants and architecture parameters), then
+//! recomputes the artifact fingerprint of the rebuilt `Compiled` against
+//! the embedded `fp`. A torn write, stale format or hand-edited content
+//! fails one of the two. Callers that know the expected fingerprint (from
+//! the metrics record) pass it to [`ArtifactStore::load`] for an
+//! end-to-end check; a rejected file is simply recompiled.
+//!
+//! The store is *bounded*: an append-only access journal (`atime.log`)
+//! gives LRU order, a `pins` file marks artifacts that survive any GC
+//! (Pareto-frontier and knee points get pinned after every report), and
+//! [`ArtifactStore::gc`] evicts unpinned artifacts oldest-first until the
+//! store fits a [`CacheCap`] (`--cache-cap` on the CLI, `cascade cache
+//! gc|stat` standalone). See `docs/cache.md` for the on-disk formats.
+//!
+//! ```
+//! use cascade::explore::artifact::CacheCap;
+//!
+//! // Byte budgets take K/M/G suffixes; `<N>n` caps the entry count.
+//! assert_eq!(CacheCap::parse("8M").unwrap(), CacheCap::bytes(8 << 20));
+//! assert_eq!(CacheCap::parse("200n").unwrap(), CacheCap::entries(200));
+//! assert!(!CacheCap::entries(4).admits(5, 0));
+//! ```
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::arch::canal::Layer;
+use crate::arch::delay::{DelayLib, DelayModelParams};
+use crate::arch::params::{ArchParams, TileCoord};
+use crate::dfg::ir::{AluOp, Dfg, Edge, Node, Op, SparseOp};
+use crate::map::MapReport;
+use crate::pipeline::{Compiled, DupPlan, PostPnrReport};
+use crate::pnr::route::NetRoute;
+use crate::pnr::{build_nets, Placement, RoutedDesign};
+use crate::schedule::{MemSchedule, Schedule, WorkloadShape};
+use crate::timing::{CritPath, Segment, SegmentEnd};
+use crate::util::json::Json;
+
+use super::cache::{fingerprint, fnv1a};
+
+/// On-disk artifact format version ([`to_bytes`] writes it, [`from_bytes`]
+/// requires it).
+pub const ART_FORMAT: u64 = 1;
+
+/// How old an orphaned `.tmp` file must be before [`ArtifactStore::gc`]
+/// sweeps it. Generous relative to any single compile, so a concurrent
+/// writer's in-flight temp file is never mistaken for a leftover.
+pub const TMP_GRACE: std::time::Duration = std::time::Duration::from_secs(600);
+
+// ---------------------------------------------------------------------------
+// Serialization: Compiled -> JSON
+// ---------------------------------------------------------------------------
+
+fn tile_json(t: TileCoord) -> Json {
+    Json::Arr(vec![Json::from(t.x as u64), Json::from(t.y as u64)])
+}
+
+/// Exact-integer bound shared with [`Json::as_i64`] (one constant,
+/// [`crate::util::json::EXACT_INT_BOUND`], decides both encodability and
+/// decodability): JSON numbers are f64, so signed values beyond it travel
+/// as decimal strings instead of being silently truncated (the 16-bit
+/// target never produces such constants, but lossy serialization is not
+/// an acceptable failure mode).
+const I64_EXACT: i64 = crate::util::json::EXACT_INT_BOUND;
+
+fn i64_json(v: i64) -> Json {
+    if v > -I64_EXACT && v < I64_EXACT {
+        Json::from(v)
+    } else {
+        Json::Str(v.to_string())
+    }
+}
+
+fn i64_from(j: &Json, what: &str) -> Result<i64, String> {
+    if let Some(v) = j.as_i64() {
+        return Ok(v);
+    }
+    j.as_str()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| format!("artifact: bad {what}"))
+}
+
+fn arch_json(a: &ArchParams) -> Json {
+    let mut j = Json::obj();
+    j.set("rows", a.rows)
+        .set("cols", a.cols)
+        .set("mem_col_period", a.mem_col_period)
+        .set("tracks", a.tracks)
+        .set("data_in_ports", a.data_in_ports)
+        .set("data_out_ports", a.data_out_ports)
+        .set("bit_in_ports", a.bit_in_ports)
+        .set("bit_out_ports", a.bit_out_ports)
+        .set("regfile_words", a.regfile_words)
+        .set("fifo_depth", a.fifo_depth)
+        .set("hardened_flush", a.hardened_flush);
+    j
+}
+
+fn node_json(n: &Node) -> Json {
+    let mut j = Json::obj();
+    j.set("name", n.name.as_str());
+    if n.input_regs {
+        j.set("ir", true);
+    }
+    match &n.op {
+        Op::Input { lane } => {
+            j.set("op", "input").set("lane", *lane as u64);
+        }
+        Op::Output { lane, decimate } => {
+            j.set("op", "output").set("lane", *lane as u64).set("dec", *decimate);
+        }
+        Op::Const { value } => {
+            j.set("op", "const").set("value", i64_json(*value));
+        }
+        Op::Alu { op, const_b } => {
+            j.set("op", "alu").set("alu", op.encode());
+            if let Some(c) = const_b {
+                j.set("cb", i64_json(*c));
+            }
+        }
+        Op::Delay { cycles, pipelined } => {
+            j.set("op", "delay").set("cycles", *cycles).set("pipelined", *pipelined);
+        }
+        Op::Rom { values } => {
+            j.set("op", "rom")
+                .set("values", values.iter().map(|&v| i64_json(v)).collect::<Vec<Json>>());
+        }
+        Op::Accum { period } => {
+            j.set("op", "accum").set("period", *period);
+        }
+        Op::FlushSrc => {
+            j.set("op", "flush");
+        }
+        Op::Sparse(s) => {
+            j.set("op", "sparse");
+            match s {
+                SparseOp::CrdScan { tensor, mode } => {
+                    j.set("kind", "crdscan")
+                        .set("tensor", *tensor as u64)
+                        .set("mode", *mode as u64);
+                }
+                SparseOp::ValRead { tensor } => {
+                    j.set("kind", "valread").set("tensor", *tensor as u64);
+                }
+                SparseOp::Intersect => {
+                    j.set("kind", "intersect");
+                }
+                SparseOp::Union => {
+                    j.set("kind", "union");
+                }
+                SparseOp::SpAlu(a) => {
+                    j.set("kind", "spalu").set("alu", a.encode());
+                }
+                SparseOp::Reduce => {
+                    j.set("kind", "reduce");
+                }
+                SparseOp::Repeat => {
+                    j.set("kind", "repeat");
+                }
+            }
+        }
+    }
+    j
+}
+
+fn segment_json(s: &Segment) -> Json {
+    let mut j = Json::obj();
+    j.set("delay_ps", s.delay_ps)
+        .set("start", tile_json(s.start_tile))
+        .set("end", tile_json(s.end_tile))
+        .set("nodes", s.nodes.iter().map(|&n| Json::from(n as u64)).collect::<Vec<Json>>());
+    let mut end = Json::obj();
+    match &s.end {
+        SegmentEnd::SbReg => {
+            end.set("t", "sbreg");
+        }
+        SegmentEnd::NodeInput { node } => {
+            end.set("t", "in").set("node", *node);
+        }
+        SegmentEnd::NodeCore { node } => {
+            end.set("t", "core").set("node", *node);
+        }
+    }
+    j.set("end_kind", end);
+    j
+}
+
+/// Serialize a compiled artifact to its canonical JSON document. The
+/// embedded `fp` is the artifact fingerprint at serialization time;
+/// [`from_json`] recomputes it on the rebuilt artifact and rejects any
+/// mismatch.
+pub fn to_json(c: &Compiled) -> Json {
+    let d = &c.design;
+    let mut j = Json::obj();
+    j.set("format", ART_FORMAT)
+        .set("fp", format!("{:016x}", fingerprint(c)))
+        .set("arch", arch_json(&d.arch));
+
+    let mut nodes = Json::Arr(vec![]);
+    for n in &d.dfg.nodes {
+        nodes.push(node_json(n));
+    }
+    let mut edges = Json::Arr(vec![]);
+    for e in &d.dfg.edges {
+        edges.push(Json::Arr(vec![
+            Json::from(e.src as u64),
+            Json::from(e.dst as u64),
+            Json::from(e.dst_port as u64),
+            Json::from(e.layer.index() as u64),
+            Json::from(e.regs),
+            Json::from(e.fifos),
+        ]));
+    }
+    let mut dfg = Json::obj();
+    dfg.set("nodes", nodes).set("edges", edges);
+    j.set("dfg", dfg);
+
+    let mut placement = Json::obj();
+    placement
+        .set("pos", d.placement.pos.iter().map(|&t| tile_json(t)).collect::<Vec<Json>>())
+        .set("slot", d.placement.slot.iter().map(|&s| Json::from(s as u64)).collect::<Vec<Json>>())
+        .set("cost", d.placement.cost);
+    j.set("placement", placement);
+
+    let mut routes = Json::Arr(vec![]);
+    for r in &d.routes {
+        let mut o = Json::obj();
+        o.set("net", r.net);
+        let mut paths = Json::Arr(vec![]);
+        for p in &r.sink_paths {
+            paths.push(p.iter().map(|&n| Json::from(n as u64)).collect::<Vec<Json>>());
+        }
+        o.set("paths", paths);
+        routes.push(o);
+    }
+    j.set("routes", routes);
+
+    let mut sb: Vec<u64> = d.sb_regs.iter().map(|&r| r as u64).collect();
+    sb.sort_unstable();
+    j.set("sb_regs", sb);
+    let mut pinned: Vec<u64> = d.pinned_regs.iter().map(|&r| r as u64).collect();
+    pinned.sort_unstable();
+    j.set("pinned_regs", pinned);
+    let mut rf: Vec<(u64, u64)> =
+        d.rf_delay.iter().map(|(&e, &v)| (e as u64, v as u64)).collect();
+    rf.sort_unstable();
+    j.set(
+        "rf_delay",
+        rf.iter()
+            .map(|&(e, v)| Json::Arr(vec![Json::from(e), Json::from(v)]))
+            .collect::<Vec<Json>>(),
+    );
+
+    let mut sta = Json::obj();
+    sta.set("period_ps", c.sta.period_ps)
+        .set("fmax_mhz", c.sta.fmax_mhz)
+        .set("num_segments", c.sta.num_segments)
+        .set("segment", segment_json(&c.sta.segment));
+    j.set("sta", sta);
+
+    let mut shape = Json::obj();
+    shape
+        .set("frame_w", c.schedule.shape.frame_w)
+        .set("frame_h", c.schedule.shape.frame_h)
+        .set("unroll", c.schedule.shape.unroll)
+        .set("time_mult", c.schedule.shape.time_mult);
+    let mut mem = Json::Arr(vec![]);
+    for (&node, ms) in &c.schedule.mem_params {
+        let mut o = Json::obj();
+        o.set("node", node)
+            .set("extents", ms.extents.clone())
+            .set("strides", ms.strides.iter().map(|&s| Json::from(s as i64)).collect::<Vec<Json>>())
+            .set("off", ms.start_offset);
+        mem.push(o);
+    }
+    let mut sched = Json::obj();
+    sched
+        .set("total_cycles", c.schedule.total_cycles)
+        .set("fill_latency", c.schedule.fill_latency)
+        .set("shape", shape)
+        .set("mem", mem);
+    j.set("schedule", sched);
+
+    let mut map = Json::obj();
+    map.set("consts_folded", c.map_report.consts_folded)
+        .set("muls_reduced", c.map_report.muls_reduced)
+        .set("pe_used", c.map_report.pe_used)
+        .set("mem_used", c.map_report.mem_used)
+        .set("io_used", c.map_report.io_used)
+        .set("pe_capacity", c.map_report.pe_capacity)
+        .set("mem_capacity", c.map_report.mem_capacity)
+        .set("io_capacity", c.map_report.io_capacity);
+    j.set("map_report", map);
+
+    j.set("pes_pipelined", c.pes_pipelined)
+        .set("bdm_regs", c.bdm_regs)
+        .set("bcast_buffers", c.bcast_buffers);
+    match &c.postpnr {
+        None => {
+            j.set("postpnr", Json::Null);
+        }
+        Some(p) => {
+            let mut o = Json::obj();
+            o.set("iters", p.iters)
+                .set("regs_enabled", p.regs_enabled)
+                .set("period_before_ps", p.period_before_ps)
+                .set("period_after_ps", p.period_after_ps);
+            j.set("postpnr", o);
+        }
+    }
+    match &c.dup {
+        None => {
+            j.set("dup", Json::Null);
+        }
+        Some(p) => {
+            let mut o = Json::obj();
+            o.set("region_cols", p.region_cols)
+                .set("copies", p.copies)
+                .set("lanes_per_copy", p.lanes_per_copy);
+            j.set("dup", o);
+        }
+    }
+    j
+}
+
+/// Canonical on-disk bytes: compact JSON plus a trailing newline, with a
+/// whole-document checksum (`check` = FNV-1a over the document serialized
+/// *without* the `check` member). The artifact fingerprint only hashes
+/// what downstream consumers observe structurally; the checksum covers
+/// every byte — opcodes, constants, architecture parameters, schedule
+/// data — so corruption anywhere is detected on load. The encoding is
+/// deterministic (ordered keys, shortest-round-trip floats), so two
+/// serializations of the same deterministic compile are byte-identical —
+/// what lets `explore-merge` byte-compare conflicting store entries.
+pub fn to_bytes(c: &Compiled) -> Vec<u8> {
+    let mut j = to_json(c);
+    let check = fnv1a(j.to_string_compact().as_bytes());
+    j.set("check", format!("{check:016x}"));
+    let mut s = j.to_string_compact();
+    s.push('\n');
+    s.into_bytes()
+}
+
+// ---------------------------------------------------------------------------
+// Deserialization: JSON -> Compiled
+// ---------------------------------------------------------------------------
+
+fn get<'a>(j: &'a Json, k: &str) -> Result<&'a Json, String> {
+    j.get(k).ok_or_else(|| format!("artifact: missing '{k}'"))
+}
+
+fn req_u64(j: &Json, k: &str) -> Result<u64, String> {
+    get(j, k)?.as_u64().ok_or_else(|| format!("artifact: bad '{k}'"))
+}
+
+fn req_usize(j: &Json, k: &str) -> Result<usize, String> {
+    get(j, k)?.as_usize().ok_or_else(|| format!("artifact: bad '{k}'"))
+}
+
+fn req_f64(j: &Json, k: &str) -> Result<f64, String> {
+    get(j, k)?.as_f64().ok_or_else(|| format!("artifact: bad '{k}'"))
+}
+
+fn req_bool(j: &Json, k: &str) -> Result<bool, String> {
+    get(j, k)?.as_bool().ok_or_else(|| format!("artifact: bad '{k}'"))
+}
+
+fn req_arr<'a>(j: &'a Json, k: &str) -> Result<&'a [Json], String> {
+    get(j, k)?.as_arr().ok_or_else(|| format!("artifact: bad '{k}'"))
+}
+
+fn req_str<'a>(j: &'a Json, k: &str) -> Result<&'a str, String> {
+    get(j, k)?.as_str().ok_or_else(|| format!("artifact: bad '{k}'"))
+}
+
+fn u32s(arr: &[Json], what: &str) -> Result<Vec<u32>, String> {
+    arr.iter()
+        .map(|v| {
+            v.as_u64()
+                .filter(|&x| x <= u32::MAX as u64)
+                .map(|x| x as u32)
+                .ok_or_else(|| format!("artifact: bad {what} entry"))
+        })
+        .collect()
+}
+
+fn tile_from(j: &Json, what: &str) -> Result<TileCoord, String> {
+    let a = j.as_arr().filter(|a| a.len() == 2).ok_or_else(|| format!("artifact: bad {what}"))?;
+    let x = a[0].as_usize().ok_or_else(|| format!("artifact: bad {what} x"))?;
+    let y = a[1].as_usize().ok_or_else(|| format!("artifact: bad {what} y"))?;
+    Ok(TileCoord::new(x, y))
+}
+
+fn arch_from(j: &Json) -> Result<ArchParams, String> {
+    Ok(ArchParams {
+        rows: req_usize(j, "rows")?,
+        cols: req_usize(j, "cols")?,
+        mem_col_period: req_usize(j, "mem_col_period")?,
+        tracks: req_usize(j, "tracks")?,
+        data_in_ports: req_usize(j, "data_in_ports")?,
+        data_out_ports: req_usize(j, "data_out_ports")?,
+        bit_in_ports: req_usize(j, "bit_in_ports")?,
+        bit_out_ports: req_usize(j, "bit_out_ports")?,
+        regfile_words: req_usize(j, "regfile_words")?,
+        fifo_depth: req_usize(j, "fifo_depth")?,
+        hardened_flush: req_bool(j, "hardened_flush")?,
+    })
+}
+
+fn node_from(j: &Json) -> Result<Node, String> {
+    let alu = |key: &str| -> Result<AluOp, String> {
+        let code = req_u64(j, key)?;
+        AluOp::decode(code as u32).ok_or_else(|| format!("artifact: bad alu op {code}"))
+    };
+    let op = match req_str(j, "op")? {
+        "input" => Op::Input { lane: req_u64(j, "lane")? as u16 },
+        "output" => {
+            Op::Output { lane: req_u64(j, "lane")? as u16, decimate: req_u64(j, "dec")? as u32 }
+        }
+        "const" => Op::Const { value: i64_from(get(j, "value")?, "'value'")? },
+        "alu" => {
+            let const_b = match j.get("cb") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(i64_from(v, "'cb'")?),
+            };
+            Op::Alu { op: alu("alu")?, const_b }
+        }
+        "delay" => Op::Delay {
+            cycles: req_u64(j, "cycles")? as u32,
+            pipelined: req_bool(j, "pipelined")?,
+        },
+        "rom" => {
+            let values = req_arr(j, "values")?
+                .iter()
+                .map(|v| i64_from(v, "rom value"))
+                .collect::<Result<Vec<i64>, String>>()?;
+            Op::Rom { values }
+        }
+        "accum" => Op::Accum { period: req_u64(j, "period")? as u32 },
+        "flush" => Op::FlushSrc,
+        "sparse" => Op::Sparse(match req_str(j, "kind")? {
+            "crdscan" => SparseOp::CrdScan {
+                tensor: req_u64(j, "tensor")? as u8,
+                mode: req_u64(j, "mode")? as u8,
+            },
+            "valread" => SparseOp::ValRead { tensor: req_u64(j, "tensor")? as u8 },
+            "intersect" => SparseOp::Intersect,
+            "union" => SparseOp::Union,
+            "spalu" => SparseOp::SpAlu(alu("alu")?),
+            "reduce" => SparseOp::Reduce,
+            "repeat" => SparseOp::Repeat,
+            other => return Err(format!("artifact: unknown sparse kind '{other}'")),
+        }),
+        other => return Err(format!("artifact: unknown op '{other}'")),
+    };
+    Ok(Node {
+        op,
+        name: req_str(j, "name")?.to_string(),
+        input_regs: j.get("ir").and_then(Json::as_bool).unwrap_or(false),
+    })
+}
+
+fn segment_from(j: &Json) -> Result<Segment, String> {
+    let ek = get(j, "end_kind")?;
+    let end = match req_str(ek, "t")? {
+        "sbreg" => SegmentEnd::SbReg,
+        "in" => SegmentEnd::NodeInput { node: req_u64(ek, "node")? as u32 },
+        "core" => SegmentEnd::NodeCore { node: req_u64(ek, "node")? as u32 },
+        other => return Err(format!("artifact: unknown segment end '{other}'")),
+    };
+    Ok(Segment {
+        delay_ps: req_f64(j, "delay_ps")?,
+        start_tile: tile_from(get(j, "start")?, "segment start")?,
+        end_tile: tile_from(get(j, "end")?, "segment end")?,
+        nodes: u32s(req_arr(j, "nodes")?, "segment nodes")?,
+        end,
+    })
+}
+
+/// Rebuild a [`Compiled`] from its [`to_json`] image, then verify the
+/// embedded fingerprint against the rebuilt artifact. Any structural
+/// damage either fails a parse step or changes the recomputed fingerprint;
+/// both reject the document instead of returning a corrupt artifact.
+pub fn from_json(j: &Json) -> Result<Compiled, String> {
+    let format = req_u64(j, "format")?;
+    if format != ART_FORMAT {
+        return Err(format!("artifact: unsupported format {format}"));
+    }
+    let fp_hex = req_str(j, "fp")?;
+    let fp = u64::from_str_radix(fp_hex, 16)
+        .map_err(|_| format!("artifact: bad fingerprint '{fp_hex}'"))?;
+
+    let arch = arch_from(get(j, "arch")?)?;
+
+    let jdfg = get(j, "dfg")?;
+    let mut dfg = Dfg::new();
+    for n in req_arr(jdfg, "nodes")? {
+        dfg.nodes.push(node_from(n)?);
+    }
+    let nnodes = dfg.nodes.len() as u64;
+    for e in req_arr(jdfg, "edges")? {
+        let a = e.as_arr().filter(|a| a.len() == 6).ok_or("artifact: bad edge")?;
+        let num = |i: usize| a[i].as_u64().ok_or_else(|| "artifact: bad edge field".to_string());
+        let (src, dst) = (num(0)?, num(1)?);
+        if src >= nnodes || dst >= nnodes {
+            return Err("artifact: edge references missing node".into());
+        }
+        dfg.edges.push(Edge {
+            src: src as u32,
+            dst: dst as u32,
+            dst_port: num(2)? as u8,
+            layer: match num(3)? {
+                0 => Layer::B16,
+                1 => Layer::B1,
+                other => return Err(format!("artifact: bad edge layer {other}")),
+            },
+            regs: num(4)? as u32,
+            fifos: num(5)? as u32,
+        });
+    }
+
+    let jp = get(j, "placement")?;
+    let pos = req_arr(jp, "pos")?
+        .iter()
+        .map(|t| tile_from(t, "placement pos"))
+        .collect::<Result<Vec<TileCoord>, String>>()?;
+    let slot = req_arr(jp, "slot")?
+        .iter()
+        .map(|v| {
+            v.as_u64().map(|x| x as u8).ok_or_else(|| "artifact: bad placement slot".to_string())
+        })
+        .collect::<Result<Vec<u8>, String>>()?;
+    if pos.len() != dfg.nodes.len() || slot.len() != dfg.nodes.len() {
+        return Err("artifact: placement length mismatch".into());
+    }
+    let placement = Placement { pos, slot, cost: req_f64(jp, "cost")? };
+
+    let mut routes = Vec::new();
+    for r in req_arr(j, "routes")? {
+        let mut sink_paths = Vec::new();
+        for p in req_arr(r, "paths")? {
+            sink_paths
+                .push(u32s(p.as_arr().ok_or("artifact: bad route path")?, "route path")?);
+        }
+        routes.push(NetRoute { net: req_usize(r, "net")?, sink_paths });
+    }
+
+    // Nets and the delay library are re-derived, not stored — and they
+    // MUST derive from the stored (possibly flush-hardened) design arch,
+    // exactly as the compile flow did: `build_nets` omits the flush net
+    // under `hardened_flush`, so a base-arch derivation would shift net
+    // ids under the stored routes. `DelayLib::generate` depends only on
+    // the structural parameters, so either arch yields the same library.
+    let nets = build_nets(&dfg, &arch);
+    for r in &routes {
+        if r.net >= nets.len() {
+            return Err("artifact: route references missing net".into());
+        }
+    }
+    let lib = DelayLib::generate(&arch, &DelayModelParams::default());
+    let mut design = RoutedDesign::new(dfg, nets, placement, routes, arch, lib);
+    for &r in &u32s(req_arr(j, "sb_regs")?, "sb_regs")? {
+        design.sb_regs.insert(r);
+    }
+    for &r in &u32s(req_arr(j, "pinned_regs")?, "pinned_regs")? {
+        design.pinned_regs.insert(r);
+    }
+    let nedges = design.dfg.edges.len() as u64;
+    for pair in req_arr(j, "rf_delay")? {
+        let a = pair.as_arr().filter(|a| a.len() == 2).ok_or("artifact: bad rf_delay")?;
+        let e = a[0].as_u64().ok_or("artifact: bad rf_delay edge")?;
+        let v = a[1].as_u64().ok_or("artifact: bad rf_delay value")?;
+        if e >= nedges {
+            return Err("artifact: rf_delay references missing edge".into());
+        }
+        design.rf_delay.insert(e as u32, v as u32);
+    }
+
+    let jsta = get(j, "sta")?;
+    let sta = CritPath {
+        period_ps: req_f64(jsta, "period_ps")?,
+        fmax_mhz: req_f64(jsta, "fmax_mhz")?,
+        segment: segment_from(get(jsta, "segment")?)?,
+        num_segments: req_usize(jsta, "num_segments")?,
+    };
+
+    let jsched = get(j, "schedule")?;
+    let jshape = get(jsched, "shape")?;
+    let shape = WorkloadShape {
+        frame_w: req_u64(jshape, "frame_w")?,
+        frame_h: req_u64(jshape, "frame_h")?,
+        unroll: req_u64(jshape, "unroll")?,
+        time_mult: req_u64(jshape, "time_mult")?,
+    };
+    let mut mem_params = BTreeMap::new();
+    for o in req_arr(jsched, "mem")? {
+        let extents = u32s(req_arr(o, "extents")?, "mem extents")?;
+        let strides = req_arr(o, "strides")?
+            .iter()
+            .map(|v| {
+                v.as_i64().map(|x| x as i32).ok_or_else(|| "artifact: bad stride".to_string())
+            })
+            .collect::<Result<Vec<i32>, String>>()?;
+        mem_params.insert(
+            req_u64(o, "node")? as u32,
+            MemSchedule { extents, strides, start_offset: req_u64(o, "off")? as u32 },
+        );
+    }
+    let schedule = Schedule {
+        total_cycles: req_u64(jsched, "total_cycles")?,
+        fill_latency: req_u64(jsched, "fill_latency")?,
+        mem_params,
+        shape,
+    };
+
+    let jmap = get(j, "map_report")?;
+    let map_report = MapReport {
+        consts_folded: req_usize(jmap, "consts_folded")?,
+        muls_reduced: req_usize(jmap, "muls_reduced")?,
+        pe_used: req_usize(jmap, "pe_used")?,
+        mem_used: req_usize(jmap, "mem_used")?,
+        io_used: req_usize(jmap, "io_used")?,
+        pe_capacity: req_usize(jmap, "pe_capacity")?,
+        mem_capacity: req_usize(jmap, "mem_capacity")?,
+        io_capacity: req_usize(jmap, "io_capacity")?,
+    };
+
+    let postpnr = match get(j, "postpnr")? {
+        Json::Null => None,
+        o => Some(PostPnrReport {
+            iters: req_usize(o, "iters")?,
+            regs_enabled: req_usize(o, "regs_enabled")?,
+            period_before_ps: req_f64(o, "period_before_ps")?,
+            period_after_ps: req_f64(o, "period_after_ps")?,
+        }),
+    };
+    let dup = match get(j, "dup")? {
+        Json::Null => None,
+        o => Some(DupPlan {
+            region_cols: req_usize(o, "region_cols")?,
+            copies: req_usize(o, "copies")?,
+            lanes_per_copy: req_u64(o, "lanes_per_copy")?,
+        }),
+    };
+
+    let c = Compiled {
+        design,
+        sta,
+        schedule,
+        map_report,
+        pes_pipelined: req_usize(j, "pes_pipelined")?,
+        bdm_regs: req_u64(j, "bdm_regs")?,
+        bcast_buffers: req_usize(j, "bcast_buffers")?,
+        postpnr,
+        dup,
+    };
+    let actual = fingerprint(&c);
+    if actual != fp {
+        return Err(format!(
+            "artifact: fingerprint mismatch (file says {fp:016x}, rebuilt artifact is \
+             {actual:016x}) — torn or stale file, recompile instead"
+        ));
+    }
+    Ok(c)
+}
+
+/// Parse [`to_bytes`] output: strict UTF-8 JSON, whole-document checksum,
+/// then the [`from_json`] fingerprint verification. Any failure rejects
+/// the whole document.
+pub fn from_bytes(bytes: &[u8]) -> Result<Compiled, String> {
+    let text =
+        std::str::from_utf8(bytes).map_err(|_| "artifact: not valid UTF-8".to_string())?;
+    let mut j = Json::parse(text).map_err(|e| format!("artifact: {e}"))?;
+    let check_hex = req_str(&j, "check")?.to_string();
+    let check = u64::from_str_radix(&check_hex, 16)
+        .map_err(|_| format!("artifact: bad checksum '{check_hex}'"))?;
+    if let Json::Obj(m) = &mut j {
+        m.remove("check");
+    }
+    if fnv1a(j.to_string_compact().as_bytes()) != check {
+        return Err(
+            "artifact: checksum mismatch — corrupt or hand-edited file, recompile instead"
+                .into(),
+        );
+    }
+    from_json(&j)
+}
+
+// ---------------------------------------------------------------------------
+// The bounded on-disk store
+// ---------------------------------------------------------------------------
+
+/// Size/count budget for [`ArtifactStore::gc`]. Parsed from the CLI's
+/// `--cache-cap` (`8M`, `512K`, `1G`, plain bytes, or `<N>n` for an entry
+/// count).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCap {
+    /// Maximum total artifact bytes (`None` = unbounded).
+    pub max_bytes: Option<u64>,
+    /// Maximum artifact count (`None` = unbounded).
+    pub max_entries: Option<usize>,
+}
+
+impl CacheCap {
+    pub fn bytes(n: u64) -> CacheCap {
+        CacheCap { max_bytes: Some(n), max_entries: None }
+    }
+
+    pub fn entries(n: usize) -> CacheCap {
+        CacheCap { max_bytes: None, max_entries: Some(n) }
+    }
+
+    /// Parse the CLI form: `123456` (bytes), `512K` / `8M` / `1G`
+    /// (binary-multiple bytes), or `200n` (entry count).
+    pub fn parse(s: &str) -> Result<CacheCap, String> {
+        let s = s.trim();
+        let (digits, mult) = match s.chars().last() {
+            Some('k') | Some('K') => (&s[..s.len() - 1], Some(1u64 << 10)),
+            Some('m') | Some('M') => (&s[..s.len() - 1], Some(1u64 << 20)),
+            Some('g') | Some('G') => (&s[..s.len() - 1], Some(1u64 << 30)),
+            Some('n') | Some('N') => (&s[..s.len() - 1], None),
+            _ => (s, Some(1)),
+        };
+        let n: u64 = digits
+            .parse()
+            .map_err(|_| format!("bad --cache-cap '{s}' (use bytes, K/M/G, or <N>n entries)"))?;
+        Ok(match mult {
+            Some(m) => CacheCap::bytes(n.saturating_mul(m)),
+            None => CacheCap::entries(n as usize),
+        })
+    }
+
+    /// Whether a store of `entries` artifacts totalling `bytes` fits.
+    pub fn admits(&self, entries: usize, bytes: u64) -> bool {
+        self.max_bytes.map(|b| bytes <= b).unwrap_or(true)
+            && self.max_entries.map(|e| entries <= e).unwrap_or(true)
+    }
+}
+
+/// What [`ArtifactStore::gc`] did.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GcReport {
+    pub entries_before: usize,
+    pub entries_after: usize,
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+    pub evicted: usize,
+    /// Pinned artifacts, which are never evicted — if the store still
+    /// exceeds the cap after GC, it is because pins alone exceed it.
+    pub pinned: usize,
+}
+
+impl GcReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "evicted {} artifact(s) ({} -> {} entries, {} -> {} bytes), {} pinned",
+            self.evicted,
+            self.entries_before,
+            self.entries_after,
+            self.bytes_before,
+            self.bytes_after,
+            self.pinned
+        )
+    }
+}
+
+/// Store-wide statistics (`cascade cache stat`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StoreStat {
+    pub entries: usize,
+    pub bytes: u64,
+    pub pinned: usize,
+    pub journal_lines: usize,
+}
+
+/// Parse a `pins` file (one hex key per line; unparseable lines are
+/// ignored, absent file = empty set). A free function so readers — like
+/// `explore-merge` collecting a *source* shard's pins — need no store
+/// handle, whose constructor creates the directory as a side effect.
+pub fn read_pins_file(path: &Path) -> BTreeSet<u64> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return BTreeSet::new();
+    };
+    text.lines().filter_map(|l| u64::from_str_radix(l.trim(), 16).ok()).collect()
+}
+
+/// The persistent artifact store: one `<key>.art` file per compiled
+/// artifact under `<cache>/artifacts/`, an append-only LRU journal
+/// (`atime.log`, one hex key per access), and a `pins` file of keys GC
+/// must never evict. Every full-file write (`.art` bodies, the pins
+/// file, journal compaction) is atomic (temp file + rename); journal
+/// touches are single-`write_all` appends whose worst failure is one
+/// unparseable line, which readers skip. All artifact reads are
+/// checksum- and fingerprint-checked, so a torn file is recompiled,
+/// never trusted.
+pub struct ArtifactStore {
+    dir: PathBuf,
+    hits: AtomicUsize,
+    rejected: AtomicUsize,
+    stores: AtomicUsize,
+}
+
+impl ArtifactStore {
+    /// Open (creating) a store at `dir`. Like [`super::cache::DiskCache`],
+    /// an uncreatable directory degrades to a store-nothing handle.
+    pub fn at(dir: impl AsRef<Path>) -> ArtifactStore {
+        let dir = dir.as_ref().to_path_buf();
+        let _ = std::fs::create_dir_all(&dir);
+        ArtifactStore {
+            dir,
+            hits: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            stores: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn art_path(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("{key:016x}.art"))
+    }
+
+    fn journal_path(&self) -> PathBuf {
+        self.dir.join("atime.log")
+    }
+
+    fn pins_path(&self) -> PathBuf {
+        self.dir.join("pins")
+    }
+
+    /// Artifacts rehydrated by this handle.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Files rejected by this handle (parse or fingerprint failure).
+    pub fn rejected(&self) -> usize {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Artifacts written by this handle.
+    pub fn stores(&self) -> usize {
+        self.stores.load(Ordering::Relaxed)
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.art_path(key).exists()
+    }
+
+    /// Record a logical *use* of `key` without loading it — e.g. a
+    /// metrics-cache hit that made rehydration unnecessary — so LRU
+    /// eviction tracks point usage, not just artifact reads (otherwise a
+    /// hot, fully-warm sweep would look cold to GC and lose exactly the
+    /// artifacts it relies on). No-op for keys without a stored artifact.
+    pub fn note_use(&self, key: u64) {
+        if self.contains(key) {
+            self.touch(key);
+        }
+    }
+
+    /// Atomic replace (temp file + rename): a killed writer leaves either
+    /// the old content or the new, never a truncation. Used for `.art`
+    /// bodies, the pins file and journal compaction alike.
+    fn atomic_write(&self, path: &Path, bytes: &[u8]) -> bool {
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { return false };
+        let tmp = self.dir.join(format!("{name}.tmp{}", std::process::id()));
+        let ok = std::fs::write(&tmp, bytes).is_ok() && std::fs::rename(&tmp, path).is_ok();
+        if !ok {
+            let _ = std::fs::remove_file(&tmp);
+        }
+        ok
+    }
+
+    fn touch(&self, key: u64) {
+        use std::io::Write as _;
+        if let Ok(mut f) =
+            std::fs::OpenOptions::new().append(true).create(true).open(self.journal_path())
+        {
+            // One write_all per line: O_APPEND keeps concurrent touches
+            // whole, same policy as the partial-results journal.
+            let _ = f.write_all(format!("{key:016x}\n").as_bytes());
+        }
+    }
+
+    /// Persist `c` under `key` (atomic write; an existing file is replaced
+    /// — compiles are deterministic, so replacement bytes are identical
+    /// unless the old file was torn, in which case replacing repairs it).
+    pub fn store(&self, key: u64, c: &Compiled) {
+        if self.atomic_write(&self.art_path(key), &to_bytes(c)) {
+            self.stores.fetch_add(1, Ordering::Relaxed);
+            self.touch(key);
+        }
+    }
+
+    /// Rehydrate the artifact stored under `key`, verifying its embedded
+    /// fingerprint and, when given, the caller's `expect_fp` (normally the
+    /// `artifact_fp` of the point's metrics record). Returns `None` for an
+    /// absent file *and* for a rejected one — the caller recompiles either
+    /// way; [`Self::rejected`] distinguishes them for reporting.
+    pub fn load(&self, key: u64, expect_fp: Option<u64>) -> Option<Compiled> {
+        let bytes = std::fs::read(self.art_path(key)).ok()?;
+        match from_bytes(&bytes) {
+            Ok(c) => {
+                if let Some(fp) = expect_fp {
+                    if fingerprint(&c) != fp {
+                        self.rejected.fetch_add(1, Ordering::Relaxed);
+                        return None;
+                    }
+                }
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.touch(key);
+                Some(c)
+            }
+            Err(_) => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Keys currently stored, ascending.
+    pub fn keys(&self) -> Vec<u64> {
+        let Ok(rd) = std::fs::read_dir(&self.dir) else { return Vec::new() };
+        let mut keys: Vec<u64> = rd
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let name = e.file_name();
+                let name = name.to_str()?;
+                let stem = name.strip_suffix(".art")?;
+                u64::from_str_radix(stem, 16).ok()
+            })
+            .collect();
+        keys.sort_unstable();
+        keys
+    }
+
+    /// Mark `keys` as GC survivors (set union with the existing pins).
+    pub fn pin(&self, keys: impl IntoIterator<Item = u64>) {
+        let mut pins = self.pinned();
+        pins.extend(keys);
+        self.write_pins(&pins);
+    }
+
+    fn write_pins(&self, pins: &BTreeSet<u64>) {
+        let mut text = String::new();
+        for k in pins {
+            text.push_str(&format!("{k:016x}\n"));
+        }
+        self.atomic_write(&self.pins_path(), text.as_bytes());
+    }
+
+    /// The pinned key set (unparseable lines are ignored).
+    pub fn pinned(&self) -> BTreeSet<u64> {
+        read_pins_file(&self.pins_path())
+    }
+
+    /// Stored keys in least-recently-used-first order, from the access
+    /// journal: keys the journal never mentions first (key order), then by
+    /// last journal appearance, oldest first.
+    pub fn lru_order(&self) -> Vec<u64> {
+        let mut last: HashMap<u64, usize> = HashMap::new();
+        if let Ok(text) = std::fs::read_to_string(self.journal_path()) {
+            for (i, line) in text.lines().enumerate() {
+                if let Ok(k) = u64::from_str_radix(line.trim(), 16) {
+                    last.insert(k, i);
+                }
+            }
+        }
+        let mut keys = self.keys();
+        keys.sort_by_key(|k| (last.get(k).map(|&i| i as i64).unwrap_or(-1), *k));
+        keys
+    }
+
+    pub fn stat(&self) -> StoreStat {
+        let keys = self.keys();
+        let bytes = keys
+            .iter()
+            .map(|&k| std::fs::metadata(self.art_path(k)).map(|m| m.len()).unwrap_or(0))
+            .sum();
+        let stored: BTreeSet<u64> = keys.iter().copied().collect();
+        let journal_lines = std::fs::read_to_string(self.journal_path())
+            .map(|t| t.lines().count())
+            .unwrap_or(0);
+        StoreStat {
+            entries: keys.len(),
+            bytes,
+            pinned: self.pinned().intersection(&stored).count(),
+            journal_lines,
+        }
+    }
+
+    /// Evict unpinned artifacts, least recently used first, until the
+    /// store fits `cap`; then compact the journal (one line per surviving
+    /// key, LRU order preserved) and prune pins of evicted-or-absent keys.
+    /// Pinned artifacts are never evicted, even if they alone exceed the
+    /// cap — the report's `pinned` count says when that happened.
+    pub fn gc(&self, cap: &CacheCap) -> GcReport {
+        self.gc_with_tmp_grace(cap, TMP_GRACE)
+    }
+
+    /// [`Self::gc`] with an explicit staleness threshold for the `.tmp`
+    /// sweep (tests use zero; production uses [`TMP_GRACE`]).
+    pub fn gc_with_tmp_grace(&self, cap: &CacheCap, grace: std::time::Duration) -> GcReport {
+        // Sweep `.tmp` leftovers from killed writers first: never valid
+        // reads, invisible to the `.art` accounting, and otherwise they
+        // accumulate outside the cap forever. Only *stale* ones go — a GC
+        // racing a live same-directory writer (local multi-process
+        // shards) must not delete an in-flight temp file between its
+        // write and rename.
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.filter_map(|e| e.ok()) {
+                let name = e.file_name();
+                if !name.to_str().map(|n| n.contains(".tmp")).unwrap_or(false) {
+                    continue;
+                }
+                let stale = e
+                    .metadata()
+                    .and_then(|m| m.modified())
+                    .ok()
+                    .and_then(|t| t.elapsed().ok())
+                    .map(|age| age >= grace)
+                    .unwrap_or(true);
+                if stale {
+                    let _ = std::fs::remove_file(e.path());
+                }
+            }
+        }
+        let pins = self.pinned();
+        let order = self.lru_order();
+        let sizes: HashMap<u64, u64> = order
+            .iter()
+            .map(|&k| (k, std::fs::metadata(self.art_path(k)).map(|m| m.len()).unwrap_or(0)))
+            .collect();
+        let mut entries = order.len();
+        let mut bytes: u64 = sizes.values().sum();
+        let report_before = (entries, bytes);
+
+        let mut evicted = 0usize;
+        let mut survivors: Vec<u64> = Vec::with_capacity(order.len());
+        let mut victims = order.iter().copied().filter(|k| !pins.contains(k));
+        let mut kept: BTreeSet<u64> = order.iter().copied().collect();
+        while !cap.admits(entries, bytes) {
+            let Some(k) = victims.next() else { break };
+            if std::fs::remove_file(self.art_path(k)).is_ok() {
+                kept.remove(&k);
+                entries -= 1;
+                bytes -= sizes[&k];
+                evicted += 1;
+            }
+        }
+        for &k in &order {
+            if kept.contains(&k) {
+                survivors.push(k);
+            }
+        }
+        // Compact the journal and prune stale pins (atomic, like every
+        // other non-append write in the store).
+        let mut text = String::new();
+        for k in &survivors {
+            text.push_str(&format!("{k:016x}\n"));
+        }
+        self.atomic_write(&self.journal_path(), text.as_bytes());
+        let stored: BTreeSet<u64> = survivors.iter().copied().collect();
+        let live_pins: BTreeSet<u64> = pins.intersection(&stored).copied().collect();
+        self.write_pins(&live_pins);
+
+        GcReport {
+            entries_before: report_before.0,
+            entries_after: entries,
+            bytes_before: report_before.1,
+            bytes_after: bytes,
+            evicted,
+            pinned: live_pins.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{compile, CompileCtx, PipelineConfig};
+
+    fn tiny_compiled(level: &str, seed: u64) -> (CompileCtx, Compiled) {
+        let ctx = CompileCtx::paper();
+        let app = crate::apps::by_name_tiny("gaussian").unwrap();
+        let cfg = PipelineConfig::by_name(level).unwrap();
+        let c = compile(&app, &ctx, &cfg, seed).unwrap();
+        (ctx, c)
+    }
+
+    #[test]
+    fn round_trip_is_bit_identical_under_fingerprint() {
+        let (_ctx, c) = tiny_compiled("compute", 3);
+        let bytes = to_bytes(&c);
+        let back = from_bytes(&bytes).unwrap();
+        assert_eq!(fingerprint(&c), fingerprint(&back));
+        // Serialization is canonical: a second round trip is byte-stable.
+        assert_eq!(bytes, to_bytes(&back));
+        // Metrics derived from the rehydrated artifact match exactly.
+        use super::super::cache::PointMetrics;
+        assert_eq!(PointMetrics::from_compiled(&c), PointMetrics::from_compiled(&back));
+    }
+
+    #[test]
+    fn sparse_artifact_round_trips() {
+        let ctx = CompileCtx::paper();
+        let app = crate::apps::sparse::vec_elemadd(1024, 0.2);
+        let c = compile(&app, &ctx, &PipelineConfig::compute_only(), 5).unwrap();
+        let back = from_bytes(&to_bytes(&c)).unwrap();
+        assert_eq!(fingerprint(&c), fingerprint(&back));
+        // The rehydrated DFG drives the functional simulation identically.
+        let data = crate::apps::sparse::data_for(app.name, 42);
+        let a = crate::sparse::sim::simulate_app(app.name, &c.design.dfg, &data);
+        let b = crate::sparse::sim::simulate_app(app.name, &back.design.dfg, &data);
+        assert_eq!(a.cycles, b.cycles);
+    }
+
+    #[test]
+    fn torn_and_tampered_files_are_rejected() {
+        let (_ctx, c) = tiny_compiled("none", 3);
+        let bytes = to_bytes(&c);
+        // Truncation (torn write) fails the parse.
+        assert!(from_bytes(&bytes[..bytes.len() / 2]).is_err());
+        assert!(from_bytes(b"").is_err());
+        assert!(from_bytes(b"{}\n").is_err());
+        // A parseable but tampered document fails the fingerprint check.
+        let text = String::from_utf8(bytes).unwrap();
+        let mut j = Json::parse(&text).unwrap();
+        let cycles = j.get("schedule").unwrap().get("total_cycles").unwrap().as_u64().unwrap();
+        let mut sched = j.get("schedule").unwrap().clone();
+        sched.set("total_cycles", cycles + 1);
+        j.set("schedule", sched);
+        let err = from_json(&j).unwrap_err();
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+        // Tampering with a field the fingerprint does NOT hash (the map
+        // report here) is caught by the whole-document checksum instead.
+        assert!(text.contains("\"consts_folded\":"), "fixture drifted");
+        let tampered = text.replacen("\"consts_folded\":", "\"consts_folded\":9", 1);
+        let err = from_bytes(tampered.as_bytes()).unwrap_err();
+        assert!(err.contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn i64_values_round_trip_beyond_f64_exact_range() {
+        // Constants outside f64's exact-integer window travel as strings.
+        for v in [0i64, -1, 1 << 15, I64_EXACT - 1, I64_EXACT, -I64_EXACT, i64::MIN, i64::MAX] {
+            let j = i64_json(v);
+            assert_eq!(i64_from(&j, "test").unwrap(), v, "value {v}");
+        }
+        assert!(i64_from(&Json::Bool(true), "test").is_err());
+    }
+
+    #[test]
+    fn store_load_counts_and_verifies() {
+        let dir = std::env::temp_dir().join(format!("cascade-art-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ArtifactStore::at(&dir);
+        let (_ctx, c) = tiny_compiled("none", 4);
+        let fp = fingerprint(&c);
+        assert!(store.load(1, None).is_none(), "absent key is a miss, not a rejection");
+        assert_eq!(store.rejected(), 0);
+        store.store(1, &c);
+        assert!(store.contains(1));
+        let back = store.load(1, Some(fp)).unwrap();
+        assert_eq!(fingerprint(&back), fp);
+        assert_eq!(store.hits(), 1);
+        // A wrong expected fingerprint (stale metrics record) is rejected.
+        assert!(store.load(1, Some(fp ^ 1)).is_none());
+        assert_eq!(store.rejected(), 1);
+        // A torn file is rejected and the key reports absent-equivalent.
+        std::fs::write(dir.join(format!("{:016x}.art", 1u64)), b"{\"format\":1,").unwrap();
+        assert!(store.load(1, None).is_none());
+        assert_eq!(store.rejected(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// GC tests drive the store through its file layout directly (fake
+    /// fixed-size entries), since eviction never parses artifact bodies.
+    fn fake_store(tag: &str, n: usize, size: usize) -> (PathBuf, ArtifactStore) {
+        let dir = std::env::temp_dir().join(format!("cascade-gc-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ArtifactStore::at(&dir);
+        let mut journal = String::new();
+        for k in 1..=n as u64 {
+            std::fs::write(dir.join(format!("{k:016x}.art")), vec![b'x'; size]).unwrap();
+            journal.push_str(&format!("{k:016x}\n"));
+        }
+        std::fs::write(dir.join("atime.log"), journal).unwrap();
+        (dir, store)
+    }
+
+    #[test]
+    fn gc_honors_entry_and_byte_caps_lru_first() {
+        let (dir, store) = fake_store("cap", 6, 100);
+        // Touch key 1 so it becomes the most recently used.
+        std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join("atime.log"))
+            .map(|mut f| {
+                use std::io::Write as _;
+                f.write_all(format!("{:016x}\n", 1u64).as_bytes()).unwrap();
+            })
+            .unwrap();
+        let r = store.gc(&CacheCap::entries(3));
+        assert_eq!(r.evicted, 3);
+        assert_eq!(r.entries_after, 3);
+        // LRU evicts 2, 3, 4 (1 was touched last); 1, 5, 6 survive.
+        assert_eq!(store.keys(), vec![1, 5, 6]);
+        // The journal is compacted to the survivors.
+        let stat = store.stat();
+        assert_eq!(stat.journal_lines, 3);
+        // Byte cap on what remains: 300 bytes now, cap at 150 keeps 1.
+        let r2 = store.gc(&CacheCap::bytes(150));
+        assert_eq!(r2.entries_after, 1);
+        assert_eq!(store.keys(), vec![1], "most recently used survives a byte cap");
+        // Under-cap GC is a no-op on artifacts, but sweeps *stale* tmp
+        // leftovers a killed writer abandoned (they live outside the
+        // cap). A fresh tmp — possibly a live writer's — survives the
+        // production grace window.
+        let tmp = dir.join(format!("{:016x}.tmp999", 7u64));
+        std::fs::write(&tmp, b"torn").unwrap();
+        let r3 = store.gc(&CacheCap::bytes(1 << 20));
+        assert_eq!(r3.evicted, 0);
+        assert!(tmp.exists(), "a just-written tmp must survive the grace window");
+        store.gc_with_tmp_grace(&CacheCap::bytes(1 << 20), std::time::Duration::ZERO);
+        assert!(!tmp.exists(), "stale tmp leftovers swept");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_never_evicts_pinned_survivors() {
+        let (dir, store) = fake_store("pin", 5, 10);
+        store.pin([1u64, 2]);
+        // Cap of one entry: only unpinned artifacts (3, 4, 5) may go.
+        let r = store.gc(&CacheCap::entries(1));
+        assert_eq!(r.evicted, 3);
+        assert_eq!(store.keys(), vec![1, 2], "pinned artifacts survive any cap");
+        assert_eq!(r.pinned, 2);
+        assert_eq!(r.entries_after, 2, "pins may leave the store over-cap; GC reports it");
+        // Pins of evicted/absent keys are pruned on GC.
+        store.pin([99u64]);
+        store.gc(&CacheCap::default());
+        assert_eq!(store.pinned().into_iter().collect::<Vec<_>>(), vec![1, 2]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cache_cap_parses_all_forms() {
+        assert_eq!(CacheCap::parse("1234").unwrap(), CacheCap::bytes(1234));
+        assert_eq!(CacheCap::parse("512K").unwrap(), CacheCap::bytes(512 << 10));
+        assert_eq!(CacheCap::parse("8m").unwrap(), CacheCap::bytes(8 << 20));
+        assert_eq!(CacheCap::parse("1G").unwrap(), CacheCap::bytes(1 << 30));
+        assert_eq!(CacheCap::parse("200n").unwrap(), CacheCap::entries(200));
+        assert!(CacheCap::parse("").is_err());
+        assert!(CacheCap::parse("x12").is_err());
+        assert!(CacheCap::parse("12x3M").is_err());
+        assert!(CacheCap::bytes(100).admits(5, 100));
+        assert!(!CacheCap::bytes(100).admits(5, 101));
+        assert!(!CacheCap::entries(4).admits(5, 0));
+    }
+}

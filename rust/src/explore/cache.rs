@@ -12,7 +12,11 @@
 //!   metrics under `results/explore_cache/`, so a repeated `cascade
 //!   explore` (or a later `cascade exp summary`) skips recompilation
 //!   entirely. Records are flat `key=value` text; floats round-trip
-//!   exactly via Rust's shortest-representation formatting.
+//!   exactly via Rust's shortest-representation formatting. Each disk
+//!   cache also carries an [`ArtifactStore`](super::artifact::ArtifactStore)
+//!   (`explore_cache/artifacts/`) persisting the *compiled artifacts*
+//!   themselves, fingerprint-checked and LRU-evictable — see
+//!   [`super::artifact`] and `docs/cache.md`.
 //!
 //! The cache key hashes the *effective* configuration (every field of the
 //! resolved [`PipelineConfig`]), the app name and scale, the PnR seed, and
@@ -280,8 +284,9 @@ type Slot = Arc<Mutex<Option<Result<Arc<Compiled>, String>>>>;
 /// cost as much as the compile).
 ///
 /// Artifacts are retained for the cache's lifetime — one per *distinct*
-/// effective configuration, not per grid point. An eviction policy for
-/// very large grids is a ROADMAP follow-up.
+/// effective configuration, not per grid point. Bounded retention lives in
+/// the persistent layer: [`super::artifact::ArtifactStore`] keeps compiled
+/// artifacts across runs under an evictable `--cache-cap` budget.
 #[derive(Default)]
 pub struct ArtifactCache {
     slots: Mutex<HashMap<u64, Slot>>,
@@ -344,9 +349,11 @@ impl ArtifactCache {
     }
 }
 
-/// Persistent metrics cache: one `<key>.rec` file per point under `dir`.
+/// Persistent metrics cache: one `<key>.rec` file per point under `dir`,
+/// plus the compiled-artifact store under `dir/artifacts/`.
 pub struct DiskCache {
     dir: PathBuf,
+    artifacts: super::artifact::ArtifactStore,
     disk_hits: AtomicUsize,
     stores: AtomicUsize,
 }
@@ -364,7 +371,8 @@ impl DiskCache {
     pub fn at(dir: impl AsRef<Path>) -> DiskCache {
         let dir = dir.as_ref().to_path_buf();
         let _ = std::fs::create_dir_all(&dir);
-        DiskCache { dir, disk_hits: AtomicUsize::new(0), stores: AtomicUsize::new(0) }
+        let artifacts = super::artifact::ArtifactStore::at(dir.join("artifacts"));
+        DiskCache { dir, artifacts, disk_hits: AtomicUsize::new(0), stores: AtomicUsize::new(0) }
     }
 
     pub fn open_default() -> DiskCache {
@@ -374,6 +382,35 @@ impl DiskCache {
     /// The directory records live in.
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// The compiled-artifact store living under `dir/artifacts/`.
+    pub fn artifacts(&self) -> &super::artifact::ArtifactStore {
+        &self.artifacts
+    }
+
+    /// Number of metrics records currently on disk.
+    pub fn record_count(&self) -> usize {
+        let Ok(rd) = std::fs::read_dir(&self.dir) else { return 0 };
+        rd.filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().map(|x| x == "rec").unwrap_or(false))
+            .count()
+    }
+
+    /// Human-readable cache summary (`cascade cache stat`): metrics
+    /// records plus the artifact store's entry/byte/pin/journal counts.
+    pub fn stat_string(&self) -> String {
+        let s = self.artifacts.stat();
+        format!(
+            "cache {}: {} metrics record(s); {} artifact(s), {} byte(s), {} pinned, \
+             {} journal line(s)",
+            self.dir.display(),
+            self.record_count(),
+            s.entries,
+            s.bytes,
+            s.pinned,
+            s.journal_lines
+        )
     }
 
     fn path(&self, key: u64) -> PathBuf {

@@ -23,6 +23,12 @@
 //!   deduplication of effective-config collisions within a run, plus a
 //!   persistent metrics cache under `results/explore_cache/` that repeat
 //!   invocations (and `cascade exp summary`) reuse.
+//! * [`artifact`] — persistent *compiled-artifact* store
+//!   (`results/explore_cache/artifacts/`): exact JSON round-trip of every
+//!   [`crate::pipeline::Compiled`], fingerprint-checked rehydration for
+//!   `cascade encode --from-cache` / `exp summary` / resumed and sharded
+//!   sweeps, and bounded LRU eviction with Pareto/knee pinning
+//!   (`--cache-cap`, `cascade cache gc|stat`).
 //! * [`pareto`] — n-dimensional dominance frontier and knee-point
 //!   selection over (critical-path delay, EDP, pipelining registers).
 //! * [`report`] — ranked markdown summary + deterministic JSON emission;
@@ -39,6 +45,7 @@
 //! the halving search additionally drops infeasible points first at every
 //! promotion.
 
+pub mod artifact;
 pub mod cache;
 pub mod pareto;
 pub mod report;
@@ -47,6 +54,7 @@ pub mod search;
 pub mod shard;
 pub mod space;
 
+pub use artifact::{ArtifactStore, CacheCap, GcReport, StoreStat};
 pub use cache::{ArtifactCache, DiskCache, PointMetrics};
 pub use runner::{run, EvalSession, PartialSink, PointResult, RunOutcome};
 pub use search::{run_halving, HalvingParams, Objective, RungReport, SearchOutcome};
@@ -55,6 +63,7 @@ pub use space::{ExplorePoint, ExploreSpec, Scale};
 
 use std::path::Path;
 
+use crate::arch::params::ArchParams;
 use crate::pipeline::CompileCtx;
 
 /// Search strategy for one `cascade explore` invocation.
@@ -66,12 +75,42 @@ pub enum SearchKind {
     Halving(HalvingParams),
 }
 
+/// Pin the Pareto-frontier and knee-point artifacts of every app so a
+/// later `cache gc` keeps exactly the survivors downstream consumers
+/// (bitstream encoding, simulation) want to rehydrate.
+pub(crate) fn pin_survivors(
+    store: &ArtifactStore,
+    spec: &ExploreSpec,
+    base: &ArchParams,
+    results: &[PointResult],
+    analyses: &[report::AppAnalysis],
+) -> usize {
+    let mut keys = Vec::new();
+    for a in analyses {
+        for r in results {
+            let keep = a.frontier.contains(&r.point.id) || a.knee == Some(r.point.id);
+            if r.point.app == a.app && keep && r.metrics.is_ok() {
+                keys.push(runner::effective_key(spec, base, &r.point));
+            }
+        }
+    }
+    keys.sort_unstable();
+    keys.dedup();
+    let n = keys.len();
+    if n > 0 {
+        store.pin(keys);
+    }
+    n
+}
+
 /// CLI entry point: evaluate the space (exhaustively or adaptively),
 /// analyze, emit `results/explore.*`, stream partials to
-/// `results/explore_partial.jsonl`, and print the cache traffic (stdout
-/// only — reports stay run-invariant). With `shard = Some(K/N)`, evaluate
-/// only this shard's slice and write `results/shard_K_of_N.json` instead
-/// of the report; `cascade explore-merge` reassembles the full report.
+/// `results/explore_partial.jsonl`, pin the frontier/knee artifacts, run
+/// a bounded-cache GC when `--cache-cap` is given, and print the cache
+/// traffic (stdout only — reports stay run-invariant). With `shard =
+/// Some(K/N)`, evaluate only this shard's slice and write
+/// `results/shard_K_of_N.json` instead of the report; `cascade
+/// explore-merge` reassembles the full report.
 pub fn run_cli(
     spec: &ExploreSpec,
     ctx: &CompileCtx,
@@ -79,6 +118,7 @@ pub fn run_cli(
     use_disk_cache: bool,
     search: &SearchKind,
     shard_of: Option<&ShardSpec>,
+    cache_cap: Option<&CacheCap>,
 ) -> Result<(), String> {
     spec.validate()?;
     let threads = threads.max(1);
@@ -91,7 +131,28 @@ pub fn run_cli(
             );
         }
         shard::run_sharded(spec, ctx, threads, search, sh, Path::new("results"))?;
+        if let Some(cap) = cache_cap {
+            // A shard knows no global frontier, so nothing is pinned here
+            // (the merge pins survivors on the merged store). The cap
+            // still bounds the shard's local store — which means a
+            // pre-merge GC may evict artifacts the merged store would
+            // otherwise serve; that only costs a recompile on next use,
+            // but say so.
+            let store = ArtifactStore::at(DiskCache::default_dir().join("artifacts"));
+            println!("cache gc: {}", store.gc(cap).summary());
+            println!(
+                "cache gc: note — shard-local eviction is unpinned; artifacts evicted \
+                 here are absent from a later merge and recompile on next use"
+            );
+        }
         return Ok(());
+    }
+    if cache_cap.is_some() && !use_disk_cache {
+        return Err(
+            "explore: --cache-cap requires the disk cache (drop --no-cache); there is no \
+             store to bound without it"
+                .into(),
+        );
     }
     let disk = if use_disk_cache { Some(DiskCache::open_default()) } else { None };
     let sink = PartialSink::open(PartialSink::default_path());
@@ -154,13 +215,25 @@ pub fn run_cli(
         );
     }
     println!(
-        "cache: {} hit(s) ({} in-memory, {} disk), {} compile(s), {} extra context(s)",
+        "cache: {} hit(s) ({} in-memory, {} disk metrics, {} rehydrated artifact(s)), \
+         {} compile(s), {} extra context(s)",
         stats.total_hits(),
         stats.memory_hits,
         stats.disk_hits,
+        stats.art_hits,
         stats.misses,
         stats.ctx_builds
     );
+    if let Some(d) = &disk {
+        let pinned = pin_survivors(d.artifacts(), spec, &ctx.arch, &results, &analyses);
+        if pinned > 0 {
+            println!("cache: pinned {pinned} frontier/knee artifact(s) against eviction");
+        }
+        if let Some(cap) = cache_cap {
+            println!("cache gc: {}", d.artifacts().gc(cap).summary());
+        }
+        println!("{}", d.stat_string());
+    }
     let failed: usize = analyses.iter().map(|a| a.failed.len()).sum();
     if failed > 0 {
         return Err(format!("{failed} point(s) failed to compile"));

@@ -5,6 +5,20 @@
 //! Reports contain only run-invariant content (no cache traffic, no wall
 //! clock), so a re-run served from the artifact cache emits byte-identical
 //! files — the property the CLI acceptance check relies on.
+//!
+//! The building blocks are pure functions over result rows:
+//!
+//! ```
+//! use cascade::explore::report::{search_to_json, search_to_markdown};
+//! use cascade::explore::{HalvingParams, RungReport};
+//!
+//! let rungs = vec![RungReport { rung: 0, budget: 5, evaluated: 6, kept: 2 }];
+//! let params = HalvingParams::default();
+//! let md = search_to_markdown(&params, &rungs);
+//! assert!(md.contains("| 0 | 5 | 6 | 2 |"), "one table row per rung");
+//! let j = search_to_json(&params, &rungs).to_string_compact();
+//! assert!(j.contains("\"mode\":\"halving\""));
+//! ```
 
 use crate::util::json::Json;
 

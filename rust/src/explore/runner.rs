@@ -7,7 +7,9 @@
 //! count or scheduling*. Compilation goes through the in-memory
 //! [`ArtifactCache`] (in-flight deduplication of effective-config
 //! collisions), the persistent [`DiskCache`] (skip recompiles across
-//! invocations), and a per-architecture [`CtxCache`] (points that override
+//! invocations) with its compiled-artifact store (a warm `.art` file from
+//! a resumed or sharded run rehydrates, fingerprint-checked, instead of
+//! recompiling), and a per-architecture [`CtxCache`] (points that override
 //! tracks / regfile words / FIFO depth share one lazily built
 //! [`CompileCtx`] per distinct effective architecture).
 //!
@@ -65,6 +67,32 @@ pub fn effective_key(spec: &ExploreSpec, base: &ArchParams, point: &ExplorePoint
     effective_point(spec, base, point).2
 }
 
+/// Compile one point under its already-resolved effective config and
+/// compile context — the single dispatch shared by [`EvalSession`] and
+/// `cascade encode`, so a standalone encode compiles byte-identically to
+/// the sweep that would cache the same point. Tiny-scale and sparse apps
+/// compile directly; paper-scale dense goes through the experiment
+/// harness's dispatch (which honours `unroll_dup` and handles resnet).
+pub fn compile_effective(
+    spec: &ExploreSpec,
+    point: &ExplorePoint,
+    cfg: &PipelineConfig,
+    ctx: &CompileCtx,
+) -> Result<Compiled, String> {
+    let sparse = crate::apps::is_sparse_name(&point.app);
+    if sparse || spec.scale == Scale::Tiny {
+        let app = match spec.scale {
+            Scale::Paper => crate::apps::by_name(&point.app),
+            Scale::Tiny => crate::apps::by_name_tiny(&point.app),
+        }
+        .ok_or_else(|| format!("unknown app '{}'", point.app))?;
+        compile(&app, ctx, cfg, point.seed).map_err(|e| format!("{}: {e}", point.app))
+    } else {
+        // `fast` is already folded into `cfg` by `ExplorePoint::config`.
+        compile_dense(&point.app, cfg, ctx, false, point.seed)
+    }
+}
+
 /// Outcome of one grid point.
 #[derive(Debug, Clone)]
 pub struct PointResult {
@@ -84,13 +112,16 @@ pub struct CacheStats {
     pub misses: usize,
     /// Points served from the persistent metrics cache.
     pub disk_hits: usize,
+    /// Compiled artifacts rehydrated from the persistent artifact store
+    /// instead of recompiling (fingerprint-verified).
+    pub art_hits: usize,
     /// Compile contexts built for non-base architectures.
     pub ctx_builds: usize,
 }
 
 impl CacheStats {
     pub fn total_hits(&self) -> usize {
-        self.memory_hits + self.disk_hits
+        self.memory_hits + self.disk_hits + self.art_hits
     }
 }
 
@@ -360,19 +391,24 @@ impl<'a> EvalSession<'a> {
             .collect()
     }
 
-    /// Cumulative cache traffic across every batch this session ran.
+    /// Cumulative cache traffic across every batch this session ran. A
+    /// store rehydration happens *inside* an in-memory miss, so `misses`
+    /// (fresh compiles) subtracts the rehydrated count back out.
     pub fn stats(&self) -> CacheStats {
+        let art_hits = self.disk.map(|d| d.artifacts().hits()).unwrap_or(0);
         CacheStats {
             memory_hits: self.artifacts.hits(),
-            misses: self.artifacts.misses(),
+            misses: self.artifacts.misses().saturating_sub(art_hits),
             disk_hits: self.disk.map(|d| d.disk_hits()).unwrap_or(0),
+            art_hits,
             ctx_builds: self.ctxs.builds(),
         }
     }
 
-    /// Evaluate one point: persistent cache, then artifact cache, then a
-    /// fresh compile + measurement under the point's effective
-    /// architecture.
+    /// Evaluate one point: persistent metrics cache, then in-memory
+    /// artifact cache, then the persistent artifact store (rehydrate a
+    /// warm artifact instead of recompiling), then a fresh compile +
+    /// measurement under the point's effective architecture.
     fn evaluate(&self, point: &ExplorePoint) -> PointResult {
         let spec = self.spec;
         let sparse = crate::apps::is_sparse_name(&point.app);
@@ -386,34 +422,39 @@ impl<'a> EvalSession<'a> {
 
         if let Some(d) = self.disk {
             if let Some(m) = d.load(key) {
+                // The artifact was not loaded, but the point WAS used:
+                // tell the LRU journal, or fully-warm sweeps would look
+                // cold to a later GC.
+                d.artifacts().note_use(key);
                 return PointResult { point: point.clone(), metrics: Ok(m), from_disk: true };
             }
         }
         if let Some(m) = self.artifacts.measured(key) {
             return PointResult { point: point.clone(), metrics: Ok(m), from_disk: false };
         }
-        // Cache miss: now build (or fetch) the delay-annotated context.
-        let ctx_arc;
-        let ctx: &CompileCtx = if needs_own_ctx {
-            ctx_arc = self.ctxs.get_or_build(&arch);
-            &ctx_arc
-        } else {
-            self.base
-        };
         let compiled = self.artifacts.get_or_compile(key, || {
-            if sparse || spec.scale == Scale::Tiny {
-                let app = match spec.scale {
-                    Scale::Paper => crate::apps::by_name(&point.app),
-                    Scale::Tiny => crate::apps::by_name_tiny(&point.app),
+            // A warm artifact from an earlier (possibly killed or sharded)
+            // run rehydrates instead of recompiling; the fingerprint check
+            // inside `load` rejects torn or stale files, which then fall
+            // through to a fresh compile that repairs the store entry.
+            if let Some(store) = self.disk.map(DiskCache::artifacts) {
+                if let Some(c) = store.load(key, None) {
+                    return Ok(c);
                 }
-                .ok_or_else(|| format!("unknown app '{}'", point.app))?;
-                compile(&app, ctx, &cfg, point.seed).map_err(|e| format!("{}: {e}", point.app))
-            } else {
-                // Paper-scale dense: shared dispatch with the experiment
-                // harness (honours `unroll_dup`, handles resnet). `fast`
-                // is already folded into `cfg` by `ExplorePoint::config`.
-                compile_dense(&point.app, &cfg, ctx, false, point.seed)
             }
+            // Only a real compile pays for a delay-annotated context.
+            let ctx_arc;
+            let ctx: &CompileCtx = if needs_own_ctx {
+                ctx_arc = self.ctxs.get_or_build(&arch);
+                &ctx_arc
+            } else {
+                self.base
+            };
+            let c = compile_effective(spec, point, &cfg, ctx)?;
+            if let Some(store) = self.disk.map(DiskCache::artifacts) {
+                store.store(key, &c);
+            }
+            Ok(c)
         });
 
         let metrics = compiled.and_then(|c| measure(&point.app, &c, sparse));
@@ -512,6 +553,75 @@ mod tests {
             assert_eq!(a.metrics.as_ref().ok(), b.metrics.as_ref().ok());
             assert!(b.from_disk);
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Artifact persistence: when the metrics records are gone but the
+    /// `.art` files survive, a re-run rehydrates every artifact instead of
+    /// recompiling (zero fresh compiles), and the metrics it re-derives
+    /// are identical.
+    #[test]
+    fn artifact_store_rehydrates_when_metrics_records_are_lost() {
+        let dir = std::env::temp_dir().join(format!("cascade-rehydrate-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = CompileCtx::paper();
+        let spec = tiny_spec();
+
+        let dc = DiskCache::at(&dir);
+        let first = run(&spec, &ctx, 2, Some(&dc));
+        let distinct = first.stats.misses;
+        assert!(distinct > 0);
+        assert_eq!(dc.artifacts().stores(), distinct, "every fresh compile persists its artifact");
+
+        // Lose the metrics records (e.g. a partial rsync), keep the .art
+        // files: the re-run must rehydrate, not recompile.
+        for r in &first.results {
+            let key = effective_key(&spec, &ctx.arch, &r.point);
+            let _ = std::fs::remove_file(dir.join(format!("{key:016x}.rec")));
+        }
+        let dc2 = DiskCache::at(&dir);
+        let second = run(&spec, &ctx, 2, Some(&dc2));
+        assert_eq!(second.stats.misses, 0, "no fresh compiles on a warm artifact store");
+        assert_eq!(second.stats.art_hits, distinct);
+        for (a, b) in first.results.iter().zip(&second.results) {
+            assert_eq!(a.metrics.as_ref().ok(), b.metrics.as_ref().ok());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A torn `.art` file (writer killed mid-write, disk corruption) is
+    /// detected by the fingerprint check and recompiled — never trusted —
+    /// and the fresh compile repairs the store entry in place.
+    #[test]
+    fn torn_artifact_is_recompiled_not_trusted() {
+        let dir = std::env::temp_dir().join(format!("cascade-torn-art-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = CompileCtx::paper();
+        let spec = tiny_spec().with_levels(["compute"]);
+        let dc = DiskCache::at(&dir);
+        let first = run(&spec, &ctx, 1, Some(&dc));
+        let key = effective_key(&spec, &ctx.arch, &spec.points()[0]);
+        let art = dir.join("artifacts").join(format!("{key:016x}.art"));
+        assert!(art.exists());
+
+        // Tear the artifact and drop the metrics record so the next run
+        // must go through the store.
+        let bytes = std::fs::read(&art).unwrap();
+        std::fs::write(&art, &bytes[..bytes.len() / 3]).unwrap();
+        std::fs::remove_file(dir.join(format!("{key:016x}.rec"))).unwrap();
+
+        let dc2 = DiskCache::at(&dir);
+        let second = run(&spec, &ctx, 1, Some(&dc2));
+        assert_eq!(second.stats.art_hits, 0, "a torn artifact must not count as a hit");
+        assert_eq!(second.stats.misses, 1, "the torn artifact is recompiled");
+        assert_eq!(dc2.artifacts().rejected(), 1);
+        assert_eq!(
+            first.results[0].metrics.as_ref().ok(),
+            second.results[0].metrics.as_ref().ok()
+        );
+        // The fresh compile repaired the store: a third run rehydrates.
+        let reread = std::fs::read(&art).unwrap();
+        assert_eq!(reread, bytes, "repaired artifact is byte-identical to the original");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -26,6 +26,23 @@
 //! ranks the eventual knee into the survivor set (empirically: whenever
 //! budget-insensitive axes dominate), halving returns the grid's knee
 //! point while compiling strictly fewer full-budget points.
+//!
+//! The rung ladder and the promotion knobs are plain data:
+//!
+//! ```
+//! use cascade::explore::search::{rung_budgets, HalvingParams, Objective};
+//!
+//! // Full budget 200, floor 5, eta 3, largest per-app cohort of 9
+//! // candidates: the ladder always ends at the full budget and rises
+//! // strictly.
+//! let ladder = rung_budgets(200, 5, 3, 9);
+//! assert_eq!(*ladder.last().unwrap(), 200);
+//! assert!(ladder.windows(2).all(|w| w[0] < w[1]));
+//!
+//! assert_eq!(Objective::parse("edp").unwrap(), Objective::Edp);
+//! let bad = HalvingParams { eta: 1, ..HalvingParams::default() };
+//! assert!(bad.validate().is_err(), "eta < 2 cannot halve anything");
+//! ```
 
 use std::collections::HashSet;
 

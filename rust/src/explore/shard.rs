@@ -29,7 +29,29 @@
 //!   the full result vector from the merged cache, and emits
 //!   `results/explore.{md,json}` through the same
 //!   [`super::report::render_report`] path as an unsharded run — the
-//!   merged report is byte-identical to the single-process one.
+//!   merged report is byte-identical to the single-process one. The union
+//!   covers the compiled-artifact store too (`explore_cache/artifacts/`),
+//!   so downstream consumers of the merged directory (`cascade encode
+//!   --from-cache`, simulation) rehydrate any shard's surviving artifact
+//!   without recompiling (a shard-local `--cache-cap` GC runs unpinned
+//!   and may have evicted some — those recompile on next use).
+//!
+//! The partition itself is plain arithmetic over the effective cache key:
+//!
+//! ```
+//! use cascade::explore::shard::{owner_of, ShardSpec};
+//!
+//! let sh = ShardSpec::parse("2/3").unwrap();
+//! assert_eq!((sh.index, sh.count), (2, 3));
+//! assert_eq!(sh.manifest_name(), "shard_2_of_3.json");
+//!
+//! // Every key has exactly one owner — the partition is total and
+//! // disjoint, so coverage gaps and overlaps are detectable.
+//! let key = 0xdead_beef_u64;
+//! let owners: Vec<usize> =
+//!     (1..=3).filter(|&k| ShardSpec { index: k, count: 3 }.owns(key)).collect();
+//! assert_eq!(owners, vec![owner_of(key, 3)]);
+//! ```
 
 use std::collections::btree_map::Entry;
 use std::collections::{BTreeMap, HashMap};
@@ -450,10 +472,12 @@ pub fn run_sharded(
         manifest_path.display()
     );
     println!(
-        "cache: {} hit(s) ({} in-memory, {} disk), {} compile(s), {} extra context(s)",
+        "cache: {} hit(s) ({} in-memory, {} disk metrics, {} rehydrated artifact(s)), \
+         {} compile(s), {} extra context(s)",
         stats.total_hits(),
         stats.memory_hits,
         stats.disk_hits,
+        stats.art_hits,
         stats.misses,
         stats.ctx_builds
     );
@@ -482,6 +506,8 @@ pub struct MergeOutcome {
     pub shards: usize,
     /// Cache records copied into the merged `explore_cache/`.
     pub cache_copied: usize,
+    /// Compiled artifacts copied into the merged `explore_cache/artifacts/`.
+    pub artifacts_copied: usize,
     /// Partial-log lines appended to the merged journal.
     pub log_lines: usize,
 }
@@ -688,6 +714,7 @@ pub fn merge(
     std::fs::create_dir_all(&out_cache)
         .map_err(|e| format!("explore-merge: cannot create {}: {e}", out_cache.display()))?;
     let mut cache_copied = 0usize;
+    let mut artifacts_copied = 0usize;
     let mut log_lines = 0usize;
     let out_log = out_dir.join("explore_partial.jsonl");
     if out_log.exists() {
@@ -708,6 +735,7 @@ pub fn merge(
     }
     for dir in &source_dirs {
         cache_copied += union_cache(&dir.join("explore_cache"), &out_cache)?;
+        artifacts_copied += union_artifacts(&dir.join("explore_cache"), &out_cache)?;
         log_lines += append_log(&dir.join("explore_partial.jsonl"), &out_log)?;
     }
 
@@ -747,6 +775,7 @@ pub fn merge(
         trajectory,
         shards: n,
         cache_copied,
+        artifacts_copied,
         log_lines,
     })
 }
@@ -765,13 +794,28 @@ pub fn merge_cli(dirs: &[PathBuf]) -> Result<(), String> {
         super::report::render_report(&merged.spec, &merged.results, trajectory);
     crate::experiments::common::emit("explore", "Design-space exploration", &md, &json);
     println!(
-        "explore-merge: {} shard(s), {} point(s), {} cache record(s) unioned, {} \
-         partial-log line(s)",
+        "explore-merge: {} shard(s), {} point(s), {} cache record(s) + {} artifact(s) \
+         unioned, {} partial-log line(s)",
         merged.shards,
         merged.results.len(),
         merged.cache_copied,
+        merged.artifacts_copied,
         merged.log_lines
     );
+    // The merged store is the one downstream consumers (encode, summary)
+    // read: pin its frontier/knee artifacts and report its size.
+    let disk = DiskCache::at(out_dir.join("explore_cache"));
+    let pinned = super::pin_survivors(
+        disk.artifacts(),
+        &merged.spec,
+        &ArchParams::paper(),
+        &merged.results,
+        &analyses,
+    );
+    if pinned > 0 {
+        println!("cache: pinned {pinned} frontier/knee artifact(s) against eviction");
+    }
+    println!("{}", disk.stat_string());
     let failed: usize = analyses.iter().map(|a| a.failed.len()).sum();
     if failed > 0 {
         return Err(format!("{failed} point(s) failed to compile"));
@@ -809,17 +853,21 @@ fn clear_foreign_manifests(dir: &Path, keep: &Manifest) -> usize {
     removed
 }
 
-/// Copy every `.rec` record from `src` into `dst`, skipping records
-/// already present with identical bytes and refusing to merge conflicting
-/// ones (same key, different metrics — a determinism violation, not a
-/// merge problem). Returns the number of records copied.
-fn union_cache(src: &Path, dst: &Path) -> Result<usize, String> {
+/// Copy every `.{ext}` file from `src` into `dst`, skipping files already
+/// present with identical bytes and refusing to merge conflicting ones
+/// (same name, different bytes — a determinism violation, not a merge
+/// problem; both layers serialize canonically, so equal content means
+/// equal bytes). Returns the number of files copied. An absent `src`
+/// contributes nothing (later lookups name any real gap).
+fn union_files(src: &Path, dst: &Path, ext: &str, what: &str) -> Result<usize, String> {
     let Ok(rd) = std::fs::read_dir(src) else {
-        return Ok(0); // No cache dir: metrics lookups will name the gap.
+        return Ok(0);
     };
+    std::fs::create_dir_all(dst)
+        .map_err(|e| format!("explore-merge: cannot create {}: {e}", dst.display()))?;
     let mut paths: Vec<PathBuf> = rd
         .filter_map(|e| e.ok().map(|e| e.path()))
-        .filter(|p| p.extension().map(|x| x == "rec").unwrap_or(false))
+        .filter(|p| p.extension().map(|x| x == ext).unwrap_or(false))
         .collect();
     paths.sort();
     let mut copied = 0usize;
@@ -833,8 +881,8 @@ fn union_cache(src: &Path, dst: &Path) -> Result<usize, String> {
                 .map_err(|e| format!("explore-merge: read {}: {e}", to.display()))?;
             if existing != data {
                 return Err(format!(
-                    "explore-merge: conflicting cache records for {} (shards compiled \
-                     different artifacts for one key)",
+                    "explore-merge: conflicting {what} for {} (shards produced different \
+                     bytes for one key — determinism violation)",
                     name.to_string_lossy()
                 ));
             }
@@ -844,6 +892,35 @@ fn union_cache(src: &Path, dst: &Path) -> Result<usize, String> {
             copied += 1;
         }
     }
+    Ok(copied)
+}
+
+/// Union the metrics records of two cache directories.
+fn union_cache(src: &Path, dst: &Path) -> Result<usize, String> {
+    union_files(src, dst, "rec", "cache records")
+}
+
+/// Union the compiled-artifact stores under two cache directories: copy
+/// every `artifacts/*.art` from `src_cache` into `dst_cache/artifacts/`,
+/// with the same validation the metrics union applies — an already-present
+/// artifact must be byte-identical (serialization is canonical, so two
+/// shards that compiled one key deterministically wrote the same bytes;
+/// anything else is a determinism violation and aborts the merge). Pin
+/// sets are unioned and access journals concatenated so LRU history and
+/// GC survivors carry over. Returns the number of artifacts copied.
+fn union_artifacts(src_cache: &Path, dst_cache: &Path) -> Result<usize, String> {
+    let src = src_cache.join("artifacts");
+    let dst = dst_cache.join("artifacts");
+    let copied = union_files(&src, &dst, "art", "compiled artifacts")?;
+    // Pins: set union (a key any shard pinned stays pinned). The source
+    // side is read without a store handle — sources are read-only to a
+    // merge, and `ArtifactStore::at` creates its directory.
+    let pins = crate::explore::artifact::read_pins_file(&src.join("pins"));
+    if !pins.is_empty() {
+        crate::explore::artifact::ArtifactStore::at(&dst).pin(pins);
+    }
+    // Journal: concatenate (append-only, like the partial log).
+    append_log(&src.join("atime.log"), &dst.join("atime.log"))?;
     Ok(copied)
 }
 
@@ -1128,6 +1205,64 @@ mod tests {
         assert!(!dir.join("shard_1_of_3.json").exists(), "same-spec different-N is stale too");
         assert!(sibling.exists(), "same-cohort sibling must survive");
         assert!(dir.join("shard_1_of_2.json").exists());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// Artifact stores union alongside the metrics: every shard's `.art`
+    /// files land in the merged store, pins survive, a cap smaller than
+    /// the merged store evicts only unpinned entries, and the merged
+    /// report — whose source of truth is the metrics records — is
+    /// byte-identical before and after the eviction.
+    #[test]
+    fn merge_unions_artifact_stores_with_pins_and_cap() {
+        use crate::explore::artifact::{ArtifactStore, CacheCap};
+        let root = tmp_root("merge-art");
+        let _ = std::fs::remove_dir_all(&root);
+        let spec = tiny_two_point_spec();
+        let n = 2;
+        let base = ArchParams::paper();
+        let dirs: Vec<PathBuf> = (1..=n)
+            .map(|k| {
+                let sh = ShardSpec { index: k, count: n };
+                fake_shard_dir(&root, &spec, sh, &format!("shard{k}"))
+            })
+            .collect();
+        // Drop one (fake) artifact per point into its owner's store — the
+        // union and GC layers never parse artifact bodies.
+        let keys: Vec<u64> =
+            spec.points().iter().map(|p| effective_key(&spec, &base, p)).collect();
+        for &key in &keys {
+            let art_dir = dirs[owner_of(key, n) - 1].join("explore_cache/artifacts");
+            std::fs::create_dir_all(&art_dir).unwrap();
+            std::fs::write(art_dir.join(format!("{key:016x}.art")), format!("fake-{key:016x}"))
+                .unwrap();
+        }
+        let pin_key = keys[0];
+        ArtifactStore::at(dirs[owner_of(pin_key, n) - 1].join("explore_cache/artifacts"))
+            .pin([pin_key]);
+
+        let out = root.join("merged");
+        let merged = merge(&dirs, &base, &out).unwrap();
+        assert_eq!(merged.artifacts_copied, keys.len());
+        let store = ArtifactStore::at(out.join("explore_cache/artifacts"));
+        assert_eq!(store.keys().len(), keys.len());
+        assert!(store.pinned().contains(&pin_key), "pins survive the union");
+        let (md1, json1, _) =
+            crate::explore::report::render_report(&merged.spec, &merged.results, None);
+
+        // Cap smaller than the merged store: only unpinned artifacts go.
+        let r = store.gc(&CacheCap::entries(1));
+        assert_eq!(r.evicted, keys.len() - 1);
+        assert_eq!(store.keys(), vec![pin_key], "pinned survivor outlives the cap");
+
+        // A subsequent merge over the same shard dirs regenerates a
+        // byte-identical report (and restores the evicted artifacts).
+        let merged2 = merge(&dirs, &base, &out).unwrap();
+        let (md2, json2, _) =
+            crate::explore::report::render_report(&merged2.spec, &merged2.results, None);
+        assert_eq!(md1, md2);
+        assert_eq!(json1.to_string_pretty(), json2.to_string_pretty());
+        assert_eq!(store.keys().len(), keys.len(), "re-merge restores evicted artifacts");
         let _ = std::fs::remove_dir_all(&root);
     }
 

@@ -7,9 +7,13 @@
 //! cascade explore [--apps a,b] [--levels l1,l2] [--alphas 1.0,1.35|sweep]
 //!                 [--seeds 1,2] [--iters 25,200] [--tracks 3,5] [--regwords 16,32]
 //!                 [--fifo 2,4] [--search grid|halving] [--eta N] [--min-budget N]
-//!                 [--objective knee|crit|edp|regs] [--shard K/N]
+//!                 [--objective knee|crit|edp|regs] [--shard K/N] [--cache-cap CAP]
 //!                 [--threads N] [--power-cap MW] [--fast] [--tiny] [--no-cache]
 //! cascade explore-merge <dir>...                           merge shard runs into one report
+//! cascade encode --app gaussian [--level l] [--seed N] [--from-cache|--key HEX] [--out F]
+//!                                                          emit a bitstream (from the
+//!                                                          artifact store: zero recompiles)
+//! cascade cache <stat|gc> [--dir D] [--cache-cap CAP]      inspect / bound explore_cache/
 //! cascade arch                                             print architecture + timing model
 //! ```
 //!
@@ -31,6 +35,12 @@
 //! promoted up the budget ladder until the full budget — far fewer
 //! full-fidelity compiles on spaces where cheap budgets already separate
 //! winners.
+//!
+//! Compiled artifacts persist in `results/explore_cache/artifacts/` (see
+//! `docs/cache.md`): `cascade encode --from-cache` turns a cached point
+//! into configuration words without recompiling, `--cache-cap` bounds the
+//! store with LRU eviction (Pareto/knee survivors are pinned), and
+//! `cascade cache stat|gc` inspects or shrinks a store standalone.
 //!
 //! `--shard K/N` distributes either search across processes or machines:
 //! the shard evaluates only the points whose effective cache key it owns
@@ -58,9 +68,16 @@ fn usage() -> ! {
                    [--search grid|halving] [--eta N] [--min-budget N]\n\
                    [--objective knee|crit|edp|regs] [--shard K/N]\n\
                    [--threads N] [--power-cap MW] [--fast] [--tiny]\n\
-                   [--no-cache]                                design-space exploration\n\
+                   [--no-cache] [--cache-cap CAP]              design-space exploration\n\
            explore-merge <dir>...                               merge shard manifests + caches\n\
                                                                 into one results/explore report\n\
+           encode  --app <name> [--level <level>] [--seed N] [--alpha X] [--iters N]\n\
+                   [--tracks N] [--regwords N] [--fifo N] [--fast] [--tiny]\n\
+                   [--from-cache | --key HEX] [--out FILE]     emit bitstream config words;\n\
+                                                                --from-cache loads the compiled\n\
+                                                                artifact (zero recompiles)\n\
+           cache   <stat|gc> [--dir DIR] [--cache-cap CAP]     artifact-store statistics / GC\n\
+                                                                (CAP: bytes, 512K/8M/1G, or Nn)\n\
            arch                                                 architecture + timing summary\n\
          levels: {}\n\
          apps: {}",
@@ -115,6 +132,141 @@ fn search_kind(args: &Args) -> Result<cascade::explore::SearchKind, String> {
             Ok(SearchKind::Halving(p))
         }
         other => Err(format!("unknown --search '{other}' (grid|halving)")),
+    }
+}
+
+/// `cascade encode`: resolve one exploration point (the same axis flags as
+/// `explore`, single-valued) to its effective cache key, then emit its
+/// bitstream. `--from-cache` rehydrates the compiled artifact from
+/// `results/explore_cache/artifacts/` — fingerprint-verified, zero
+/// recompiles — and is byte-identical to encoding a fresh compile of the
+/// same point; `--key HEX` addresses the store directly. A fresh compile
+/// (no `--from-cache`) stores its artifact, warming the cache.
+fn encode_cmd(args: &Args, seed: u64) -> Result<(), String> {
+    use cascade::arch::params::ArchParams;
+    use cascade::explore::{runner, DiskCache, Scale};
+
+    let dc = DiskCache::open_default();
+    if let Some(hex) = args.opt("key") {
+        let key =
+            u64::from_str_radix(hex, 16).map_err(|_| format!("bad --key '{hex}' (hex)"))?;
+        let expect = dc.load(key).map(|m| m.artifact_fp);
+        let c = dc.artifacts().load(key, expect).ok_or_else(|| no_artifact(&dc, key))?;
+        println!("encode: artifact {key:016x} rehydrated (0 recompiles)");
+        return write_bitstream(&c, key, args, true);
+    }
+
+    let app = args.opt("app").ok_or("encode: --app <name> (or --key HEX) required")?;
+    let mut spec = cascade::explore::ExploreSpec::default()
+        .with_apps([app])
+        .with_levels([args.opt_or("level", "full")])
+        .with_seeds([seed]);
+    if let Some(s) = args.opt("alpha") {
+        spec = spec.with_alphas([s.parse().map_err(|_| format!("bad --alpha '{s}'"))?]);
+    }
+    let one_usize = |name: &str| -> Result<Option<usize>, String> {
+        match args.opt(name) {
+            None => Ok(None),
+            Some(s) => s.parse().map(Some).map_err(|_| format!("bad --{name} '{s}'")),
+        }
+    };
+    if let Some(v) = one_usize("iters")? {
+        spec = spec.with_iters([v]);
+    }
+    if let Some(v) = one_usize("tracks")? {
+        spec = spec.with_tracks([v]);
+    }
+    if let Some(v) = one_usize("regwords")? {
+        spec = spec.with_regwords([v]);
+    }
+    if let Some(v) = one_usize("fifo")? {
+        spec = spec.with_fifos([v]);
+    }
+    spec = spec.with_fast(args.flag("fast"));
+    if args.flag("tiny") {
+        spec = spec.with_scale(Scale::Tiny);
+    }
+    spec.validate()?;
+    let point = spec.points().into_iter().next().ok_or("encode: empty point spec")?;
+    let base = ArchParams::paper();
+    let (cfg, arch, key) = runner::effective_point(&spec, &base, &point);
+
+    if args.flag("from-cache") {
+        let expect = dc.load(key).map(|m| m.artifact_fp);
+        let c = dc.artifacts().load(key, expect).ok_or_else(|| no_artifact(&dc, key))?;
+        println!("encode: {} -> artifact {key:016x} rehydrated (0 recompiles)", point.label());
+        write_bitstream(&c, key, args, true)
+    } else {
+        println!("building compile context ({}x{} array, timing model)...", arch.cols, arch.rows);
+        let ctx = CompileCtx::new(arch);
+        let c = runner::compile_effective(&spec, &point, &cfg, &ctx)?;
+        dc.artifacts().store(key, &c);
+        println!("encode: {} compiled fresh; artifact stored as {key:016x}", point.label());
+        write_bitstream(&c, key, args, false)
+    }
+}
+
+fn no_artifact(dc: &cascade::explore::DiskCache, key: u64) -> String {
+    format!(
+        "no valid compiled artifact for key {key:016x} in {} — run `cascade explore` (or \
+         `cascade encode` without --from-cache) first; a torn file is reported rejected and \
+         must be recompiled",
+        dc.artifacts().dir().display()
+    )
+}
+
+fn write_bitstream(
+    c: &cascade::pipeline::Compiled,
+    key: u64,
+    args: &Args,
+    from_cache: bool,
+) -> Result<(), String> {
+    let bs = cascade::sim::encode::encode_compiled(c);
+    let out = args
+        .opt("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from(format!("results/bitstream_{key:016x}.txt")));
+    if let Some(dir) = out.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    std::fs::write(&out, bs.to_text())
+        .map_err(|e| format!("cannot write {}: {e}", out.display()))?;
+    println!(
+        "bitstream: {} configuration word(s) -> {}{}",
+        bs.len(),
+        out.display(),
+        if from_cache { " (served from the artifact store)" } else { "" }
+    );
+    Ok(())
+}
+
+/// `cascade cache stat|gc`: inspect or bound an `explore_cache/` directory
+/// (the default one, or `--dir`).
+fn cache_cmd(args: &Args) -> Result<(), String> {
+    use cascade::explore::{CacheCap, DiskCache};
+    let sub = args
+        .positionals
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or("cache: expected a subcommand (stat|gc)")?;
+    let dir = args
+        .opt("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(DiskCache::default_dir);
+    let dc = DiskCache::at(&dir);
+    match sub {
+        "stat" => {
+            println!("{}", dc.stat_string());
+            Ok(())
+        }
+        "gc" => {
+            let cap_s = args.opt("cache-cap").ok_or("cache gc: --cache-cap required")?;
+            let cap = CacheCap::parse(cap_s)?;
+            println!("cache gc: {}", dc.artifacts().gc(&cap).summary());
+            println!("{}", dc.stat_string());
+            Ok(())
+        }
+        other => Err(format!("unknown cache subcommand '{other}' (stat|gc)")),
     }
 }
 
@@ -209,6 +361,14 @@ fn main() {
                     std::process::exit(2);
                 }
             };
+            let cache_cap = match args.opt("cache-cap").map(cascade::explore::CacheCap::parse) {
+                None => None,
+                Some(Ok(c)) => Some(c),
+                Some(Err(e)) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+            };
             let threads = args.opt_usize("threads", default_threads());
             println!("building compile context (32x16 array, timing model)...");
             let ctx = CompileCtx::paper();
@@ -219,8 +379,21 @@ fn main() {
                 !args.flag("no-cache"),
                 &search,
                 shard.as_ref(),
+                cache_cap.as_ref(),
             ) {
                 eprintln!("explore failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        "encode" => {
+            if let Err(e) = encode_cmd(&args, seed) {
+                eprintln!("encode failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        "cache" => {
+            if let Err(e) = cache_cmd(&args) {
+                eprintln!("cache failed: {e}");
                 std::process::exit(1);
             }
         }

@@ -20,6 +20,19 @@ pub const MEM_SCHED: u32 = 3;
 pub const IO_IN: u32 = 1;
 pub const IO_OUT: u32 = 2;
 
+/// Encode a [`crate::pipeline::Compiled`] artifact — fresh from the
+/// compiler or rehydrated from the explore artifact store — into
+/// configuration words. Builds its own interconnect graph from the
+/// design's architecture: graph construction depends only on the
+/// structural parameters (not `hardened_flush`, the one knob on which a
+/// design's arch can differ from its compile context's base), so the node
+/// ids match the ones recorded in the routes, and `cascade encode
+/// --from-cache` is byte-identical to encoding a fresh compile.
+pub fn encode_compiled(c: &crate::pipeline::Compiled) -> Bitstream {
+    let graph = InterconnectGraph::build(&c.design.arch);
+    encode(&c.design, &c.schedule, &graph)
+}
+
 /// Encode a routed design + schedule into configuration words.
 pub fn encode(d: &RoutedDesign, sched: &Schedule, graph: &InterconnectGraph) -> Bitstream {
     let arch = &d.arch;
@@ -220,6 +233,20 @@ mod tests {
         assert!(bs.len() > 100, "bitstream suspiciously small: {}", bs.len());
         let problems = verify_roundtrip(&c.design, &bs, &ctx.graph);
         assert!(problems.is_empty(), "{problems:?}");
+    }
+
+    /// `encode_compiled` (the artifact-store consumer's entry point) must
+    /// agree exactly with encoding through the compile context's graph.
+    #[test]
+    fn encode_compiled_matches_ctx_graph_encoding() {
+        let ctx = CompileCtx::paper();
+        let app = crate::apps::dense::gaussian(64, 64, 2);
+        // `full` exercises the hardened-flush divergence between the
+        // design's arch and the context's base arch.
+        let c = compile(&app, &ctx, &PipelineConfig::full(), 3).unwrap();
+        let via_ctx = encode(&c.design, &c.schedule, &ctx.graph);
+        let via_artifact = encode_compiled(&c);
+        assert_eq!(via_ctx.to_text(), via_artifact.to_text());
     }
 
     #[test]

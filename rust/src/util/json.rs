@@ -11,6 +11,14 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// Integers with magnitude below this bound are exactly representable in
+/// f64, so they may travel as JSON numbers; anything at or beyond it must
+/// use a string encoding (hex keys, decimal constants). The integer
+/// accessors ([`Json::as_u64`], [`Json::as_i64`]) and the artifact
+/// serializer's number-vs-string decision share this single constant so
+/// encodability and decodability can never drift apart.
+pub const EXACT_INT_BOUND: i64 = 9_000_000_000_000_000;
+
 /// A JSON value. Object keys are ordered (BTreeMap) so serialized output is
 /// deterministic — important for diffable experiment records.
 #[derive(Debug, Clone, PartialEq)]
@@ -99,13 +107,28 @@ impl Json {
     /// strings for exactly this reason).
     pub fn as_u64(&self) -> Option<u64> {
         match self {
-            Json::Num(x) if *x >= 0.0 && x.trunc() == *x && *x < 9.0e15 => Some(*x as u64),
+            Json::Num(x) if *x >= 0.0 && x.trunc() == *x && *x < EXACT_INT_BOUND as f64 => {
+                Some(*x as u64)
+            }
             _ => None,
         }
     }
 
     pub fn as_usize(&self) -> Option<usize> {
         self.as_u64().map(|v| v as usize)
+    }
+
+    /// Integral numbers of either sign within f64's exact-integer range
+    /// (the compiled-artifact serializer stores small signed values —
+    /// constants, strides — directly; large u64 keys still travel as hex
+    /// strings).
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Num(x) if x.trunc() == *x && x.abs() < EXACT_INT_BOUND as f64 => {
+                Some(*x as i64)
+            }
+            _ => None,
+        }
     }
 
     pub fn as_arr(&self) -> Option<&[Json]> {
@@ -572,5 +595,8 @@ mod tests {
         assert_eq!(Json::from(true).as_f64(), None);
         assert_eq!(Json::from("s").as_arr(), None);
         assert_eq!(Json::from(3.0).as_usize(), Some(3));
+        assert_eq!(Json::from(-3.0).as_i64(), Some(-3));
+        assert_eq!(Json::from(1.5).as_i64(), None);
+        assert_eq!(Json::from(true).as_i64(), None);
     }
 }
