@@ -1205,6 +1205,57 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    /// The daemon-concurrency regression: journal touches must stay one
+    /// `write_all` per access (O_APPEND), so interleaved `note_use` calls
+    /// from concurrent serve workers — same handle shared across threads
+    /// *and* separate handles on the same directory — never produce a
+    /// torn journal line. Every line must stay an individually parseable
+    /// hex key and the line count must account for every touch.
+    #[test]
+    fn concurrent_journal_touches_never_tear_lines() {
+        let dir =
+            std::env::temp_dir().join(format!("cascade-journal-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ArtifactStore::at(&dir);
+        let (_ctx, c) = tiny_compiled("none", 2);
+        let keys: Vec<u64> = vec![0x11, 0x2222, 0xdeadbeef12345678];
+        for &k in &keys {
+            store.store(k, &c); // one journal touch each
+        }
+
+        const THREADS: usize = 4;
+        const TOUCHES: usize = 50;
+        let other = ArtifactStore::at(&dir); // a second process's handle
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let store = &store;
+                let other = &other;
+                let keys = &keys;
+                s.spawn(move || {
+                    let handle: &ArtifactStore = if t % 2 == 0 { store } else { other };
+                    for i in 0..TOUCHES {
+                        handle.note_use(keys[(t + i) % keys.len()]);
+                    }
+                });
+            }
+        });
+
+        let text = std::fs::read_to_string(dir.join("atime.log")).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(
+            lines.len(),
+            keys.len() + THREADS * TOUCHES,
+            "every store and every touch must land as exactly one line"
+        );
+        assert!(text.ends_with('\n'), "the journal must end on a line boundary");
+        for line in lines {
+            assert_eq!(line.len(), 16, "torn or glued journal line: {line:?}");
+            let k = u64::from_str_radix(line, 16).expect("unparseable journal line");
+            assert!(keys.contains(&k), "journal line names an unknown key: {line}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     /// GC tests drive the store through its file layout directly (fake
     /// fixed-size entries), since eviction never parses artifact bodies.
     fn fake_store(tag: &str, n: usize, size: usize) -> (PathBuf, ArtifactStore) {

@@ -293,11 +293,29 @@ pub struct ArtifactCache {
     metrics: Mutex<HashMap<u64, PointMetrics>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    /// Ephemeral mode (`cascade serve`): artifact slots live only while a
+    /// compile is in flight, so a long-running daemon's *artifact* memory
+    /// is bounded by its concurrency, not by how many distinct points
+    /// clients have ever requested. The measured-metrics side table (on
+    /// the order of 100 bytes per distinct point) is kept in both modes —
+    /// re-measuring can cost a full functional simulation.
+    ephemeral: bool,
 }
 
 impl ArtifactCache {
     pub fn new() -> ArtifactCache {
         ArtifactCache::default()
+    }
+
+    /// A cache that deduplicates *in-flight* compiles but retains no
+    /// compiled artifacts after they complete — waiters blocked on a slot
+    /// still share its result; later callers fall through to the
+    /// persistent store. Measured metrics are still retained (small, and
+    /// re-measuring can cost a simulation). For long-running many-client
+    /// service (the `cascade serve` daemon); sweeps want
+    /// [`ArtifactCache::new`].
+    pub fn ephemeral() -> ArtifactCache {
+        ArtifactCache { ephemeral: true, ..ArtifactCache::default() }
     }
 
     /// Return the cached artifact for `key`, or run `compile` to produce
@@ -321,6 +339,14 @@ impl ArtifactCache {
         self.misses.fetch_add(1, Ordering::Relaxed);
         let res = compile().map(Arc::new);
         *guard = Some(res.clone());
+        if self.ephemeral {
+            // Drop the map entry (and, once the waiters holding this
+            // slot's Arc drain, the artifact). Anyone who grabbed the slot
+            // before this removal still reads the result above; anyone
+            // arriving later re-resolves through the persistent store.
+            drop(guard);
+            self.slots.lock().unwrap().remove(&key);
+        }
         res
     }
 
@@ -332,6 +358,14 @@ impl ArtifactCache {
             self.hits.fetch_add(1, Ordering::Relaxed);
         }
         m
+    }
+
+    /// [`Self::measured`] without the hit accounting — for the
+    /// post-dedup recheck, where the slot already counted the hit and a
+    /// scheduling-dependent probe must not perturb the (deterministic)
+    /// cache statistics.
+    pub fn measured_quiet(&self, key: u64) -> Option<PointMetrics> {
+        self.metrics.lock().unwrap().get(&key).cloned()
     }
 
     /// Record the measured metrics for `key` (first writer wins; the
@@ -411,6 +445,26 @@ impl DiskCache {
             s.pinned,
             s.journal_lines
         )
+    }
+
+    /// Machine-readable cache summary — the one formatter behind both
+    /// `cascade cache stat --json` and the serve daemon's `stat` response,
+    /// so the two can never drift apart. Keys: `dir`, `metrics_records`,
+    /// and an `artifacts` object with `entries` / `bytes` / `pinned` /
+    /// `journal_lines`.
+    pub fn stat_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let s = self.artifacts.stat();
+        let mut art = Json::obj();
+        art.set("entries", s.entries)
+            .set("bytes", s.bytes)
+            .set("pinned", s.pinned)
+            .set("journal_lines", s.journal_lines);
+        let mut j = Json::obj();
+        j.set("dir", self.dir.display().to_string())
+            .set("metrics_records", self.record_count())
+            .set("artifacts", art);
+        j
     }
 
     fn path(&self, key: u64) -> PathBuf {
@@ -516,6 +570,38 @@ mod tests {
         dc.store(42, &m);
         assert_eq!(dc.load(42), Some(m));
         assert_eq!(dc.disk_hits(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stat_json_reports_records_and_artifacts() {
+        use crate::util::json::Json;
+        let dir = std::env::temp_dir().join(format!("cascade-statj-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dc = DiskCache::at(&dir);
+        let m = PointMetrics {
+            crit_ns: 1.0,
+            fmax_mhz: 1.0,
+            runtime_ms: 1.0,
+            power_mw: 1.0,
+            energy_mj: 1.0,
+            edp: 1.0,
+            pipe_regs: 1,
+            util_pct: 1.0,
+            cycles: 0,
+            artifact_fp: 1,
+        };
+        dc.store(7, &m);
+        let j = dc.stat_json();
+        assert_eq!(j.get("metrics_records").and_then(Json::as_usize), Some(1));
+        let art = j.get("artifacts").expect("artifacts section");
+        assert_eq!(art.get("entries").and_then(Json::as_usize), Some(0));
+        assert_eq!(art.get("pinned").and_then(Json::as_usize), Some(0));
+        assert!(j.get("dir").and_then(Json::as_str).is_some());
+        // One formatter, two consumers: the serialized form is what both
+        // `cascade cache stat --json` and the serve daemon emit.
+        let s = j.to_string_compact();
+        assert!(s.contains("\"metrics_records\":1"), "{s}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -56,7 +56,9 @@ pub mod space;
 
 pub use artifact::{ArtifactStore, CacheCap, GcReport, StoreStat};
 pub use cache::{ArtifactCache, DiskCache, PointMetrics};
-pub use runner::{run, EvalSession, PartialSink, PointResult, RunOutcome};
+pub use runner::{
+    run, EvalSession, PartialSink, PointResult, Provenance, RunOutcome, SessionCore,
+};
 pub use search::{run_halving, HalvingParams, Objective, RungReport, SearchOutcome};
 pub use shard::{merge, merge_cli, Manifest, MergeOutcome, ShardOutcome, ShardSpec};
 pub use space::{ExplorePoint, ExploreSpec, Scale};

@@ -16,7 +16,11 @@
 //! A session outlives a single sweep: the successive-halving search in
 //! [`super::search`] evaluates every rung through one session, so a
 //! candidate promoted to a higher budget reuses the artifacts, contexts
-//! and disk records its cheaper evaluation already produced.
+//! and disk records its cheaper evaluation already produced. The
+//! spec-independent part — caches plus lookup/compile logic — is factored
+//! into [`SessionCore`], which `cascade serve` holds for its whole daemon
+//! lifetime to resolve every client request (each with its own
+//! single-point spec) through one set of warm caches.
 //!
 //! Completed points can be streamed to a [`PartialSink`]
 //! (`results/explore_partial.jsonl`): one JSON line per evaluation, in
@@ -177,6 +181,17 @@ impl CtxCache {
     pub fn builds(&self) -> usize {
         self.builds.load(Ordering::Relaxed)
     }
+
+    /// Drop every cached context, returning how many were dropped. A
+    /// build already in flight keeps its slot alive through its own `Arc`
+    /// and completes normally; later callers simply rebuild. The build
+    /// counter is cumulative and is *not* reset.
+    pub fn clear(&self) -> usize {
+        let mut slots = self.slots.lock().unwrap();
+        let n = slots.len();
+        slots.clear();
+        n
+    }
 }
 
 /// Append-only JSONL journal of completed evaluations. Lines are written
@@ -323,16 +338,246 @@ fn count_lines(path: &Path) -> (usize, bool) {
     (n, last == b'\n')
 }
 
-/// A reusable evaluation session: shared caches + streaming sink. The
-/// grid runner evaluates one batch; the halving search evaluates one batch
-/// per rung through the same session.
-pub struct EvalSession<'a> {
-    spec: &'a ExploreSpec,
+/// Where one served evaluation's artifact (or its metrics) came from —
+/// the per-request cache provenance `cascade serve` reports to clients.
+/// The ordering is the lookup order of [`SessionCore::evaluate_with`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Provenance {
+    /// A fresh compile ran (counts toward [`CacheStats::misses`]).
+    Fresh,
+    /// Served from the in-memory artifact cache — either a completed
+    /// entry or an in-flight compile this request waited on (the daemon's
+    /// N-clients-one-compile deduplication path).
+    WarmMem,
+    /// Rehydrated from the persistent artifact store (`.art`,
+    /// fingerprint-verified).
+    WarmArt,
+    /// Served from the persistent metrics record (`.rec`) without
+    /// touching the compiled artifact at all.
+    WarmRec,
+}
+
+impl Provenance {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Provenance::Fresh => "fresh",
+            Provenance::WarmMem => "warm_mem",
+            Provenance::WarmArt => "warm_art",
+            Provenance::WarmRec => "warm_rec",
+        }
+    }
+}
+
+/// The spec-independent heart of an evaluation session: the shared caches
+/// (in-memory artifacts, per-architecture compile contexts, persistent
+/// disk cache) plus the lookup/compile logic, *without* a fixed
+/// [`ExploreSpec`]. A sweep wraps one in an [`EvalSession`] with a single
+/// spec; the `cascade serve` daemon holds one for its whole lifetime and
+/// resolves every client request — each carrying its own single-point spec
+/// — through the same warm caches, so concurrent identical requests
+/// deduplicate to exactly one compile.
+pub struct SessionCore<'a> {
     base: &'a CompileCtx,
     base_sig: String,
     artifacts: ArtifactCache,
     ctxs: CtxCache,
     disk: Option<&'a DiskCache>,
+}
+
+impl<'a> SessionCore<'a> {
+    /// A core whose in-memory artifact cache retains every compiled
+    /// artifact for the session's lifetime (sweep behaviour: rungs and
+    /// duplicate grid points reuse them).
+    pub fn new(base: &'a CompileCtx, disk: Option<&'a DiskCache>) -> SessionCore<'a> {
+        SessionCore::with_cache(base, disk, ArtifactCache::new())
+    }
+
+    /// A core for long-running many-client service: in-memory artifacts
+    /// live only while a compile is in flight (concurrent identical
+    /// requests still deduplicate to one compile), and completed artifacts
+    /// are dropped in favour of the persistent store — artifact memory
+    /// stays bounded by concurrency no matter how many distinct points
+    /// clients request (the measured-metrics side table, ~100 bytes per
+    /// distinct point, is retained in both modes).
+    pub fn ephemeral(base: &'a CompileCtx, disk: Option<&'a DiskCache>) -> SessionCore<'a> {
+        SessionCore::with_cache(base, disk, ArtifactCache::ephemeral())
+    }
+
+    fn with_cache(
+        base: &'a CompileCtx,
+        disk: Option<&'a DiskCache>,
+        artifacts: ArtifactCache,
+    ) -> SessionCore<'a> {
+        SessionCore {
+            base,
+            base_sig: arch_signature(&base.arch),
+            artifacts,
+            ctxs: CtxCache::default(),
+            disk,
+        }
+    }
+
+    /// The effective cache key of `point` under `spec` (cheap parameter
+    /// work, no compile context).
+    pub fn key_of(&self, spec: &ExploreSpec, point: &ExplorePoint) -> u64 {
+        effective_key(spec, &self.base.arch, point)
+    }
+
+    /// Cumulative cache traffic across everything this core served. A
+    /// store rehydration happens *inside* an in-memory miss, so `misses`
+    /// (fresh compiles) subtracts the rehydrated count back out.
+    pub fn stats(&self) -> CacheStats {
+        let art_hits = self.disk.map(|d| d.artifacts().hits()).unwrap_or(0);
+        CacheStats {
+            memory_hits: self.artifacts.hits(),
+            misses: self.artifacts.misses().saturating_sub(art_hits),
+            disk_hits: self.disk.map(|d| d.disk_hits()).unwrap_or(0),
+            art_hits,
+            ctx_builds: self.ctxs.builds(),
+        }
+    }
+
+    /// Drop compile contexts built for non-base architectures (the base
+    /// context is borrowed, not cached, and is never dropped). The daemon's
+    /// housekeeping calls this so a long-lived server polled with many
+    /// distinct architecture variants does not accumulate delay-annotated
+    /// interconnect graphs forever; a dropped context is simply rebuilt on
+    /// the next request that needs it. Returns how many were dropped.
+    pub fn drop_arch_contexts(&self) -> usize {
+        self.ctxs.clear()
+    }
+
+    /// Evaluate one point: persistent metrics cache, then in-memory
+    /// artifact cache, then the persistent artifact store (rehydrate a
+    /// warm artifact instead of recompiling), then a fresh compile +
+    /// measurement under the point's effective architecture. Returns the
+    /// result, which [`Provenance`] layer served it, and the effective
+    /// cache key (already computed here — warm daemon hits must not pay
+    /// the derivation twice).
+    pub fn evaluate_with(
+        &self,
+        spec: &ExploreSpec,
+        point: &ExplorePoint,
+    ) -> (PointResult, Provenance, u64) {
+        let sparse = crate::apps::is_sparse_name(&point.app);
+        // Resolve the effective config, architecture and content-hash key
+        // (cheap parameter work only, so cache hits below never pay for a
+        // compile context).
+        let (cfg, arch, key) = effective_point(spec, &self.base.arch, point);
+
+        if let Some(d) = self.disk {
+            if let Some(m) = d.load(key) {
+                // The artifact was not loaded, but the point WAS used:
+                // tell the LRU journal, or fully-warm sweeps would look
+                // cold to a later GC.
+                d.artifacts().note_use(key);
+                let r = PointResult { point: point.clone(), metrics: Ok(m), from_disk: true };
+                return (r, Provenance::WarmRec, key);
+            }
+        }
+        if let Some(m) = self.artifacts.measured(key) {
+            let r = PointResult { point: point.clone(), metrics: Ok(m), from_disk: false };
+            return (r, Provenance::WarmMem, key);
+        }
+        let (compiled, prov) = self.compile_slot(spec, point, &cfg, &arch, key);
+
+        let metrics = match compiled {
+            Err(e) => Err(e),
+            Ok(c) => {
+                // A waiter that shared an in-flight winner's artifact can
+                // often reuse the winner's measurement too (the sparse
+                // functional simulation can cost as much as the compile).
+                // Quiet probe: whether it lands is scheduling-dependent,
+                // so it must not perturb the hit/miss statistics.
+                let reused = if prov == Provenance::WarmMem {
+                    self.artifacts.measured_quiet(key)
+                } else {
+                    None
+                };
+                match reused {
+                    Some(m) => Ok(m),
+                    None => measure(&point.app, &c, sparse),
+                }
+            }
+        };
+        if let Ok(m) = &metrics {
+            self.artifacts.record_measured(key, m);
+            if let Some(d) = self.disk {
+                d.store(key, m);
+            }
+        }
+        (PointResult { point: point.clone(), metrics, from_disk: false }, prov, key)
+    }
+
+    /// Resolve `point` to its *compiled artifact* (not just metrics): the
+    /// in-memory cache, then the persistent store, then a fresh compile —
+    /// the path `cascade serve`'s `encode` requests take, sharing in-flight
+    /// deduplication with concurrent `compile` requests for the same key.
+    /// A fresh compile persists its artifact, warming the store.
+    pub fn compiled_with(
+        &self,
+        spec: &ExploreSpec,
+        point: &ExplorePoint,
+    ) -> (u64, Result<Arc<Compiled>, String>, Provenance) {
+        let (cfg, arch, key) = effective_point(spec, &self.base.arch, point);
+        let (res, prov) = self.compile_slot(spec, point, &cfg, &arch, key);
+        (key, res, prov)
+    }
+
+    /// The shared dedup slot: exactly one caller per in-flight key runs
+    /// the store-load-or-compile closure; everyone else blocks on the slot
+    /// and shares its result ([`Provenance::WarmMem`]).
+    fn compile_slot(
+        &self,
+        spec: &ExploreSpec,
+        point: &ExplorePoint,
+        cfg: &PipelineConfig,
+        arch: &ArchParams,
+        key: u64,
+    ) -> (Result<Arc<Compiled>, String>, Provenance) {
+        // A point needs its own context only when the arch signature
+        // actually deviates from the base (overrides that merely restate
+        // base values reuse the base context).
+        let needs_own_ctx = point.has_arch_overrides() && arch_signature(arch) != self.base_sig;
+        let prov = std::cell::Cell::new(Provenance::WarmMem);
+        let res = self.artifacts.get_or_compile(key, || {
+            // A warm artifact from an earlier (possibly killed or sharded)
+            // run rehydrates instead of recompiling; the fingerprint check
+            // inside `load` rejects torn or stale files, which then fall
+            // through to a fresh compile that repairs the store entry.
+            if let Some(store) = self.disk.map(DiskCache::artifacts) {
+                if let Some(c) = store.load(key, None) {
+                    prov.set(Provenance::WarmArt);
+                    return Ok(c);
+                }
+            }
+            // From here on this is a fresh compile attempt — errors are
+            // compile failures, not cache traffic.
+            prov.set(Provenance::Fresh);
+            // Only a real compile pays for a delay-annotated context.
+            let ctx_arc;
+            let ctx: &CompileCtx = if needs_own_ctx {
+                ctx_arc = self.ctxs.get_or_build(arch);
+                &ctx_arc
+            } else {
+                self.base
+            };
+            let c = compile_effective(spec, point, cfg, ctx)?;
+            if let Some(store) = self.disk.map(DiskCache::artifacts) {
+                store.store(key, &c);
+            }
+            Ok(c)
+        });
+        (res, prov.get())
+    }
+}
+
+/// A reusable evaluation session: a [`SessionCore`] bound to one spec,
+/// plus the streaming sink. The grid runner evaluates one batch; the
+/// halving search evaluates one batch per rung through the same session.
+pub struct EvalSession<'a> {
+    spec: &'a ExploreSpec,
+    core: SessionCore<'a>,
     sink: Option<&'a PartialSink>,
 }
 
@@ -343,15 +588,7 @@ impl<'a> EvalSession<'a> {
         disk: Option<&'a DiskCache>,
         sink: Option<&'a PartialSink>,
     ) -> EvalSession<'a> {
-        EvalSession {
-            spec,
-            base,
-            base_sig: arch_signature(&base.arch),
-            artifacts: ArtifactCache::new(),
-            ctxs: CtxCache::default(),
-            disk,
-            sink,
-        }
+        EvalSession { spec, core: SessionCore::new(base, disk), sink }
     }
 
     /// Evaluate `points` on `threads` worker threads; results come back in
@@ -391,80 +628,14 @@ impl<'a> EvalSession<'a> {
             .collect()
     }
 
-    /// Cumulative cache traffic across every batch this session ran. A
-    /// store rehydration happens *inside* an in-memory miss, so `misses`
-    /// (fresh compiles) subtracts the rehydrated count back out.
+    /// Cumulative cache traffic across every batch this session ran.
     pub fn stats(&self) -> CacheStats {
-        let art_hits = self.disk.map(|d| d.artifacts().hits()).unwrap_or(0);
-        CacheStats {
-            memory_hits: self.artifacts.hits(),
-            misses: self.artifacts.misses().saturating_sub(art_hits),
-            disk_hits: self.disk.map(|d| d.disk_hits()).unwrap_or(0),
-            art_hits,
-            ctx_builds: self.ctxs.builds(),
-        }
+        self.core.stats()
     }
 
-    /// Evaluate one point: persistent metrics cache, then in-memory
-    /// artifact cache, then the persistent artifact store (rehydrate a
-    /// warm artifact instead of recompiling), then a fresh compile +
-    /// measurement under the point's effective architecture.
+    /// Evaluate one point through the shared [`SessionCore`].
     fn evaluate(&self, point: &ExplorePoint) -> PointResult {
-        let spec = self.spec;
-        let sparse = crate::apps::is_sparse_name(&point.app);
-        // Resolve the effective config, architecture and content-hash key
-        // (cheap parameter work only, so cache hits below never pay for a
-        // compile context). A point needs its own context only when the
-        // arch signature actually deviates from the base (overrides that
-        // merely restate base values reuse the base context).
-        let (cfg, arch, key) = effective_point(spec, &self.base.arch, point);
-        let needs_own_ctx = point.has_arch_overrides() && arch_signature(&arch) != self.base_sig;
-
-        if let Some(d) = self.disk {
-            if let Some(m) = d.load(key) {
-                // The artifact was not loaded, but the point WAS used:
-                // tell the LRU journal, or fully-warm sweeps would look
-                // cold to a later GC.
-                d.artifacts().note_use(key);
-                return PointResult { point: point.clone(), metrics: Ok(m), from_disk: true };
-            }
-        }
-        if let Some(m) = self.artifacts.measured(key) {
-            return PointResult { point: point.clone(), metrics: Ok(m), from_disk: false };
-        }
-        let compiled = self.artifacts.get_or_compile(key, || {
-            // A warm artifact from an earlier (possibly killed or sharded)
-            // run rehydrates instead of recompiling; the fingerprint check
-            // inside `load` rejects torn or stale files, which then fall
-            // through to a fresh compile that repairs the store entry.
-            if let Some(store) = self.disk.map(DiskCache::artifacts) {
-                if let Some(c) = store.load(key, None) {
-                    return Ok(c);
-                }
-            }
-            // Only a real compile pays for a delay-annotated context.
-            let ctx_arc;
-            let ctx: &CompileCtx = if needs_own_ctx {
-                ctx_arc = self.ctxs.get_or_build(&arch);
-                &ctx_arc
-            } else {
-                self.base
-            };
-            let c = compile_effective(spec, point, &cfg, ctx)?;
-            if let Some(store) = self.disk.map(DiskCache::artifacts) {
-                store.store(key, &c);
-            }
-            Ok(c)
-        });
-
-        let metrics = compiled.and_then(|c| measure(&point.app, &c, sparse));
-        if let Ok(m) = &metrics {
-            self.artifacts.record_measured(key, m);
-            if let Some(d) = self.disk {
-                d.store(key, m);
-            }
-        }
-        PointResult { point: point.clone(), metrics, from_disk: false }
+        self.core.evaluate_with(self.spec, point).0
     }
 }
 

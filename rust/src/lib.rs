@@ -48,6 +48,12 @@
 //!   shard manifests that `cascade explore-merge` validates and reassembles
 //!   into the identical single-process report. Drives `cascade explore`;
 //!   `cascade exp summary` reuses its persistent cache.
+//! * [`serve`] — the `cascade serve` daemon: a std-only TCP server
+//!   (newline-delimited JSON protocol, bounded worker pool) that serves
+//!   `compile` / `encode` / `stat` requests from one long-lived warm
+//!   session over the explore caches, with in-flight deduplication,
+//!   periodic pinned-aware GC, and graceful drain-on-shutdown; plus the
+//!   `cascade client` driver.
 //! * [`util`] — in-house substrates: deterministic PRNG, JSON writer,
 //!   mini property-testing framework, statistics helpers, micro-bench timer.
 
@@ -65,3 +71,4 @@ pub mod runtime;
 pub mod apps;
 pub mod experiments;
 pub mod explore;
+pub mod serve;

@@ -13,7 +13,12 @@
 //! cascade encode --app gaussian [--level l] [--seed N] [--from-cache|--key HEX] [--out F]
 //!                                                          emit a bitstream (from the
 //!                                                          artifact store: zero recompiles)
-//! cascade cache <stat|gc> [--dir D] [--cache-cap CAP]      inspect / bound explore_cache/
+//! cascade cache <stat|gc> [--dir D] [--cache-cap CAP] [--json]
+//!                                                          inspect / bound explore_cache/
+//! cascade serve [--addr H:P] [--workers N] [--queue N] [--cache-dir D]
+//!               [--cache-cap CAP] [--gc-every SECS]        compile/encode daemon over the store
+//! cascade client <ping|stat|compile|encode|shutdown> [--addr H:P] [point flags]
+//!               [--key HEX] [--out F] [--timeout SECS]     drive a running daemon
 //! cascade arch                                             print architecture + timing model
 //! ```
 //!
@@ -41,6 +46,15 @@
 //! into configuration words without recompiling, `--cache-cap` bounds the
 //! store with LRU eviction (Pareto/knee survivors are pinned), and
 //! `cascade cache stat|gc` inspects or shrinks a store standalone.
+//!
+//! `serve` keeps one warm session — compile contexts, in-flight compile
+//! deduplication, the metrics cache and the fingerprint-verified artifact
+//! store — behind a newline-delimited JSON socket protocol (spec:
+//! `docs/serve.md`), so many clients share one cache instead of each
+//! paying a cold start. `client` drives it from the CLI; responses carry
+//! the effective cache key and provenance (`fresh|warm_mem|warm_art|
+//! warm_rec`), and a daemon-served `encode` is byte-identical to offline
+//! `cascade encode --from-cache`.
 //!
 //! `--shard K/N` distributes either search across processes or machines:
 //! the shard evaluates only the points whose effective cache key it owns
@@ -77,7 +91,15 @@ fn usage() -> ! {
                                                                 --from-cache loads the compiled\n\
                                                                 artifact (zero recompiles)\n\
            cache   <stat|gc> [--dir DIR] [--cache-cap CAP]     artifact-store statistics / GC\n\
-                                                                (CAP: bytes, 512K/8M/1G, or Nn)\n\
+                   [--json]                                     (CAP: bytes, 512K/8M/1G, or Nn;\n\
+                                                                stat --json is machine-readable)\n\
+           serve   [--addr HOST:PORT] [--workers N] [--queue N] [--cache-dir DIR]\n\
+                   [--cache-cap CAP] [--gc-every SECS]          long-running compile/encode\n\
+                                                                daemon over the artifact store\n\
+                                                                (NDJSON protocol, docs/serve.md)\n\
+           client  <ping|stat|compile|encode|shutdown> [--addr HOST:PORT]\n\
+                   [point flags as for encode] [--key HEX]      drive a running serve daemon;\n\
+                   [--out FILE] [--timeout SECS]                encode writes the bitstream file\n\
            arch                                                 architecture + timing summary\n\
          levels: {}\n\
          apps: {}",
@@ -142,9 +164,14 @@ fn search_kind(args: &Args) -> Result<cascade::explore::SearchKind, String> {
 /// recompiles — and is byte-identical to encoding a fresh compile of the
 /// same point; `--key HEX` addresses the store directly. A fresh compile
 /// (no `--from-cache`) stores its artifact, warming the cache.
-fn encode_cmd(args: &Args, seed: u64) -> Result<(), String> {
+///
+/// The point flags resolve through the one shared
+/// [`cascade::serve::proto::PointQuery`] vocabulary, so this command, the
+/// serve daemon and `cascade client` always derive the same effective key.
+fn encode_cmd(args: &Args) -> Result<(), String> {
     use cascade::arch::params::ArchParams;
-    use cascade::explore::{runner, DiskCache, Scale};
+    use cascade::explore::{runner, DiskCache};
+    use cascade::serve::proto::PointQuery;
 
     let dc = DiskCache::open_default();
     if let Some(hex) = args.opt("key") {
@@ -156,38 +183,7 @@ fn encode_cmd(args: &Args, seed: u64) -> Result<(), String> {
         return write_bitstream(&c, key, args, true);
     }
 
-    let app = args.opt("app").ok_or("encode: --app <name> (or --key HEX) required")?;
-    let mut spec = cascade::explore::ExploreSpec::default()
-        .with_apps([app])
-        .with_levels([args.opt_or("level", "full")])
-        .with_seeds([seed]);
-    if let Some(s) = args.opt("alpha") {
-        spec = spec.with_alphas([s.parse().map_err(|_| format!("bad --alpha '{s}'"))?]);
-    }
-    let one_usize = |name: &str| -> Result<Option<usize>, String> {
-        match args.opt(name) {
-            None => Ok(None),
-            Some(s) => s.parse().map(Some).map_err(|_| format!("bad --{name} '{s}'")),
-        }
-    };
-    if let Some(v) = one_usize("iters")? {
-        spec = spec.with_iters([v]);
-    }
-    if let Some(v) = one_usize("tracks")? {
-        spec = spec.with_tracks([v]);
-    }
-    if let Some(v) = one_usize("regwords")? {
-        spec = spec.with_regwords([v]);
-    }
-    if let Some(v) = one_usize("fifo")? {
-        spec = spec.with_fifos([v]);
-    }
-    spec = spec.with_fast(args.flag("fast"));
-    if args.flag("tiny") {
-        spec = spec.with_scale(Scale::Tiny);
-    }
-    spec.validate()?;
-    let point = spec.points().into_iter().next().ok_or("encode: empty point spec")?;
+    let (spec, point) = PointQuery::from_args(args)?.resolve()?;
     let base = ArchParams::paper();
     let (cfg, arch, key) = runner::effective_point(&spec, &base, &point);
 
@@ -256,7 +252,13 @@ fn cache_cmd(args: &Args) -> Result<(), String> {
     let dc = DiskCache::at(&dir);
     match sub {
         "stat" => {
-            println!("{}", dc.stat_string());
+            if args.flag("json") {
+                // The same formatter the serve daemon's `stat` response
+                // uses — scripts can consume either interchangeably.
+                println!("{}", dc.stat_json().to_string_pretty());
+            } else {
+                println!("{}", dc.stat_string());
+            }
             Ok(())
         }
         "gc" => {
@@ -386,7 +388,7 @@ fn main() {
             }
         }
         "encode" => {
-            if let Err(e) = encode_cmd(&args, seed) {
+            if let Err(e) = encode_cmd(&args) {
                 eprintln!("encode failed: {e}");
                 std::process::exit(1);
             }
@@ -394,6 +396,18 @@ fn main() {
         "cache" => {
             if let Err(e) = cache_cmd(&args) {
                 eprintln!("cache failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        "serve" => {
+            if let Err(e) = cascade::serve::serve_cli(&args) {
+                eprintln!("serve failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        "client" => {
+            if let Err(e) = cascade::serve::client::run_cli(&args) {
+                eprintln!("client failed: {e}");
                 std::process::exit(1);
             }
         }

@@ -1,0 +1,134 @@
+//! `cascade client` — drive a running `cascade serve` daemon without
+//! external tooling (the CI smoke job and shell scripts use this).
+//!
+//! One invocation = one connection = one request: the op is the first
+//! positional (`ping|stat|compile|encode|shutdown`), point axes use the
+//! same flags as `cascade encode`, and the raw response JSON is printed
+//! to stdout — except `encode`'s `bitstream` member, which is written to
+//! `--out FILE` (default `results/bitstream_<key>.txt`) byte-identically
+//! to offline `cascade encode`, so `cmp` against the offline file is the
+//! end-to-end check.
+
+use std::io::{BufRead as _, BufReader, Write as _};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+use super::proto::{self, PointQuery, Request};
+
+/// Send one request, await the one response line. The timeout applies to
+/// connect-adjacent socket reads/writes, not to the server's compile
+/// time budget as a whole — each partial read just has to make progress.
+pub fn request(addr: &str, req: &Request, timeout: Duration) -> Result<Json, String> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| format!("client: cannot connect to {addr}: {e}"))?;
+    let _ = stream.set_read_timeout(Some(timeout));
+    let _ = stream.set_write_timeout(Some(timeout));
+    let mut line = req.to_json().to_string_compact();
+    line.push('\n');
+    stream.write_all(line.as_bytes()).map_err(|e| format!("client: send failed: {e}"))?;
+    let mut reader = BufReader::new(&mut stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).map_err(|e| format!("client: read failed: {e}"))?;
+    if resp.trim().is_empty() {
+        return Err("client: connection closed without a response".into());
+    }
+    Json::parse(resp.trim()).map_err(|e| format!("client: unparseable response: {e}"))
+}
+
+/// `cascade client <op> [--addr HOST:PORT] [point flags] [--key HEX]
+/// [--out FILE] [--timeout SECS]`.
+pub fn run_cli(args: &Args) -> Result<(), String> {
+    let op = args
+        .positionals
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or("client: expected an op (ping|stat|compile|encode|shutdown)")?;
+    let addr = args.opt_or("addr", "127.0.0.1:7878");
+    let timeout = match args.opt("timeout") {
+        None => Duration::from_secs(600),
+        Some(s) => Duration::from_secs(
+            s.parse().map_err(|_| format!("client: bad --timeout '{s}' (seconds)"))?,
+        ),
+    };
+    let req = match op {
+        "ping" => Request::Ping,
+        "stat" => Request::Stat,
+        "shutdown" => Request::Shutdown,
+        "compile" => Request::Compile(PointQuery::from_args(args)?),
+        "encode" => match args.opt("key") {
+            Some(hex) => {
+                let conflict = proto::POINT_MEMBERS
+                    .iter()
+                    .find(|n| args.opt(n).is_some() || args.flag(n));
+                if let Some(n) = conflict {
+                    return Err(format!(
+                        "client: encode takes --key or point flags, not both (got --{n})"
+                    ));
+                }
+                let key = u64::from_str_radix(hex, 16)
+                    .map_err(|_| format!("client: bad --key '{hex}' (hex)"))?;
+                Request::Encode { key: Some(key), query: None }
+            }
+            None => Request::Encode { key: None, query: Some(PointQuery::from_args(args)?) },
+        },
+        other => {
+            return Err(format!(
+                "client: unknown op '{other}' (ping|stat|compile|encode|shutdown)"
+            ))
+        }
+    };
+    let resp = request(addr, &req, timeout)?;
+    if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+        return Err(format!("client: server error: {}", resp.to_string_compact()));
+    }
+    match resp.get("bitstream").and_then(Json::as_str) {
+        Some(bs) => {
+            let out = args.opt("out").map(std::path::PathBuf::from).unwrap_or_else(|| {
+                let key = resp.get("key").and_then(Json::as_str).unwrap_or("served");
+                std::path::PathBuf::from(format!("results/bitstream_{key}.txt"))
+            });
+            if let Some(dir) = out.parent() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+            std::fs::write(&out, bs)
+                .map_err(|e| format!("client: cannot write {}: {e}", out.display()))?;
+            // Print the response minus the (possibly huge) payload, then
+            // the human summary line.
+            let mut head = resp.clone();
+            if let Json::Obj(m) = &mut head {
+                m.remove("bitstream");
+            }
+            println!("{}", head.to_string_compact());
+            println!(
+                "client: {} configuration word(s) -> {}",
+                resp.get("words").and_then(Json::as_u64).unwrap_or(0),
+                out.display()
+            );
+        }
+        None => println!("{}", resp.to_string_compact()),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn unknown_op_and_missing_op_error_before_connecting() {
+        assert!(run_cli(&parse("client")).is_err());
+        assert!(run_cli(&parse("client frobnicate")).is_err());
+        // Bad point flags fail locally too (no daemon involved).
+        assert!(run_cli(&parse("client compile")).is_err());
+        assert!(run_cli(&parse("client encode --key zz")).is_err());
+        assert!(run_cli(&parse("client encode --key ff --seed 7")).is_err());
+        assert!(run_cli(&parse("client encode --key ff --tiny")).is_err());
+    }
+}

@@ -1,0 +1,838 @@
+//! `cascade serve` — a concurrent compile/encode daemon over the
+//! explore artifact store.
+//!
+//! The batch flow (`cascade explore`, `cascade encode`) pays a full
+//! process start, context build and cache open per invocation. This
+//! subsystem keeps all of that warm in one long-running process: a
+//! `TcpListener` accepts newline-delimited-JSON requests ([`proto`]),
+//! a bounded queue hands connections to a worker thread pool ([`pool`]),
+//! and every `compile`/`encode` request resolves through the same
+//! [`SessionCore`] — in-memory in-flight deduplication, the persistent
+//! metrics cache, and the fingerprint-verified artifact store — so N
+//! clients requesting the same effective point trigger exactly one
+//! compile, and everyone else gets a warm answer. Responses carry the
+//! point's effective cache key, the cache-hit provenance
+//! (`fresh|warm_mem|warm_art|warm_rec`) and per-request timing.
+//!
+//! Resource bounds are explicit: the request queue is bounded (an
+//! overloaded daemon answers `busy` in O(1) instead of queueing
+//! unboundedly), the in-memory artifact cache is ephemeral (artifacts
+//! live in RAM only while a compile is in flight; the disk store is the
+//! durable layer), and a housekeeping thread periodically runs the
+//! artifact-store GC under `--cache-cap` — pinned Pareto/knee survivors
+//! are never evicted — and drops idle non-base compile contexts.
+//!
+//! Shutdown is graceful: a `shutdown` request stops the acceptor,
+//! already-queued connections drain, in-flight requests complete and are
+//! answered, then a final GC compacts the journal before the process
+//! exits (the contract `docs/serve.md` specifies).
+//!
+//! ```no_run
+//! use cascade::pipeline::CompileCtx;
+//! use cascade::serve::{ServeConfig, Server};
+//!
+//! let mut cfg = ServeConfig::new("127.0.0.1:7878");
+//! cfg.workers = 4;
+//! let server = Server::bind(cfg).expect("bind");
+//! println!("listening on {}", server.addr());
+//! let ctx = CompileCtx::paper();
+//! server.run(&ctx).expect("serve"); // returns after a `shutdown` request
+//! ```
+//!
+//! Drive it without external tooling via the [`client`] subcommand:
+//! `cascade client compile --addr HOST:PORT --app gaussian --tiny --fast`.
+
+pub mod client;
+pub mod pool;
+pub mod proto;
+
+use std::io::{Read, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::explore::runner::{Provenance, SessionCore};
+use crate::explore::{CacheCap, DiskCache};
+use crate::pipeline::CompileCtx;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+use pool::Bounded;
+use proto::{
+    key_hex, metrics_json, response_error, response_ok, ErrorCode, Request, MAX_REQUEST_LINE,
+};
+
+/// How long a worker's socket read blocks before it re-checks the
+/// shutdown flag — the bound on how long an *idle* connection can delay
+/// a drain (in-flight requests always complete regardless).
+const READ_POLL: Duration = Duration::from_millis(500);
+
+/// Per-connection write timeout: a client that stops reading its own
+/// responses forfeits the connection rather than wedging a worker.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Daemon configuration (`cascade serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address, `HOST:PORT` (`:0` picks an ephemeral port —
+    /// [`Server::addr`] reports the real one).
+    pub addr: String,
+    /// Worker threads — the compile concurrency bound.
+    pub workers: usize,
+    /// Pending-connection queue bound; the acceptor answers `busy`
+    /// beyond it.
+    pub queue_cap: usize,
+    /// The `explore_cache/` directory to serve from (shared with
+    /// `cascade explore` / `encode` / `cache`).
+    pub cache_dir: PathBuf,
+    /// Artifact-store budget for the periodic and final GC (`None` =
+    /// never collect).
+    pub cache_cap: Option<CacheCap>,
+    /// Housekeeping period (GC + context-cache trim).
+    pub gc_every: Duration,
+}
+
+impl ServeConfig {
+    /// Defaults: workers = available parallelism (capped at 8), queue =
+    /// 4x workers, the default explore cache, no cap, 60 s housekeeping.
+    pub fn new(addr: impl Into<String>) -> ServeConfig {
+        let workers = std::thread::available_parallelism().map(|n| n.get().min(8)).unwrap_or(1);
+        ServeConfig {
+            addr: addr.into(),
+            workers,
+            queue_cap: workers * 4,
+            cache_dir: DiskCache::default_dir(),
+            cache_cap: None,
+            gc_every: Duration::from_secs(60),
+        }
+    }
+
+    /// Parse `cascade serve --addr HOST:PORT [--workers N] [--queue N]
+    /// [--cache-dir D] [--cache-cap CAP] [--gc-every SECS]`.
+    pub fn from_args(args: &Args) -> Result<ServeConfig, String> {
+        let mut cfg = ServeConfig::new(args.opt_or("addr", "127.0.0.1:7878"));
+        let pos_usize = |name: &str, dflt: usize| -> Result<usize, String> {
+            match args.opt(name) {
+                None => Ok(dflt),
+                Some(s) => s
+                    .parse()
+                    .ok()
+                    .filter(|&n| n >= 1)
+                    .ok_or_else(|| format!("bad --{name} '{s}' (positive integer)")),
+            }
+        };
+        cfg.workers = pos_usize("workers", cfg.workers)?;
+        cfg.queue_cap = pos_usize("queue", cfg.workers * 4)?;
+        if let Some(d) = args.opt("cache-dir") {
+            cfg.cache_dir = PathBuf::from(d);
+        }
+        if let Some(s) = args.opt("cache-cap") {
+            cfg.cache_cap = Some(CacheCap::parse(s)?);
+        }
+        cfg.gc_every = Duration::from_secs(pos_usize("gc-every", 60)? as u64);
+        Ok(cfg)
+    }
+}
+
+/// A bound-but-not-yet-running daemon. [`Server::bind`] claims the
+/// socket (so callers learn the ephemeral port before spawning clients);
+/// [`Server::run`] serves until a `shutdown` request.
+pub struct Server {
+    listener: TcpListener,
+    cfg: ServeConfig,
+    addr: SocketAddr,
+}
+
+impl Server {
+    pub fn bind(cfg: ServeConfig) -> Result<Server, String> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| format!("serve: cannot bind {}: {e}", cfg.addr))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| format!("serve: cannot resolve local addr: {e}"))?;
+        Ok(Server { listener, cfg, addr })
+    }
+
+    /// The actually-bound address (resolves `:0` to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Serve requests until a `shutdown` request, then drain gracefully:
+    /// stop accepting, finish queued connections and in-flight requests,
+    /// run the final GC (journal compaction included), and return.
+    pub fn run(&self, ctx: &CompileCtx) -> Result<(), String> {
+        let disk = DiskCache::at(&self.cfg.cache_dir);
+        // Key-addressed `encode` loads go through side handles so the
+        // shared session's cache statistics stay a pure account of the
+        // compile/evaluate path.
+        let aux = DiskCache::at(&self.cfg.cache_dir);
+        let state = ServeState {
+            cfg: &self.cfg,
+            addr: self.addr,
+            core: SessionCore::ephemeral(ctx, Some(&disk)),
+            disk: &disk,
+            aux,
+            shutdown: AtomicBool::new(false),
+            requests: AtomicUsize::new(0),
+            errors: AtomicUsize::new(0),
+            busy: AtomicUsize::new(0),
+            prov: std::array::from_fn(|_| AtomicUsize::new(0)),
+            hk_mx: Mutex::new(()),
+            hk_cv: Condvar::new(),
+        };
+        let queue: Bounded<TcpStream> = Bounded::new(self.cfg.queue_cap);
+
+        println!(
+            "serve: listening on {} ({} worker(s), queue {}, cache {})",
+            self.addr,
+            self.cfg.workers,
+            self.cfg.queue_cap,
+            self.cfg.cache_dir.display()
+        );
+
+        // Rejected connections are answered off the accept path: the
+        // acceptor's only duty on overflow is an O(1) hand-off (or an
+        // O(1) drop when even the rejector is saturated), so a busy storm
+        // cannot serialize `accept()` behind socket writes — the daemon
+        // stays reachable exactly when it is busiest.
+        let rejects: Bounded<TcpStream> = Bounded::new(32);
+
+        std::thread::scope(|s| {
+            for _ in 0..self.cfg.workers {
+                s.spawn(|| {
+                    while let Some(conn) = queue.pop() {
+                        handle_conn(&state, conn);
+                    }
+                });
+            }
+            s.spawn(|| {
+                let busy = response_error(ErrorCode::Busy, "request queue full; retry");
+                while let Some(conn) = rejects.pop() {
+                    let _ = conn.set_write_timeout(Some(Duration::from_secs(5)));
+                    write_final(&conn, &busy, Duration::from_millis(250));
+                }
+            });
+            s.spawn(|| housekeeping(&state));
+
+            for conn in self.listener.incoming() {
+                if state.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                if let Err(stream) = queue.try_push(stream) {
+                    state.busy.fetch_add(1, Ordering::SeqCst);
+                    // Best-effort busy response; a saturated rejector
+                    // drops the connection unanswered (bounded memory
+                    // beats a polite reply under a flood).
+                    let _ = rejects.try_push(stream);
+                }
+            }
+            // Drain: queued connections are still served, then workers
+            // see `None` and exit; the scope joins everything.
+            queue.close();
+            rejects.close();
+        });
+
+        if let Some(cap) = &self.cfg.cache_cap {
+            println!("serve: final gc: {}", disk.artifacts().gc(cap).summary());
+        }
+        let stats = state.core.stats();
+        println!(
+            "serve: drained after {} request(s) ({} fresh compile(s), {} busy rejection(s), \
+             {} error(s))",
+            state.requests.load(Ordering::SeqCst),
+            stats.misses,
+            state.busy.load(Ordering::SeqCst),
+            state.errors.load(Ordering::SeqCst)
+        );
+        println!("{}", disk.stat_string());
+        Ok(())
+    }
+}
+
+/// Shared server state, borrowed by every worker for the scope of
+/// [`Server::run`].
+struct ServeState<'a> {
+    cfg: &'a ServeConfig,
+    addr: SocketAddr,
+    core: SessionCore<'a>,
+    disk: &'a DiskCache,
+    /// Side cache handles for key-addressed loads (see [`Server::run`]).
+    aux: DiskCache,
+    shutdown: AtomicBool,
+    requests: AtomicUsize,
+    errors: AtomicUsize,
+    busy: AtomicUsize,
+    /// Responses by provenance: fresh, warm_mem, warm_art, warm_rec.
+    prov: [AtomicUsize; 4],
+    hk_mx: Mutex<()>,
+    hk_cv: Condvar,
+}
+
+impl ServeState<'_> {
+    fn count_prov(&self, p: Provenance) {
+        let i = match p {
+            Provenance::Fresh => 0,
+            Provenance::WarmMem => 1,
+            Provenance::WarmArt => 2,
+            Provenance::WarmRec => 3,
+        };
+        self.prov[i].fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Begin the drain: raise the flag (under the housekeeping lock so
+    /// the sleeper cannot miss the notify), wake the housekeeper, and
+    /// poke the acceptor out of `accept()` with a loopback connect. The
+    /// wake connect is retried and a failure is logged — the acceptor
+    /// only re-checks the flag after `accept()` returns, so a silently
+    /// lost wake would leave the drain hanging until the next unrelated
+    /// client connects.
+    fn trigger_shutdown(&self) {
+        {
+            let _g = self.hk_mx.lock().unwrap();
+            self.shutdown.store(true, Ordering::SeqCst);
+            self.hk_cv.notify_all();
+        }
+        let target = wake_addr(self.addr);
+        for _ in 0..3 {
+            if TcpStream::connect_timeout(&target, Duration::from_secs(1)).is_ok() {
+                return;
+            }
+        }
+        eprintln!(
+            "serve: warning: could not self-connect to {target} to unblock the acceptor; \
+             the drain completes on the next incoming connection"
+        );
+    }
+
+    /// Dispatch one parsed request. The bool asks the connection handler
+    /// to trigger the drain after responding.
+    fn handle_request(&self, req: Request) -> (Json, bool) {
+        match req {
+            Request::Ping => (response_ok("ping"), false),
+            Request::Shutdown => (response_ok("shutdown"), true),
+            Request::Stat => (self.stat_response(), false),
+            Request::Compile(q) => (self.compile_response(&q), false),
+            Request::Encode { key: Some(key), .. } => (self.encode_stored(key), false),
+            Request::Encode { key: None, query: Some(q) } => (self.encode_point(&q), false),
+            Request::Encode { key: None, query: None } => {
+                (response_error(ErrorCode::BadRequest, "encode: need \"key\" or \"app\""), false)
+            }
+        }
+    }
+
+    /// `stat`: the shared cache formatter plus server-lifetime counters.
+    fn stat_response(&self) -> Json {
+        let s = self.core.stats();
+        let mut srv = Json::obj();
+        srv.set("requests", self.requests.load(Ordering::SeqCst))
+            .set("busy_rejections", self.busy.load(Ordering::SeqCst))
+            .set("errors", self.errors.load(Ordering::SeqCst))
+            .set("fresh_compiles", s.misses)
+            .set("memory_hits", s.memory_hits)
+            .set("disk_hits", s.disk_hits)
+            .set("art_hits", s.art_hits)
+            .set("ctx_builds", s.ctx_builds)
+            .set("workers", self.cfg.workers)
+            .set("queue_cap", self.cfg.queue_cap);
+        let mut prov = Json::obj();
+        for (i, name) in ["fresh", "warm_mem", "warm_art", "warm_rec"].into_iter().enumerate() {
+            prov.set(name, self.prov[i].load(Ordering::SeqCst));
+        }
+        srv.set("provenance", prov);
+        let mut j = response_ok("stat");
+        j.set("cache", self.disk.stat_json()).set("server", srv);
+        j
+    }
+
+    /// `compile`: resolve the point, evaluate through the shared session
+    /// (dedup + caches), answer with key, provenance, timing, metrics.
+    fn compile_response(&self, q: &proto::PointQuery) -> Json {
+        let t0 = Instant::now();
+        let (spec, point) = match q.resolve() {
+            Ok(sp) => sp,
+            Err(e) => return response_error(ErrorCode::BadRequest, &e),
+        };
+        let (r, prov, key) = self.core.evaluate_with(&spec, &point);
+        self.count_prov(prov);
+        match r.metrics {
+            Ok(m) => {
+                let mut j = response_ok("compile");
+                j.set("key", key_hex(key))
+                    .set("provenance", prov.tag())
+                    .set("ms", ms_since(t0))
+                    .set("metrics", metrics_json(&m));
+                j
+            }
+            Err(e) => {
+                let mut j = response_error(ErrorCode::CompileFailed, &e);
+                j.set("key", key_hex(key));
+                j
+            }
+        }
+    }
+
+    /// `encode` by point query: same dedup slot as `compile`, so a
+    /// concurrent compile of the same key is reused, never repeated.
+    fn encode_point(&self, q: &proto::PointQuery) -> Json {
+        let t0 = Instant::now();
+        let (spec, point) = match q.resolve() {
+            Ok(sp) => sp,
+            Err(e) => return response_error(ErrorCode::BadRequest, &e),
+        };
+        let (key, res, prov) = self.core.compiled_with(&spec, &point);
+        self.count_prov(prov);
+        match res {
+            Ok(c) => encode_response(key, prov, &c, t0),
+            Err(e) => {
+                let mut j = response_error(ErrorCode::CompileFailed, &e);
+                j.set("key", key_hex(key));
+                j
+            }
+        }
+    }
+
+    /// `encode` by stored key: a pure artifact-store load (verified
+    /// against the metrics record's fingerprint when one exists) — the
+    /// daemon twin of `cascade encode --key HEX`, never compiles.
+    fn encode_stored(&self, key: u64) -> Json {
+        let t0 = Instant::now();
+        let expect = self.aux.load(key).map(|m| m.artifact_fp);
+        match self.aux.artifacts().load(key, expect) {
+            Some(c) => {
+                self.count_prov(Provenance::WarmArt);
+                encode_response(key, Provenance::WarmArt, &c, t0)
+            }
+            None => {
+                let msg = format!(
+                    "no valid compiled artifact for key {} in {} (torn files are rejected, \
+                     never trusted)",
+                    key_hex(key),
+                    self.aux.artifacts().dir().display()
+                );
+                response_error(ErrorCode::NotFound, &msg)
+            }
+        }
+    }
+}
+
+/// Assemble an `encode` success response around the bitstream text —
+/// exactly [`crate::arch::bitstream::Bitstream::to_text`], so a client
+/// writing the `bitstream` member to a file gets bytes identical to
+/// offline `cascade encode`.
+fn encode_response(
+    key: u64,
+    prov: Provenance,
+    c: &crate::pipeline::Compiled,
+    t0: Instant,
+) -> Json {
+    let bs = crate::sim::encode::encode_compiled(c);
+    let mut j = response_ok("encode");
+    j.set("key", key_hex(key))
+        .set("provenance", prov.tag())
+        .set("ms", ms_since(t0))
+        .set("words", bs.len())
+        .set("bitstream", bs.to_text());
+    j
+}
+
+fn ms_since(t0: Instant) -> f64 {
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+/// Normalize an unspecified bind IP (`0.0.0.0` / `::`) to loopback so
+/// the shutdown wake-connect always has a reachable target.
+fn wake_addr(addr: SocketAddr) -> SocketAddr {
+    let ip = match addr.ip() {
+        IpAddr::V4(ip) if ip.is_unspecified() => IpAddr::V4(Ipv4Addr::LOCALHOST),
+        IpAddr::V6(ip) if ip.is_unspecified() => IpAddr::V6(Ipv6Addr::LOCALHOST),
+        ip => ip,
+    };
+    SocketAddr::new(ip, addr.port())
+}
+
+/// One JSON document, one line, one flush.
+fn write_line(mut stream: &TcpStream, j: &Json) -> std::io::Result<()> {
+    let mut line = j.to_string_compact();
+    line.push('\n');
+    stream.write_all(line.as_bytes())?;
+    stream.flush()
+}
+
+/// Send a terminal response (`busy`, `oversized`, `shutting_down`)
+/// without destroying it: closing a socket whose receive buffer still
+/// holds unread client bytes makes the kernel send RST, which can flush
+/// the in-flight response before the client reads it. So: respond,
+/// half-close the send side (client sees data + FIN), then drain what
+/// the client already sent — bounded in bytes and by `grace` per read,
+/// so a flooding client cannot hold the caller (the acceptor passes a
+/// short grace; workers can afford a longer one).
+fn write_final(stream: &TcpStream, j: &Json, grace: Duration) {
+    if write_line(stream, j).is_err() {
+        return;
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(grace));
+    let mut sink = [0u8; 4096];
+    let mut budget: usize = 256 * 1024;
+    let mut reader: &TcpStream = stream;
+    loop {
+        match reader.read(&mut sink) {
+            Ok(0) => return,
+            Ok(n) => match budget.checked_sub(n) {
+                Some(rest) => budget = rest,
+                None => return,
+            },
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// The terminal drain refusal.
+fn shutting_down() -> Json {
+    response_error(ErrorCode::ShuttingDown, "daemon is draining")
+}
+
+/// What [`LineReader::next`] found.
+enum NextLine {
+    /// One complete request line (newline stripped; possibly invalid
+    /// UTF-8 replaced, which the JSON parser then rejects as a normal
+    /// bad request).
+    Line(String),
+    /// Clean end of stream (a trailing partial line is discarded).
+    Eof,
+    /// The line exceeded [`MAX_REQUEST_LINE`] — respond and close, the
+    /// framing downstream cannot be trusted.
+    TooLong,
+    /// The daemon began draining while the connection was idle.
+    Shutdown,
+    /// Unrecoverable I/O error.
+    Failed,
+}
+
+/// Incremental bounded line reader. Socket reads run under [`READ_POLL`]
+/// timeouts so an idle connection re-checks the shutdown flag; partial
+/// data survives across timeouts (a slow writer is not corrupted by the
+/// poll).
+struct LineReader<R: Read> {
+    inner: R,
+    buf: Vec<u8>,
+}
+
+impl<R: Read> LineReader<R> {
+    fn new(inner: R) -> LineReader<R> {
+        LineReader { inner, buf: Vec::new() }
+    }
+
+    fn next(&mut self, shutdown: &AtomicBool) -> NextLine {
+        loop {
+            if let Some(i) = self.buf.iter().position(|&b| b == b'\n') {
+                // `i` is the line length; a terminated-but-over-bound
+                // line is just as oversized as an unterminated flood.
+                if i > MAX_REQUEST_LINE {
+                    return NextLine::TooLong;
+                }
+                let rest = self.buf.split_off(i + 1);
+                let mut line = std::mem::replace(&mut self.buf, rest);
+                line.pop(); // the newline
+                return NextLine::Line(String::from_utf8_lossy(&line).into_owned());
+            }
+            if self.buf.len() > MAX_REQUEST_LINE {
+                return NextLine::TooLong;
+            }
+            let mut tmp = [0u8; 4096];
+            match self.inner.read(&mut tmp) {
+                Ok(0) => return NextLine::Eof,
+                Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                Err(e) => match e.kind() {
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                        if shutdown.load(Ordering::SeqCst) {
+                            return NextLine::Shutdown;
+                        }
+                    }
+                    std::io::ErrorKind::Interrupted => {}
+                    _ => return NextLine::Failed,
+                },
+            }
+        }
+    }
+}
+
+/// Serve one connection: request lines in, response lines out, until
+/// EOF, a fatal framing defect, or the drain. Malformed requests get a
+/// structured error and the connection *stays open*.
+fn handle_conn(state: &ServeState<'_>, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let mut reader = LineReader::new(&stream);
+    let mut served_any = false;
+    loop {
+        match reader.next(&state.shutdown) {
+            NextLine::Line(line) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                if served_any && state.shutdown.load(Ordering::SeqCst) {
+                    // Drain contract: a connection popped from the queue
+                    // still gets its first pending request served, but a
+                    // draining daemon takes no *further* requests —
+                    // without this check a client that keeps sending
+                    // (faster than the read poll) would hold its worker,
+                    // and the drain, hostage forever.
+                    write_final(&stream, &shutting_down(), Duration::from_secs(2));
+                    return;
+                }
+                served_any = true;
+                state.requests.fetch_add(1, Ordering::SeqCst);
+                let (resp, drain) = match Request::parse_line(&line) {
+                    Ok(req) => state.handle_request(req),
+                    Err((code, msg)) => (response_error(code, &msg), false),
+                };
+                if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+                    state.errors.fetch_add(1, Ordering::SeqCst);
+                }
+                if drain {
+                    // The shutdown ack is this connection's last word and
+                    // the caller's only confirmation the drain began —
+                    // send it RST-proof like every other terminal
+                    // response (pipelined junk after `shutdown` must not
+                    // clobber it).
+                    write_final(&stream, &resp, Duration::from_secs(2));
+                    state.trigger_shutdown();
+                    return;
+                }
+                if write_line(&stream, &resp).is_err() {
+                    return;
+                }
+            }
+            NextLine::TooLong => {
+                let msg =
+                    format!("request line exceeds {MAX_REQUEST_LINE} bytes; closing connection");
+                write_final(&stream, &response_error(ErrorCode::Oversized, &msg), READ_POLL);
+                return;
+            }
+            NextLine::Shutdown => {
+                write_final(&stream, &shutting_down(), Duration::from_secs(2));
+                return;
+            }
+            NextLine::Eof | NextLine::Failed => return,
+        }
+    }
+}
+
+/// Periodic GC (cap honoured, pins respected —
+/// [`crate::explore::ArtifactStore::gc`]) plus a trim of idle non-base
+/// compile contexts. Sleeps on a condvar so
+/// [`ServeState::trigger_shutdown`] wakes it immediately.
+fn housekeeping(state: &ServeState<'_>) {
+    loop {
+        let g = state.hk_mx.lock().unwrap();
+        if state.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let (g, timeout) = state.hk_cv.wait_timeout(g, state.cfg.gc_every).unwrap();
+        drop(g);
+        if state.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        if timeout.timed_out() {
+            if let Some(cap) = &state.cfg.cache_cap {
+                let r = state.disk.artifacts().gc(cap);
+                if r.evicted > 0 {
+                    println!("serve: gc: {}", r.summary());
+                }
+            }
+            state.core.drop_arch_contexts();
+        }
+    }
+}
+
+/// `cascade serve` entry point: bind, build the compile context, run.
+pub fn serve_cli(args: &Args) -> Result<(), String> {
+    let cfg = ServeConfig::from_args(args)?;
+    let server = Server::bind(cfg)?;
+    println!("building compile context (32x16 array, timing model)...");
+    let ctx = CompileCtx::paper();
+    server.run(&ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufRead as _;
+
+    #[test]
+    fn line_reader_splits_and_bounds() {
+        let quiet = AtomicBool::new(false);
+        let input = b"{\"op\":\"ping\"}\nsecond line\n".to_vec();
+        let mut r = LineReader::new(std::io::Cursor::new(input));
+        match r.next(&quiet) {
+            NextLine::Line(l) => assert_eq!(l, "{\"op\":\"ping\"}"),
+            _ => panic!("expected a line"),
+        }
+        match r.next(&quiet) {
+            NextLine::Line(l) => assert_eq!(l, "second line"),
+            _ => panic!("expected a line"),
+        }
+        assert!(matches!(r.next(&quiet), NextLine::Eof));
+
+        // A newline-free flood beyond the bound is TooLong, not a line.
+        let flood = vec![b'x'; MAX_REQUEST_LINE + 2];
+        let mut r = LineReader::new(std::io::Cursor::new(flood));
+        assert!(matches!(r.next(&quiet), NextLine::TooLong));
+
+        // Exactly at the bound, with a terminator, still parses.
+        let mut fits = vec![b'y'; MAX_REQUEST_LINE];
+        fits.push(b'\n');
+        let mut r = LineReader::new(std::io::Cursor::new(fits));
+        assert!(matches!(r.next(&quiet), NextLine::Line(_)));
+    }
+
+    fn test_config(dir: &std::path::Path, workers: usize) -> ServeConfig {
+        let mut cfg = ServeConfig::new("127.0.0.1:0");
+        cfg.workers = workers;
+        cfg.queue_cap = workers * 4;
+        cfg.cache_dir = dir.to_path_buf();
+        cfg
+    }
+
+    /// Bind a test server, or `None` in environments without loopback
+    /// networking (the rest of the suite must still pass there).
+    fn bind_or_skip(cfg: ServeConfig) -> Option<Server> {
+        match Server::bind(cfg) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("skipping serve test: {e}");
+                None
+            }
+        }
+    }
+
+    fn roundtrip(stream: &mut TcpStream, line: &str) -> Json {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut reader = std::io::BufReader::new(stream);
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap()
+    }
+
+    fn send_shutdown(addr: SocketAddr) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let r = roundtrip(&mut s, "{\"op\":\"shutdown\"}");
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn malformed_json_gets_error_and_connection_survives() {
+        let dir = std::env::temp_dir().join(format!("cascade-serve-mal-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = CompileCtx::paper();
+        let Some(server) = bind_or_skip(test_config(&dir, 1)) else { return };
+        let addr = server.addr();
+        std::thread::scope(|s| {
+            s.spawn(|| server.run(&ctx).unwrap());
+            let mut conn = TcpStream::connect(addr).unwrap();
+
+            let r = roundtrip(&mut conn, "this is not json");
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
+            assert_eq!(r.get("code").and_then(Json::as_str), Some("bad_request"));
+
+            // Same connection, next line: still served.
+            let r = roundtrip(&mut conn, "{\"op\":\"ping\"}");
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+
+            // Unknown op: structured, connection still open.
+            let r = roundtrip(&mut conn, "{\"op\":\"warp\"}");
+            assert_eq!(r.get("code").and_then(Json::as_str), Some("unknown_op"));
+            let r = roundtrip(&mut conn, "{\"op\":\"ping\"}");
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+            drop(conn);
+            send_shutdown(addr);
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn oversized_request_line_is_rejected() {
+        let dir = std::env::temp_dir().join(format!("cascade-serve-big-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = CompileCtx::paper();
+        let Some(server) = bind_or_skip(test_config(&dir, 1)) else { return };
+        let addr = server.addr();
+        std::thread::scope(|s| {
+            s.spawn(|| server.run(&ctx).unwrap());
+            let mut conn = TcpStream::connect(addr).unwrap();
+            let flood = "x".repeat(MAX_REQUEST_LINE + 64);
+            let r = roundtrip(&mut conn, &flood);
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
+            assert_eq!(r.get("code").and_then(Json::as_str), Some("oversized"));
+            send_shutdown(addr);
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stat_reports_shared_cache_formatter() {
+        let dir = std::env::temp_dir().join(format!("cascade-serve-stat-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = CompileCtx::paper();
+        let Some(server) = bind_or_skip(test_config(&dir, 1)) else { return };
+        let addr = server.addr();
+        std::thread::scope(|s| {
+            s.spawn(|| server.run(&ctx).unwrap());
+            let mut conn = TcpStream::connect(addr).unwrap();
+            let r = roundtrip(&mut conn, "{\"op\":\"stat\"}");
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+            let cache = r.get("cache").expect("cache section");
+            // Byte-compatible with `cascade cache stat --json` on the
+            // same directory: one formatter, two consumers.
+            let offline = DiskCache::at(&dir).stat_json();
+            assert_eq!(cache, &offline);
+            let srv = r.get("server").expect("server section");
+            assert_eq!(srv.get("fresh_compiles").and_then(Json::as_u64), Some(0));
+            send_shutdown(addr);
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn busy_response_when_queue_overflows() {
+        // No workers ever pop (0 is clamped to 1 worker, so park it with
+        // a held connection): fill the queue, then expect `busy`.
+        let dir = std::env::temp_dir().join(format!("cascade-serve-busy-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = CompileCtx::paper();
+        let mut cfg = test_config(&dir, 1);
+        cfg.queue_cap = 1;
+        let Some(server) = bind_or_skip(cfg) else { return };
+        let addr = server.addr();
+        std::thread::scope(|s| {
+            s.spawn(|| server.run(&ctx).unwrap());
+            // Occupy the single worker with an open, idle connection.
+            let mut held = TcpStream::connect(addr).unwrap();
+            let r = roundtrip(&mut held, "{\"op\":\"ping\"}");
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+            // Fill the one queue slot with a second idle connection.
+            let _parked = TcpStream::connect(addr).unwrap();
+            std::thread::sleep(Duration::from_millis(100));
+            // The third connection must be bounced with `busy`.
+            let mut third = TcpStream::connect(addr).unwrap();
+            let mut reader = std::io::BufReader::new(&mut third);
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            let r = Json::parse(resp.trim()).unwrap();
+            assert_eq!(r.get("code").and_then(Json::as_str), Some("busy"));
+            // The queue is saturated, so a fresh shutdown connection
+            // would be bounced too — drain via the connection the worker
+            // is already serving.
+            let r = roundtrip(&mut held, "{\"op\":\"shutdown\"}");
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,139 @@
+//! Bounded MPMC job queue for the serve worker pool (std-only:
+//! `Mutex` + `Condvar`).
+//!
+//! The queue is the daemon's backpressure point: the acceptor
+//! [`Bounded::try_push`]es each incoming connection and *never blocks* —
+//! when the queue is full the push fails, the acceptor answers `busy`
+//! inline, and memory stays bounded no matter how fast clients connect.
+//! Workers block in [`Bounded::pop`]; [`Bounded::close`] starts the drain:
+//! already-queued jobs are still handed out, then every worker gets
+//! `None` and exits — that is the graceful-shutdown contract.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded multi-producer multi-consumer queue of pending jobs.
+pub struct Bounded<T> {
+    state: Mutex<State<T>>,
+    cap: usize,
+    ready: Condvar,
+}
+
+impl<T> Bounded<T> {
+    /// A queue admitting at most `cap` pending jobs (`cap` is clamped to
+    /// at least 1).
+    pub fn new(cap: usize) -> Bounded<T> {
+        Bounded {
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            cap: cap.max(1),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Enqueue without blocking. Returns the job back when the queue is
+    /// full or closed — the caller owns the rejection response.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.items.len() >= self.cap {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue, blocking while the queue is empty and open. `None` means
+    /// closed *and* drained: the worker's signal to exit.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+
+    /// Stop admitting jobs and wake every blocked worker. Queued jobs are
+    /// still popped (drain semantics); idempotent.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Pending jobs right now (monitoring only — racy by nature).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn push_pop_fifo() {
+        let q = Bounded::new(4);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn full_queue_rejects_without_blocking() {
+        let q = Bounded::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert_eq!(q.try_push(3), Err(3), "over-cap push must bounce the job back");
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(3).is_ok(), "a pop frees a slot");
+    }
+
+    #[test]
+    fn close_drains_then_signals_exit() {
+        let q = Bounded::new(4);
+        assert!(q.try_push(7).is_ok());
+        q.close();
+        assert_eq!(q.try_push(8), Err(8), "closed queue admits nothing");
+        assert_eq!(q.pop(), Some(7), "queued jobs drain after close");
+        assert_eq!(q.pop(), None, "drained + closed = worker exit");
+        assert_eq!(q.pop(), None, "idempotent");
+    }
+
+    #[test]
+    fn close_wakes_blocked_workers() {
+        let q = Bounded::<usize>::new(2);
+        let popped = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    while q.pop().is_some() {
+                        popped.fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+            }
+            assert!(q.try_push(1).is_ok());
+            assert!(q.try_push(2).is_ok());
+            // Workers may still be parked; close must wake all three so
+            // the scope can join.
+            q.close();
+        });
+        assert_eq!(popped.load(Ordering::SeqCst), 2);
+    }
+}

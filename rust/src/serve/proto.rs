@@ -1,0 +1,571 @@
+//! Wire protocol of `cascade serve`: newline-delimited JSON over TCP.
+//!
+//! Every request and every response is exactly one JSON object on one
+//! line (LF-terminated). Requests name their operation in `"op"`:
+//! `ping`, `stat`, `compile`, `encode`, `shutdown`. Success responses
+//! carry `"ok": true` plus per-op payload; failures carry `"ok": false`,
+//! a machine-readable `"code"` (see [`ErrorCode`]) and a human `"error"`.
+//! A malformed or unknown request gets a structured error response — the
+//! connection stays open and usable. The one fatal request defect is a
+//! line exceeding [`MAX_REQUEST_LINE`], after which the server cannot
+//! trust the stream's framing and closes it (the error response is still
+//! sent first). The full schema is specified in `docs/serve.md`.
+//!
+//! Request construction and parsing round-trip exactly, so the `cascade
+//! client` subcommand and the daemon share one vocabulary:
+//!
+//! ```
+//! use cascade::serve::proto::{PointQuery, Request};
+//!
+//! let q = PointQuery {
+//!     app: "gaussian".into(),
+//!     level: Some("compute".into()),
+//!     seed: Some(1),
+//!     tiny: true,
+//!     fast: true,
+//!     ..PointQuery::default()
+//! };
+//! let line = Request::Compile(q.clone()).to_json().to_string_compact();
+//! assert!(line.contains("\"op\":\"compile\""));
+//! assert_eq!(Request::parse_line(&line), Ok(Request::Compile(q)));
+//! ```
+
+use crate::explore::cache::PointMetrics;
+use crate::explore::space::{ExplorePoint, ExploreSpec, Scale};
+use crate::util::json::Json;
+
+/// Upper bound on one request line's content (bytes, excluding the
+/// terminating newline). Requests are small (an op plus a handful of
+/// point fields); a line beyond this is a broken or hostile client and
+/// the connection is closed after an [`ErrorCode::Oversized`] response.
+/// Responses have no such bound — `encode` responses carry whole
+/// bitstreams.
+pub const MAX_REQUEST_LINE: usize = 64 * 1024;
+
+/// Machine-readable failure categories, carried in the `"code"` member
+/// of error responses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Unparseable JSON, a missing/ill-typed member, or a point that
+    /// fails spec validation.
+    BadRequest,
+    /// A well-formed request whose `"op"` the server does not implement.
+    UnknownOp,
+    /// The request line exceeded [`MAX_REQUEST_LINE`]; the connection is
+    /// closed after this response.
+    Oversized,
+    /// The bounded request queue is full — retry later. Sent by the
+    /// acceptor itself, so an overloaded daemon answers in O(1) instead
+    /// of queueing unboundedly.
+    Busy,
+    /// `encode` by key found no valid artifact in the store.
+    NotFound,
+    /// The requested compile ran and failed (the message carries the
+    /// compiler error).
+    CompileFailed,
+    /// The daemon is draining for shutdown and takes no new requests.
+    ShuttingDown,
+}
+
+impl ErrorCode {
+    pub fn tag(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownOp => "unknown_op",
+            ErrorCode::Oversized => "oversized",
+            ErrorCode::Busy => "busy",
+            ErrorCode::NotFound => "not_found",
+            ErrorCode::CompileFailed => "compile_failed",
+            ErrorCode::ShuttingDown => "shutting_down",
+        }
+    }
+}
+
+/// Every request member (and `cascade encode`/`client` flag) that names
+/// part of a point — what `encode` by `key` must *not* also receive.
+pub const POINT_MEMBERS: [&str; 10] = [
+    "app", "level", "seed", "alpha", "iters", "tracks", "regwords", "fifo", "fast", "tiny",
+];
+
+/// One exploration point, as named by a client: the same axis vocabulary
+/// as `cascade explore` / `cascade encode`, single-valued. Unset members
+/// take the CLI defaults (`level=full`, `seed=3`, axis defaults from the
+/// level and base architecture).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PointQuery {
+    pub app: String,
+    pub level: Option<String>,
+    pub seed: Option<u64>,
+    pub alpha: Option<f64>,
+    pub iters: Option<usize>,
+    pub tracks: Option<usize>,
+    pub regwords: Option<usize>,
+    pub fifo: Option<usize>,
+    pub fast: bool,
+    pub tiny: bool,
+}
+
+impl PointQuery {
+    /// Parse the point flags from CLI arguments — **the** single parser
+    /// behind `cascade encode`, `cascade client compile|encode` and the
+    /// daemon's request schema, so the three can never drift apart on an
+    /// axis or a default (drift would silently change effective keys and
+    /// break the daemon/CLI byte-identity contract).
+    pub fn from_args(args: &crate::util::cli::Args) -> Result<PointQuery, String> {
+        let app = args.opt("app").ok_or("--app <name> required")?;
+        let opt_usize = |name: &str| -> Result<Option<usize>, String> {
+            match args.opt(name) {
+                None => Ok(None),
+                Some(s) => s.parse().map(Some).map_err(|_| format!("bad --{name} '{s}'")),
+            }
+        };
+        let seed = match args.opt("seed") {
+            None => None,
+            Some(s) => Some(s.parse().map_err(|_| format!("bad --seed '{s}'"))?),
+        };
+        let alpha = match args.opt("alpha") {
+            None => None,
+            Some(s) => Some(s.parse().map_err(|_| format!("bad --alpha '{s}'"))?),
+        };
+        Ok(PointQuery {
+            app: app.to_string(),
+            level: args.opt("level").map(str::to_string),
+            seed,
+            alpha,
+            iters: opt_usize("iters")?,
+            tracks: opt_usize("tracks")?,
+            regwords: opt_usize("regwords")?,
+            fifo: opt_usize("fifo")?,
+            fast: args.flag("fast"),
+            tiny: args.flag("tiny"),
+        })
+    }
+
+    /// Resolve to the single-point [`ExploreSpec`] + [`ExplorePoint`] the
+    /// evaluation layer consumes — identical to how `cascade encode`
+    /// resolves its flags, so a daemon-served point hits the same cache
+    /// key as the offline CLI.
+    pub fn resolve(&self) -> Result<(ExploreSpec, ExplorePoint), String> {
+        let mut spec = ExploreSpec::default()
+            .with_apps([self.app.as_str()])
+            .with_levels([self.level.as_deref().unwrap_or("full")])
+            .with_seeds([self.seed.unwrap_or(3)]);
+        if let Some(a) = self.alpha {
+            spec = spec.with_alphas([a]);
+        }
+        if let Some(v) = self.iters {
+            spec = spec.with_iters([v]);
+        }
+        if let Some(v) = self.tracks {
+            spec = spec.with_tracks([v]);
+        }
+        if let Some(v) = self.regwords {
+            spec = spec.with_regwords([v]);
+        }
+        if let Some(v) = self.fifo {
+            spec = spec.with_fifos([v]);
+        }
+        spec = spec.with_fast(self.fast);
+        if self.tiny {
+            spec = spec.with_scale(Scale::Tiny);
+        }
+        spec.validate()?;
+        let point = spec.points().into_iter().next().ok_or("empty point spec")?;
+        Ok((spec, point))
+    }
+
+    /// Read the point members out of a request object. Absent members are
+    /// defaults; present members must have the right type.
+    fn from_json(j: &Json) -> Result<PointQuery, String> {
+        let app = j
+            .get("app")
+            .and_then(Json::as_str)
+            .ok_or("missing or non-string \"app\"")?
+            .to_string();
+        let opt_usize = |name: &str| -> Result<Option<usize>, String> {
+            match j.get(name) {
+                None => Ok(None),
+                Some(v) => {
+                    v.as_usize().map(Some).ok_or_else(|| format!("non-integer \"{name}\""))
+                }
+            }
+        };
+        let level = match j.get("level") {
+            None => None,
+            Some(v) => Some(v.as_str().ok_or("non-string \"level\"")?.to_string()),
+        };
+        let seed = match j.get("seed") {
+            None => None,
+            Some(v) => Some(seed_u64(v)?),
+        };
+        let alpha = match j.get("alpha") {
+            None => None,
+            Some(v) => Some(v.as_f64().ok_or("non-number \"alpha\"")?),
+        };
+        let flag = |name: &str| -> Result<bool, String> {
+            match j.get(name) {
+                None => Ok(false),
+                Some(v) => v.as_bool().ok_or_else(|| format!("non-boolean \"{name}\"")),
+            }
+        };
+        Ok(PointQuery {
+            app,
+            level,
+            seed,
+            alpha,
+            iters: opt_usize("iters")?,
+            tracks: opt_usize("tracks")?,
+            regwords: opt_usize("regwords")?,
+            fifo: opt_usize("fifo")?,
+            fast: flag("fast")?,
+            tiny: flag("tiny")?,
+        })
+    }
+
+    /// Write the point members into `j` (only the set ones — the wire
+    /// form round-trips through [`PointQuery::from_json`] exactly).
+    fn write_json(&self, j: &mut Json) {
+        j.set("app", self.app.as_str());
+        if let Some(l) = &self.level {
+            j.set("level", l.as_str());
+        }
+        if let Some(s) = self.seed {
+            // Seeds are full u64s; beyond f64's exact-integer range they
+            // travel as decimal strings (the same policy as the artifact
+            // serializer), so the daemon accepts every seed the offline
+            // CLI accepts.
+            if s < crate::util::json::EXACT_INT_BOUND as u64 {
+                j.set("seed", s);
+            } else {
+                j.set("seed", s.to_string());
+            }
+        }
+        if let Some(a) = self.alpha {
+            j.set("alpha", a);
+        }
+        if let Some(v) = self.iters {
+            j.set("iters", v);
+        }
+        if let Some(v) = self.tracks {
+            j.set("tracks", v);
+        }
+        if let Some(v) = self.regwords {
+            j.set("regwords", v);
+        }
+        if let Some(v) = self.fifo {
+            j.set("fifo", v);
+        }
+        if self.fast {
+            j.set("fast", true);
+        }
+        if self.tiny {
+            j.set("tiny", true);
+        }
+    }
+}
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Liveness probe; the response carries no payload.
+    Ping,
+    /// Cache + server statistics (shares [`crate::explore::DiskCache::stat_json`]
+    /// with `cascade cache stat --json`).
+    Stat,
+    /// Compile (or serve from cache) one point; responds with the
+    /// effective key, provenance, timing and measured metrics.
+    Compile(PointQuery),
+    /// Emit the bitstream of one point (by point query, through the same
+    /// dedup path as `compile`) or of a stored artifact (`key`, hex —
+    /// pure store load, never compiles).
+    Encode { key: Option<u64>, query: Option<PointQuery> },
+    /// Drain in-flight work and stop the daemon.
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one request line. Errors come pre-categorized so the server
+    /// can answer with a structured error response.
+    pub fn parse_line(line: &str) -> Result<Request, (ErrorCode, String)> {
+        let j = Json::parse(line.trim()).map_err(|e| (ErrorCode::BadRequest, e))?;
+        Request::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request, (ErrorCode, String)> {
+        let op = j
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| (ErrorCode::BadRequest, "missing or non-string \"op\"".to_string()))?;
+        match op {
+            "ping" => Ok(Request::Ping),
+            "stat" => Ok(Request::Stat),
+            "shutdown" => Ok(Request::Shutdown),
+            "compile" => {
+                let q = PointQuery::from_json(j).map_err(|e| (ErrorCode::BadRequest, e))?;
+                Ok(Request::Compile(q))
+            }
+            "encode" => {
+                if let Some(k) = j.get("key") {
+                    if let Some(m) = POINT_MEMBERS.iter().find(|m| j.get(m).is_some()) {
+                        // Silently ignoring the point member would serve
+                        // a different point than the client named.
+                        return Err((
+                            ErrorCode::BadRequest,
+                            format!(
+                                "encode: \"key\" and point members are mutually \
+                                 exclusive (got \"{m}\")"
+                            ),
+                        ));
+                    }
+                    let hex = k.as_str().ok_or_else(|| {
+                        (ErrorCode::BadRequest, "non-string \"key\"".to_string())
+                    })?;
+                    let key = u64::from_str_radix(hex, 16).map_err(|_| {
+                        (ErrorCode::BadRequest, format!("bad \"key\" '{hex}' (hex)"))
+                    })?;
+                    Ok(Request::Encode { key: Some(key), query: None })
+                } else {
+                    let q = PointQuery::from_json(j).map_err(|e| (ErrorCode::BadRequest, e))?;
+                    Ok(Request::Encode { key: None, query: Some(q) })
+                }
+            }
+            other => Err((
+                ErrorCode::UnknownOp,
+                format!("unknown op '{other}' (ping|stat|compile|encode|shutdown)"),
+            )),
+        }
+    }
+
+    /// The op tag this request serializes under.
+    pub fn op(&self) -> &'static str {
+        match self {
+            Request::Ping => "ping",
+            Request::Stat => "stat",
+            Request::Compile(_) => "compile",
+            Request::Encode { .. } => "encode",
+            Request::Shutdown => "shutdown",
+        }
+    }
+
+    /// Serialize to the wire object (the client side of the round-trip).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("op", self.op());
+        match self {
+            Request::Ping | Request::Stat | Request::Shutdown => {}
+            Request::Compile(q) => q.write_json(&mut j),
+            Request::Encode { key, query } => {
+                if let Some(k) = key {
+                    j.set("key", key_hex(*k));
+                }
+                if let Some(q) = query {
+                    q.write_json(&mut j);
+                }
+            }
+        }
+        j
+    }
+}
+
+/// Keys travel as 16-digit hex strings (u64 exceeds JSON's exact-integer
+/// number range) — the same rendering the shard manifests use.
+pub fn key_hex(key: u64) -> String {
+    format!("{key:016x}")
+}
+
+/// A wire seed: a JSON number within f64's exact-integer range, or a
+/// decimal string for the full u64 range.
+fn seed_u64(v: &Json) -> Result<u64, String> {
+    if let Some(n) = v.as_u64() {
+        return Ok(n);
+    }
+    if let Some(s) = v.as_str() {
+        if let Ok(n) = s.parse::<u64>() {
+            return Ok(n);
+        }
+    }
+    Err("non-integer \"seed\" (number or decimal string)".into())
+}
+
+/// A success response skeleton: `{"ok":true,"op":...}`.
+pub fn response_ok(op: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("ok", true).set("op", op);
+    j
+}
+
+/// An error response: `{"ok":false,"code":...,"error":...}`.
+pub fn response_error(code: ErrorCode, msg: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("ok", false).set("code", code.tag()).set("error", msg);
+    j
+}
+
+/// The measured-metrics payload of a `compile` response — the same field
+/// names the explore reports and partial log use.
+pub fn metrics_json(m: &PointMetrics) -> Json {
+    let mut j = Json::obj();
+    j.set("crit_ns", m.crit_ns)
+        .set("fmax_mhz", m.fmax_mhz)
+        .set("runtime_ms", m.runtime_ms)
+        .set("power_mw", m.power_mw)
+        .set("energy_mj", m.energy_mj)
+        .set("edp", m.edp)
+        .set("pipe_regs", m.pipe_regs)
+        .set("util_pct", m.util_pct);
+    if m.cycles > 0 {
+        j.set("cycles", m.cycles);
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_round_trips_every_op() {
+        let q = PointQuery {
+            app: "gaussian".into(),
+            level: Some("compute".into()),
+            seed: Some(7),
+            alpha: Some(1.35),
+            iters: Some(50),
+            tracks: Some(3),
+            regwords: Some(32),
+            fifo: Some(4),
+            fast: true,
+            tiny: true,
+        };
+        let reqs = [
+            Request::Ping,
+            Request::Stat,
+            Request::Shutdown,
+            Request::Compile(q.clone()),
+            Request::Encode { key: None, query: Some(q) },
+            Request::Encode { key: Some(0xDEADBEEF12345678), query: None },
+        ];
+        for r in reqs {
+            let line = r.to_json().to_string_compact();
+            assert_eq!(Request::parse_line(&line), Ok(r), "round-trip failed for {line}");
+        }
+    }
+
+    #[test]
+    fn sparse_point_query_serializes_only_set_members() {
+        let q = PointQuery { app: "harris".into(), ..PointQuery::default() };
+        let line = Request::Compile(q).to_json().to_string_compact();
+        assert_eq!(line, "{\"app\":\"harris\",\"op\":\"compile\"}");
+    }
+
+    #[test]
+    fn seeds_beyond_f64_exact_range_round_trip_as_strings() {
+        for seed in [0u64, 3, (1 << 53) - 1, 1 << 53, u64::MAX] {
+            let q = PointQuery { app: "gaussian".into(), seed: Some(seed), ..Default::default() };
+            let line = Request::Compile(q.clone()).to_json().to_string_compact();
+            match Request::parse_line(&line) {
+                Ok(Request::Compile(back)) => assert_eq!(back.seed, Some(seed), "{line}"),
+                other => panic!("seed {seed} failed to round-trip: {other:?} ({line})"),
+            }
+        }
+        assert_eq!(seed_u64(&Json::Str("18446744073709551615".into())), Ok(u64::MAX));
+        assert!(seed_u64(&Json::Str("not a number".into())).is_err());
+        assert!(seed_u64(&Json::Bool(true)).is_err());
+    }
+
+    #[test]
+    fn encode_rejects_key_and_point_members_together() {
+        for line in [
+            "{\"op\":\"encode\",\"key\":\"00000000000000ff\",\"app\":\"gaussian\"}",
+            "{\"op\":\"encode\",\"key\":\"00000000000000ff\",\"seed\":7}",
+            "{\"op\":\"encode\",\"key\":\"00000000000000ff\",\"tiny\":true}",
+        ] {
+            match Request::parse_line(line) {
+                Err((ErrorCode::BadRequest, msg)) => {
+                    assert!(msg.contains("mutually exclusive"), "{msg}")
+                }
+                other => panic!("expected bad_request for {line}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_and_illtyped_requests_are_bad_request() {
+        for line in [
+            "not json at all",
+            "{\"op\":",
+            "{}",
+            "{\"op\":42}",
+            "{\"op\":\"compile\"}",
+            "{\"op\":\"compile\",\"app\":7}",
+            "{\"op\":\"compile\",\"app\":\"gaussian\",\"seed\":\"x\"}",
+            "{\"op\":\"compile\",\"app\":\"gaussian\",\"fast\":\"yes\"}",
+            "{\"op\":\"encode\",\"key\":\"zz\"}",
+            "{\"op\":\"encode\",\"key\":123}",
+        ] {
+            match Request::parse_line(line) {
+                Err((ErrorCode::BadRequest, _)) => {}
+                other => panic!("expected bad_request for {line}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_op_is_its_own_code() {
+        match Request::parse_line("{\"op\":\"frobnicate\"}") {
+            Err((ErrorCode::UnknownOp, msg)) => assert!(msg.contains("frobnicate")),
+            other => panic!("expected unknown_op, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn from_args_parses_the_full_encode_vocabulary() {
+        let parse = |s: &str| {
+            crate::util::cli::Args::parse(s.split_whitespace().map(|x| x.to_string()))
+        };
+        let args = parse(
+            "encode --app gaussian --level compute --seed 7 --alpha 1.35 \
+             --iters 50 --tracks 3 --regwords 32 --fifo 4 --fast --tiny",
+        );
+        let q = PointQuery::from_args(&args).unwrap();
+        assert_eq!(q.app, "gaussian");
+        assert_eq!(q.level.as_deref(), Some("compute"));
+        assert_eq!(q.seed, Some(7));
+        assert_eq!(q.alpha, Some(1.35));
+        assert_eq!(q.iters, Some(50));
+        assert_eq!(q.tracks, Some(3));
+        assert_eq!(q.regwords, Some(32));
+        assert_eq!(q.fifo, Some(4));
+        assert!(q.fast && q.tiny);
+
+        assert!(PointQuery::from_args(&parse("encode")).is_err(), "--app is required");
+        assert!(PointQuery::from_args(&parse("encode --app g --seed x")).is_err());
+        assert!(PointQuery::from_args(&parse("encode --app g --iters x")).is_err());
+    }
+
+    #[test]
+    fn resolve_matches_cli_defaults_and_validates() {
+        let q = PointQuery { app: "gaussian".into(), ..PointQuery::default() };
+        let (spec, point) = q.resolve().unwrap();
+        assert_eq!(spec.levels, vec!["full".to_string()]);
+        assert_eq!(spec.seeds, vec![3]);
+        assert_eq!(point.id, 0);
+        assert_eq!(point.app, "gaussian");
+
+        let bad = PointQuery { app: "no-such-app".into(), ..PointQuery::default() };
+        assert!(bad.resolve().is_err());
+        let bad_level = PointQuery {
+            app: "gaussian".into(),
+            level: Some("mystery".into()),
+            ..PointQuery::default()
+        };
+        assert!(bad_level.resolve().is_err());
+    }
+
+    #[test]
+    fn error_response_shape() {
+        let j = response_error(ErrorCode::Busy, "request queue full");
+        let s = j.to_string_compact();
+        assert_eq!(s, "{\"code\":\"busy\",\"error\":\"request queue full\",\"ok\":false}");
+    }
+}

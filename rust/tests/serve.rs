@@ -1,0 +1,205 @@
+//! End-to-end acceptance for the `cascade serve` daemon (ISSUE 5):
+//!
+//! * K identical *concurrent* `compile` requests deduplicate to exactly
+//!   one fresh compile (`CacheStats::misses == 1`, observed through the
+//!   daemon's `stat` response and the on-disk record count);
+//! * a daemon-served `encode` emits bytes **identical** to offline
+//!   `cascade encode --from-cache` (the store-rehydrate + encode path)
+//!   *and* to a wholly fresh compile of the same point — and the daemon's
+//!   reported effective key matches the CLI's own key derivation;
+//! * `shutdown` drains gracefully: every in-flight request is answered
+//!   and [`Server::run`] returns.
+//!
+//! All tests skip (with a note) when the environment has no loopback
+//! networking; the toolkit itself never requires a network.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use cascade::explore::{runner, DiskCache};
+use cascade::pipeline::CompileCtx;
+use cascade::serve::client;
+use cascade::serve::proto::{PointQuery, Request};
+use cascade::serve::{ServeConfig, Server};
+use cascade::sim::encode::encode_compiled;
+use cascade::util::json::Json;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("cascade-serve-e2e-{tag}-{}", std::process::id()))
+}
+
+fn config(dir: &std::path::Path, workers: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::new("127.0.0.1:0");
+    cfg.workers = workers;
+    cfg.queue_cap = workers * 4;
+    cfg.cache_dir = dir.to_path_buf();
+    cfg
+}
+
+fn bind_or_skip(cfg: ServeConfig) -> Option<Server> {
+    match Server::bind(cfg) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping serve e2e: {e}");
+            None
+        }
+    }
+}
+
+fn tiny_point() -> PointQuery {
+    PointQuery {
+        app: "gaussian".into(),
+        level: Some("compute".into()),
+        seed: Some(1),
+        fast: true,
+        tiny: true,
+        ..PointQuery::default()
+    }
+}
+
+const TIMEOUT: Duration = Duration::from_secs(300);
+
+#[test]
+fn k_concurrent_identical_compiles_are_one_cache_miss() {
+    let dir = tmp("dedup");
+    let _ = std::fs::remove_dir_all(&dir);
+    let ctx = CompileCtx::paper();
+    let Some(server) = bind_or_skip(config(&dir, 4)) else { return };
+    let addr = server.addr().to_string();
+    let q = tiny_point();
+
+    const K: usize = 4;
+    let provenances: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        s.spawn(|| server.run(&ctx).unwrap());
+        std::thread::scope(|cs| {
+            for _ in 0..K {
+                cs.spawn(|| {
+                    let r = client::request(&addr, &Request::Compile(q.clone()), TIMEOUT)
+                        .expect("compile request");
+                    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r:?}");
+                    let p = r.get("provenance").and_then(Json::as_str).unwrap().to_string();
+                    assert!(r.get("metrics").is_some(), "compile response carries metrics");
+                    provenances.lock().unwrap().push(p);
+                });
+            }
+        });
+
+        // The acceptance criterion, as the daemon accounts it: exactly
+        // one fresh compile across the K identical requests.
+        let stat = client::request(&addr, &Request::Stat, TIMEOUT).expect("stat");
+        let srv = stat.get("server").expect("server section");
+        assert_eq!(
+            srv.get("fresh_compiles").and_then(Json::as_u64),
+            Some(1),
+            "K identical concurrent compiles must be exactly one cache miss: {stat:?}"
+        );
+
+        let bye = client::request(&addr, &Request::Shutdown, TIMEOUT).expect("shutdown");
+        assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
+    });
+
+    let provenances = provenances.into_inner().unwrap();
+    assert_eq!(provenances.len(), K);
+    let fresh = provenances.iter().filter(|p| p.as_str() == "fresh").count();
+    assert_eq!(fresh, 1, "exactly one client pays the compile: {provenances:?}");
+    for p in &provenances {
+        assert!(
+            ["fresh", "warm_mem", "warm_art", "warm_rec"].contains(&p.as_str()),
+            "unknown provenance {p}"
+        );
+    }
+    // The store agrees: one metrics record, one artifact.
+    let dc = DiskCache::at(&dir);
+    assert_eq!(dc.record_count(), 1);
+    assert_eq!(dc.artifacts().keys().len(), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn served_encode_matches_offline_encode_from_cache_byte_for_byte() {
+    let dir = tmp("encode");
+    let _ = std::fs::remove_dir_all(&dir);
+    let ctx = CompileCtx::paper();
+    let Some(server) = bind_or_skip(config(&dir, 2)) else { return };
+    let addr = server.addr().to_string();
+    let q = tiny_point();
+
+    let mut served_key = String::new();
+    let mut served_bits = String::new();
+    std::thread::scope(|s| {
+        s.spawn(|| server.run(&ctx).unwrap());
+
+        // Warm the store through the daemon, then encode the same point.
+        let r = client::request(&addr, &Request::Compile(q.clone()), TIMEOUT).unwrap();
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r:?}");
+        served_key = r.get("key").and_then(Json::as_str).unwrap().to_string();
+
+        let enc = Request::Encode { key: None, query: Some(q.clone()) };
+        let r2 = client::request(&addr, &enc, TIMEOUT).unwrap();
+        assert_eq!(r2.get("ok").and_then(Json::as_bool), Some(true), "{r2:?}");
+        assert_eq!(r2.get("key").and_then(Json::as_str), Some(served_key.as_str()));
+        assert_eq!(
+            r2.get("provenance").and_then(Json::as_str),
+            Some("warm_art"),
+            "the warmed store serves the encode with zero recompiles"
+        );
+        served_bits = r2.get("bitstream").and_then(Json::as_str).unwrap().to_string();
+        assert!(r2.get("words").and_then(Json::as_u64).unwrap() > 0);
+
+        // Key-addressed encode returns the same bytes.
+        let key = u64::from_str_radix(&served_key, 16).unwrap();
+        let r3 = client::request(
+            &addr,
+            &Request::Encode { key: Some(key), query: None },
+            TIMEOUT,
+        )
+        .unwrap();
+        assert_eq!(
+            r3.get("bitstream").and_then(Json::as_str),
+            Some(served_bits.as_str()),
+            "by-key and by-point encodes must agree"
+        );
+
+        let bye = client::request(&addr, &Request::Shutdown, TIMEOUT).unwrap();
+        assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
+    });
+
+    // Offline `cascade encode --from-cache` on the same directory: the
+    // daemon's key must equal the CLI's own derivation, and the
+    // rehydrated artifact must encode to byte-identical text.
+    let (spec, point) = q.resolve().unwrap();
+    let key = runner::effective_key(&spec, &ctx.arch, &point);
+    assert_eq!(format!("{key:016x}"), served_key, "daemon and CLI key derivations agree");
+    let dc = DiskCache::at(&dir);
+    let expect = dc.load(key).map(|m| m.artifact_fp);
+    let cached = dc.artifacts().load(key, expect).expect("artifact persisted by the daemon");
+    let offline = encode_compiled(&cached).to_text();
+    assert_eq!(served_bits, offline, "served bitstream != offline --from-cache bitstream");
+
+    // And both equal a wholly fresh compile of the same point.
+    let (cfg, arch, _) = runner::effective_point(&spec, &ctx.arch, &point);
+    let fresh_ctx = CompileCtx::new(arch);
+    let fresh = runner::compile_effective(&spec, &point, &cfg, &fresh_ctx).unwrap();
+    assert_eq!(offline, encode_compiled(&fresh).to_text());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shutdown_drains_and_returns() {
+    let dir = tmp("drain");
+    let _ = std::fs::remove_dir_all(&dir);
+    let ctx = CompileCtx::paper();
+    let Some(server) = bind_or_skip(config(&dir, 2)) else { return };
+    let addr = server.addr().to_string();
+    std::thread::scope(|s| {
+        let daemon = s.spawn(|| server.run(&ctx));
+        let r = client::request(&addr, &Request::Ping, TIMEOUT).unwrap();
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+        let bye = client::request(&addr, &Request::Shutdown, TIMEOUT).unwrap();
+        assert_eq!(bye.get("op").and_then(Json::as_str), Some("shutdown"));
+        // The graceful-shutdown contract: run() itself returns cleanly.
+        daemon.join().expect("daemon thread").expect("run returns Ok");
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
