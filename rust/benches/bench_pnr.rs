@@ -1,36 +1,12 @@
 //! Place-and-route benchmarks: SA placement and PathFinder routing on the
-//! paper-scale array (the compile-time hot paths).
+//! paper-scale array (the compile-time hot paths). Kernels live in
+//! `cascade::benchsuite` so `cascade bench --suite pnr` runs the same
+//! suite without a bench build.
 
-use cascade::arch::params::ArchParams;
-use cascade::pnr::{build_nets, place, route, PlaceParams, RouteParams};
 use cascade::util::bench::Bencher;
 
 fn main() {
-    let ctx = cascade::pipeline::CompileCtx::paper();
-    let arch = ArchParams::paper();
     let mut b = Bencher::new("pnr");
-
-    let app = cascade::apps::dense::gaussian(6400, 4800, 16);
-    let nets = build_nets(&app.dfg, &arch);
-    b.bench("place/gaussian_u16", || {
-        place(&app.dfg, &nets, &arch, &PlaceParams::baseline(3)).cost
-    });
-    b.bench("place/gaussian_u16_alpha", || {
-        place(&app.dfg, &nets, &arch, &PlaceParams::cascade(3)).cost
-    });
-
-    let placement = place(&app.dfg, &nets, &arch, &PlaceParams::baseline(3));
-    b.bench("route/gaussian_u16", || {
-        route(&app.dfg, &nets, &placement, &arch, &ctx.graph, &RouteParams::default())
-            .unwrap()
-            .len()
-    });
-
-    let harris = cascade::apps::dense::harris(1530, 2554, 4);
-    let hnets = build_nets(&harris.dfg, &arch);
-    b.bench("place/harris_u4", || {
-        place(&harris.dfg, &hnets, &arch, &PlaceParams::baseline(5)).cost
-    });
-
+    cascade::benchsuite::run_pnr(&mut b);
     b.finish();
 }

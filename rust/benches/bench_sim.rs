@@ -1,44 +1,12 @@
 //! Simulator benchmarks: fabric cycle simulation and the sparse
-//! ready-valid actor simulation.
+//! ready-valid actor simulation. Kernels live in `cascade::benchsuite`
+//! so `cascade bench --suite sim` runs the same suite without a bench
+//! build.
 
-use std::collections::BTreeMap;
-
-use cascade::pipeline::{compile, CompileCtx, PipelineConfig};
-use cascade::sim::dense::FabricSim;
-use cascade::sparse::sim::simulate_app;
 use cascade::util::bench::Bencher;
 
 fn main() {
-    let ctx = CompileCtx::paper();
     let mut b = Bencher::new("sim");
-
-    let c = compile(
-        &cascade::apps::dense::gaussian(64, 64, 1),
-        &ctx,
-        &PipelineConfig::with_postpnr(),
-        3,
-    )
-    .unwrap();
-    let mut ins = BTreeMap::new();
-    ins.insert(0u16, (0..4096).map(|x| (x * 7 + 5) % 31).collect::<Vec<i64>>());
-    b.bench("fabric/gaussian_64x64_frame", || {
-        FabricSim::run(&c.design, &ins, 4096).outputs.len()
-    });
-
-    let interp_g = c.design.dfg.clone();
-    b.bench("interp/gaussian_64x64_frame", || {
-        cascade::dfg::interp::Interp::run(&interp_g, &ins, 4096).outputs.len()
-    });
-
-    let app = cascade::apps::sparse::mat_elemmul(128, 128, 0.1);
-    let data = cascade::apps::sparse::data_for("mat_elemmul", 42);
-    b.bench("sparse/mat_elemmul_128", || {
-        simulate_app("mat_elemmul", &app.dfg, &data).cycles
-    });
-
-    let tt = cascade::apps::sparse::tensor_ttv(48, 48, 48, 0.05);
-    let tdata = cascade::apps::sparse::data_for("ttv", 42);
-    b.bench("sparse/ttv_48", || simulate_app("ttv", &tt.dfg, &tdata).cycles);
-
+    cascade::benchsuite::run_sim(&mut b);
     b.finish();
 }

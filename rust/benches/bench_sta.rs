@@ -1,40 +1,12 @@
 //! STA hot-path benchmarks: the analysis runs once per post-PnR pipelining
-//! iteration, so its latency bounds compile time.
+//! iteration, so its latency bounds compile time. Kernels live in
+//! `cascade::benchsuite` so `cascade bench --suite sta` runs the same
+//! suite without a bench build.
 
-use cascade::pipeline::{compile, CompileCtx, PipelineConfig};
-use cascade::timing::sta::analyze;
 use cascade::util::bench::Bencher;
 
 fn main() {
-    let ctx = CompileCtx::paper();
     let mut b = Bencher::new("sta");
-
-    let gauss = compile(
-        &cascade::apps::dense::gaussian(6400, 4800, 16),
-        &ctx,
-        &PipelineConfig::compute_only(),
-        3,
-    )
-    .unwrap();
-    b.bench("analyze/gaussian_u16", || analyze(&gauss.design, &ctx.graph).period_ps);
-
-    let harris = compile(
-        &cascade::apps::dense::harris(1530, 2554, 4),
-        &ctx,
-        &PipelineConfig::compute_only(),
-        3,
-    )
-    .unwrap();
-    b.bench("analyze/harris_u4", || analyze(&harris.design, &ctx.graph).period_ps);
-
-    let sp = compile(
-        &cascade::apps::sparse::mat_elemmul(128, 128, 0.1),
-        &ctx,
-        &PipelineConfig::compute_only(),
-        3,
-    )
-    .unwrap();
-    b.bench("analyze/sparse_elemmul", || analyze(&sp.design, &ctx.graph).period_ps);
-
+    cascade::benchsuite::run_sta(&mut b);
     b.finish();
 }

@@ -1,48 +1,14 @@
 //! End-to-end table regeneration benchmarks: one measurement per paper
 //! table/figure pipeline (compile + pipelining + STA for a representative
 //! app of each experiment). These are the `cargo bench` counterparts of
-//! `cascade exp <id>`; run the CLI for the full tables.
+//! `cascade exp <id>`; run the CLI for the full tables. Kernels live in
+//! `cascade::benchsuite` so `cascade bench --suite tables` runs the same
+//! suite without a bench build.
 
-use cascade::pipeline::{compile, CompileCtx, PipelineConfig};
-use cascade::timing::gatelevel::{gate_level_period_ps, GateLevelParams};
 use cascade::util::bench::Bencher;
 
 fn main() {
-    let ctx = CompileCtx::paper();
     let mut b = Bencher::new("tables");
-
-    // Fig. 6 pipeline: compile + STA + gate-level surrogate.
-    b.bench("fig6/gaussian_point", || {
-        let c = compile(
-            &cascade::apps::dense::gaussian(64, 64, 2),
-            &ctx,
-            &PipelineConfig::compute_only(),
-            3,
-        )
-        .unwrap();
-        gate_level_period_ps(&c.design, &ctx.graph, &GateLevelParams::default())
-    });
-
-    // Table I pipeline: full Cascade compile of one app.
-    b.bench("table1/unsharp_full", || {
-        compile(
-            &cascade::apps::dense::unsharp(1536, 2560, 4),
-            &ctx,
-            &PipelineConfig::with_postpnr(),
-            3,
-        )
-        .unwrap()
-        .fmax_mhz()
-    });
-
-    // Table II pipeline: sparse compile + ready-valid simulation.
-    b.bench("table2/vec_elemadd_all", || {
-        let app = cascade::apps::sparse::vec_elemadd(4096, 0.25);
-        let cfg = PipelineConfig::sparse_ladder().pop().unwrap().1;
-        let c = compile(&app, &ctx, &cfg, 11).unwrap();
-        let data = cascade::apps::sparse::data_for("vec_elemadd", 42);
-        cascade::sparse::sim::simulate_app("vec_elemadd", &c.design.dfg, &data).cycles
-    });
-
+    cascade::benchsuite::run_tables(&mut b);
     b.finish();
 }

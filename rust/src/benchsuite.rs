@@ -1,0 +1,281 @@
+//! Library home of the benchmark suites.
+//!
+//! The `cargo bench` targets (`benches/bench_{pnr,sta,sim,tables}.rs`,
+//! `harness = false`) are thin mains over the `run_*` functions here, so
+//! the same kernels are reachable without a bench build: `cascade bench`
+//! drives them from the CLI and — with `--json` — writes a
+//! machine-readable `BENCH_<suite>.json` snapshot (schema below) that CI
+//! uploads as an artifact.
+//!
+//! ```json
+//! {
+//!   "schema": "cascade-bench-v1",
+//!   "suite": "compile",
+//!   "results": [
+//!     {"name": "compile/gaussian_64x64_compute", "iters": 12,
+//!      "median_ns": 1.2e7, "mean_ns": 1.3e7, "p10_ns": 1.1e7, "p90_ns": 1.5e7}
+//!   ]
+//! }
+//! ```
+//!
+//! Budgets come from `CASCADE_BENCH_WARMUP_MS` / `CASCADE_BENCH_BUDGET_MS`
+//! (see [`crate::util::bench::Bencher`]); `--fast` presets them small for
+//! smoke runs.
+
+use crate::pipeline::{compile, CompileCtx, PipelineConfig};
+use crate::util::bench::Bencher;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Suites runnable by name (CLI `--suite`, default first).
+pub const SUITE_NAMES: &[&str] = &["compile", "pnr", "sta", "sim", "tables"];
+
+/// CI-sized end-to-end suite: small-frame compiles through every pipeline
+/// stage plus STA and bitstream encoding in isolation. This is the suite
+/// `cascade bench` runs by default — minutes, not tens of minutes, even
+/// at the default budget.
+pub fn run_compile(b: &mut Bencher) {
+    let ctx = CompileCtx::paper();
+    let app = crate::apps::dense::gaussian(64, 64, 2);
+    b.bench("compile/gaussian_64x64_compute", || {
+        compile(&app, &ctx, &PipelineConfig::compute_only(), 3).unwrap().fmax_mhz()
+    });
+    b.bench("compile/gaussian_64x64_postpnr", || {
+        compile(&app, &ctx, &PipelineConfig::with_postpnr(), 3).unwrap().fmax_mhz()
+    });
+
+    let c = compile(&app, &ctx, &PipelineConfig::with_postpnr(), 3).unwrap();
+    b.bench("sta/gaussian_64x64", || {
+        crate::timing::sta::analyze(&c.design, &ctx.graph).period_ps
+    });
+    b.bench("encode/gaussian_64x64", || crate::sim::encode::encode_compiled(&c).len());
+
+    let sp = crate::apps::sparse::vec_elemadd(4096, 0.25);
+    b.bench("compile/vec_elemadd_sparse", || {
+        compile(&sp, &ctx, &PipelineConfig::compute_only(), 3).unwrap().fmax_mhz()
+    });
+}
+
+/// Place-and-route: SA placement and PathFinder routing on the
+/// paper-scale array (the compile-time hot paths).
+pub fn run_pnr(b: &mut Bencher) {
+    use crate::pnr::{build_nets, place, route, PlaceParams, RouteParams};
+    let ctx = CompileCtx::paper();
+    let arch = crate::arch::params::ArchParams::paper();
+
+    let app = crate::apps::dense::gaussian(6400, 4800, 16);
+    let nets = build_nets(&app.dfg, &arch);
+    b.bench("place/gaussian_u16", || {
+        place(&app.dfg, &nets, &arch, &PlaceParams::baseline(3)).cost
+    });
+    b.bench("place/gaussian_u16_alpha", || {
+        place(&app.dfg, &nets, &arch, &PlaceParams::cascade(3)).cost
+    });
+
+    let placement = place(&app.dfg, &nets, &arch, &PlaceParams::baseline(3));
+    b.bench("route/gaussian_u16", || {
+        route(&app.dfg, &nets, &placement, &arch, &ctx.graph, &RouteParams::default())
+            .unwrap()
+            .len()
+    });
+
+    let harris = crate::apps::dense::harris(1530, 2554, 4);
+    let hnets = build_nets(&harris.dfg, &arch);
+    b.bench("place/harris_u4", || {
+        place(&harris.dfg, &hnets, &arch, &PlaceParams::baseline(5)).cost
+    });
+}
+
+/// STA hot paths: the analysis runs once per post-PnR pipelining
+/// iteration, so its latency bounds compile time.
+pub fn run_sta(b: &mut Bencher) {
+    use crate::timing::sta::analyze;
+    let ctx = CompileCtx::paper();
+
+    let gauss = compile(
+        &crate::apps::dense::gaussian(6400, 4800, 16),
+        &ctx,
+        &PipelineConfig::compute_only(),
+        3,
+    )
+    .unwrap();
+    b.bench("analyze/gaussian_u16", || analyze(&gauss.design, &ctx.graph).period_ps);
+
+    let harris = compile(
+        &crate::apps::dense::harris(1530, 2554, 4),
+        &ctx,
+        &PipelineConfig::compute_only(),
+        3,
+    )
+    .unwrap();
+    b.bench("analyze/harris_u4", || analyze(&harris.design, &ctx.graph).period_ps);
+
+    let sp = compile(
+        &crate::apps::sparse::mat_elemmul(128, 128, 0.1),
+        &ctx,
+        &PipelineConfig::compute_only(),
+        3,
+    )
+    .unwrap();
+    b.bench("analyze/sparse_elemmul", || analyze(&sp.design, &ctx.graph).period_ps);
+}
+
+/// Simulators: fabric cycle simulation and the sparse ready-valid actor
+/// simulation.
+pub fn run_sim(b: &mut Bencher) {
+    use std::collections::BTreeMap;
+
+    use crate::sim::dense::FabricSim;
+    use crate::sparse::sim::simulate_app;
+
+    let ctx = CompileCtx::paper();
+    let c = compile(
+        &crate::apps::dense::gaussian(64, 64, 1),
+        &ctx,
+        &PipelineConfig::with_postpnr(),
+        3,
+    )
+    .unwrap();
+    let mut ins = BTreeMap::new();
+    ins.insert(0u16, (0..4096).map(|x| (x * 7 + 5) % 31).collect::<Vec<i64>>());
+    b.bench("fabric/gaussian_64x64_frame", || {
+        FabricSim::run(&c.design, &ins, 4096).outputs.len()
+    });
+
+    let interp_g = c.design.dfg.clone();
+    b.bench("interp/gaussian_64x64_frame", || {
+        crate::dfg::interp::Interp::run(&interp_g, &ins, 4096).outputs.len()
+    });
+
+    let app = crate::apps::sparse::mat_elemmul(128, 128, 0.1);
+    let data = crate::apps::sparse::data_for("mat_elemmul", 42);
+    b.bench("sparse/mat_elemmul_128", || simulate_app("mat_elemmul", &app.dfg, &data).cycles);
+
+    let tt = crate::apps::sparse::tensor_ttv(48, 48, 48, 0.05);
+    let tdata = crate::apps::sparse::data_for("ttv", 42);
+    b.bench("sparse/ttv_48", || simulate_app("ttv", &tt.dfg, &tdata).cycles);
+}
+
+/// End-to-end table regeneration: one measurement per paper table/figure
+/// pipeline (compile + pipelining + STA for a representative app of each
+/// experiment).
+pub fn run_tables(b: &mut Bencher) {
+    use crate::timing::gatelevel::{gate_level_period_ps, GateLevelParams};
+    let ctx = CompileCtx::paper();
+
+    b.bench("fig6/gaussian_point", || {
+        let c = compile(
+            &crate::apps::dense::gaussian(64, 64, 2),
+            &ctx,
+            &PipelineConfig::compute_only(),
+            3,
+        )
+        .unwrap();
+        gate_level_period_ps(&c.design, &ctx.graph, &GateLevelParams::default())
+    });
+
+    b.bench("table1/unsharp_full", || {
+        compile(
+            &crate::apps::dense::unsharp(1536, 2560, 4),
+            &ctx,
+            &PipelineConfig::with_postpnr(),
+            3,
+        )
+        .unwrap()
+        .fmax_mhz()
+    });
+
+    b.bench("table2/vec_elemadd_all", || {
+        let app = crate::apps::sparse::vec_elemadd(4096, 0.25);
+        let cfg = PipelineConfig::sparse_ladder().pop().unwrap().1;
+        let c = compile(&app, &ctx, &cfg, 11).unwrap();
+        let data = crate::apps::sparse::data_for("vec_elemadd", 42);
+        crate::sparse::sim::simulate_app("vec_elemadd", &c.design.dfg, &data).cycles
+    });
+}
+
+/// Run one suite by name into the given bencher.
+pub fn run_suite(name: &str, b: &mut Bencher) -> Result<(), String> {
+    match name {
+        "compile" => run_compile(b),
+        "pnr" => run_pnr(b),
+        "sta" => run_sta(b),
+        "sim" => run_sim(b),
+        "tables" => run_tables(b),
+        other => {
+            return Err(format!(
+                "unknown bench suite '{other}' (one of: {})",
+                SUITE_NAMES.join(" ")
+            ))
+        }
+    }
+    Ok(())
+}
+
+/// Machine-readable snapshot of a finished bencher run.
+pub fn to_json(suite: &str, b: &Bencher) -> Json {
+    let mut j = Json::obj();
+    j.set("schema", "cascade-bench-v1").set("suite", suite);
+    let mut arr = Json::Arr(vec![]);
+    for r in b.results() {
+        arr.push(r.to_json());
+    }
+    j.set("results", arr);
+    j
+}
+
+/// `cascade bench [--suite NAME] [--json] [--fast]`: run a suite from the
+/// CLI. `--fast` presets tiny warmup/budget (unless the env knobs are
+/// already set) so CI smoke runs stay cheap; `--json` writes
+/// `BENCH_<suite>.json` next to the working directory in addition to the
+/// `results/bench_<suite>.json` the bencher itself records.
+pub fn bench_cli(args: &Args) -> Result<(), String> {
+    let suite = args.opt_or("suite", "compile");
+    if args.flag("fast") {
+        for (var, val) in
+            [("CASCADE_BENCH_WARMUP_MS", "10"), ("CASCADE_BENCH_BUDGET_MS", "60")]
+        {
+            if std::env::var_os(var).is_none() {
+                std::env::set_var(var, val);
+            }
+        }
+    }
+    let mut b = Bencher::new(suite);
+    println!("bench: suite '{suite}'...");
+    run_suite(suite, &mut b)?;
+    b.finish();
+    if args.flag("json") {
+        let path = format!("BENCH_{suite}.json");
+        std::fs::write(&path, to_json(suite, &b).to_string_pretty())
+            .map_err(|e| format!("cannot write {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_json_carries_schema_and_results() {
+        std::env::set_var("CASCADE_BENCH_WARMUP_MS", "1");
+        std::env::set_var("CASCADE_BENCH_BUDGET_MS", "2");
+        let mut b = Bencher::new("selftest");
+        b.bench("noop/sum", || (0..64u64).sum::<u64>());
+        let j = to_json("selftest", &b).to_string_compact();
+        assert!(j.contains("\"schema\":\"cascade-bench-v1\""), "{j}");
+        assert!(j.contains("\"suite\":\"selftest\""), "{j}");
+        assert!(j.contains("selftest/noop/sum"), "{j}");
+        std::env::remove_var("CASCADE_BENCH_WARMUP_MS");
+        std::env::remove_var("CASCADE_BENCH_BUDGET_MS");
+    }
+
+    #[test]
+    fn unknown_suite_is_rejected_with_the_roster() {
+        let mut b = Bencher::new("x");
+        let err = run_suite("nope", &mut b).unwrap_err();
+        assert!(err.contains("compile"), "{err}");
+        assert!(err.contains("tables"), "{err}");
+    }
+}

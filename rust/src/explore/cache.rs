@@ -493,6 +493,31 @@ impl DiskCache {
     pub fn stores(&self) -> usize {
         self.stores.load(Ordering::Relaxed)
     }
+
+    /// Publish this handle's counters and the artifact store's occupancy
+    /// into `reg` as gauges. Scrape-time totals, not deltas: the caller
+    /// (the serve daemon's `metrics` op, `--profile` reports) calls this
+    /// right before rendering an exposition, so the hot paths carry no
+    /// metrics bookkeeping at all. The in-memory layer's counters are
+    /// published by [`super::runner::SessionCore::publish_metrics`].
+    pub fn publish_metrics(&self, reg: &crate::obs::Registry) {
+        reg.gauge("cache_disk_hits", "points served from the persistent metrics cache")
+            .set(self.disk_hits() as u64);
+        reg.gauge("cache_disk_stores", "metrics records written by this handle")
+            .set(self.stores() as u64);
+        reg.gauge("cache_artifact_rehydrations", "compiled artifacts rehydrated from the store")
+            .set(self.artifacts.hits() as u64);
+        reg.gauge("cache_artifact_rejections", "artifact loads rejected (parse or fingerprint)")
+            .set(self.artifacts.rejected() as u64);
+        reg.gauge("cache_artifact_stores", "compiled artifacts written by this handle")
+            .set(self.artifacts.stores() as u64);
+        let s = self.artifacts.stat();
+        reg.gauge("cache_store_entries", "artifacts resident in the store")
+            .set(s.entries as u64);
+        reg.gauge("cache_store_bytes", "artifact store size in bytes").set(s.bytes);
+        reg.gauge("cache_store_pinned", "artifacts pinned against eviction")
+            .set(s.pinned as u64);
+    }
 }
 
 #[cfg(test)]

@@ -113,6 +113,7 @@ pub(crate) fn pin_survivors(
 /// Some(K/N)`, evaluate only this shard's slice and write
 /// `results/shard_K_of_N.json` instead of the report; `cascade
 /// explore-merge` reassembles the full report.
+#[allow(clippy::too_many_arguments)]
 pub fn run_cli(
     spec: &ExploreSpec,
     ctx: &CompileCtx,
@@ -121,9 +122,22 @@ pub fn run_cli(
     search: &SearchKind,
     shard_of: Option<&ShardSpec>,
     cache_cap: Option<&CacheCap>,
+    profile: bool,
 ) -> Result<(), String> {
     spec.validate()?;
     let threads = threads.max(1);
+    if profile && shard_of.is_some() {
+        return Err(
+            "explore: --profile is not available with --shard (a shard's report is the \
+             manifest; profile the unsharded run, or scrape a daemon's `metrics` op)"
+                .into(),
+        );
+    }
+    // `--profile` attaches a metrics registry to the session: fresh
+    // compiles record per-stage spans, and the report gains a profile
+    // section. Without the flag nothing is measured and the report is
+    // byte-identical to earlier releases.
+    let obs_reg = if profile { Some(std::sync::Arc::new(crate::obs::Registry::new())) } else { None };
     if let Some(sh) = shard_of {
         if !use_disk_cache {
             return Err(
@@ -168,7 +182,10 @@ pub fn run_cli(
                 spec.shape(),
                 threads
             );
-            let session = EvalSession::new(spec, ctx, disk.as_ref(), Some(&sink));
+            let mut session = EvalSession::new(spec, ctx, disk.as_ref(), Some(&sink));
+            if let Some(reg) = &obs_reg {
+                session.set_obs(reg.clone());
+            }
             let results = session.eval_points(&points, threads, None);
             let stats = session.stats();
             (results, stats, None)
@@ -185,8 +202,16 @@ pub fn run_cli(
                 candidates.shape(),
                 threads
             );
-            let outcome =
-                search::run_halving(spec, ctx, threads, disk.as_ref(), Some(&sink), params, None)?;
+            let outcome = search::run_halving_obs(
+                spec,
+                ctx,
+                threads,
+                disk.as_ref(),
+                Some(&sink),
+                params,
+                None,
+                obs_reg.clone(),
+            )?;
             println!(
                 "halving: {} evaluation(s) total, {} at full budget",
                 outcome.total_evals(),
@@ -197,7 +222,16 @@ pub fn run_cli(
     };
 
     let trajectory = trajectory.as_ref().map(|(p, r)| (p, r.as_slice()));
-    let (md, json, analyses) = report::render_report(spec, &results, trajectory);
+    let (mut md, mut json, analyses) = report::render_report(spec, &results, trajectory);
+    if let Some(reg) = &obs_reg {
+        // Opt-in only: the profile section carries wall-clock data, so it
+        // is appended *after* the run-invariant report body — default
+        // reports (and the sharded-merge byte-identity contract) are
+        // untouched.
+        let (pmd, pjson) = report::profile_section(reg);
+        md.push_str(&pmd);
+        json.set("profile", pjson);
+    }
     crate::experiments::common::emit("explore", "Design-space exploration", &md, &json);
 
     if sink.is_active() && sink.dropped() == 0 {

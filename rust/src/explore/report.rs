@@ -180,6 +180,94 @@ pub fn render_report(
     (md, json, analyses)
 }
 
+/// Stage label of a `compile_stage_seconds{stage="..."}` series name,
+/// or the whole name when it carries no stage label.
+fn stage_label(name: &str) -> &str {
+    name.split("stage=\"").nth(1).and_then(|s| s.split('"').next()).unwrap_or(name)
+}
+
+/// Bucket-bound quantile as display text: microseconds, `inf` when the
+/// rank fell in the overflow bucket, `-` for an empty histogram.
+fn q_str(snap: &crate::obs::HistoSnapshot, q: f64) -> String {
+    match crate::obs::metrics::quantile_of(snap, q) {
+        None => "-".into(),
+        Some(u64::MAX) => "inf".into(),
+        Some(us) => us.to_string(),
+    }
+}
+
+fn profile_row(label: &str, snap: &crate::obs::HistoSnapshot) -> (Vec<String>, Json) {
+    let row = vec![
+        label.to_string(),
+        snap.count.to_string(),
+        crate::obs::metrics::secs_str(snap.sum_nanos, 1_000_000_000),
+        q_str(snap, 0.50),
+        q_str(snap, 0.99),
+    ];
+    let mut j = Json::obj();
+    j.set("stage", label)
+        .set("count", snap.count)
+        .set("total_ns", snap.sum_nanos)
+        .set(
+            "p50_us",
+            crate::obs::metrics::quantile_of(snap, 0.50).map_or(Json::Null, Json::from),
+        )
+        .set(
+            "p99_us",
+            crate::obs::metrics::quantile_of(snap, 0.99).map_or(Json::Null, Json::from),
+        );
+    (row, j)
+}
+
+/// Opt-in `--profile` section: per-stage compile-time breakdown read
+/// from the run's metrics registry. Kept out of [`render_report`] on
+/// purpose — the default report (and with it the sharded-merge
+/// byte-identity contract) must never see wall-clock content, so the CLI
+/// appends this only when asked.
+pub fn profile_section(reg: &crate::obs::Registry) -> (String, Json) {
+    let mut series = reg.histogram_series("compile_stage_seconds{");
+    // Pipeline order first, any stage the order list does not know after
+    // it in name order.
+    let rank = |name: &str| {
+        let stage = stage_label(name);
+        crate::obs::STAGE_ORDER
+            .iter()
+            .position(|s| *s == stage)
+            .unwrap_or(crate::obs::STAGE_ORDER.len())
+    };
+    series.sort_by(|a, b| rank(&a.0).cmp(&rank(&b.0)).then_with(|| a.0.cmp(&b.0)));
+
+    let mut md = String::from("\n## Compile profile\n\n");
+    md.push_str(
+        "Per-stage wall clock over *fresh* compiles only — cache-served points are \
+         not traced. Quantiles are log2-bucket upper bounds (µs).\n\n",
+    );
+    let mut rows = Vec::new();
+    let mut jstages = Json::Arr(vec![]);
+    for (name, snap) in &series {
+        let (row, j) = profile_row(stage_label(name), snap);
+        rows.push(row);
+        jstages.push(j);
+    }
+    let mut json = Json::obj();
+    for (family, label) in
+        [("compile_seconds", "total (per compile)"), ("measure_seconds", "measure")]
+    {
+        if let Some((_, snap)) = reg.histogram_series(family).first() {
+            let (row, mut j) = profile_row(label, snap);
+            rows.push(row);
+            j.set("stage", Json::Null);
+            json.set(family, j);
+        }
+    }
+    md.push_str(&crate::experiments::common::md_table(
+        &["stage", "count", "total (s)", "p50 (µs)", "p99 (µs)"],
+        &rows,
+    ));
+    json.set("stages", jstages);
+    (md, json)
+}
+
 /// Deterministic JSON section describing an adaptive search run: the
 /// halving knobs plus the per-rung trajectory. Attached to the run report
 /// under the `search` key.
@@ -444,6 +532,25 @@ mod tests {
         let md = search_to_markdown(&params, &rungs);
         assert!(md.contains("3 rung(s)"));
         assert!(md.contains("| 0 | 7 | 9 | 3 |"));
+    }
+
+    #[test]
+    fn profile_section_orders_stages_and_reports_totals() {
+        let reg = crate::obs::Registry::new();
+        let spans = vec![
+            crate::obs::SpanRecord { stage: "sta", nanos: 3_000_000 },
+            crate::obs::SpanRecord { stage: "map", nanos: 1_000_000 },
+        ];
+        crate::obs::record_compile_spans(&reg, &spans);
+        let (md, json) = profile_section(&reg);
+        assert!(md.contains("## Compile profile"));
+        let map_at = md.find("| map |").expect("map row");
+        let sta_at = md.find("| sta |").expect("sta row");
+        assert!(map_at < sta_at, "pipeline order, not name order:\n{md}");
+        let j = json.to_string_compact();
+        assert!(j.contains("\"stages\""), "{j}");
+        assert!(j.contains("\"compile_seconds\""), "{j}");
+        assert!(j.contains("\"total_ns\":4000000"), "per-compile total is the span sum: {j}");
     }
 
     #[test]

@@ -382,6 +382,11 @@ pub struct SessionCore<'a> {
     artifacts: ArtifactCache,
     ctxs: CtxCache,
     disk: Option<&'a DiskCache>,
+    /// Optional metrics registry: fresh compiles record per-stage spans
+    /// (`compile_stage_seconds{stage=..}` + `compile_seconds`) and
+    /// measurements record `measure_seconds`. Write-only telemetry —
+    /// attaching one can never change what a compile produces.
+    obs: Option<Arc<crate::obs::Registry>>,
 }
 
 impl<'a> SessionCore<'a> {
@@ -414,7 +419,22 @@ impl<'a> SessionCore<'a> {
             artifacts,
             ctxs: CtxCache::default(),
             disk,
+            obs: None,
         }
+    }
+
+    /// Attach a metrics registry ([`crate::obs::Registry`]) for stage
+    /// tracing: every *fresh* compile this core runs is traced and its
+    /// spans recorded as `compile_stage_seconds{stage=..}` histogram
+    /// observations (warm hits compile nothing, so they record nothing),
+    /// and every measurement records `measure_seconds`.
+    pub fn set_obs(&mut self, reg: Arc<crate::obs::Registry>) {
+        self.obs = Some(reg);
+    }
+
+    /// The attached metrics registry, if any.
+    pub fn obs(&self) -> Option<&Arc<crate::obs::Registry>> {
+        self.obs.as_ref()
     }
 
     /// The effective cache key of `point` under `spec` (cheap parameter
@@ -435,6 +455,20 @@ impl<'a> SessionCore<'a> {
             art_hits,
             ctx_builds: self.ctxs.builds(),
         }
+    }
+
+    /// Publish the in-memory cache layer's counters into `reg` as gauges
+    /// (scrape-time totals — the twin of
+    /// [`DiskCache::publish_metrics`], which covers the persistent
+    /// layers). Called by exposition producers right before rendering.
+    pub fn publish_metrics(&self, reg: &crate::obs::Registry) {
+        let s = self.stats();
+        reg.gauge("cache_memory_hits", "in-memory artifact/metrics hits")
+            .set(s.memory_hits as u64);
+        reg.gauge("cache_fresh_compiles", "points compiled fresh (every cache layer missed)")
+            .set(s.misses as u64);
+        reg.gauge("cache_ctx_builds", "compile contexts built for non-base architectures")
+            .set(s.ctx_builds as u64);
     }
 
     /// Drop compile contexts built for non-base architectures (the base
@@ -496,7 +530,7 @@ impl<'a> SessionCore<'a> {
                 };
                 match reused {
                     Some(m) => Ok(m),
-                    None => measure(&point.app, &c, sparse),
+                    None => self.timed_measure(&point.app, &c, sparse),
                 }
             }
         };
@@ -562,13 +596,40 @@ impl<'a> SessionCore<'a> {
             } else {
                 self.base
             };
-            let c = compile_effective(spec, point, cfg, ctx)?;
+            let c = match &self.obs {
+                Some(reg) => {
+                    let (res, spans) =
+                        crate::obs::with_spans(|| compile_effective(spec, point, cfg, ctx));
+                    crate::obs::record_compile_spans(reg, &spans);
+                    res?
+                }
+                None => compile_effective(spec, point, cfg, ctx)?,
+            };
             if let Some(store) = self.disk.map(DiskCache::artifacts) {
                 store.store(key, &c);
             }
             Ok(c)
         });
         (res, prov.get())
+    }
+
+    /// [`measure`] plus an optional `measure_seconds` observation.
+    fn timed_measure(
+        &self,
+        app: &str,
+        c: &Compiled,
+        sparse: bool,
+    ) -> Result<PointMetrics, String> {
+        match &self.obs {
+            Some(reg) => {
+                let t0 = std::time::Instant::now();
+                let m = measure(app, c, sparse);
+                reg.histogram("measure_seconds", crate::obs::help::MEASURE)
+                    .observe_duration(t0.elapsed());
+                m
+            }
+            None => measure(app, c, sparse),
+        }
     }
 }
 
@@ -589,6 +650,12 @@ impl<'a> EvalSession<'a> {
         sink: Option<&'a PartialSink>,
     ) -> EvalSession<'a> {
         EvalSession { spec, core: SessionCore::new(base, disk), sink }
+    }
+
+    /// Attach a metrics registry to the underlying [`SessionCore`]
+    /// (stage-span histograms for `cascade explore --profile`).
+    pub fn set_obs(&mut self, reg: Arc<crate::obs::Registry>) {
+        self.core.set_obs(reg);
     }
 
     /// Evaluate `points` on `threads` worker threads; results come back in

@@ -227,6 +227,24 @@ pub fn run_halving(
     params: &HalvingParams,
     shard: Option<&ShardSpec>,
 ) -> Result<SearchOutcome, String> {
+    run_halving_obs(spec, ctx, threads, disk, sink, params, shard, None)
+}
+
+/// [`run_halving`] with an optional metrics registry attached to the
+/// session (`cascade explore --profile --search halving`): every fresh
+/// compile across every rung records its per-stage spans. Telemetry only
+/// — results are identical with or without it.
+#[allow(clippy::too_many_arguments)]
+pub fn run_halving_obs(
+    spec: &ExploreSpec,
+    ctx: &CompileCtx,
+    threads: usize,
+    disk: Option<&DiskCache>,
+    sink: Option<&PartialSink>,
+    params: &HalvingParams,
+    shard: Option<&ShardSpec>,
+    obs: Option<std::sync::Arc<crate::obs::Registry>>,
+) -> Result<SearchOutcome, String> {
     spec.validate()?;
     params.validate()?;
     let mut alive = spec.candidates();
@@ -237,7 +255,10 @@ pub fn run_halving(
         .max()
         .unwrap_or(0);
     let budgets = rung_budgets(full_budget(spec), params.min_budget, params.eta, max_cohort);
-    let session = EvalSession::new(spec, ctx, disk, sink);
+    let mut session = EvalSession::new(spec, ctx, disk, sink);
+    if let Some(reg) = obs {
+        session.set_obs(reg);
+    }
 
     let mut rungs = Vec::new();
     let mut final_results = Vec::new();

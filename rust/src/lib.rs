@@ -54,10 +54,22 @@
 //!   session over the explore caches, with in-flight deduplication,
 //!   periodic pinned-aware GC, and graceful drain-on-shutdown; plus the
 //!   `cascade client` driver.
+//! * [`obs`] — zero-dependency observability: a process-wide metrics
+//!   registry (atomic counters / gauges / log₂-bucketed latency histograms
+//!   with exact p50/p99/p999 readout) rendering a byte-deterministic
+//!   Prometheus-style text exposition, a thread-local per-stage span
+//!   tracer threaded through the compile pipeline, and a size-bounded
+//!   JSONL request/event log. Feeds the daemon's `metrics` wire op and
+//!   `cascade explore --profile`.
+//! * [`benchsuite`] — the seed benchmark kernels (`cargo bench` targets
+//!   call into these) re-exposed as library calls so `cascade bench
+//!   --json` can record a perf trajectory point without cargo.
 //! * [`util`] — in-house substrates: deterministic PRNG, JSON writer,
 //!   mini property-testing framework, statistics helpers, micro-bench timer.
 
 pub mod util;
+pub mod obs;
+pub mod benchsuite;
 pub mod arch;
 pub mod dfg;
 pub mod map;

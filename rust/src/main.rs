@@ -9,6 +9,7 @@
 //!                 [--fifo 2,4] [--search grid|halving] [--eta N] [--min-budget N]
 //!                 [--objective knee|crit|edp|regs] [--shard K/N] [--cache-cap CAP]
 //!                 [--threads N] [--power-cap MW] [--fast] [--tiny] [--no-cache]
+//!                 [--profile]                              + per-stage compile-time breakdown
 //! cascade explore-merge <dir>...                           merge shard runs into one report
 //! cascade encode --app gaussian [--level l] [--seed N] [--from-cache|--key HEX] [--out F]
 //!                                                          emit a bitstream (from the
@@ -17,8 +18,11 @@
 //!                                                          inspect / bound explore_cache/
 //! cascade serve [--addr H:P] [--workers N] [--queue N] [--cache-dir D]
 //!               [--cache-cap CAP] [--gc-every SECS]        compile/encode daemon over the store
-//! cascade client <ping|stat|compile|encode|shutdown> [--addr H:P] [point flags]
+//!               [--log PATH|none] [--log-cap CAP]          + structured JSONL request log
+//! cascade client <ping|stat|compile|encode|metrics|shutdown> [--addr H:P] [point flags]
 //!               [--key HEX] [--out F] [--timeout SECS]     drive a running daemon
+//! cascade bench [--suite compile|pnr|sta|sim|tables] [--json] [--fast]
+//!                                                          run a benchmark suite from the CLI
 //! cascade arch                                             print architecture + timing model
 //! ```
 //!
@@ -82,7 +86,9 @@ fn usage() -> ! {
                    [--search grid|halving] [--eta N] [--min-budget N]\n\
                    [--objective knee|crit|edp|regs] [--shard K/N]\n\
                    [--threads N] [--power-cap MW] [--fast] [--tiny]\n\
-                   [--no-cache] [--cache-cap CAP]              design-space exploration\n\
+                   [--no-cache] [--cache-cap CAP] [--profile]  design-space exploration\n\
+                                                                (--profile appends a per-stage\n\
+                                                                compile-time breakdown)\n\
            explore-merge <dir>...                               merge shard manifests + caches\n\
                                                                 into one results/explore report\n\
            encode  --app <name> [--level <level>] [--seed N] [--alpha X] [--iters N]\n\
@@ -95,11 +101,15 @@ fn usage() -> ! {
                                                                 stat --json is machine-readable)\n\
            serve   [--addr HOST:PORT] [--workers N] [--queue N] [--cache-dir DIR]\n\
                    [--cache-cap CAP] [--gc-every SECS]          long-running compile/encode\n\
-                                                                daemon over the artifact store\n\
-                                                                (NDJSON protocol, docs/serve.md)\n\
-           client  <ping|stat|compile|encode|shutdown> [--addr HOST:PORT]\n\
+                   [--log PATH|none] [--log-cap CAP]            daemon over the artifact store\n\
+                                                                (NDJSON protocol, docs/serve.md;\n\
+                                                                JSONL request log, size-rotated)\n\
+           client  <ping|stat|compile|encode|metrics|shutdown> [--addr HOST:PORT]\n\
                    [point flags as for encode] [--key HEX]      drive a running serve daemon;\n\
-                   [--out FILE] [--timeout SECS]                encode writes the bitstream file\n\
+                   [--out FILE] [--timeout SECS]                encode writes the bitstream file,\n\
+                                                                metrics prints the exposition\n\
+           bench   [--suite compile|pnr|sta|sim|tables]         run a benchmark suite; --json\n\
+                   [--json] [--fast]                            writes BENCH_<suite>.json\n\
            arch                                                 architecture + timing summary\n\
          levels: {}\n\
          apps: {}",
@@ -382,6 +392,7 @@ fn main() {
                 &search,
                 shard.as_ref(),
                 cache_cap.as_ref(),
+                args.flag("profile"),
             ) {
                 eprintln!("explore failed: {e}");
                 std::process::exit(1);
@@ -408,6 +419,12 @@ fn main() {
         "client" => {
             if let Err(e) = cascade::serve::client::run_cli(&args) {
                 eprintln!("client failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        "bench" => {
+            if let Err(e) = cascade::benchsuite::bench_cli(&args) {
+                eprintln!("bench failed: {e}");
                 std::process::exit(1);
             }
         }

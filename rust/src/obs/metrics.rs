@@ -1,0 +1,572 @@
+//! Process-wide metrics: atomic counters, gauges and log₂-bucketed
+//! latency histograms behind a [`Registry`] with a **deterministic**
+//! Prometheus-style text exposition.
+//!
+//! Everything here is std-only and lock-light: a series handle is an
+//! `Arc` around atomics, so the hot path (bumping a counter, observing a
+//! latency) is a single `fetch_add` with no registry lock. The registry
+//! lock is taken only to *register* a series (get-or-create) and to
+//! render an exposition — both cold paths.
+//!
+//! Determinism is a contract, not an accident: series are stored in
+//! `BTreeMap`s (stable iteration order), every exposed number derives
+//! from an integer (bucket bounds are exact powers of two in
+//! microseconds, sums are integer nanoseconds), and float formatting is
+//! never involved — so two expositions of the same counter state are
+//! byte-identical, which the unit tests and the CI serve-smoke job both
+//! assert.
+//!
+//! Series names carry their labels inline, Prometheus-style:
+//! `compile_stage_seconds{stage="place"}`. The *family* (the part before
+//! `{`) gets one `# HELP` / `# TYPE` header; [`labeled`] builds such
+//! names without format-string escapes at every call site.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A value that can go up or down (bytes resident, entries, queue depth).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of finite histogram buckets. Bucket `i` covers values up to
+/// `2^i` microseconds inclusive; `2^39` µs ≈ 6.4 days, beyond which the
+/// overflow (`+Inf`) bucket counts.
+pub const BUCKETS: usize = 40;
+
+/// Log₂-bucketed latency histogram over integer microseconds.
+///
+/// Observations are exact integers, so quantile readout is exact *per
+/// bucket*: [`Histogram::quantile`] returns the upper bound of the
+/// bucket containing the requested rank — a deterministic value that
+/// over-reports by at most 2× (the bucket width), never under-reports.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    overflow: AtomicU64,
+    count: AtomicU64,
+    sum_nanos: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            overflow: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            sum_nanos: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Bucket index for a value in microseconds: the smallest `i` with
+/// `v <= 2^i`, or `BUCKETS` for the overflow bucket.
+pub fn bucket_index(us: u64) -> usize {
+    if us <= 1 {
+        return 0;
+    }
+    let i = (64 - (us - 1).leading_zeros()) as usize;
+    i.min(BUCKETS)
+}
+
+/// Upper bound of finite bucket `i`, in microseconds.
+pub fn bucket_bound_us(i: usize) -> u64 {
+    1u64 << i
+}
+
+/// Point-in-time copy of a histogram's state (for profile reports and
+/// tests; the exposition reads the live atomics itself).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistoSnapshot {
+    pub counts: Vec<u64>,
+    pub overflow: u64,
+    pub count: u64,
+    pub sum_nanos: u64,
+}
+
+impl Histogram {
+    /// Record one observation of `us` microseconds.
+    pub fn observe_us(&self, us: u64) {
+        let i = bucket_index(us);
+        if i < BUCKETS {
+            self.counts[i].fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.overflow.fetch_add(1, Ordering::Relaxed);
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add(us.saturating_mul(1000), Ordering::Relaxed);
+    }
+
+    /// Record one observation given in nanoseconds (bucketed at
+    /// microsecond resolution, rounded up so nothing becomes "free";
+    /// the sum keeps full nanosecond precision).
+    pub fn observe_nanos(&self, ns: u64) {
+        let us = ns.div_ceil(1000);
+        let i = bucket_index(us);
+        if i < BUCKETS {
+            self.counts[i].fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.overflow.fetch_add(1, Ordering::Relaxed);
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn observe_duration(&self, d: std::time::Duration) {
+        self.observe_nanos(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_nanos(&self) -> u64 {
+        self.sum_nanos.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> HistoSnapshot {
+        HistoSnapshot {
+            counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            overflow: self.overflow.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+            sum_nanos: self.sum_nanos.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The `q`-quantile (`0.0 < q <= 1.0`) as the upper bound, in
+    /// microseconds, of the bucket containing that rank. `None` for an
+    /// empty histogram; `u64::MAX` when the rank lands in the overflow
+    /// bucket.
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        let snap = self.snapshot();
+        quantile_of(&snap, q)
+    }
+
+    pub fn p50(&self) -> Option<u64> {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> Option<u64> {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> Option<u64> {
+        self.quantile(0.999)
+    }
+}
+
+/// Quantile readout over a snapshot (shared by [`Histogram::quantile`]
+/// and report code that already holds a snapshot).
+pub fn quantile_of(snap: &HistoSnapshot, q: f64) -> Option<u64> {
+    if snap.count == 0 {
+        return None;
+    }
+    let rank = ((q * snap.count as f64).ceil() as u64).clamp(1, snap.count);
+    let mut seen = 0u64;
+    for (i, &c) in snap.counts.iter().enumerate() {
+        seen += c;
+        if seen >= rank {
+            return Some(bucket_bound_us(i));
+        }
+    }
+    Some(u64::MAX)
+}
+
+/// `family{key="value"}` without format-escape noise at call sites.
+pub fn labeled(family: &str, key: &str, value: &str) -> String {
+    format!("{family}{{{key}=\"{value}\"}}")
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn word(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    histograms: BTreeMap<String, Arc<Histogram>>,
+    /// family -> (kind, help). First registration of a family wins.
+    families: BTreeMap<String, (Kind, String)>,
+}
+
+/// A set of named series with a deterministic text exposition.
+///
+/// Each daemon / sweep owns its own registry (so tests and co-resident
+/// servers never share counts); [`global`] offers one process-wide
+/// instance for embedders that want exactly that sharing.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+fn family_of(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn register(&self, name: &str, kind: Kind, help: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        let fam = family_of(name).to_string();
+        inner.families.entry(fam).or_insert_with(|| (kind, help.to_string()));
+    }
+
+    /// Get-or-create a counter series. `name` may carry inline labels.
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        self.register(name, Kind::Counter, help);
+        let mut inner = self.inner.lock().unwrap();
+        inner.counters.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get-or-create a gauge series.
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        self.register(name, Kind::Gauge, help);
+        let mut inner = self.inner.lock().unwrap();
+        inner.gauges.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get-or-create a histogram series.
+    pub fn histogram(&self, name: &str, help: &str) -> Arc<Histogram> {
+        self.register(name, Kind::Histogram, help);
+        let mut inner = self.inner.lock().unwrap();
+        inner.histograms.entry(name.to_string()).or_default().clone()
+    }
+
+    /// All histogram series whose name starts with `prefix`, in name
+    /// order, with snapshots (profile reports consume this).
+    pub fn histogram_series(&self, prefix: &str) -> Vec<(String, HistoSnapshot)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .histograms
+            .iter()
+            .filter(|(name, _)| name.starts_with(prefix))
+            .map(|(name, h)| (name.clone(), h.snapshot()))
+            .collect()
+    }
+
+    /// Render the Prometheus-style text exposition. Byte-deterministic
+    /// for a given counter state: series in name order within families
+    /// in name order, all numbers integer-derived.
+    pub fn expose(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (family, (kind, help)) in &inner.families {
+            out.push_str(&format!("# HELP {family} {help}\n"));
+            out.push_str(&format!("# TYPE {family} {}\n", kind.word()));
+            // All series of a family share it as a name prefix, and
+            // prefix-sharing strings are contiguous under BTreeMap
+            // order — but *other* families can interleave ("x_total"
+            // sorts between "x" and "x{op=..}"), so skip those rather
+            // than stopping at them.
+            match kind {
+                Kind::Counter => {
+                    for (name, c) in inner.counters.range(family.clone()..) {
+                        if !name.starts_with(family.as_str()) {
+                            break;
+                        }
+                        if family_of(name) != family {
+                            continue;
+                        }
+                        out.push_str(&format!("{name} {}\n", c.get()));
+                    }
+                }
+                Kind::Gauge => {
+                    for (name, g) in inner.gauges.range(family.clone()..) {
+                        if !name.starts_with(family.as_str()) {
+                            break;
+                        }
+                        if family_of(name) != family {
+                            continue;
+                        }
+                        out.push_str(&format!("{name} {}\n", g.get()));
+                    }
+                }
+                Kind::Histogram => {
+                    for (name, h) in inner.histograms.range(family.clone()..) {
+                        if !name.starts_with(family.as_str()) {
+                            break;
+                        }
+                        if family_of(name) != family {
+                            continue;
+                        }
+                        expose_histogram(&mut out, name, &h.snapshot());
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Split `compile_stage_seconds{stage="map"}` into
+/// (`compile_stage_seconds`, `stage="map"`); the label part is empty for
+/// unlabeled series.
+fn split_labels(name: &str) -> (&str, &str) {
+    match name.find('{') {
+        None => (name, ""),
+        Some(i) => (&name[..i], name[i + 1..].trim_end_matches('}')),
+    }
+}
+
+/// `name_bucket{labels,le="..."}`-style sub-series name.
+fn sub_series(base: &str, labels: &str, suffix: &str, extra: Option<&str>) -> String {
+    let mut all = String::new();
+    if !labels.is_empty() {
+        all.push_str(labels);
+    }
+    if let Some(e) = extra {
+        if !all.is_empty() {
+            all.push(',');
+        }
+        all.push_str(e);
+    }
+    if all.is_empty() {
+        format!("{base}{suffix}")
+    } else {
+        format!("{base}{suffix}{{{all}}}")
+    }
+}
+
+/// Exact decimal seconds from an integer count of `unit_per_sec`-ths —
+/// no float formatting, so the output is byte-stable. `unit_per_sec`
+/// must be 1e6 (microseconds) or 1e9 (nanoseconds).
+pub fn secs_str(v: u64, unit_per_sec: u64) -> String {
+    let digits = match unit_per_sec {
+        1_000_000 => 6,
+        1_000_000_000 => 9,
+        _ => unreachable!("unsupported unit"),
+    };
+    let whole = v / unit_per_sec;
+    let frac = v % unit_per_sec;
+    if frac == 0 {
+        format!("{whole}")
+    } else {
+        let s = format!("{frac:0width$}", width = digits);
+        format!("{whole}.{}", s.trim_end_matches('0'))
+    }
+}
+
+fn expose_histogram(out: &mut String, name: &str, snap: &HistoSnapshot) {
+    let (base, labels) = split_labels(name);
+    // Cumulative buckets up to the last non-empty finite bucket, then
+    // +Inf — compact, and still fully determined by the counter state.
+    let last = snap.counts.iter().rposition(|&c| c > 0);
+    let mut cum = 0u64;
+    if let Some(last) = last {
+        for i in 0..=last {
+            cum += snap.counts[i];
+            let le = secs_str(bucket_bound_us(i), 1_000_000);
+            let le = format!("le=\"{le}\"");
+            out.push_str(&format!(
+                "{} {cum}\n",
+                sub_series(base, labels, "_bucket", Some(&le))
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "{} {}\n",
+        sub_series(base, labels, "_bucket", Some("le=\"+Inf\"")),
+        snap.count
+    ));
+    out.push_str(&format!(
+        "{} {}\n",
+        sub_series(base, labels, "_sum", None),
+        secs_str(snap.sum_nanos, 1_000_000_000)
+    ));
+    out.push_str(&format!("{} {}\n", sub_series(base, labels, "_count", None), snap.count));
+}
+
+/// The process-wide registry, for embedders that want every subsystem
+/// reporting into one exposition. The CLI's daemon and sweeps use their
+/// own instances instead, so co-resident servers (tests!) never share
+/// counts.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two_inclusive() {
+        // v <= 2^i picks bucket i; boundaries are inclusive above.
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(5), 3);
+        assert_eq!(bucket_index(1024), 10);
+        assert_eq!(bucket_index(1025), 11);
+        assert_eq!(bucket_index(1 << 39), 39);
+        assert_eq!(bucket_index((1 << 39) + 1), BUCKETS, "beyond the last bound -> overflow");
+        assert_eq!(bucket_index(u64::MAX), BUCKETS);
+    }
+
+    #[test]
+    fn quantiles_match_a_known_distribution() {
+        let h = Histogram::default();
+        for us in 1..=1000u64 {
+            h.observe_us(us);
+        }
+        assert_eq!(h.count(), 1000);
+        // Rank 500 is value 500, which lives in the le=512 bucket.
+        assert_eq!(h.p50(), Some(512));
+        // Rank 990 is value 990 -> le=1024; rank 1000 likewise.
+        assert_eq!(h.p99(), Some(1024));
+        assert_eq!(h.p999(), Some(1024));
+        assert_eq!(h.quantile(1.0), Some(1024));
+        // A tiny quantile still returns the first occupied bucket.
+        assert_eq!(h.quantile(0.001), Some(1));
+        assert_eq!(Histogram::default().p50(), None, "empty histogram has no quantiles");
+        // Overflow observations push high quantiles to +Inf (u64::MAX).
+        let h2 = Histogram::default();
+        h2.observe_us(1);
+        h2.observe_us(u64::MAX);
+        assert_eq!(h2.p50(), Some(1));
+        assert_eq!(h2.quantile(1.0), Some(u64::MAX));
+    }
+
+    #[test]
+    fn nanos_round_up_to_a_microsecond() {
+        let h = Histogram::default();
+        h.observe_nanos(1); // 1 ns -> 1 µs bucket, never "free"
+        h.observe_nanos(1000);
+        h.observe_nanos(1001); // -> 2 µs
+        let snap = h.snapshot();
+        assert_eq!(snap.counts[0], 2);
+        assert_eq!(snap.counts[1], 1);
+        assert_eq!(snap.sum_nanos, 2002, "the sum keeps nanosecond precision");
+    }
+
+    #[test]
+    fn exposition_is_byte_deterministic_and_exact() {
+        let make = || {
+            let r = Registry::new();
+            r.counter("serve_requests_total{op=\"compile\"}", "requests by op").add(3);
+            r.counter("serve_requests_total{op=\"ping\"}", "requests by op").inc();
+            r.gauge("cache_store_bytes", "artifact store size").set(4096);
+            let h = r.histogram("compile_stage_seconds{stage=\"map\"}", "per-stage time");
+            h.observe_us(1); // le=0.000001
+            h.observe_us(3); // le=0.000004
+            h.observe_us(3);
+            r
+        };
+        let a = make().expose();
+        let b = make().expose();
+        assert_eq!(a, b, "same counter state must expose identical bytes");
+        let want = "\
+# HELP cache_store_bytes artifact store size
+# TYPE cache_store_bytes gauge
+cache_store_bytes 4096
+# HELP compile_stage_seconds per-stage time
+# TYPE compile_stage_seconds histogram
+compile_stage_seconds_bucket{stage=\"map\",le=\"0.000001\"} 1
+compile_stage_seconds_bucket{stage=\"map\",le=\"0.000002\"} 1
+compile_stage_seconds_bucket{stage=\"map\",le=\"0.000004\"} 3
+compile_stage_seconds_bucket{stage=\"map\",le=\"+Inf\"} 3
+compile_stage_seconds_sum{stage=\"map\"} 0.000007
+compile_stage_seconds_count{stage=\"map\"} 3
+# HELP serve_requests_total requests by op
+# TYPE serve_requests_total counter
+serve_requests_total{op=\"compile\"} 3
+serve_requests_total{op=\"ping\"} 1
+";
+        assert_eq!(a, want);
+    }
+
+    #[test]
+    fn empty_histogram_exposes_only_inf_bucket() {
+        let r = Registry::new();
+        r.histogram("idle_seconds", "never observed");
+        let got = r.expose();
+        assert!(got.contains("idle_seconds_bucket{le=\"+Inf\"} 0\n"), "{got}");
+        assert!(got.contains("idle_seconds_sum 0\n"), "{got}");
+        assert!(got.contains("idle_seconds_count 0\n"), "{got}");
+    }
+
+    #[test]
+    fn secs_str_is_exact_decimal() {
+        assert_eq!(secs_str(0, 1_000_000), "0");
+        assert_eq!(secs_str(1, 1_000_000), "0.000001");
+        assert_eq!(secs_str(1_048_576, 1_000_000), "1.048576");
+        assert_eq!(secs_str(2_000_000, 1_000_000), "2");
+        assert_eq!(secs_str(1_500_000_000, 1_000_000_000), "1.5");
+        assert_eq!(secs_str(7, 1_000_000_000), "0.000000007");
+    }
+
+    #[test]
+    fn concurrent_counter_increments_are_exact() {
+        const THREADS: usize = 8;
+        const BUMPS: usize = 10_000;
+        let r = Registry::new();
+        let c = r.counter("concurrency_total", "threaded bump test");
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..BUMPS {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), (THREADS * BUMPS) as u64);
+        // A re-registration under the same name is the same series.
+        assert_eq!(r.counter("concurrency_total", "ignored duplicate help").get(), c.get());
+    }
+
+    #[test]
+    fn labeled_builds_series_names() {
+        assert_eq!(labeled("x_total", "op", "ping"), "x_total{op=\"ping\"}");
+        assert_eq!(family_of("x_total{op=\"ping\"}"), "x_total");
+        assert_eq!(family_of("x_total"), "x_total");
+    }
+}

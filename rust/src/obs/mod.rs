@@ -1,0 +1,60 @@
+//! Zero-dependency observability: metrics, stage tracing, request log.
+//!
+//! Three substrates, all std-only, shared by the explorer and the serve
+//! daemon (ISSUE 6):
+//!
+//! * [`metrics`] — a [`Registry`] of atomic [`Counter`]s, [`Gauge`]s
+//!   and log₂-bucketed [`Histogram`]s (exact p50/p99/p999 readout) with
+//!   a **byte-deterministic** Prometheus-style text exposition. The
+//!   daemon's `metrics` wire op and `cascade explore --profile` both
+//!   read from here.
+//! * [`trace`] — a thread-local lap clock: the compile pipeline
+//!   [`trace::mark`]s each stage boundary (map → pipeline → schedule →
+//!   place → route → postpnr → reschedule → sta), and a caller that
+//!   installed [`trace::with_spans`] gets contiguous per-stage spans
+//!   whose sum equals the traced wall clock. With no sink installed a
+//!   mark is a TLS load — the pipeline's outputs and (untraced) speed
+//!   are untouched.
+//! * [`reqlog`] — a size-bounded JSONL [`RequestLog`] (rotate to `.1`
+//!   at the cap) for the daemon's per-request records and structured
+//!   gc/drain/startup events.
+//!
+//! The cardinal rule, enforced by the byte-identity tests: observability
+//! **never** perturbs outputs. Metrics are write-only side channels,
+//! spans are opt-in per thread, and nothing in a report or bitstream
+//! ever derives from a clock unless the user asked for a profile.
+//!
+//! See `docs/observability.md` for series names, the exposition format
+//! and the request-log schema.
+
+pub mod metrics;
+pub mod reqlog;
+pub mod trace;
+
+pub use metrics::{labeled, Counter, Gauge, HistoSnapshot, Histogram, Registry};
+pub use reqlog::{now_ms, RequestLog, DEFAULT_LOG_CAP};
+pub use trace::{mark, with_spans, SpanRecord, STAGE_ORDER};
+
+/// Help strings for the series families several modules share (one
+/// constant each, so explorer and daemon register identical metadata).
+pub mod help {
+    pub const COMPILE_STAGE: &str = "per-stage compile pipeline time in seconds";
+    pub const COMPILE_TOTAL: &str = "whole-compile wall time in seconds";
+    pub const MEASURE: &str = "post-compile measurement (simulation) time in seconds";
+    pub const ENCODE: &str = "bitstream encode time in seconds";
+}
+
+/// Record a compile's stage spans into `compile_stage_seconds{stage=..}`
+/// histograms plus the `compile_seconds` total. Shared by the sweep
+/// session and the serve daemon so both expose the same families.
+pub fn record_compile_spans(reg: &Registry, spans: &[SpanRecord]) {
+    let mut total_ns = 0u64;
+    for s in spans {
+        total_ns = total_ns.saturating_add(s.nanos);
+        reg.histogram(&labeled("compile_stage_seconds", "stage", s.stage), help::COMPILE_STAGE)
+            .observe_nanos(s.nanos);
+    }
+    if !spans.is_empty() {
+        reg.histogram("compile_seconds", help::COMPILE_TOTAL).observe_nanos(total_ns);
+    }
+}

@@ -1,0 +1,208 @@
+//! Size-bounded structured JSONL event/request log.
+//!
+//! One JSON object per line, appended under a mutex with a single
+//! `write_all` per record (same torn-line policy as the partial-results
+//! and LRU journals). When appending a record would push the file past
+//! its byte cap, the file rotates first: the current log is renamed to
+//! `<path>.1` (replacing any previous `.1`) and a fresh file starts —
+//! so disk usage is bounded by roughly twice the cap, and the newest
+//! records are always in `<path>`.
+//!
+//! Like the cache stores, an unopenable path degrades to a no-op handle
+//! rather than failing the daemon: observability must never take the
+//! service down.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// Default rotation bound: 16 MiB per file (×2 files on disk).
+pub const DEFAULT_LOG_CAP: u64 = 16 << 20;
+
+struct Sink {
+    file: Option<File>,
+    written: u64,
+}
+
+/// Append-only JSONL log with size-bounded rotation.
+pub struct RequestLog {
+    path: PathBuf,
+    cap: u64,
+    inner: Mutex<Sink>,
+}
+
+impl RequestLog {
+    /// Open (appending) the log at `path`, rotating when a record would
+    /// push the file past `cap_bytes` (clamped to at least 1 KiB). An
+    /// existing file's size counts against the cap immediately, so a
+    /// restarted daemon respects the same bound.
+    pub fn open(path: impl AsRef<Path>, cap_bytes: u64) -> RequestLog {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                let _ = std::fs::create_dir_all(parent);
+            }
+        }
+        let written = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        let file = OpenOptions::new().append(true).create(true).open(&path).ok();
+        RequestLog {
+            path,
+            cap: cap_bytes.max(1 << 10),
+            inner: Mutex::new(Sink { file, written }),
+        }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Path of the rotated-out predecessor file.
+    pub fn rotated_path(&self) -> PathBuf {
+        let mut name = self.path.as_os_str().to_os_string();
+        name.push(".1");
+        PathBuf::from(name)
+    }
+
+    /// Append one record as a single compact JSON line. Rotates first
+    /// when the line would overflow the cap (a single record larger
+    /// than the whole cap still lands, alone, in a fresh file).
+    pub fn append(&self, record: &Json) {
+        let mut line = record.to_string_compact();
+        line.push('\n');
+        let mut sink = self.inner.lock().unwrap();
+        if sink.written > 0 && sink.written + line.len() as u64 > self.cap {
+            // Rotate: close, rename current -> .1, start fresh.
+            sink.file = None;
+            let _ = std::fs::rename(&self.path, self.rotated_path());
+            sink.file = OpenOptions::new().append(true).create(true).open(&self.path).ok();
+            sink.written = 0;
+        }
+        if let Some(f) = sink.file.as_mut() {
+            if f.write_all(line.as_bytes()).is_ok() {
+                sink.written += line.len() as u64;
+            }
+        }
+    }
+
+    /// Bytes written to the current (post-rotation) file.
+    pub fn written(&self) -> u64 {
+        self.inner.lock().unwrap().written
+    }
+}
+
+/// Milliseconds since the Unix epoch — the `ts` member of log records.
+/// (The log is operational telemetry; nothing deterministic reads it.)
+pub fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis().min(u64::MAX as u128) as u64)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("cascade-reqlog-{tag}-{}.jsonl", std::process::id()))
+    }
+
+    fn rec(i: usize) -> Json {
+        let mut o = Json::obj();
+        o.set("op", "ping").set("i", i as u64);
+        o
+    }
+
+    #[test]
+    fn appends_one_parseable_line_per_record() {
+        let path = tmp("basic");
+        let _ = std::fs::remove_file(&path);
+        let log = RequestLog::open(&path, 1 << 20);
+        for i in 0..10 {
+            log.append(&rec(i));
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 10);
+        for (i, line) in lines.iter().enumerate() {
+            let j = Json::parse(line).expect("every line parses");
+            assert_eq!(j.get("i").and_then(Json::as_u64), Some(i as u64));
+        }
+        assert_eq!(log.written(), text.len() as u64);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rotates_at_the_size_bound() {
+        let path = tmp("rotate");
+        let _ = std::fs::remove_file(&path);
+        let log = RequestLog::open(&path, 1); // clamped to 1 KiB
+        let line_len = {
+            let mut l = rec(0).to_string_compact();
+            l.push('\n');
+            l.len() as u64
+        };
+        let per_file = (1u64 << 10) / line_len;
+        // Enough records to force at least two rotations.
+        let total = (per_file * 2 + 3) as usize;
+        for i in 0..total {
+            log.append(&rec(i));
+        }
+        let cur = std::fs::read_to_string(&path).unwrap();
+        let old = std::fs::read_to_string(log.rotated_path()).unwrap();
+        assert!(cur.len() as u64 <= 1 << 10, "current file respects the cap");
+        assert!(old.len() as u64 <= 1 << 10, "rotated file respects the cap");
+        // The newest record is in the current file; no record is torn.
+        let last = cur.lines().last().unwrap();
+        assert_eq!(
+            Json::parse(last).unwrap().get("i").and_then(Json::as_u64),
+            Some((total - 1) as u64)
+        );
+        for line in cur.lines().chain(old.lines()) {
+            assert!(Json::parse(line).is_ok(), "torn line: {line:?}");
+        }
+        // Exactly two files ever exist: current + one predecessor.
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(log.rotated_path());
+    }
+
+    #[test]
+    fn reopen_counts_existing_bytes_against_the_cap() {
+        let path = tmp("reopen");
+        let _ = std::fs::remove_file(&path);
+        {
+            let log = RequestLog::open(&path, 1 << 10);
+            for i in 0..5 {
+                log.append(&rec(i));
+            }
+        }
+        let before = std::fs::metadata(&path).unwrap().len();
+        let log = RequestLog::open(&path, 1 << 10);
+        assert_eq!(log.written(), before, "restart resumes the byte account");
+        // An oversized single record rotates and lands alone.
+        let mut big = Json::obj();
+        big.set("pad", "x".repeat(2 << 10));
+        log.append(&big);
+        assert!(log.rotated_path().exists());
+        let cur = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(cur.lines().count(), 1, "oversized record lands alone in a fresh file");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(log.rotated_path());
+    }
+
+    #[test]
+    fn unopenable_path_degrades_to_noop() {
+        let log = RequestLog::open("/dev/null/not-a-dir/x.jsonl", 1 << 20);
+        log.append(&rec(0)); // must not panic
+        assert_eq!(log.written(), 0);
+    }
+
+    #[test]
+    fn now_ms_is_sane() {
+        let t = now_ms();
+        assert!(t > 1_600_000_000_000, "epoch millis after 2020");
+    }
+}

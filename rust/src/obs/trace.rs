@@ -1,0 +1,178 @@
+//! Lightweight per-thread stage tracing for the compile pipeline.
+//!
+//! The pipeline's entry points ([`crate::pipeline::compile`] and
+//! friends) are hot, widely called, and must stay byte-deterministic —
+//! so tracing is **pull-based and thread-local**: nothing is measured
+//! unless the caller installs a sink with [`with_spans`], and a
+//! [`mark`] with no sink installed is a single TLS load (no
+//! `Instant::now()`, no allocation). Installing a sink can never change
+//! what the pipeline computes, only record when it happened.
+//!
+//! The timing model is a *lap clock*, not bracketed regions: the sink
+//! remembers one `Instant`, and each `mark(stage)` attributes the whole
+//! interval since the previous mark (or since installation) to `stage`.
+//! Laps are contiguous by construction, so the spans of one traced call
+//! sum to the wall-clock time from installation to the final mark —
+//! which is what lets the e2e test assert "per-stage spans sum to within
+//! 5% of the wall-clock compile time" without chasing unattributed gaps.
+//!
+//! A compile runs on a single thread (parallelism in this toolkit is
+//! across points, never within one compile), so thread-local state is
+//! exactly the right scope: concurrent sweep workers trace independently
+//! without synchronization.
+
+use std::cell::RefCell;
+use std::time::Instant;
+
+/// One timed stage interval, in wall-clock nanoseconds.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub stage: &'static str,
+    pub nanos: u64,
+}
+
+/// Canonical stage order for reports (histograms sort alphabetically on
+/// the wire; human tables read better in pipeline order).
+pub const STAGE_ORDER: &[&str] = &[
+    "map",
+    "pipeline",
+    "schedule",
+    "place",
+    "route",
+    "postpnr",
+    "reschedule",
+    "sta",
+    "measure",
+    "encode",
+];
+
+struct Sink {
+    last: Instant,
+    spans: Vec<SpanRecord>,
+}
+
+thread_local! {
+    static SINK: RefCell<Option<Sink>> = const { RefCell::new(None) };
+}
+
+/// Whether a sink is installed on this thread (cheap; for callers that
+/// want to skip building span metadata entirely).
+pub fn enabled() -> bool {
+    SINK.with(|s| s.borrow().is_some())
+}
+
+/// Close the current lap and attribute it to `stage`. No-op (and no
+/// clock read) when no sink is installed on this thread.
+pub fn mark(stage: &'static str) {
+    SINK.with(|s| {
+        if let Some(sink) = s.borrow_mut().as_mut() {
+            let now = Instant::now();
+            let nanos = now.duration_since(sink.last).as_nanos().min(u64::MAX as u128) as u64;
+            sink.spans.push(SpanRecord { stage, nanos });
+            sink.last = now;
+        }
+    });
+}
+
+/// Restores the previously installed sink even if `f` panics, so a
+/// failing compile in a test harness cannot leak a sink into the
+/// thread's next unrelated compile.
+struct Restore {
+    prev: Option<Sink>,
+    taken: bool,
+}
+
+impl Restore {
+    fn finish(&mut self) -> Vec<SpanRecord> {
+        self.taken = true;
+        SINK.with(|s| {
+            let mut slot = s.borrow_mut();
+            let done = slot.take();
+            *slot = self.prev.take();
+            done.map(|d| d.spans).unwrap_or_default()
+        })
+    }
+}
+
+impl Drop for Restore {
+    fn drop(&mut self) {
+        if !self.taken {
+            let _ = self.finish();
+        }
+    }
+}
+
+/// Run `f` with a fresh lap clock installed on this thread, returning
+/// its result plus every span [`mark`]ed during the call. Nests: an
+/// outer trace is suspended, not corrupted, while an inner one runs.
+pub fn with_spans<T>(f: impl FnOnce() -> T) -> (T, Vec<SpanRecord>) {
+    let prev = SINK.with(|s| {
+        s.borrow_mut().replace(Sink { last: Instant::now(), spans: Vec::new() })
+    });
+    let mut guard = Restore { prev, taken: false };
+    let out = f();
+    let spans = guard.finish();
+    (out, spans)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marks_without_a_sink_are_noops() {
+        assert!(!enabled());
+        mark("map"); // must not panic or record anywhere
+        let (_, spans) = with_spans(|| ());
+        assert!(spans.is_empty(), "no marks -> no spans");
+    }
+
+    #[test]
+    fn laps_are_contiguous_and_ordered() {
+        let t0 = Instant::now();
+        let ((), spans) = with_spans(|| {
+            std::hint::black_box((0..20_000u64).sum::<u64>());
+            mark("map");
+            std::hint::black_box((0..20_000u64).sum::<u64>());
+            mark("place");
+            mark("route"); // zero-work lap is fine
+        });
+        let wall = t0.elapsed().as_nanos() as u64;
+        assert_eq!(
+            spans.iter().map(|s| s.stage).collect::<Vec<_>>(),
+            vec!["map", "place", "route"]
+        );
+        let sum: u64 = spans.iter().map(|s| s.nanos).sum();
+        assert!(sum <= wall, "laps cannot exceed the enclosing wall clock");
+        assert!(!enabled(), "sink uninstalled after with_spans");
+    }
+
+    #[test]
+    fn traces_nest_without_corruption() {
+        let ((), outer) = with_spans(|| {
+            mark("map");
+            let ((), inner) = with_spans(|| {
+                mark("place");
+            });
+            assert_eq!(inner.len(), 1);
+            assert_eq!(inner[0].stage, "place");
+            mark("sta");
+        });
+        let stages: Vec<_> = outer.iter().map(|s| s.stage).collect();
+        assert_eq!(stages, vec!["map", "sta"], "inner trace spans stay out of the outer sink");
+    }
+
+    #[test]
+    fn panicking_trace_restores_the_previous_sink() {
+        let ((), spans) = with_spans(|| {
+            let r = std::panic::catch_unwind(|| {
+                let (_, _s) = with_spans(|| -> () { panic!("boom") });
+            });
+            assert!(r.is_err());
+            mark("after");
+        });
+        assert_eq!(spans.len(), 1, "outer sink survives an inner panic");
+        assert_eq!(spans[0].stage, "after");
+        assert!(!enabled());
+    }
+}

@@ -238,9 +238,13 @@ fn compile_inner(
     seed: u64,
     region: Option<(crate::arch::params::TileCoord, (usize, usize))>,
 ) -> Result<Compiled, CompileError> {
+    // Stage tracing: `obs::trace::mark` is a no-op unless the caller
+    // installed a span sink (`obs::trace::with_spans`), so the untraced
+    // flow pays one TLS load per stage and outputs never change.
     let arch = if cfg.hardened_flush { flush::harden(&ctx.arch) } else { ctx.arch.clone() };
     let mut dfg = app.dfg.clone();
     let map_report = crate::map::map_dfg(&mut dfg, &arch).map_err(CompileError::Map)?;
+    crate::obs::trace::mark("map");
 
     let is_sparse = dfg.nodes.iter().any(|n| n.is_sparse());
 
@@ -262,9 +266,11 @@ fn compile_inner(
             bcast_buffers = broadcast::broadcast_pipelining(&mut dfg, bp);
         }
     }
+    crate::obs::trace::mark("pipeline");
 
     // Round-1 schedule (paper §V-F: latencies as currently known).
     let sched1 = schedule(&dfg, &app.shape);
+    crate::obs::trace::mark("schedule");
 
     // Place and route.
     let pp = PlaceParams {
@@ -282,11 +288,14 @@ fn compile_inner(
     // Post-PnR pipelining.
     let postpnr_report =
         cfg.postpnr.as_ref().map(|p| postpnr::postpnr_pipelining(&mut design, &ctx.graph, p));
+    crate::obs::trace::mark("postpnr");
 
     // Round-2 schedule with post-pipelining latencies (§V-F).
     let sched2 = reschedule(&design.dfg, &sched1);
+    crate::obs::trace::mark("reschedule");
 
     let sta = analyze(&design, &ctx.graph);
+    crate::obs::trace::mark("sta");
     Ok(Compiled {
         design,
         sta,

@@ -43,6 +43,8 @@ pub fn place_and_route(
 ) -> Result<RoutedDesign, RouteError> {
     let nets = build_nets(dfg, arch);
     let placement = place(dfg, &nets, arch, pp);
+    crate::obs::trace::mark("place");
     let routes = route(dfg, &nets, &placement, arch, graph, rp)?;
+    crate::obs::trace::mark("route");
     Ok(RoutedDesign::new(dfg.clone(), nets, placement, routes, arch.clone(), lib.clone()))
 }

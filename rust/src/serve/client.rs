@@ -2,12 +2,13 @@
 //! external tooling (the CI smoke job and shell scripts use this).
 //!
 //! One invocation = one connection = one request: the op is the first
-//! positional (`ping|stat|compile|encode|shutdown`), point axes use the
-//! same flags as `cascade encode`, and the raw response JSON is printed
-//! to stdout — except `encode`'s `bitstream` member, which is written to
-//! `--out FILE` (default `results/bitstream_<key>.txt`) byte-identically
-//! to offline `cascade encode`, so `cmp` against the offline file is the
-//! end-to-end check.
+//! positional (`ping|stat|metrics|compile|encode|shutdown`), point axes
+//! use the same flags as `cascade encode`, and the raw response JSON is
+//! printed to stdout — except `encode`'s `bitstream` member, which is
+//! written to `--out FILE` (default `results/bitstream_<key>.txt`)
+//! byte-identically to offline `cascade encode`, so `cmp` against the
+//! offline file is the end-to-end check, and `metrics`' `exposition`
+//! member, which is printed raw (Prometheus text, scrape-ready).
 
 use std::io::{BufRead as _, BufReader, Write as _};
 use std::net::TcpStream;
@@ -45,7 +46,7 @@ pub fn run_cli(args: &Args) -> Result<(), String> {
         .positionals
         .get(1)
         .map(|s| s.as_str())
-        .ok_or("client: expected an op (ping|stat|compile|encode|shutdown)")?;
+        .ok_or("client: expected an op (ping|stat|metrics|compile|encode|shutdown)")?;
     let addr = args.opt_or("addr", "127.0.0.1:7878");
     let timeout = match args.opt("timeout") {
         None => Duration::from_secs(600),
@@ -56,6 +57,7 @@ pub fn run_cli(args: &Args) -> Result<(), String> {
     let req = match op {
         "ping" => Request::Ping,
         "stat" => Request::Stat,
+        "metrics" => Request::Metrics,
         "shutdown" => Request::Shutdown,
         "compile" => Request::Compile(PointQuery::from_args(args)?),
         "encode" => match args.opt("key") {
@@ -76,13 +78,18 @@ pub fn run_cli(args: &Args) -> Result<(), String> {
         },
         other => {
             return Err(format!(
-                "client: unknown op '{other}' (ping|stat|compile|encode|shutdown)"
+                "client: unknown op '{other}' (ping|stat|metrics|compile|encode|shutdown)"
             ))
         }
     };
     let resp = request(addr, &req, timeout)?;
     if resp.get("ok").and_then(Json::as_bool) != Some(true) {
         return Err(format!("client: server error: {}", resp.to_string_compact()));
+    }
+    if let Some(text) = resp.get("exposition").and_then(Json::as_str) {
+        // Scrape-ready: the exposition alone, not its JSON wrapper.
+        print!("{text}");
+        return Ok(());
     }
     match resp.get("bitstream").and_then(Json::as_str) {
         Some(bs) => {

@@ -27,6 +27,14 @@
 //! answered, then a final GC compacts the journal before the process
 //! exits (the contract `docs/serve.md` specifies).
 //!
+//! The daemon is observable ([`crate::obs`], `docs/observability.md`):
+//! every request is counted and timed into a per-daemon metrics registry
+//! that the `metrics` wire op renders as deterministic Prometheus-style
+//! text, compile/encode responses split `ms` into `queue_ms` + `exec_ms`,
+//! and a size-bounded JSONL request log (`--log`, `--log-cap`) records
+//! one structured line per request plus `start`/`gc`/`drain` lifecycle
+//! events.
+//!
 //! ```no_run
 //! use cascade::pipeline::CompileCtx;
 //! use cascade::serve::{ServeConfig, Server};
@@ -50,11 +58,12 @@ use std::io::{Read, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::explore::runner::{Provenance, SessionCore};
 use crate::explore::{CacheCap, DiskCache};
+use crate::obs::{labeled, now_ms, Registry, RequestLog};
 use crate::pipeline::CompileCtx;
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -72,6 +81,17 @@ const READ_POLL: Duration = Duration::from_millis(500);
 /// Per-connection write timeout: a client that stops reading its own
 /// responses forfeits the connection rather than wedging a worker.
 const WRITE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Where the JSONL request log goes (`--log`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LogTarget {
+    /// `<cache_dir>/serve_requests.jsonl` (resolved at [`Server::run`]).
+    Default,
+    /// `--log none`: no request log.
+    Disabled,
+    /// `--log PATH`: an explicit file.
+    Path(PathBuf),
+}
 
 /// Daemon configuration (`cascade serve` flags).
 #[derive(Debug, Clone)]
@@ -92,6 +112,11 @@ pub struct ServeConfig {
     pub cache_cap: Option<CacheCap>,
     /// Housekeeping period (GC + context-cache trim).
     pub gc_every: Duration,
+    /// Request-log destination (JSONL, one record per request).
+    pub log: LogTarget,
+    /// Request-log rotation bound in bytes ([`RequestLog`] renames the
+    /// full file to `.1` and starts fresh).
+    pub log_cap: u64,
 }
 
 impl ServeConfig {
@@ -106,11 +131,14 @@ impl ServeConfig {
             cache_dir: DiskCache::default_dir(),
             cache_cap: None,
             gc_every: Duration::from_secs(60),
+            log: LogTarget::Default,
+            log_cap: crate::obs::DEFAULT_LOG_CAP,
         }
     }
 
     /// Parse `cascade serve --addr HOST:PORT [--workers N] [--queue N]
-    /// [--cache-dir D] [--cache-cap CAP] [--gc-every SECS]`.
+    /// [--cache-dir D] [--cache-cap CAP] [--gc-every SECS]
+    /// [--log PATH|none] [--log-cap CAP]`.
     pub fn from_args(args: &Args) -> Result<ServeConfig, String> {
         let mut cfg = ServeConfig::new(args.opt_or("addr", "127.0.0.1:7878"));
         let pos_usize = |name: &str, dflt: usize| -> Result<usize, String> {
@@ -132,6 +160,16 @@ impl ServeConfig {
             cfg.cache_cap = Some(CacheCap::parse(s)?);
         }
         cfg.gc_every = Duration::from_secs(pos_usize("gc-every", 60)? as u64);
+        match args.opt("log") {
+            None => {}
+            Some("none") => cfg.log = LogTarget::Disabled,
+            Some(p) => cfg.log = LogTarget::Path(PathBuf::from(p)),
+        }
+        if let Some(s) = args.opt("log-cap") {
+            cfg.log_cap = CacheCap::parse(s)?.max_bytes.ok_or_else(|| {
+                format!("bad --log-cap '{s}' (a byte size like 8M, not an entry count)")
+            })?;
+        }
         Ok(cfg)
     }
 }
@@ -169,12 +207,29 @@ impl Server {
         // shared session's cache statistics stay a pure account of the
         // compile/evaluate path.
         let aux = DiskCache::at(&self.cfg.cache_dir);
+        // Per-daemon registry (not [`crate::obs::global`]) so co-resident
+        // daemons — the test suite runs several in one process — never
+        // share counts; the session core feeds its compile-stage spans
+        // into the same registry the `metrics` op renders.
+        let reg = Arc::new(Registry::new());
+        let mut core = SessionCore::ephemeral(ctx, Some(&disk));
+        core.set_obs(reg.clone());
+        let reqlog = match &self.cfg.log {
+            LogTarget::Disabled => None,
+            LogTarget::Default => Some(RequestLog::open(
+                self.cfg.cache_dir.join("serve_requests.jsonl"),
+                self.cfg.log_cap,
+            )),
+            LogTarget::Path(p) => Some(RequestLog::open(p, self.cfg.log_cap)),
+        };
         let state = ServeState {
             cfg: &self.cfg,
             addr: self.addr,
-            core: SessionCore::ephemeral(ctx, Some(&disk)),
+            core,
             disk: &disk,
             aux,
+            reg,
+            reqlog,
             shutdown: AtomicBool::new(false),
             requests: AtomicUsize::new(0),
             errors: AtomicUsize::new(0),
@@ -183,7 +238,7 @@ impl Server {
             hk_mx: Mutex::new(()),
             hk_cv: Condvar::new(),
         };
-        let queue: Bounded<TcpStream> = Bounded::new(self.cfg.queue_cap);
+        let queue: Bounded<Job> = Bounded::new(self.cfg.queue_cap);
 
         println!(
             "serve: listening on {} ({} worker(s), queue {}, cache {})",
@@ -192,6 +247,17 @@ impl Server {
             self.cfg.queue_cap,
             self.cfg.cache_dir.display()
         );
+        if let Some(log) = &state.reqlog {
+            println!("serve: request log: {}", log.path().display());
+        }
+        let mut start = Json::obj();
+        start
+            .set("ts", now_ms())
+            .set("event", "start")
+            .set("addr", self.addr.to_string())
+            .set("workers", self.cfg.workers)
+            .set("queue_cap", self.cfg.queue_cap);
+        state.log_event(&start);
 
         // Rejected connections are answered off the accept path: the
         // acceptor's only duty on overflow is an O(1) hand-off (or an
@@ -203,8 +269,16 @@ impl Server {
         std::thread::scope(|s| {
             for _ in 0..self.cfg.workers {
                 s.spawn(|| {
-                    while let Some(conn) = queue.pop() {
-                        handle_conn(&state, conn);
+                    while let Some(job) = queue.pop() {
+                        let waited = job.queued_at.elapsed();
+                        state
+                            .reg
+                            .histogram(
+                                "serve_queue_seconds",
+                                "connection queue wait before a worker picks it up",
+                            )
+                            .observe_duration(waited);
+                        handle_conn(&state, job.stream, waited);
                     }
                 });
             }
@@ -222,12 +296,16 @@ impl Server {
                     break;
                 }
                 let Ok(stream) = conn else { continue };
-                if let Err(stream) = queue.try_push(stream) {
+                if let Err(job) = queue.try_push(Job { stream, queued_at: Instant::now() }) {
                     state.busy.fetch_add(1, Ordering::SeqCst);
+                    state
+                        .reg
+                        .counter("serve_busy_total", "connections bounced busy at the acceptor")
+                        .inc();
                     // Best-effort busy response; a saturated rejector
                     // drops the connection unanswered (bounded memory
                     // beats a polite reply under a flood).
-                    let _ = rejects.try_push(stream);
+                    let _ = rejects.try_push(job.stream);
                 }
             }
             // Drain: queued connections are still served, then workers
@@ -237,7 +315,9 @@ impl Server {
         });
 
         if let Some(cap) = &self.cfg.cache_cap {
-            println!("serve: final gc: {}", disk.artifacts().gc(cap).summary());
+            let r = disk.artifacts().gc(cap);
+            println!("serve: final gc: {}", r.summary());
+            state.log_gc(&r);
         }
         let stats = state.core.stats();
         println!(
@@ -249,8 +329,24 @@ impl Server {
             state.errors.load(Ordering::SeqCst)
         );
         println!("{}", disk.stat_string());
+        let mut drain = Json::obj();
+        drain
+            .set("ts", now_ms())
+            .set("event", "drain")
+            .set("requests", state.requests.load(Ordering::SeqCst))
+            .set("fresh_compiles", stats.misses)
+            .set("busy_rejections", state.busy.load(Ordering::SeqCst))
+            .set("errors", state.errors.load(Ordering::SeqCst));
+        state.log_event(&drain);
         Ok(())
     }
+}
+
+/// A connection waiting for a worker, stamped at accept time so the
+/// first request on it reports its real queue wait as `queue_ms`.
+struct Job {
+    stream: TcpStream,
+    queued_at: Instant,
 }
 
 /// Shared server state, borrowed by every worker for the scope of
@@ -262,6 +358,10 @@ struct ServeState<'a> {
     disk: &'a DiskCache,
     /// Side cache handles for key-addressed loads (see [`Server::run`]).
     aux: DiskCache,
+    /// Per-daemon metrics registry; rendered by the `metrics` op.
+    reg: Arc<Registry>,
+    /// Structured JSONL request/event log (`None` under `--log none`).
+    reqlog: Option<RequestLog>,
     shutdown: AtomicBool,
     requests: AtomicUsize,
     errors: AtomicUsize,
@@ -281,6 +381,89 @@ impl ServeState<'_> {
             Provenance::WarmRec => 3,
         };
         self.prov[i].fetch_add(1, Ordering::SeqCst);
+        self.reg
+            .counter(
+                &labeled("serve_provenance_total", "provenance", p.tag()),
+                "compile/encode responses by cache provenance",
+            )
+            .inc();
+    }
+
+    /// Append one structured record to the request log (no-op when the
+    /// log is disabled).
+    fn log_event(&self, rec: &Json) {
+        if let Some(log) = &self.reqlog {
+            log.append(rec);
+        }
+    }
+
+    /// Record a GC pass: eviction counter plus a structured `gc` event
+    /// (the stdout `serve: gc:` line stays — scripts grep it).
+    fn log_gc(&self, r: &crate::explore::GcReport) {
+        self.reg
+            .counter("cache_gc_evictions_total", "artifacts evicted by the periodic/final GC")
+            .add(r.evicted as u64);
+        if r.evicted == 0 {
+            return;
+        }
+        let mut rec = Json::obj();
+        rec.set("ts", now_ms())
+            .set("event", "gc")
+            .set("evicted", r.evicted)
+            .set("entries", r.entries_after)
+            .set("bytes", r.bytes_after)
+            .set("pinned", r.pinned);
+        self.log_event(&rec);
+    }
+
+    /// Per-request bookkeeping, shared by every op (parse failures
+    /// included, as op `invalid`): count and time the request, split
+    /// successful compile/encode timing into `queue_ms` + `exec_ms`
+    /// (`ms` stays their sum for wire compatibility), and append the
+    /// request-log record.
+    fn finish_request(&self, op: &str, mut resp: Json, queued: Duration, exec: Duration) -> Json {
+        self.reg
+            .counter(
+                &labeled("serve_requests_total", "op", op),
+                "requests handled, by op (`invalid` = unparseable)",
+            )
+            .inc();
+        self.reg
+            .histogram(
+                &labeled("serve_request_seconds", "op", op),
+                "request execution time (queue wait excluded)",
+            )
+            .observe_duration(exec);
+        let ok = resp.get("ok").and_then(Json::as_bool) == Some(true);
+        if !ok {
+            self.reg.counter("serve_errors_total", "error responses").inc();
+        }
+        let queue_ms = queued.as_secs_f64() * 1e3;
+        let exec_ms = exec.as_secs_f64() * 1e3;
+        if ok && matches!(op, "compile" | "encode") {
+            resp.set("queue_ms", queue_ms)
+                .set("exec_ms", exec_ms)
+                .set("ms", queue_ms + exec_ms);
+        }
+        if self.reqlog.is_some() {
+            let mut rec = Json::obj();
+            rec.set("ts", now_ms())
+                .set("event", "request")
+                .set("op", op)
+                .set("queue_ms", queue_ms)
+                .set("exec_ms", exec_ms);
+            if let Some(k) = resp.get("key").and_then(Json::as_str) {
+                rec.set("key", k);
+            }
+            if let Some(p) = resp.get("provenance").and_then(Json::as_str) {
+                rec.set("provenance", p);
+            }
+            let outcome =
+                if ok { "ok" } else { resp.get("code").and_then(Json::as_str).unwrap_or("error") };
+            rec.set("outcome", outcome);
+            self.log_event(&rec);
+        }
+        resp
     }
 
     /// Begin the drain: raise the flag (under the housekeeping lock so
@@ -315,6 +498,7 @@ impl ServeState<'_> {
             Request::Ping => (response_ok("ping"), false),
             Request::Shutdown => (response_ok("shutdown"), true),
             Request::Stat => (self.stat_response(), false),
+            Request::Metrics => (self.metrics_response(), false),
             Request::Compile(q) => (self.compile_response(&q), false),
             Request::Encode { key: Some(key), .. } => (self.encode_stored(key), false),
             Request::Encode { key: None, query: Some(q) } => (self.encode_point(&q), false),
@@ -348,10 +532,21 @@ impl ServeState<'_> {
         j
     }
 
+    /// `metrics`: publish scrape-time cache gauges into the registry,
+    /// then render the deterministic text exposition (the response's
+    /// `exposition` member; `cascade client metrics` prints it raw).
+    fn metrics_response(&self) -> Json {
+        self.core.publish_metrics(&self.reg);
+        self.disk.publish_metrics(&self.reg);
+        let mut j = response_ok("metrics");
+        j.set("exposition", self.reg.expose());
+        j
+    }
+
     /// `compile`: resolve the point, evaluate through the shared session
-    /// (dedup + caches), answer with key, provenance, timing, metrics.
+    /// (dedup + caches), answer with key, provenance, metrics (timing is
+    /// stamped by [`ServeState::finish_request`]).
     fn compile_response(&self, q: &proto::PointQuery) -> Json {
-        let t0 = Instant::now();
         let (spec, point) = match q.resolve() {
             Ok(sp) => sp,
             Err(e) => return response_error(ErrorCode::BadRequest, &e),
@@ -363,7 +558,6 @@ impl ServeState<'_> {
                 let mut j = response_ok("compile");
                 j.set("key", key_hex(key))
                     .set("provenance", prov.tag())
-                    .set("ms", ms_since(t0))
                     .set("metrics", metrics_json(&m));
                 j
             }
@@ -378,7 +572,6 @@ impl ServeState<'_> {
     /// `encode` by point query: same dedup slot as `compile`, so a
     /// concurrent compile of the same key is reused, never repeated.
     fn encode_point(&self, q: &proto::PointQuery) -> Json {
-        let t0 = Instant::now();
         let (spec, point) = match q.resolve() {
             Ok(sp) => sp,
             Err(e) => return response_error(ErrorCode::BadRequest, &e),
@@ -386,7 +579,7 @@ impl ServeState<'_> {
         let (key, res, prov) = self.core.compiled_with(&spec, &point);
         self.count_prov(prov);
         match res {
-            Ok(c) => encode_response(key, prov, &c, t0),
+            Ok(c) => self.encode_response(key, prov, &c),
             Err(e) => {
                 let mut j = response_error(ErrorCode::CompileFailed, &e);
                 j.set("key", key_hex(key));
@@ -399,12 +592,11 @@ impl ServeState<'_> {
     /// against the metrics record's fingerprint when one exists) — the
     /// daemon twin of `cascade encode --key HEX`, never compiles.
     fn encode_stored(&self, key: u64) -> Json {
-        let t0 = Instant::now();
         let expect = self.aux.load(key).map(|m| m.artifact_fp);
         match self.aux.artifacts().load(key, expect) {
             Some(c) => {
                 self.count_prov(Provenance::WarmArt);
-                encode_response(key, Provenance::WarmArt, &c, t0)
+                self.encode_response(key, Provenance::WarmArt, &c)
             }
             None => {
                 let msg = format!(
@@ -417,30 +609,24 @@ impl ServeState<'_> {
             }
         }
     }
-}
 
-/// Assemble an `encode` success response around the bitstream text —
-/// exactly [`crate::arch::bitstream::Bitstream::to_text`], so a client
-/// writing the `bitstream` member to a file gets bytes identical to
-/// offline `cascade encode`.
-fn encode_response(
-    key: u64,
-    prov: Provenance,
-    c: &crate::pipeline::Compiled,
-    t0: Instant,
-) -> Json {
-    let bs = crate::sim::encode::encode_compiled(c);
-    let mut j = response_ok("encode");
-    j.set("key", key_hex(key))
-        .set("provenance", prov.tag())
-        .set("ms", ms_since(t0))
-        .set("words", bs.len())
-        .set("bitstream", bs.to_text());
-    j
-}
-
-fn ms_since(t0: Instant) -> f64 {
-    t0.elapsed().as_secs_f64() * 1e3
+    /// Assemble an `encode` success response around the bitstream text —
+    /// exactly [`crate::arch::bitstream::Bitstream::to_text`], so a
+    /// client writing the `bitstream` member to a file gets bytes
+    /// identical to offline `cascade encode`.
+    fn encode_response(&self, key: u64, prov: Provenance, c: &crate::pipeline::Compiled) -> Json {
+        let t0 = Instant::now();
+        let bs = crate::sim::encode::encode_compiled(c);
+        self.reg
+            .histogram("encode_seconds", crate::obs::help::ENCODE)
+            .observe_duration(t0.elapsed());
+        let mut j = response_ok("encode");
+        j.set("key", key_hex(key))
+            .set("provenance", prov.tag())
+            .set("words", bs.len())
+            .set("bitstream", bs.to_text());
+        j
+    }
 }
 
 /// Normalize an unspecified bind IP (`0.0.0.0` / `::`) to loopback so
@@ -564,8 +750,10 @@ impl<R: Read> LineReader<R> {
 
 /// Serve one connection: request lines in, response lines out, until
 /// EOF, a fatal framing defect, or the drain. Malformed requests get a
-/// structured error and the connection *stays open*.
-fn handle_conn(state: &ServeState<'_>, stream: TcpStream) {
+/// structured error and the connection *stays open*. `queue_wait` is the
+/// connection's time in the accept queue; it is charged to the first
+/// request (later requests on the connection waited in no queue).
+fn handle_conn(state: &ServeState<'_>, stream: TcpStream, mut queue_wait: Duration) {
     let _ = stream.set_read_timeout(Some(READ_POLL));
     let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
     let mut reader = LineReader::new(&stream);
@@ -588,10 +776,17 @@ fn handle_conn(state: &ServeState<'_>, stream: TcpStream) {
                 }
                 served_any = true;
                 state.requests.fetch_add(1, Ordering::SeqCst);
-                let (resp, drain) = match Request::parse_line(&line) {
-                    Ok(req) => state.handle_request(req),
-                    Err((code, msg)) => (response_error(code, &msg), false),
+                let queued = std::mem::take(&mut queue_wait);
+                let t0 = Instant::now();
+                let (op, resp, drain) = match Request::parse_line(&line) {
+                    Ok(req) => {
+                        let op = req.op();
+                        let (resp, drain) = state.handle_request(req);
+                        (op, resp, drain)
+                    }
+                    Err((code, msg)) => ("invalid", response_error(code, &msg), false),
                 };
+                let resp = state.finish_request(op, resp, queued, t0.elapsed());
                 if resp.get("ok").and_then(Json::as_bool) != Some(true) {
                     state.errors.fetch_add(1, Ordering::SeqCst);
                 }
@@ -645,6 +840,7 @@ fn housekeeping(state: &ServeState<'_>) {
                 if r.evicted > 0 {
                     println!("serve: gc: {}", r.summary());
                 }
+                state.log_gc(&r);
             }
             state.core.drop_arch_contexts();
         }

@@ -2,7 +2,7 @@
 //!
 //! Every request and every response is exactly one JSON object on one
 //! line (LF-terminated). Requests name their operation in `"op"`:
-//! `ping`, `stat`, `compile`, `encode`, `shutdown`. Success responses
+//! `ping`, `stat`, `metrics`, `compile`, `encode`, `shutdown`. Success responses
 //! carry `"ok": true` plus per-op payload; failures carry `"ok": false`,
 //! a machine-readable `"code"` (see [`ErrorCode`]) and a human `"error"`.
 //! A malformed or unknown request gets a structured error response — the
@@ -272,6 +272,9 @@ pub enum Request {
     /// Cache + server statistics (shares [`crate::explore::DiskCache::stat_json`]
     /// with `cascade cache stat --json`).
     Stat,
+    /// The metrics exposition: deterministic Prometheus-style text in the
+    /// response's `"exposition"` member (`docs/observability.md`).
+    Metrics,
     /// Compile (or serve from cache) one point; responds with the
     /// effective key, provenance, timing and measured metrics.
     Compile(PointQuery),
@@ -299,6 +302,7 @@ impl Request {
         match op {
             "ping" => Ok(Request::Ping),
             "stat" => Ok(Request::Stat),
+            "metrics" => Ok(Request::Metrics),
             "shutdown" => Ok(Request::Shutdown),
             "compile" => {
                 let q = PointQuery::from_json(j).map_err(|e| (ErrorCode::BadRequest, e))?;
@@ -331,7 +335,7 @@ impl Request {
             }
             other => Err((
                 ErrorCode::UnknownOp,
-                format!("unknown op '{other}' (ping|stat|compile|encode|shutdown)"),
+                format!("unknown op '{other}' (ping|stat|metrics|compile|encode|shutdown)"),
             )),
         }
     }
@@ -341,6 +345,7 @@ impl Request {
         match self {
             Request::Ping => "ping",
             Request::Stat => "stat",
+            Request::Metrics => "metrics",
             Request::Compile(_) => "compile",
             Request::Encode { .. } => "encode",
             Request::Shutdown => "shutdown",
@@ -352,7 +357,7 @@ impl Request {
         let mut j = Json::obj();
         j.set("op", self.op());
         match self {
-            Request::Ping | Request::Stat | Request::Shutdown => {}
+            Request::Ping | Request::Stat | Request::Metrics | Request::Shutdown => {}
             Request::Compile(q) => q.write_json(&mut j),
             Request::Encode { key, query } => {
                 if let Some(k) = key {
@@ -440,6 +445,7 @@ mod tests {
         let reqs = [
             Request::Ping,
             Request::Stat,
+            Request::Metrics,
             Request::Shutdown,
             Request::Compile(q.clone()),
             Request::Encode { key: None, query: Some(q) },

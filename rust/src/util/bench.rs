@@ -103,6 +103,11 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
+    /// Everything measured so far, in run order.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
     /// Write the suite's results to `results/bench_<suite>.json`.
     pub fn finish(&self) {
         let mut arr = Json::Arr(vec![]);
