@@ -60,7 +60,7 @@ pub use runner::{
     run, EvalSession, PartialSink, PointResult, Provenance, RunOutcome, SessionCore,
 };
 pub use search::{run_halving, HalvingParams, Objective, RungReport, SearchOutcome};
-pub use shard::{merge, merge_cli, Manifest, MergeOutcome, ShardOutcome, ShardSpec};
+pub use shard::{merge, merge_cli, owner_of, Manifest, MergeOutcome, ShardOutcome, ShardSpec};
 pub use space::{ExplorePoint, ExploreSpec, Scale};
 
 use std::path::Path;

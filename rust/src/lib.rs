@@ -49,11 +49,17 @@
 //!   into the identical single-process report. Drives `cascade explore`;
 //!   `cascade exp summary` reuses its persistent cache.
 //! * [`serve`] — the `cascade serve` daemon: a std-only TCP server
-//!   (newline-delimited JSON protocol, bounded worker pool) that serves
-//!   `compile` / `encode` / `stat` requests from one long-lived warm
-//!   session over the explore caches, with in-flight deduplication,
-//!   periodic pinned-aware GC, and graceful drain-on-shutdown; plus the
-//!   `cascade client` driver.
+//!   (newline-delimited JSON protocol, bounded worker pool, per-connection
+//!   request pipelining with back-pressure) that serves `compile` /
+//!   `encode` / `stat` requests from one long-lived warm session over the
+//!   explore caches, with in-flight deduplication, periodic pinned-aware
+//!   GC, shared-secret auth (`--auth-token`, required off loopback), and
+//!   graceful drain-on-shutdown. `--route` runs the same binary as a
+//!   *front* that hash-routes requests to N backends by effective cache
+//!   key (the `--shard` partition), payload-transparently. The keep-alive
+//!   [`serve::Client`] API drives any of them (`cascade client`), and
+//!   [`serve::loadgen`] measures one (`cascade loadgen`,
+//!   `BENCH_serve.json`).
 //! * [`obs`] — zero-dependency observability: a process-wide metrics
 //!   registry (atomic counters / gauges / log₂-bucketed latency histograms
 //!   with exact p50/p99/p999 readout) rendering a byte-deterministic

@@ -16,11 +16,18 @@
 //!                                                          artifact store: zero recompiles)
 //! cascade cache <stat|gc> [--dir D] [--cache-cap CAP] [--json]
 //!                                                          inspect / bound explore_cache/
-//! cascade serve [--addr H:P] [--workers N] [--queue N] [--cache-dir D]
+//! cascade serve [--addr H:P] [--workers N] [--queue N] [--pipeline N] [--cache-dir D]
 //!               [--cache-cap CAP] [--gc-every SECS]        compile/encode daemon over the store
 //!               [--log PATH|none] [--log-cap CAP]          + structured JSONL request log
+//!               [--auth-token T] [--route A1,A2,...]       shared-secret auth; or run as a
+//!                                                          front that hash-routes to backends
 //! cascade client <ping|stat|compile|encode|metrics|shutdown> [--addr H:P] [point flags]
 //!               [--key HEX] [--out F] [--timeout SECS]     drive a running daemon
+//!               [--retries N] [--auth-token T]             (retries redial; token for auth)
+//! cascade loadgen --app NAME [point flags] [--addr H:P] [--requests N] [--rate R]
+//!                 [--conns N] [--seed S] [--spread N]      deterministic open-loop load
+//!                 [--encode-every N] [--auth-token T]      generator; writes BENCH_serve.json
+//!                 [--out F] [--assert-split]               with p50/p99/p999 latencies
 //! cascade bench [--suite compile|pnr|sta|sim|tables] [--json] [--fast]
 //!                                                          run a benchmark suite from the CLI
 //! cascade arch                                             print architecture + timing model
@@ -55,10 +62,19 @@
 //! deduplication, the metrics cache and the fingerprint-verified artifact
 //! store — behind a newline-delimited JSON socket protocol (spec:
 //! `docs/serve.md`), so many clients share one cache instead of each
-//! paying a cold start. `client` drives it from the CLI; responses carry
-//! the effective cache key and provenance (`fresh|warm_mem|warm_art|
-//! warm_rec`), and a daemon-served `encode` is byte-identical to offline
-//! `cascade encode --from-cache`.
+//! paying a cold start. Connections are kept alive and pipelined (up to
+//! `--pipeline` requests read ahead per connection), `--auth-token`
+//! gates every request behind a shared secret (required off loopback),
+//! and `--route addr1,addr2,...` runs the daemon as a *front* that
+//! hash-routes `compile`/`encode` to N backends by effective cache key —
+//! the same partition as `--shard K/N`, so each key has exactly one home
+//! cache. `client` drives any of them from the CLI via the keep-alive
+//! [`cascade::serve::Client`] API; responses carry the effective cache
+//! key and provenance (`fresh|warm_mem|warm_art|warm_rec`), a
+//! daemon-served `encode` is byte-identical to offline `cascade encode
+//! --from-cache`, and a routed front is payload-transparent. `loadgen`
+//! measures a running daemon with a deterministic open-loop schedule and
+//! writes latency percentiles to `BENCH_serve.json`.
 //!
 //! `--shard K/N` distributes either search across processes or machines:
 //! the shard evaluates only the points whose effective cache key it owns
@@ -99,15 +115,23 @@ fn usage() -> ! {
            cache   <stat|gc> [--dir DIR] [--cache-cap CAP]     artifact-store statistics / GC\n\
                    [--json]                                     (CAP: bytes, 512K/8M/1G, or Nn;\n\
                                                                 stat --json is machine-readable)\n\
-           serve   [--addr HOST:PORT] [--workers N] [--queue N] [--cache-dir DIR]\n\
-                   [--cache-cap CAP] [--gc-every SECS]          long-running compile/encode\n\
-                   [--log PATH|none] [--log-cap CAP]            daemon over the artifact store\n\
-                                                                (NDJSON protocol, docs/serve.md;\n\
-                                                                JSONL request log, size-rotated)\n\
+           serve   [--addr HOST:PORT] [--workers N] [--queue N] [--pipeline N]\n\
+                   [--cache-dir DIR] [--cache-cap CAP]          long-running compile/encode\n\
+                   [--gc-every SECS] [--log PATH|none]          daemon over the artifact store\n\
+                   [--log-cap CAP] [--auth-token TOKEN]         (NDJSON protocol, docs/serve.md;\n\
+                   [--route ADDR1,ADDR2,...]                    --route runs a front that hash-\n\
+                                                                routes to backends by cache key;\n\
+                                                                --auth-token gates every request\n\
+                                                                and is required off loopback)\n\
            client  <ping|stat|compile|encode|metrics|shutdown> [--addr HOST:PORT]\n\
                    [point flags as for encode] [--key HEX]      drive a running serve daemon;\n\
                    [--out FILE] [--timeout SECS]                encode writes the bitstream file,\n\
-                                                                metrics prints the exposition\n\
+                   [--retries N] [--auth-token TOKEN]           metrics prints the exposition\n\
+           loadgen --app NAME [point flags] [--addr HOST:PORT] [--requests N] [--rate R]\n\
+                   [--conns N] [--seed S] [--spread N]          deterministic open-loop load\n\
+                   [--encode-every N] [--timeout SECS]          generator against a daemon or\n\
+                   [--auth-token TOKEN] [--out FILE]            front; prints p50/p99/p999 and\n\
+                   [--assert-split]                             writes BENCH_serve.json\n\
            bench   [--suite compile|pnr|sta|sim|tables]         run a benchmark suite; --json\n\
                    [--json] [--fast]                            writes BENCH_<suite>.json\n\
            arch                                                 architecture + timing summary\n\
@@ -419,6 +443,12 @@ fn main() {
         "client" => {
             if let Err(e) = cascade::serve::client::run_cli(&args) {
                 eprintln!("client failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        "loadgen" => {
+            if let Err(e) = cascade::serve::loadgen::run_cli(&args) {
+                eprintln!("loadgen failed: {e}");
                 std::process::exit(1);
             }
         }

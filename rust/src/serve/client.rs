@@ -1,14 +1,33 @@
-//! `cascade client` — drive a running `cascade serve` daemon without
-//! external tooling (the CI smoke job and shell scripts use this).
+//! The client side of the serve protocol: a keep-alive [`Client`] plus
+//! the `cascade client` CLI built on it.
 //!
-//! One invocation = one connection = one request: the op is the first
-//! positional (`ping|stat|metrics|compile|encode|shutdown`), point axes
-//! use the same flags as `cascade encode`, and the raw response JSON is
-//! printed to stdout — except `encode`'s `bitstream` member, which is
-//! written to `--out FILE` (default `results/bitstream_<key>.txt`)
-//! byte-identically to offline `cascade encode`, so `cmp` against the
-//! offline file is the end-to-end check, and `metrics`' `exposition`
-//! member, which is printed raw (Prometheus text, scrape-ready).
+//! [`Client`] holds **one** TCP connection for its whole lifetime and
+//! sends any number of requests down it — the protocol is pipelined
+//! newline-delimited JSON, so request N+1 never pays connect/teardown
+//! again (the v1 free function opened a fresh connection per call, which
+//! made every request pay a 3-way handshake and made daemon-side
+//! keep-alive accounting untestable). Every consumer goes through it:
+//! `cascade client`, `cascade loadgen`, the routing front daemon's
+//! backend pool, the CI smoke job and the e2e tests.
+//!
+//! Transport failures (connect refused, reset, timeout, server gone
+//! mid-read) are surfaced as `Err`; [`ClientOpts::retries`] > 0 redials
+//! and resends that many extra times. Retries are safe because every
+//! wire op is idempotent — `compile`/`encode` are cache-keyed (a repeat
+//! is a warm hit), `stat`/`metrics`/`ping` are reads, and a repeated
+//! `shutdown` finds the daemon already draining. Structured error
+//! *responses* (`busy`, `unauthorized`, ...) are `Ok(json)` — the
+//! transport worked; the caller owns the policy.
+//!
+//! ```no_run
+//! use cascade::serve::{Client, ClientOpts};
+//!
+//! let mut c = Client::connect("127.0.0.1:7878", ClientOpts::default()).unwrap();
+//! let pong = c.ping().unwrap();
+//! assert_eq!(pong.get("proto").and_then(|v| v.as_u64()), Some(2));
+//! let stat = c.stat().unwrap(); // same connection, no reconnect
+//! println!("{}", stat.to_string_compact());
+//! ```
 
 use std::io::{BufRead as _, BufReader, Write as _};
 use std::net::TcpStream;
@@ -19,28 +38,176 @@ use crate::util::json::Json;
 
 use super::proto::{self, PointQuery, Request};
 
-/// Send one request, await the one response line. The timeout applies to
-/// connect-adjacent socket reads/writes, not to the server's compile
-/// time budget as a whole — each partial read just has to make progress.
-pub fn request(addr: &str, req: &Request, timeout: Duration) -> Result<Json, String> {
-    let mut stream = TcpStream::connect(addr)
-        .map_err(|e| format!("client: cannot connect to {addr}: {e}"))?;
-    let _ = stream.set_read_timeout(Some(timeout));
-    let _ = stream.set_write_timeout(Some(timeout));
-    let mut line = req.to_json().to_string_compact();
-    line.push('\n');
-    stream.write_all(line.as_bytes()).map_err(|e| format!("client: send failed: {e}"))?;
-    let mut reader = BufReader::new(&mut stream);
-    let mut resp = String::new();
-    reader.read_line(&mut resp).map_err(|e| format!("client: read failed: {e}"))?;
-    if resp.trim().is_empty() {
-        return Err("client: connection closed without a response".into());
+/// Connection policy for a [`Client`].
+#[derive(Debug, Clone)]
+pub struct ClientOpts {
+    /// Per-socket-operation timeout (each read/write must make progress
+    /// within it; a long compile is many progressing reads server-side,
+    /// but one blocking read here — size it to the slowest expected
+    /// request).
+    pub timeout: Duration,
+    /// Extra reconnect-and-resend attempts after a transport failure
+    /// (0 = fail fast). Safe because every wire op is idempotent.
+    pub retries: usize,
+    /// Shared secret, attached to every request as `"auth"` (required
+    /// by daemons started with `--auth-token`).
+    pub auth: Option<String>,
+}
+
+impl Default for ClientOpts {
+    /// 600 s timeout (full-budget compiles are slow), no retries, no auth.
+    fn default() -> ClientOpts {
+        ClientOpts { timeout: Duration::from_secs(600), retries: 0, auth: None }
     }
-    Json::parse(resp.trim()).map_err(|e| format!("client: unparseable response: {e}"))
+}
+
+/// The live connection: the writing half and a buffered reading half of
+/// the same socket.
+struct Conn {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+/// A keep-alive connection to a `cascade serve` daemon. See the module
+/// docs; construct with [`Client::connect`], drop to close.
+pub struct Client {
+    addr: String,
+    opts: ClientOpts,
+    conn: Option<Conn>,
+}
+
+fn dial(addr: &str, opts: &ClientOpts) -> Result<Conn, String> {
+    let stream =
+        TcpStream::connect(addr).map_err(|e| format!("client: cannot connect to {addr}: {e}"))?;
+    let _ = stream.set_read_timeout(Some(opts.timeout));
+    let _ = stream.set_write_timeout(Some(opts.timeout));
+    let reader = BufReader::new(
+        stream.try_clone().map_err(|e| format!("client: cannot clone stream to {addr}: {e}"))?,
+    );
+    Ok(Conn { stream, reader })
+}
+
+impl Client {
+    /// Dial `addr` and hold the connection open. Fails fast when the
+    /// daemon is unreachable — a caller that wants lazy dialing can just
+    /// construct on first use.
+    pub fn connect(addr: impl Into<String>, opts: ClientOpts) -> Result<Client, String> {
+        let addr = addr.into();
+        let conn = dial(&addr, &opts)?;
+        Ok(Client { addr, opts, conn: Some(conn) })
+    }
+
+    /// The address this client dials.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Send one request, await its response line — the primitive every
+    /// op method wraps. On a transport failure the connection is dropped
+    /// and (under [`ClientOpts::retries`]) redialed; the request object
+    /// is serialized once, with the configured auth token attached.
+    pub fn request(&mut self, req: &Request) -> Result<Json, String> {
+        let mut j = req.to_json();
+        if let Some(t) = &self.opts.auth {
+            j.set("auth", t.as_str());
+        }
+        let mut line = j.to_string_compact();
+        line.push('\n');
+        let mut last_err = String::new();
+        for attempt in 0..=self.opts.retries {
+            if attempt > 0 {
+                self.conn = None; // force a fresh dial
+            }
+            match self.send_once(&line) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    self.conn = None;
+                    last_err = e;
+                }
+            }
+        }
+        Err(last_err)
+    }
+
+    fn send_once(&mut self, line: &str) -> Result<Json, String> {
+        if self.conn.is_none() {
+            self.conn = Some(dial(&self.addr, &self.opts)?);
+        }
+        let conn = self.conn.as_mut().expect("just dialed");
+        conn.stream
+            .write_all(line.as_bytes())
+            .and_then(|()| conn.stream.flush())
+            .map_err(|e| format!("client: send to {} failed: {e}", self.addr))?;
+        let mut resp = String::new();
+        conn.reader
+            .read_line(&mut resp)
+            .map_err(|e| format!("client: read from {} failed: {e}", self.addr))?;
+        if resp.trim().is_empty() {
+            return Err(format!("client: {} closed the connection without a response", self.addr));
+        }
+        Json::parse(resp.trim())
+            .map_err(|e| format!("client: unparseable response from {}: {e}", self.addr))
+    }
+
+    /// Liveness probe; the response carries `"proto"`.
+    pub fn ping(&mut self) -> Result<Json, String> {
+        self.request(&Request::Ping)
+    }
+
+    /// Cache + server statistics.
+    pub fn stat(&mut self) -> Result<Json, String> {
+        self.request(&Request::Stat)
+    }
+
+    /// The Prometheus-style exposition (in the `"exposition"` member).
+    pub fn metrics(&mut self) -> Result<Json, String> {
+        self.request(&Request::Metrics)
+    }
+
+    /// Compile (or serve from cache) one point.
+    pub fn compile(&mut self, q: &PointQuery) -> Result<Json, String> {
+        self.request(&Request::Compile(q.clone()))
+    }
+
+    /// Emit a point's bitstream through the compile dedup path.
+    pub fn encode_point(&mut self, q: &PointQuery) -> Result<Json, String> {
+        self.request(&Request::Encode { key: None, query: Some(q.clone()) })
+    }
+
+    /// Emit a stored artifact's bitstream by effective key (never
+    /// compiles).
+    pub fn encode_key(&mut self, key: u64) -> Result<Json, String> {
+        self.request(&Request::Encode { key: Some(key), query: None })
+    }
+
+    /// Ask the daemon to drain and stop.
+    pub fn shutdown(&mut self) -> Result<Json, String> {
+        self.request(&Request::Shutdown)
+    }
+}
+
+impl Drop for Client {
+    /// Close cleanly: both directions shut down so the daemon's reader
+    /// sees EOF now, not a poll-timeout later.
+    fn drop(&mut self) {
+        if let Some(c) = self.conn.take() {
+            let _ = c.stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
 }
 
 /// `cascade client <op> [--addr HOST:PORT] [point flags] [--key HEX]
-/// [--out FILE] [--timeout SECS]`.
+/// [--out FILE] [--timeout SECS] [--retries N] [--auth-token T]`.
+///
+/// One invocation = one [`Client`] = one connection; the op is the first
+/// positional (`ping|stat|metrics|compile|encode|shutdown`), point axes
+/// use the same flags as `cascade encode`, and the raw response JSON is
+/// printed to stdout — except `encode`'s `bitstream` member, which is
+/// written to `--out FILE` (default `results/bitstream_<key>.txt`)
+/// byte-identically to offline `cascade encode`, and `metrics`'
+/// `exposition` member, which is printed raw (Prometheus text,
+/// scrape-ready; a routed front's per-backend expositions follow under
+/// `# backend <addr>` headers).
 pub fn run_cli(args: &Args) -> Result<(), String> {
     let op = args
         .positionals
@@ -82,13 +249,30 @@ pub fn run_cli(args: &Args) -> Result<(), String> {
             ))
         }
     };
-    let resp = request(addr, &req, timeout)?;
+    let opts = ClientOpts {
+        timeout,
+        retries: args.opt_usize("retries", 0),
+        auth: args.opt("auth-token").map(str::to_string),
+    };
+    let mut client = Client::connect(addr, opts)?;
+    let resp = client.request(&req)?;
     if resp.get("ok").and_then(Json::as_bool) != Some(true) {
         return Err(format!("client: server error: {}", resp.to_string_compact()));
     }
     if let Some(text) = resp.get("exposition").and_then(Json::as_str) {
-        // Scrape-ready: the exposition alone, not its JSON wrapper.
+        // Scrape-ready: the exposition alone, not its JSON wrapper. A
+        // routed front appends each backend's exposition under a comment
+        // header, so one scrape shows the whole topology.
         print!("{text}");
+        if let Some(backends) = resp.get("backends").and_then(Json::as_arr) {
+            for b in backends {
+                let baddr = b.get("addr").and_then(Json::as_str).unwrap_or("?");
+                println!("# backend {baddr}");
+                if let Some(t) = b.get("exposition").and_then(Json::as_str) {
+                    print!("{t}");
+                }
+            }
+        }
         return Ok(());
     }
     match resp.get("bitstream").and_then(Json::as_str) {
@@ -137,5 +321,30 @@ mod tests {
         assert!(run_cli(&parse("client encode --key zz")).is_err());
         assert!(run_cli(&parse("client encode --key ff --seed 7")).is_err());
         assert!(run_cli(&parse("client encode --key ff --tiny")).is_err());
+        assert!(run_cli(&parse("client ping --timeout x")).is_err());
+    }
+
+    #[test]
+    fn connect_to_nothing_fails_fast() {
+        // Port 1 on loopback is essentially never listening; either the
+        // connect fails (expected) or some exotic environment answers —
+        // in which case skip rather than flake.
+        if let Ok(mut c) = Client::connect("127.0.0.1:1", ClientOpts::default()) {
+            eprintln!("skipping: something is listening on 127.0.0.1:1");
+            let _ = c.ping();
+        }
+    }
+
+    #[test]
+    fn retries_redial_then_surface_the_last_error() {
+        let opts = ClientOpts { retries: 2, timeout: Duration::from_secs(1), auth: None };
+        let err = match Client::connect("127.0.0.1:1", opts) {
+            Err(e) => e,
+            Ok(_) => {
+                eprintln!("skipping: something is listening on 127.0.0.1:1");
+                return;
+            }
+        };
+        assert!(err.contains("cannot connect"), "{err}");
     }
 }

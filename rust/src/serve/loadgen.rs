@@ -1,0 +1,505 @@
+//! `cascade loadgen` — a deterministic open-loop load generator for the
+//! serve daemon, with latency percentiles and a machine-readable
+//! `BENCH_serve.json` snapshot.
+//!
+//! **Open loop.** Arrivals follow a precomputed schedule and are released
+//! on time whether or not earlier requests have finished — so measured
+//! latency honestly includes convoying when the daemon falls behind,
+//! which is exactly what a closed loop (send → wait → send) hides. The
+//! schedule is *deterministic*: inter-arrival gaps are `1/rate` jittered
+//! by ±50% from [`Rng`] (splitmix64), so the same `--seed` reproduces
+//! the same arrival times, the same request census, and the same
+//! effective cache keys — a regression in `BENCH_serve.json` is a server
+//! change, never schedule noise.
+//!
+//! **Request mix.** Each request targets one of `--spread` distinct
+//! points (the point-seed axis is drawn from the schedule RNG; `--seed`
+//! itself names the *schedule*), cycling round-robin; every
+//! `--encode-every`-th request asks for the bitstream (`encode` by
+//! point) instead of `compile`. Keys are computed client-side with the
+//! same [`effective_key`] the daemon and the shard partition use, so the
+//! generator can predict the per-backend split of a routed topology —
+//! `--assert-split` checks each backend's `fresh_compiles` against
+//! [`owner_of`] and fails loudly on a routing bug (the backends must
+//! start cold and unshared for the census to be exact).
+//!
+//! **Measurement.** Latency is arrival-to-response per op, recorded in
+//! [`crate::obs`] log₂ histograms; the report prints p50/p99/p999 and
+//! the snapshot (`schema: cascade-bench-v1`, suite `serve`) mirrors the
+//! `cascade bench` result fields so existing tooling can diff it.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::arch::params::ArchParams;
+use crate::explore::runner::effective_key;
+use crate::explore::shard::owner_of;
+use crate::obs::metrics::quantile_of;
+use crate::obs::{labeled, Registry};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::client::{Client, ClientOpts};
+use super::pool::Bounded;
+use super::proto::{PointQuery, Request};
+
+/// Help string for the latency histogram family (also used to read the
+/// family back, so the registry never sees two competing help texts).
+const LATENCY_HELP: &str = "open-loop request latency, arrival to response (queueing included)";
+
+/// Everything `cascade loadgen` needs to plan and drive one run.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// Daemon (or routed front) to drive.
+    pub addr: String,
+    /// Total requests in the schedule.
+    pub requests: usize,
+    /// Mean arrival rate, requests/second.
+    pub rate: f64,
+    /// Concurrent keep-alive connections draining the schedule.
+    pub conns: usize,
+    /// Schedule seed (`--seed`): arrivals, point census and request mix
+    /// are all functions of it.
+    pub seed: u64,
+    /// Distinct points in the mix (distinct point-seed axis values).
+    pub spread: usize,
+    /// Every Nth request is `encode` by point (0 = compile only).
+    pub encode_every: usize,
+    /// Per-socket-operation timeout for each connection.
+    pub timeout: Duration,
+    /// Shared secret for daemons started with `--auth-token`.
+    pub auth: Option<String>,
+    /// Point template (app/level/axes); its seed axis is overridden by
+    /// the plan.
+    pub base: PointQuery,
+    /// Snapshot destination.
+    pub out: PathBuf,
+    /// After the run, verify each backend's `fresh_compiles` against the
+    /// key partition (requires a routed front and cold backends).
+    pub assert_split: bool,
+}
+
+/// One scheduled request: when it arrives, what it asks, and the
+/// effective key it will hit (known client-side, before any network).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Planned {
+    pub at: Duration,
+    pub req: Request,
+    pub key: u64,
+}
+
+impl LoadSpec {
+    /// Parse `cascade loadgen --app NAME [point flags] [--addr HOST:PORT]
+    /// [--requests N] [--rate R] [--conns N] [--seed S] [--spread N]
+    /// [--encode-every N] [--timeout SECS] [--auth-token T] [--out FILE]
+    /// [--assert-split]`.
+    ///
+    /// `--seed` names the *schedule* seed. The point-seed axis belongs
+    /// to the plan (`--spread` distinct values drawn from the schedule
+    /// RNG), so a base point seed would be dead configuration — the
+    /// template's seed is cleared and its value reused for the schedule.
+    pub fn from_args(args: &Args) -> Result<LoadSpec, String> {
+        let mut base = PointQuery::from_args(args)?;
+        let seed = base.seed.take().unwrap_or(1);
+        let timeout = match args.opt("timeout") {
+            None => Duration::from_secs(600),
+            Some(s) => Duration::from_secs(
+                s.parse().map_err(|_| format!("loadgen: bad --timeout '{s}' (seconds)"))?,
+            ),
+        };
+        Ok(LoadSpec {
+            addr: args.opt_or("addr", "127.0.0.1:7878").to_string(),
+            requests: args.opt_usize("requests", 64),
+            rate: args.opt_f64("rate", 32.0),
+            conns: args.opt_usize("conns", 4),
+            seed,
+            spread: args.opt_usize("spread", 4),
+            encode_every: args.opt_usize("encode-every", 4),
+            timeout,
+            auth: args.opt("auth-token").map(str::to_string),
+            base,
+            out: PathBuf::from(args.opt_or("out", "BENCH_serve.json")),
+            assert_split: args.flag("assert-split"),
+        })
+    }
+
+    /// Materialize the deterministic schedule: same spec, same plan,
+    /// byte for byte. Points are resolved (and validated) here, so a bad
+    /// template fails before a single connection is opened.
+    pub fn plan(&self) -> Result<Vec<Planned>, String> {
+        if !self.rate.is_finite() || self.rate <= 0.0 {
+            return Err(format!("loadgen: bad rate {} (positive requests/second)", self.rate));
+        }
+        if self.requests == 0 || self.conns == 0 || self.spread == 0 {
+            return Err("loadgen: --requests, --conns and --spread must be >= 1".to_string());
+        }
+        if self.spread > 10_000 {
+            return Err(format!("loadgen: --spread {} is absurd (max 10000)", self.spread));
+        }
+        let arch = ArchParams::paper();
+        let mut rng = Rng::new(self.seed);
+        // The distinct point-seed census, in draw order (duplicates
+        // redrawn — the census size is part of the contract).
+        let mut seeds: Vec<u64> = Vec::with_capacity(self.spread);
+        while seeds.len() < self.spread {
+            let s = rng.next_u64() % 100_000;
+            if !seeds.contains(&s) {
+                seeds.push(s);
+            }
+        }
+        let gap = 1.0 / self.rate;
+        let mut at = 0.0f64;
+        let mut plan = Vec::with_capacity(self.requests);
+        for i in 0..self.requests {
+            at += gap * rng.gen_f64_range(0.5, 1.5);
+            let mut q = self.base.clone();
+            q.seed = Some(seeds[i % seeds.len()]);
+            let (spec, point) = q.resolve()?;
+            let key = effective_key(&spec, &arch, &point);
+            let req = if self.encode_every > 0 && (i + 1) % self.encode_every == 0 {
+                Request::Encode { key: None, query: Some(q) }
+            } else {
+                Request::Compile(q)
+            };
+            plan.push(Planned { at: Duration::from_secs_f64(at), req, key });
+        }
+        Ok(plan)
+    }
+}
+
+/// How many *distinct* keys of `plan` each of `n` backends owns under
+/// the shard partition — the predicted per-backend `fresh_compiles`
+/// census for a cold topology (fresh compiles count distinct keys, not
+/// requests: the session core dedups repeats).
+pub fn expected_split(plan: &[Planned], n: usize) -> Vec<usize> {
+    let mut split = vec![0usize; n.max(1)];
+    let mut seen = BTreeSet::new();
+    for p in plan {
+        if seen.insert(p.key) {
+            split[owner_of(p.key, n) - 1] += 1;
+        }
+    }
+    split
+}
+
+/// What one run measured.
+pub struct LoadReport {
+    pub requests: usize,
+    pub ok: usize,
+    /// Failures by kind: a structured error's `code`, `transport`
+    /// (send/recv died even after the client's retry) or `connect`.
+    pub errors: BTreeMap<String, usize>,
+    pub wall: Duration,
+    pub distinct_keys: usize,
+    /// Latency histograms, one family per op.
+    reg: Registry,
+}
+
+impl LoadReport {
+    /// p50/p99/p999 of one op's latency, in microseconds (`None` when
+    /// the op never ran).
+    pub fn percentiles_us(&self, op: &str) -> Option<(u64, u64, u64)> {
+        let h = self.reg.histogram(&labeled("loadgen_latency_seconds", "op", op), LATENCY_HELP);
+        if h.count() == 0 {
+            return None;
+        }
+        Some((h.p50().unwrap_or(0), h.p99().unwrap_or(0), h.p999().unwrap_or(0)))
+    }
+
+    /// The `BENCH_serve.json` document: `cascade-bench-v1` result rows
+    /// (one per op, same fields as `cascade bench --json` plus
+    /// p50/p99/p999) and a `serve` section with run totals.
+    pub fn to_json(&self, spec: &LoadSpec) -> Json {
+        let mut j = Json::obj();
+        j.set("schema", "cascade-bench-v1").set("suite", "serve");
+        let mut results = Json::Arr(vec![]);
+        for op in ["compile", "encode"] {
+            let h =
+                self.reg.histogram(&labeled("loadgen_latency_seconds", "op", op), LATENCY_HELP);
+            if h.count() == 0 {
+                continue;
+            }
+            let snap = h.snapshot();
+            let ns = |q: f64| quantile_of(&snap, q).unwrap_or(0) * 1000;
+            let mut r = Json::obj();
+            r.set("name", format!("serve/{op}"))
+                .set("iters", h.count())
+                .set("median_ns", ns(0.50))
+                .set("mean_ns", h.sum_nanos() / h.count().max(1))
+                .set("p10_ns", ns(0.10))
+                .set("p90_ns", ns(0.90))
+                .set("p50_ns", ns(0.50))
+                .set("p99_ns", ns(0.99))
+                .set("p999_ns", ns(0.999));
+            results.push(r);
+        }
+        j.set("results", results);
+        let mut s = Json::obj();
+        s.set("addr", spec.addr.as_str())
+            .set("requests", self.requests)
+            .set("ok", self.ok)
+            .set("errors", self.errors.values().sum::<usize>())
+            .set("wall_ms", self.wall.as_secs_f64() * 1e3)
+            .set("throughput_rps", self.requests as f64 / self.wall.as_secs_f64().max(1e-9))
+            .set("distinct_keys", self.distinct_keys)
+            .set("conns", spec.conns)
+            .set("rate", spec.rate)
+            .set("seed", spec.seed)
+            .set("spread", spec.spread);
+        j.set("serve", s);
+        j
+    }
+}
+
+/// Drive one planned run: an open-loop dispatcher releases requests on
+/// schedule into a queue that `spec.conns` keep-alive [`Client`]s drain.
+/// Transport failures cost the worker its connection (redialed on the
+/// next request) and are counted, never fatal — a load generator that
+/// dies mid-run measures nothing.
+pub fn run(spec: &LoadSpec, plan: &[Planned]) -> LoadReport {
+    let reg = Registry::new();
+    let queue: Bounded<usize> = Bounded::new(plan.len().max(1));
+    let ok = AtomicUsize::new(0);
+    let errors: Mutex<BTreeMap<String, usize>> = Mutex::new(BTreeMap::new());
+    let record = |kind: &str| {
+        *errors.lock().unwrap().entry(kind.to_string()).or_insert(0) += 1;
+    };
+    let start = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..spec.conns {
+            s.spawn(|| {
+                let opts =
+                    ClientOpts { timeout: spec.timeout, retries: 1, auth: spec.auth.clone() };
+                let mut client: Option<Client> = None;
+                while let Some(i) = queue.pop() {
+                    let p = &plan[i];
+                    if client.is_none() {
+                        match Client::connect(spec.addr.as_str(), opts.clone()) {
+                            Ok(c) => client = Some(c),
+                            Err(_) => {
+                                record("connect");
+                                continue;
+                            }
+                        }
+                    }
+                    let resp = client.as_mut().expect("just connected").request(&p.req);
+                    let lat = start.elapsed().saturating_sub(p.at);
+                    reg.histogram(&labeled("loadgen_latency_seconds", "op", p.req.op()),
+                        LATENCY_HELP)
+                        .observe_duration(lat);
+                    match resp {
+                        Ok(r) if r.get("ok").and_then(Json::as_bool) == Some(true) => {
+                            ok.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Ok(r) => {
+                            record(r.get("code").and_then(Json::as_str).unwrap_or("error"));
+                        }
+                        Err(_) => {
+                            client = None;
+                            record("transport");
+                        }
+                    }
+                }
+            });
+        }
+        // Open-loop dispatcher: release each request at its scheduled
+        // arrival whether or not the workers keep up — under overload
+        // the convoy lands in the latency numbers, where it belongs.
+        for (i, p) in plan.iter().enumerate() {
+            let now = start.elapsed();
+            if p.at > now {
+                std::thread::sleep(p.at - now);
+            }
+            let _ = queue.try_push(i); // cap == plan.len(): never full
+        }
+        queue.close();
+    });
+    let distinct: BTreeSet<u64> = plan.iter().map(|p| p.key).collect();
+    LoadReport {
+        requests: plan.len(),
+        ok: ok.load(Ordering::SeqCst),
+        errors: errors.into_inner().unwrap(),
+        wall: start.elapsed(),
+        distinct_keys: distinct.len(),
+        reg,
+    }
+}
+
+/// Verify a routed front's per-backend `fresh_compiles` against the key
+/// partition. Valid only when the backends started cold and nothing else
+/// compiled into them — CI sets exactly that up.
+fn assert_split(spec: &LoadSpec, plan: &[Planned]) -> Result<(), String> {
+    let opts = ClientOpts { timeout: spec.timeout, retries: 1, auth: spec.auth.clone() };
+    let mut c = Client::connect(spec.addr.as_str(), opts)?;
+    let stat = c.stat()?;
+    let backends = stat.get("backends").and_then(Json::as_arr).ok_or_else(|| {
+        "loadgen: --assert-split needs a routed front (stat reports no backends)".to_string()
+    })?;
+    let expect = expected_split(plan, backends.len());
+    for (i, b) in backends.iter().enumerate() {
+        let addr = b.get("addr").and_then(Json::as_str).unwrap_or("?");
+        let got = b
+            .get("stat")
+            .and_then(|s| s.get("server"))
+            .and_then(|s| s.get("fresh_compiles"))
+            .and_then(Json::as_u64)
+            .ok_or_else(|| format!("loadgen: backend {addr} is unreachable or reported no stats"))?;
+        if got != expect[i] as u64 {
+            return Err(format!(
+                "loadgen: fresh-compile split mismatch at backend {addr}: got {got}, the key \
+                 partition expects {} (full split {expect:?})",
+                expect[i]
+            ));
+        }
+        println!("loadgen: backend {addr}: fresh_compiles {got} matches the partition");
+    }
+    Ok(())
+}
+
+/// `cascade loadgen` entry point: plan, drive, report, snapshot.
+pub fn run_cli(args: &Args) -> Result<(), String> {
+    let spec = LoadSpec::from_args(args)?;
+    let plan = spec.plan()?;
+    println!(
+        "loadgen: {} request(s) at ~{}/s over {} connection(s) to {} (schedule seed {}, {} \
+         distinct point(s), encode every {})",
+        spec.requests, spec.rate, spec.conns, spec.addr, spec.seed, spec.spread,
+        spec.encode_every
+    );
+    let report = run(&spec, &plan);
+    for op in ["compile", "encode"] {
+        if let Some((p50, p99, p999)) = report.percentiles_us(op) {
+            println!(
+                "loadgen: {op}: p50 {:.1} ms, p99 {:.1} ms, p999 {:.1} ms",
+                p50 as f64 / 1e3,
+                p99 as f64 / 1e3,
+                p999 as f64 / 1e3
+            );
+        }
+    }
+    for (kind, n) in &report.errors {
+        println!("loadgen: error {kind}: {n}");
+    }
+    let errs: usize = report.errors.values().sum();
+    println!(
+        "loadgen: {}/{} ok in {:.2} s ({:.1} req/s)",
+        report.ok,
+        report.requests,
+        report.wall.as_secs_f64(),
+        report.requests as f64 / report.wall.as_secs_f64().max(1e-9)
+    );
+    let doc = report.to_json(&spec);
+    if let Some(dir) = spec.out.parent() {
+        if !dir.as_os_str().is_empty() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+    }
+    let mut text = doc.to_string_compact();
+    text.push('\n');
+    std::fs::write(&spec.out, text)
+        .map_err(|e| format!("loadgen: cannot write {}: {e}", spec.out.display()))?;
+    println!("loadgen: wrote {}", spec.out.display());
+    if spec.assert_split {
+        assert_split(&spec, &plan)?;
+    }
+    if errs > 0 {
+        return Err(format!("loadgen: {errs} request(s) failed (census above)"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec_for(seed: u64) -> LoadSpec {
+        LoadSpec {
+            addr: "127.0.0.1:0".into(),
+            requests: 24,
+            rate: 1000.0,
+            conns: 2,
+            seed,
+            spread: 3,
+            encode_every: 4,
+            timeout: Duration::from_secs(1),
+            auth: None,
+            base: PointQuery {
+                app: "gaussian".into(),
+                tiny: true,
+                fast: true,
+                ..PointQuery::default()
+            },
+            out: PathBuf::from("BENCH_serve.json"),
+            assert_split: false,
+        }
+    }
+
+    #[test]
+    fn plan_is_deterministic_per_seed() {
+        let a = spec_for(7).plan().unwrap();
+        let b = spec_for(7).plan().unwrap();
+        assert_eq!(a, b, "same seed must reproduce the schedule exactly");
+        let c = spec_for(8).plan().unwrap();
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.at != y.at || x.key != y.key),
+            "different schedule seeds must produce different plans"
+        );
+    }
+
+    #[test]
+    fn plan_mixes_ops_and_arrivals_increase() {
+        let plan = spec_for(1).plan().unwrap();
+        assert_eq!(plan.len(), 24);
+        let encodes = plan.iter().filter(|p| matches!(p.req, Request::Encode { .. })).count();
+        assert_eq!(encodes, 24 / 4, "every 4th request is an encode");
+        let mut prev = Duration::ZERO;
+        for p in &plan {
+            assert!(p.at > prev, "arrivals must be strictly increasing");
+            prev = p.at;
+        }
+        let distinct: BTreeSet<u64> = plan.iter().map(|p| p.key).collect();
+        assert_eq!(distinct.len(), 3, "--spread controls the distinct-point census");
+    }
+
+    #[test]
+    fn expected_split_covers_every_distinct_key_once() {
+        let plan = spec_for(1).plan().unwrap();
+        for n in [1usize, 2, 3] {
+            let split = expected_split(&plan, n);
+            assert_eq!(split.len(), n);
+            assert_eq!(split.iter().sum::<usize>(), 3, "distinct keys, partitioned totally");
+        }
+    }
+
+    #[test]
+    fn plan_validates_inputs() {
+        let mut s = spec_for(1);
+        s.rate = 0.0;
+        assert!(s.plan().is_err());
+        let mut s = spec_for(1);
+        s.rate = f64::NAN;
+        assert!(s.plan().is_err());
+        let mut s = spec_for(1);
+        s.requests = 0;
+        assert!(s.plan().is_err());
+        let mut s = spec_for(1);
+        s.spread = 0;
+        assert!(s.plan().is_err());
+    }
+
+    #[test]
+    fn from_args_reuses_seed_for_the_schedule() {
+        let parse = |s: &str| Args::parse(s.split_whitespace().map(|x| x.to_string()));
+        let spec =
+            LoadSpec::from_args(&parse("loadgen --app gaussian --tiny --fast --seed 9")).unwrap();
+        assert_eq!(spec.seed, 9, "--seed names the schedule seed");
+        assert_eq!(spec.base.seed, None, "the point-seed axis belongs to the plan");
+        assert_eq!(spec.requests, 64);
+        assert_eq!(spec.conns, 4);
+        assert!(LoadSpec::from_args(&parse("loadgen")).is_err(), "--app is required");
+    }
+}

@@ -1,26 +1,57 @@
-//! `cascade serve` — a concurrent compile/encode daemon over the
-//! explore artifact store.
+//! `cascade serve` — a production compile/encode daemon over the
+//! explore artifact store: keep-alive pipelined connections, optional
+//! shared-secret auth, and a hash-routing front mode for coordination-free
+//! multi-node scale-out.
 //!
-//! The batch flow (`cascade explore`, `cascade encode`) pays a full
-//! process start, context build and cache open per invocation. This
-//! subsystem keeps all of that warm in one long-running process: a
-//! `TcpListener` accepts newline-delimited-JSON requests ([`proto`]),
-//! a bounded queue hands connections to a worker thread pool ([`pool`]),
-//! and every `compile`/`encode` request resolves through the same
-//! [`SessionCore`] — in-memory in-flight deduplication, the persistent
-//! metrics cache, and the fingerprint-verified artifact store — so N
-//! clients requesting the same effective point trigger exactly one
-//! compile, and everyone else gets a warm answer. Responses carry the
-//! point's effective cache key, the cache-hit provenance
+//! In **local mode** a `TcpListener` accepts newline-delimited-JSON
+//! requests ([`proto`]), a bounded queue hands connections to a worker
+//! thread pool ([`pool`]), and every `compile`/`encode` request resolves
+//! through the same [`SessionCore`] — in-memory in-flight deduplication,
+//! the persistent metrics cache, and the fingerprint-verified artifact
+//! store — so N clients requesting the same effective point trigger
+//! exactly one compile, and everyone else gets a warm answer. Responses
+//! carry the point's effective cache key, the cache-hit provenance
 //! (`fresh|warm_mem|warm_art|warm_rec`) and per-request timing.
 //!
-//! Resource bounds are explicit: the request queue is bounded (an
+//! **Pipelining (protocol v2).** Connections are keep-alive: a client may
+//! write any number of request lines without waiting, and responses come
+//! back strictly in request order. Per connection, a reader thread
+//! read-aheads lines into a bounded queue (`--pipeline` deep) that the
+//! connection's worker drains in order; when the queue is full the reader
+//! stops reading the socket, the kernel receive buffer fills, and the
+//! sender stalls — TCP back-pressure bounds in-flight work end to end.
+//! Each request is charged its *own* dequeue-to-dispatch wait as
+//! `queue_ms` (plus, for a connection's first request, its accept-queue
+//! time), so the `queue_ms`/`exec_ms` split stays honest under
+//! pipelining.
+//!
+//! **Routing.** `--route addr1,addr2,...` starts the daemon as a *front*
+//! ([`route`]): no local compiler, no local cache. `compile`/`encode`
+//! requests are hash-routed to the backend that owns the point's
+//! effective cache key under the exact N-way partition `cascade explore
+//! --shard` uses ([`crate::explore::shard::owner_of`]) — each backend's
+//! cache holds a disjoint key range and dedup still collapses concurrent
+//! identical requests, with zero coordination between nodes. `stat` and
+//! `metrics` fan out and aggregate, `ping` probes every backend, and an
+//! unreachable backend yields a structured `backend_down` error after one
+//! built-in retry. Routing is transparent: a routed `compile`/`encode`
+//! response is byte-identical to a direct single-daemon response apart
+//! from the front-measured timing members.
+//!
+//! **Auth.** `--auth-token T` requires every request to carry a matching
+//! `"auth"` member (checked in constant time, [`proto::ct_eq`]); binding
+//! a non-loopback address *requires* a token — the protocol is plaintext
+//! and an open compile daemon is free compute for anyone who can reach
+//! it. The front attaches its own token when dialing backends.
+//!
+//! Resource bounds are explicit: the connection queue is bounded (an
 //! overloaded daemon answers `busy` in O(1) instead of queueing
-//! unboundedly), the in-memory artifact cache is ephemeral (artifacts
-//! live in RAM only while a compile is in flight; the disk store is the
-//! durable layer), and a housekeeping thread periodically runs the
-//! artifact-store GC under `--cache-cap` — pinned Pareto/knee survivors
-//! are never evicted — and drops idle non-base compile contexts.
+//! unboundedly), the per-connection pipeline is bounded, the in-memory
+//! artifact cache is ephemeral (artifacts live in RAM only while a
+//! compile is in flight; the disk store is the durable layer), and a
+//! housekeeping thread periodically runs the artifact-store GC under
+//! `--cache-cap` — pinned Pareto/knee survivors are never evicted — and
+//! drops idle non-base compile contexts.
 //!
 //! Shutdown is graceful: a `shutdown` request stops the acceptor,
 //! already-queued connections drain, in-flight requests complete and are
@@ -33,7 +64,8 @@
 //! text, compile/encode responses split `ms` into `queue_ms` + `exec_ms`,
 //! and a size-bounded JSONL request log (`--log`, `--log-cap`) records
 //! one structured line per request plus `start`/`gc`/`drain` lifecycle
-//! events.
+//! events. `cascade loadgen` ([`loadgen`]) drives a daemon with a
+//! deterministic open-loop schedule and reports p50/p99/p999.
 //!
 //! ```no_run
 //! use cascade::pipeline::CompileCtx;
@@ -47,12 +79,17 @@
 //! server.run(&ctx).expect("serve"); // returns after a `shutdown` request
 //! ```
 //!
-//! Drive it without external tooling via the [`client`] subcommand:
-//! `cascade client compile --addr HOST:PORT --app gaussian --tiny --fast`.
+//! Drive it programmatically through the keep-alive [`Client`], or from
+//! the shell via the [`client`] subcommand: `cascade client compile
+//! --addr HOST:PORT --app gaussian --tiny --fast`.
 
 pub mod client;
+pub mod loadgen;
 pub mod pool;
 pub mod proto;
+pub mod route;
+
+pub use client::{Client, ClientOpts};
 
 use std::io::{Read, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
@@ -71,16 +108,22 @@ use crate::util::json::Json;
 use pool::Bounded;
 use proto::{
     key_hex, metrics_json, response_error, response_ok, ErrorCode, Request, MAX_REQUEST_LINE,
+    PROTO_VERSION,
 };
 
-/// How long a worker's socket read blocks before it re-checks the
-/// shutdown flag — the bound on how long an *idle* connection can delay
-/// a drain (in-flight requests always complete regardless).
+/// How long a reader's socket read blocks before it re-checks the
+/// shutdown and connection-done flags — the bound on how long an *idle*
+/// connection can delay a drain (in-flight requests always complete
+/// regardless).
 const READ_POLL: Duration = Duration::from_millis(500);
 
 /// Per-connection write timeout: a client that stops reading its own
 /// responses forfeits the connection rather than wedging a worker.
 const WRITE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Socket-operation timeout the front uses when talking to a backend
+/// (same budget the [`ClientOpts`] default gives a slow full compile).
+const BACKEND_TIMEOUT: Duration = Duration::from_secs(600);
 
 /// Where the JSONL request log goes (`--log`).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -97,13 +140,24 @@ pub enum LogTarget {
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Bind address, `HOST:PORT` (`:0` picks an ephemeral port —
-    /// [`Server::addr`] reports the real one).
+    /// [`Server::addr`] reports the real one). Non-loopback binds
+    /// require [`ServeConfig::auth_token`].
     pub addr: String,
     /// Worker threads — the compile concurrency bound.
     pub workers: usize,
     /// Pending-connection queue bound; the acceptor answers `busy`
     /// beyond it.
     pub queue_cap: usize,
+    /// Per-connection in-flight pipelining bound: how many request lines
+    /// the reader may read ahead of the executor before socket reads
+    /// stop (TCP back-pressure).
+    pub pipeline: usize,
+    /// Shared-secret auth: when set, every request must carry a matching
+    /// `"auth"` member or is refused `unauthorized`.
+    pub auth_token: Option<String>,
+    /// Backend addresses (`--route a,b,c`): non-empty turns this daemon
+    /// into a hash-routing front with no local compiler or cache.
+    pub route: Vec<String>,
     /// The `explore_cache/` directory to serve from (shared with
     /// `cascade explore` / `encode` / `cache`).
     pub cache_dir: PathBuf,
@@ -121,13 +175,17 @@ pub struct ServeConfig {
 
 impl ServeConfig {
     /// Defaults: workers = available parallelism (capped at 8), queue =
-    /// 4x workers, the default explore cache, no cap, 60 s housekeeping.
+    /// 4x workers, pipeline 4, no auth, no routing, the default explore
+    /// cache, no cap, 60 s housekeeping.
     pub fn new(addr: impl Into<String>) -> ServeConfig {
         let workers = std::thread::available_parallelism().map(|n| n.get().min(8)).unwrap_or(1);
         ServeConfig {
             addr: addr.into(),
             workers,
             queue_cap: workers * 4,
+            pipeline: 4,
+            auth_token: None,
+            route: Vec::new(),
             cache_dir: DiskCache::default_dir(),
             cache_cap: None,
             gc_every: Duration::from_secs(60),
@@ -137,8 +195,9 @@ impl ServeConfig {
     }
 
     /// Parse `cascade serve --addr HOST:PORT [--workers N] [--queue N]
-    /// [--cache-dir D] [--cache-cap CAP] [--gc-every SECS]
-    /// [--log PATH|none] [--log-cap CAP]`.
+    /// [--pipeline N] [--auth-token T] [--route A,B,...] [--cache-dir D]
+    /// [--cache-cap CAP] [--gc-every SECS] [--log PATH|none]
+    /// [--log-cap CAP]`.
     pub fn from_args(args: &Args) -> Result<ServeConfig, String> {
         let mut cfg = ServeConfig::new(args.opt_or("addr", "127.0.0.1:7878"));
         let pos_usize = |name: &str, dflt: usize| -> Result<usize, String> {
@@ -153,6 +212,19 @@ impl ServeConfig {
         };
         cfg.workers = pos_usize("workers", cfg.workers)?;
         cfg.queue_cap = pos_usize("queue", cfg.workers * 4)?;
+        cfg.pipeline = pos_usize("pipeline", cfg.pipeline)?;
+        cfg.auth_token = args.opt("auth-token").map(str::to_string);
+        if let Some(list) = args.opt("route") {
+            cfg.route = list
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect();
+            if cfg.route.is_empty() {
+                return Err(format!("bad --route '{list}' (comma-separated backend addresses)"));
+            }
+        }
         if let Some(d) = args.opt("cache-dir") {
             cfg.cache_dir = PathBuf::from(d);
         }
@@ -190,6 +262,12 @@ impl Server {
         let addr = listener
             .local_addr()
             .map_err(|e| format!("serve: cannot resolve local addr: {e}"))?;
+        if !addr.ip().is_loopback() && cfg.auth_token.is_none() {
+            return Err(format!(
+                "serve: refusing to bind non-loopback {addr} without --auth-token (the \
+                 protocol is plaintext; a shared secret is the minimum bar for an open port)"
+            ));
+        }
         Ok(Server { listener, cfg, addr })
     }
 
@@ -201,7 +279,14 @@ impl Server {
     /// Serve requests until a `shutdown` request, then drain gracefully:
     /// stop accepting, finish queued connections and in-flight requests,
     /// run the final GC (journal compaction included), and return.
+    ///
+    /// With a non-empty [`ServeConfig::route`] this delegates to
+    /// [`Server::run_front`] — `ctx` is not touched (front daemons never
+    /// compile); `cascade serve` skips building it entirely.
     pub fn run(&self, ctx: &CompileCtx) -> Result<(), String> {
+        if !self.cfg.route.is_empty() {
+            return self.run_front();
+        }
         let disk = DiskCache::at(&self.cfg.cache_dir);
         // Key-addressed `encode` loads go through side handles so the
         // shared session's cache statistics stay a pure account of the
@@ -214,6 +299,102 @@ impl Server {
         let reg = Arc::new(Registry::new());
         let mut core = SessionCore::ephemeral(ctx, Some(&disk));
         core.set_obs(reg.clone());
+        let engine = Engine::Local(LocalEngine {
+            core,
+            disk: &disk,
+            aux,
+            prov: std::array::from_fn(|_| AtomicUsize::new(0)),
+        });
+        let state = self.make_state(engine, reg);
+        println!(
+            "serve: listening on {} ({} worker(s), queue {}, pipeline {}, cache {})",
+            self.addr,
+            self.cfg.workers,
+            self.cfg.queue_cap,
+            self.cfg.pipeline,
+            self.cfg.cache_dir.display()
+        );
+        self.announce(&state, "local");
+        self.serve_loop(&state);
+
+        let Engine::Local(local) = &state.engine else { unreachable!() };
+        if let Some(cap) = &self.cfg.cache_cap {
+            let r = disk.artifacts().gc(cap);
+            println!("serve: final gc: {}", r.summary());
+            state.log_gc(&r);
+        }
+        let stats = local.core.stats();
+        println!(
+            "serve: drained after {} request(s) ({} fresh compile(s), {} busy rejection(s), \
+             {} error(s))",
+            state.requests.load(Ordering::SeqCst),
+            stats.misses,
+            state.busy.load(Ordering::SeqCst),
+            state.errors.load(Ordering::SeqCst)
+        );
+        println!("{}", disk.stat_string());
+        let mut drain = Json::obj();
+        drain
+            .set("ts", now_ms())
+            .set("event", "drain")
+            .set("requests", state.requests.load(Ordering::SeqCst))
+            .set("fresh_compiles", stats.misses)
+            .set("busy_rejections", state.busy.load(Ordering::SeqCst))
+            .set("errors", state.errors.load(Ordering::SeqCst));
+        state.log_event(&drain);
+        Ok(())
+    }
+
+    /// Serve as a hash-routing front: no compiler, no cache — every
+    /// `compile`/`encode` forwards to the backend owning the request's
+    /// effective key, `stat`/`metrics`/`ping` aggregate the topology.
+    /// Fails fast if a *reachable* backend speaks the wrong protocol
+    /// version or refuses the handshake; unreachable backends only warn
+    /// (they may come up later; requests meanwhile get `backend_down`).
+    pub fn run_front(&self) -> Result<(), String> {
+        let reg = Arc::new(Registry::new());
+        let front = route::FrontEngine::new(
+            &self.cfg.route,
+            self.cfg.auth_token.clone(),
+            BACKEND_TIMEOUT,
+        )?;
+        let state = self.make_state(Engine::Front(front), reg);
+        println!(
+            "serve: front on {} ({} worker(s), queue {}, pipeline {}) routing to {} backend(s): \
+             {}",
+            self.addr,
+            self.cfg.workers,
+            self.cfg.queue_cap,
+            self.cfg.pipeline,
+            self.cfg.route.len(),
+            self.cfg.route.join(", ")
+        );
+        self.announce(&state, "front");
+        self.serve_loop(&state);
+
+        let Engine::Front(front) = &state.engine else { unreachable!() };
+        let routed = front.drain_summary();
+        println!(
+            "serve: front drained after {} request(s) ({} busy rejection(s), {} error(s)); \
+             forwarded: {routed}",
+            state.requests.load(Ordering::SeqCst),
+            state.busy.load(Ordering::SeqCst),
+            state.errors.load(Ordering::SeqCst)
+        );
+        let mut drain = Json::obj();
+        drain
+            .set("ts", now_ms())
+            .set("event", "drain")
+            .set("requests", state.requests.load(Ordering::SeqCst))
+            .set("busy_rejections", state.busy.load(Ordering::SeqCst))
+            .set("errors", state.errors.load(Ordering::SeqCst))
+            .set("routed", routed);
+        state.log_event(&drain);
+        Ok(())
+    }
+
+    /// Assemble the shared per-run state around an engine.
+    fn make_state<'a>(&'a self, engine: Engine<'a>, reg: Arc<Registry>) -> ServeState<'a> {
         let reqlog = match &self.cfg.log {
             LogTarget::Disabled => None,
             LogTarget::Default => Some(RequestLog::open(
@@ -222,31 +403,23 @@ impl Server {
             )),
             LogTarget::Path(p) => Some(RequestLog::open(p, self.cfg.log_cap)),
         };
-        let state = ServeState {
+        ServeState {
             cfg: &self.cfg,
             addr: self.addr,
-            core,
-            disk: &disk,
-            aux,
+            engine,
             reg,
             reqlog,
             shutdown: AtomicBool::new(false),
             requests: AtomicUsize::new(0),
             errors: AtomicUsize::new(0),
             busy: AtomicUsize::new(0),
-            prov: std::array::from_fn(|_| AtomicUsize::new(0)),
             hk_mx: Mutex::new(()),
             hk_cv: Condvar::new(),
-        };
-        let queue: Bounded<Job> = Bounded::new(self.cfg.queue_cap);
+        }
+    }
 
-        println!(
-            "serve: listening on {} ({} worker(s), queue {}, cache {})",
-            self.addr,
-            self.cfg.workers,
-            self.cfg.queue_cap,
-            self.cfg.cache_dir.display()
-        );
+    /// Print the request-log location and append the `start` event.
+    fn announce(&self, state: &ServeState<'_>, role: &str) {
         if let Some(log) = &state.reqlog {
             println!("serve: request log: {}", log.path().display());
         }
@@ -254,11 +427,18 @@ impl Server {
         start
             .set("ts", now_ms())
             .set("event", "start")
+            .set("role", role)
             .set("addr", self.addr.to_string())
             .set("workers", self.cfg.workers)
-            .set("queue_cap", self.cfg.queue_cap);
+            .set("queue_cap", self.cfg.queue_cap)
+            .set("pipeline", self.cfg.pipeline);
         state.log_event(&start);
+    }
 
+    /// The accept/worker/housekeeping loop both flavors share; returns
+    /// once the drain completes and every thread has joined.
+    fn serve_loop(&self, state: &ServeState<'_>) {
+        let queue: Bounded<Job> = Bounded::new(self.cfg.queue_cap);
         // Rejected connections are answered off the accept path: the
         // acceptor's only duty on overflow is an O(1) hand-off (or an
         // O(1) drop when even the rejector is saturated), so a busy storm
@@ -278,7 +458,7 @@ impl Server {
                                 "connection queue wait before a worker picks it up",
                             )
                             .observe_duration(waited);
-                        handle_conn(&state, job.stream, waited);
+                        handle_conn(state, job.stream, waited);
                     }
                 });
             }
@@ -289,7 +469,7 @@ impl Server {
                     write_final(&conn, &busy, Duration::from_millis(250));
                 }
             });
-            s.spawn(|| housekeeping(&state));
+            s.spawn(|| housekeeping(state));
 
             for conn in self.listener.incoming() {
                 if state.shutdown.load(Ordering::SeqCst) {
@@ -313,51 +493,29 @@ impl Server {
             queue.close();
             rejects.close();
         });
-
-        if let Some(cap) = &self.cfg.cache_cap {
-            let r = disk.artifacts().gc(cap);
-            println!("serve: final gc: {}", r.summary());
-            state.log_gc(&r);
-        }
-        let stats = state.core.stats();
-        println!(
-            "serve: drained after {} request(s) ({} fresh compile(s), {} busy rejection(s), \
-             {} error(s))",
-            state.requests.load(Ordering::SeqCst),
-            stats.misses,
-            state.busy.load(Ordering::SeqCst),
-            state.errors.load(Ordering::SeqCst)
-        );
-        println!("{}", disk.stat_string());
-        let mut drain = Json::obj();
-        drain
-            .set("ts", now_ms())
-            .set("event", "drain")
-            .set("requests", state.requests.load(Ordering::SeqCst))
-            .set("fresh_compiles", stats.misses)
-            .set("busy_rejections", state.busy.load(Ordering::SeqCst))
-            .set("errors", state.errors.load(Ordering::SeqCst));
-        state.log_event(&drain);
-        Ok(())
     }
 }
 
-/// A connection waiting for a worker, stamped at accept time so the
-/// first request on it reports its real queue wait as `queue_ms`.
+/// A connection waiting for a worker, stamped at accept time so its
+/// first request reports the real accept-queue wait in `queue_ms`.
 struct Job {
     stream: TcpStream,
     queued_at: Instant,
 }
 
+/// How requests are answered: locally through the session core, or
+/// forwarded to the owning backend.
+enum Engine<'a> {
+    Local(LocalEngine<'a>),
+    Front(route::FrontEngine),
+}
+
 /// Shared server state, borrowed by every worker for the scope of
-/// [`Server::run`].
+/// [`Server::run`] / [`Server::run_front`].
 struct ServeState<'a> {
     cfg: &'a ServeConfig,
     addr: SocketAddr,
-    core: SessionCore<'a>,
-    disk: &'a DiskCache,
-    /// Side cache handles for key-addressed loads (see [`Server::run`]).
-    aux: DiskCache,
+    engine: Engine<'a>,
     /// Per-daemon metrics registry; rendered by the `metrics` op.
     reg: Arc<Registry>,
     /// Structured JSONL request/event log (`None` under `--log none`).
@@ -366,29 +524,11 @@ struct ServeState<'a> {
     requests: AtomicUsize,
     errors: AtomicUsize,
     busy: AtomicUsize,
-    /// Responses by provenance: fresh, warm_mem, warm_art, warm_rec.
-    prov: [AtomicUsize; 4],
     hk_mx: Mutex<()>,
     hk_cv: Condvar,
 }
 
 impl ServeState<'_> {
-    fn count_prov(&self, p: Provenance) {
-        let i = match p {
-            Provenance::Fresh => 0,
-            Provenance::WarmMem => 1,
-            Provenance::WarmArt => 2,
-            Provenance::WarmRec => 3,
-        };
-        self.prov[i].fetch_add(1, Ordering::SeqCst);
-        self.reg
-            .counter(
-                &labeled("serve_provenance_total", "provenance", p.tag()),
-                "compile/encode responses by cache provenance",
-            )
-            .inc();
-    }
-
     /// Append one structured record to the request log (no-op when the
     /// log is disabled).
     fn log_event(&self, rec: &Json) {
@@ -420,7 +560,9 @@ impl ServeState<'_> {
     /// included, as op `invalid`): count and time the request, split
     /// successful compile/encode timing into `queue_ms` + `exec_ms`
     /// (`ms` stays their sum for wire compatibility), and append the
-    /// request-log record.
+    /// request-log record. On a routed front the timing members replace
+    /// whatever the backend measured — the client sees end-to-end time
+    /// at the daemon it actually talked to.
     fn finish_request(&self, op: &str, mut resp: Json, queued: Duration, exec: Duration) -> Json {
         self.reg
             .counter(
@@ -491,68 +633,119 @@ impl ServeState<'_> {
         );
     }
 
-    /// Dispatch one parsed request. The bool asks the connection handler
-    /// to trigger the drain after responding.
+    /// Dispatch one parsed request through the engine. The bool asks the
+    /// connection handler to trigger the drain after responding;
+    /// `shutdown` is engine-agnostic (a front drains itself, never its
+    /// backends — stopping a shared backend because one front was asked
+    /// to stop would be a topology-wide surprise).
     fn handle_request(&self, req: Request) -> (Json, bool) {
+        if matches!(req, Request::Shutdown) {
+            return (response_ok("shutdown"), true);
+        }
+        let resp = match &self.engine {
+            Engine::Local(e) => e.handle(self, req),
+            Engine::Front(e) => e.handle(self, req),
+        };
+        (resp, false)
+    }
+}
+
+/// The local serving engine: the shared compile session and cache
+/// handles behind every non-routed daemon.
+struct LocalEngine<'a> {
+    core: SessionCore<'a>,
+    disk: &'a DiskCache,
+    /// Side cache handles for key-addressed loads (see [`Server::run`]).
+    aux: DiskCache,
+    /// Responses by provenance: fresh, warm_mem, warm_art, warm_rec.
+    prov: [AtomicUsize; 4],
+}
+
+impl LocalEngine<'_> {
+    fn handle(&self, st: &ServeState<'_>, req: Request) -> Json {
         match req {
-            Request::Ping => (response_ok("ping"), false),
-            Request::Shutdown => (response_ok("shutdown"), true),
-            Request::Stat => (self.stat_response(), false),
-            Request::Metrics => (self.metrics_response(), false),
-            Request::Compile(q) => (self.compile_response(&q), false),
-            Request::Encode { key: Some(key), .. } => (self.encode_stored(key), false),
-            Request::Encode { key: None, query: Some(q) } => (self.encode_point(&q), false),
+            Request::Ping => {
+                let mut j = response_ok("ping");
+                j.set("proto", PROTO_VERSION);
+                j
+            }
+            // Handled engine-agnostically by [`ServeState::handle_request`].
+            Request::Shutdown => response_ok("shutdown"),
+            Request::Stat => self.stat_response(st),
+            Request::Metrics => self.metrics_response(st),
+            Request::Compile(q) => self.compile_response(st, &q),
+            Request::Encode { key: Some(key), .. } => self.encode_stored(st, key),
+            Request::Encode { key: None, query: Some(q) } => self.encode_point(st, &q),
             Request::Encode { key: None, query: None } => {
-                (response_error(ErrorCode::BadRequest, "encode: need \"key\" or \"app\""), false)
+                response_error(ErrorCode::BadRequest, "encode: need \"key\" or \"app\"")
             }
         }
     }
 
+    fn count_prov(&self, st: &ServeState<'_>, p: Provenance) {
+        let i = match p {
+            Provenance::Fresh => 0,
+            Provenance::WarmMem => 1,
+            Provenance::WarmArt => 2,
+            Provenance::WarmRec => 3,
+        };
+        self.prov[i].fetch_add(1, Ordering::SeqCst);
+        st.reg
+            .counter(
+                &labeled("serve_provenance_total", "provenance", p.tag()),
+                "compile/encode responses by cache provenance",
+            )
+            .inc();
+    }
+
     /// `stat`: the shared cache formatter plus server-lifetime counters.
-    fn stat_response(&self) -> Json {
+    fn stat_response(&self, st: &ServeState<'_>) -> Json {
         let s = self.core.stats();
         let mut srv = Json::obj();
-        srv.set("requests", self.requests.load(Ordering::SeqCst))
-            .set("busy_rejections", self.busy.load(Ordering::SeqCst))
-            .set("errors", self.errors.load(Ordering::SeqCst))
+        srv.set("requests", st.requests.load(Ordering::SeqCst))
+            .set("busy_rejections", st.busy.load(Ordering::SeqCst))
+            .set("errors", st.errors.load(Ordering::SeqCst))
             .set("fresh_compiles", s.misses)
             .set("memory_hits", s.memory_hits)
             .set("disk_hits", s.disk_hits)
             .set("art_hits", s.art_hits)
             .set("ctx_builds", s.ctx_builds)
-            .set("workers", self.cfg.workers)
-            .set("queue_cap", self.cfg.queue_cap);
+            .set("workers", st.cfg.workers)
+            .set("queue_cap", st.cfg.queue_cap)
+            .set("pipeline", st.cfg.pipeline);
         let mut prov = Json::obj();
         for (i, name) in ["fresh", "warm_mem", "warm_art", "warm_rec"].into_iter().enumerate() {
             prov.set(name, self.prov[i].load(Ordering::SeqCst));
         }
         srv.set("provenance", prov);
         let mut j = response_ok("stat");
-        j.set("cache", self.disk.stat_json()).set("server", srv);
+        j.set("proto", PROTO_VERSION)
+            .set("cache", self.disk.stat_json())
+            .set("server", srv);
         j
     }
 
     /// `metrics`: publish scrape-time cache gauges into the registry,
     /// then render the deterministic text exposition (the response's
     /// `exposition` member; `cascade client metrics` prints it raw).
-    fn metrics_response(&self) -> Json {
-        self.core.publish_metrics(&self.reg);
-        self.disk.publish_metrics(&self.reg);
+    fn metrics_response(&self, st: &ServeState<'_>) -> Json {
+        self.core.publish_metrics(&st.reg);
+        self.disk.publish_metrics(&st.reg);
         let mut j = response_ok("metrics");
-        j.set("exposition", self.reg.expose());
+        j.set("exposition", st.reg.expose());
         j
     }
 
     /// `compile`: resolve the point, evaluate through the shared session
     /// (dedup + caches), answer with key, provenance, metrics (timing is
     /// stamped by [`ServeState::finish_request`]).
-    fn compile_response(&self, q: &proto::PointQuery) -> Json {
+    fn compile_response(&self, st: &ServeState<'_>, q: &proto::PointQuery) -> Json {
         let (spec, point) = match q.resolve() {
             Ok(sp) => sp,
             Err(e) => return response_error(ErrorCode::BadRequest, &e),
         };
         let (r, prov, key) = self.core.evaluate_with(&spec, &point);
-        self.count_prov(prov);
+        self.count_prov(st, prov);
         match r.metrics {
             Ok(m) => {
                 let mut j = response_ok("compile");
@@ -571,15 +764,15 @@ impl ServeState<'_> {
 
     /// `encode` by point query: same dedup slot as `compile`, so a
     /// concurrent compile of the same key is reused, never repeated.
-    fn encode_point(&self, q: &proto::PointQuery) -> Json {
+    fn encode_point(&self, st: &ServeState<'_>, q: &proto::PointQuery) -> Json {
         let (spec, point) = match q.resolve() {
             Ok(sp) => sp,
             Err(e) => return response_error(ErrorCode::BadRequest, &e),
         };
         let (key, res, prov) = self.core.compiled_with(&spec, &point);
-        self.count_prov(prov);
+        self.count_prov(st, prov);
         match res {
-            Ok(c) => self.encode_response(key, prov, &c),
+            Ok(c) => self.encode_response(st, key, prov, &c),
             Err(e) => {
                 let mut j = response_error(ErrorCode::CompileFailed, &e);
                 j.set("key", key_hex(key));
@@ -591,12 +784,12 @@ impl ServeState<'_> {
     /// `encode` by stored key: a pure artifact-store load (verified
     /// against the metrics record's fingerprint when one exists) — the
     /// daemon twin of `cascade encode --key HEX`, never compiles.
-    fn encode_stored(&self, key: u64) -> Json {
+    fn encode_stored(&self, st: &ServeState<'_>, key: u64) -> Json {
         let expect = self.aux.load(key).map(|m| m.artifact_fp);
         match self.aux.artifacts().load(key, expect) {
             Some(c) => {
-                self.count_prov(Provenance::WarmArt);
-                self.encode_response(key, Provenance::WarmArt, &c)
+                self.count_prov(st, Provenance::WarmArt);
+                self.encode_response(st, key, Provenance::WarmArt, &c)
             }
             None => {
                 let msg = format!(
@@ -614,10 +807,16 @@ impl ServeState<'_> {
     /// exactly [`crate::arch::bitstream::Bitstream::to_text`], so a
     /// client writing the `bitstream` member to a file gets bytes
     /// identical to offline `cascade encode`.
-    fn encode_response(&self, key: u64, prov: Provenance, c: &crate::pipeline::Compiled) -> Json {
+    fn encode_response(
+        &self,
+        st: &ServeState<'_>,
+        key: u64,
+        prov: Provenance,
+        c: &crate::pipeline::Compiled,
+    ) -> Json {
         let t0 = Instant::now();
         let bs = crate::sim::encode::encode_compiled(c);
-        self.reg
+        st.reg
             .histogram("encode_seconds", crate::obs::help::ENCODE)
             .observe_duration(t0.elapsed());
         let mut j = response_ok("encode");
@@ -683,6 +882,15 @@ fn shutting_down() -> Json {
     response_error(ErrorCode::ShuttingDown, "daemon is draining")
 }
 
+/// Parse one request line under the daemon's auth policy: JSON first,
+/// then the auth check, then op decoding — an unauthorized caller learns
+/// nothing about which ops exist or what their schema is.
+fn parse_authed(line: &str, token: Option<&str>) -> Result<Request, (ErrorCode, String)> {
+    let j = Json::parse(line.trim()).map_err(|e| (ErrorCode::BadRequest, e))?;
+    proto::check_auth(&j, token)?;
+    Request::from_json(&j)
+}
+
 /// What [`LineReader::next`] found.
 enum NextLine {
     /// One complete request line (newline stripped; possibly invalid
@@ -696,14 +904,17 @@ enum NextLine {
     TooLong,
     /// The daemon began draining while the connection was idle.
     Shutdown,
+    /// The connection's executor finished (wrote a terminal response or
+    /// hit a write error) while the reader was idle — stop reading.
+    Closed,
     /// Unrecoverable I/O error.
     Failed,
 }
 
 /// Incremental bounded line reader. Socket reads run under [`READ_POLL`]
-/// timeouts so an idle connection re-checks the shutdown flag; partial
-/// data survives across timeouts (a slow writer is not corrupted by the
-/// poll).
+/// timeouts so an idle connection re-checks the shutdown and
+/// connection-done flags; partial data survives across timeouts (a slow
+/// writer is not corrupted by the poll).
 struct LineReader<R: Read> {
     inner: R,
     buf: Vec<u8>,
@@ -714,7 +925,7 @@ impl<R: Read> LineReader<R> {
         LineReader { inner, buf: Vec::new() }
     }
 
-    fn next(&mut self, shutdown: &AtomicBool) -> NextLine {
+    fn next(&mut self, shutdown: &AtomicBool, done: &AtomicBool) -> NextLine {
         loop {
             if let Some(i) = self.buf.iter().position(|&b| b == b'\n') {
                 // `i` is the line length; a terminated-but-over-bound
@@ -736,6 +947,9 @@ impl<R: Read> LineReader<R> {
                 Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
                 Err(e) => match e.kind() {
                     std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                        if done.load(Ordering::SeqCst) {
+                            return NextLine::Closed;
+                        }
                         if shutdown.load(Ordering::SeqCst) {
                             return NextLine::Shutdown;
                         }
@@ -748,82 +962,152 @@ impl<R: Read> LineReader<R> {
     }
 }
 
-/// Serve one connection: request lines in, response lines out, until
-/// EOF, a fatal framing defect, or the drain. Malformed requests get a
-/// structured error and the connection *stays open*. `queue_wait` is the
-/// connection's time in the accept queue; it is charged to the first
-/// request (later requests on the connection waited in no queue).
-fn handle_conn(state: &ServeState<'_>, stream: TcpStream, mut queue_wait: Duration) {
+/// One unit of per-connection work, in strict arrival order.
+enum Pending {
+    /// A request line, stamped when the reader finished reading it — the
+    /// executor charges `dequeue - stamp` to the request as its queue
+    /// wait (a stalled blocking push counts: the time *was* spent
+    /// waiting on this daemon).
+    Req { line: String, enqueued_at: Instant },
+    /// A terminal response (`oversized`, `shutting_down`): write it
+    /// RST-proof and close. It rides the same ordered queue so it can
+    /// never overtake the response to an earlier in-flight request.
+    Terminal(Json),
+}
+
+/// Serve one connection, pipelined: a reader thread read-aheads request
+/// lines into a [`Bounded`] queue (depth `--pipeline`; a full queue
+/// blocks the reader, which is the TCP back-pressure point) while this
+/// worker executes them strictly in order, so responses always match
+/// request order. Malformed requests get a structured error and the
+/// connection *stays open*; oversized lines and the drain produce
+/// terminal responses that close it. `accept_wait` is the connection's
+/// time in the accept queue, charged to its first request on top of that
+/// request's own pipeline wait.
+fn handle_conn(state: &ServeState<'_>, stream: TcpStream, mut accept_wait: Duration) {
     let _ = stream.set_read_timeout(Some(READ_POLL));
     let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
-    let mut reader = LineReader::new(&stream);
-    let mut served_any = false;
-    loop {
-        match reader.next(&state.shutdown) {
-            NextLine::Line(line) => {
-                if line.trim().is_empty() {
-                    continue;
-                }
-                if served_any && state.shutdown.load(Ordering::SeqCst) {
-                    // Drain contract: a connection popped from the queue
-                    // still gets its first pending request served, but a
-                    // draining daemon takes no *further* requests —
-                    // without this check a client that keeps sending
-                    // (faster than the read poll) would hold its worker,
-                    // and the drain, hostage forever.
-                    write_final(&stream, &shutting_down(), Duration::from_secs(2));
-                    return;
-                }
-                served_any = true;
-                state.requests.fetch_add(1, Ordering::SeqCst);
-                let queued = std::mem::take(&mut queue_wait);
-                let t0 = Instant::now();
-                let (op, resp, drain) = match Request::parse_line(&line) {
-                    Ok(req) => {
-                        let op = req.op();
-                        let (resp, drain) = state.handle_request(req);
-                        (op, resp, drain)
+    let pipeline: Bounded<Pending> = Bounded::new(state.cfg.pipeline);
+    let done = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let mut reader = LineReader::new(&stream);
+            loop {
+                match reader.next(&state.shutdown, &done) {
+                    NextLine::Line(line) => {
+                        if line.trim().is_empty() {
+                            continue;
+                        }
+                        let item = Pending::Req { line, enqueued_at: Instant::now() };
+                        if pipeline.push(item).is_err() {
+                            return; // executor closed the queue
+                        }
                     }
-                    Err((code, msg)) => ("invalid", response_error(code, &msg), false),
-                };
-                let resp = state.finish_request(op, resp, queued, t0.elapsed());
-                if resp.get("ok").and_then(Json::as_bool) != Some(true) {
-                    state.errors.fetch_add(1, Ordering::SeqCst);
+                    NextLine::TooLong => {
+                        let msg = format!(
+                            "request line exceeds {MAX_REQUEST_LINE} bytes; closing connection"
+                        );
+                        let resp = response_error(ErrorCode::Oversized, &msg);
+                        let _ = pipeline.push(Pending::Terminal(resp));
+                        pipeline.close();
+                        return;
+                    }
+                    NextLine::Shutdown => {
+                        let _ = pipeline.push(Pending::Terminal(shutting_down()));
+                        pipeline.close();
+                        return;
+                    }
+                    NextLine::Eof | NextLine::Failed | NextLine::Closed => {
+                        pipeline.close();
+                        return;
+                    }
                 }
-                if drain {
-                    // The shutdown ack is this connection's last word and
-                    // the caller's only confirmation the drain began —
-                    // send it RST-proof like every other terminal
-                    // response (pipelined junk after `shutdown` must not
-                    // clobber it).
+            }
+        });
+
+        let mut served_any = false;
+        while let Some(item) = pipeline.pop() {
+            match item {
+                Pending::Req { line, enqueued_at } => {
+                    if served_any && state.shutdown.load(Ordering::SeqCst) {
+                        // Drain contract: a connection popped from the
+                        // queue still gets its first pending request
+                        // served, but a draining daemon takes no
+                        // *further* requests — without this check a
+                        // client that keeps pipelining would hold its
+                        // worker, and the drain, hostage forever.
+                        write_final(&stream, &shutting_down(), Duration::from_secs(2));
+                        break;
+                    }
+                    served_any = true;
+                    state.requests.fetch_add(1, Ordering::SeqCst);
+                    let queued = enqueued_at.elapsed() + std::mem::take(&mut accept_wait);
+                    state
+                        .reg
+                        .histogram(
+                            "serve_request_queue_seconds",
+                            "per-request wait from socket read to dispatch (pipelined \
+                             read-ahead; a connection's first request adds its accept-queue \
+                             time)",
+                        )
+                        .observe_duration(queued);
+                    let t0 = Instant::now();
+                    let auth = state.cfg.auth_token.as_deref();
+                    let (op, resp, drain) = match parse_authed(&line, auth) {
+                        Ok(req) => {
+                            let op = req.op();
+                            let (resp, drain) = state.handle_request(req);
+                            (op, resp, drain)
+                        }
+                        Err((code, msg)) => {
+                            let op = match code {
+                                ErrorCode::Unauthorized => "unauthorized",
+                                _ => "invalid",
+                            };
+                            (op, response_error(code, &msg), false)
+                        }
+                    };
+                    let resp = state.finish_request(op, resp, queued, t0.elapsed());
+                    if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+                        state.errors.fetch_add(1, Ordering::SeqCst);
+                    }
+                    if drain {
+                        // The shutdown ack is this connection's last word
+                        // and the caller's only confirmation the drain
+                        // began — send it RST-proof like every other
+                        // terminal response (pipelined junk after
+                        // `shutdown` must not clobber it).
+                        write_final(&stream, &resp, Duration::from_secs(2));
+                        state.trigger_shutdown();
+                        break;
+                    }
+                    if write_line(&stream, &resp).is_err() {
+                        break;
+                    }
+                }
+                Pending::Terminal(resp) => {
                     write_final(&stream, &resp, Duration::from_secs(2));
-                    state.trigger_shutdown();
-                    return;
-                }
-                if write_line(&stream, &resp).is_err() {
-                    return;
+                    break;
                 }
             }
-            NextLine::TooLong => {
-                let msg =
-                    format!("request line exceeds {MAX_REQUEST_LINE} bytes; closing connection");
-                write_final(&stream, &response_error(ErrorCode::Oversized, &msg), READ_POLL);
-                return;
-            }
-            NextLine::Shutdown => {
-                write_final(&stream, &shutting_down(), Duration::from_secs(2));
-                return;
-            }
-            NextLine::Eof | NextLine::Failed => return,
         }
-    }
+        // Release the reader: it may be parked on a full queue (close
+        // wakes it) or mid-read (the done flag turns the next poll
+        // timeout into `Closed`); drain whatever it already queued.
+        done.store(true, Ordering::SeqCst);
+        pipeline.close();
+        while pipeline.pop().is_some() {}
+    });
 }
 
 /// Periodic GC (cap honoured, pins respected —
 /// [`crate::explore::ArtifactStore::gc`]) plus a trim of idle non-base
 /// compile contexts. Sleeps on a condvar so
-/// [`ServeState::trigger_shutdown`] wakes it immediately.
+/// [`ServeState::trigger_shutdown`] wakes it immediately. A routing
+/// front has no cache or contexts to keep house for — this returns
+/// immediately there.
 fn housekeeping(state: &ServeState<'_>) {
+    let Engine::Local(local) = &state.engine else { return };
     loop {
         let g = state.hk_mx.lock().unwrap();
         if state.shutdown.load(Ordering::SeqCst) {
@@ -836,24 +1120,31 @@ fn housekeeping(state: &ServeState<'_>) {
         }
         if timeout.timed_out() {
             if let Some(cap) = &state.cfg.cache_cap {
-                let r = state.disk.artifacts().gc(cap);
+                let r = local.disk.artifacts().gc(cap);
                 if r.evicted > 0 {
                     println!("serve: gc: {}", r.summary());
                 }
                 state.log_gc(&r);
             }
-            state.core.drop_arch_contexts();
+            local.core.drop_arch_contexts();
         }
     }
 }
 
-/// `cascade serve` entry point: bind, build the compile context, run.
+/// `cascade serve` entry point: bind, then serve. A `--route` front
+/// never compiles, so the (expensive) compile context is only built for
+/// local daemons.
 pub fn serve_cli(args: &Args) -> Result<(), String> {
     let cfg = ServeConfig::from_args(args)?;
+    let front = !cfg.route.is_empty();
     let server = Server::bind(cfg)?;
-    println!("building compile context (32x16 array, timing model)...");
-    let ctx = CompileCtx::paper();
-    server.run(&ctx)
+    if front {
+        server.run_front()
+    } else {
+        println!("building compile context (32x16 array, timing model)...");
+        let ctx = CompileCtx::paper();
+        server.run(&ctx)
+    }
 }
 
 #[cfg(test)]
@@ -866,26 +1157,67 @@ mod tests {
         let quiet = AtomicBool::new(false);
         let input = b"{\"op\":\"ping\"}\nsecond line\n".to_vec();
         let mut r = LineReader::new(std::io::Cursor::new(input));
-        match r.next(&quiet) {
+        match r.next(&quiet, &quiet) {
             NextLine::Line(l) => assert_eq!(l, "{\"op\":\"ping\"}"),
             _ => panic!("expected a line"),
         }
-        match r.next(&quiet) {
+        match r.next(&quiet, &quiet) {
             NextLine::Line(l) => assert_eq!(l, "second line"),
             _ => panic!("expected a line"),
         }
-        assert!(matches!(r.next(&quiet), NextLine::Eof));
+        assert!(matches!(r.next(&quiet, &quiet), NextLine::Eof));
 
         // A newline-free flood beyond the bound is TooLong, not a line.
         let flood = vec![b'x'; MAX_REQUEST_LINE + 2];
         let mut r = LineReader::new(std::io::Cursor::new(flood));
-        assert!(matches!(r.next(&quiet), NextLine::TooLong));
+        assert!(matches!(r.next(&quiet, &quiet), NextLine::TooLong));
 
         // Exactly at the bound, with a terminator, still parses.
         let mut fits = vec![b'y'; MAX_REQUEST_LINE];
         fits.push(b'\n');
         let mut r = LineReader::new(std::io::Cursor::new(fits));
-        assert!(matches!(r.next(&quiet), NextLine::Line(_)));
+        assert!(matches!(r.next(&quiet, &quiet), NextLine::Line(_)));
+    }
+
+    #[test]
+    fn parse_authed_order_is_json_then_auth_then_op() {
+        // Bad JSON beats everything.
+        let (code, _) = parse_authed("not json", Some("t")).unwrap_err();
+        assert_eq!(code, ErrorCode::BadRequest);
+        // Auth beats op decoding: an unauthorized caller cannot probe
+        // the op vocabulary.
+        let (code, _) = parse_authed("{\"op\":\"frobnicate\"}", Some("t")).unwrap_err();
+        assert_eq!(code, ErrorCode::Unauthorized);
+        let (code, _) = parse_authed("{\"op\":\"frobnicate\",\"auth\":\"t\"}", Some("t"))
+            .unwrap_err();
+        assert_eq!(code, ErrorCode::UnknownOp);
+        // With auth satisfied (or no token) requests parse normally.
+        assert_eq!(parse_authed("{\"op\":\"ping\",\"auth\":\"t\"}", Some("t")), Ok(Request::Ping));
+        assert_eq!(parse_authed("{\"op\":\"ping\"}", None), Ok(Request::Ping));
+    }
+
+    #[test]
+    fn config_parses_v2_flags_and_rejects_junk() {
+        let parse = |s: &str| {
+            Args::parse(s.split_whitespace().map(|x| x.to_string()))
+        };
+        let cfg = ServeConfig::from_args(&parse(
+            "serve --addr 127.0.0.1:0 --pipeline 8 --auth-token s3cret \
+             --route 127.0.0.1:7871,127.0.0.1:7872",
+        ))
+        .unwrap();
+        assert_eq!(cfg.pipeline, 8);
+        assert_eq!(cfg.auth_token.as_deref(), Some("s3cret"));
+        assert_eq!(cfg.route, vec!["127.0.0.1:7871".to_string(), "127.0.0.1:7872".to_string()]);
+
+        let cfg = ServeConfig::from_args(&parse("serve")).unwrap();
+        assert_eq!(cfg.pipeline, 4);
+        assert!(cfg.auth_token.is_none());
+        assert!(cfg.route.is_empty());
+
+        assert!(ServeConfig::from_args(&parse("serve --pipeline 0")).is_err());
+        assert!(ServeConfig::from_args(&parse("serve --pipeline x")).is_err());
+        assert!(ServeConfig::from_args(&parse("serve --route ,,")).is_err());
     }
 
     fn test_config(dir: &std::path::Path, workers: usize) -> ServeConfig {
@@ -941,12 +1273,74 @@ mod tests {
             // Same connection, next line: still served.
             let r = roundtrip(&mut conn, "{\"op\":\"ping\"}");
             assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+            assert_eq!(r.get("proto").and_then(Json::as_u64), Some(PROTO_VERSION));
 
             // Unknown op: structured, connection still open.
             let r = roundtrip(&mut conn, "{\"op\":\"warp\"}");
             assert_eq!(r.get("code").and_then(Json::as_str), Some("unknown_op"));
             let r = roundtrip(&mut conn, "{\"op\":\"ping\"}");
             assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+            drop(conn);
+            send_shutdown(addr);
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn auth_daemon_rejects_then_accepts_on_same_connection() {
+        let dir = std::env::temp_dir().join(format!("cascade-serve-auth-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = CompileCtx::paper();
+        let mut cfg = test_config(&dir, 1);
+        cfg.auth_token = Some("s3cret".to_string());
+        let Some(server) = bind_or_skip(cfg) else { return };
+        let addr = server.addr();
+        std::thread::scope(|s| {
+            s.spawn(|| server.run(&ctx).unwrap());
+            let mut conn = TcpStream::connect(addr).unwrap();
+            // Missing auth: structured refusal, connection survives.
+            let r = roundtrip(&mut conn, "{\"op\":\"ping\"}");
+            assert_eq!(r.get("code").and_then(Json::as_str), Some("unauthorized"));
+            // Wrong auth: same.
+            let r = roundtrip(&mut conn, "{\"op\":\"ping\",\"auth\":\"wrong\"}");
+            assert_eq!(r.get("code").and_then(Json::as_str), Some("unauthorized"));
+            // Right auth, same connection: served.
+            let r = roundtrip(&mut conn, "{\"op\":\"ping\",\"auth\":\"s3cret\"}");
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+            // Shutdown needs auth too.
+            let r = roundtrip(&mut conn, "{\"op\":\"shutdown\"}");
+            assert_eq!(r.get("code").and_then(Json::as_str), Some("unauthorized"));
+            let r = roundtrip(&mut conn, "{\"op\":\"shutdown\",\"auth\":\"s3cret\"}");
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pipelined_requests_answer_in_order() {
+        let dir = std::env::temp_dir().join(format!("cascade-serve-pipe-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = CompileCtx::paper();
+        let Some(server) = bind_or_skip(test_config(&dir, 1)) else { return };
+        let addr = server.addr();
+        std::thread::scope(|s| {
+            s.spawn(|| server.run(&ctx).unwrap());
+            let mut conn = TcpStream::connect(addr).unwrap();
+            // Write a burst of distinct requests without reading, then
+            // collect: responses must come back in request order.
+            let burst = "{\"op\":\"ping\"}\n{\"op\":\"stat\"}\n{\"op\":\"ping\"}\n";
+            conn.write_all(burst.as_bytes()).unwrap();
+            let mut reader = std::io::BufReader::new(conn.try_clone().unwrap());
+            let mut ops = Vec::new();
+            for _ in 0..3 {
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let j = Json::parse(line.trim()).unwrap();
+                assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+                ops.push(j.get("op").and_then(Json::as_str).unwrap().to_string());
+            }
+            assert_eq!(ops, ["ping", "stat", "ping"]);
+            drop(reader);
             drop(conn);
             send_shutdown(addr);
         });
@@ -984,6 +1378,7 @@ mod tests {
             let mut conn = TcpStream::connect(addr).unwrap();
             let r = roundtrip(&mut conn, "{\"op\":\"stat\"}");
             assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+            assert_eq!(r.get("proto").and_then(Json::as_u64), Some(PROTO_VERSION));
             let cache = r.get("cache").expect("cache section");
             // Byte-compatible with `cascade cache stat --json` on the
             // same directory: one formatter, two consumers.
@@ -991,6 +1386,7 @@ mod tests {
             assert_eq!(cache, &offline);
             let srv = r.get("server").expect("server section");
             assert_eq!(srv.get("fresh_compiles").and_then(Json::as_u64), Some(0));
+            assert_eq!(srv.get("pipeline").and_then(Json::as_u64), Some(4));
             send_shutdown(addr);
         });
         let _ = std::fs::remove_dir_all(&dir);

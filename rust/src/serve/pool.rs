@@ -1,10 +1,18 @@
 //! Bounded MPMC job queue for the serve worker pool (std-only:
 //! `Mutex` + `Condvar`).
 //!
-//! The queue is the daemon's backpressure point: the acceptor
-//! [`Bounded::try_push`]es each incoming connection and *never blocks* —
-//! when the queue is full the push fails, the acceptor answers `busy`
-//! inline, and memory stays bounded no matter how fast clients connect.
+//! The queue is the daemon's backpressure point, used at two levels:
+//!
+//! * **accept queue** — the acceptor [`Bounded::try_push`]es each
+//!   incoming connection and *never blocks*: when the queue is full the
+//!   push fails, the acceptor answers `busy` inline, and memory stays
+//!   bounded no matter how fast clients connect;
+//! * **per-connection pipeline** — a connection's reader thread
+//!   [`Bounded::push`]es read-ahead request lines and *does* block when
+//!   the in-flight bound is reached, which stops the socket reads, which
+//!   fills the kernel receive buffer, which stalls the sender: TCP
+//!   back-pressure, end to end, with no unbounded buffering anywhere.
+//!
 //! Workers block in [`Bounded::pop`]; [`Bounded::close`] starts the drain:
 //! already-queued jobs are still handed out, then every worker gets
 //! `None` and exits — that is the graceful-shutdown contract.
@@ -22,6 +30,9 @@ pub struct Bounded<T> {
     state: Mutex<State<T>>,
     cap: usize,
     ready: Condvar,
+    /// Signalled when a slot frees (pop) or the queue closes — what
+    /// [`Bounded::push`] blocks on.
+    space: Condvar,
 }
 
 impl<T> Bounded<T> {
@@ -32,6 +43,7 @@ impl<T> Bounded<T> {
             state: Mutex::new(State { items: VecDeque::new(), closed: false }),
             cap: cap.max(1),
             ready: Condvar::new(),
+            space: Condvar::new(),
         }
     }
 
@@ -47,12 +59,33 @@ impl<T> Bounded<T> {
         Ok(())
     }
 
+    /// Enqueue, blocking while the queue is full. Returns the job back
+    /// only when the queue is closed — the producer's signal to stop.
+    /// This is the pipelining back-pressure point: a blocked push is a
+    /// stopped socket read, which the sender eventually feels as TCP
+    /// flow control.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(item);
+            }
+            if st.items.len() < self.cap {
+                st.items.push_back(item);
+                self.ready.notify_one();
+                return Ok(());
+            }
+            st = self.space.wait(st).unwrap();
+        }
+    }
+
     /// Dequeue, blocking while the queue is empty and open. `None` means
     /// closed *and* drained: the worker's signal to exit.
     pub fn pop(&self) -> Option<T> {
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(item) = st.items.pop_front() {
+                self.space.notify_one();
                 return Some(item);
             }
             if st.closed {
@@ -62,12 +95,13 @@ impl<T> Bounded<T> {
         }
     }
 
-    /// Stop admitting jobs and wake every blocked worker. Queued jobs are
-    /// still popped (drain semantics); idempotent.
+    /// Stop admitting jobs and wake every blocked worker and producer.
+    /// Queued jobs are still popped (drain semantics); idempotent.
     pub fn close(&self) {
         let mut st = self.state.lock().unwrap();
         st.closed = true;
         self.ready.notify_all();
+        self.space.notify_all();
     }
 
     /// Pending jobs right now (monitoring only — racy by nature).
@@ -114,6 +148,37 @@ mod tests {
         assert_eq!(q.pop(), Some(7), "queued jobs drain after close");
         assert_eq!(q.pop(), None, "drained + closed = worker exit");
         assert_eq!(q.pop(), None, "idempotent");
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space_and_fails_on_close() {
+        let q = Bounded::new(1);
+        assert!(q.push(1).is_ok());
+        std::thread::scope(|s| {
+            let t = s.spawn(|| q.push(2));
+            // The producer is parked on a full queue; a pop frees the
+            // slot and must wake it.
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            assert_eq!(q.pop(), Some(1));
+            assert!(t.join().unwrap().is_ok());
+        });
+        assert_eq!(q.pop(), Some(2));
+        q.close();
+        assert_eq!(q.push(3), Err(3), "closed queue bounces the blocking push too");
+    }
+
+    #[test]
+    fn close_wakes_blocked_producers() {
+        let q = Bounded::new(1);
+        assert!(q.push(1).is_ok());
+        std::thread::scope(|s| {
+            let t = s.spawn(|| q.push(2));
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            q.close();
+            assert_eq!(t.join().unwrap(), Err(2), "close must release a parked producer");
+        });
+        assert_eq!(q.pop(), Some(1), "queued jobs still drain after close");
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

@@ -11,6 +11,14 @@
 //! trust the stream's framing and closes it (the error response is still
 //! sent first). The full schema is specified in `docs/serve.md`.
 //!
+//! This is protocol **version 2** ([`PROTO_VERSION`], reported on `ping`
+//! and `stat`): connections are keep-alive and pipelined (any number of
+//! request lines may be in flight, answered strictly in order), requests
+//! may carry an `"auth"` shared secret (required when the daemon was
+//! started with `--auth-token`, checked in constant time — [`ct_eq`]),
+//! and a `--route` front daemon adds the `backend_down`/`proto_mismatch`
+//! error codes.
+//!
 //! Request construction and parsing round-trip exactly, so the `cascade
 //! client` subcommand and the daemon share one vocabulary:
 //!
@@ -42,8 +50,17 @@ use crate::util::json::Json;
 /// bitstreams.
 pub const MAX_REQUEST_LINE: usize = 64 * 1024;
 
+/// Protocol version, carried as `"proto"` on `ping` and `stat`
+/// responses. Version 2 added keep-alive pipelining, `auth`, the routed
+/// front-daemon mode and the `unauthorized`/`backend_down`/
+/// `proto_mismatch` error codes. A front daemon refuses to talk to a
+/// backend reporting any other version ([`ErrorCode::ProtoMismatch`]) —
+/// mixed-version topologies would silently disagree on semantics.
+pub const PROTO_VERSION: u64 = 2;
+
 /// Machine-readable failure categories, carried in the `"code"` member
-/// of error responses.
+/// of error responses — the single source of truth for every code the
+/// daemon (or a routing front) can emit; `docs/serve.md` tabulates them.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ErrorCode {
     /// Unparseable JSON, a missing/ill-typed member, or a point that
@@ -65,6 +82,16 @@ pub enum ErrorCode {
     CompileFailed,
     /// The daemon is draining for shutdown and takes no new requests.
     ShuttingDown,
+    /// The daemon requires `--auth-token` and the request's `"auth"`
+    /// member is missing or wrong (compared in constant time).
+    Unauthorized,
+    /// A routing front could not reach the owning backend (connect,
+    /// send or receive failed twice — the retry is built in). The
+    /// message names the backend address.
+    BackendDown,
+    /// A routing front found a backend speaking a different
+    /// [`PROTO_VERSION`]; the front refuses to route to it.
+    ProtoMismatch,
 }
 
 impl ErrorCode {
@@ -77,7 +104,43 @@ impl ErrorCode {
             ErrorCode::NotFound => "not_found",
             ErrorCode::CompileFailed => "compile_failed",
             ErrorCode::ShuttingDown => "shutting_down",
+            ErrorCode::Unauthorized => "unauthorized",
+            ErrorCode::BackendDown => "backend_down",
+            ErrorCode::ProtoMismatch => "proto_mismatch",
         }
+    }
+}
+
+/// Constant-time string equality for the shared-secret comparison: the
+/// run time depends only on the *presented* token's length, never on how
+/// many leading bytes happen to match, so response timing leaks nothing
+/// about the secret's content.
+pub fn ct_eq(secret: &str, presented: &str) -> bool {
+    let a = secret.as_bytes();
+    let b = presented.as_bytes();
+    let mut diff = a.len() ^ b.len();
+    for (i, &pb) in b.iter().enumerate() {
+        // Cycle over the secret so every presented byte costs one
+        // comparison regardless of the secret's length.
+        let sb = if a.is_empty() { 0 } else { a[i % a.len()] };
+        diff |= (sb ^ pb) as usize;
+    }
+    diff == 0
+}
+
+/// Enforce the daemon's shared-secret policy on one request object:
+/// with no configured token everything passes (and any presented
+/// `"auth"` member is simply ignored); with a token, every op must
+/// present a matching `"auth"` string.
+pub fn check_auth(j: &Json, token: Option<&str>) -> Result<(), (ErrorCode, String)> {
+    let Some(tok) = token else { return Ok(()) };
+    match j.get("auth").and_then(Json::as_str) {
+        Some(presented) if ct_eq(tok, presented) => Ok(()),
+        Some(_) => Err((ErrorCode::Unauthorized, "bad auth token".to_string())),
+        None => Err((
+            ErrorCode::Unauthorized,
+            "auth required: this daemon was started with --auth-token".to_string(),
+        )),
     }
 }
 
@@ -573,5 +636,61 @@ mod tests {
         let j = response_error(ErrorCode::Busy, "request queue full");
         let s = j.to_string_compact();
         assert_eq!(s, "{\"code\":\"busy\",\"error\":\"request queue full\",\"ok\":false}");
+    }
+
+    #[test]
+    fn error_code_tags_are_distinct_snake_case() {
+        let all = [
+            ErrorCode::BadRequest,
+            ErrorCode::UnknownOp,
+            ErrorCode::Oversized,
+            ErrorCode::Busy,
+            ErrorCode::NotFound,
+            ErrorCode::CompileFailed,
+            ErrorCode::ShuttingDown,
+            ErrorCode::Unauthorized,
+            ErrorCode::BackendDown,
+            ErrorCode::ProtoMismatch,
+        ];
+        let tags: Vec<&str> = all.iter().map(|c| c.tag()).collect();
+        let unique: std::collections::BTreeSet<&&str> = tags.iter().collect();
+        assert_eq!(unique.len(), tags.len(), "duplicate error-code tag: {tags:?}");
+        for t in &tags {
+            assert!(
+                t.chars().all(|c| c.is_ascii_lowercase() || c == '_'),
+                "tag '{t}' is not snake_case"
+            );
+        }
+    }
+
+    #[test]
+    fn constant_time_compare_agrees_with_equality() {
+        assert!(ct_eq("secret", "secret"));
+        assert!(ct_eq("", ""));
+        assert!(!ct_eq("secret", "secreT"));
+        assert!(!ct_eq("secret", "secret2"));
+        assert!(!ct_eq("secret", "sec"));
+        assert!(!ct_eq("", "x"));
+        assert!(!ct_eq("x", ""));
+    }
+
+    #[test]
+    fn check_auth_policy() {
+        let with = Json::parse("{\"op\":\"ping\",\"auth\":\"t0k3n\"}").unwrap();
+        let wrong = Json::parse("{\"op\":\"ping\",\"auth\":\"wrong\"}").unwrap();
+        let without = Json::parse("{\"op\":\"ping\"}").unwrap();
+        // No configured token: everything passes, presented auth ignored.
+        assert!(check_auth(&with, None).is_ok());
+        assert!(check_auth(&without, None).is_ok());
+        // Configured token: exact match required, structured code on miss.
+        assert!(check_auth(&with, Some("t0k3n")).is_ok());
+        let (code, _) = check_auth(&wrong, Some("t0k3n")).unwrap_err();
+        assert_eq!(code, ErrorCode::Unauthorized);
+        let (code, msg) = check_auth(&without, Some("t0k3n")).unwrap_err();
+        assert_eq!(code, ErrorCode::Unauthorized);
+        assert!(msg.contains("--auth-token"));
+        // A non-string auth member is unauthorized, not a crash.
+        let bad_type = Json::parse("{\"op\":\"ping\",\"auth\":7}").unwrap();
+        assert_eq!(check_auth(&bad_type, Some("t")).unwrap_err().0, ErrorCode::Unauthorized);
     }
 }

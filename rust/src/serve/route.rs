@@ -1,0 +1,407 @@
+//! The hash-routing front engine behind `cascade serve --route`.
+//!
+//! A front daemon owns no compiler and no cache. Every `compile`/`encode`
+//! request is resolved *only* as far as its effective cache key, then
+//! forwarded whole to the backend that owns that key under the same
+//! N-way partition `cascade explore --shard K/N` uses
+//! ([`crate::explore::shard::owner_of`]). That partition is the whole
+//! coordination story: each backend's cache holds a disjoint key range,
+//! identical concurrent requests always land on the same backend (where
+//! the session core dedups them to one compile), and adding a front in
+//! front of N backends needs no shared state, locks, or gossip — the
+//! key arithmetic *is* the routing table.
+//!
+//! Aggregation ops fan out instead: `stat` collects every backend's
+//! statistics plus cross-backend totals, `metrics` collects every
+//! backend's exposition next to the front's own, and `ping` probes all
+//! backends (the front is only as alive as its topology).
+//!
+//! Failure policy: each forward gets one built-in retry on a fresh
+//! connection (a parked keep-alive connection may have died idle); a
+//! backend that still cannot be reached yields a structured
+//! [`ErrorCode::BackendDown`] naming the address. A *reachable* backend
+//! that answers the handshake with the wrong [`PROTO_VERSION`] is
+//! refused — at startup as a hard error, per-request as
+//! [`ErrorCode::ProtoMismatch`] — because mixed-version topologies would
+//! silently disagree on request semantics.
+//!
+//! The front authenticates to backends with its own `--auth-token` (the
+//! usual deployment shares one secret across the topology); a client's
+//! presented token never travels past the front.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::arch::params::ArchParams;
+use crate::explore::runner::effective_key;
+use crate::explore::shard::owner_of;
+use crate::obs::labeled;
+use crate::util::json::Json;
+
+use super::client::{Client, ClientOpts};
+use super::proto::{response_error, response_ok, ErrorCode, PointQuery, Request, PROTO_VERSION};
+use super::ServeState;
+
+/// One backend daemon: its address, a parked keep-alive connection, and
+/// a forward count for the drain summary.
+struct Backend {
+    addr: String,
+    /// At most one connection parks here between requests; concurrent
+    /// workers dial extras and the surplus simply closes after use
+    /// (first healthy connection back wins the slot).
+    slot: Mutex<Option<Client>>,
+    forwarded: AtomicUsize,
+}
+
+/// Why a forward could not produce a backend response.
+enum RouteError {
+    /// Transport-level failure, after the built-in retry.
+    Down(String),
+    /// The backend answered the handshake with the wrong protocol
+    /// version (or refused it outright) — configuration, not weather.
+    Mismatch(String),
+}
+
+/// The front's routing state: the backend table and the key arithmetic.
+pub(crate) struct FrontEngine {
+    backends: Vec<Backend>,
+    auth: Option<String>,
+    timeout: Duration,
+    /// Base architecture for effective-key computation — the same
+    /// [`ArchParams::paper`] the backends compile under, so front and
+    /// backend always agree on what a point's key is.
+    arch: ArchParams,
+}
+
+impl FrontEngine {
+    /// Build the table and handshake every backend once. A reachable
+    /// backend speaking the wrong protocol (or refusing the handshake,
+    /// e.g. `unauthorized`) fails construction — that is a broken
+    /// deployment, not a transient. An *unreachable* backend only warns:
+    /// it may come up later, and requests it owns answer `backend_down`
+    /// until it does.
+    pub(crate) fn new(
+        addrs: &[String],
+        auth: Option<String>,
+        timeout: Duration,
+    ) -> Result<FrontEngine, String> {
+        if addrs.is_empty() {
+            return Err("route: need at least one backend address".to_string());
+        }
+        let eng = FrontEngine {
+            backends: addrs
+                .iter()
+                .map(|a| Backend {
+                    addr: a.clone(),
+                    slot: Mutex::new(None),
+                    forwarded: AtomicUsize::new(0),
+                })
+                .collect(),
+            auth,
+            timeout,
+            arch: ArchParams::paper(),
+        };
+        for b in &eng.backends {
+            match eng.dial(b) {
+                Ok(c) => *b.slot.lock().unwrap() = Some(c),
+                Err(RouteError::Mismatch(e)) => {
+                    return Err(format!("route: backend {}: {e}", b.addr));
+                }
+                Err(RouteError::Down(e)) => {
+                    eprintln!("serve: warning: backend {} unreachable at startup: {e}", b.addr);
+                }
+            }
+        }
+        Ok(eng)
+    }
+
+    /// Dial one backend and verify the protocol handshake.
+    fn dial(&self, b: &Backend) -> Result<Client, RouteError> {
+        let opts = ClientOpts { timeout: self.timeout, retries: 0, auth: self.auth.clone() };
+        let mut c = Client::connect(b.addr.as_str(), opts).map_err(RouteError::Down)?;
+        let pong = c.ping().map_err(RouteError::Down)?;
+        if pong.get("ok").and_then(Json::as_bool) != Some(true) {
+            return Err(RouteError::Mismatch(format!(
+                "handshake refused: {}",
+                pong.to_string_compact()
+            )));
+        }
+        let got = pong.get("proto").and_then(Json::as_u64);
+        if got != Some(PROTO_VERSION) {
+            return Err(RouteError::Mismatch(format!(
+                "backend speaks protocol {} where this front requires {PROTO_VERSION} \
+                 (mixed-version topologies are refused)",
+                got.map_or_else(|| "1 (none reported)".to_string(), |v| v.to_string())
+            )));
+        }
+        Ok(c)
+    }
+
+    /// One checkout–use–park cycle against backend `b`, with one built-in
+    /// retry on a *fresh* connection (a parked keep-alive connection may
+    /// have died while idle — that is weather, not an error the client
+    /// should see).
+    fn try_forward(&self, b: &Backend, req: &Request) -> Result<Json, RouteError> {
+        let mut conn = b.slot.lock().unwrap().take();
+        let mut last = String::new();
+        for _attempt in 0..2 {
+            let mut c = match conn.take() {
+                Some(c) => c,
+                None => match self.dial(b) {
+                    Ok(c) => c,
+                    Err(RouteError::Down(e)) => {
+                        last = e;
+                        continue;
+                    }
+                    Err(m) => return Err(m),
+                },
+            };
+            match c.request(req) {
+                Ok(resp) => {
+                    let mut slot = b.slot.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(c);
+                    }
+                    return Ok(resp);
+                }
+                // Drop the dead connection; the next loop iteration
+                // dials (and handshakes) fresh.
+                Err(e) => last = e,
+            }
+        }
+        Err(RouteError::Down(last))
+    }
+
+    /// Forward `req` to backend `idx` and account for it: the forward
+    /// counter feeds the drain summary, the provenance counter keeps the
+    /// front's `serve_provenance_total` meaningful even though the cache
+    /// lives backend-side.
+    fn forward(&self, st: &ServeState<'_>, idx: usize, req: &Request) -> Json {
+        let b = &self.backends[idx];
+        match self.try_forward(b, req) {
+            Ok(resp) => {
+                b.forwarded.fetch_add(1, Ordering::SeqCst);
+                st.reg
+                    .counter(
+                        &labeled("route_forward_total", "backend", &b.addr),
+                        "requests forwarded, by owning backend",
+                    )
+                    .inc();
+                if let Some(p) = resp.get("provenance").and_then(Json::as_str) {
+                    st.reg
+                        .counter(
+                            &labeled("serve_provenance_total", "provenance", p),
+                            "compile/encode responses by cache provenance",
+                        )
+                        .inc();
+                }
+                resp
+            }
+            Err(RouteError::Mismatch(e)) => response_error(ErrorCode::ProtoMismatch, &e),
+            Err(RouteError::Down(e)) => {
+                st.reg
+                    .counter(
+                        &labeled("route_backend_down_total", "backend", &b.addr),
+                        "forwards that failed with an unreachable backend",
+                    )
+                    .inc();
+                response_error(
+                    ErrorCode::BackendDown,
+                    &format!("backend {} unreachable after retry: {e}", b.addr),
+                )
+            }
+        }
+    }
+
+    /// Dispatch one request through the routing table.
+    pub(crate) fn handle(&self, st: &ServeState<'_>, req: Request) -> Json {
+        match req {
+            Request::Ping => self.ping_all(),
+            Request::Stat => self.stat_fanout(st),
+            Request::Metrics => self.metrics_fanout(st),
+            // Handled engine-agnostically upstream — the front drains
+            // itself, never its (possibly shared) backends.
+            Request::Shutdown => response_ok("shutdown"),
+            Request::Compile(ref q) => self.route_query(st, q, &req),
+            Request::Encode { key: Some(key), .. } => self.route_key(st, key, &req),
+            Request::Encode { key: None, query: Some(ref q) } => self.route_query(st, q, &req),
+            Request::Encode { key: None, query: None } => {
+                response_error(ErrorCode::BadRequest, "encode: need \"key\" or \"app\"")
+            }
+        }
+    }
+
+    /// Route a point-addressed request: resolve the point exactly as a
+    /// backend would, compute its effective key, forward to the owner.
+    /// A point that fails validation is refused here — no backend ever
+    /// sees it.
+    fn route_query(&self, st: &ServeState<'_>, q: &PointQuery, req: &Request) -> Json {
+        let (spec, point) = match q.resolve() {
+            Ok(sp) => sp,
+            Err(e) => return response_error(ErrorCode::BadRequest, &e),
+        };
+        let key = effective_key(&spec, &self.arch, &point);
+        self.forward(st, owner_of(key, self.backends.len()) - 1, req)
+    }
+
+    /// Route a key-addressed request (`encode` by key): the key *is* the
+    /// routing input.
+    fn route_key(&self, st: &ServeState<'_>, key: u64, req: &Request) -> Json {
+        self.forward(st, owner_of(key, self.backends.len()) - 1, req)
+    }
+
+    /// `ping`: probe every backend; the front is alive only if the whole
+    /// topology is. The first failing backend's structured error is the
+    /// response (its message names the address).
+    fn ping_all(&self) -> Json {
+        let mut addrs = Vec::new();
+        for b in &self.backends {
+            match self.try_forward(b, &Request::Ping) {
+                Ok(resp) if resp.get("ok").and_then(Json::as_bool) == Some(true) => {
+                    addrs.push(Json::from(b.addr.as_str()));
+                }
+                Ok(resp) => return resp,
+                Err(RouteError::Mismatch(e)) => {
+                    return response_error(ErrorCode::ProtoMismatch, &e);
+                }
+                Err(RouteError::Down(e)) => {
+                    return response_error(
+                        ErrorCode::BackendDown,
+                        &format!("backend {} unreachable after retry: {e}", b.addr),
+                    );
+                }
+            }
+        }
+        let mut j = response_ok("ping");
+        j.set("proto", PROTO_VERSION).set("role", "front").set("backends", Json::Arr(addrs));
+        j
+    }
+
+    /// `stat`: the front's own counters plus every backend's full stat
+    /// response and cross-backend cache totals. Unreachable backends are
+    /// reported per-entry (`ok:false`), never hidden — a monitoring
+    /// scrape must see the hole, not a smaller topology.
+    fn stat_fanout(&self, st: &ServeState<'_>) -> Json {
+        const SUMMED: [&str; 4] = ["fresh_compiles", "memory_hits", "disk_hits", "art_hits"];
+        let mut backends = Vec::new();
+        let mut sums = [0u64; 4];
+        let mut reachable = 0usize;
+        for b in &self.backends {
+            let mut entry = Json::obj();
+            entry
+                .set("addr", b.addr.as_str())
+                .set("forwarded", b.forwarded.load(Ordering::SeqCst));
+            match self.try_forward(b, &Request::Stat) {
+                Ok(resp) if resp.get("ok").and_then(Json::as_bool) == Some(true) => {
+                    if let Some(srv) = resp.get("server") {
+                        for (i, name) in SUMMED.into_iter().enumerate() {
+                            sums[i] += srv.get(name).and_then(Json::as_u64).unwrap_or(0);
+                        }
+                    }
+                    reachable += 1;
+                    entry.set("ok", true).set("stat", resp);
+                }
+                Ok(resp) => {
+                    entry.set("ok", false).set("error", resp.to_string_compact());
+                }
+                Err(RouteError::Mismatch(e) | RouteError::Down(e)) => {
+                    entry.set("ok", false).set("error", e);
+                }
+            }
+            backends.push(entry);
+        }
+        let mut srv = Json::obj();
+        srv.set("requests", st.requests.load(Ordering::SeqCst))
+            .set("busy_rejections", st.busy.load(Ordering::SeqCst))
+            .set("errors", st.errors.load(Ordering::SeqCst))
+            .set("workers", st.cfg.workers)
+            .set("queue_cap", st.cfg.queue_cap)
+            .set("pipeline", st.cfg.pipeline)
+            .set("backends", self.backends.len())
+            .set("backends_reachable", reachable);
+        let mut totals = Json::obj();
+        for (i, name) in SUMMED.into_iter().enumerate() {
+            totals.set(name, sums[i]);
+        }
+        let mut j = response_ok("stat");
+        j.set("proto", PROTO_VERSION)
+            .set("role", "front")
+            .set("server", srv)
+            .set("totals", totals)
+            .set("backends", Json::Arr(backends));
+        j
+    }
+
+    /// `metrics`: the front's own exposition plus one entry per backend
+    /// (`cascade client metrics` prints them under `# backend <addr>`
+    /// headers — one scrape shows the whole topology).
+    fn metrics_fanout(&self, st: &ServeState<'_>) -> Json {
+        let mut backends = Vec::new();
+        for b in &self.backends {
+            let mut entry = Json::obj();
+            entry.set("addr", b.addr.as_str());
+            match self.try_forward(b, &Request::Metrics) {
+                Ok(resp) => match resp.get("exposition").and_then(Json::as_str) {
+                    Some(t) => {
+                        entry.set("exposition", t);
+                    }
+                    None => {
+                        entry.set("error", resp.to_string_compact());
+                    }
+                },
+                Err(RouteError::Mismatch(e) | RouteError::Down(e)) => {
+                    entry.set("error", e);
+                }
+            }
+            backends.push(entry);
+        }
+        let mut j = response_ok("metrics");
+        j.set("exposition", st.reg.expose()).set("backends", Json::Arr(backends));
+        j
+    }
+
+    /// `addr=count` per backend, for the drain log line.
+    pub(crate) fn drain_summary(&self) -> String {
+        self.backends
+            .iter()
+            .map(|b| format!("{}={}", b.addr, b.forwarded.load(Ordering::SeqCst)))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_backend_list_is_refused() {
+        let err = FrontEngine::new(&[], None, Duration::from_millis(100)).unwrap_err();
+        assert!(err.contains("at least one backend"), "{err}");
+    }
+
+    #[test]
+    fn unreachable_backends_warn_but_construct() {
+        // Port 1 on loopback is essentially never listening; if some
+        // exotic environment answers, the handshake ping times out fast.
+        let addrs = vec!["127.0.0.1:1".to_string()];
+        let eng = FrontEngine::new(&addrs, None, Duration::from_millis(100))
+            .expect("down backends must not fail construction");
+        assert_eq!(eng.backends.len(), 1);
+        assert_eq!(eng.drain_summary(), "127.0.0.1:1=0");
+    }
+
+    #[test]
+    fn routing_is_the_shard_partition() {
+        // The front must route key K to backend `owner_of(K, N)` — the
+        // 1-based shard index, 0-based in the table.
+        for n in [1usize, 2, 3, 5] {
+            for key in [0u64, 1, 41, 0xdead_beef, u64::MAX] {
+                let idx = owner_of(key, n) - 1;
+                assert!(idx < n, "owner_of must be 1..=n");
+                assert_eq!(idx, (key % n as u64) as usize);
+            }
+        }
+    }
+}

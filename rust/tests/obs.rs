@@ -17,9 +17,8 @@ use std::time::{Duration, Instant};
 
 use cascade::obs::{with_spans, STAGE_ORDER};
 use cascade::pipeline::{compile, CompileCtx, PipelineConfig};
-use cascade::serve::client;
-use cascade::serve::proto::{PointQuery, Request};
-use cascade::serve::{ServeConfig, Server};
+use cascade::serve::proto::PointQuery;
+use cascade::serve::{Client, ClientOpts, ServeConfig, Server};
 use cascade::sim::encode::encode_compiled;
 use cascade::util::json::Json;
 
@@ -101,7 +100,9 @@ fn tiny_point() -> PointQuery {
     }
 }
 
-const TIMEOUT: Duration = Duration::from_secs(300);
+fn opts() -> ClientOpts {
+    ClientOpts { timeout: Duration::from_secs(300), ..ClientOpts::default() }
+}
 
 #[test]
 fn served_metrics_timing_split_and_request_log() {
@@ -120,8 +121,10 @@ fn served_metrics_timing_split_and_request_log() {
     std::thread::scope(|s| {
         let daemon = s.spawn(|| server.run(&ctx));
 
-        // One fresh compile, then an encode served from the warm store.
-        let r = client::request(&addr, &Request::Compile(q.clone()), TIMEOUT).unwrap();
+        // One fresh compile, then an encode served from the warm store —
+        // all on one kept-alive connection.
+        let mut c = Client::connect(addr.as_str(), opts()).unwrap();
+        let r = c.compile(&q).unwrap();
         assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r:?}");
         let queue_ms = r.get("queue_ms").and_then(Json::as_f64).expect("queue_ms");
         let exec_ms = r.get("exec_ms").and_then(Json::as_f64).expect("exec_ms");
@@ -132,16 +135,15 @@ fn served_metrics_timing_split_and_request_log() {
             "ms must be the sum of queue_ms and exec_ms: {queue_ms} + {exec_ms} != {ms}"
         );
 
-        let enc = Request::Encode { key: None, query: Some(q.clone()) };
-        let r2 = client::request(&addr, &enc, TIMEOUT).unwrap();
+        let r2 = c.encode_point(&q).unwrap();
         assert_eq!(r2.get("ok").and_then(Json::as_bool), Some(true), "{r2:?}");
         assert!(r2.get("queue_ms").is_some() && r2.get("exec_ms").is_some());
 
-        let m = client::request(&addr, &Request::Metrics, TIMEOUT).unwrap();
+        let m = c.metrics().unwrap();
         assert_eq!(m.get("ok").and_then(Json::as_bool), Some(true), "{m:?}");
         exposition = m.get("exposition").and_then(Json::as_str).expect("exposition").to_string();
 
-        let bye = client::request(&addr, &Request::Shutdown, TIMEOUT).unwrap();
+        let bye = c.shutdown().unwrap();
         assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
         daemon.join().expect("daemon thread").expect("run returns Ok");
     });
@@ -157,6 +159,7 @@ fn served_metrics_timing_split_and_request_log() {
         "compile_seconds_count 1",
         "encode_seconds_count 1",
         "serve_queue_seconds_count",
+        "serve_request_queue_seconds_count",
         "cache_fresh_compiles 1",
     ] {
         assert!(exposition.contains(needle), "exposition lacks {needle:?}:\n{exposition}");
@@ -208,14 +211,14 @@ fn served_outputs_identical_with_log_disabled() {
         let addr = server.addr().to_string();
         std::thread::scope(|s| {
             s.spawn(|| server.run(&ctx).unwrap());
-            let enc = Request::Encode { key: None, query: Some(q.clone()) };
-            let r = client::request(&addr, &enc, TIMEOUT).unwrap();
+            let mut c = Client::connect(addr.as_str(), opts()).unwrap();
+            let r = c.encode_point(&q).unwrap();
             assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r:?}");
             outputs.push((
                 r.get("key").and_then(Json::as_str).unwrap().to_string(),
                 r.get("bitstream").and_then(Json::as_str).unwrap().to_string(),
             ));
-            let bye = client::request(&addr, &Request::Shutdown, TIMEOUT).unwrap();
+            let bye = c.shutdown().unwrap();
             assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
         });
     }

@@ -1,0 +1,332 @@
+//! End-to-end acceptance for the routed serve topology (ISSUE 7):
+//!
+//! * **Transparency** — a 1-front/2-backend topology answers `compile`
+//!   and `encode` with responses *byte-identical* to a direct
+//!   single-daemon run once the three timing members (`queue_ms`,
+//!   `exec_ms`, `ms` — the only fields a front legitimately re-measures)
+//!   are normalized; bitstream and key fields are compared raw;
+//! * **Partition** — each effective key lands on exactly the backend
+//!   `owner_of` names, observed through per-backend `fresh_compiles`;
+//! * **Auth** — a token-gated topology rejects missing and wrong
+//!   secrets with `unauthorized` and accepts the right one;
+//! * **Failure policy** — a key owned by a dead backend earns
+//!   `backend_down` after the front's retry, while keys owned by live
+//!   backends keep working;
+//! * **Per-request queueing** — each request in a pipelined burst is
+//!   charged its *own* dequeue-to-dispatch wait (the second of two
+//!   back-to-back compiles must report a positive `queue_ms`).
+//!
+//! All tests skip (with a note) when the environment has no loopback
+//! networking, mirroring `tests/serve.rs`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use cascade::arch::params::ArchParams;
+use cascade::explore::runner::effective_key;
+use cascade::explore::shard::owner_of;
+use cascade::pipeline::CompileCtx;
+use cascade::serve::proto::{PointQuery, Request};
+use cascade::serve::{Client, ClientOpts, ServeConfig, Server};
+use cascade::util::json::Json;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("cascade-route-e2e-{tag}-{}", std::process::id()))
+}
+
+fn config(dir: &std::path::Path) -> ServeConfig {
+    let mut cfg = ServeConfig::new("127.0.0.1:0");
+    cfg.workers = 2;
+    cfg.queue_cap = 8;
+    cfg.cache_dir = dir.to_path_buf();
+    cfg
+}
+
+fn bind_or_skip(cfg: ServeConfig) -> Option<Server> {
+    match Server::bind(cfg) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping route e2e: {e}");
+            None
+        }
+    }
+}
+
+fn point(seed: u64) -> PointQuery {
+    PointQuery {
+        app: "gaussian".into(),
+        level: Some("compute".into()),
+        seed: Some(seed),
+        fast: true,
+        tiny: true,
+        ..PointQuery::default()
+    }
+}
+
+fn opts() -> ClientOpts {
+    ClientOpts { timeout: Duration::from_secs(300), ..ClientOpts::default() }
+}
+
+fn auth_opts(token: &str) -> ClientOpts {
+    ClientOpts { auth: Some(token.to_string()), ..opts() }
+}
+
+/// Find one seed per backend slot (0-based) under the 2-way partition,
+/// scanning deterministically from seed 1.
+fn seed_owned_by(slot: usize, n: usize) -> u64 {
+    let arch = ArchParams::paper();
+    for seed in 1..=64 {
+        let (spec, p) = point(seed).resolve().unwrap();
+        if owner_of(effective_key(&spec, &arch, &p), n) - 1 == slot {
+            return seed;
+        }
+    }
+    unreachable!("no seed in 1..=64 maps to backend {slot} of {n}");
+}
+
+/// Normalize the only members a routed front re-measures, then render
+/// canonically: everything else must be byte-identical.
+fn strip_timing(mut j: Json) -> String {
+    for k in ["queue_ms", "exec_ms", "ms"] {
+        j.set(k, 0);
+    }
+    j.to_string_compact()
+}
+
+#[test]
+fn routed_front_is_byte_transparent_and_splits_by_partition() {
+    let ctx = CompileCtx::paper();
+    let dirs: Vec<_> = ["direct", "b1", "b2"].iter().map(|t| tmp(&format!("transp-{t}"))).collect();
+    for d in &dirs {
+        let _ = std::fs::remove_dir_all(d);
+    }
+
+    let Some(direct) = bind_or_skip(config(&dirs[0])) else { return };
+    let Some(b1) = bind_or_skip(config(&dirs[1])) else { return };
+    let Some(b2) = bind_or_skip(config(&dirs[2])) else { return };
+    let direct_addr = direct.addr().to_string();
+    let backend_addrs = vec![b1.addr().to_string(), b2.addr().to_string()];
+
+    // One seed per backend, so the split is exercised in both directions.
+    let seeds = [seed_owned_by(0, 2), seed_owned_by(1, 2)];
+
+    std::thread::scope(|s| {
+        s.spawn(|| direct.run(&ctx).unwrap());
+        s.spawn(|| b1.run(&ctx).unwrap());
+        s.spawn(|| b2.run(&ctx).unwrap());
+
+        // The front handshakes its backends at construction, so it
+        // binds only after they are accepting.
+        let mut fcfg = config(&tmp("transp-front"));
+        fcfg.route = backend_addrs.clone();
+        let front = Server::bind(fcfg).expect("front binds");
+        let front_addr = front.addr().to_string();
+        s.spawn(|| front.run(&ctx).unwrap());
+
+        let mut cd = Client::connect(direct_addr.as_str(), opts()).unwrap();
+        let mut cf = Client::connect(front_addr.as_str(), opts()).unwrap();
+
+        for &seed in &seeds {
+            let q = point(seed);
+            // Same conversation against both systems: compile, then
+            // encode the warmed point.
+            let rd = cd.compile(&q).unwrap();
+            let rf = cf.compile(&q).unwrap();
+            assert_eq!(rd.get("ok").and_then(Json::as_bool), Some(true), "{rd:?}");
+            assert_eq!(rf.get("ok").and_then(Json::as_bool), Some(true), "{rf:?}");
+            assert_eq!(
+                strip_timing(rd),
+                strip_timing(rf),
+                "routed compile response differs from direct (seed {seed})"
+            );
+
+            let ed = cd.encode_point(&q).unwrap();
+            let ef = cf.encode_point(&q).unwrap();
+            assert_eq!(
+                ed.get("bitstream").and_then(Json::as_str),
+                ef.get("bitstream").and_then(Json::as_str),
+                "routed bitstream differs from direct (seed {seed})"
+            );
+            assert_eq!(ed.get("key"), ef.get("key"));
+            assert_eq!(
+                strip_timing(ed),
+                strip_timing(ef),
+                "routed encode response differs from direct (seed {seed})"
+            );
+        }
+
+        // The front's stat fan-out proves the partition: each backend
+        // compiled exactly its own key, and the totals line up.
+        let stat = cf.stat().unwrap();
+        assert_eq!(stat.get("role").and_then(Json::as_str), Some("front"));
+        let backends = stat.get("backends").and_then(Json::as_arr).expect("backends array");
+        assert_eq!(backends.len(), 2);
+        for b in backends {
+            let fresh = b
+                .get("stat")
+                .and_then(|s| s.get("server"))
+                .and_then(|s| s.get("fresh_compiles"))
+                .and_then(Json::as_u64);
+            assert_eq!(fresh, Some(1), "each backend owns exactly one of the two keys: {b:?}");
+        }
+        let totals = stat.get("totals").expect("totals section");
+        assert_eq!(totals.get("fresh_compiles").and_then(Json::as_u64), Some(2));
+
+        // Fan-out ping answers with the topology.
+        let ping = cf.ping().unwrap();
+        assert_eq!(ping.get("role").and_then(Json::as_str), Some("front"));
+        assert_eq!(ping.get("backends").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+
+        // Shut down the front (drains only the front), then the
+        // backends and the direct daemon.
+        cf.shutdown().unwrap();
+        for addr in &backend_addrs {
+            let mut c = Client::connect(addr.as_str(), opts()).unwrap();
+            c.shutdown().unwrap();
+        }
+        cd.shutdown().unwrap();
+    });
+
+    for d in &dirs {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+#[test]
+fn auth_gates_the_routed_topology() {
+    let ctx = CompileCtx::paper();
+    let dir = tmp("auth-backend");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut bcfg = config(&dir);
+    bcfg.auth_token = Some("open-sesame".into());
+    let Some(backend) = bind_or_skip(bcfg) else { return };
+    let backend_addr = backend.addr().to_string();
+
+    std::thread::scope(|s| {
+        s.spawn(|| backend.run(&ctx).unwrap());
+
+        let mut fcfg = config(&tmp("auth-front"));
+        fcfg.auth_token = Some("open-sesame".into());
+        fcfg.route = vec![backend_addr.clone()];
+        let front = Server::bind(fcfg).expect("front binds");
+        let front_addr = front.addr().to_string();
+        s.spawn(|| front.run(&ctx).unwrap());
+
+        // No token: rejected before the op is even interpreted.
+        let mut anon = Client::connect(front_addr.as_str(), opts()).unwrap();
+        let r = anon.ping().unwrap();
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "{r:?}");
+        assert_eq!(r.get("code").and_then(Json::as_str), Some("unauthorized"));
+
+        // Wrong token: same rejection, same connection stays usable.
+        let mut wrong = Client::connect(front_addr.as_str(), auth_opts("guess")).unwrap();
+        let r = wrong.ping().unwrap();
+        assert_eq!(r.get("code").and_then(Json::as_str), Some("unauthorized"), "{r:?}");
+
+        // Right token: the whole pipeline works end to end, front
+        // through backend.
+        let mut ok = Client::connect(front_addr.as_str(), auth_opts("open-sesame")).unwrap();
+        let r = ok.compile(&point(1)).unwrap();
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r:?}");
+        assert!(r.get("key").and_then(Json::as_str).is_some());
+
+        ok.shutdown().unwrap();
+        let mut b = Client::connect(backend_addr.as_str(), auth_opts("open-sesame")).unwrap();
+        b.shutdown().unwrap();
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dead_backend_earns_backend_down_while_live_keys_keep_working() {
+    let ctx = CompileCtx::paper();
+    let dir = tmp("down-live");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let Some(live) = bind_or_skip(config(&dir)) else { return };
+    let live_addr = live.addr().to_string();
+
+    std::thread::scope(|s| {
+        s.spawn(|| live.run(&ctx).unwrap());
+
+        // Slot 0 is the live backend; slot 1 is a dead address (the
+        // front warns at construction but still binds).
+        let mut fcfg = config(&tmp("down-front"));
+        fcfg.route = vec![live_addr.clone(), "127.0.0.1:1".into()];
+        let front = Server::bind(fcfg).expect("front binds despite a dead backend");
+        let front_addr = front.addr().to_string();
+        s.spawn(|| front.run(&ctx).unwrap());
+
+        let mut c = Client::connect(front_addr.as_str(), opts()).unwrap();
+
+        // A key owned by the dead backend: structured failure, not a
+        // hang and not a dropped connection.
+        let r = c.compile(&point(seed_owned_by(1, 2))).unwrap();
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "{r:?}");
+        assert_eq!(r.get("code").and_then(Json::as_str), Some("backend_down"));
+
+        // A key owned by the live backend still compiles — on the same
+        // front connection.
+        let r = c.compile(&point(seed_owned_by(0, 2))).unwrap();
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r:?}");
+
+        c.shutdown().unwrap();
+        let mut b = Client::connect(live_addr.as_str(), opts()).unwrap();
+        b.shutdown().unwrap();
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pipelined_requests_each_pay_their_own_queue_wait() {
+    let ctx = CompileCtx::paper();
+    let dir = tmp("queue");
+    let _ = std::fs::remove_dir_all(&dir);
+    let Some(server) = bind_or_skip(config(&dir)) else { return };
+    let addr = server.addr().to_string();
+
+    std::thread::scope(|s| {
+        s.spawn(|| server.run(&ctx).unwrap());
+
+        // Raw socket: write two compiles back to back *before* reading,
+        // so the second demonstrably waits behind the first's execution.
+        let stream = TcpStream::connect(&addr).unwrap();
+        let line = Request::Compile(point(1)).to_json().to_string_compact();
+        let mut w = stream.try_clone().unwrap();
+        w.write_all(format!("{line}\n{line}\n").as_bytes()).unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut l1 = String::new();
+        reader.read_line(&mut l1).unwrap();
+        let mut l2 = String::new();
+        reader.read_line(&mut l2).unwrap();
+        let r1 = Json::parse(l1.trim()).unwrap();
+        let r2 = Json::parse(l2.trim()).unwrap();
+        assert_eq!(r1.get("ok").and_then(Json::as_bool), Some(true), "{r1:?}");
+        assert_eq!(r2.get("ok").and_then(Json::as_bool), Some(true), "{r2:?}");
+
+        // The bug this guards against: charging the connection's first
+        // request for the accept wait and every later request nothing.
+        // The second request sat queued for the whole first compile, so
+        // its own queue_ms must say so.
+        let q2 = r2.get("queue_ms").and_then(Json::as_f64).expect("queue_ms");
+        let e1 = r1.get("exec_ms").and_then(Json::as_f64).expect("exec_ms");
+        assert!(q2 > 0.0, "pipelined request reported no queue wait: {r2:?}");
+        assert!(
+            q2 >= e1 * 0.5,
+            "second request's queue wait ({q2} ms) should cover most of the first's \
+             execution ({e1} ms)"
+        );
+
+        w.write_all(format!("{}\n", Request::Shutdown.to_json().to_string_compact()).as_bytes())
+            .unwrap();
+        let mut bye = String::new();
+        reader.read_line(&mut bye).unwrap();
+        assert_eq!(
+            Json::parse(bye.trim()).unwrap().get("ok").and_then(Json::as_bool),
+            Some(true)
+        );
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}

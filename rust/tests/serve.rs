@@ -1,4 +1,5 @@
-//! End-to-end acceptance for the `cascade serve` daemon (ISSUE 5):
+//! End-to-end acceptance for the `cascade serve` daemon (ISSUE 5, driven
+//! through the ISSUE 7 keep-alive [`Client`] API):
 //!
 //! * K identical *concurrent* `compile` requests deduplicate to exactly
 //!   one fresh compile (`CacheStats::misses == 1`, observed through the
@@ -18,9 +19,8 @@ use std::time::Duration;
 
 use cascade::explore::{runner, DiskCache};
 use cascade::pipeline::CompileCtx;
-use cascade::serve::client;
-use cascade::serve::proto::{PointQuery, Request};
-use cascade::serve::{ServeConfig, Server};
+use cascade::serve::proto::PointQuery;
+use cascade::serve::{Client, ClientOpts, ServeConfig, Server};
 use cascade::sim::encode::encode_compiled;
 use cascade::util::json::Json;
 
@@ -57,7 +57,9 @@ fn tiny_point() -> PointQuery {
     }
 }
 
-const TIMEOUT: Duration = Duration::from_secs(300);
+fn opts() -> ClientOpts {
+    ClientOpts { timeout: Duration::from_secs(300), ..ClientOpts::default() }
+}
 
 #[test]
 fn k_concurrent_identical_compiles_are_one_cache_miss() {
@@ -75,8 +77,10 @@ fn k_concurrent_identical_compiles_are_one_cache_miss() {
         std::thread::scope(|cs| {
             for _ in 0..K {
                 cs.spawn(|| {
-                    let r = client::request(&addr, &Request::Compile(q.clone()), TIMEOUT)
-                        .expect("compile request");
+                    // One connection per racer: the race is between
+                    // connections, the dedup is inside the daemon.
+                    let mut c = Client::connect(addr.as_str(), opts()).expect("connect");
+                    let r = c.compile(&q).expect("compile request");
                     assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r:?}");
                     let p = r.get("provenance").and_then(Json::as_str).unwrap().to_string();
                     assert!(r.get("metrics").is_some(), "compile response carries metrics");
@@ -86,8 +90,10 @@ fn k_concurrent_identical_compiles_are_one_cache_miss() {
         });
 
         // The acceptance criterion, as the daemon accounts it: exactly
-        // one fresh compile across the K identical requests.
-        let stat = client::request(&addr, &Request::Stat, TIMEOUT).expect("stat");
+        // one fresh compile across the K identical requests. `stat` and
+        // `shutdown` ride one kept-alive connection.
+        let mut c = Client::connect(addr.as_str(), opts()).expect("connect");
+        let stat = c.stat().expect("stat");
         let srv = stat.get("server").expect("server section");
         assert_eq!(
             srv.get("fresh_compiles").and_then(Json::as_u64),
@@ -95,7 +101,7 @@ fn k_concurrent_identical_compiles_are_one_cache_miss() {
             "K identical concurrent compiles must be exactly one cache miss: {stat:?}"
         );
 
-        let bye = client::request(&addr, &Request::Shutdown, TIMEOUT).expect("shutdown");
+        let bye = c.shutdown().expect("shutdown");
         assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
     });
 
@@ -130,13 +136,14 @@ fn served_encode_matches_offline_encode_from_cache_byte_for_byte() {
     std::thread::scope(|s| {
         s.spawn(|| server.run(&ctx).unwrap());
 
-        // Warm the store through the daemon, then encode the same point.
-        let r = client::request(&addr, &Request::Compile(q.clone()), TIMEOUT).unwrap();
+        // One kept-alive connection carries the whole conversation:
+        // warm the store, encode by point, encode by key, shut down.
+        let mut c = Client::connect(addr.as_str(), opts()).expect("connect");
+        let r = c.compile(&q).unwrap();
         assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r:?}");
         served_key = r.get("key").and_then(Json::as_str).unwrap().to_string();
 
-        let enc = Request::Encode { key: None, query: Some(q.clone()) };
-        let r2 = client::request(&addr, &enc, TIMEOUT).unwrap();
+        let r2 = c.encode_point(&q).unwrap();
         assert_eq!(r2.get("ok").and_then(Json::as_bool), Some(true), "{r2:?}");
         assert_eq!(r2.get("key").and_then(Json::as_str), Some(served_key.as_str()));
         assert_eq!(
@@ -149,19 +156,14 @@ fn served_encode_matches_offline_encode_from_cache_byte_for_byte() {
 
         // Key-addressed encode returns the same bytes.
         let key = u64::from_str_radix(&served_key, 16).unwrap();
-        let r3 = client::request(
-            &addr,
-            &Request::Encode { key: Some(key), query: None },
-            TIMEOUT,
-        )
-        .unwrap();
+        let r3 = c.encode_key(key).unwrap();
         assert_eq!(
             r3.get("bitstream").and_then(Json::as_str),
             Some(served_bits.as_str()),
             "by-key and by-point encodes must agree"
         );
 
-        let bye = client::request(&addr, &Request::Shutdown, TIMEOUT).unwrap();
+        let bye = c.shutdown().unwrap();
         assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
     });
 
@@ -194,9 +196,10 @@ fn shutdown_drains_and_returns() {
     let addr = server.addr().to_string();
     std::thread::scope(|s| {
         let daemon = s.spawn(|| server.run(&ctx));
-        let r = client::request(&addr, &Request::Ping, TIMEOUT).unwrap();
+        let mut c = Client::connect(addr.as_str(), opts()).unwrap();
+        let r = c.ping().unwrap();
         assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
-        let bye = client::request(&addr, &Request::Shutdown, TIMEOUT).unwrap();
+        let bye = c.shutdown().unwrap();
         assert_eq!(bye.get("op").and_then(Json::as_str), Some("shutdown"));
         // The graceful-shutdown contract: run() itself returns cleanly.
         daemon.join().expect("daemon thread").expect("run returns Ok");
