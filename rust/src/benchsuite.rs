@@ -71,12 +71,22 @@ pub fn run_pnr(b: &mut Bencher) {
     b.bench("place/gaussian_u16_alpha", || {
         place(&app.dfg, &nets, &arch, &PlaceParams::cascade(3)).cost
     });
+    // Full-recompute reference (`--no-incremental` mode): same moves, same
+    // cost bits; the delta vs `place/gaussian_u16` is the incremental win.
+    let pp_scratch = PlaceParams { incremental: false, ..PlaceParams::baseline(3) };
+    b.bench("place/gaussian_u16_scratch", || {
+        place(&app.dfg, &nets, &arch, &pp_scratch).cost
+    });
 
     let placement = place(&app.dfg, &nets, &arch, &PlaceParams::baseline(3));
     b.bench("route/gaussian_u16", || {
         route(&app.dfg, &nets, &placement, &arch, &ctx.graph, &RouteParams::default())
             .unwrap()
             .len()
+    });
+    let rp_scratch = RouteParams { incremental: false, ..RouteParams::default() };
+    b.bench("route/gaussian_u16_scratch", || {
+        route(&app.dfg, &nets, &placement, &arch, &ctx.graph, &rp_scratch).unwrap().len()
     });
 
     let harris = crate::apps::dense::harris(1530, 2554, 4);
@@ -89,7 +99,8 @@ pub fn run_pnr(b: &mut Bencher) {
 /// STA hot paths: the analysis runs once per post-PnR pipelining
 /// iteration, so its latency bounds compile time.
 pub fn run_sta(b: &mut Bencher) {
-    use crate::timing::sta::analyze;
+    use crate::arch::canal::NodeKind;
+    use crate::timing::sta::{analyze, StaEngine};
     let ctx = CompileCtx::paper();
 
     let gauss = compile(
@@ -100,6 +111,27 @@ pub fn run_sta(b: &mut Bencher) {
     )
     .unwrap();
     b.bench("analyze/gaussian_u16", || analyze(&gauss.design, &ctx.graph).period_ps);
+
+    // Incremental engine (post-PnR loop hot path). `noop` bounds the fixed
+    // per-call diff cost on an unchanged design; `perturb` toggles one
+    // pipelining register per call and re-propagates only downstream of it.
+    // Compare both against `analyze/gaussian_u16` for the memoization win.
+    let mut d = gauss.design;
+    let mut engine = StaEngine::new(&d);
+    b.bench("engine/noop_gaussian_u16", || engine.analyze(&d, &ctx.graph).period_ps);
+    let toggle = d
+        .routes
+        .iter()
+        .flat_map(|r| r.sink_paths.iter().flatten())
+        .copied()
+        .find(|&n| matches!(ctx.graph.decode(n).kind, NodeKind::SbOut { .. }))
+        .expect("routed design crosses a switch-box output");
+    b.bench("engine/perturb_gaussian_u16", || {
+        if !d.sb_regs.remove(&toggle) {
+            d.sb_regs.insert(toggle);
+        }
+        engine.analyze(&d, &ctx.graph).period_ps
+    });
 
     let harris = compile(
         &crate::apps::dense::harris(1530, 2554, 4),

@@ -45,6 +45,12 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
 /// Canonical serialization of an effective pipeline configuration. Every
 /// field participates; `{:?}` on floats is the shortest round-trip form,
 /// so distinct values never collide textually.
+///
+/// [`crate::pnr::IncrementalCfg`] is deliberately absent: the incremental
+/// kernel switches cannot affect any compiled output (the byte-identity
+/// contract in `docs/performance.md`), so they must not perturb cache keys
+/// — artifacts compiled with and without `--no-incremental` are
+/// interchangeable.
 pub fn config_signature(cfg: &PipelineConfig) -> String {
     let bcast = match &cfg.broadcast {
         None => "off".to_string(),

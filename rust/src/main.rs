@@ -33,6 +33,12 @@
 //! cascade arch                                             print architecture + timing model
 //! ```
 //!
+//! Every command accepts the global `--no-incremental` flag, which switches
+//! the placement / routing / STA hot kernels from incremental to
+//! full-recompute evaluation. Outputs (bitstreams, reports, cache keys) are
+//! byte-identical in both modes — the flag trades compile speed for kernel
+//! simplicity when debugging; see `docs/performance.md`.
+//!
 //! `explore` sweeps the cross-product of compiler axes (app × pipelining
 //! level × placement alpha × PnR seed × post-PnR iteration budget) and
 //! architecture axes (routing tracks × regfile words × FIFO depth) on a
@@ -135,6 +141,9 @@ fn usage() -> ! {
            bench   [--suite compile|pnr|sta|sim|tables]         run a benchmark suite; --json\n\
                    [--json] [--fast]                            writes BENCH_<suite>.json\n\
            arch                                                 architecture + timing summary\n\
+         global: [--no-incremental]                             full-recompute PnR/STA kernels\n\
+                                                                (byte-identical outputs; see\n\
+                                                                docs/performance.md)\n\
          levels: {}\n\
          apps: {}",
         PipelineConfig::LEVEL_NAMES.join(" "),
@@ -308,6 +317,12 @@ fn cache_cmd(args: &Args) -> Result<(), String> {
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
+    // Global escape hatch: run the PnR/STA hot kernels in full-recompute
+    // mode. Outputs are byte-identical either way (docs/performance.md);
+    // this only trades compile speed for simplicity when debugging.
+    if args.flag("no-incremental") {
+        cascade::pnr::IncrementalCfg::off().install();
+    }
     let Some(cmd) = args.positionals.first().map(|s| s.as_str()) else { usage() };
     let seed = args.opt_u64("seed", 3);
 

@@ -39,6 +39,7 @@ pub const STAGE_ORDER: &[&str] = &[
     "schedule",
     "place",
     "route",
+    "realize",
     "postpnr",
     "reschedule",
     "sta",

@@ -272,18 +272,23 @@ fn compile_inner(
     let sched1 = schedule(&dfg, &app.shape);
     crate::obs::trace::mark("schedule");
 
-    // Place and route.
+    // Place and route. The incremental switches select *how* the kernels
+    // evaluate, never what they produce (see `docs/performance.md`), so
+    // they are read from the process-wide config rather than `cfg`.
+    let inc = crate::pnr::IncrementalCfg::current();
     let pp = PlaceParams {
         alpha: cfg.place_alpha,
         effort: cfg.place_effort,
         seed,
         region,
+        incremental: inc.place,
         ..PlaceParams::default()
     };
-    let mut design =
-        place_and_route(&dfg, &arch, &ctx.graph, &ctx.lib, &pp, &RouteParams::default())
-            .map_err(CompileError::Route)?;
+    let rp = RouteParams { incremental: inc.route, ..RouteParams::default() };
+    let mut design = place_and_route(&dfg, &arch, &ctx.graph, &ctx.lib, &pp, &rp)
+        .map_err(CompileError::Route)?;
     design.realize_registers(&ctx.graph);
+    crate::obs::trace::mark("realize");
 
     // Post-PnR pipelining.
     let postpnr_report =

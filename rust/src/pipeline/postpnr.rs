@@ -17,8 +17,8 @@
 
 use crate::arch::canal::{InterconnectGraph, NodeId as RrgNode, NodeKind};
 use crate::dfg::ir::EdgeId;
-use crate::pnr::RoutedDesign;
-use crate::timing::sta::analyze;
+use crate::pnr::{IncrementalCfg, RoutedDesign};
+use crate::timing::sta::{analyze, StaEngine};
 
 use super::bdm::branch_delay_match;
 
@@ -97,14 +97,23 @@ pub fn postpnr_pipelining(
     graph: &InterconnectGraph,
     p: &PostPnrParams,
 ) -> PostPnrReport {
-    let initial = analyze(d, graph);
+    // This loop runs ~2 STA passes per enabled register; the incremental
+    // engine memoizes the propagation across them (bit-identical results,
+    // see `StaEngine`). `--no-incremental` falls back to full passes.
+    let mut engine = IncrementalCfg::current().sta.then(|| StaEngine::new(d));
+    let mut sta = |d: &RoutedDesign| match engine.as_mut() {
+        Some(e) => e.analyze(d, graph),
+        None => analyze(d, graph),
+    };
+
+    let initial = sta(d);
     let mut best_period = initial.period_ps;
     let mut regs_enabled = 0usize;
     let mut iters = 0usize;
 
     while iters < p.max_iters {
         iters += 1;
-        let cp = analyze(d, graph);
+        let cp = sta(d);
         let Some(target) = middle_unregistered_sbout(d, graph, &cp.segment.nodes) else {
             break; // core-internal or unbreakable segment
         };
@@ -132,7 +141,7 @@ pub fn postpnr_pipelining(
             enable_register_break(d, graph, target);
         }
 
-        let after = analyze(d, graph);
+        let after = sta(d);
         if after.period_ps < best_period * (1.0 - p.min_gain) {
             best_period = after.period_ps;
             regs_enabled += 1;

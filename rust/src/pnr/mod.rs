@@ -14,6 +14,15 @@
 //! * [`design`] — the routed design: placement + route trees + enabled
 //!   pipelining registers; the object STA, the post-PnR pipelining pass,
 //!   the bitstream encoder and the fabric simulator all consume.
+//!
+//! The three hot kernels (annealing placement, PathFinder routing, and
+//! [`crate::timing::sta`]) each have an incremental evaluation mode gated
+//! by [`IncrementalCfg`] (default on; `cascade --no-incremental` turns it
+//! off process-wide). Incremental mode is pure memoization: both modes run
+//! the same algorithm over the same decision sequence and produce
+//! **bit-identical** placements, routes, timing reports, bitstreams and
+//! cache keys — the contract is written down in `docs/performance.md` and
+//! asserted end to end in `tests/explore.rs`.
 
 pub mod netlist;
 pub mod place;
@@ -24,6 +33,61 @@ pub use design::RoutedDesign;
 pub use netlist::{build_nets, Net, NetKind};
 pub use place::{place, PlaceParams, Placement};
 pub use route::{route, RouteError, RouteParams};
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which hot kernels run in incremental mode. The default is all-on; the
+/// CLI's global `--no-incremental` flag installs the all-off configuration
+/// as an escape hatch (and as the reference side of the byte-identity
+/// contract: outputs never depend on these switches).
+///
+/// The configuration is deliberately **not** part of
+/// [`crate::pipeline::PipelineConfig`] or the explore spec: it cannot
+/// influence any compiled
+/// output, so it must not reach `config_signature` / cache keys / report
+/// JSON. It lives in one process-wide atomic instead, consulted by the
+/// compile driver when it builds [`PlaceParams`] / [`RouteParams`] and by
+/// the post-PnR pass when it decides whether to keep a
+/// [`crate::timing::sta::StaEngine`] across iterations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IncrementalCfg {
+    /// Delta-cost placement moves (incremental net bounding boxes).
+    pub place: bool,
+    /// Selective rip-up bookkeeping in the router.
+    pub route: bool,
+    /// Dirty-set STA re-propagation across post-PnR iterations.
+    pub sta: bool,
+}
+
+/// Bitmask encoding of [`IncrementalCfg`] (bit 0 = place, 1 = route,
+/// 2 = sta). Default: everything on.
+static INCREMENTAL: AtomicU8 = AtomicU8::new(0b111);
+
+impl IncrementalCfg {
+    /// All kernels incremental (the default).
+    pub fn on() -> IncrementalCfg {
+        IncrementalCfg { place: true, route: true, sta: true }
+    }
+
+    /// Full recompute everywhere (`--no-incremental`).
+    pub fn off() -> IncrementalCfg {
+        IncrementalCfg { place: false, route: false, sta: false }
+    }
+
+    /// The process-wide configuration currently installed.
+    pub fn current() -> IncrementalCfg {
+        let bits = INCREMENTAL.load(Ordering::Relaxed);
+        IncrementalCfg { place: bits & 1 != 0, route: bits & 2 != 0, sta: bits & 4 != 0 }
+    }
+
+    /// Install this configuration process-wide. Affects only *how* later
+    /// compiles are computed, never *what* they compute.
+    pub fn install(&self) {
+        let bits =
+            (self.place as u8) | ((self.route as u8) << 1) | ((self.sta as u8) << 2);
+        INCREMENTAL.store(bits, Ordering::Relaxed);
+    }
+}
 
 use crate::arch::canal::InterconnectGraph;
 use crate::arch::delay::DelayLib;

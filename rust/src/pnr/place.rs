@@ -14,6 +14,43 @@
 //! `alpha > 1` long nets are penalized superlinearly, trading average
 //! wirelength for a shorter longest route — the knob evaluated in
 //! Fig. 7 / Fig. 10 ("placement optimization").
+//!
+//! # Incremental delta-cost moves
+//!
+//! The annealer keeps a per-net cost table and, per move, recomputes only
+//! the nets touching the moved cell(s). In incremental mode (the default,
+//! [`PlaceParams::incremental`]) each net additionally carries its current
+//! bounding box with *occurrence counts* on every boundary, so a move
+//! updates the box in O(1) instead of rescanning the net's terminals; the
+//! rare move that empties a boundary count falls back to an exact rescan.
+//! Because coordinates are integers, the maintained box is exactly the
+//! scanned box, both modes evaluate Eq. 1 through the same function on the
+//! same inputs, and the accept/reject decision sequence — and therefore
+//! the final placement — is **bit-identical** with incremental mode on or
+//! off. `debug_assertions` builds verify the box against a from-scratch
+//! rescan on every staged move, and the reported [`Placement::cost`] is
+//! always recomputed fresh from final positions.
+//!
+//! ```no_run
+//! use cascade::apps;
+//! use cascade::arch::params::ArchParams;
+//! use cascade::pnr::{build_nets, place, PlaceParams};
+//!
+//! let app = apps::dense::gaussian(64, 64, 1);
+//! let arch = ArchParams::paper();
+//! let nets = build_nets(&app.dfg, &arch);
+//! // Incremental delta-cost annealing (the default) and a from-scratch
+//! // run produce bit-identical placements:
+//! let fast = place(&app.dfg, &nets, &arch, &PlaceParams::baseline(3));
+//! let slow = place(
+//!     &app.dfg,
+//!     &nets,
+//!     &arch,
+//!     &PlaceParams { incremental: false, ..PlaceParams::baseline(3) },
+//! );
+//! assert_eq!(fast.pos, slow.pos);
+//! assert_eq!(fast.cost.to_bits(), slow.cost.to_bits());
+//! ```
 
 use std::collections::HashMap;
 
@@ -39,11 +76,23 @@ pub struct PlaceParams {
     /// coordinates; IO nodes always live on the IO row within the region's
     /// column span. Used by low unrolling duplication (§V-E).
     pub region: Option<(TileCoord, (usize, usize))>,
+    /// Maintain per-net bounding boxes incrementally across moves instead
+    /// of rescanning every affected net's terminals (default). Results are
+    /// bit-identical either way — this is a pure speed switch, installed
+    /// from [`crate::pnr::IncrementalCfg`] by the compile driver.
+    pub incremental: bool,
 }
 
 impl Default for PlaceParams {
     fn default() -> Self {
-        PlaceParams { gamma: 0.05, alpha: 1.0, seed: 1, effort: 1.0, region: None }
+        PlaceParams {
+            gamma: 0.05,
+            alpha: 1.0,
+            seed: 1,
+            effort: 1.0,
+            region: None,
+            incremental: true,
+        }
     }
 }
 
@@ -121,29 +170,120 @@ fn build_sites(
     by_kind
 }
 
-/// Net cost per Eq. 1, computed from terminal positions.
-pub fn net_cost(net: &Net, pos: &[TileCoord], gamma: f64, alpha: f64) -> f64 {
-    let mut min_x = u16::MAX;
-    let mut max_x = 0u16;
-    let mut min_y = u16::MAX;
-    let mut max_y = 0u16;
-    let mut consider = |c: TileCoord| {
-        min_x = min_x.min(c.x);
-        max_x = max_x.max(c.x);
-        min_y = min_y.min(c.y);
-        max_y = max_y.max(c.y);
-    };
-    consider(pos[net.src as usize]);
-    for &(s, _) in &net.sinks {
-        consider(pos[s as usize]);
+/// A net's terminal bounding box with *occurrence counts* on each boundary
+/// (VPR-style). The counts make single-terminal moves O(1): removing a
+/// terminal that is not the last occurrence of a boundary coordinate keeps
+/// the box valid without a rescan, and the rare move that empties a
+/// boundary count signals the caller to rescan. Coordinates are integers,
+/// so the maintained box is *exactly* the scanned box — no drift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct NetBox {
+    min_x: u16,
+    max_x: u16,
+    min_y: u16,
+    max_y: u16,
+    n_min_x: u32,
+    n_max_x: u32,
+    n_min_y: u32,
+    n_max_y: u32,
+}
+
+impl NetBox {
+    /// Scan all of a net's terminals from scratch.
+    pub(crate) fn scan(net: &Net, pos: &[TileCoord]) -> NetBox {
+        let mut bx = NetBox {
+            min_x: u16::MAX,
+            max_x: 0,
+            min_y: u16::MAX,
+            max_y: 0,
+            n_min_x: 0,
+            n_max_x: 0,
+            n_min_y: 0,
+            n_max_y: 0,
+        };
+        bx.add(pos[net.src as usize], 1);
+        for &(s, _) in &net.sinks {
+            bx.add(pos[s as usize], 1);
+        }
+        bx
     }
-    let dx = (max_x - min_x) as f64;
-    let dy = (max_y - min_y) as f64;
+
+    /// Account for `mult` terminal occurrences at `c`.
+    pub(crate) fn add(&mut self, c: TileCoord, mult: u32) {
+        if c.x < self.min_x {
+            self.min_x = c.x;
+            self.n_min_x = mult;
+        } else if c.x == self.min_x {
+            self.n_min_x += mult;
+        }
+        if c.x > self.max_x {
+            self.max_x = c.x;
+            self.n_max_x = mult;
+        } else if c.x == self.max_x {
+            self.n_max_x += mult;
+        }
+        if c.y < self.min_y {
+            self.min_y = c.y;
+            self.n_min_y = mult;
+        } else if c.y == self.min_y {
+            self.n_min_y += mult;
+        }
+        if c.y > self.max_y {
+            self.max_y = c.y;
+            self.n_max_y = mult;
+        } else if c.y == self.max_y {
+            self.n_max_y += mult;
+        }
+    }
+
+    /// Remove `mult` terminal occurrences at `c`. Returns `false` when a
+    /// boundary count hits zero — the box is then stale and the caller
+    /// must rescan (the shrink direction is unknowable without one).
+    #[must_use]
+    pub(crate) fn remove(&mut self, c: TileCoord, mult: u32) -> bool {
+        if c.x == self.min_x {
+            self.n_min_x -= mult;
+            if self.n_min_x == 0 {
+                return false;
+            }
+        }
+        if c.x == self.max_x {
+            self.n_max_x -= mult;
+            if self.n_max_x == 0 {
+                return false;
+            }
+        }
+        if c.y == self.min_y {
+            self.n_min_y -= mult;
+            if self.n_min_y == 0 {
+                return false;
+            }
+        }
+        if c.y == self.max_y {
+            self.n_max_y -= mult;
+            if self.n_max_y == 0 {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Eq. 1 evaluated on a bounding box. Both the from-scratch and the
+/// incremental paths funnel through this one function, so equal boxes
+/// yield bit-identical costs by construction.
+pub(crate) fn cost_from_box(bx: &NetBox, terminals: usize, gamma: f64, alpha: f64) -> f64 {
+    let dx = (bx.max_x - bx.min_x) as f64;
+    let dy = (bx.max_y - bx.min_y) as f64;
     let hpwl = dx + dy;
     // Pass-through proxy: bbox tiles not occupied by this net's terminals.
-    let terminals = 1 + net.sinks.len();
     let area = ((dx + 1.0) * (dy + 1.0) - terminals as f64).max(0.0);
     (hpwl + gamma * area).powf(alpha)
+}
+
+/// Net cost per Eq. 1, computed from terminal positions.
+pub fn net_cost(net: &Net, pos: &[TileCoord], gamma: f64, alpha: f64) -> f64 {
+    cost_from_box(&NetBox::scan(net, pos), 1 + net.sinks.len(), gamma, alpha)
 }
 
 /// Internal mutable placement state. Occupancy is a flat vector indexed
@@ -234,23 +374,31 @@ pub fn place(g: &Dfg, nets: &[Net], arch: &ArchParams, pp: &PlaceParams) -> Plac
         }
     }
 
-    // Nets touching each node.
-    let mut nets_of: Vec<Vec<usize>> = vec![Vec::new(); n];
+    // Nets touching each node, with the node's terminal multiplicity in
+    // each net (a node can be both src and sink, or sink several times) —
+    // the multiplicity is what lets incremental mode update a box without
+    // rescanning the net.
+    let mut nets_of: Vec<Vec<(usize, u32)>> = vec![Vec::new(); n];
     for net in nets {
-        nets_of[net.src as usize].push(net.id);
-        for &(s, _) in &net.sinks {
-            if !nets_of[s as usize].contains(&net.id) {
-                nets_of[s as usize].push(net.id);
+        let mut bump = |node: NodeId| {
+            let v = &mut nets_of[node as usize];
+            match v.iter_mut().find(|(id, _)| *id == net.id) {
+                Some((_, m)) => *m += 1,
+                None => v.push((net.id, 1)),
             }
+        };
+        bump(net.src);
+        for &(s, _) in &net.sinks {
+            bump(s);
         }
     }
 
     let mut net_costs: Vec<f64> =
         nets.iter().map(|nt| net_cost(nt, &st.pos, pp.gamma, pp.alpha)).collect();
-    let mut total: f64 = net_costs.iter().sum();
 
     if n == 0 || nets.is_empty() {
-        return Placement { pos: st.pos, slot: st.slot, cost: total };
+        let cost = net_costs.iter().sum();
+        return Placement { pos: st.pos, slot: st.slot, cost };
     }
 
     let moves_per_temp = (((n * 12) as f64) * pp.effort).ceil().max(1.0) as usize;
@@ -270,12 +418,12 @@ pub fn place(g: &Dfg, nets: &[Net], arch: &ArchParams, pp: &PlaceParams) -> Plac
             }
             let occupant = st.swap(node, t, s);
             let mut delta = 0.0;
-            for &ni in &nets_of[node as usize] {
+            for &(ni, _) in &nets_of[node as usize] {
                 delta += net_cost(&nets[ni], &st.pos, pp.gamma, pp.alpha) - net_costs[ni];
             }
             if let Some(o) = occupant {
-                for &ni in &nets_of[o as usize] {
-                    if !nets_of[node as usize].contains(&ni) {
+                for &(ni, _) in &nets_of[o as usize] {
+                    if !nets_of[node as usize].iter().any(|&(id, _)| id == ni) {
                         delta += net_cost(&nets[ni], &st.pos, pp.gamma, pp.alpha) - net_costs[ni];
                     }
                 }
@@ -289,8 +437,19 @@ pub fn place(g: &Dfg, nets: &[Net], arch: &ArchParams, pp: &PlaceParams) -> Plac
     };
 
     let t_final = temp * 1e-4;
+    // Committed per-net boxes (incremental mode only): maintained across
+    // accepted moves so a move costs O(affected nets), not O(terminals).
+    let mut boxes: Vec<NetBox> = if pp.incremental {
+        nets.iter().map(|nt| NetBox::scan(nt, &st.pos)).collect()
+    } else {
+        Vec::new()
+    };
     let mut affected: Vec<usize> = Vec::new();
     let mut scratch: Vec<f64> = Vec::new();
+    let mut scratch_boxes: Vec<NetBox> = Vec::new();
+    let mult_of = |v: &[(usize, u32)], ni: usize| -> Option<u32> {
+        v.iter().find(|&&(id, _)| id == ni).map(|&(_, m)| m)
+    };
     while temp > t_final {
         let mut accepts = 0usize;
         for _ in 0..moves_per_temp {
@@ -304,9 +463,11 @@ pub fn place(g: &Dfg, nets: &[Net], arch: &ArchParams, pp: &PlaceParams) -> Plac
             }
             let occupant = st.swap(node, t, s);
             affected.clear();
-            affected.extend_from_slice(&nets_of[node as usize]);
+            for &(ni, _) in &nets_of[node as usize] {
+                affected.push(ni);
+            }
             if let Some(o) = occupant {
-                for &ni in &nets_of[o as usize] {
+                for &(ni, _) in &nets_of[o as usize] {
                     if !affected.contains(&ni) {
                         affected.push(ni);
                     }
@@ -314,9 +475,46 @@ pub fn place(g: &Dfg, nets: &[Net], arch: &ArchParams, pp: &PlaceParams) -> Plac
             }
             let before: f64 = affected.iter().map(|&ni| net_costs[ni]).sum();
             scratch.clear();
+            scratch_boxes.clear();
             let mut after = 0.0;
             for &ni in &affected {
-                let c = net_cost(&nets[ni], &st.pos, pp.gamma, pp.alpha);
+                let c = if pp.incremental {
+                    // Stage a candidate box: node moved old.0 -> t, the
+                    // displaced occupant (if any) moved t -> old.0. If a
+                    // removal empties a boundary count, fall back to an
+                    // exact rescan of the post-swap positions.
+                    let nm = mult_of(&nets_of[node as usize], ni);
+                    let om = occupant.and_then(|o| mult_of(&nets_of[o as usize], ni));
+                    let mut bx = boxes[ni];
+                    let mut exact = true;
+                    if let Some(m) = nm {
+                        exact = bx.remove(old.0, m);
+                    }
+                    if exact {
+                        if let Some(m) = om {
+                            exact = bx.remove(t, m);
+                        }
+                    }
+                    if exact {
+                        if let Some(m) = nm {
+                            bx.add(t, m);
+                        }
+                        if let Some(m) = om {
+                            bx.add(old.0, m);
+                        }
+                    } else {
+                        bx = NetBox::scan(&nets[ni], &st.pos);
+                    }
+                    debug_assert_eq!(
+                        bx,
+                        NetBox::scan(&nets[ni], &st.pos),
+                        "incremental box diverged from rescan (net {ni})"
+                    );
+                    scratch_boxes.push(bx);
+                    cost_from_box(&bx, 1 + nets[ni].sinks.len(), pp.gamma, pp.alpha)
+                } else {
+                    net_cost(&nets[ni], &st.pos, pp.gamma, pp.alpha)
+                };
                 scratch.push(c);
                 after += c;
             }
@@ -324,8 +522,10 @@ pub fn place(g: &Dfg, nets: &[Net], arch: &ArchParams, pp: &PlaceParams) -> Plac
             if delta < 0.0 || rng.gen_f64() < (-delta / temp).exp() {
                 for (k, &ni) in affected.iter().enumerate() {
                     net_costs[ni] = scratch[k];
+                    if pp.incremental {
+                        boxes[ni] = scratch_boxes[k];
+                    }
                 }
-                total += delta;
                 accepts += 1;
             } else {
                 st.swap(node, old.0, old.1);
@@ -337,7 +537,11 @@ pub fn place(g: &Dfg, nets: &[Net], arch: &ArchParams, pp: &PlaceParams) -> Plac
         temp *= 0.9;
     }
 
-    Placement { pos: st.pos, slot: st.slot, cost: total }
+    // Report the cost recomputed fresh from final positions in both modes
+    // (not the accumulated sum of per-move deltas), so `Placement::cost`
+    // exactly equals a from-scratch recompute regardless of `incremental`.
+    let cost: f64 = nets.iter().map(|nt| net_cost(nt, &st.pos, pp.gamma, pp.alpha)).sum();
+    Placement { pos: st.pos, slot: st.slot, cost }
 }
 
 #[cfg(test)]
@@ -378,6 +582,8 @@ mod tests {
 
     #[test]
     fn cached_cost_matches_recompute() {
+        // Exact, not approximate: the reported cost is recomputed fresh
+        // from final positions, never the accumulated sum of move deltas.
         let app = apps::dense::unsharp(64, 64, 1);
         let arch = ArchParams::paper();
         let nets = build_nets(&app.dfg, &arch);
@@ -385,12 +591,112 @@ mod tests {
         let p = place(&app.dfg, &nets, &arch, &pp);
         let recomputed: f64 =
             nets.iter().map(|nt| net_cost(nt, &p.pos, pp.gamma, pp.alpha)).sum();
-        assert!(
-            (p.cost - recomputed).abs() < 1e-6 * recomputed.max(1.0),
+        assert_eq!(
+            p.cost.to_bits(),
+            recomputed.to_bits(),
             "cached {} vs recomputed {}",
             p.cost,
             recomputed
         );
+    }
+
+    #[test]
+    fn incremental_placement_matches_scratch_placement() {
+        // The byte-identity contract at the placer level: incremental
+        // bounding-box maintenance may never change a single decision.
+        let app = apps::dense::gaussian(64, 64, 2);
+        let arch = ArchParams::paper();
+        let nets = build_nets(&app.dfg, &arch);
+        for seed in [1u64, 21] {
+            let inc = place(&app.dfg, &nets, &arch, &PlaceParams::cascade(seed));
+            let scr = place(
+                &app.dfg,
+                &nets,
+                &arch,
+                &PlaceParams { incremental: false, ..PlaceParams::cascade(seed) },
+            );
+            assert_eq!(inc.pos, scr.pos, "seed {seed}: positions diverged");
+            assert_eq!(inc.slot, scr.slot, "seed {seed}: slots diverged");
+            assert_eq!(
+                inc.cost.to_bits(),
+                scr.cost.to_bits(),
+                "seed {seed}: cost diverged ({} vs {})",
+                inc.cost,
+                scr.cost
+            );
+        }
+    }
+
+    #[test]
+    fn net_box_updates_match_rescan_under_random_moves() {
+        // Property test: N random single-node moves, each staged
+        // incrementally and randomly accepted or rejected, leave every
+        // maintained box (and hence every cached cost) equal to a
+        // from-scratch rescan.
+        let app = apps::dense::harris(64, 64, 1);
+        let arch = ArchParams::paper();
+        let nets = build_nets(&app.dfg, &arch);
+        let p = place(
+            &app.dfg,
+            &nets,
+            &arch,
+            &PlaceParams { effort: 0.02, ..PlaceParams::baseline(13) },
+        );
+        let mut pos = p.pos.clone();
+        let n = app.dfg.nodes.len();
+        let mut nets_of: Vec<Vec<(usize, u32)>> = vec![Vec::new(); n];
+        for net in &nets {
+            let mut bump = |node: NodeId| {
+                let v = &mut nets_of[node as usize];
+                match v.iter_mut().find(|(id, _)| *id == net.id) {
+                    Some((_, m)) => *m += 1,
+                    None => v.push((net.id, 1)),
+                }
+            };
+            bump(net.src);
+            for &(s, _) in &net.sinks {
+                bump(s);
+            }
+        }
+        let mut boxes: Vec<NetBox> = nets.iter().map(|nt| NetBox::scan(nt, &pos)).collect();
+        let tiles: Vec<TileCoord> = arch.all_tiles().collect();
+        let mut rng = Rng::new(99);
+        for step in 0..400 {
+            let node = rng.gen_range(n);
+            let old = pos[node];
+            let newc = *rng.choose(&tiles);
+            pos[node] = newc;
+            let mut staged: Vec<(usize, NetBox)> = Vec::new();
+            for &(ni, m) in &nets_of[node] {
+                let mut bx = boxes[ni];
+                if bx.remove(old, m) {
+                    bx.add(newc, m);
+                } else {
+                    bx = NetBox::scan(&nets[ni], &pos);
+                }
+                assert_eq!(
+                    bx,
+                    NetBox::scan(&nets[ni], &pos),
+                    "step {step}, net {ni}: incremental box diverged"
+                );
+                staged.push((ni, bx));
+            }
+            if rng.gen_f64() < 0.5 {
+                for (ni, bx) in staged {
+                    boxes[ni] = bx;
+                }
+            } else {
+                pos[node] = old; // rejected move: committed table untouched
+            }
+        }
+        for (ni, nt) in nets.iter().enumerate() {
+            assert_eq!(boxes[ni], NetBox::scan(nt, &pos), "net {ni}: final box stale");
+            assert_eq!(
+                cost_from_box(&boxes[ni], 1 + nt.sinks.len(), 0.05, 1.35).to_bits(),
+                net_cost(nt, &pos, 0.05, 1.35).to_bits(),
+                "net {ni}: final cost stale"
+            );
+        }
     }
 
     #[test]

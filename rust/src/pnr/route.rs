@@ -5,8 +5,50 @@
 //! source TileOut node, subsequent sinks from the whole partial tree.
 //! Resource overuse is resolved iteratively: present congestion multiplies
 //! node costs within an iteration, historical congestion accumulates across
-//! iterations, and all nets are ripped up and rerouted until the routing is
-//! feasible (every SB/CB wire used by at most one net).
+//! iterations, and conflicted nets are ripped up and rerouted until the
+//! routing is feasible (every SB/CB wire used by at most one net).
+//!
+//! # Selective rip-up
+//!
+//! Iteration 0 routes every net; each later iteration tears out and
+//! re-routes **only the nets crossing an overused node**, keeping every
+//! conflict-free route — and its occupancy — in place. The
+//! [`RouteParams::incremental`] switch gates the occupancy *bookkeeping*
+//! only: incremental mode decrements the counts of each ripped net, the
+//! `--no-incremental` reference mode recounts from the surviving routes.
+//! Counts are integers, so both modes present identical costs to Dijkstra
+//! and produce **bit-identical** route trees (`debug_assertions` builds
+//! recount and compare every iteration).
+//!
+//! ```no_run
+//! use cascade::apps;
+//! use cascade::arch::canal::InterconnectGraph;
+//! use cascade::arch::delay::{DelayLib, DelayModelParams};
+//! use cascade::arch::params::ArchParams;
+//! use cascade::pnr::{build_nets, place, route, PlaceParams, RouteParams};
+//!
+//! let app = apps::dense::gaussian(64, 64, 1);
+//! let arch = ArchParams::paper();
+//! let lib = DelayLib::generate(&arch, &DelayModelParams::default());
+//! let mut graph = InterconnectGraph::build(&arch);
+//! graph.annotate_delays(&lib);
+//! let nets = build_nets(&app.dfg, &arch);
+//! let placement = place(&app.dfg, &nets, &arch, &PlaceParams::baseline(3));
+//! // Incremental occupancy bookkeeping (the default) and the full-recount
+//! // reference mode produce identical route trees:
+//! let fast =
+//!     route(&app.dfg, &nets, &placement, &arch, &graph, &RouteParams::default()).unwrap();
+//! let slow = route(
+//!     &app.dfg,
+//!     &nets,
+//!     &placement,
+//!     &arch,
+//!     &graph,
+//!     &RouteParams { incremental: false, ..RouteParams::default() },
+//! )
+//! .unwrap();
+//! assert_eq!(fast.len(), slow.len());
+//! ```
 
 use std::collections::{BinaryHeap, HashMap};
 
@@ -27,6 +69,11 @@ pub struct RouteParams {
     /// Extra cost per hop (keeps routes from wandering when delays are
     /// small).
     pub hop_cost: f64,
+    /// Maintain occupancy incrementally across rip-up iterations instead
+    /// of recounting from scratch (default). Results are bit-identical
+    /// either way — this is a pure speed switch, installed from
+    /// [`crate::pnr::IncrementalCfg`] by the compile driver.
+    pub incremental: bool,
 }
 
 impl Default for RouteParams {
@@ -37,6 +84,7 @@ impl Default for RouteParams {
             pres_fac_mult: 1.7,
             hist_fac: 0.4,
             hop_cost: 20.0,
+            incremental: true,
         }
     }
 }
@@ -160,14 +208,58 @@ pub fn route(
     order.sort_by_key(|&i| std::cmp::Reverse(nets[i].fanout()));
 
     let mut pres_fac = rp.pres_fac_init;
+    let mut dirty: Vec<usize> = Vec::new();
     for iter in 0..rp.max_iters {
-        // Rip up everything (classic full-ripup PathFinder).
-        occ.iter_mut().for_each(|o| *o = 0);
-        for r in &mut routes {
-            r.sink_paths.clear();
+        // Selective rip-up: iteration 0 routes everything; later
+        // iterations tear out and re-route only nets crossing an overused
+        // node, keeping every conflict-free route (and its occupancy) in
+        // place.
+        dirty.clear();
+        if iter == 0 {
+            dirty.extend_from_slice(&order);
+        } else {
+            for &ni in &order {
+                if routes[ni].nodes().any(|nde| occ[nde as usize] > 1) {
+                    dirty.push(ni);
+                }
+            }
+        }
+        if rp.incremental {
+            // Incremental bookkeeping: subtract each ripped net's usage.
+            for &ni in &dirty {
+                for nde in routes[ni].nodes() {
+                    occ[nde as usize] -= 1;
+                }
+            }
+            for &ni in &dirty {
+                routes[ni].sink_paths.clear();
+            }
+        } else {
+            // Full-recount reference (`--no-incremental`): rebuild
+            // occupancy from the surviving routes. Integer counts over the
+            // same surviving set — bit-identical to the incremental path.
+            for &ni in &dirty {
+                routes[ni].sink_paths.clear();
+            }
+            occ.iter_mut().for_each(|o| *o = 0);
+            for r in &routes {
+                for nde in r.nodes() {
+                    occ[nde as usize] += 1;
+                }
+            }
+        }
+        #[cfg(debug_assertions)]
+        if rp.incremental {
+            let mut check = vec![0u16; nn];
+            for r in &routes {
+                for nde in r.nodes() {
+                    check[nde as usize] += 1;
+                }
+            }
+            debug_assert_eq!(occ, check, "incremental occupancy diverged from recount");
         }
 
-        for &ni in &order {
+        for &ni in &dirty {
             let net = &nets[ni];
             let (src, sink_targets) = net_terminals(net, placement, graph);
             // Tree nodes so far (for multi-sink expansion) mapped to their
@@ -379,6 +471,33 @@ mod tests {
                         assert_eq!(graph.decode(n).layer, Layer::B1);
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_routing_matches_full_recount() {
+        // The byte-identity contract at the router level: incremental
+        // occupancy bookkeeping may never change a single route.
+        for app in [
+            crate::apps::dense::gaussian(64, 64, 1),
+            crate::apps::dense::harris(64, 64, 1),
+        ] {
+            let (arch, graph, nets, placement) = setup(&app);
+            let fast = route(&app.dfg, &nets, &placement, &arch, &graph, &RouteParams::default())
+                .unwrap();
+            let slow = route(
+                &app.dfg,
+                &nets,
+                &placement,
+                &arch,
+                &graph,
+                &RouteParams { incremental: false, ..RouteParams::default() },
+            )
+            .unwrap();
+            for (f, s) in fast.iter().zip(&slow) {
+                assert_eq!(f.net, s.net);
+                assert_eq!(f.sink_paths, s.sink_paths, "{}: net {} diverged", app.name, f.net);
             }
         }
     }

@@ -10,6 +10,42 @@
 //! The analysis records full provenance of the critical segment (the RRG
 //! nodes it traverses), which is exactly what post-PnR pipelining (§V-D)
 //! needs to decide which switch-box register to enable.
+//!
+//! # Incremental mode
+//!
+//! [`StaEngine`] memoizes a full [`analyze`] pass and, on each later call,
+//! re-propagates arrival times only downstream of design state that
+//! actually changed (a dirty-set walk over the topo-ordered graph): the
+//! post-PnR pipelining loop runs one STA per candidate register, so this
+//! replaces its repeated full-graph passes with work proportional to the
+//! perturbed cone. Results are bit-identical to [`analyze`] both by
+//! construction (the two share the per-node and per-net arithmetic
+//! helpers) and by assertion (`debug_assertions` builds recompute from
+//! scratch on every call and compare).
+//!
+//! ```no_run
+//! use cascade::apps;
+//! use cascade::arch::canal::InterconnectGraph;
+//! use cascade::arch::delay::{DelayLib, DelayModelParams};
+//! use cascade::arch::params::ArchParams;
+//! use cascade::pnr::{place_and_route, PlaceParams, RouteParams};
+//! use cascade::timing::sta::{analyze, StaEngine};
+//!
+//! let app = apps::dense::gaussian(64, 64, 1);
+//! let arch = ArchParams::paper();
+//! let lib = DelayLib::generate(&arch, &DelayModelParams::default());
+//! let mut graph = InterconnectGraph::build(&arch);
+//! graph.annotate_delays(&lib);
+//! let mut d = place_and_route(&app.dfg, &arch, &graph, &lib,
+//!     &PlaceParams::baseline(1), &RouteParams::default()).unwrap();
+//! let mut engine = StaEngine::new(&d);
+//! let first = engine.analyze(&d, &graph);   // full propagation
+//! d.sb_regs.insert(first.segment.nodes[0]); // perturb one routed net
+//! let second = engine.analyze(&d, &graph);  // re-walks the dirty cone only
+//! assert_eq!(second.period_ps, analyze(&d, &graph).period_ps);
+//! ```
+
+use std::collections::{HashMap, HashSet};
 
 #[allow(unused_imports)]
 use crate::arch::canal::{InterconnectGraph, NodeId as RrgNode, NodeKind};
@@ -31,7 +67,7 @@ pub enum SegmentEnd {
 }
 
 /// One register-to-register timing segment.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Segment {
     /// Path delay in ps, including launch clk-q and capture setup.
     pub delay_ps: f64,
@@ -81,7 +117,7 @@ pub fn analyze_instance(
     analyze_impl(d, graph, Some(inst))
 }
 
-#[derive(Clone)]
+#[derive(Clone, PartialEq)]
 struct SegState {
     start_tile: TileCoord,
     nodes: Vec<RrgNode>,
@@ -110,14 +146,247 @@ fn sink_registered(d: &RoutedDesign, e: EdgeId) -> bool {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Shared propagation helpers. Both the from-scratch pass (`analyze_impl`)
+// and the incremental engine (`StaEngine`) funnel through these, so equal
+// inputs yield bit-identical arithmetic by construction.
+// ---------------------------------------------------------------------------
+
+/// Launch time and open segment at a node's output within its current
+/// timing segment.
+fn node_out(
+    d: &RoutedDesign,
+    n: u32,
+    tfac: f64,
+    in_edges: &[Vec<EdgeId>],
+    in_time: &[f64],
+    in_seg: &[Option<SegState>],
+) -> (f64, SegState) {
+    let lib = &d.lib;
+    let clk_q = lib.clk_q_ps() as f64;
+    let node = &d.dfg.nodes[n as usize];
+    let tile = d.placement.pos[n as usize];
+    match &node.op {
+        Op::Input { .. } | Op::FlushSrc => (
+            clk_q + lib.io_core_ps() as f64 * tfac,
+            SegState { start_tile: tile, nodes: Vec::new() },
+        ),
+        Op::Delay { .. } if node.tile_kind() == crate::arch::params::TileKind::Mem => (
+            clk_q + lib.mem_core_ps() as f64 * tfac,
+            SegState { start_tile: tile, nodes: Vec::new() },
+        ),
+        Op::Delay { .. } => (
+            // PE register-file shift register: registered output.
+            clk_q + lib.pe_core_ps(OpClass::Pass) as f64 * tfac,
+            SegState { start_tile: tile, nodes: Vec::new() },
+        ),
+        Op::Rom { .. } => (
+            clk_q + lib.mem_core_ps() as f64 * tfac,
+            SegState { start_tile: tile, nodes: Vec::new() },
+        ),
+        Op::Accum { .. } => (clk_q, SegState { start_tile: tile, nodes: Vec::new() }),
+        Op::Sparse(s) => {
+            let class = match s {
+                crate::dfg::ir::SparseOp::Intersect | crate::dfg::ir::SparseOp::Union => {
+                    OpClass::Cmp
+                }
+                crate::dfg::ir::SparseOp::SpAlu(a) => a.op_class(),
+                crate::dfg::ir::SparseOp::Reduce => OpClass::Add,
+                crate::dfg::ir::SparseOp::Repeat => OpClass::Logic,
+                crate::dfg::ir::SparseOp::CrdScan { .. }
+                | crate::dfg::ir::SparseOp::ValRead { .. } => OpClass::Pass,
+            };
+            let core = if node.tile_kind() == crate::arch::params::TileKind::Mem {
+                lib.mem_core_ps() as f64
+            } else {
+                lib.pe_core_ps(class) as f64
+            };
+            (clk_q + core * tfac, SegState { start_tile: tile, nodes: Vec::new() })
+        }
+        Op::Const { .. } => (clk_q, SegState { start_tile: tile, nodes: Vec::new() }),
+        Op::Output { .. } => (clk_q, SegState { start_tile: tile, nodes: Vec::new() }),
+        Op::Alu { op, .. } => {
+            if node.input_regs {
+                (
+                    clk_q + lib.pe_core_ps(op.op_class()) as f64 * tfac,
+                    SegState { start_tile: tile, nodes: Vec::new() },
+                )
+            } else {
+                // Combinational: continue from the worst input.
+                let mut worst = clk_q;
+                let mut seg = SegState { start_tile: tile, nodes: Vec::new() };
+                for &ei in &in_edges[n as usize] {
+                    if sink_registered(d, ei) {
+                        continue;
+                    }
+                    if let Some(s) = &in_seg[ei as usize] {
+                        if in_time[ei as usize] > worst {
+                            worst = in_time[ei as usize];
+                            seg = s.clone();
+                        }
+                    }
+                }
+                (worst + lib.pe_core_ps(op.op_class()) as f64 * tfac, seg)
+            }
+        }
+    }
+}
+
+/// Record capture endpoints for the registered inputs of node `n`. The
+/// endpoint times were computed during the drivers' net walks and stored
+/// in `in_time`/`in_seg`; recording happens at the sink so the capture
+/// core delay of this node kind is included.
+fn capture_segments(
+    d: &RoutedDesign,
+    n: u32,
+    tfac: f64,
+    in_edges: &[Vec<EdgeId>],
+    in_time: &[f64],
+    in_seg: &[Option<SegState>],
+    out: &mut Vec<Segment>,
+) {
+    let lib = &d.lib;
+    let setup = lib.setup_ps() as f64;
+    let node = &d.dfg.nodes[n as usize];
+    let tile = d.placement.pos[n as usize];
+    for &ei in &in_edges[n as usize] {
+        if !sink_registered(d, ei) {
+            continue;
+        }
+        if let Some(s) = &in_seg[ei as usize] {
+            let extra = match &node.op {
+                // The accumulator adds before its register.
+                Op::Accum { .. } => lib.pe_core_ps(OpClass::Mac) as f64 * tfac,
+                // IO capture flops after the pad path.
+                Op::Output { .. } => lib.io_core_ps() as f64 * tfac,
+                _ => 0.0,
+            };
+            out.push(Segment {
+                delay_ps: in_time[ei as usize] + extra + setup,
+                start_tile: s.start_tile,
+                end_tile: tile,
+                nodes: s.nodes.clone(),
+                end: SegmentEnd::NodeInput { node: n },
+            });
+        }
+    }
+}
+
+/// Walk one net's route trees from its source: emit an `SbReg` segment at
+/// every enabled switch-box register, a `NodeCore` segment at each
+/// Valid/Ready/Flush sink, and report each Data sink's arrival
+/// time/segment through `set_in`.
+#[allow(clippy::too_many_arguments)]
+fn walk_net(
+    d: &RoutedDesign,
+    graph: &InterconnectGraph,
+    ni: usize,
+    t_out: f64,
+    out_seg_n: &SegState,
+    factor: &dyn Fn(TileCoord) -> f64,
+    segs: &mut Vec<Segment>,
+    set_in: &mut dyn FnMut(EdgeId, f64, SegState),
+) {
+    let lib = &d.lib;
+    let clk_q = lib.clk_q_ps() as f64;
+    let setup = lib.setup_ps() as f64;
+    let net = &d.nets[ni];
+    let tile = d.placement.pos[net.src as usize];
+    let tfac = factor(tile);
+    let (src_time, src_seg) = match net.kind {
+        NetKind::Data | NetKind::Flush => (t_out, out_seg_n.clone()),
+        // Valid/ready are driven registered out of the FIFO logic.
+        NetKind::Valid | NetKind::Ready => (
+            clk_q + lib.pe_core_ps(OpClass::Logic) as f64 * tfac,
+            SegState { start_tile: tile, nodes: Vec::new() },
+        ),
+    };
+    for (k, path) in d.routes[ni].sink_paths.iter().enumerate() {
+        let mut t = src_time;
+        let mut seg = src_seg.clone();
+        for w in path.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            // Edge delay a -> b.
+            let e = graph
+                .fanout(a)
+                .iter()
+                .find(|e| e.dst == b)
+                .expect("routed step must exist in RRG");
+            let btile = graph.decode(b).tile;
+            t += e.delay_ps as f64 * factor(btile);
+            seg.nodes.push(b);
+            if d.sb_regs.contains(&b) {
+                segs.push(Segment {
+                    delay_ps: t + setup,
+                    start_tile: seg.start_tile,
+                    end_tile: btile,
+                    nodes: std::mem::take(&mut seg.nodes),
+                    end: SegmentEnd::SbReg,
+                });
+                t = clk_q;
+                seg = SegState { start_tile: btile, nodes: vec![b] };
+            }
+        }
+        // Path end: CbIn of the sink.
+        match net.kind {
+            NetKind::Data => {
+                // The capture endpoint (registered sinks) is recorded when
+                // the sink node is processed, which on a DAG is always
+                // after its driver in topo order.
+                set_in(net.edges[k], t, seg);
+            }
+            NetKind::Valid | NetKind::Ready | NetKind::Flush => {
+                let (sink_node, _) = net.sinks[k];
+                segs.push(Segment {
+                    delay_ps: t + setup,
+                    start_tile: seg.start_tile,
+                    end_tile: d.placement.pos[sink_node as usize],
+                    nodes: seg.nodes.clone(),
+                    end: SegmentEnd::NodeCore { node: sink_node },
+                });
+            }
+        }
+    }
+}
+
+/// Internal tile paths also bound the clock: the MEM read path and the PE
+/// MAC path are register-to-register inside one tile. Static while
+/// placement and node ops are fixed.
+fn internal_segments(d: &RoutedDesign, factor: &dyn Fn(TileCoord) -> f64) -> Vec<Segment> {
+    let lib = &d.lib;
+    let clk_q = lib.clk_q_ps() as f64;
+    let setup = lib.setup_ps() as f64;
+    let mut segs = Vec::new();
+    for (i, node) in d.dfg.nodes.iter().enumerate() {
+        let tile = d.placement.pos[i];
+        let tfac = factor(tile);
+        let internal = match &node.op {
+            Op::Delay { .. } if node.tile_kind() == crate::arch::params::TileKind::Mem => {
+                Some(lib.mem_core_ps() as f64)
+            }
+            Op::Rom { .. } => Some(lib.mem_core_ps() as f64),
+            Op::Accum { .. } => Some(lib.pe_core_ps(OpClass::Mac) as f64),
+            _ => None,
+        };
+        if let Some(c) = internal {
+            segs.push(Segment {
+                delay_ps: clk_q + c * tfac + setup,
+                start_tile: tile,
+                end_tile: tile,
+                nodes: Vec::new(),
+                end: SegmentEnd::NodeCore { node: i as u32 },
+            });
+        }
+    }
+    segs
+}
+
 fn analyze_impl(
     d: &RoutedDesign,
     graph: &InterconnectGraph,
     inst: Option<&InstanceDelays>,
 ) -> CritPath {
     let lib = &d.lib;
-    let clk_q = lib.clk_q_ps() as f64;
-    let setup = lib.setup_ps() as f64;
     let nn = d.dfg.nodes.len();
 
     let factor = |tile: TileCoord| -> f64 {
@@ -128,11 +397,10 @@ fn analyze_impl(
     };
 
     let mut segments: Vec<Segment> = Vec::new();
-    // Arrival time at each node output within its current segment.
-    let mut out_time = vec![0f64; nn];
+    // Open segment at each node output.
     let mut out_seg: Vec<SegState> =
         vec![SegState { start_tile: TileCoord::new(0, 0), nodes: Vec::new() }; nn];
-    // Arrival time / segment at each edge's sink CbIn (combinational sinks).
+    // Arrival time / segment at each edge's sink CbIn.
     let ne = d.dfg.edges.len();
     let mut in_time = vec![0f64; ne];
     let mut in_seg: Vec<Option<SegState>> = vec![None; ne];
@@ -152,203 +420,21 @@ fn analyze_impl(
     }
 
     for &n in &order {
-        let node = &d.dfg.nodes[n as usize];
-        let tile = d.placement.pos[n as usize];
-        let tfac = factor(tile);
-
-        // --- Node output time within its segment.
-        let (t_out, seg) = match &node.op {
-            Op::Input { .. } | Op::FlushSrc => (
-                clk_q + lib.io_core_ps() as f64 * tfac,
-                SegState { start_tile: tile, nodes: Vec::new() },
-            ),
-            Op::Delay { .. } if node.tile_kind() == crate::arch::params::TileKind::Mem => (
-                clk_q + lib.mem_core_ps() as f64 * tfac,
-                SegState { start_tile: tile, nodes: Vec::new() },
-            ),
-            Op::Delay { .. } => (
-                // PE register-file shift register: registered output.
-                clk_q + lib.pe_core_ps(OpClass::Pass) as f64 * tfac,
-                SegState { start_tile: tile, nodes: Vec::new() },
-            ),
-            Op::Rom { .. } => (
-                clk_q + lib.mem_core_ps() as f64 * tfac,
-                SegState { start_tile: tile, nodes: Vec::new() },
-            ),
-            Op::Accum { .. } => (
-                clk_q,
-                SegState { start_tile: tile, nodes: Vec::new() },
-            ),
-            Op::Sparse(s) => {
-                let class = match s {
-                    crate::dfg::ir::SparseOp::Intersect | crate::dfg::ir::SparseOp::Union => {
-                        OpClass::Cmp
-                    }
-                    crate::dfg::ir::SparseOp::SpAlu(a) => a.op_class(),
-                    crate::dfg::ir::SparseOp::Reduce => OpClass::Add,
-                    crate::dfg::ir::SparseOp::Repeat => OpClass::Logic,
-                    crate::dfg::ir::SparseOp::CrdScan { .. }
-                    | crate::dfg::ir::SparseOp::ValRead { .. } => OpClass::Pass,
-                };
-                let core = if node.tile_kind() == crate::arch::params::TileKind::Mem {
-                    lib.mem_core_ps() as f64
-                } else {
-                    lib.pe_core_ps(class) as f64
-                };
-                (clk_q + core * tfac, SegState { start_tile: tile, nodes: Vec::new() })
-            }
-            Op::Const { .. } => (clk_q, SegState { start_tile: tile, nodes: Vec::new() }),
-            Op::Output { .. } => (clk_q, SegState { start_tile: tile, nodes: Vec::new() }),
-            Op::Alu { op, .. } => {
-                if node.input_regs {
-                    (
-                        clk_q + lib.pe_core_ps(op.op_class()) as f64 * tfac,
-                        SegState { start_tile: tile, nodes: Vec::new() },
-                    )
-                } else {
-                    // Combinational: continue from the worst input.
-                    let mut worst = clk_q;
-                    let mut seg = SegState { start_tile: tile, nodes: Vec::new() };
-                    for &ei in &in_edges[n as usize] {
-                        if sink_registered(d, ei) {
-                            continue;
-                        }
-                        if let Some(s) = &in_seg[ei as usize] {
-                            if in_time[ei as usize] > worst {
-                                worst = in_time[ei as usize];
-                                seg = s.clone();
-                            }
-                        }
-                    }
-                    (worst + lib.pe_core_ps(op.op_class()) as f64 * tfac, seg)
-                }
-            }
-        };
-        out_time[n as usize] = t_out;
-        out_seg[n as usize] = seg;
-
-        // --- Record capture endpoints for registered inputs of this node.
-        for &ei in &in_edges[n as usize] {
-            if !sink_registered(d, ei) {
-                continue;
-            }
-            // The endpoint was computed during the driver's net walk and
-            // stored in in_time/in_seg (we record it here so the capture
-            // core delay of this node kind is included).
-            if let Some(s) = in_seg[ei as usize].take() {
-                let extra = match &node.op {
-                    // The accumulator adds before its register.
-                    Op::Accum { .. } => lib.pe_core_ps(OpClass::Mac) as f64 * tfac,
-                    // IO capture flops after the pad path.
-                    Op::Output { .. } => lib.io_core_ps() as f64 * tfac,
-                    _ => 0.0,
-                };
-                segments.push(Segment {
-                    delay_ps: in_time[ei as usize] + extra + setup,
-                    start_tile: s.start_tile,
-                    end_tile: tile,
-                    nodes: s.nodes,
-                    end: SegmentEnd::NodeInput { node: n },
-                });
-            }
-        }
-
-        // --- Walk this node's nets.
-        for &ni in &nets_of_src[n as usize] {
-            let net = &d.nets[ni];
-            let (src_time, src_seg) = match net.kind {
-                NetKind::Data | NetKind::Flush => (t_out, out_seg[n as usize].clone()),
-                // Valid/ready are driven registered out of the FIFO logic.
-                NetKind::Valid | NetKind::Ready => (
-                    clk_q + lib.pe_core_ps(OpClass::Logic) as f64 * tfac,
-                    SegState { start_tile: tile, nodes: Vec::new() },
-                ),
+        let nu = n as usize;
+        let tfac = factor(d.placement.pos[nu]);
+        let (t_out, seg) = node_out(d, n, tfac, &in_edges, &in_time, &in_seg);
+        out_seg[nu] = seg;
+        capture_segments(d, n, tfac, &in_edges, &in_time, &in_seg, &mut segments);
+        for &ni in &nets_of_src[nu] {
+            let mut set_in = |ei: EdgeId, t: f64, sgs: SegState| {
+                in_time[ei as usize] = t;
+                in_seg[ei as usize] = Some(sgs);
             };
-            for (k, path) in d.routes[ni].sink_paths.iter().enumerate() {
-                let mut t = src_time;
-                let mut seg = src_seg.clone();
-                for w in path.windows(2) {
-                    let (a, b) = (w[0], w[1]);
-                    // Edge delay a -> b.
-                    let e = graph
-                        .fanout(a)
-                        .iter()
-                        .find(|e| e.dst == b)
-                        .expect("routed step must exist in RRG");
-                    let btile = graph.decode(b).tile;
-                    t += e.delay_ps as f64 * factor(btile);
-                    seg.nodes.push(b);
-                    if d.sb_regs.contains(&b) {
-                        segments.push(Segment {
-                            delay_ps: t + setup,
-                            start_tile: seg.start_tile,
-                            end_tile: btile,
-                            nodes: std::mem::take(&mut seg.nodes),
-                            end: SegmentEnd::SbReg,
-                        });
-                        t = clk_q;
-                        seg = SegState { start_tile: btile, nodes: vec![b] };
-                    }
-                }
-                // Path end: CbIn of the sink.
-                match net.kind {
-                    NetKind::Data => {
-                        let ei = net.edges[k];
-                        if sink_registered(d, ei) {
-                            in_time[ei as usize] = t;
-                            in_seg[ei as usize] = Some(seg.clone());
-                            // Endpoint recorded when the sink node is
-                            // processed (adds capture core delay) — except
-                            // the sink may already have been processed if
-                            // it precedes `n` in topo order; that cannot
-                            // happen for Data nets on a DAG.
-                        } else {
-                            in_time[ei as usize] = t;
-                            in_seg[ei as usize] = Some(seg.clone());
-                        }
-                    }
-                    NetKind::Valid | NetKind::Ready | NetKind::Flush => {
-                        let (sink_node, _) = net.sinks[k];
-                        segments.push(Segment {
-                            delay_ps: t + setup,
-                            start_tile: seg.start_tile,
-                            end_tile: d.placement.pos[sink_node as usize],
-                            nodes: seg.nodes.clone(),
-                            end: SegmentEnd::NodeCore { node: sink_node },
-                        });
-                    }
-                }
-            }
+            walk_net(d, graph, ni, t_out, &out_seg[nu], &factor, &mut segments, &mut set_in);
         }
     }
 
-    // Capture endpoints for registered sinks whose driver comes later in
-    // topo order cannot exist on a DAG, but ready nets (reverse direction)
-    // were handled inline above.
-
-    // Internal tile paths also bound the clock: the MEM read path and the
-    // PE MAC path are register-to-register inside one tile.
-    for (i, node) in d.dfg.nodes.iter().enumerate() {
-        let tile = d.placement.pos[i];
-        let tfac = factor(tile);
-        let internal = match &node.op {
-            Op::Delay { .. } if node.tile_kind() == crate::arch::params::TileKind::Mem => {
-                Some(lib.mem_core_ps() as f64)
-            }
-            Op::Rom { .. } => Some(lib.mem_core_ps() as f64),
-            Op::Accum { .. } => Some(lib.pe_core_ps(OpClass::Mac) as f64),
-            _ => None,
-        };
-        if let Some(c) = internal {
-            segments.push(Segment {
-                delay_ps: clk_q + c * tfac + setup,
-                start_tile: tile,
-                end_tile: tile,
-                nodes: Vec::new(),
-                end: SegmentEnd::NodeCore { node: i as u32 },
-            });
-        }
-    }
+    segments.extend(internal_segments(d, &factor));
 
     // Combine with skew.
     let mut best: Option<(f64, usize)> = None;
@@ -368,6 +454,233 @@ fn analyze_impl(
         fmax_mhz: 1e6 / period_ps,
         segment: segments[idx].clone(),
         num_segments: segments.len(),
+    }
+}
+
+/// Incremental STA engine for the post-PnR pipelining loop.
+///
+/// Memoizes every per-node and per-net intermediate of a full [`analyze`]
+/// pass (the levelized topo order, arrival times at node outputs and edge
+/// sinks, and the timing segments each node/net contributes). On each
+/// call it diffs the design's mutable state — switch-box registers, FIFO
+/// stages, register-file delays, input registers — against a snapshot
+/// from the previous call, then re-propagates only downstream of the
+/// dirtied state: a changed SB register dirties exactly the nets whose
+/// routes cross it; a registration flip dirties the sink node; everything
+/// downstream re-runs only while recomputed values actually change.
+///
+/// Placement, routing and DFG topology must stay fixed between calls
+/// (they do across post-PnR iterations). Worst-case corners + global skew
+/// margin only — the gate-level surrogate's per-instance mode remains on
+/// [`analyze_instance`]. Results are bit-identical to [`analyze`];
+/// `debug_assertions` builds verify that on every call.
+pub struct StaEngine {
+    // Static caches (valid while placement/routes/topology are fixed).
+    order: Vec<u32>,
+    in_edges: Vec<Vec<EdgeId>>,
+    nets_of_src: Vec<Vec<usize>>,
+    nets_by_rrg: HashMap<RrgNode, Vec<usize>>,
+    internal_segs: Vec<Segment>,
+    // Memoized propagation state.
+    out_time: Vec<f64>,
+    out_seg: Vec<SegState>,
+    in_time: Vec<f64>,
+    in_seg: Vec<Option<SegState>>,
+    cap_segs: Vec<Vec<Segment>>,
+    net_segs: Vec<Vec<Segment>>,
+    // Snapshot of the design's mutable state, for diffing.
+    prev_sb_regs: HashSet<RrgNode>,
+    prev_sink_reg: Vec<bool>,
+    prev_input_regs: Vec<bool>,
+    first: bool,
+}
+
+impl StaEngine {
+    /// Build an engine over a routed design. The first `analyze` call is
+    /// a full propagation; later calls re-walk only the dirty cone.
+    pub fn new(d: &RoutedDesign) -> StaEngine {
+        let nn = d.dfg.nodes.len();
+        let ne = d.dfg.edges.len();
+        let mut in_edges: Vec<Vec<EdgeId>> = vec![Vec::new(); nn];
+        for (ei, e) in d.dfg.edges.iter().enumerate() {
+            in_edges[e.dst as usize].push(ei as EdgeId);
+        }
+        let mut nets_of_src: Vec<Vec<usize>> = vec![Vec::new(); nn];
+        for net in &d.nets {
+            nets_of_src[net.src as usize].push(net.id);
+        }
+        let mut nets_by_rrg: HashMap<RrgNode, Vec<usize>> = HashMap::new();
+        for (ni, r) in d.routes.iter().enumerate() {
+            for nde in r.nodes() {
+                nets_by_rrg.entry(nde).or_default().push(ni);
+            }
+        }
+        StaEngine {
+            order: d.dfg.topo_order(),
+            in_edges,
+            nets_of_src,
+            nets_by_rrg,
+            internal_segs: internal_segments(d, &|_| 1.0),
+            out_time: vec![0f64; nn],
+            out_seg: vec![SegState { start_tile: TileCoord::new(0, 0), nodes: Vec::new() }; nn],
+            in_time: vec![0f64; ne],
+            in_seg: vec![None; ne],
+            cap_segs: vec![Vec::new(); nn],
+            net_segs: vec![Vec::new(); d.nets.len()],
+            prev_sb_regs: HashSet::new(),
+            prev_sink_reg: vec![false; ne],
+            prev_input_regs: vec![false; nn],
+            first: true,
+        }
+    }
+
+    /// Incremental [`analyze`]: bit-identical result, re-propagating only
+    /// downstream of design state changed since the previous call.
+    pub fn analyze(&mut self, d: &RoutedDesign, graph: &InterconnectGraph) -> CritPath {
+        let nn = d.dfg.nodes.len();
+        let ne = d.dfg.edges.len();
+        assert_eq!(nn, self.out_time.len(), "DFG changed under StaEngine");
+        assert_eq!(ne, self.in_time.len(), "DFG changed under StaEngine");
+
+        // --- Diff the design's mutable state against the snapshot.
+        let cur_sink_reg: Vec<bool> =
+            (0..ne).map(|ei| sink_registered(d, ei as EdgeId)).collect();
+        let cur_input_regs: Vec<bool> = d.dfg.nodes.iter().map(|nd| nd.input_regs).collect();
+        let mut node_dirty = vec![self.first; nn];
+        let mut net_dirty = vec![self.first; d.nets.len()];
+        if !self.first {
+            for (ei, (&cur, &prev)) in
+                cur_sink_reg.iter().zip(&self.prev_sink_reg).enumerate()
+            {
+                if cur != prev {
+                    node_dirty[d.dfg.edges[ei].dst as usize] = true;
+                }
+            }
+            for (n, dirty) in node_dirty.iter_mut().enumerate() {
+                if cur_input_regs[n] != self.prev_input_regs[n] {
+                    *dirty = true;
+                }
+            }
+            for r in d.sb_regs.symmetric_difference(&self.prev_sb_regs) {
+                if let Some(nets) = self.nets_by_rrg.get(r) {
+                    for &ni in nets {
+                        net_dirty[ni] = true;
+                    }
+                }
+            }
+        }
+
+        // --- Re-propagate in topo order, only where dirty.
+        let factor = |_: TileCoord| -> f64 { 1.0 };
+        let mut out_changed = vec![false; nn];
+        let mut in_changed = vec![false; ne];
+        {
+            let StaEngine {
+                order,
+                in_edges,
+                nets_of_src,
+                out_time,
+                out_seg,
+                in_time,
+                in_seg,
+                cap_segs,
+                net_segs,
+                ..
+            } = self;
+            for &n in order.iter() {
+                let nu = n as usize;
+                let any_in = in_edges[nu].iter().any(|&ei| in_changed[ei as usize]);
+                if node_dirty[nu] || any_in {
+                    let tfac = factor(d.placement.pos[nu]);
+                    let (t, sgs) = node_out(d, n, tfac, in_edges, in_time, in_seg);
+                    out_changed[nu] =
+                        t.to_bits() != out_time[nu].to_bits() || sgs != out_seg[nu];
+                    out_time[nu] = t;
+                    out_seg[nu] = sgs;
+                    cap_segs[nu].clear();
+                    capture_segments(d, n, tfac, in_edges, in_time, in_seg, &mut cap_segs[nu]);
+                }
+                for &ni in &nets_of_src[nu] {
+                    let feeds = matches!(d.nets[ni].kind, NetKind::Data | NetKind::Flush);
+                    if !(net_dirty[ni] || (feeds && out_changed[nu])) {
+                        continue;
+                    }
+                    net_segs[ni].clear();
+                    walk_net(
+                        d,
+                        graph,
+                        ni,
+                        out_time[nu],
+                        &out_seg[nu],
+                        &factor,
+                        &mut net_segs[ni],
+                        &mut |ei, t, sgs| {
+                            let eu = ei as usize;
+                            if t.to_bits() != in_time[eu].to_bits()
+                                || in_seg[eu].as_ref() != Some(&sgs)
+                            {
+                                in_changed[eu] = true;
+                            }
+                            in_time[eu] = t;
+                            in_seg[eu] = Some(sgs);
+                        },
+                    );
+                }
+            }
+        }
+
+        // --- Snapshot for the next diff.
+        self.prev_sb_regs = d.sb_regs.clone();
+        self.prev_sink_reg = cur_sink_reg;
+        self.prev_input_regs = cur_input_regs;
+        self.first = false;
+
+        // --- Fold segments in the exact emission order of `analyze` so
+        // first-maximum tie-breaking picks the identical critical segment.
+        let skew = d.lib.max_skew_margin_ps() as f64;
+        let ordered = self
+            .order
+            .iter()
+            .flat_map(|&n| {
+                self.cap_segs[n as usize].iter().chain(
+                    self.nets_of_src[n as usize]
+                        .iter()
+                        .flat_map(|&ni| self.net_segs[ni].iter()),
+                )
+            })
+            .chain(self.internal_segs.iter());
+        let mut best: Option<(f64, &Segment)> = None;
+        let mut count = 0usize;
+        for s in ordered {
+            count += 1;
+            let period = s.delay_ps + skew;
+            if best.map(|(p, _)| period > p).unwrap_or(true) {
+                best = Some((period, s));
+            }
+        }
+        let (period_ps, seg) = best.expect("design has at least one timing segment");
+        let cp = CritPath {
+            period_ps,
+            fmax_mhz: 1e6 / period_ps,
+            segment: seg.clone(),
+            num_segments: count,
+        };
+
+        // Every incremental result is checked against a from-scratch
+        // propagation in debug builds — the equality-with-full-recompute
+        // contract of docs/performance.md.
+        #[cfg(debug_assertions)]
+        {
+            let full = analyze(d, graph);
+            debug_assert_eq!(
+                cp.period_ps.to_bits(),
+                full.period_ps.to_bits(),
+                "incremental STA period diverged"
+            );
+            debug_assert_eq!(cp.num_segments, full.num_segments, "segment count diverged");
+            debug_assert_eq!(cp.segment, full.segment, "critical segment diverged");
+        }
+        cp
     }
 }
 
@@ -480,6 +793,56 @@ mod tests {
         let inst = InstanceDelays { factor: &f, skew: &sk };
         let gl = analyze_instance(&d, &graph, &inst);
         assert!(gl.period_ps <= sta.period_ps, "gl {} sta {}", gl.period_ps, sta.period_ps);
+    }
+
+    #[test]
+    fn incremental_sta_matches_full_propagation() {
+        // Dirty-set re-propagation must reproduce full-propagation arrival
+        // times bitwise through a sequence of perturbations: input-register
+        // flips, SB register insert + remove (the post-PnR accept/rollback
+        // shape), FIFO bumps and register-file delays.
+        let app = crate::apps::dense::gaussian(64, 64, 1);
+        let (mut d, graph) = build(&app, 3);
+        let mut engine = StaEngine::new(&d);
+        let check = |engine: &mut StaEngine, d: &RoutedDesign| {
+            let inc = engine.analyze(d, &graph);
+            let full = analyze(d, &graph);
+            assert_eq!(inc.period_ps.to_bits(), full.period_ps.to_bits());
+            assert_eq!(inc.num_segments, full.num_segments);
+            assert_eq!(inc.segment, full.segment);
+        };
+        check(&mut engine, &d);
+        // Pipeline the ALUs (input-register flips).
+        for n in 0..d.dfg.nodes.len() {
+            if matches!(d.dfg.nodes[n].op, Op::Alu { .. }) {
+                d.dfg.nodes[n].input_regs = true;
+            }
+        }
+        check(&mut engine, &d);
+        // Insert an SB register mid-way through the critical segment, then
+        // remove it again (the rollback shape of post-PnR pipelining).
+        let cp = engine.analyze(&d, &graph);
+        let sbouts: Vec<RrgNode> = cp
+            .segment
+            .nodes
+            .iter()
+            .copied()
+            .filter(|&n| matches!(graph.decode(n).kind, NodeKind::SbOut { .. }))
+            .collect();
+        if let Some(&mid) = sbouts.get(sbouts.len() / 2) {
+            d.sb_regs.insert(mid);
+            check(&mut engine, &d);
+            d.sb_regs.remove(&mid);
+            check(&mut engine, &d);
+        }
+        // FIFO and register-file perturbations on one edge.
+        d.dfg.edge_mut(0).fifos += 1;
+        check(&mut engine, &d);
+        d.dfg.edge_mut(0).fifos -= 1;
+        d.rf_delay.insert(0, 2);
+        check(&mut engine, &d);
+        d.rf_delay.remove(&0);
+        check(&mut engine, &d);
     }
 
     #[test]

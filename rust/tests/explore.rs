@@ -330,3 +330,65 @@ fn sharded_halving_merge_matches_unsharded_report() {
     }
     let _ = std::fs::remove_dir_all(&root);
 }
+
+/// The incremental kernels (delta-cost placement, selective rip-up
+/// bookkeeping, dirty-set STA) are pure memoization: the global
+/// `--no-incremental` escape hatch must reproduce every output byte for
+/// byte — explore reports and encoded bitstreams alike. This is the
+/// end-to-end side of the contract written down in `docs/performance.md`;
+/// the per-kernel equivalence lives in the `pnr::place`, `pnr::route` and
+/// `timing::sta` unit tests.
+#[test]
+fn no_incremental_flag_reproduces_reports_and_bitstreams_byte_for_byte() {
+    use std::process::Command;
+
+    let bin = env!("CARGO_BIN_EXE_cascade");
+    let root = std::env::temp_dir().join(format!("cascade-noinc-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+
+    // Each invocation gets its own working directory: `results/` (reports,
+    // cache, bitstreams) is cwd-relative, so the two modes cannot share
+    // state — any agreement below is computed, not cached.
+    let run = |mode: &str, base_args: &[&str], extra: &[&str]| -> std::path::PathBuf {
+        let dir = root.join(mode);
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = Command::new(bin)
+            .current_dir(&dir)
+            .args(base_args)
+            .args(extra)
+            .output()
+            .expect("spawn cascade");
+        assert!(
+            out.status.success(),
+            "cascade {base_args:?} {extra:?} failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        dir
+    };
+
+    let explore_args = [
+        "explore", "--apps", "gaussian", "--levels", "none,compute", "--seeds", "1",
+        "--tiny", "--fast", "--threads", "2", "--no-cache",
+    ];
+    let fast = run("explore-fast", &explore_args, &[]);
+    let slow = run("explore-slow", &explore_args, &["--no-incremental"]);
+    for name in ["results/explore.json", "results/explore.md"] {
+        let a = std::fs::read(fast.join(name)).unwrap();
+        let b = std::fs::read(slow.join(name)).unwrap();
+        assert!(!a.is_empty(), "{name} must not be empty");
+        assert_eq!(a, b, "{name} must be byte-identical under --no-incremental");
+    }
+
+    let encode_args = [
+        "encode", "--app", "gaussian", "--level", "compute", "--seed", "1", "--tiny",
+        "--fast", "--out", "bits.txt",
+    ];
+    let fast = run("encode-fast", &encode_args, &[]);
+    let slow = run("encode-slow", &encode_args, &["--no-incremental"]);
+    let a = std::fs::read(fast.join("bits.txt")).unwrap();
+    let b = std::fs::read(slow.join("bits.txt")).unwrap();
+    assert!(!a.is_empty(), "bitstream must not be empty");
+    assert_eq!(a, b, "bitstream must be byte-identical under --no-incremental");
+
+    let _ = std::fs::remove_dir_all(&root);
+}
