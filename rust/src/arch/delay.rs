@@ -249,6 +249,27 @@ impl DelayLib {
         .round() as u32
     }
 
+    /// Combinational core delay of a fused compound op (`Op::Fused`): the
+    /// chained steps share one PE core, so the head pays its full class
+    /// delay and each tail step adds its *incremental* cost — its class
+    /// delay minus the operand-distribution stage the head already paid
+    /// (modeled as the Pass core), floored at one mux level of chaining
+    /// overhead. With the default calibration a Mul+Shr+Add compound
+    /// comes out well under two back-to-back PE cores, which is the whole
+    /// point of fusing.
+    pub fn fused_core_ps(&self, classes: &[OpClass]) -> u32 {
+        let Some((&head, tail)) = classes.split_first() else {
+            return 0;
+        };
+        let pass = self.pe_core_ps(OpClass::Pass);
+        let chain_mux = self.model.mux2_ps.round() as u32;
+        let mut total = self.pe_core_ps(head);
+        for &c in tail {
+            total += self.pe_core_ps(c).saturating_sub(pass).max(chain_mux);
+        }
+        total
+    }
+
     /// MEM tile core delay (SRAM read path).
     pub fn mem_core_ps(&self) -> u32 {
         self.model.mem_read_ps.round() as u32
@@ -325,6 +346,26 @@ mod tests {
         // Paper: "the delay through a PE tile is a maximum of 0.7ns".
         assert_eq!(l.pe_core_ps(OpClass::Mul), 700);
         assert!(l.pe_core_ps(OpClass::Add) < l.pe_core_ps(OpClass::Mul));
+    }
+
+    #[test]
+    fn fused_core_delay_composition() {
+        let l = lib();
+        // A compound is strictly slower than its head alone...
+        let chain = [OpClass::Mul, OpClass::Shift, OpClass::Add];
+        let fused = l.fused_core_ps(&chain);
+        assert!(fused > l.pe_core_ps(OpClass::Mul));
+        // ...but strictly faster than separate PE cores back to back.
+        let separate: u32 = chain.iter().map(|&c| l.pe_core_ps(c)).sum();
+        assert!(fused < separate, "fused {fused} vs separate {separate}");
+        // Degenerate cases.
+        assert_eq!(l.fused_core_ps(&[]), 0);
+        assert_eq!(l.fused_core_ps(&[OpClass::Add]), l.pe_core_ps(OpClass::Add));
+        // A Pass tail still costs at least the chaining mux.
+        assert_eq!(
+            l.fused_core_ps(&[OpClass::Add, OpClass::Pass]),
+            l.pe_core_ps(OpClass::Add) + 20
+        );
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::util::cli::Args;
 use crate::util::json::Json;
 
 /// Suites runnable by name (CLI `--suite`, default first).
-pub const SUITE_NAMES: &[&str] = &["compile", "pnr", "sta", "sim", "tables"];
+pub const SUITE_NAMES: &[&str] = &["compile", "pnr", "sta", "sim", "tables", "fuse"];
 
 /// CI-sized end-to-end suite: small-frame compiles through every pipeline
 /// stage plus STA and bitstream encoding in isolation. This is the suite
@@ -226,6 +226,28 @@ pub fn run_tables(b: &mut Bencher) {
     });
 }
 
+/// Paired unfused/fused measurements: the same app compiled through the
+/// identical flow with `fusion` off and on, so CI's `BENCH_fuse.json`
+/// shows the fusion pass's cost (the extra stage) next to its payoff
+/// (fewer placed nodes → smaller PnR problem). Entries come in
+/// `<name>_unfused` / `<name>_fused` pairs over the same config.
+pub fn run_fuse(b: &mut Bencher) {
+    let ctx = CompileCtx::paper();
+    let unfused = PipelineConfig::with_postpnr();
+    let fused = PipelineConfig { fusion: true, ..PipelineConfig::with_postpnr() };
+    for (name, app) in [
+        ("unsharp", crate::apps::dense::unsharp(256, 256, 1)),
+        ("harris", crate::apps::dense::harris(256, 256, 1)),
+    ] {
+        b.bench(&format!("compile/{name}_unfused"), || {
+            compile(&app, &ctx, &unfused, 3).unwrap().design.dfg.nodes.len()
+        });
+        b.bench(&format!("compile/{name}_fused"), || {
+            compile(&app, &ctx, &fused, 3).unwrap().design.dfg.nodes.len()
+        });
+    }
+}
+
 /// Run one suite by name into the given bencher.
 pub fn run_suite(name: &str, b: &mut Bencher) -> Result<(), String> {
     match name {
@@ -234,6 +256,7 @@ pub fn run_suite(name: &str, b: &mut Bencher) -> Result<(), String> {
         "sta" => run_sta(b),
         "sim" => run_sim(b),
         "tables" => run_tables(b),
+        "fuse" => run_fuse(b),
         other => {
             return Err(format!(
                 "unknown bench suite '{other}' (one of: {})",

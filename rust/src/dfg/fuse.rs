@@ -1,0 +1,383 @@
+//! Op fusion: collapse chains of single-fanout ALU ops into compound PE
+//! ops ([`Op::Fused`]) before mapping.
+//!
+//! Every placed node costs placement/routing time in the sweep and
+//! pipeline registers in the result, so fusing a chain of cheap ALU steps
+//! into one PE shrinks both the PnR problem and the register bill.
+//! Legality is strictly structural — the pass must be a pure refinement
+//! of the graph's semantics:
+//!
+//! * both endpoints are plain [`Op::Alu`] nodes — never MEM nodes
+//!   (`Delay`/`Rom`), never sparse (ready-valid) nodes, never IO;
+//! * neither op is `Mux` or `Mac` (they read extra state — the B1
+//!   selector / the accumulator — that the chained core does not carry);
+//! * the producer has fanout exactly 1 (fusing across a multi-fanout
+//!   edge would duplicate work or change visible values);
+//! * the consumer's *only* in-edge is the chain edge on data port 0
+//!   (its second operand, if any, is an immediate), so the fused tail
+//!   step is self-contained;
+//! * the chain edge is a bare B16 wire: no registers, no FIFOs — the
+//!   pass runs before pipelining, so this is true by construction and
+//!   checked defensively;
+//! * at most [`MAX_FUSED_OPS`] steps per compound, matching what the
+//!   bitstream encoding of a fused PE can carry.
+//!
+//! Fusion changes the mapping, not the function: fused and unfused
+//! compiles are *semantically* equivalent (identical interpreter and
+//! simulator outputs) but not byte-identical — artifacts from the two
+//! modes are not interchangeable (see `docs/fusion.md`, in deliberate
+//! contrast with the byte-identity contract of `docs/performance.md`).
+
+use super::ir::{AluOp, Dfg, FusedStep, Node, NodeId, Op};
+use crate::arch::canal::Layer;
+
+/// Maximum ALU steps per compound op (the fused-PE bitstream encoding
+/// carries the tail in MEM-param words; 4 steps fit comfortably).
+pub const MAX_FUSED_OPS: usize = 4;
+
+/// What the pass did, for `--profile` / report visibility.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FuseReport {
+    /// Number of compound nodes created.
+    pub chains: usize,
+    /// Total ALU nodes absorbed into compounds (≥ 2 per chain).
+    pub nodes_fused: usize,
+    /// Net node-count reduction (`nodes_fused - chains`).
+    pub nodes_removed: usize,
+}
+
+/// Is `op` a plain ALU node whose op may participate in a chain?
+fn fusible_alu(node: &Node) -> Option<(AluOp, Option<i64>)> {
+    match &node.op {
+        Op::Alu { op, const_b } if !matches!(op, AluOp::Mux | AluOp::Mac) => {
+            Some((*op, *const_b))
+        }
+        _ => None,
+    }
+}
+
+/// Can the single out-edge `e` of `src` be fused into `dst` as a tail
+/// step? See the module doc for the rule list.
+fn link_fusible(g: &Dfg, fanout: &[u32], e: &super::ir::Edge) -> bool {
+    let src = g.node(e.src);
+    let dst = g.node(e.dst);
+    if fusible_alu(src).is_none() || fusible_alu(dst).is_none() {
+        return false;
+    }
+    if src.input_regs || dst.input_regs {
+        return false; // pass runs pre-pipelining; don't move registers
+    }
+    if fanout[e.src as usize] != 1 {
+        return false;
+    }
+    if e.layer != Layer::B16 || e.dst_port != 0 || e.regs != 0 || e.fifos != 0 {
+        return false;
+    }
+    // dst must take its entire input from the chain: exactly one in-edge.
+    g.in_edges(e.dst).len() == 1
+}
+
+/// Run the fusion pass in place. Returns a report of what was fused.
+pub fn fuse_chains(g: &mut Dfg) -> FuseReport {
+    let fanout = g.fanout_counts();
+    // next[i] = j if i's single out-edge fuses into j.
+    let mut next: Vec<Option<NodeId>> = vec![None; g.nodes.len()];
+    let mut prev_fusible = vec![false; g.nodes.len()];
+    for e in &g.edges {
+        if link_fusible(g, &fanout, e) {
+            next[e.src as usize] = Some(e.dst);
+            prev_fusible[e.dst as usize] = true;
+        }
+    }
+    // Walk maximal chains from their heads, splitting greedily at
+    // MAX_FUSED_OPS; groups of length >= 2 become compounds.
+    let mut group_of: Vec<Option<usize>> = vec![None; g.nodes.len()];
+    let mut groups: Vec<Vec<NodeId>> = Vec::new();
+    for head in 0..g.nodes.len() as NodeId {
+        if prev_fusible[head as usize] || next[head as usize].is_none() {
+            continue; // not a chain head
+        }
+        let mut run: Vec<NodeId> = vec![head];
+        let mut cur = head;
+        while let Some(n) = next[cur as usize] {
+            run.push(n);
+            cur = n;
+        }
+        for chunk in run.chunks(MAX_FUSED_OPS) {
+            if chunk.len() < 2 {
+                continue;
+            }
+            let gi = groups.len();
+            for &m in chunk {
+                group_of[m as usize] = Some(gi);
+            }
+            groups.push(chunk.to_vec());
+        }
+    }
+    if groups.is_empty() {
+        return FuseReport::default();
+    }
+
+    // Rebuild: one Fused node per group, clones for everything else.
+    let mut out = Dfg::new();
+    let mut new_id: Vec<Option<NodeId>> = vec![None; g.nodes.len()];
+    for (i, node) in g.nodes.iter().enumerate() {
+        match group_of[i] {
+            // Only the group head materializes the compound.
+            Some(gi) if groups[gi][0] == i as NodeId => {
+                let members = &groups[gi];
+                let ops: Vec<FusedStep> = members
+                    .iter()
+                    .map(|&m| {
+                        let (op, const_b) = fusible_alu(g.node(m)).unwrap();
+                        FusedStep { op, const_b }
+                    })
+                    .collect();
+                let name = members
+                    .iter()
+                    .map(|&m| g.node(m).name.as_str())
+                    .collect::<Vec<_>>()
+                    .join("+");
+                let id = out.add_node(Op::Fused { ops }, name);
+                for &m in members {
+                    new_id[m as usize] = Some(id);
+                }
+            }
+            // Tail member: its new id is assigned when the head is
+            // visited (the head always materializes the compound for all
+            // members, whatever the id order).
+            Some(_) => {}
+            None => {
+                let id = out.add_node(node.op.clone(), node.name.clone());
+                out.node_mut(id).input_regs = node.input_regs;
+                new_id[i] = Some(id);
+            }
+        }
+    }
+    for e in &g.edges {
+        let internal = matches!(
+            (group_of[e.src as usize], group_of[e.dst as usize]),
+            (Some(a), Some(b)) if a == b
+        );
+        if internal {
+            continue;
+        }
+        let src = new_id[e.src as usize].expect("src mapped");
+        let dst = new_id[e.dst as usize].expect("dst mapped");
+        let id = out.add_edge(src, dst, e.dst_port, e.layer);
+        out.edge_mut(id).regs = e.regs;
+        out.edge_mut(id).fifos = e.fifos;
+    }
+
+    let nodes_fused: usize = groups.iter().map(Vec::len).sum();
+    let report = FuseReport {
+        chains: groups.len(),
+        nodes_fused,
+        nodes_removed: nodes_fused - groups.len(),
+    };
+    *g = out;
+    report
+}
+
+/// Inverse of [`fuse_chains`]: expand every compound back into its ALU
+/// chain. Node ids differ from the pre-fusion graph, but the node and
+/// edge multisets (keyed by name/shape) are identical — the property
+/// test relies on this.
+pub fn unfuse(g: &Dfg) -> Dfg {
+    let mut out = Dfg::new();
+    // first/last new id per old node (differ only for compounds).
+    let mut first_id: Vec<NodeId> = Vec::with_capacity(g.nodes.len());
+    let mut last_id: Vec<NodeId> = Vec::with_capacity(g.nodes.len());
+    for node in &g.nodes {
+        match &node.op {
+            Op::Fused { ops } => {
+                let names: Vec<&str> = node.name.split('+').collect();
+                let mut ids = Vec::with_capacity(ops.len());
+                for (k, s) in ops.iter().enumerate() {
+                    let name = names.get(k).copied().unwrap_or("fused");
+                    let id = out.add_node(
+                        Op::Alu { op: s.op, const_b: s.const_b },
+                        name.to_string(),
+                    );
+                    // Only the head inherits input registers.
+                    out.node_mut(id).input_regs = k == 0 && node.input_regs;
+                    if k > 0 {
+                        out.connect(ids[k - 1], id, 0);
+                    }
+                    ids.push(id);
+                }
+                first_id.push(ids[0]);
+                last_id.push(*ids.last().unwrap());
+            }
+            _ => {
+                let id = out.add_node(node.op.clone(), node.name.clone());
+                out.node_mut(id).input_regs = node.input_regs;
+                first_id.push(id);
+                last_id.push(id);
+            }
+        }
+    }
+    for e in &g.edges {
+        let id = out.add_edge(
+            last_id[e.src as usize],
+            first_id[e.dst as usize],
+            e.dst_port,
+            e.layer,
+        );
+        out.edge_mut(id).regs = e.regs;
+        out.edge_mut(id).fifos = e.fifos;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain_dfg() -> Dfg {
+        // in -> mul(*3) -> shr(>>1) -> add -> out ; in2 -> add port 1
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let i2 = g.add_node(Op::Input { lane: 1 }, "in2");
+        let m = g.add_node(Op::Alu { op: AluOp::Mul, const_b: Some(3) }, "mul");
+        let s = g.add_node(Op::Alu { op: AluOp::Shr, const_b: Some(1) }, "shr");
+        let a = g.add_node(Op::Alu { op: AluOp::Add, const_b: None }, "add");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "out");
+        g.connect(i, m, 0);
+        g.connect(m, s, 0);
+        g.connect(s, a, 0);
+        g.connect(i2, a, 1);
+        g.connect(a, o, 0);
+        g
+    }
+
+    #[test]
+    fn fuses_simple_chain() {
+        let mut g = chain_dfg();
+        let before = g.nodes.len();
+        let r = fuse_chains(&mut g);
+        // mul+shr fuse; add has two in-edges so it stays the compound's
+        // consumer rather than a tail step.
+        assert_eq!(r.chains, 1);
+        assert_eq!(r.nodes_fused, 2);
+        assert_eq!(g.nodes.len(), before - 1);
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+        let fused: Vec<&Node> = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Fused { .. }))
+            .collect();
+        assert_eq!(fused.len(), 1);
+        assert_eq!(fused[0].name, "mul+shr");
+    }
+
+    #[test]
+    fn never_fuses_across_multi_fanout() {
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let m = g.add_node(Op::Alu { op: AluOp::Mul, const_b: Some(2) }, "m");
+        let a = g.add_node(Op::Alu { op: AluOp::Add, const_b: Some(1) }, "a");
+        let b = g.add_node(Op::Alu { op: AluOp::Sub, const_b: Some(1) }, "b");
+        let o1 = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o1");
+        let o2 = g.add_node(Op::Output { lane: 1, decimate: 1 }, "o2");
+        g.connect(i, m, 0);
+        g.connect(m, a, 0); // m has fanout 2
+        g.connect(m, b, 0);
+        g.connect(a, o1, 0);
+        g.connect(b, o2, 0);
+        let n = g.nodes.len();
+        let r = fuse_chains(&mut g);
+        assert_eq!(r, FuseReport::default());
+        assert_eq!(g.nodes.len(), n);
+    }
+
+    #[test]
+    fn never_fuses_across_mem_nodes() {
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let m = g.add_node(Op::Alu { op: AluOp::Mul, const_b: Some(2) }, "m");
+        let d = g.add_node(Op::Delay { cycles: 64, pipelined: false }, "lb");
+        let a = g.add_node(Op::Alu { op: AluOp::Add, const_b: Some(1) }, "a");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        g.connect(i, m, 0);
+        g.connect(m, d, 0);
+        g.connect(d, a, 0);
+        g.connect(a, o, 0);
+        let r = fuse_chains(&mut g);
+        assert_eq!(r, FuseReport::default());
+    }
+
+    #[test]
+    fn never_fuses_mux_or_mac() {
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let m = g.add_node(Op::Alu { op: AluOp::Mul, const_b: Some(2) }, "m");
+        let x = g.add_node(Op::Alu { op: AluOp::Mux, const_b: Some(7) }, "mux");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        g.connect(i, m, 0);
+        g.connect(m, x, 0);
+        g.connect(x, o, 0);
+        let r = fuse_chains(&mut g);
+        assert_eq!(r, FuseReport::default());
+    }
+
+    #[test]
+    fn long_chain_splits_at_cap() {
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let mut prev = i;
+        for k in 0..6 {
+            let n = g.add_node(
+                Op::Alu { op: AluOp::Add, const_b: Some(k) },
+                format!("a{k}"),
+            );
+            g.connect(prev, n, 0);
+            prev = n;
+        }
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        g.connect(prev, o, 0);
+        let r = fuse_chains(&mut g);
+        assert_eq!(r.chains, 2); // 4 + 2
+        assert_eq!(r.nodes_fused, 6);
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+        for n in &g.nodes {
+            if let Op::Fused { ops } = &n.op {
+                assert!(ops.len() >= 2 && ops.len() <= MAX_FUSED_OPS);
+            }
+        }
+    }
+
+    #[test]
+    fn unfuse_round_trips_names_and_shapes() {
+        let orig = chain_dfg();
+        let mut fused = orig.clone();
+        fuse_chains(&mut fused);
+        let back = unfuse(&fused);
+        let key = |g: &Dfg| {
+            let mut nodes: Vec<String> = g
+                .nodes
+                .iter()
+                .map(|n| format!("{}:{:?}:{}", n.name, n.op, n.input_regs))
+                .collect();
+            nodes.sort();
+            let mut edges: Vec<String> = g
+                .edges
+                .iter()
+                .map(|e| {
+                    format!(
+                        "{}->{}:{}:{:?}:{}:{}",
+                        g.node(e.src).name,
+                        g.node(e.dst).name,
+                        e.dst_port,
+                        e.layer,
+                        e.regs,
+                        e.fifos
+                    )
+                })
+                .collect();
+            edges.sort();
+            (nodes, edges)
+        };
+        assert_eq!(key(&orig), key(&back));
+    }
+}

@@ -85,7 +85,7 @@ impl<'a> Interp<'a> {
                 Op::Accum { .. } => {
                     NodeState::Accum { acc: 0, t: 0, start: accum_start(i), out: 0 }
                 }
-                Op::Alu { .. } => NodeState::InRegs([0, 0]),
+                Op::Alu { .. } | Op::Fused { .. } => NodeState::InRegs([0, 0]),
                 _ => NodeState::None,
             })
             .collect();
@@ -160,6 +160,24 @@ impl<'a> Interp<'a> {
                     let sel = self.input_val(n, 0, Layer::B1);
                     op.eval(a, b, if *op == AluOp::Mux { sel } else { 0 })
                 }
+                Op::Fused { ops } => {
+                    // Same operand plumbing as `Alu` for the head step
+                    // (ports / input registers / head immediate), then the
+                    // tail folds in combinationally within the same cycle.
+                    let head_cb = ops[0].const_b;
+                    let (a, b) = if node.input_regs {
+                        match &self.state[n as usize] {
+                            NodeState::InRegs(r) => (r[0], head_cb.unwrap_or(r[1])),
+                            _ => unreachable!(),
+                        }
+                    } else {
+                        (
+                            self.input_val(n, 0, Layer::B16),
+                            head_cb.unwrap_or_else(|| self.input_val(n, 1, Layer::B16)),
+                        )
+                    };
+                    super::ir::eval_fused(ops, a, b)
+                }
                 Op::Delay { .. } => match &self.state[n as usize] {
                     NodeState::Delay(q) => q.front().copied().unwrap_or_else(|| {
                         // zero-length delay: combinational pass
@@ -221,7 +239,7 @@ impl<'a> Interp<'a> {
                         }
                     }
                 }
-                Op::Alu { .. } if node.input_regs => {
+                Op::Alu { .. } | Op::Fused { .. } if node.input_regs => {
                     let a = self.input_val(n, 0, Layer::B16);
                     let b = self.input_val(n, 1, Layer::B16);
                     if let NodeState::InRegs(r) = &mut self.state[n as usize] {
@@ -378,6 +396,208 @@ mod tests {
         // from t2; 6+7=13 completed at end of t3.
         let out = run_lane0(&g, vec![4, 5, 6, 7], 5);
         assert_eq!(out, vec![0, 0, 9, 9, 13]);
+    }
+
+    // -----------------------------------------------------------------
+    // Per-Op semantic pins: the interpreter is the differential-
+    // equivalence oracle for the fusion pass (tests/fuse.rs), so every
+    // variant's behaviour — including edge values — is pinned here.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn const_node_value_every_cycle() {
+        let mut g = Dfg::new();
+        let c = g.add_node(Op::Const { value: -42 }, "c");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        g.connect(c, o, 0);
+        assert_eq!(run_lane0(&g, vec![], 3), vec![-42, -42, -42]);
+    }
+
+    #[test]
+    fn flush_src_pulses_only_at_cycle_zero() {
+        let mut g = Dfg::new();
+        let f = g.add_node(Op::FlushSrc, "flush");
+        let p = g.add_node(Op::Alu { op: AluOp::Pass, const_b: None }, "p");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        g.connect(f, p, 0);
+        g.connect(p, o, 0);
+        assert_eq!(run_lane0(&g, vec![], 4), vec![1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn alu_edge_values_16bit_boundaries() {
+        // The reference model is exact i64 arithmetic (no 16-bit wrap):
+        // values past the word boundary stay exact, which is what the
+        // equivalence harness compares against.
+        let unary = |op: AluOp, a: i64| {
+            let mut g = Dfg::new();
+            let i = g.add_node(Op::Input { lane: 0 }, "in");
+            let u = g.add_node(Op::Alu { op, const_b: None }, "u");
+            let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+            g.connect(i, u, 0);
+            g.connect(u, o, 0);
+            run_lane0(&g, vec![a], 1)[0]
+        };
+        assert_eq!(unary(AluOp::Abs, -32768), 32768);
+        assert_eq!(unary(AluOp::Abs, i64::MIN + 1), i64::MAX);
+        assert_eq!(unary(AluOp::Pass, -7), -7);
+
+        let binary = |op: AluOp, a: i64, b: i64| {
+            let mut g = Dfg::new();
+            let i = g.add_node(Op::Input { lane: 0 }, "in");
+            let u = g.add_node(Op::Alu { op, const_b: Some(b) }, "u");
+            let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+            g.connect(i, u, 0);
+            g.connect(u, o, 0);
+            run_lane0(&g, vec![a], 1)[0]
+        };
+        assert_eq!(binary(AluOp::Mul, 32767, 32767), 1073676289); // > 16 bits, exact
+        assert_eq!(binary(AluOp::Add, i64::MAX - 1, 1), i64::MAX);
+        assert_eq!(binary(AluOp::Sub, -32768, 1), -32769);
+        // Shift amounts are masked to 4 bits (the PE barrel shifter).
+        assert_eq!(binary(AluOp::Shl, 1, 16), 1); // 16 & 15 == 0
+        assert_eq!(binary(AluOp::Shl, 1, 15), 32768);
+        // Shr is arithmetic: sign-extends negatives.
+        assert_eq!(binary(AluOp::Shr, -8, 1), -4);
+        assert_eq!(binary(AluOp::Shr, -1, 15), -1);
+        assert_eq!(binary(AluOp::Min, -5, 5), -5);
+        assert_eq!(binary(AluOp::Max, -5, 5), 5);
+        assert_eq!(binary(AluOp::And, 0b1100, 0b1010), 0b1000);
+        assert_eq!(binary(AluOp::Or, 0b1100, 0b1010), 0b1110);
+        assert_eq!(binary(AluOp::Xor, 0b1100, 0b1010), 0b0110);
+        assert_eq!(binary(AluOp::Gte, 5, 5), 1);
+        assert_eq!(binary(AluOp::Gte, 4, 5), 0);
+        assert_eq!(binary(AluOp::Lte, 4, 5), 1);
+        assert_eq!(binary(AluOp::Eq, -3, -3), 1);
+        assert_eq!(binary(AluOp::Eq, -3, 3), 0);
+        // Mac as a plain ALU op has no accumulator state: acc input is 0.
+        assert_eq!(binary(AluOp::Mac, 6, 7), 42);
+    }
+
+    #[test]
+    fn mux_selects_via_b1_layer() {
+        let mut g = Dfg::new();
+        let a = g.add_node(Op::Input { lane: 0 }, "a");
+        let b = g.add_node(Op::Input { lane: 1 }, "b");
+        let s = g.add_node(Op::Input { lane: 2 }, "sel");
+        // Selector feeds the comparator whose B1 output drives the mux.
+        let cmp = g.add_node(Op::Alu { op: AluOp::Gte, const_b: Some(1) }, "cmp");
+        let mux = g.add_node(Op::Alu { op: AluOp::Mux, const_b: None }, "mux");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        g.connect(s, cmp, 0);
+        g.connect(a, mux, 0);
+        g.connect(b, mux, 1);
+        g.add_edge(cmp, mux, 0, Layer::B1);
+        g.connect(mux, o, 0);
+        let mut m = BTreeMap::new();
+        m.insert(0u16, vec![10, 10, 10]);
+        m.insert(1u16, vec![20, 20, 20]);
+        m.insert(2u16, vec![0, 1, 0]);
+        let out = Interp::run(&g, &m, 3).outputs.remove(&0).unwrap();
+        assert_eq!(out, vec![10, 20, 10]);
+    }
+
+    #[test]
+    fn zero_length_delay_is_combinational() {
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let d = g.add_node(Op::Delay { cycles: 0, pipelined: false }, "d0");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        g.connect(i, d, 0);
+        g.connect(d, o, 0);
+        assert_eq!(run_lane0(&g, vec![9, 8, 7], 3), vec![9, 8, 7]);
+    }
+
+    #[test]
+    fn inputs_past_stream_end_read_zero() {
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        g.connect(i, o, 0);
+        assert_eq!(run_lane0(&g, vec![1], 3), vec![1, 0, 0]);
+    }
+
+    #[test]
+    fn accum_without_b_input_sums_a() {
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "a");
+        let acc = g.add_node(Op::Accum { period: 3 }, "acc");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        g.connect(i, acc, 0);
+        g.connect(acc, o, 0);
+        // Window 1+2+3=6 completes at end of t2, visible from t3.
+        assert_eq!(run_lane0(&g, vec![1, 2, 3, 4], 5), vec![0, 0, 0, 6, 6]);
+    }
+
+    #[test]
+    fn fused_node_matches_unfused_chain() {
+        // in -> mul(*3) -> shr(>>1) -> add(+5) as separate ALUs vs one
+        // compound: identical streams cycle for cycle.
+        let input: Vec<i64> = vec![0, 1, -2, 32767, -32768, 13];
+        let mut chain = Dfg::new();
+        let i = chain.add_node(Op::Input { lane: 0 }, "in");
+        let m = chain.add_node(Op::Alu { op: AluOp::Mul, const_b: Some(3) }, "m");
+        let s = chain.add_node(Op::Alu { op: AluOp::Shr, const_b: Some(1) }, "s");
+        let a = chain.add_node(Op::Alu { op: AluOp::Add, const_b: Some(5) }, "a");
+        let o = chain.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        chain.connect(i, m, 0);
+        chain.connect(m, s, 0);
+        chain.connect(s, a, 0);
+        chain.connect(a, o, 0);
+
+        let mut fused = Dfg::new();
+        let fi = fused.add_node(Op::Input { lane: 0 }, "in");
+        let f = fused.add_node(
+            Op::Fused {
+                ops: vec![
+                    crate::dfg::FusedStep { op: AluOp::Mul, const_b: Some(3) },
+                    crate::dfg::FusedStep { op: AluOp::Shr, const_b: Some(1) },
+                    crate::dfg::FusedStep { op: AluOp::Add, const_b: Some(5) },
+                ],
+            },
+            "m+s+a",
+        );
+        let fo = fused.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        fused.connect(fi, f, 0);
+        fused.connect(f, fo, 0);
+
+        let n = input.len() as u64;
+        assert_eq!(
+            run_lane0(&chain, input.clone(), n),
+            run_lane0(&fused, input.clone(), n)
+        );
+
+        // With input registers the compound delays one cycle, like an ALU.
+        fused.node_mut(f).input_regs = true;
+        let reg = run_lane0(&fused, input.clone(), n + 1);
+        let plain = run_lane0(&chain, input, n);
+        assert_eq!(&reg[1..], &plain[..]);
+    }
+
+    #[test]
+    fn fused_head_port1_operand() {
+        // Head takes a real port-1 operand (no immediate); tail adds 1.
+        let mut g = Dfg::new();
+        let a = g.add_node(Op::Input { lane: 0 }, "a");
+        let b = g.add_node(Op::Input { lane: 1 }, "b");
+        let f = g.add_node(
+            Op::Fused {
+                ops: vec![
+                    crate::dfg::FusedStep { op: AluOp::Sub, const_b: None },
+                    crate::dfg::FusedStep { op: AluOp::Abs, const_b: None },
+                ],
+            },
+            "sub+abs",
+        );
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        g.connect(a, f, 0);
+        g.connect(b, f, 1);
+        g.connect(f, o, 0);
+        let mut m = BTreeMap::new();
+        m.insert(0u16, vec![3, 10]);
+        m.insert(1u16, vec![8, 4]);
+        let out = Interp::run(&g, &m, 2).outputs.remove(&0).unwrap();
+        assert_eq!(out, vec![5, 6]);
     }
 
     #[test]

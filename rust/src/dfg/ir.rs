@@ -122,6 +122,36 @@ impl AluOp {
     }
 }
 
+/// One step of a fused compound PE op ([`Op::Fused`]). Step 0 (the head)
+/// keeps the compound node's external operand signature — input port 0
+/// plus either input port 1 or the immediate; every later step is
+/// single-input: it takes the previous step's result as operand `a` and
+/// its immediate (or 0 for unary ops) as operand `b`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusedStep {
+    pub op: AluOp,
+    /// Immediate second operand (the step's `PeConst`).
+    pub const_b: Option<i64>,
+}
+
+impl FusedStep {
+    /// Whether this step's op consumes a second operand at all.
+    pub fn needs_b(&self) -> bool {
+        !matches!(self.op, AluOp::Abs | AluOp::Pass)
+    }
+}
+
+/// Evaluate a fused step chain. The head sees external operands `a`/`b`
+/// (the caller resolves the head immediate into `b`, mirroring `Op::Alu`
+/// evaluation); each tail step folds its own immediate in.
+pub fn eval_fused(ops: &[FusedStep], a: i64, b: i64) -> i64 {
+    let mut v = ops[0].op.eval(a, b, 0);
+    for s in &ops[1..] {
+        v = s.op.eval(v, s.const_b.unwrap_or(0), 0);
+    }
+    v
+}
+
 /// Sparse dataflow primitives (paper §VII; the substrate follows the
 /// tensor-algebra dataflow style of [18]). Every sparse edge carries a
 /// data/valid/ready triple routed together.
@@ -158,6 +188,12 @@ pub enum Op {
     Const { value: i64 },
     /// PE ALU op. `const_b`: optional immediate second operand (PeConst).
     Alu { op: AluOp, const_b: Option<i64> },
+    /// Compound PE op produced by the fusion pass ([`crate::dfg::fuse`]):
+    /// a chain of single-fanout ALU ops collapsed into one PE. Steps run
+    /// in order within a single PE's combinational core; the result of
+    /// step `k` feeds operand `a` of step `k+1`. `Mux` and `Mac` never
+    /// appear (they read extra state the chained core does not carry).
+    Fused { ops: Vec<FusedStep> },
     /// Delay of `cycles` samples, realized as PE register-file shift
     /// registers (short) or MEM line buffers (long). `pipelined = false`
     /// for *algorithmic* delays (stencil row/column taps — part of the
@@ -200,7 +236,7 @@ impl Node {
         match &self.op {
             Op::Input { .. } | Op::Output { .. } | Op::FlushSrc => TileKind::Io,
             Op::Const { .. } => TileKind::Pe, // folded away by mapping; PE if materialized
-            Op::Alu { .. } | Op::Accum { .. } => TileKind::Pe,
+            Op::Alu { .. } | Op::Fused { .. } | Op::Accum { .. } => TileKind::Pe,
             Op::Rom { .. } => TileKind::Mem,
             Op::Delay { cycles, .. } => {
                 if *cycles >= 8 {
@@ -221,7 +257,7 @@ impl Node {
     pub fn latency(&self) -> u32 {
         match &self.op {
             Op::Input { .. } | Op::Output { .. } | Op::Const { .. } | Op::FlushSrc => 0,
-            Op::Alu { .. } => u32::from(self.input_regs),
+            Op::Alu { .. } | Op::Fused { .. } => u32::from(self.input_regs),
             Op::Delay { cycles, .. } => *cycles,
             Op::Rom { .. } => 1,    // synchronous SRAM read
             Op::Accum { .. } => 1,  // registered accumulator
@@ -238,7 +274,7 @@ impl Node {
     /// would destroy stencil window offsets.
     pub fn added_latency(&self) -> u32 {
         match &self.op {
-            Op::Alu { .. } => u32::from(self.input_regs),
+            Op::Alu { .. } | Op::Fused { .. } => u32::from(self.input_regs),
             // Register-file shift registers created by the chain transform
             // carry pipelining latency; stencil taps do not.
             Op::Delay { cycles, pipelined: true } => *cycles,
@@ -251,6 +287,23 @@ impl Node {
     pub fn comb_class(&self) -> Option<OpClass> {
         match &self.op {
             Op::Alu { op, .. } => Some(op.op_class()),
+            // A compound core's worst member dominates; STA composes the
+            // exact chained delay via `DelayLib::fused_core_ps`, this class
+            // is the summary used for reporting.
+            Op::Fused { ops } => {
+                fn rank(c: OpClass) -> u8 {
+                    match c {
+                        OpClass::Pass => 0,
+                        OpClass::Logic => 1,
+                        OpClass::Shift => 2,
+                        OpClass::Cmp => 3,
+                        OpClass::Add => 4,
+                        OpClass::Mul => 5,
+                        OpClass::Mac => 6,
+                    }
+                }
+                ops.iter().map(|s| s.op.op_class()).max_by_key(|&c| rank(c))
+            }
             Op::Const { .. } => Some(OpClass::Pass),
             Op::Sparse(s) => Some(match s {
                 SparseOp::Intersect | SparseOp::Union => OpClass::Cmp,
@@ -444,9 +497,38 @@ impl Dfg {
             }
         }
         // Inputs of each node must be fully connected for ops that need
-        // both operands.
+        // both operands. A fused compound keeps the head step's operand
+        // signature; tail steps must be self-contained (unary or immediate).
         for (i, node) in self.nodes.iter().enumerate() {
-            if let Op::Alu { op, const_b } = &node.op {
+            let head = match &node.op {
+                Op::Alu { op, const_b } => Some((*op, *const_b)),
+                Op::Fused { ops } => {
+                    if ops.len() < 2 {
+                        problems.push(format!(
+                            "fused node {i} ({}) has {} steps; min 2",
+                            node.name,
+                            ops.len()
+                        ));
+                    }
+                    for (k, s) in ops.iter().enumerate() {
+                        if matches!(s.op, AluOp::Mux | AluOp::Mac) {
+                            problems.push(format!(
+                                "fused node {i} ({}) step {k} is {:?}; Mux/Mac cannot fuse",
+                                node.name, s.op
+                            ));
+                        }
+                        if k > 0 && s.needs_b() && s.const_b.is_none() {
+                            problems.push(format!(
+                                "fused node {i} ({}) tail step {k} needs an immediate",
+                                node.name
+                            ));
+                        }
+                    }
+                    ops.first().map(|s| (s.op, s.const_b))
+                }
+                _ => None,
+            };
+            if let Some((op, const_b)) = head {
                 let needs_b = const_b.is_none()
                     && !matches!(op, AluOp::Abs | AluOp::Pass);
                 let ports: Vec<u8> = self
@@ -620,6 +702,67 @@ mod tests {
         assert_eq!(AluOp::Mux.eval(5, 9, 0), 5);
         assert_eq!(AluOp::Mux.eval(5, 9, 1), 9);
         assert_eq!(AluOp::Gte.eval(4, 4, 0), 1);
+    }
+
+    #[test]
+    fn fused_node_semantics_and_validation() {
+        // (in * 2) then >>1 then +3, as one compound PE.
+        let ops = vec![
+            FusedStep { op: AluOp::Mul, const_b: Some(2) },
+            FusedStep { op: AluOp::Shr, const_b: Some(1) },
+            FusedStep { op: AluOp::Add, const_b: Some(3) },
+        ];
+        assert_eq!(eval_fused(&ops, 5, 2), 8); // (5*2)>>1 + 3
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let f = g.add_node(Op::Fused { ops }, "f");
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "out");
+        g.connect(i, f, 0);
+        g.connect(f, o, 0);
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+        assert_eq!(g.node(f).tile_kind(), TileKind::Pe);
+        assert_eq!(g.node(f).latency(), 0);
+        assert_eq!(g.node(f).added_latency(), 0);
+        assert!(!g.node(f).output_registered());
+        // Worst member class dominates (Mul here).
+        assert_eq!(g.node(f).comb_class(), Some(OpClass::Mul));
+        g.node_mut(f).input_regs = true;
+        assert_eq!(g.node(f).latency(), 1);
+        assert_eq!(g.node(f).added_latency(), 1);
+    }
+
+    #[test]
+    fn fused_validation_rejects_illegal_steps() {
+        // Single-step compound, Mux member, and tail without immediate.
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let f = g.add_node(
+            Op::Fused {
+                ops: vec![FusedStep { op: AluOp::Mux, const_b: Some(1) }],
+            },
+            "bad",
+        );
+        g.connect(i, f, 0);
+        let problems = g.validate();
+        assert!(problems.iter().any(|p| p.contains("min 2")), "{problems:?}");
+        assert!(problems.iter().any(|p| p.contains("Mux/Mac")), "{problems:?}");
+
+        let mut g2 = Dfg::new();
+        let i2 = g2.add_node(Op::Input { lane: 0 }, "in");
+        let f2 = g2.add_node(
+            Op::Fused {
+                ops: vec![
+                    FusedStep { op: AluOp::Abs, const_b: None },
+                    FusedStep { op: AluOp::Add, const_b: None },
+                ],
+            },
+            "tail-needs-imm",
+        );
+        g2.connect(i2, f2, 0);
+        assert!(g2
+            .validate()
+            .iter()
+            .any(|p| p.contains("needs an immediate")));
     }
 
     #[test]

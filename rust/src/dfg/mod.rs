@@ -15,9 +15,12 @@
 //!   golden reference the fabric simulator is checked against (the
 //!   cross-language golden reference is the AOT-compiled JAX/Pallas model
 //!   executed through PJRT, see `runtime`).
+//! * [`fuse`] — op fusion: collapses single-fanout ALU chains into
+//!   compound PE ops ahead of mapping (see `docs/fusion.md`).
 
 pub mod ir;
 pub mod build;
 pub mod interp;
+pub mod fuse;
 
-pub use ir::{AluOp, Dfg, Edge, EdgeId, Node, NodeId, Op, SparseOp};
+pub use ir::{AluOp, Dfg, Edge, EdgeId, FusedStep, Node, NodeId, Op, SparseOp};

@@ -147,6 +147,20 @@ fn node_json(n: &Node) -> Json {
                 j.set("cb", i64_json(*c));
             }
         }
+        Op::Fused { ops } => {
+            // One [opcode, const_b-or-null] pair per member step.
+            j.set("op", "fused").set(
+                "steps",
+                ops.iter()
+                    .map(|s| {
+                        Json::Arr(vec![
+                            Json::from(s.op.encode() as u64),
+                            s.const_b.map_or(Json::Null, i64_json),
+                        ])
+                    })
+                    .collect::<Vec<Json>>(),
+            );
+        }
         Op::Delay { cycles, pipelined } => {
             j.set("op", "delay").set("cycles", *cycles).set("pipelined", *pipelined);
         }
@@ -454,6 +468,24 @@ fn node_from(j: &Json) -> Result<Node, String> {
             };
             Op::Alu { op: alu("alu")?, const_b }
         }
+        "fused" => {
+            let steps = req_arr(j, "steps")?
+                .iter()
+                .map(|s| -> Result<crate::dfg::ir::FusedStep, String> {
+                    let a = s.as_arr().filter(|a| a.len() == 2).ok_or("artifact: bad fused step")?;
+                    let code =
+                        a[0].as_u64().ok_or_else(|| "artifact: bad fused step op".to_string())?;
+                    let op = AluOp::decode(code as u32)
+                        .ok_or_else(|| format!("artifact: bad alu op {code}"))?;
+                    let const_b = match &a[1] {
+                        Json::Null => None,
+                        v => Some(i64_from(v, "fused step const")?),
+                    };
+                    Ok(crate::dfg::ir::FusedStep { op, const_b })
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            Op::Fused { ops: steps }
+        }
         "delay" => Op::Delay {
             cycles: req_u64(j, "cycles")? as u32,
             pipelined: req_bool(j, "pipelined")?,
@@ -682,6 +714,9 @@ pub fn from_json(j: &Json) -> Result<Compiled, String> {
         bcast_buffers: req_usize(j, "bcast_buffers")?,
         postpnr,
         dup,
+        // The fusion report is advisory (not part of the fingerprint);
+        // rehydrated artifacts carry the fused graph itself in `design`.
+        fused: None,
     };
     let actual = fingerprint(&c);
     if actual != fp {
@@ -1130,6 +1165,22 @@ mod tests {
         // Metrics derived from the rehydrated artifact match exactly.
         use super::super::cache::PointMetrics;
         assert_eq!(PointMetrics::from_compiled(&c), PointMetrics::from_compiled(&back));
+    }
+
+    #[test]
+    fn fused_artifact_round_trips() {
+        let ctx = CompileCtx::paper();
+        let app = crate::apps::by_name_tiny("unsharp").unwrap();
+        let cfg = PipelineConfig { fusion: true, ..PipelineConfig::with_postpnr() };
+        let c = compile(&app, &ctx, &cfg, 3).unwrap();
+        assert!(
+            c.design.dfg.nodes.iter().any(|n| matches!(n.op, Op::Fused { .. })),
+            "fixture must exercise a compound node"
+        );
+        let bytes = to_bytes(&c);
+        let back = from_bytes(&bytes).unwrap();
+        assert_eq!(fingerprint(&c), fingerprint(&back));
+        assert_eq!(bytes, to_bytes(&back));
     }
 
     #[test]

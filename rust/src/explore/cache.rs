@@ -50,7 +50,10 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
 /// kernel switches cannot affect any compiled output (the byte-identity
 /// contract in `docs/performance.md`), so they must not perturb cache keys
 /// — artifacts compiled with and without `--no-incremental` are
-/// interchangeable.
+/// interchangeable. `fusion` is the opposite case: fused and unfused
+/// compiles are semantically equivalent but structurally different
+/// artifacts (see `docs/fusion.md`), so the knob MUST participate and the
+/// two never share a key.
 pub fn config_signature(cfg: &PipelineConfig) -> String {
     let bcast = match &cfg.broadcast {
         None => "off".to_string(),
@@ -64,7 +67,7 @@ pub fn config_signature(cfg: &PipelineConfig) -> String {
         Some(p) => format!("{}/{:?}", p.max_iters, p.min_gain),
     };
     format!(
-        "compute={};rf={:?};bcast={};alpha={:?};effort={:?};postpnr={};dup={};flush={}",
+        "compute={};rf={:?};bcast={};alpha={:?};effort={:?};postpnr={};dup={};flush={};fuse={}",
         cfg.compute,
         cfg.regfile_threshold,
         bcast,
@@ -72,7 +75,8 @@ pub fn config_signature(cfg: &PipelineConfig) -> String {
         cfg.place_effort,
         postpnr,
         cfg.unroll_dup,
-        cfg.hardened_flush
+        cfg.hardened_flush,
+        cfg.fusion
     )
 }
 
@@ -547,6 +551,11 @@ mod tests {
         let mut effort = base.clone();
         effort.place_effort = 0.35;
         assert_ne!(k0, point_key("gaussian", &effort, 3, "paper", &arch));
+        // Fusion produces a structurally different artifact — never share
+        // a key with the unfused compile.
+        let mut fuse = base.clone();
+        fuse.fusion = true;
+        assert_ne!(k0, point_key("gaussian", &fuse, 3, "paper", &arch));
         // Architecture knobs beyond the grid dimensions participate too.
         let mut rf = arch.clone();
         rf.regfile_words = 64;

@@ -98,7 +98,8 @@ pub fn point_json(r: &PointResult, rung: Option<usize>) -> Json {
         .set("iters", r.point.iters.map_or(Json::Null, Json::from))
         .set("tracks", r.point.tracks.map_or(Json::Null, Json::from))
         .set("regwords", r.point.regwords.map_or(Json::Null, Json::from))
-        .set("fifo", r.point.fifo.map_or(Json::Null, Json::from));
+        .set("fifo", r.point.fifo.map_or(Json::Null, Json::from))
+        .set("fuse", r.point.fuse.map_or(Json::Null, Json::from));
     if let Some(k) = rung {
         jp.set("rung", k);
     }
@@ -435,6 +436,7 @@ mod tests {
                 tracks: None,
                 regwords: None,
                 fifo: None,
+                fuse: None,
             },
             metrics: Ok(PointMetrics {
                 crit_ns: crit,

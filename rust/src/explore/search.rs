@@ -438,6 +438,7 @@ mod tests {
                 tracks: None,
                 regwords: None,
                 fifo: None,
+                fuse: None,
             },
             metrics: Ok(PointMetrics {
                 crit_ns: crit,

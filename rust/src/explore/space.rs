@@ -63,6 +63,10 @@ pub struct ExploreSpec {
     pub regwords: Vec<usize>,
     /// Architecture axis: sparse-pipelining FIFO depth.
     pub fifos: Vec<usize>,
+    /// Compiler axis: op-fusion on/off (empty = the level's own default,
+    /// i.e. fusion off). Participates in `config_signature`, so fused and
+    /// unfused points never share a cache key.
+    pub fuses: Vec<bool>,
     /// Capstone-style power cap (mW): points whose estimated total power
     /// exceeds the cap are reported but excluded from the frontier.
     pub power_cap_mw: Option<f64>,
@@ -82,6 +86,7 @@ impl Default for ExploreSpec {
             tracks: Vec::new(),
             regwords: Vec::new(),
             fifos: Vec::new(),
+            fuses: Vec::new(),
             power_cap_mw: None,
             fast: false,
             scale: Scale::Paper,
@@ -131,6 +136,11 @@ impl ExploreSpec {
         self
     }
 
+    pub fn with_fuses(mut self, fuses: impl IntoIterator<Item = bool>) -> Self {
+        self.fuses = fuses.into_iter().collect();
+        self
+    }
+
     pub fn with_power_cap(mut self, cap_mw: Option<f64>) -> Self {
         self.power_cap_mw = cap_mw;
         self
@@ -150,7 +160,7 @@ impl ExploreSpec {
     ///
     /// Flags: `--apps a,b` `--levels l1,l2` `--alphas 1.0,1.35|sweep`
     /// `--seeds 1,2` `--iters 25,200` `--tracks 3,5` `--regwords 16,32`
-    /// `--fifo 2,4` `--power-cap MW` `--fast` `--tiny`.
+    /// `--fifo 2,4` `--fuse on,off` `--power-cap MW` `--fast` `--tiny`.
     pub fn from_args(args: &Args) -> Result<ExploreSpec, String> {
         let mut spec = ExploreSpec::default();
         if let Some(s) = args.opt("apps") {
@@ -180,6 +190,16 @@ impl ExploreSpec {
         }
         if let Some(s) = args.opt("fifo") {
             spec.fifos = parse_csv(s, "fifo")?;
+        }
+        if let Some(s) = args.opt("fuse") {
+            spec.fuses = split_csv(s)
+                .into_iter()
+                .map(|x| match x.as_str() {
+                    "on" => Ok(true),
+                    "off" => Ok(false),
+                    _ => Err(format!("bad --fuse entry '{x}' (use on|off)")),
+                })
+                .collect::<Result<Vec<bool>, String>>()?;
         }
         if let Some(s) = args.opt("power-cap") {
             let cap: f64 =
@@ -226,9 +246,9 @@ impl ExploreSpec {
         Ok(())
     }
 
-    /// Enumerate the grid in deterministic axis-major order
-    /// (app → level → alpha → seed → iters → tracks → regwords → fifo).
-    /// Point ids are dense indices into this order.
+    /// Enumerate the grid in deterministic axis-major order (app → level →
+    /// alpha → seed → iters → tracks → regwords → fifo → fuse). Point ids
+    /// are dense indices into this order.
     pub fn points(&self) -> Vec<ExplorePoint> {
         fn axis<T: Copy>(values: &[T]) -> Vec<Option<T>> {
             if values.is_empty() {
@@ -242,6 +262,7 @@ impl ExploreSpec {
         let tracks = axis(&self.tracks);
         let regwords = axis(&self.regwords);
         let fifos = axis(&self.fifos);
+        let fuses = axis(&self.fuses);
         let mut out = Vec::new();
         for app in &self.apps {
             for level in &self.levels {
@@ -251,17 +272,20 @@ impl ExploreSpec {
                             for &t in &tracks {
                                 for &rw in &regwords {
                                     for &fd in &fifos {
-                                        out.push(ExplorePoint {
-                                            id: out.len(),
-                                            app: app.clone(),
-                                            level: level.clone(),
-                                            alpha,
-                                            seed,
-                                            iters: it,
-                                            tracks: t,
-                                            regwords: rw,
-                                            fifo: fd,
-                                        });
+                                        for &fu in &fuses {
+                                            out.push(ExplorePoint {
+                                                id: out.len(),
+                                                app: app.clone(),
+                                                level: level.clone(),
+                                                alpha,
+                                                seed,
+                                                iters: it,
+                                                tracks: t,
+                                                regwords: rw,
+                                                fifo: fd,
+                                                fuse: fu,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -300,6 +324,7 @@ impl ExploreSpec {
             .set("tracks", self.tracks.iter().map(|&t| t.into()).collect::<Vec<Json>>())
             .set("regwords", self.regwords.iter().map(|&w| w.into()).collect::<Vec<Json>>())
             .set("fifos", self.fifos.iter().map(|&f| f.into()).collect::<Vec<Json>>())
+            .set("fuses", self.fuses.iter().map(|&b| b.into()).collect::<Vec<Json>>())
             .set("power_cap_mw", self.power_cap_mw.map_or(Json::Null, Json::from))
             .set("fast", self.fast)
             .set("scale", self.scale.tag());
@@ -337,6 +362,12 @@ impl ExploreSpec {
             tracks: numbers(j, "tracks", Json::as_usize)?,
             regwords: numbers(j, "regwords", Json::as_usize)?,
             fifos: numbers(j, "fifos", Json::as_usize)?,
+            // Absent in manifests written before the fusion axis existed;
+            // tolerate that as "axis unset" rather than failing the load.
+            fuses: match j.get("fuses") {
+                None => Vec::new(),
+                Some(_) => numbers(j, "fuses", Json::as_bool)?,
+            },
             power_cap_mw,
             fast: j.get("fast").and_then(Json::as_bool).ok_or("spec: bad 'fast'")?,
             scale: Scale::parse(
@@ -366,6 +397,9 @@ impl ExploreSpec {
         if !self.fifos.is_empty() {
             s.push_str(&format!(" x {} fifos", self.fifos.len()));
         }
+        if !self.fuses.is_empty() {
+            s.push_str(&format!(" x {} fuses", self.fuses.len()));
+        }
         s
     }
 }
@@ -383,6 +417,8 @@ pub struct ExplorePoint {
     pub tracks: Option<usize>,
     pub regwords: Option<usize>,
     pub fifo: Option<usize>,
+    /// Op-fusion override (`None` = the level default, fusion off).
+    pub fuse: Option<bool>,
 }
 
 impl ExplorePoint {
@@ -399,6 +435,9 @@ impl ExplorePoint {
             if let Some(p) = &mut cfg.postpnr {
                 *p = PostPnrParams { max_iters: it, ..p.clone() };
             }
+        }
+        if let Some(f) = self.fuse {
+            cfg.fusion = f;
         }
         tune(&cfg, fast)
     }
@@ -451,6 +490,9 @@ impl ExplorePoint {
         }
         if let Some(d) = self.fifo {
             s.push_str(&format!(" fd={d}"));
+        }
+        if let Some(f) = self.fuse {
+            s.push_str(if f { " fuse=on" } else { " fuse=off" });
         }
         s
     }
@@ -566,6 +608,40 @@ mod tests {
     }
 
     #[test]
+    fn fuse_axis_parses_enumerates_and_resolves() {
+        let spec =
+            ExploreSpec::from_args(&args("explore --apps gaussian --levels full --fuse on,off"))
+                .unwrap();
+        assert_eq!(spec.fuses, vec![true, false]);
+        let pts = spec.points();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].fuse, Some(true));
+        assert_eq!(pts[1].fuse, Some(false));
+        assert!(pts[0].config(false).fusion);
+        assert!(!pts[1].config(false).fusion);
+        assert!(pts[0].label().contains("fuse=on"));
+        assert!(pts[1].label().contains("fuse=off"));
+        assert!(spec.shape().contains("2 fuses"));
+        // The axis default leaves fusion off (the level default).
+        let plain = ExploreSpec::default().points();
+        assert_eq!(plain[0].fuse, None);
+        assert!(!plain[0].config(false).fusion);
+        // Bad values are rejected at parse time.
+        assert!(ExploreSpec::from_args(&args("explore --fuse yes")).is_err());
+        // A spec with the axis set has a different JSON image — the shard
+        // manifest fingerprint covers it (mixed-fusion merges abort).
+        let without = ExploreSpec::default();
+        let with = ExploreSpec::default().with_fuses([true]);
+        assert_ne!(with.to_json().to_string_compact(), without.to_json().to_string_compact());
+        // Manifests written before the axis existed still load (axis unset).
+        let mut old = without.to_json();
+        if let Json::Obj(m) = &mut old {
+            m.remove("fuses");
+        }
+        assert_eq!(ExploreSpec::from_json(&old).unwrap().fuses, Vec::<bool>::new());
+    }
+
+    #[test]
     fn candidates_suppress_budget_axis() {
         let spec = ExploreSpec::default()
             .with_apps(["gaussian"])
@@ -594,6 +670,7 @@ mod tests {
             .with_tracks([3, 5])
             .with_regwords([16])
             .with_fifos([2, 4])
+            .with_fuses([true, false])
             .with_power_cap(Some(450.5))
             .with_fast(true)
             .with_scale(Scale::Tiny);
@@ -637,6 +714,7 @@ mod tests {
             tracks: None,
             regwords: None,
             fifo: None,
+            fuse: None,
         };
         let cfg = p.config(false);
         assert_eq!(cfg.place_alpha, 1.5);

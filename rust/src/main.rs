@@ -6,7 +6,7 @@
 //! cascade exp <fig6|fig7|table1|fig8|fig9|fig10|table2|fig11|summary|all> [--fast] [--no-cache]
 //! cascade explore [--apps a,b] [--levels l1,l2] [--alphas 1.0,1.35|sweep]
 //!                 [--seeds 1,2] [--iters 25,200] [--tracks 3,5] [--regwords 16,32]
-//!                 [--fifo 2,4] [--search grid|halving] [--eta N] [--min-budget N]
+//!                 [--fifo 2,4] [--fuse on,off] [--search grid|halving] [--eta N] [--min-budget N]
 //!                 [--objective knee|crit|edp|regs] [--shard K/N] [--cache-cap CAP]
 //!                 [--threads N] [--power-cap MW] [--fast] [--tiny] [--no-cache]
 //!                 [--profile]                              + per-stage compile-time breakdown
@@ -105,6 +105,7 @@ fn usage() -> ! {
            exp     <id|all> [--fast] [--seed N] [--no-cache]   regenerate paper tables/figures\n\
            explore [--apps a,b] [--levels l1,l2] [--alphas x,y|sweep] [--seeds 1,2]\n\
                    [--iters 25,200] [--tracks 3,5] [--regwords 16,32] [--fifo 2,4]\n\
+                   [--fuse on,off]\n\
                    [--search grid|halving] [--eta N] [--min-budget N]\n\
                    [--objective knee|crit|edp|regs] [--shard K/N]\n\
                    [--threads N] [--power-cap MW] [--fast] [--tiny]\n\
@@ -114,7 +115,7 @@ fn usage() -> ! {
            explore-merge <dir>...                               merge shard manifests + caches\n\
                                                                 into one results/explore report\n\
            encode  --app <name> [--level <level>] [--seed N] [--alpha X] [--iters N]\n\
-                   [--tracks N] [--regwords N] [--fifo N] [--fast] [--tiny]\n\
+                   [--tracks N] [--regwords N] [--fifo N] [--fuse on|off] [--fast] [--tiny]\n\
                    [--from-cache | --key HEX] [--out FILE]     emit bitstream config words;\n\
                                                                 --from-cache loads the compiled\n\
                                                                 artifact (zero recompiles)\n\

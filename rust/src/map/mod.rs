@@ -63,7 +63,13 @@ pub fn fold_constants(g: &mut Dfg) -> usize {
             if let Op::Const { value } = n.op {
                 for e in &g.edges {
                     if e.src == i as NodeId && e.dst_port == 1 {
-                        if let Op::Alu { const_b: None, .. } = g.nodes[e.dst as usize].op {
+                        let foldable = match &g.nodes[e.dst as usize].op {
+                            Op::Alu { const_b: None, .. } => true,
+                            // A compound's port-1 operand feeds its head.
+                            Op::Fused { ops } => ops[0].const_b.is_none(),
+                            _ => false,
+                        };
+                        if foldable {
                             change = Some((i as NodeId, e.dst, value));
                             break 'search;
                         }
@@ -72,8 +78,10 @@ pub fn fold_constants(g: &mut Dfg) -> usize {
             }
         }
         let Some((cnode, consumer, value)) = change else { break };
-        if let Op::Alu { const_b, .. } = &mut g.node_mut(consumer).op {
-            *const_b = Some(value);
+        match &mut g.node_mut(consumer).op {
+            Op::Alu { const_b, .. } => *const_b = Some(value),
+            Op::Fused { ops } => ops[0].const_b = Some(value),
+            _ => unreachable!(),
         }
         g.edges.retain(|e| !(e.src == cnode && e.dst == consumer && e.dst_port == 1));
         folded += 1;
@@ -180,6 +188,39 @@ mod tests {
             })
             .unwrap();
         assert_eq!(add, Some(7));
+        assert!(g.validate().is_empty());
+    }
+
+    #[test]
+    fn folds_constant_into_fused_head_immediate() {
+        use crate::dfg::ir::FusedStep;
+        let mut g = Dfg::new();
+        let i = g.add_node(Op::Input { lane: 0 }, "in");
+        let c = g.add_node(Op::Const { value: 5 }, "c5");
+        let f = g.add_node(
+            Op::Fused {
+                ops: vec![
+                    FusedStep { op: AluOp::Sub, const_b: None },
+                    FusedStep { op: AluOp::Abs, const_b: None },
+                ],
+            },
+            "sub+abs",
+        );
+        let o = g.add_node(Op::Output { lane: 0, decimate: 1 }, "o");
+        g.connect(i, f, 0);
+        g.connect(c, f, 1);
+        g.connect(f, o, 0);
+        assert_eq!(fold_constants(&mut g), 1);
+        assert_eq!(g.nodes.len(), 3); // const removed
+        let head_cb = g
+            .nodes
+            .iter()
+            .find_map(|n| match &n.op {
+                Op::Fused { ops } => Some(ops[0].const_b),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(head_cb, Some(5));
         assert!(g.validate().is_empty());
     }
 

@@ -34,6 +34,7 @@ pub struct SpanRecord {
 /// Canonical stage order for reports (histograms sort alphabetically on
 /// the wire; human tables read better in pipeline order).
 pub const STAGE_ORDER: &[&str] = &[
+    "fuse",
     "map",
     "pipeline",
     "schedule",

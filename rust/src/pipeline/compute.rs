@@ -10,7 +10,7 @@ use super::bdm::branch_delay_match;
 pub fn compute_pipelining(g: &mut Dfg) -> (usize, u64) {
     let mut pes = 0;
     for node in &mut g.nodes {
-        if matches!(node.op, Op::Alu { .. }) && !node.input_regs {
+        if matches!(node.op, Op::Alu { .. } | Op::Fused { .. }) && !node.input_regs {
             node.input_regs = true;
             pes += 1;
         }

@@ -57,6 +57,12 @@ pub struct PipelineConfig {
     pub unroll_dup: bool,
     /// §VI hardened flush network.
     pub hardened_flush: bool,
+    /// Op fusion ahead of mapping (`dfg::fuse`): collapse single-fanout
+    /// ALU chains into compound PE ops. Changes the *mapping*, never the
+    /// function — fused and unfused artifacts are semantically equivalent
+    /// but not byte-identical, so this knob participates in
+    /// `config_signature`/cache keys (see `docs/fusion.md`).
+    pub fusion: bool,
 }
 
 impl PipelineConfig {
@@ -71,6 +77,7 @@ impl PipelineConfig {
             postpnr: None,
             unroll_dup: false,
             hardened_flush: false,
+            fusion: false,
         }
     }
 
@@ -209,6 +216,8 @@ pub struct Compiled {
     pub bcast_buffers: usize,
     pub postpnr: Option<PostPnrReport>,
     pub dup: Option<DupPlan>,
+    /// What the fusion pass did (None when `cfg.fusion` is off).
+    pub fused: Option<crate::dfg::fuse::FuseReport>,
 }
 
 impl Compiled {
@@ -243,6 +252,10 @@ fn compile_inner(
     // flow pays one TLS load per stage and outputs never change.
     let arch = if cfg.hardened_flush { flush::harden(&ctx.arch) } else { ctx.arch.clone() };
     let mut dfg = app.dfg.clone();
+    // Op fusion runs between DFG construction and mapping: the mapper,
+    // placer and everything downstream see the compound nodes.
+    let fused = cfg.fusion.then(|| crate::dfg::fuse::fuse_chains(&mut dfg));
+    crate::obs::trace::mark("fuse");
     let map_report = crate::map::map_dfg(&mut dfg, &arch).map_err(CompileError::Map)?;
     crate::obs::trace::mark("map");
 
@@ -311,6 +324,7 @@ fn compile_inner(
         bcast_buffers,
         postpnr: postpnr_report,
         dup: None,
+        fused,
     })
 }
 

@@ -146,8 +146,8 @@ pub fn check_auth(j: &Json, token: Option<&str>) -> Result<(), (ErrorCode, Strin
 
 /// Every request member (and `cascade encode`/`client` flag) that names
 /// part of a point — what `encode` by `key` must *not* also receive.
-pub const POINT_MEMBERS: [&str; 10] = [
-    "app", "level", "seed", "alpha", "iters", "tracks", "regwords", "fifo", "fast", "tiny",
+pub const POINT_MEMBERS: [&str; 11] = [
+    "app", "level", "seed", "alpha", "iters", "tracks", "regwords", "fifo", "fuse", "fast", "tiny",
 ];
 
 /// One exploration point, as named by a client: the same axis vocabulary
@@ -164,6 +164,7 @@ pub struct PointQuery {
     pub tracks: Option<usize>,
     pub regwords: Option<usize>,
     pub fifo: Option<usize>,
+    pub fuse: Option<bool>,
     pub fast: bool,
     pub tiny: bool,
 }
@@ -190,6 +191,12 @@ impl PointQuery {
             None => None,
             Some(s) => Some(s.parse().map_err(|_| format!("bad --alpha '{s}'"))?),
         };
+        let fuse = match args.opt("fuse") {
+            None => None,
+            Some("on") => Some(true),
+            Some("off") => Some(false),
+            Some(s) => return Err(format!("bad --fuse '{s}' (use on|off)")),
+        };
         Ok(PointQuery {
             app: app.to_string(),
             level: args.opt("level").map(str::to_string),
@@ -199,6 +206,7 @@ impl PointQuery {
             tracks: opt_usize("tracks")?,
             regwords: opt_usize("regwords")?,
             fifo: opt_usize("fifo")?,
+            fuse,
             fast: args.flag("fast"),
             tiny: args.flag("tiny"),
         })
@@ -227,6 +235,9 @@ impl PointQuery {
         }
         if let Some(v) = self.fifo {
             spec = spec.with_fifos([v]);
+        }
+        if let Some(f) = self.fuse {
+            spec = spec.with_fuses([f]);
         }
         spec = spec.with_fast(self.fast);
         if self.tiny {
@@ -271,6 +282,10 @@ impl PointQuery {
                 Some(v) => v.as_bool().ok_or_else(|| format!("non-boolean \"{name}\"")),
             }
         };
+        let fuse = match j.get("fuse") {
+            None => None,
+            Some(v) => Some(v.as_bool().ok_or("non-boolean \"fuse\"")?),
+        };
         Ok(PointQuery {
             app,
             level,
@@ -280,6 +295,7 @@ impl PointQuery {
             tracks: opt_usize("tracks")?,
             regwords: opt_usize("regwords")?,
             fifo: opt_usize("fifo")?,
+            fuse,
             fast: flag("fast")?,
             tiny: flag("tiny")?,
         })
@@ -317,6 +333,9 @@ impl PointQuery {
         }
         if let Some(v) = self.fifo {
             j.set("fifo", v);
+        }
+        if let Some(f) = self.fuse {
+            j.set("fuse", f);
         }
         if self.fast {
             j.set("fast", true);
@@ -502,6 +521,7 @@ mod tests {
             tracks: Some(3),
             regwords: Some(32),
             fifo: Some(4),
+            fuse: Some(true),
             fast: true,
             tiny: true,
         };
@@ -594,7 +614,7 @@ mod tests {
         };
         let args = parse(
             "encode --app gaussian --level compute --seed 7 --alpha 1.35 \
-             --iters 50 --tracks 3 --regwords 32 --fifo 4 --fast --tiny",
+             --iters 50 --tracks 3 --regwords 32 --fifo 4 --fuse on --fast --tiny",
         );
         let q = PointQuery::from_args(&args).unwrap();
         assert_eq!(q.app, "gaussian");
@@ -605,11 +625,17 @@ mod tests {
         assert_eq!(q.tracks, Some(3));
         assert_eq!(q.regwords, Some(32));
         assert_eq!(q.fifo, Some(4));
+        assert_eq!(q.fuse, Some(true));
         assert!(q.fast && q.tiny);
+        assert_eq!(
+            PointQuery::from_args(&parse("encode --app g --fuse off")).unwrap().fuse,
+            Some(false)
+        );
 
         assert!(PointQuery::from_args(&parse("encode")).is_err(), "--app is required");
         assert!(PointQuery::from_args(&parse("encode --app g --seed x")).is_err());
         assert!(PointQuery::from_args(&parse("encode --app g --iters x")).is_err());
+        assert!(PointQuery::from_args(&parse("encode --app g --fuse maybe")).is_err());
     }
 
     #[test]

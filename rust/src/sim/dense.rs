@@ -210,6 +210,25 @@ impl<'a> FabricSim<'a> {
                     let sel = self.input_val(n, 0, Layer::B1);
                     op.eval(a, b, if *op == AluOp::Mux { sel } else { 0 })
                 }
+                Op::Fused { ops } => {
+                    // One PE executes the whole chain each cycle: every
+                    // member op switches.
+                    self.activity.pe_ops += ops.len() as u64;
+                    self.activity.pe_mul_ops +=
+                        ops.iter().filter(|s| matches!(s.op, AluOp::Mul | AluOp::Mac)).count()
+                            as u64;
+                    let head_cb = ops[0].const_b;
+                    let (a, b) = if node.input_regs {
+                        let r = self.in_regs[n as usize];
+                        (r[0], head_cb.unwrap_or(r[1]))
+                    } else {
+                        (
+                            self.input_val(n, 0, Layer::B16),
+                            head_cb.unwrap_or_else(|| self.input_val(n, 1, Layer::B16)),
+                        )
+                    };
+                    crate::dfg::ir::eval_fused(ops, a, b)
+                }
                 Op::Delay { cycles, .. } => {
                     self.activity.mem_accesses += 2; // read + write per cycle
                     if *cycles == 0 {
@@ -241,7 +260,7 @@ impl<'a> FabricSim<'a> {
         for n in 0..self.d.dfg.nodes.len() as u32 {
             let node = &self.d.dfg.nodes[n as usize];
             match &node.op {
-                Op::Alu { .. } if node.input_regs => {
+                Op::Alu { .. } | Op::Fused { .. } if node.input_regs => {
                     let a = self.input_val(n, 0, Layer::B16);
                     let b = self.input_val(n, 1, Layer::B16);
                     pe_samples.push((n, [a, b]));

@@ -99,6 +99,32 @@ pub fn encode(d: &RoutedDesign, sched: &Schedule, graph: &InterconnectGraph) -> 
                     bs.set(arch, &cs, tile, Feature::PeConst, (*c as i32 as u32) & 0xFFFF);
                 }
             }
+            Op::Fused { ops } => {
+                // Head step configures the PE like a plain ALU; tail steps
+                // ride in the high MEM-param words (8..), disjoint from
+                // the schedule's generator words (1..=5) and the Accum
+                // period word (0).
+                bs.set(arch, &cs, tile, Feature::PeOp, ops[0].op.encode());
+                if node.input_regs {
+                    for port in 0..arch.data_in_ports as u8 {
+                        bs.set(arch, &cs, tile, Feature::PeInRegEn { port }, 1);
+                    }
+                }
+                if let Some(c) = ops[0].const_b {
+                    bs.set(arch, &cs, tile, Feature::PeConst, (c as i32 as u32) & 0xFFFF);
+                }
+                for (k, s) in ops[1..].iter().enumerate() {
+                    let has_c = u32::from(s.const_b.is_some());
+                    let imm = (s.const_b.unwrap_or(0) as i32 as u32) & 0xFFFF;
+                    bs.set(
+                        arch,
+                        &cs,
+                        tile,
+                        Feature::MemParam { idx: 8 + k as u8 },
+                        (s.op.encode() << 17) | (has_c << 16) | imm,
+                    );
+                }
+            }
             Op::Delay { cycles, .. } => {
                 if node.tile_kind() == crate::arch::params::TileKind::Mem {
                     bs.set(arch, &cs, tile, Feature::MemMode, MEM_LINEBUF);
@@ -207,13 +233,34 @@ pub fn verify_roundtrip(
             }
         }
     }
-    // Every PE's opcode survives.
+    // Every PE's opcode survives (compound heads encode like plain ALUs;
+    // their tail steps must decode back from the MEM-param words).
     for (i, node) in d.dfg.nodes.iter().enumerate() {
-        if let Op::Alu { op, .. } = &node.op {
-            let tile = d.placement.pos[i];
-            if bs.get(arch, &cs, tile, Feature::PeOp) != op.encode() {
-                problems.push(format!("PeOp mismatch at node {i}"));
+        let tile = d.placement.pos[i];
+        match &node.op {
+            Op::Alu { op, .. } => {
+                if bs.get(arch, &cs, tile, Feature::PeOp) != op.encode() {
+                    problems.push(format!("PeOp mismatch at node {i}"));
+                }
             }
+            Op::Fused { ops } => {
+                if bs.get(arch, &cs, tile, Feature::PeOp) != ops[0].op.encode() {
+                    problems.push(format!("fused head PeOp mismatch at node {i}"));
+                }
+                for (k, s) in ops[1..].iter().enumerate() {
+                    let v = bs.get(arch, &cs, tile, Feature::MemParam { idx: 8 + k as u8 });
+                    let dec_op = crate::dfg::ir::AluOp::decode(v >> 17);
+                    let dec_has_c = (v >> 16) & 1 == 1;
+                    let want_imm = (s.const_b.unwrap_or(0) as i32 as u32) & 0xFFFF;
+                    if dec_op != Some(s.op)
+                        || dec_has_c != s.const_b.is_some()
+                        || (v & 0xFFFF) != want_imm
+                    {
+                        problems.push(format!("fused tail step {k} mismatch at node {i}"));
+                    }
+                }
+            }
+            _ => {}
         }
     }
     problems
@@ -247,6 +294,21 @@ mod tests {
         let via_ctx = encode(&c.design, &c.schedule, &ctx.graph);
         let via_artifact = encode_compiled(&c);
         assert_eq!(via_ctx.to_text(), via_artifact.to_text());
+    }
+
+    #[test]
+    fn roundtrip_clean_for_fused_design() {
+        let ctx = CompileCtx::paper();
+        let app = crate::apps::dense::unsharp(64, 64, 1);
+        let cfg = PipelineConfig { fusion: true, ..PipelineConfig::with_postpnr() };
+        let c = compile(&app, &ctx, &cfg, 3).unwrap();
+        assert!(
+            c.design.dfg.nodes.iter().any(|n| matches!(n.op, Op::Fused { .. })),
+            "unsharp has fusible chains"
+        );
+        let bs = encode(&c.design, &c.schedule, &ctx.graph);
+        let problems = verify_roundtrip(&c.design, &bs, &ctx.graph);
+        assert!(problems.is_empty(), "{problems:?}");
     }
 
     #[test]

@@ -84,6 +84,15 @@ pub fn steady_state_activity(d: &RoutedDesign) -> Activity {
                     a.reg_writes += 2;
                 }
             }
+            Op::Fused { ops } => {
+                // One PE, but every member op's logic switches each cycle.
+                a.pe_ops += ops.len() as u64;
+                a.pe_mul_ops +=
+                    ops.iter().filter(|s| matches!(s.op, AluOp::Mul | AluOp::Mac)).count() as u64;
+                if node.input_regs {
+                    a.reg_writes += 2;
+                }
+            }
             Op::Sparse(s) => {
                 // Sparse units: one op per cycle at full throughput; FIFO
                 // write per input.

@@ -135,7 +135,7 @@ fn sink_registered(d: &RoutedDesign, e: EdgeId) -> bool {
         return true;
     }
     match &dst.op {
-        Op::Alu { .. } => dst.input_regs,
+        Op::Alu { .. } | Op::Fused { .. } => dst.input_regs,
         // Sparse compute units have FIFOs at every input by default
         // (§VIII-D: "sparse applications use FIFOs at the input of every
         // compute unit, so compute pipelining is applied by default").
@@ -205,12 +205,21 @@ fn node_out(
         }
         Op::Const { .. } => (clk_q, SegState { start_tile: tile, nodes: Vec::new() }),
         Op::Output { .. } => (clk_q, SegState { start_tile: tile, nodes: Vec::new() }),
-        Op::Alu { op, .. } => {
+        Op::Alu { .. } | Op::Fused { .. } => {
+            // Compound ops chain inside one PE core: their composed delay
+            // comes from `DelayLib::fused_core_ps`; a plain ALU is the
+            // single-step special case of the same lookup.
+            let core = match &node.op {
+                Op::Alu { op, .. } => lib.pe_core_ps(op.op_class()) as f64,
+                Op::Fused { ops } => {
+                    let classes: Vec<OpClass> =
+                        ops.iter().map(|s| s.op.op_class()).collect();
+                    lib.fused_core_ps(&classes) as f64
+                }
+                _ => unreachable!(),
+            };
             if node.input_regs {
-                (
-                    clk_q + lib.pe_core_ps(op.op_class()) as f64 * tfac,
-                    SegState { start_tile: tile, nodes: Vec::new() },
-                )
+                (clk_q + core * tfac, SegState { start_tile: tile, nodes: Vec::new() })
             } else {
                 // Combinational: continue from the worst input.
                 let mut worst = clk_q;
@@ -226,7 +235,7 @@ fn node_out(
                         }
                     }
                 }
-                (worst + lib.pe_core_ps(op.op_class()) as f64 * tfac, seg)
+                (worst + core * tfac, seg)
             }
         }
     }

@@ -392,3 +392,30 @@ fn no_incremental_flag_reproduces_reports_and_bitstreams_byte_for_byte() {
 
     let _ = std::fs::remove_dir_all(&root);
 }
+
+/// The `--fuse` axis participates in the shard manifest fingerprint:
+/// fused and unfused compiles are semantically equivalent but produce
+/// structurally different artifacts, so an `explore-merge` over shards
+/// that disagree on the fusion setting must abort as spec drift instead
+/// of silently mixing the two cohorts.
+#[test]
+fn merge_rejects_shards_with_mixed_fusion_settings() {
+    let ctx = CompileCtx::paper();
+    let root =
+        std::env::temp_dir().join(format!("cascade-shard-fusedrift-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+
+    let spec_off = tiny_spec();
+    let spec_on = tiny_spec().with_fuses([true]);
+
+    let dir1 = root.join("shard-1");
+    let dir2 = root.join("shard-2");
+    let sh1 = ShardSpec { index: 1, count: 2 };
+    let sh2 = ShardSpec { index: 2, count: 2 };
+    shard::run_sharded(&spec_off, &ctx, 2, &SearchKind::Grid, &sh1, &dir1).unwrap();
+    shard::run_sharded(&spec_on, &ctx, 2, &SearchKind::Grid, &sh2, &dir2).unwrap();
+
+    let err = shard::merge(&[dir1, dir2], &ctx.arch, &root.join("merged")).unwrap_err();
+    assert!(err.contains("spec drift"), "expected a spec-drift abort, got: {err}");
+    let _ = std::fs::remove_dir_all(&root);
+}
