@@ -279,13 +279,225 @@ pub fn to_json(suite: &str, b: &Bencher) -> Json {
     j
 }
 
-/// `cascade bench [--suite NAME] [--json] [--fast]`: run a suite from the
-/// CLI. `--fast` presets tiny warmup/budget (unless the env knobs are
-/// already set) so CI smoke runs stay cheap; `--json` writes
-/// `BENCH_<suite>.json` next to the working directory in addition to the
-/// `results/bench_<suite>.json` the bencher itself records.
+// ---------------------------------------------------------------------------
+// Snapshot comparison (`cascade bench --compare`, ISSUE 10)
+// ---------------------------------------------------------------------------
+
+/// Outcome of one benchmark's old-vs-new comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Present in both, within tolerance either way.
+    Ok,
+    /// New median slower than old by more than the tolerance. Fails the run.
+    Regression,
+    /// New median faster than old by more than the tolerance (informational).
+    Improved,
+    /// Only in the new snapshot (informational — coverage grew).
+    New,
+    /// Only in the old snapshot. Fails the run: a silently vanished
+    /// benchmark is lost regression coverage, not a pass.
+    Gone,
+}
+
+impl Verdict {
+    pub fn label(self) -> &'static str {
+        match self {
+            Verdict::Ok => "OK",
+            Verdict::Regression => "REGRESSION",
+            Verdict::Improved => "IMPROVED",
+            Verdict::New => "NEW",
+            Verdict::Gone => "GONE",
+        }
+    }
+
+    /// Does this verdict fail the comparison?
+    pub fn fails(self) -> bool {
+        matches!(self, Verdict::Regression | Verdict::Gone)
+    }
+}
+
+/// One row of the comparison table.
+#[derive(Debug, Clone)]
+pub struct CompareRow {
+    pub name: String,
+    pub old_ns: Option<f64>,
+    pub new_ns: Option<f64>,
+    pub verdict: Verdict,
+}
+
+impl CompareRow {
+    /// `new/old` slowdown ratio (1.0 = unchanged), when both sides exist.
+    pub fn ratio(&self) -> Option<f64> {
+        match (self.old_ns, self.new_ns) {
+            (Some(o), Some(n)) if o > 0.0 => Some(n / o),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a `cascade-bench-v1` snapshot into `(suite, [(name, median_ns)])`.
+pub fn parse_snapshot(j: &Json) -> Result<(String, Vec<(String, f64)>), String> {
+    if j.get("schema").and_then(Json::as_str) != Some("cascade-bench-v1") {
+        return Err("not a cascade-bench-v1 snapshot (missing/unknown \"schema\")".into());
+    }
+    let suite = j
+        .get("suite")
+        .and_then(Json::as_str)
+        .ok_or("snapshot missing \"suite\"")?
+        .to_string();
+    let results = j
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or("snapshot missing \"results\" array")?;
+    let mut out = Vec::new();
+    for r in results {
+        let name = r
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("result entry missing \"name\"")?;
+        let median = r
+            .get("median_ns")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("result '{name}' missing numeric \"median_ns\""))?;
+        out.push((name.to_string(), median));
+    }
+    Ok((suite, out))
+}
+
+/// Compare two snapshots' medians under a symmetric percentage tolerance:
+/// a benchmark regresses when `new > old * (1 + tol/100)` and improves
+/// when `new < old / (1 + tol/100)`. Rows come out in old-snapshot order
+/// with new-only entries appended.
+pub fn compare(
+    old: &[(String, f64)],
+    new: &[(String, f64)],
+    tolerance_pct: f64,
+) -> Vec<CompareRow> {
+    let factor = 1.0 + tolerance_pct / 100.0;
+    let mut rows = Vec::new();
+    for (name, o) in old {
+        let row = match new.iter().find(|(n, _)| n == name) {
+            Some((_, nv)) => {
+                let verdict = if *nv > o * factor {
+                    Verdict::Regression
+                } else if *nv < o / factor {
+                    Verdict::Improved
+                } else {
+                    Verdict::Ok
+                };
+                CompareRow { name: name.clone(), old_ns: Some(*o), new_ns: Some(*nv), verdict }
+            }
+            None => CompareRow { name: name.clone(), old_ns: Some(*o), new_ns: None, verdict: Verdict::Gone },
+        };
+        rows.push(row);
+    }
+    for (name, nv) in new {
+        if !old.iter().any(|(n, _)| n == name) {
+            rows.push(CompareRow {
+                name: name.clone(),
+                old_ns: None,
+                new_ns: Some(*nv),
+                verdict: Verdict::New,
+            });
+        }
+    }
+    rows
+}
+
+/// Render the verdict table plus a one-line summary.
+pub fn render_compare(rows: &[CompareRow], tolerance_pct: f64) -> String {
+    use crate::util::bench::fmt_ns;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<52} {:>12} {:>12} {:>8}  verdict\n",
+        "benchmark", "old median", "new median", "ratio"
+    ));
+    let opt = |v: Option<f64>| v.map(|ns| fmt_ns(ns)).unwrap_or_else(|| "-".into());
+    for r in rows {
+        let ratio = r.ratio().map(|x| format!("{x:.2}x")).unwrap_or_else(|| "-".into());
+        out.push_str(&format!(
+            "{:<52} {:>12} {:>12} {:>8}  {}\n",
+            r.name,
+            opt(r.old_ns),
+            opt(r.new_ns),
+            ratio,
+            r.verdict.label()
+        ));
+    }
+    let fails = rows.iter().filter(|r| r.verdict.fails()).count();
+    out.push_str(&format!(
+        "compare: {} benchmark(s), tolerance {:.0}%: {}\n",
+        rows.len(),
+        tolerance_pct,
+        if fails == 0 { "PASS".to_string() } else { format!("{fails} FAILING") }
+    ));
+    out
+}
+
+fn read_snapshot(path: &str) -> Result<(String, Vec<(String, f64)>), String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("bench --compare: cannot read {path}: {e}"))?;
+    let j = Json::parse(&text).map_err(|e| format!("bench --compare: {path}: {e}"))?;
+    parse_snapshot(&j).map_err(|e| format!("bench --compare: {path}: {e}"))
+}
+
+/// `cascade bench --compare OLD.json [--against NEW.json] [--tolerance PCT]`:
+/// diff two snapshots, print the verdict table, fail on REGRESSION/GONE.
+/// Without `--against`, the new side defaults to `BENCH_<suite>.json` in
+/// the working directory (the file a `--json` run of OLD's suite writes).
+fn compare_cli(args: &Args, old_path: &str) -> Result<(), String> {
+    let tolerance: f64 = match args.opt("tolerance") {
+        Some(s) => s
+            .parse()
+            .ok()
+            .filter(|t: &f64| *t >= 0.0)
+            .ok_or_else(|| format!("bench: bad --tolerance '{s}' (percentage >= 0)"))?,
+        None => 50.0,
+    };
+    let (old_suite, old) = read_snapshot(old_path)?;
+    let default_new = format!("BENCH_{old_suite}.json");
+    let new_path = args.opt_or("against", &default_new);
+    let (new_suite, new) = read_snapshot(new_path)?;
+    if new_suite != old_suite {
+        println!(
+            "bench --compare: note: suites differ ('{old_suite}' vs '{new_suite}') — \
+             comparing by benchmark name"
+        );
+    }
+    let rows = compare(&old, &new, tolerance);
+    print!("{}", render_compare(&rows, tolerance));
+    let failing: Vec<&CompareRow> = rows.iter().filter(|r| r.verdict.fails()).collect();
+    if failing.is_empty() {
+        Ok(())
+    } else {
+        Err(format!(
+            "bench --compare: {} benchmark(s) failed vs {old_path} (tolerance {tolerance:.0}%): {}",
+            failing.len(),
+            failing
+                .iter()
+                .map(|r| format!("{} [{}]", r.name, r.verdict.label()))
+                .collect::<Vec<_>>()
+                .join(", ")
+        ))
+    }
+}
+
+/// `cascade bench [--suite s1,s2,...] [--json] [--fast]` or
+/// `cascade bench --compare OLD.json [--against NEW.json] [--tolerance PCT]`.
+///
+/// Run mode: `--suite` takes one or more comma-separated suite names (run
+/// in order, one `BENCH_<suite>.json` each under `--json`); `--fast`
+/// presets tiny warmup/budget (unless the env knobs are already set) so CI
+/// smoke runs stay cheap.
+///
+/// Compare mode: diff two `cascade-bench-v1` snapshots and exit non-zero
+/// on any REGRESSION (median slowdown beyond `--tolerance`, default 50%)
+/// or GONE (benchmark vanished) verdict — the CI regression gate against
+/// `bench/baseline/` (see `docs/performance.md`).
 pub fn bench_cli(args: &Args) -> Result<(), String> {
-    let suite = args.opt_or("suite", "compile");
+    if let Some(old_path) = args.opt("compare") {
+        return compare_cli(args, old_path);
+    }
     if args.flag("fast") {
         for (var, val) in
             [("CASCADE_BENCH_WARMUP_MS", "10"), ("CASCADE_BENCH_BUDGET_MS", "60")]
@@ -295,15 +507,17 @@ pub fn bench_cli(args: &Args) -> Result<(), String> {
             }
         }
     }
-    let mut b = Bencher::new(suite);
-    println!("bench: suite '{suite}'...");
-    run_suite(suite, &mut b)?;
-    b.finish();
-    if args.flag("json") {
-        let path = format!("BENCH_{suite}.json");
-        std::fs::write(&path, to_json(suite, &b).to_string_pretty())
-            .map_err(|e| format!("cannot write {path}: {e}"))?;
-        println!("wrote {path}");
+    for suite in args.opt_or("suite", "compile").split(',').filter(|s| !s.is_empty()) {
+        let mut b = Bencher::new(suite);
+        println!("bench: suite '{suite}'...");
+        run_suite(suite, &mut b)?;
+        b.finish();
+        if args.flag("json") {
+            let path = format!("BENCH_{suite}.json");
+            std::fs::write(&path, to_json(suite, &b).to_string_pretty())
+                .map_err(|e| format!("cannot write {path}: {e}"))?;
+            println!("wrote {path}");
+        }
     }
     Ok(())
 }
@@ -332,5 +546,72 @@ mod tests {
         let err = run_suite("nope", &mut b).unwrap_err();
         assert!(err.contains("compile"), "{err}");
         assert!(err.contains("tables"), "{err}");
+    }
+
+    fn snap(entries: &[(&str, f64)]) -> Vec<(String, f64)> {
+        entries.iter().map(|(n, v)| (n.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn compare_classifies_every_verdict() {
+        let old = snap(&[
+            ("s/same", 100.0),
+            ("s/slower", 100.0),
+            ("s/faster", 100.0),
+            ("s/gone", 100.0),
+        ]);
+        let new = snap(&[
+            ("s/same", 110.0),   // +10% < 50% tolerance
+            ("s/slower", 200.0), // 2.0x > 1.5x
+            ("s/faster", 50.0),  // 0.5x < 1/1.5
+            ("s/new", 42.0),
+        ]);
+        let rows = compare(&old, &new, 50.0);
+        let verdict = |name: &str| rows.iter().find(|r| r.name == name).unwrap().verdict;
+        assert_eq!(verdict("s/same"), Verdict::Ok);
+        assert_eq!(verdict("s/slower"), Verdict::Regression);
+        assert_eq!(verdict("s/faster"), Verdict::Improved);
+        assert_eq!(verdict("s/gone"), Verdict::Gone);
+        assert_eq!(verdict("s/new"), Verdict::New);
+        assert!(verdict("s/slower").fails() && verdict("s/gone").fails());
+        assert!(!verdict("s/faster").fails() && !verdict("s/new").fails());
+        let table = render_compare(&rows, 50.0);
+        assert!(table.contains("REGRESSION"), "{table}");
+        assert!(table.contains("2 FAILING"), "{table}");
+        assert!(table.contains("2.00x"), "{table}");
+    }
+
+    #[test]
+    fn compare_boundary_is_strict() {
+        // Exactly at tolerance is OK — only *beyond* the band fails.
+        let old = snap(&[("s/x", 100.0)]);
+        let rows = compare(&old, &snap(&[("s/x", 150.0)]), 50.0);
+        assert_eq!(rows[0].verdict, Verdict::Ok);
+        let rows = compare(&old, &snap(&[("s/x", 150.1)]), 50.0);
+        assert_eq!(rows[0].verdict, Verdict::Regression);
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_parse() {
+        std::env::set_var("CASCADE_BENCH_WARMUP_MS", "1");
+        std::env::set_var("CASCADE_BENCH_BUDGET_MS", "2");
+        let mut b = Bencher::new("selftest");
+        b.bench("noop/sum", || (0..64u64).sum::<u64>());
+        let j = to_json("selftest", &b);
+        let (suite, entries) = parse_snapshot(&j).unwrap();
+        assert_eq!(suite, "selftest");
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].0, "selftest/noop/sum");
+        assert!(entries[0].1 > 0.0);
+        // A self-comparison is all-OK at any tolerance.
+        assert!(compare(&entries, &entries, 0.0).iter().all(|r| r.verdict == Verdict::Ok));
+        std::env::remove_var("CASCADE_BENCH_WARMUP_MS");
+        std::env::remove_var("CASCADE_BENCH_BUDGET_MS");
+    }
+
+    #[test]
+    fn parse_snapshot_rejects_wrong_schema() {
+        let j = Json::parse("{\"schema\":\"other\",\"suite\":\"x\",\"results\":[]}").unwrap();
+        assert!(parse_snapshot(&j).unwrap_err().contains("schema"));
     }
 }

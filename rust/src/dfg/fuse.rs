@@ -115,7 +115,7 @@ pub fn fuse_chains(g: &mut Dfg) -> FuseReport {
         }
     }
     if groups.is_empty() {
-        return FuseReport::default();
+        return tally(FuseReport::default());
     }
 
     // Rebuild: one Fused node per group, clones for everything else.
@@ -176,6 +176,16 @@ pub fn fuse_chains(g: &mut Dfg) -> FuseReport {
         nodes_removed: nodes_fused - groups.len(),
     };
     *g = out;
+    tally(report)
+}
+
+/// Mirror a [`FuseReport`] into the kernel-counter sink (a no-op unless
+/// one is installed — see `docs/observability.md`). Returns the report
+/// unchanged so both exits of [`fuse_chains`] stay one expression.
+fn tally(report: FuseReport) -> FuseReport {
+    crate::obs::counters::bump("fuse_chains", report.chains as u64);
+    crate::obs::counters::bump("fuse_nodes_fused", report.nodes_fused as u64);
+    crate::obs::counters::bump("fuse_nodes_removed", report.nodes_removed as u64);
     report
 }
 

@@ -266,6 +266,27 @@ pub fn profile_section(reg: &crate::obs::Registry) -> (String, Json) {
         &rows,
     ));
     json.set("stages", jstages);
+
+    // Kernel-depth work counters (ISSUE 10): what the hot kernels *did*
+    // across the run's fresh compiles — moves, rip-ups, repropagations —
+    // next to where the time went. Registry order is name order, already
+    // deterministic.
+    let kernels = reg.counter_series("compile_kernel_");
+    if !kernels.is_empty() {
+        md.push_str(
+            "\nKernel work counters over the same fresh compiles (see \
+             `docs/observability.md` for per-counter semantics):\n\n",
+        );
+        let mut krows = Vec::new();
+        let mut jkernels = Json::obj();
+        for (name, value) in &kernels {
+            let short = name.strip_prefix("compile_kernel_").unwrap_or(name);
+            krows.push(vec![short.to_string(), value.to_string()]);
+            jkernels.set(short, *value);
+        }
+        md.push_str(&crate::experiments::common::md_table(&["counter", "total"], &krows));
+        json.set("kernels", jkernels);
+    }
     (md, json)
 }
 
@@ -540,8 +561,12 @@ mod tests {
     fn profile_section_orders_stages_and_reports_totals() {
         let reg = crate::obs::Registry::new();
         let spans = vec![
-            crate::obs::SpanRecord { stage: "sta", nanos: 3_000_000 },
-            crate::obs::SpanRecord { stage: "map", nanos: 1_000_000 },
+            crate::obs::SpanRecord { stage: "sta", nanos: 3_000_000, counters: Vec::new() },
+            crate::obs::SpanRecord {
+                stage: "map",
+                nanos: 1_000_000,
+                counters: vec![("place_moves_proposed", 10)],
+            },
         ];
         crate::obs::record_compile_spans(&reg, &spans);
         let (md, json) = profile_section(&reg);
@@ -553,6 +578,22 @@ mod tests {
         assert!(j.contains("\"stages\""), "{j}");
         assert!(j.contains("\"compile_seconds\""), "{j}");
         assert!(j.contains("\"total_ns\":4000000"), "per-compile total is the span sum: {j}");
+        // Kernel counters carried by the spans surface as their own table
+        // (short names — the compile_kernel_ prefix is presentation noise).
+        assert!(md.contains("| place_moves_proposed | 10 |"), "{md}");
+        assert!(j.contains("\"kernels\":{\"place_moves_proposed\":10}"), "{j}");
+    }
+
+    #[test]
+    fn profile_section_without_counters_has_no_kernel_table() {
+        let reg = crate::obs::Registry::new();
+        crate::obs::record_compile_spans(
+            &reg,
+            &[crate::obs::SpanRecord { stage: "sta", nanos: 1_000, counters: Vec::new() }],
+        );
+        let (md, json) = profile_section(&reg);
+        assert!(!md.contains("Kernel work counters"), "{md}");
+        assert!(!json.to_string_compact().contains("\"kernels\""));
     }
 
     #[test]

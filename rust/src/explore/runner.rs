@@ -601,6 +601,10 @@ impl<'a> SessionCore<'a> {
                     let (res, spans) =
                         crate::obs::with_spans(|| compile_effective(spec, point, cfg, ctx));
                     crate::obs::record_compile_spans(reg, &spans);
+                    // Relay the stage spans (kernel counters attached) to
+                    // whoever is tracing this request — the serve worker
+                    // grafts them into its span tree. No-op otherwise.
+                    crate::obs::trace::publish(&spans);
                     res?
                 }
                 None => compile_effective(spec, point, cfg, ctx)?,

@@ -28,8 +28,12 @@
 //!                 [--conns N] [--seed S] [--spread N]      deterministic open-loop load
 //!                 [--encode-every N] [--auth-token T]      generator; writes BENCH_serve.json
 //!                 [--out F] [--assert-split]               with p50/p99/p999 latencies
-//! cascade bench [--suite compile|pnr|sta|sim|tables] [--json] [--fast]
-//!                                                          run a benchmark suite from the CLI
+//! cascade bench [--suite s1,s2|compile|pnr|sta|fuse|sim|tables] [--json] [--fast]
+//!               [--compare OLD.json [--against NEW.json] [--tolerance PCT]]
+//!                                                          run benchmark suites, or diff two
+//!                                                          snapshots (non-zero on regression)
+//! cascade trace <requests.jsonl> [--id HEX | --top N]      render request-log span trees as
+//!                                                          flame tables + critical paths
 //! cascade arch                                             print architecture + timing model
 //! ```
 //!
@@ -139,8 +143,13 @@ fn usage() -> ! {
                    [--encode-every N] [--timeout SECS]          generator against a daemon or\n\
                    [--auth-token TOKEN] [--out FILE]            front; prints p50/p99/p999 and\n\
                    [--assert-split]                             writes BENCH_serve.json\n\
-           bench   [--suite compile|pnr|sta|sim|tables]         run a benchmark suite; --json\n\
-                   [--json] [--fast]                            writes BENCH_<suite>.json\n\
+           bench   [--suite s1,s2,...] [--json] [--fast]        run benchmark suite(s); --json\n\
+                   [--compare OLD.json [--against NEW.json]     writes BENCH_<suite>.json;\n\
+                   [--tolerance PCT]]                           --compare diffs two snapshots\n\
+                                                                and exits non-zero on regression\n\
+           trace   <requests.jsonl> [--id HEX | --top N]        render request-log span trees:\n\
+                                                                flame table, critical path,\n\
+                                                                per-hop attribution\n\
            arch                                                 architecture + timing summary\n\
          global: [--no-incremental]                             full-recompute PnR/STA kernels\n\
                                                                 (byte-identical outputs; see\n\
@@ -471,6 +480,12 @@ fn main() {
         "bench" => {
             if let Err(e) = cascade::benchsuite::bench_cli(&args) {
                 eprintln!("bench failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        "trace" => {
+            if let Err(e) = cascade::obs::traceview::trace_cli(&args) {
+                eprintln!("trace failed: {e}");
                 std::process::exit(1);
             }
         }

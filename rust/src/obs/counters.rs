@@ -1,0 +1,168 @@
+//! Lightweight per-thread kernel counters for the compile pipeline.
+//!
+//! Same contract as the stage tracer ([`crate::obs::trace`]): nothing is
+//! counted unless the caller installs a sink — [`with_counters`], or
+//! implicitly [`crate::obs::with_spans`], which installs both sinks so
+//! stage spans come back with the counters of their lap attached — and a
+//! [`bump`] with no sink installed is a single TLS load. The hot kernels
+//! (`pnr/place`, `pnr/route`, `timing/sta`, `dfg/fuse`) accumulate their
+//! tallies in plain local integers either way and bump the sink **once**
+//! per kernel call, so the disabled path costs one TLS load per call and
+//! the enabled path can never perturb what the kernel computes — only
+//! report how hard it worked.
+//!
+//! Counter names are `&'static str` by design: the vocabulary is the
+//! fixed set of kernel counters documented in `docs/observability.md`
+//! (`place_moves_proposed`, `route_dijkstra_pops`, ...), surfaced as
+//! `compile_kernel_<name>` metrics series and as per-span `counters`
+//! objects in request-log traces.
+
+use std::cell::RefCell;
+
+/// One thread's accumulating sink: a small association list. The
+/// vocabulary is ~a dozen names bumped a handful of times per compile,
+/// so linear scan beats any map.
+struct Sink {
+    counts: Vec<(&'static str, u64)>,
+}
+
+thread_local! {
+    static SINK: RefCell<Option<Sink>> = const { RefCell::new(None) };
+}
+
+/// Whether a counter sink is installed on this thread.
+pub fn enabled() -> bool {
+    SINK.with(|s| s.borrow().is_some())
+}
+
+/// Add `n` to counter `name`. No-op (one TLS load) without a sink.
+pub fn bump(name: &'static str, n: u64) {
+    SINK.with(|s| {
+        if let Some(sink) = s.borrow_mut().as_mut() {
+            match sink.counts.iter_mut().find(|(k, _)| *k == name) {
+                Some(e) => e.1 = e.1.saturating_add(n),
+                None => sink.counts.push((name, n)),
+            }
+        }
+    });
+}
+
+/// Take everything accumulated since installation (or the previous
+/// drain), leaving the sink installed and empty — the stage tracer calls
+/// this at each lap boundary so every span carries exactly the counters
+/// of its own lap. Returns sorted by name (deterministic output order
+/// regardless of bump order). No-op `vec![]` without a sink.
+pub fn drain() -> Vec<(&'static str, u64)> {
+    SINK.with(|s| match s.borrow_mut().as_mut() {
+        Some(sink) => {
+            let mut out = std::mem::take(&mut sink.counts);
+            out.sort_by_key(|(k, _)| *k);
+            out
+        }
+        None => Vec::new(),
+    })
+}
+
+/// Restores the previously installed sink even if `f` panics (same
+/// pattern as the tracer's guard).
+struct Restore {
+    prev: Option<Sink>,
+    taken: bool,
+}
+
+impl Restore {
+    fn finish(&mut self) -> Vec<(&'static str, u64)> {
+        self.taken = true;
+        SINK.with(|s| {
+            let mut slot = s.borrow_mut();
+            let done = slot.take();
+            *slot = self.prev.take();
+            let mut out = done.map(|d| d.counts).unwrap_or_default();
+            out.sort_by_key(|(k, _)| *k);
+            out
+        })
+    }
+}
+
+impl Drop for Restore {
+    fn drop(&mut self) {
+        if !self.taken {
+            let _ = self.finish();
+        }
+    }
+}
+
+/// Run `f` with a fresh counter sink on this thread, returning its
+/// result plus every counter bumped during the call, sorted by name.
+/// Nests like [`crate::obs::with_spans`]: an outer sink is suspended,
+/// not corrupted, while the inner one runs.
+pub fn with_counters<T>(f: impl FnOnce() -> T) -> (T, Vec<(&'static str, u64)>) {
+    let prev = SINK.with(|s| s.borrow_mut().replace(Sink { counts: Vec::new() }));
+    let mut guard = Restore { prev, taken: false };
+    let out = f();
+    let counts = guard.finish();
+    (out, counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bumps_without_a_sink_are_noops() {
+        assert!(!enabled());
+        bump("place_moves_proposed", 7); // must not panic or record anywhere
+        let (_, counts) = with_counters(|| ());
+        assert!(counts.is_empty(), "no bumps -> no counts");
+    }
+
+    #[test]
+    fn counts_accumulate_and_come_back_sorted() {
+        let ((), counts) = with_counters(|| {
+            bump("route_dijkstra_pops", 5);
+            bump("place_moves_proposed", 2);
+            bump("route_dijkstra_pops", 3);
+        });
+        assert_eq!(
+            counts,
+            vec![("place_moves_proposed", 2), ("route_dijkstra_pops", 8)]
+        );
+        assert!(!enabled(), "sink uninstalled after with_counters");
+    }
+
+    #[test]
+    fn drain_empties_but_keeps_the_sink() {
+        let ((), counts) = with_counters(|| {
+            bump("a", 1);
+            assert_eq!(drain(), vec![("a", 1)]);
+            assert!(enabled(), "drain keeps the sink installed");
+            bump("b", 2);
+        });
+        assert_eq!(counts, vec![("b", 2)], "drained counts never double-report");
+        assert!(drain().is_empty(), "drain without a sink is a no-op");
+    }
+
+    #[test]
+    fn sinks_nest_without_corruption() {
+        let ((), outer) = with_counters(|| {
+            bump("outer", 1);
+            let ((), inner) = with_counters(|| bump("inner", 9));
+            assert_eq!(inner, vec![("inner", 9)]);
+            bump("outer", 1);
+        });
+        assert_eq!(outer, vec![("outer", 2)], "inner counts stay out of the outer sink");
+    }
+
+    #[test]
+    fn panicking_scope_restores_the_previous_sink() {
+        let ((), counts) = with_counters(|| {
+            let r = std::panic::catch_unwind(|| {
+                let _ = with_counters(|| -> () { panic!("boom") });
+            });
+            assert!(r.is_err());
+            bump("after", 1);
+        });
+        assert_eq!(counts, vec![("after", 1)], "outer sink survives an inner panic");
+        assert!(!enabled());
+    }
+}

@@ -277,6 +277,19 @@ impl Registry {
         inner.histograms.entry(name.to_string()).or_default().clone()
     }
 
+    /// All counter series whose name starts with `prefix`, in name
+    /// order, with current values (the kernel-counter profile table
+    /// consumes this).
+    pub fn counter_series(&self, prefix: &str) -> Vec<(String, u64)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .counters
+            .iter()
+            .filter(|(name, _)| name.starts_with(prefix))
+            .map(|(name, c)| (name.clone(), c.get()))
+            .collect()
+    }
+
     /// All histogram series whose name starts with `prefix`, in name
     /// order, with snapshots (profile reports consume this).
     pub fn histogram_series(&self, prefix: &str) -> Vec<(String, HistoSnapshot)> {

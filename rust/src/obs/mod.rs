@@ -15,9 +15,18 @@
 //!   whose sum equals the traced wall clock. With no sink installed a
 //!   mark is a TLS load — the pipeline's outputs and (untraced) speed
 //!   are untouched.
+//! * [`counters`] — a thread-local kernel-counter sink (ISSUE 10): the
+//!   PnR/STA/fusion hot kernels tally their work in local integers and
+//!   [`counters::bump`] the totals once per call; [`with_spans`] installs
+//!   the sink alongside the lap clock so every stage span carries the
+//!   counters of its own lap, surfaced as `compile_kernel_*` series and
+//!   in request-log span trees.
 //! * [`reqlog`] — a size-bounded JSONL [`RequestLog`] (rotate to `.1`
 //!   at the cap) for the daemon's per-request records and structured
 //!   gc/drain/startup events.
+//! * [`traceview`] — the `cascade trace` viewer: renders the request
+//!   log's distributed span trees as flame tables with critical-path
+//!   and per-hop attribution.
 //!
 //! The cardinal rule, enforced by the byte-identity tests: observability
 //! **never** perturbs outputs. Metrics are write-only side channels,
@@ -27,10 +36,13 @@
 //! See `docs/observability.md` for series names, the exposition format
 //! and the request-log schema.
 
+pub mod counters;
 pub mod metrics;
 pub mod reqlog;
 pub mod trace;
+pub mod traceview;
 
+pub use counters::{bump, with_counters};
 pub use metrics::{labeled, Counter, Gauge, HistoSnapshot, Histogram, Registry};
 pub use reqlog::{now_ms, RequestLog, DEFAULT_LOG_CAP};
 pub use trace::{mark, with_spans, SpanRecord, STAGE_ORDER};
@@ -42,17 +54,23 @@ pub mod help {
     pub const COMPILE_TOTAL: &str = "whole-compile wall time in seconds";
     pub const MEASURE: &str = "post-compile measurement (simulation) time in seconds";
     pub const ENCODE: &str = "bitstream encode time in seconds";
+    pub const KERNEL: &str = "kernel work counters summed over fresh compiles";
 }
 
 /// Record a compile's stage spans into `compile_stage_seconds{stage=..}`
-/// histograms plus the `compile_seconds` total. Shared by the sweep
-/// session and the serve daemon so both expose the same families.
+/// histograms plus the `compile_seconds` total, and each span's kernel
+/// counters into the `compile_kernel_<name>` counter series. Shared by
+/// the sweep session and the serve daemon so both expose the same
+/// families.
 pub fn record_compile_spans(reg: &Registry, spans: &[SpanRecord]) {
     let mut total_ns = 0u64;
     for s in spans {
         total_ns = total_ns.saturating_add(s.nanos);
         reg.histogram(&labeled("compile_stage_seconds", "stage", s.stage), help::COMPILE_STAGE)
             .observe_nanos(s.nanos);
+        for (name, n) in &s.counters {
+            reg.counter(&format!("compile_kernel_{name}"), help::KERNEL).add(*n);
+        }
     }
     if !spans.is_empty() {
         reg.histogram("compile_seconds", help::COMPILE_TOTAL).observe_nanos(total_ns);

@@ -24,11 +24,14 @@
 use std::cell::RefCell;
 use std::time::Instant;
 
-/// One timed stage interval, in wall-clock nanoseconds.
+/// One timed stage interval, in wall-clock nanoseconds, plus the kernel
+/// counters ([`crate::obs::counters`]) bumped during that lap — empty
+/// unless the traced code bumped any (only the hot kernels do).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SpanRecord {
     pub stage: &'static str,
     pub nanos: u64,
+    pub counters: Vec<(&'static str, u64)>,
 }
 
 /// Canonical stage order for reports (histograms sort alphabetically on
@@ -66,11 +69,19 @@ pub fn enabled() -> bool {
 /// Close the current lap and attribute it to `stage`. No-op (and no
 /// clock read) when no sink is installed on this thread.
 pub fn mark(stage: &'static str) {
+    // The counter drain happens *outside* the sink borrow: `drain` takes
+    // its own TLS slot and returns the lap's kernel counters (empty when
+    // the counter sink is off or nothing bumped).
+    let installed = SINK.with(|s| s.borrow().is_some());
+    if !installed {
+        return;
+    }
+    let counters = super::counters::drain();
     SINK.with(|s| {
         if let Some(sink) = s.borrow_mut().as_mut() {
             let now = Instant::now();
             let nanos = now.duration_since(sink.last).as_nanos().min(u64::MAX as u128) as u64;
-            sink.spans.push(SpanRecord { stage, nanos });
+            sink.spans.push(SpanRecord { stage, nanos, counters });
             sink.last = now;
         }
     });
@@ -107,14 +118,88 @@ impl Drop for Restore {
 /// Run `f` with a fresh lap clock installed on this thread, returning
 /// its result plus every span [`mark`]ed during the call. Nests: an
 /// outer trace is suspended, not corrupted, while an inner one runs.
+///
+/// A kernel-counter sink ([`crate::obs::counters`]) is installed for the
+/// same scope, so each span comes back with the counters its lap bumped
+/// — `with_spans` is the one switch that turns the whole instrumentation
+/// layer on.
 pub fn with_spans<T>(f: impl FnOnce() -> T) -> (T, Vec<SpanRecord>) {
     let prev = SINK.with(|s| {
         s.borrow_mut().replace(Sink { last: Instant::now(), spans: Vec::new() })
     });
     let mut guard = Restore { prev, taken: false };
-    let out = f();
+    // Counters bumped after the final mark have no owning lap and are
+    // dropped with the inner sink (the pipeline always marks last).
+    let (out, _) = super::counters::with_counters(f);
     let spans = guard.finish();
     (out, spans)
+}
+
+// ---------------------------------------------------------------------
+// Publish relay + trace ids (distributed tracing, ISSUE 10)
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static PUBLISH: RefCell<Option<Vec<SpanRecord>>> = const { RefCell::new(None) };
+}
+
+/// Hand a finished compile's spans to whoever installed [`with_publish`]
+/// further up this thread's stack — the serve worker does, around each
+/// request, so the stage spans recorded deep inside the dedup slot reach
+/// the request's span tree. No-op (one TLS load) without a collector;
+/// dedup *waiters* publish nothing, which is correct — they compiled
+/// nothing.
+pub fn publish(spans: &[SpanRecord]) {
+    PUBLISH.with(|p| {
+        if let Some(sink) = p.borrow_mut().as_mut() {
+            sink.extend_from_slice(spans);
+        }
+    });
+}
+
+/// Run `f` with a span collector installed on this thread, returning its
+/// result plus everything [`publish`]ed during the call. The previous
+/// collector (if any) is restored afterwards, panic included.
+pub fn with_publish<T>(f: impl FnOnce() -> T) -> (T, Vec<SpanRecord>) {
+    struct Guard {
+        prev: Option<Vec<SpanRecord>>,
+    }
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            PUBLISH.with(|p| *p.borrow_mut() = self.prev.take());
+        }
+    }
+    let prev = PUBLISH.with(|p| p.borrow_mut().replace(Vec::new()));
+    let guard = Guard { prev };
+    let out = f();
+    let spans = PUBLISH.with(|p| {
+        p.borrow_mut().replace(Vec::new()).unwrap_or_default()
+    });
+    drop(guard);
+    (out, spans)
+}
+
+/// A fresh 64-bit trace id: a splitmix64 step over the wall clock mixed
+/// with a process-wide counter, so concurrent requests in one daemon and
+/// across daemons practically never collide. Never zero (zero reads as
+/// "absent" on the wire).
+pub fn gen_trace_id() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SALT: AtomicU64 = AtomicU64::new(0);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let mut z = nanos ^ SALT.fetch_add(0x9e37_79b9_7f4a_7c15, Ordering::Relaxed);
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    if z == 0 {
+        1
+    } else {
+        z
+    }
 }
 
 #[cfg(test)]
@@ -162,6 +247,48 @@ mod tests {
         });
         let stages: Vec<_> = outer.iter().map(|s| s.stage).collect();
         assert_eq!(stages, vec!["map", "sta"], "inner trace spans stay out of the outer sink");
+    }
+
+    #[test]
+    fn spans_carry_the_counters_of_their_own_lap() {
+        let ((), spans) = with_spans(|| {
+            super::super::counters::bump("place_moves_proposed", 4);
+            mark("place");
+            super::super::counters::bump("route_dijkstra_pops", 9);
+            mark("route");
+            mark("sta");
+        });
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].counters, vec![("place_moves_proposed", 4)]);
+        assert_eq!(spans[1].counters, vec![("route_dijkstra_pops", 9)]);
+        assert!(spans[2].counters.is_empty(), "zero-work lap carries no counters");
+    }
+
+    #[test]
+    fn publish_reaches_the_installed_collector_and_only_it() {
+        publish(&[SpanRecord { stage: "orphan", nanos: 1, counters: Vec::new() }]);
+        let ((), published) = with_publish(|| {
+            let (_, spans) = with_spans(|| mark("map"));
+            publish(&spans);
+        });
+        assert_eq!(published.len(), 1);
+        assert_eq!(published[0].stage, "map");
+        let ((), outer) = with_publish(|| {
+            let ((), inner) = with_publish(|| {
+                publish(&[SpanRecord { stage: "in", nanos: 2, counters: Vec::new() }]);
+            });
+            assert_eq!(inner.len(), 1);
+        });
+        assert!(outer.is_empty(), "inner publishes stay out of the outer collector");
+    }
+
+    #[test]
+    fn trace_ids_are_nonzero_and_distinct() {
+        let a = gen_trace_id();
+        let b = gen_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
     }
 
     #[test]

@@ -1,0 +1,328 @@
+//! `cascade trace` — render the span trees a serve request log records.
+//!
+//! Every successful `compile`/`encode` request writes a `"trace"` object
+//! (protocol v3, [`crate::serve::proto::trace_json`]) into the daemon's
+//! JSONL request log. This viewer turns those records back into
+//! something a human can read:
+//!
+//! * a **flame table** per trace — the span tree indented by depth, each
+//!   span with its wall time, its share of the root, and the kernel work
+//!   counters of its own lap (`docs/observability.md`);
+//! * the **critical path** — the greedy max-child walk from the root,
+//!   with each hop's *self* time (what its own children do not explain),
+//!   so "where did the milliseconds go" has a one-line answer even when
+//!   the trace spans several nodes;
+//! * a **per-hop attribution** line — front vs each `backend:<addr>`
+//!   subtree — for routed topologies.
+//!
+//! ```text
+//! cascade trace serve_requests.jsonl            # every trace, log order
+//! cascade trace serve_requests.jsonl --top 3    # the 3 slowest
+//! cascade trace serve_requests.jsonl --id HEX   # one trace by id
+//! ```
+//!
+//! The viewer is a pure consumer: it never writes, and a log with no
+//! traces (pre-v3, or `--log none`) just says so.
+
+use crate::serve::proto::{trace_from_json, TraceSpan};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// One traced request out of the log.
+struct Rec {
+    ts: u64,
+    op: String,
+    id: u64,
+    spans: Vec<TraceSpan>,
+}
+
+impl Rec {
+    /// The root span: the one whose parent is not itself a recorded span
+    /// (the wire contract numbers it `base + 1` with parent `base`).
+    fn root(&self) -> Option<&TraceSpan> {
+        self.spans
+            .iter()
+            .find(|s| !self.spans.iter().any(|t| t.id == s.parent))
+    }
+
+    fn children(&self, of: u64) -> Vec<&TraceSpan> {
+        let mut c: Vec<&TraceSpan> = self.spans.iter().filter(|s| s.parent == of).collect();
+        c.sort_by_key(|s| s.id);
+        c
+    }
+}
+
+/// Parse a request log's traced records, skipping everything else
+/// (lifecycle events, untraced ops, unparseable lines — a rotated or
+/// truncated log must not kill the viewer).
+fn parse_log(text: &str) -> Vec<Rec> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(j) = Json::parse(line) else { continue };
+        let Some(t) = j.get("trace") else { continue };
+        let Ok((id, spans)) = trace_from_json(t) else { continue };
+        if spans.is_empty() {
+            continue;
+        }
+        out.push(Rec {
+            ts: j.get("ts").and_then(Json::as_u64).unwrap_or(0),
+            op: j.get("op").and_then(Json::as_str).unwrap_or("?").to_string(),
+            id,
+            spans,
+        });
+    }
+    out
+}
+
+fn ms(ns: u64) -> f64 {
+    ns as f64 / 1e6
+}
+
+fn pct(part: u64, whole: u64) -> f64 {
+    if whole == 0 {
+        100.0
+    } else {
+        part as f64 * 100.0 / whole as f64
+    }
+}
+
+fn counters_inline(s: &TraceSpan) -> String {
+    s.counters
+        .iter()
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Inclusive time minus the children's inclusive time — the span's own
+/// work (clamped: clock skew across hops can make children sum past the
+/// parent by a hair).
+fn self_ns(rec: &Rec, s: &TraceSpan) -> u64 {
+    let kids: u64 = rec.children(s.id).iter().map(|c| c.ns).sum();
+    s.ns.saturating_sub(kids)
+}
+
+fn render_flame(rec: &Rec, out: &mut String) {
+    let Some(root) = rec.root() else { return };
+    let total = root.ns;
+    out.push_str(&format!(
+        "{:<42} {:>10} {:>6}  counters\n",
+        "span", "ms", "%"
+    ));
+    let mut stack: Vec<(u64, usize)> = vec![(root.id, 0)];
+    while let Some((id, depth)) = stack.pop() {
+        let Some(s) = rec.spans.iter().find(|s| s.id == id) else { continue };
+        let label = format!("{}{}", "  ".repeat(depth), s.name);
+        out.push_str(&format!(
+            "{:<42} {:>10.3} {:>6.1}  {}\n",
+            label,
+            ms(s.ns),
+            pct(s.ns, total),
+            counters_inline(s)
+        ));
+        // Depth-first, children in id order (push reversed so the
+        // smallest id pops first).
+        for c in rec.children(s.id).into_iter().rev() {
+            stack.push((c.id, depth + 1));
+        }
+    }
+}
+
+/// The greedy max-child walk: at every span, descend into the child that
+/// consumed the most wall time. Each hop is attributed its self time.
+fn render_critical_path(rec: &Rec, out: &mut String) {
+    let Some(root) = rec.root() else { return };
+    let total = root.ns;
+    let mut path = Vec::new();
+    let mut cur = root;
+    loop {
+        path.push(cur);
+        match rec.children(cur.id).into_iter().max_by_key(|c| c.ns) {
+            Some(next) => cur = next,
+            None => break,
+        }
+    }
+    let names: Vec<&str> = path.iter().map(|s| s.name.as_str()).collect();
+    out.push_str(&format!("critical path: {}\n", names.join(" > ")));
+    let attributed: Vec<String> = path
+        .iter()
+        .map(|s| {
+            let own = self_ns(rec, s);
+            format!("{} {:.3} ms ({:.1}%)", s.name, ms(own), pct(own, total))
+        })
+        .collect();
+    out.push_str(&format!("  self time:   {}\n", attributed.join(" | ")));
+}
+
+/// Front-vs-backend attribution for routed traces: every `backend:<addr>`
+/// span roots one remote hop; whatever the root's time they do not cover
+/// is this daemon's own hop.
+fn render_hops(rec: &Rec, out: &mut String) {
+    let Some(root) = rec.root() else { return };
+    let backends: Vec<&TraceSpan> =
+        rec.spans.iter().filter(|s| s.name.starts_with("backend:")).collect();
+    if backends.is_empty() {
+        return;
+    }
+    let remote: u64 = backends.iter().map(|s| s.ns).sum();
+    let mut parts =
+        vec![format!("front {:.3} ms ({:.1}%)", ms(root.ns.saturating_sub(remote)), pct(root.ns.saturating_sub(remote), root.ns))];
+    for b in backends {
+        parts.push(format!("{} {:.3} ms ({:.1}%)", b.name, ms(b.ns), pct(b.ns, root.ns)));
+    }
+    out.push_str(&format!("hops:          {}\n", parts.join(" | ")));
+}
+
+/// Render one trace block (header + flame table + attribution lines).
+fn render(rec: &Rec) -> String {
+    let mut out = String::new();
+    let total = rec.root().map(|r| r.ns).unwrap_or(0);
+    out.push_str(&format!(
+        "trace {:016x}  op={} ts={} total={:.3} ms spans={}\n",
+        rec.id,
+        rec.op,
+        rec.ts,
+        ms(total),
+        rec.spans.len()
+    ));
+    render_flame(rec, &mut out);
+    render_critical_path(rec, &mut out);
+    render_hops(rec, &mut out);
+    out
+}
+
+/// `cascade trace <requests.jsonl> [--id HEX] [--top N]`.
+pub fn trace_cli(args: &Args) -> Result<(), String> {
+    let path = args
+        .positionals
+        .get(1)
+        .ok_or("trace: expected a request-log path (serve --log writes one)")?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("trace: cannot read {path}: {e}"))?;
+    let mut recs = parse_log(&text);
+    if recs.is_empty() {
+        println!("trace: no traced requests in {path}");
+        return Ok(());
+    }
+    if let Some(hex) = args.opt("id") {
+        let want = u64::from_str_radix(hex, 16)
+            .map_err(|_| format!("trace: bad --id '{hex}' (hex)"))?;
+        recs.retain(|r| r.id == want);
+        if recs.is_empty() {
+            return Err(format!("trace: no trace {hex} in {path}"));
+        }
+    } else if let Some(s) = args.opt("top") {
+        let n: usize = s
+            .parse()
+            .ok()
+            .filter(|&n| n >= 1)
+            .ok_or_else(|| format!("trace: bad --top '{s}' (positive integer)"))?;
+        recs.sort_by_key(|r| std::cmp::Reverse(r.root().map(|s| s.ns).unwrap_or(0)));
+        recs.truncate(n);
+    }
+    for (i, rec) in recs.iter().enumerate() {
+        if i > 0 {
+            println!();
+        }
+        print!("{}", render(rec));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(id: u64, parent: u64, name: &str, ns: u64) -> TraceSpan {
+        TraceSpan { id, parent, name: name.into(), ns, counters: Vec::new() }
+    }
+
+    /// A routed compile's tree: front spans 1..3, backend spans 4..8
+    /// grafted under the forward span.
+    fn routed_rec() -> Rec {
+        let mut stage = span(7, 6, "stage:place", 60_000_000);
+        stage.counters = vec![("place_moves_proposed".into(), 1200)];
+        Rec {
+            ts: 1,
+            op: "compile".into(),
+            id: 0xabcd,
+            spans: vec![
+                span(1, 0, "request", 100_000_000),
+                span(2, 1, "queue", 1_000_000),
+                span(3, 1, "forward", 99_000_000),
+                span(4, 3, "backend:127.0.0.1:7871", 95_000_000),
+                span(5, 4, "queue", 2_000_000),
+                span(6, 4, "exec", 93_000_000),
+                stage,
+                span(8, 6, "stage:route", 20_000_000),
+            ],
+        }
+    }
+
+    #[test]
+    fn log_parsing_skips_untraced_and_garbage_lines() {
+        let log = concat!(
+            "{\"event\":\"start\",\"ts\":1}\n",
+            "not json\n",
+            "{\"event\":\"request\",\"op\":\"ping\",\"ts\":2}\n",
+            "{\"event\":\"request\",\"op\":\"compile\",\"ts\":3,\"trace\":{\"id\":\"00000000000000ff\",\
+             \"spans\":[{\"id\":1,\"parent\":0,\"name\":\"request\",\"ns\":5000}]}}\n",
+        );
+        let recs = parse_log(log);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].id, 0xff);
+        assert_eq!(recs[0].op, "compile");
+        assert_eq!(recs[0].root().unwrap().name, "request");
+    }
+
+    #[test]
+    fn flame_table_indents_by_depth_and_shows_counters() {
+        let r = render(&routed_rec());
+        assert!(r.contains("trace 000000000000abcd"), "{r}");
+        // Depth-ordered rows: request at depth 0, the backend hop under
+        // the forward span, stages under the backend's exec span.
+        let req_at = r.find("\nrequest").expect("root row");
+        let fwd_at = r.find("\n  forward").expect("forward row");
+        let hop_at = r.find("\n    backend:127.0.0.1:7871").expect("hop row");
+        let stage_at = r.find("\n        stage:place").expect("stage row");
+        assert!(req_at < fwd_at && fwd_at < hop_at && hop_at < stage_at, "{r}");
+        assert!(r.contains("place_moves_proposed=1200"), "{r}");
+        // Shares are of the root.
+        assert!(r.contains("100.0"), "{r}");
+    }
+
+    #[test]
+    fn critical_path_is_the_greedy_max_child_walk() {
+        let r = render(&routed_rec());
+        assert!(
+            r.contains(
+                "critical path: request > forward > backend:127.0.0.1:7871 > exec > stage:place"
+            ),
+            "{r}"
+        );
+        // stage:place's self time is its whole 60 ms (no children);
+        // exec's self time is 93 - (60 + 20) = 13 ms.
+        assert!(r.contains("exec 13.000 ms"), "{r}");
+        assert!(r.contains("stage:place 60.000 ms (60.0%)"), "{r}");
+    }
+
+    #[test]
+    fn hop_attribution_splits_front_from_backends() {
+        let r = render(&routed_rec());
+        assert!(r.contains("hops:"), "{r}");
+        assert!(r.contains("front 5.000 ms (5.0%)"), "{r}");
+        assert!(r.contains("backend:127.0.0.1:7871 95.000 ms (95.0%)"), "{r}");
+        // A single-daemon trace has no hop line.
+        let solo = Rec {
+            ts: 0,
+            op: "compile".into(),
+            id: 1,
+            spans: vec![span(1, 0, "request", 10), span(2, 1, "exec", 8)],
+        };
+        assert!(!render(&solo).contains("hops:"));
+    }
+}

@@ -450,6 +450,12 @@ pub fn place(g: &Dfg, nets: &[Net], arch: &ArchParams, pp: &PlaceParams) -> Plac
     let mult_of = |v: &[(usize, u32)], ni: usize| -> Option<u32> {
         v.iter().find(|&&(id, _)| id == ni).map(|&(_, m)| m)
     };
+    // Kernel work tallies (docs/observability.md): plain locals either
+    // way, handed to the thread's counter sink once at the end — the
+    // annealer's decisions never depend on them.
+    let mut moves_proposed = 0u64;
+    let mut moves_accepted = 0u64;
+    let mut box_rescans = 0u64;
     while temp > t_final {
         let mut accepts = 0usize;
         for _ in 0..moves_per_temp {
@@ -461,6 +467,7 @@ pub fn place(g: &Dfg, nets: &[Net], arch: &ArchParams, pp: &PlaceParams) -> Plac
             if (t, s) == old {
                 continue;
             }
+            moves_proposed += 1;
             let occupant = st.swap(node, t, s);
             affected.clear();
             for &(ni, _) in &nets_of[node as usize] {
@@ -503,6 +510,7 @@ pub fn place(g: &Dfg, nets: &[Net], arch: &ArchParams, pp: &PlaceParams) -> Plac
                             bx.add(old.0, m);
                         }
                     } else {
+                        box_rescans += 1;
                         bx = NetBox::scan(&nets[ni], &st.pos);
                     }
                     debug_assert_eq!(
@@ -527,6 +535,7 @@ pub fn place(g: &Dfg, nets: &[Net], arch: &ArchParams, pp: &PlaceParams) -> Plac
                     }
                 }
                 accepts += 1;
+                moves_accepted += 1;
             } else {
                 st.swap(node, old.0, old.1);
             }
@@ -536,6 +545,10 @@ pub fn place(g: &Dfg, nets: &[Net], arch: &ArchParams, pp: &PlaceParams) -> Plac
         }
         temp *= 0.9;
     }
+    crate::obs::counters::bump("place_moves_proposed", moves_proposed);
+    crate::obs::counters::bump("place_moves_accepted", moves_accepted);
+    crate::obs::counters::bump("place_moves_rejected", moves_proposed - moves_accepted);
+    crate::obs::counters::bump("place_box_rescans", box_rescans);
 
     // Report the cost recomputed fresh from final positions in both modes
     // (not the accumulated sum of per-move deltas), so `Placement::cost`

@@ -209,7 +209,19 @@ pub fn route(
 
     let mut pres_fac = rp.pres_fac_init;
     let mut dirty: Vec<usize> = Vec::new();
+    // Kernel work tallies (docs/observability.md): plain locals, handed
+    // to the thread's counter sink once on every exit path — routing
+    // decisions never depend on them.
+    let mut iterations = 0u64;
+    let mut nets_ripped = 0u64;
+    let mut dijkstra_pops = 0u64;
+    let bump_tallies = |iterations: u64, nets_ripped: u64, dijkstra_pops: u64| {
+        crate::obs::counters::bump("route_iterations", iterations);
+        crate::obs::counters::bump("route_nets_ripped", nets_ripped);
+        crate::obs::counters::bump("route_dijkstra_pops", dijkstra_pops);
+    };
     for iter in 0..rp.max_iters {
+        iterations += 1;
         // Selective rip-up: iteration 0 routes everything; later
         // iterations tear out and re-route only nets crossing an overused
         // node, keeping every conflict-free route (and its occupancy) in
@@ -223,6 +235,7 @@ pub fn route(
                     dirty.push(ni);
                 }
             }
+            nets_ripped += dirty.len() as u64;
         }
         if rp.incremental {
             // Incremental bookkeeping: subtract each ripped net's usage.
@@ -290,6 +303,7 @@ pub fn route(
                 }
                 let mut found = false;
                 while let Some(std::cmp::Reverse((dbits, u))) = heap.pop() {
+                    dijkstra_pops += 1;
                     let d = f64::from_bits(dbits);
                     if stamp[u as usize] == gen && d > dist[u as usize] {
                         continue;
@@ -326,6 +340,7 @@ pub fn route(
                     }
                 }
                 if !found {
+                    bump_tallies(iterations, nets_ripped, dijkstra_pops);
                     return Err(RouteError::Unreachable { net: ni, sink: k });
                 }
                 // Backtrack to a tree node.
@@ -367,9 +382,11 @@ pub fn route(
             }
         }
         if overused == 0 {
+            bump_tallies(iterations, nets_ripped, dijkstra_pops);
             return Ok(routes);
         }
         if iter == rp.max_iters - 1 {
+            bump_tallies(iterations, nets_ripped, dijkstra_pops);
             return Err(RouteError::Unroutable {
                 overused_nodes: overused,
                 iters: iter + 1,

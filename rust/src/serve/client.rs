@@ -24,7 +24,7 @@
 //!
 //! let mut c = Client::connect("127.0.0.1:7878", ClientOpts::default()).unwrap();
 //! let pong = c.ping().unwrap();
-//! assert_eq!(pong.get("proto").and_then(|v| v.as_u64()), Some(2));
+//! assert_eq!(pong.get("proto").and_then(|v| v.as_u64()), Some(3));
 //! let stat = c.stat().unwrap(); // same connection, no reconnect
 //! println!("{}", stat.to_string_compact());
 //! ```
@@ -107,7 +107,22 @@ impl Client {
     /// and (under [`ClientOpts::retries`]) redialed; the request object
     /// is serialized once, with the configured auth token attached.
     pub fn request(&mut self, req: &Request) -> Result<Json, String> {
+        self.request_traced(req, None)
+    }
+
+    /// [`Client::request`] carrying an optional v3 trace context
+    /// ([`proto::TraceCtx`]) — the routed front's forwarding primitive.
+    /// A backend that received the context echoes its span tree in the
+    /// response's `"trace"` member.
+    pub fn request_traced(
+        &mut self,
+        req: &Request,
+        ctx: Option<proto::TraceCtx>,
+    ) -> Result<Json, String> {
         let mut j = req.to_json();
+        if let Some(c) = ctx {
+            c.write_json(&mut j);
+        }
         if let Some(t) = &self.opts.auth {
             j.set("auth", t.as_str());
         }

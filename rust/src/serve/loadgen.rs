@@ -190,8 +190,11 @@ pub fn expected_split(plan: &[Planned], n: usize) -> Vec<usize> {
 pub struct LoadReport {
     pub requests: usize,
     pub ok: usize,
-    /// Failures by kind: a structured error's `code`, `transport`
-    /// (send/recv died even after the client's retry) or `connect`.
+    /// Failures by kind: a structured error's [`super::proto::ErrorCode`]
+    /// tag (`bad_request`, `backend_down`, ...), `transport` (send/recv
+    /// died even after the client's retry) or `connect`. Surfaced
+    /// per-code in the printed summary and in the snapshot's `serve`
+    /// totals (`errors_by_code`), next to the aggregate `errors` count.
     pub errors: BTreeMap<String, usize>,
     pub wall: Duration,
     pub distinct_keys: usize,
@@ -243,6 +246,13 @@ impl LoadReport {
             .set("requests", self.requests)
             .set("ok", self.ok)
             .set("errors", self.errors.values().sum::<usize>())
+            .set("errors_by_code", {
+                let mut by = Json::obj();
+                for (kind, n) in &self.errors {
+                    by.set(kind, *n);
+                }
+                by
+            })
             .set("wall_ms", self.wall.as_secs_f64() * 1e3)
             .set("throughput_rps", self.requests as f64 / self.wall.as_secs_f64().max(1e-9))
             .set("distinct_keys", self.distinct_keys)
@@ -381,8 +391,14 @@ pub fn run_cli(args: &Args) -> Result<(), String> {
             );
         }
     }
-    for (kind, n) in &report.errors {
-        println!("loadgen: error {kind}: {n}");
+    if !report.errors.is_empty() {
+        // One line per failure kind: protocol ErrorCode tags as the
+        // daemon reported them, plus the client-side transport/connect
+        // buckets. The same census lands in the snapshot's
+        // serve.errors_by_code member.
+        let parts: Vec<String> =
+            report.errors.iter().map(|(kind, n)| format!("{kind}={n}")).collect();
+        println!("loadgen: errors by code: {}", parts.join(" "));
     }
     let errs: usize = report.errors.values().sum();
     println!(
@@ -489,6 +505,34 @@ mod tests {
         let mut s = spec_for(1);
         s.spread = 0;
         assert!(s.plan().is_err());
+    }
+
+    #[test]
+    fn report_json_breaks_out_errors_by_code() {
+        let mut errors = BTreeMap::new();
+        errors.insert("bad_request".to_string(), 2usize);
+        errors.insert("transport".to_string(), 1usize);
+        let report = LoadReport {
+            requests: 3,
+            ok: 0,
+            errors,
+            wall: Duration::from_millis(5),
+            distinct_keys: 1,
+            reg: Registry::new(),
+        };
+        let j = report.to_json(&spec_for(1));
+        let s = j.get("serve").expect("serve totals");
+        assert_eq!(s.get("errors").and_then(Json::as_u64), Some(3));
+        let by = s.get("errors_by_code").expect("per-code census");
+        assert_eq!(by.get("bad_request").and_then(Json::as_u64), Some(2));
+        assert_eq!(by.get("transport").and_then(Json::as_u64), Some(1));
+        // BTreeMap ordering makes the member byte-deterministic.
+        assert!(
+            j.to_string_compact()
+                .contains("\"errors_by_code\":{\"bad_request\":2,\"transport\":1}"),
+            "{}",
+            j.to_string_compact()
+        );
     }
 
     #[test]

@@ -36,7 +36,8 @@
 //! unreachable backend yields a structured `backend_down` error after one
 //! built-in retry. Routing is transparent: a routed `compile`/`encode`
 //! response is byte-identical to a direct single-daemon response apart
-//! from the front-measured timing members.
+//! from the front-measured timing members and the nested `"backend"`
+//! object preserving the backend's own `queue_ms`/`exec_ms`/`ms` split.
 //!
 //! **Auth.** `--auth-token T` requires every request to carry a matching
 //! `"auth"` member (checked in constant time, [`proto::ct_eq`]); binding
@@ -64,8 +65,13 @@
 //! text, compile/encode responses split `ms` into `queue_ms` + `exec_ms`,
 //! and a size-bounded JSONL request log (`--log`, `--log-cap`) records
 //! one structured line per request plus `start`/`gc`/`drain` lifecycle
-//! events. `cascade loadgen` ([`loadgen`]) drives a daemon with a
-//! deterministic open-loop schedule and reports p50/p99/p999.
+//! events. Every successful `compile`/`encode` record also carries the
+//! request's span tree (protocol v3 distributed tracing): queue/exec
+//! spans, per-stage compile spans with kernel work counters, and — on a
+//! routing front — the backend's echoed spans grafted under the forward
+//! span, renderable with `cascade trace`. `cascade loadgen`
+//! ([`loadgen`]) drives a daemon with a deterministic open-loop schedule
+//! and reports p50/p99/p999.
 //!
 //! ```no_run
 //! use cascade::pipeline::CompileCtx;
@@ -107,8 +113,8 @@ use crate::util::json::Json;
 
 use pool::Bounded;
 use proto::{
-    key_hex, metrics_json, response_error, response_ok, ErrorCode, Request, MAX_REQUEST_LINE,
-    PROTO_VERSION,
+    key_hex, metrics_json, response_error, response_ok, trace_from_json, trace_json, ErrorCode,
+    Request, TraceCtx, TraceSpan, MAX_REQUEST_LINE, PROTO_VERSION,
 };
 
 /// How long a reader's socket read blocks before it re-checks the
@@ -559,11 +565,32 @@ impl ServeState<'_> {
     /// Per-request bookkeeping, shared by every op (parse failures
     /// included, as op `invalid`): count and time the request, split
     /// successful compile/encode timing into `queue_ms` + `exec_ms`
-    /// (`ms` stays their sum for wire compatibility), and append the
-    /// request-log record. On a routed front the timing members replace
-    /// whatever the backend measured — the client sees end-to-end time
-    /// at the daemon it actually talked to.
-    fn finish_request(&self, op: &str, mut resp: Json, queued: Duration, exec: Duration) -> Json {
+    /// (`ms` stays their sum for wire compatibility), assemble the
+    /// request's span tree, and append the request-log record. On a
+    /// routed front the top-level timing members are re-measured — the
+    /// client sees end-to-end time at the daemon it actually talked to —
+    /// and the backend's own split is preserved under a nested
+    /// `"backend"` member instead of being dropped.
+    ///
+    /// `ctx` is the request's wire trace context (None for untraced
+    /// callers) and `kspans` the compile-stage spans the session core
+    /// published while executing it. The span tree is numbered from
+    /// `ctx.parent` (0 without a context) — `request` at base+1 with
+    /// `queue` and `exec`/`forward` children, per-stage spans (kernel
+    /// counters attached) under `exec`, and a routed backend's echoed
+    /// spans grafted verbatim under `forward`. The tree is echoed in the
+    /// response's `"trace"` member *only* when the caller sent a context
+    /// (so untraced responses stay byte-identical to v2), and always
+    /// written to the request log.
+    fn finish_request(
+        &self,
+        op: &str,
+        mut resp: Json,
+        queued: Duration,
+        exec: Duration,
+        ctx: Option<TraceCtx>,
+        kspans: &[crate::obs::trace::SpanRecord],
+    ) -> Json {
         self.reg
             .counter(
                 &labeled("serve_requests_total", "op", op),
@@ -580,13 +607,82 @@ impl ServeState<'_> {
         if !ok {
             self.reg.counter("serve_errors_total", "error responses").inc();
         }
+        let traced_op = matches!(op, "compile" | "encode");
+        // A response that already carries a timing split came from a
+        // backend: keep the backend's measurements under "backend"
+        // before stamping this daemon's own.
+        let mut backend_timing: Option<Json> = None;
+        if ok && traced_op && resp.get("queue_ms").is_some() {
+            let mut b = Json::obj();
+            for k in ["queue_ms", "exec_ms", "ms"] {
+                if let Some(v) = resp.remove(k) {
+                    b.set(k, v);
+                }
+            }
+            backend_timing = Some(b);
+        }
+        // The backend's echoed span tree (routed requests only; the
+        // front's forwarder already renamed its root to `backend:<addr>`
+        // and numbered it under our forward span).
+        let backend_trace = if ok && traced_op {
+            resp.remove("trace").and_then(|t| trace_from_json(&t).ok())
+        } else {
+            None
+        };
         let queue_ms = queued.as_secs_f64() * 1e3;
         let exec_ms = exec.as_secs_f64() * 1e3;
-        if ok && matches!(op, "compile" | "encode") {
+        if ok && traced_op {
+            if let Some(b) = &backend_timing {
+                resp.set("backend", b.clone());
+            }
             resp.set("queue_ms", queue_ms)
                 .set("exec_ms", exec_ms)
                 .set("ms", queue_ms + exec_ms);
         }
+        let trace = if ok && traced_op && (ctx.is_some() || self.reqlog.is_some()) {
+            let base = ctx.map(|c| c.parent).unwrap_or(0);
+            let id = ctx
+                .map(|c| c.id)
+                .or_else(|| backend_trace.as_ref().map(|(id, _)| *id))
+                .unwrap_or_else(crate::obs::trace::gen_trace_id);
+            let ns = |d: Duration| d.as_nanos() as u64;
+            let work = base + 3;
+            let work_name = if backend_trace.is_some() { "forward" } else { "exec" };
+            let plain = |id: u64, parent: u64, name: &str, t: Duration| TraceSpan {
+                id,
+                parent,
+                name: name.to_string(),
+                ns: ns(t),
+                counters: Vec::new(),
+            };
+            let mut spans = vec![
+                plain(base + 1, base, "request", queued + exec),
+                plain(base + 2, base + 1, "queue", queued),
+                plain(work, base + 1, work_name, exec),
+            ];
+            for (k, s) in kspans.iter().enumerate() {
+                spans.push(TraceSpan {
+                    id: work + 1 + k as u64,
+                    parent: work,
+                    name: format!("stage:{}", s.stage),
+                    ns: s.nanos,
+                    counters: s
+                        .counters
+                        .iter()
+                        .map(|(name, n)| (name.to_string(), *n))
+                        .collect(),
+                });
+            }
+            if let Some((_, bs)) = backend_trace {
+                spans.extend(bs);
+            }
+            if ctx.is_some() {
+                resp.set("trace", trace_json(id, &spans));
+            }
+            Some((id, spans))
+        } else {
+            None
+        };
         if self.reqlog.is_some() {
             let mut rec = Json::obj();
             rec.set("ts", now_ms())
@@ -594,6 +690,9 @@ impl ServeState<'_> {
                 .set("op", op)
                 .set("queue_ms", queue_ms)
                 .set("exec_ms", exec_ms);
+            if let Some(b) = backend_timing {
+                rec.set("backend", b);
+            }
             if let Some(k) = resp.get("key").and_then(Json::as_str) {
                 rec.set("key", k);
             }
@@ -603,6 +702,9 @@ impl ServeState<'_> {
             let outcome =
                 if ok { "ok" } else { resp.get("code").and_then(Json::as_str).unwrap_or("error") };
             rec.set("outcome", outcome);
+            if let Some((id, spans)) = &trace {
+                rec.set("trace", trace_json(*id, spans));
+            }
             self.log_event(&rec);
         }
         resp
@@ -637,14 +739,16 @@ impl ServeState<'_> {
     /// connection handler to trigger the drain after responding;
     /// `shutdown` is engine-agnostic (a front drains itself, never its
     /// backends — stopping a shared backend because one front was asked
-    /// to stop would be a topology-wide surprise).
-    fn handle_request(&self, req: Request) -> (Json, bool) {
+    /// to stop would be a topology-wide surprise). `ctx` is the wire
+    /// trace context: a routing front propagates it downstream so the
+    /// backend's spans land under this request's forward span.
+    fn handle_request(&self, req: Request, ctx: Option<TraceCtx>) -> (Json, bool) {
         if matches!(req, Request::Shutdown) {
             return (response_ok("shutdown"), true);
         }
         let resp = match &self.engine {
             Engine::Local(e) => e.handle(self, req),
-            Engine::Front(e) => e.handle(self, req),
+            Engine::Front(e) => e.handle(self, req, ctx),
         };
         (resp, false)
     }
@@ -883,12 +987,18 @@ fn shutting_down() -> Json {
 }
 
 /// Parse one request line under the daemon's auth policy: JSON first,
-/// then the auth check, then op decoding — an unauthorized caller learns
-/// nothing about which ops exist or what their schema is.
-fn parse_authed(line: &str, token: Option<&str>) -> Result<Request, (ErrorCode, String)> {
+/// then the auth check, then trace-context and op decoding — an
+/// unauthorized caller learns nothing about which ops exist or what
+/// their schema is.
+fn parse_authed(
+    line: &str,
+    token: Option<&str>,
+) -> Result<(Request, Option<TraceCtx>), (ErrorCode, String)> {
     let j = Json::parse(line.trim()).map_err(|e| (ErrorCode::BadRequest, e))?;
     proto::check_auth(&j, token)?;
-    Request::from_json(&j)
+    let ctx = TraceCtx::from_json(&j)?;
+    let req = Request::from_json(&j)?;
+    Ok((req, ctx))
 }
 
 /// What [`LineReader::next`] found.
@@ -1053,21 +1163,26 @@ fn handle_conn(state: &ServeState<'_>, stream: TcpStream, mut accept_wait: Durat
                         .observe_duration(queued);
                     let t0 = Instant::now();
                     let auth = state.cfg.auth_token.as_deref();
-                    let (op, resp, drain) = match parse_authed(&line, auth) {
-                        Ok(req) => {
+                    let (op, resp, drain, tctx, kspans) = match parse_authed(&line, auth) {
+                        Ok((req, tctx)) => {
                             let op = req.op();
-                            let (resp, drain) = state.handle_request(req);
-                            (op, resp, drain)
+                            // Collect the compile-stage spans the session
+                            // core publishes while this request executes.
+                            let ((resp, drain), kspans) = crate::obs::trace::with_publish(|| {
+                                state.handle_request(req, tctx)
+                            });
+                            (op, resp, drain, tctx, kspans)
                         }
                         Err((code, msg)) => {
                             let op = match code {
                                 ErrorCode::Unauthorized => "unauthorized",
                                 _ => "invalid",
                             };
-                            (op, response_error(code, &msg), false)
+                            (op, response_error(code, &msg), false, None, Vec::new())
                         }
                     };
-                    let resp = state.finish_request(op, resp, queued, t0.elapsed());
+                    let resp =
+                        state.finish_request(op, resp, queued, t0.elapsed(), tctx, &kspans);
                     if resp.get("ok").and_then(Json::as_bool) != Some(true) {
                         state.errors.fetch_add(1, Ordering::SeqCst);
                     }
@@ -1192,8 +1307,21 @@ mod tests {
             .unwrap_err();
         assert_eq!(code, ErrorCode::UnknownOp);
         // With auth satisfied (or no token) requests parse normally.
-        assert_eq!(parse_authed("{\"op\":\"ping\",\"auth\":\"t\"}", Some("t")), Ok(Request::Ping));
-        assert_eq!(parse_authed("{\"op\":\"ping\"}", None), Ok(Request::Ping));
+        assert_eq!(
+            parse_authed("{\"op\":\"ping\",\"auth\":\"t\"}", Some("t")),
+            Ok((Request::Ping, None))
+        );
+        assert_eq!(parse_authed("{\"op\":\"ping\"}", None), Ok((Request::Ping, None)));
+        // A v3 trace context rides any op; garbage trace is bad_request.
+        let (req, ctx) = parse_authed(
+            "{\"op\":\"ping\",\"trace\":{\"id\":\"00000000000000ff\",\"parent\":3}}",
+            None,
+        )
+        .unwrap();
+        assert_eq!(req, Request::Ping);
+        assert_eq!(ctx, Some(TraceCtx { id: 0xff, parent: 3 }));
+        let (code, _) = parse_authed("{\"op\":\"ping\",\"trace\":7}", None).unwrap_err();
+        assert_eq!(code, ErrorCode::BadRequest);
     }
 
     #[test]

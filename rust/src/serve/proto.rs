@@ -11,13 +11,20 @@
 //! trust the stream's framing and closes it (the error response is still
 //! sent first). The full schema is specified in `docs/serve.md`.
 //!
-//! This is protocol **version 2** ([`PROTO_VERSION`], reported on `ping`
-//! and `stat`): connections are keep-alive and pipelined (any number of
-//! request lines may be in flight, answered strictly in order), requests
-//! may carry an `"auth"` shared secret (required when the daemon was
-//! started with `--auth-token`, checked in constant time — [`ct_eq`]),
-//! and a `--route` front daemon adds the `backend_down`/`proto_mismatch`
-//! error codes.
+//! This is protocol **version 3** ([`PROTO_VERSION`], reported on `ping`
+//! and `stat`). Version 2 made connections keep-alive and pipelined (any
+//! number of request lines may be in flight, answered strictly in
+//! order), let requests carry an `"auth"` shared secret (required when
+//! the daemon was started with `--auth-token`, checked in constant time
+//! — [`ct_eq`]), and gave the `--route` front daemon the
+//! `backend_down`/`proto_mismatch` error codes. Version 3 adds the
+//! optional distributed-trace context: a request may carry a `"trace"`
+//! member ([`TraceCtx`]) naming the caller's trace id and parent span,
+//! and a daemon that received one echoes a `"trace"` object
+//! ([`TraceSpan`], [`trace_json`]) on `compile`/`encode` responses so a
+//! routing front can graft the backend's span tree under its own.
+//! Requests without `"trace"` get byte-identical v2 responses, so v3 is
+//! wire-compatible with v2 clients.
 //!
 //! Request construction and parsing round-trip exactly, so the `cascade
 //! client` subcommand and the daemon share one vocabulary:
@@ -53,10 +60,18 @@ pub const MAX_REQUEST_LINE: usize = 64 * 1024;
 /// Protocol version, carried as `"proto"` on `ping` and `stat`
 /// responses. Version 2 added keep-alive pipelining, `auth`, the routed
 /// front-daemon mode and the `unauthorized`/`backend_down`/
-/// `proto_mismatch` error codes. A front daemon refuses to talk to a
-/// backend reporting any other version ([`ErrorCode::ProtoMismatch`]) —
-/// mixed-version topologies would silently disagree on semantics.
-pub const PROTO_VERSION: u64 = 2;
+/// `proto_mismatch` error codes; version 3 added the optional `"trace"`
+/// request member and echoed span trees ([`TraceCtx`]). A front daemon
+/// refuses to talk to a backend reporting a version outside
+/// [`COMPAT_PROTO_VERSIONS`] ([`ErrorCode::ProtoMismatch`]) —
+/// mixed-version topologies would silently disagree on semantics. v2 is
+/// accepted because every v3 addition is optional on the wire: a v2
+/// backend simply never echoes a trace, and the front degrades to a
+/// front-only span tree.
+pub const PROTO_VERSION: u64 = 3;
+
+/// Backend protocol versions a routing front will talk to.
+pub const COMPAT_PROTO_VERSIONS: [u64; 2] = [2, PROTO_VERSION];
 
 /// Machine-readable failure categories, carried in the `"code"` member
 /// of error responses — the single source of truth for every code the
@@ -142,6 +157,118 @@ pub fn check_auth(j: &Json, token: Option<&str>) -> Result<(), (ErrorCode, Strin
             "auth required: this daemon was started with --auth-token".to_string(),
         )),
     }
+}
+
+/// The v3 distributed-trace context, carried as an optional `"trace"`
+/// request member: `{"trace":{"id":"<16 hex>","parent":N}}`. `id` is the
+/// 64-bit trace id minted by the hop that started the trace (a routing
+/// front, or a daemon tracing its own direct requests); `parent` is the
+/// caller's span id under which the callee must hang its whole tree. A
+/// callee numbers its spans from `parent + 1`, so the caller can graft
+/// the echoed spans verbatim — no renumbering on either side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub id: u64,
+    pub parent: u64,
+}
+
+impl TraceCtx {
+    /// Read the optional `"trace"` member of a request object. Absent →
+    /// `Ok(None)`; present but ill-formed → `bad_request`, because a
+    /// caller that asked for tracing deserves to learn its context was
+    /// dropped rather than silently losing the span tree.
+    pub fn from_json(j: &Json) -> Result<Option<TraceCtx>, (ErrorCode, String)> {
+        let Some(t) = j.get("trace") else { return Ok(None) };
+        let bad = |msg: &str| (ErrorCode::BadRequest, format!("bad \"trace\": {msg}"));
+        let hex = t
+            .get("id")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing or non-string \"id\""))?;
+        let id = u64::from_str_radix(hex, 16)
+            .map_err(|_| bad(&format!("non-hex \"id\" '{hex}'")))?;
+        let parent = t
+            .get("parent")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| bad("missing or non-integer \"parent\""))?;
+        Ok(Some(TraceCtx { id, parent }))
+    }
+
+    /// Write the `"trace"` member into a request object.
+    pub fn write_json(&self, j: &mut Json) {
+        let mut t = Json::obj();
+        t.set("id", key_hex(self.id)).set("parent", self.parent);
+        j.set("trace", t);
+    }
+}
+
+/// One span of a trace tree on the wire (inside a response's or a
+/// request-log record's `"trace"` object). Span ids are per-trace and
+/// dense enough to stay within f64's exact-integer range; `parent` is
+/// `0` only for the root. `counters` carries the kernel work tallies of
+/// the span's own lap (`docs/observability.md`), empty for pure
+/// queue/transport spans.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceSpan {
+    pub id: u64,
+    pub parent: u64,
+    pub name: String,
+    pub ns: u64,
+    pub counters: Vec<(String, u64)>,
+}
+
+impl TraceSpan {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("id", self.id).set("parent", self.parent);
+        j.set("name", self.name.as_str()).set("ns", self.ns);
+        if !self.counters.is_empty() {
+            let mut c = Json::obj();
+            for (k, v) in &self.counters {
+                c.set(k, *v);
+            }
+            j.set("counters", c);
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<TraceSpan, String> {
+        let id = j.get("id").and_then(Json::as_u64).ok_or("span: bad \"id\"")?;
+        let parent = j.get("parent").and_then(Json::as_u64).ok_or("span: bad \"parent\"")?;
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("span: bad \"name\"")?
+            .to_string();
+        let ns = j.get("ns").and_then(Json::as_u64).ok_or("span: bad \"ns\"")?;
+        let mut counters = Vec::new();
+        if let Some(Json::Obj(m)) = j.get("counters") {
+            for (k, v) in m {
+                counters.push((k.clone(), v.as_u64().ok_or("span: non-integer counter")?));
+            }
+        }
+        Ok(TraceSpan { id, parent, name, ns, counters })
+    }
+}
+
+/// Assemble the `"trace"` object of a response or request-log record:
+/// `{"id":"<16 hex>","spans":[...]}`.
+pub fn trace_json(id: u64, spans: &[TraceSpan]) -> Json {
+    let mut j = Json::obj();
+    j.set("id", key_hex(id));
+    j.set("spans", Json::Arr(spans.iter().map(TraceSpan::to_json).collect()));
+    j
+}
+
+/// Parse a `"trace"` object back into its id and spans (the inverse of
+/// [`trace_json`] — the front and `cascade trace` both consume this).
+pub fn trace_from_json(t: &Json) -> Result<(u64, Vec<TraceSpan>), String> {
+    let hex = t.get("id").and_then(Json::as_str).ok_or("trace: bad \"id\"")?;
+    let id = u64::from_str_radix(hex, 16).map_err(|_| format!("trace: non-hex id '{hex}'"))?;
+    let Some(Json::Arr(arr)) = t.get("spans") else {
+        return Err("trace: missing \"spans\" array".into());
+    };
+    let spans = arr.iter().map(TraceSpan::from_json).collect::<Result<Vec<_>, _>>()?;
+    Ok((id, spans))
 }
 
 /// Every request member (and `cascade encode`/`client` flag) that names
@@ -687,6 +814,69 @@ mod tests {
                 "tag '{t}' is not snake_case"
             );
         }
+    }
+
+    #[test]
+    fn trace_ctx_round_trips_and_rejects_garbage() {
+        let ctx = TraceCtx { id: 0xDEADBEEF12345678, parent: 3 };
+        let mut j = Json::obj();
+        j.set("op", "compile");
+        ctx.write_json(&mut j);
+        let line = j.to_string_compact();
+        assert!(line.contains("\"trace\":{\"id\":\"deadbeef12345678\",\"parent\":3}"), "{line}");
+        let back = Json::parse(&line).unwrap();
+        assert_eq!(TraceCtx::from_json(&back), Ok(Some(ctx)));
+        // Absent trace is None, not an error.
+        assert_eq!(TraceCtx::from_json(&Json::parse("{\"op\":\"ping\"}").unwrap()), Ok(None));
+        // Ill-formed trace members are bad_request, not silent drops.
+        for bad in [
+            "{\"trace\":{\"parent\":3}}",
+            "{\"trace\":{\"id\":\"zz\",\"parent\":3}}",
+            "{\"trace\":{\"id\":\"00ff\"}}",
+            "{\"trace\":{\"id\":\"00ff\",\"parent\":\"x\"}}",
+        ] {
+            let j = Json::parse(bad).unwrap();
+            match TraceCtx::from_json(&j) {
+                Err((ErrorCode::BadRequest, msg)) => assert!(msg.contains("trace"), "{msg}"),
+                other => panic!("expected bad_request for {bad}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn trace_spans_round_trip_with_and_without_counters() {
+        let spans = vec![
+            TraceSpan { id: 1, parent: 0, name: "request".into(), ns: 5000, counters: vec![] },
+            TraceSpan {
+                id: 2,
+                parent: 1,
+                name: "stage:place".into(),
+                ns: 4000,
+                counters: vec![
+                    ("place_moves_accepted".into(), 7),
+                    ("place_moves_proposed".into(), 10),
+                ],
+            },
+        ];
+        let j = trace_json(0xff, &spans);
+        let s = j.to_string_compact();
+        assert!(s.starts_with("{\"id\":\"00000000000000ff\""), "{s}");
+        let (id, back) = trace_from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(id, 0xff);
+        assert_eq!(back, spans);
+        // Counter maps serialize in key order (BTreeMap), so the parsed
+        // vec comes back sorted regardless of insertion order.
+        assert!(s.contains("\"counters\":{\"place_moves_accepted\":7,\"place_moves_proposed\":10}"));
+        assert!(trace_from_json(&Json::parse("{\"id\":\"ff\"}").unwrap()).is_err());
+        assert!(trace_from_json(&Json::parse("{\"spans\":[]}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn front_accepts_v2_and_v3_backends_only() {
+        assert!(COMPAT_PROTO_VERSIONS.contains(&2));
+        assert!(COMPAT_PROTO_VERSIONS.contains(&PROTO_VERSION));
+        assert!(!COMPAT_PROTO_VERSIONS.contains(&1));
+        assert!(!COMPAT_PROTO_VERSIONS.contains(&4));
     }
 
     #[test]

@@ -40,7 +40,10 @@ use crate::obs::labeled;
 use crate::util::json::Json;
 
 use super::client::{Client, ClientOpts};
-use super::proto::{response_error, response_ok, ErrorCode, PointQuery, Request, PROTO_VERSION};
+use super::proto::{
+    response_error, response_ok, trace_from_json, trace_json, ErrorCode, PointQuery, Request,
+    TraceCtx, COMPAT_PROTO_VERSIONS, PROTO_VERSION,
+};
 use super::ServeState;
 
 /// One backend daemon: its address, a parked keep-alive connection, and
@@ -128,10 +131,11 @@ impl FrontEngine {
             )));
         }
         let got = pong.get("proto").and_then(Json::as_u64);
-        if got != Some(PROTO_VERSION) {
+        if !got.is_some_and(|v| COMPAT_PROTO_VERSIONS.contains(&v)) {
             return Err(RouteError::Mismatch(format!(
-                "backend speaks protocol {} where this front requires {PROTO_VERSION} \
-                 (mixed-version topologies are refused)",
+                "backend speaks protocol {} where this front requires {COMPAT_PROTO_VERSIONS:?} \
+                 (every v3 addition is optional on the wire, so v2 backends interoperate; \
+                 anything else is refused)",
                 got.map_or_else(|| "1 (none reported)".to_string(), |v| v.to_string())
             )));
         }
@@ -142,7 +146,12 @@ impl FrontEngine {
     /// retry on a *fresh* connection (a parked keep-alive connection may
     /// have died while idle — that is weather, not an error the client
     /// should see).
-    fn try_forward(&self, b: &Backend, req: &Request) -> Result<Json, RouteError> {
+    fn try_forward(
+        &self,
+        b: &Backend,
+        req: &Request,
+        ctx: Option<TraceCtx>,
+    ) -> Result<Json, RouteError> {
         let mut conn = b.slot.lock().unwrap().take();
         let mut last = String::new();
         for _attempt in 0..2 {
@@ -157,7 +166,7 @@ impl FrontEngine {
                     Err(m) => return Err(m),
                 },
             };
-            match c.request(req) {
+            match c.request_traced(req, ctx) {
                 Ok(resp) => {
                     let mut slot = b.slot.lock().unwrap();
                     if slot.is_none() {
@@ -177,10 +186,22 @@ impl FrontEngine {
     /// counter feeds the drain summary, the provenance counter keeps the
     /// front's `serve_provenance_total` meaningful even though the cache
     /// lives backend-side.
-    fn forward(&self, st: &ServeState<'_>, idx: usize, req: &Request) -> Json {
+    ///
+    /// Every routed `compile`/`encode` travels with a trace context: the
+    /// caller's (so one trace spans client → front → backend) or a fresh
+    /// front-minted id. The backend hangs its span tree under this
+    /// request's forward span (numbered `base + 3` by
+    /// [`ServeState::finish_request`]); its echoed root span is renamed
+    /// `backend:<addr>` here so the grafted tree names the hop.
+    fn forward(&self, st: &ServeState<'_>, idx: usize, req: &Request, ctx: Option<TraceCtx>) -> Json {
         let b = &self.backends[idx];
-        match self.try_forward(b, req) {
-            Ok(resp) => {
+        let child = TraceCtx {
+            id: ctx.map(|c| c.id).unwrap_or_else(crate::obs::trace::gen_trace_id),
+            parent: ctx.map(|c| c.parent).unwrap_or(0) + 3,
+        };
+        match self.try_forward(b, req, Some(child)) {
+            Ok(mut resp) => {
+                name_backend_hop(&mut resp, child.parent + 1, &b.addr);
                 b.forwarded.fetch_add(1, Ordering::SeqCst);
                 st.reg
                     .counter(
@@ -214,8 +235,9 @@ impl FrontEngine {
         }
     }
 
-    /// Dispatch one request through the routing table.
-    pub(crate) fn handle(&self, st: &ServeState<'_>, req: Request) -> Json {
+    /// Dispatch one request through the routing table. `ctx` is the
+    /// caller's trace context, propagated on routed `compile`/`encode`.
+    pub(crate) fn handle(&self, st: &ServeState<'_>, req: Request, ctx: Option<TraceCtx>) -> Json {
         match req {
             Request::Ping => self.ping_all(),
             Request::Stat => self.stat_fanout(st),
@@ -223,9 +245,11 @@ impl FrontEngine {
             // Handled engine-agnostically upstream — the front drains
             // itself, never its (possibly shared) backends.
             Request::Shutdown => response_ok("shutdown"),
-            Request::Compile(ref q) => self.route_query(st, q, &req),
-            Request::Encode { key: Some(key), .. } => self.route_key(st, key, &req),
-            Request::Encode { key: None, query: Some(ref q) } => self.route_query(st, q, &req),
+            Request::Compile(ref q) => self.route_query(st, q, &req, ctx),
+            Request::Encode { key: Some(key), .. } => self.route_key(st, key, &req, ctx),
+            Request::Encode { key: None, query: Some(ref q) } => {
+                self.route_query(st, q, &req, ctx)
+            }
             Request::Encode { key: None, query: None } => {
                 response_error(ErrorCode::BadRequest, "encode: need \"key\" or \"app\"")
             }
@@ -236,19 +260,31 @@ impl FrontEngine {
     /// backend would, compute its effective key, forward to the owner.
     /// A point that fails validation is refused here — no backend ever
     /// sees it.
-    fn route_query(&self, st: &ServeState<'_>, q: &PointQuery, req: &Request) -> Json {
+    fn route_query(
+        &self,
+        st: &ServeState<'_>,
+        q: &PointQuery,
+        req: &Request,
+        ctx: Option<TraceCtx>,
+    ) -> Json {
         let (spec, point) = match q.resolve() {
             Ok(sp) => sp,
             Err(e) => return response_error(ErrorCode::BadRequest, &e),
         };
         let key = effective_key(&spec, &self.arch, &point);
-        self.forward(st, owner_of(key, self.backends.len()) - 1, req)
+        self.forward(st, owner_of(key, self.backends.len()) - 1, req, ctx)
     }
 
     /// Route a key-addressed request (`encode` by key): the key *is* the
     /// routing input.
-    fn route_key(&self, st: &ServeState<'_>, key: u64, req: &Request) -> Json {
-        self.forward(st, owner_of(key, self.backends.len()) - 1, req)
+    fn route_key(
+        &self,
+        st: &ServeState<'_>,
+        key: u64,
+        req: &Request,
+        ctx: Option<TraceCtx>,
+    ) -> Json {
+        self.forward(st, owner_of(key, self.backends.len()) - 1, req, ctx)
     }
 
     /// `ping`: probe every backend; the front is alive only if the whole
@@ -257,7 +293,7 @@ impl FrontEngine {
     fn ping_all(&self) -> Json {
         let mut addrs = Vec::new();
         for b in &self.backends {
-            match self.try_forward(b, &Request::Ping) {
+            match self.try_forward(b, &Request::Ping, None) {
                 Ok(resp) if resp.get("ok").and_then(Json::as_bool) == Some(true) => {
                     addrs.push(Json::from(b.addr.as_str()));
                 }
@@ -292,7 +328,7 @@ impl FrontEngine {
             entry
                 .set("addr", b.addr.as_str())
                 .set("forwarded", b.forwarded.load(Ordering::SeqCst));
-            match self.try_forward(b, &Request::Stat) {
+            match self.try_forward(b, &Request::Stat, None) {
                 Ok(resp) if resp.get("ok").and_then(Json::as_bool) == Some(true) => {
                     if let Some(srv) = resp.get("server") {
                         for (i, name) in SUMMED.into_iter().enumerate() {
@@ -341,7 +377,7 @@ impl FrontEngine {
         for b in &self.backends {
             let mut entry = Json::obj();
             entry.set("addr", b.addr.as_str());
-            match self.try_forward(b, &Request::Metrics) {
+            match self.try_forward(b, &Request::Metrics, None) {
                 Ok(resp) => match resp.get("exposition").and_then(Json::as_str) {
                     Some(t) => {
                         entry.set("exposition", t);
@@ -371,6 +407,27 @@ impl FrontEngine {
     }
 }
 
+/// Rename the root of a backend's echoed span tree (its `request` span,
+/// numbered `forward + 1`) to `backend:<addr>`, so the grafted tree
+/// attributes the hop. A response without a trace (v2 backend, or a
+/// trace this front cannot parse) passes through untouched.
+fn name_backend_hop(resp: &mut Json, root_id: u64, addr: &str) {
+    let Some(t) = resp.remove("trace") else { return };
+    match trace_from_json(&t) {
+        Ok((id, mut spans)) => {
+            for s in &mut spans {
+                if s.id == root_id {
+                    s.name = format!("backend:{addr}");
+                }
+            }
+            resp.set("trace", trace_json(id, &spans));
+        }
+        Err(_) => {
+            resp.set("trace", t);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -390,6 +447,26 @@ mod tests {
             .expect("down backends must not fail construction");
         assert_eq!(eng.backends.len(), 1);
         assert_eq!(eng.drain_summary(), "127.0.0.1:1=0");
+    }
+
+    #[test]
+    fn backend_root_span_is_renamed_to_the_hop() {
+        use crate::serve::proto::TraceSpan;
+        let spans = vec![
+            TraceSpan { id: 4, parent: 3, name: "request".into(), ns: 100, counters: vec![] },
+            TraceSpan { id: 5, parent: 4, name: "queue".into(), ns: 10, counters: vec![] },
+        ];
+        let mut resp = response_ok("compile");
+        resp.set("trace", trace_json(0xab, &spans));
+        name_backend_hop(&mut resp, 4, "127.0.0.1:7871");
+        let (id, back) = trace_from_json(resp.get("trace").unwrap()).unwrap();
+        assert_eq!(id, 0xab);
+        assert_eq!(back[0].name, "backend:127.0.0.1:7871");
+        assert_eq!(back[1].name, "queue");
+        // A traceless (v2) response passes through untouched.
+        let mut plain = response_ok("compile");
+        name_backend_hop(&mut plain, 4, "x");
+        assert!(plain.get("trace").is_none());
     }
 
     #[test]

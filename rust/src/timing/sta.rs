@@ -583,6 +583,12 @@ impl StaEngine {
         let factor = |_: TileCoord| -> f64 { 1.0 };
         let mut out_changed = vec![false; nn];
         let mut in_changed = vec![false; ne];
+        // Kernel work tallies (docs/observability.md): how much of the
+        // graph the dirty walk actually touched, and how often the
+        // bitwise-equality early-stop cut propagation. Plain locals; the
+        // analysis never depends on them.
+        let mut nodes_repropagated = 0u64;
+        let mut early_stops = 0u64;
         {
             let StaEngine {
                 order,
@@ -600,10 +606,14 @@ impl StaEngine {
                 let nu = n as usize;
                 let any_in = in_edges[nu].iter().any(|&ei| in_changed[ei as usize]);
                 if node_dirty[nu] || any_in {
+                    nodes_repropagated += 1;
                     let tfac = factor(d.placement.pos[nu]);
                     let (t, sgs) = node_out(d, n, tfac, in_edges, in_time, in_seg);
                     out_changed[nu] =
                         t.to_bits() != out_time[nu].to_bits() || sgs != out_seg[nu];
+                    if !out_changed[nu] {
+                        early_stops += 1;
+                    }
                     out_time[nu] = t;
                     out_seg[nu] = sgs;
                     cap_segs[nu].clear();
@@ -643,6 +653,9 @@ impl StaEngine {
         self.prev_sink_reg = cur_sink_reg;
         self.prev_input_regs = cur_input_regs;
         self.first = false;
+        crate::obs::counters::bump("sta_nodes_total", nn as u64);
+        crate::obs::counters::bump("sta_nodes_repropagated", nodes_repropagated);
+        crate::obs::counters::bump("sta_early_stops", early_stops);
 
         // --- Fold segments in the exact emission order of `analyze` so
         // first-maximum tie-breaking picks the identical critical segment.

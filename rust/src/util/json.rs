@@ -77,6 +77,15 @@ impl Json {
         }
     }
 
+    /// Remove and return an object member; `None` on non-objects and
+    /// absent keys (mirrors [`Json::get`]'s leniency, unlike `set`).
+    pub fn remove(&mut self, key: &str) -> Option<Json> {
+        match self {
+            Json::Obj(m) => m.remove(key),
+            _ => None,
+        }
+    }
+
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
     }
@@ -585,6 +594,17 @@ mod tests {
             assert!(back.get("power_cap_mw").unwrap().is_null());
             assert_eq!(back.get("points").and_then(Json::as_arr).map(|a| a.len()), Some(1));
         }
+    }
+
+    #[test]
+    fn remove_takes_members_and_tolerates_non_objects() {
+        let mut j = Json::obj();
+        j.set("keep", 1u64).set("drop", "x");
+        assert_eq!(j.remove("drop"), Some(Json::Str("x".into())));
+        assert_eq!(j.remove("drop"), None, "second remove finds nothing");
+        assert_eq!(j.to_string_compact(), "{\"keep\":1}");
+        assert_eq!(Json::Null.remove("x"), None);
+        assert_eq!(Json::Arr(vec![]).remove("x"), None);
     }
 
     #[test]

@@ -86,11 +86,15 @@ fn seed_owned_by(slot: usize, n: usize) -> u64 {
 }
 
 /// Normalize the only members a routed front re-measures, then render
-/// canonically: everything else must be byte-identical.
+/// canonically: everything else must be byte-identical. A routed front
+/// additionally preserves the backend's own timing split under a nested
+/// `backend` member (ISSUE 10) — a documented timing member, dropped
+/// here like the top-level three.
 fn strip_timing(mut j: Json) -> String {
     for k in ["queue_ms", "exec_ms", "ms"] {
         j.set(k, 0);
     }
+    let _ = j.remove("backend");
     j.to_string_compact()
 }
 
@@ -135,6 +139,19 @@ fn routed_front_is_byte_transparent_and_splits_by_partition() {
             let rf = cf.compile(&q).unwrap();
             assert_eq!(rd.get("ok").and_then(Json::as_bool), Some(true), "{rd:?}");
             assert_eq!(rf.get("ok").and_then(Json::as_bool), Some(true), "{rf:?}");
+            // The front re-measures the top-level timing but must not
+            // discard the backend's split: it lives on under `backend`.
+            let b = rf.get("backend").expect("routed response nests backend timing");
+            for k in ["queue_ms", "exec_ms", "ms"] {
+                assert!(
+                    b.get(k).and_then(Json::as_f64).is_some(),
+                    "backend.{k} missing from routed response: {rf:?}"
+                );
+            }
+            assert!(
+                rd.get("backend").is_none(),
+                "direct response must not nest backend timing: {rd:?}"
+            );
             assert_eq!(
                 strip_timing(rd),
                 strip_timing(rf),
